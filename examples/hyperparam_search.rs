@@ -1,0 +1,102 @@
+//! §IV.C hyperparameter search, end to end.
+//!
+//! Two levels:
+//!
+//! 1. **Fleet level (simulated):** the paper's 12-binary-parameter grid —
+//!    4096 combinations × 10 min each = 28.4 days sequentially — scheduled
+//!    on a growing cluster until the whole sweep fits in ~10 minutes.
+//! 2. **Real level (PJRT):** a small lr × batch-interpretation search over
+//!    the AOT `tiny` transformer, each trial actually trained for a few
+//!    steps, ranked by final loss — the "log results of hyperparameter
+//!    search" interface the paper describes.
+//!
+//! Run with: `cargo run --release --example hyperparam_search`
+
+use hyper_dist::baselines::sequential_makespan;
+use hyper_dist::cluster::Master;
+use hyper_dist::config::{artifacts_available, default_artifacts_dir};
+use hyper_dist::runtime::Runtime;
+use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
+use hyper_dist::workflow::{sample_assignments, ParamSpec, ParamValue};
+
+fn fleet_level() -> anyhow::Result<()> {
+    println!("== fleet level: the paper's 4096-combination sweep ==");
+    // 12 binary parameters -> 4096 combos (§IV.C)
+    let params: String = (0..12)
+        .map(|i| format!("      p{i:02}: {{ range: [0, 1] }}\n"))
+        .collect();
+    let seq_days = sequential_makespan(4096, 600.0) / 86_400.0;
+    println!("sequential baseline: 4096 x 10 min = {seq_days:.1} days");
+
+    for workers in [64usize, 256, 1024, 4096] {
+        let recipe = format!(
+            r#"
+name: xgboost-sweep
+experiments:
+  - name: sweep
+    instance: m5.xlarge
+    workers: {workers}
+    spot: true
+    command: "xgboost-train {{p00}}{{p01}}{{p02}}{{p03}}{{p04}}{{p05}}{{p06}}{{p07}}{{p08}}{{p09}}{{p10}}{{p11}}"
+    params:
+{params}    work: {{ duration_s: 600.0 }}
+"#
+        );
+        let master = Master::new();
+        let name = master.submit(&recipe, 1)?;
+        let mut wf = master.workflow(&name)?;
+        assert_eq!(wf.total_tasks(), 4096);
+        let mut driver = SimDriver::new(SimDriverConfig { seed: 1, ..Default::default() });
+        let r = driver.run(&mut wf)?;
+        println!(
+            "workers={workers:>5}  makespan={:>7.1} min  cost=${:<8.2} speedup={:>6.0}x",
+            r.makespan_s / 60.0,
+            r.total_cost_usd,
+            sequential_makespan(4096, 600.0) / r.makespan_s
+        );
+    }
+    Ok(())
+}
+
+fn real_level() -> anyhow::Result<()> {
+    println!("\n== real level: lr search over the AOT transformer (PJRT) ==");
+    let dir = default_artifacts_dir();
+    if !artifacts_available(&dir, "tiny") {
+        println!("artifacts missing — run `make artifacts` first; skipping real level");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    // §II.C sampling: continuous lr log-range matched with discrete seeds
+    let mut space = std::collections::BTreeMap::new();
+    space.insert("lr".to_string(), ParamSpec::LogUniform([1e-4, 3e-2]));
+    space.insert(
+        "seed".to_string(),
+        ParamSpec::Choice(vec![ParamValue::Int(0), ParamValue::Int(1)]),
+    );
+    let trials = sample_assignments(&space, Some(6), 7);
+
+    let mut results = Vec::new();
+    for (t, a) in trials.iter().enumerate() {
+        let ParamValue::Float(lr) = a["lr"] else { panic!("lr type") };
+        let ParamValue::Int(seed) = a["seed"] else { panic!("seed type") };
+        let mut sess = rt.train_session("tiny", seed as i32)?;
+        let nt = sess.batch_tokens();
+        let vocab = sess.preset().vocab as i32;
+        let tokens: Vec<i32> = (0..nt).map(|i| (i as i32 * 13 + 7) % vocab).collect();
+        let mut loss = f32::NAN;
+        for _ in 0..12 {
+            loss = sess.step(&tokens, lr as f32)?;
+        }
+        println!("trial {t}: lr={lr:.5} seed={seed} -> loss {loss:.4}");
+        results.push((loss, lr, seed));
+    }
+    results.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite loss"));
+    let best = results.first().expect("has trials");
+    println!("best: loss={:.4} at lr={:.5} (seed {})", best.0, best.1, best.2);
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    fleet_level()?;
+    real_level()
+}

@@ -1,0 +1,1 @@
+"""Build-time Python for the Hyper reproduction (never on the request path)."""

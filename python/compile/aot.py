@@ -1,0 +1,169 @@
+"""AOT compiler: lower every step function of every preset to HLO text.
+
+Interchange format is HLO *text*, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py for the reference wiring.
+
+Outputs, per preset P in ``--presets``:
+
+    artifacts/P_init.hlo.txt    (seed:i32[])                  -> (params..., m..., v..., step)
+    artifacts/P_train.hlo.txt   (params...,m...,v...,step,tokens,lr) -> (params...,m...,v...,step,loss)
+    artifacts/P_eval.hlo.txt    (params..., tokens)           -> (loss,)
+    artifacts/P_infer.hlo.txt   (params..., tokens)           -> (logits,)
+    artifacts/manifest.json     shapes / ordering / flops — the rust contract
+
+Run via ``make artifacts``; never imported at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _flat_shapes(cfg: M.ModelConfig):
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_specs(cfg)]
+
+
+def lower_init(cfg: M.ModelConfig):
+    def init(seed):
+        params = M.init_params(seed, cfg)
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        return (*params, *m, *v, jnp.zeros((), jnp.float32))
+
+    return jax.jit(init).lower(jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def lower_train(cfg: M.ModelConfig):
+    n = len(M.param_specs(cfg))
+
+    def step(*args):
+        params = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        t, tokens, lr = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        new_p, new_m, new_v, new_t, loss = M.train_step(params, m, v, t, tokens, lr, cfg)
+        return (*new_p, *new_m, *new_v, new_t, loss)
+
+    flat = _flat_shapes(cfg)
+    args = (
+        *flat,
+        *flat,
+        *flat,
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return jax.jit(step).lower(*args)
+
+
+def lower_eval(cfg: M.ModelConfig):
+    def step(*args):
+        return (M.eval_step(list(args[:-1]), args[-1], cfg),)
+
+    args = (*_flat_shapes(cfg), jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32))
+    return jax.jit(step).lower(*args)
+
+
+def lower_infer(cfg: M.ModelConfig):
+    def step(*args):
+        return (M.infer_step(list(args[:-1]), args[-1], cfg),)
+
+    args = (*_flat_shapes(cfg), jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32))
+    return jax.jit(step).lower(*args)
+
+
+LOWERINGS: dict[str, Callable] = {
+    "init": lower_init,
+    "train": lower_train,
+    "eval": lower_eval,
+    "infer": lower_infer,
+}
+
+
+def preset_manifest(cfg: M.ModelConfig) -> dict:
+    specs = M.param_specs(cfg)
+    return {
+        "name": cfg.name,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "d_ff": cfg.d_ff,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "param_count": cfg.param_count(),
+        "flops_per_token": cfg.flops_per_token(),
+        "params": [{"name": n, "shape": list(s)} for n, s in specs],
+        "n_tensors": len(specs),
+        "artifacts": {fn: f"{cfg.name}_{fn}.hlo.txt" for fn in LOWERINGS},
+        # train io layout: params(n) m(n) v(n) step tokens lr -> params(n) m(n) v(n) step loss
+        "train_inputs": 3 * len(specs) + 3,
+        "train_outputs": 3 * len(specs) + 2,
+    }
+
+
+def _inputs_fingerprint() -> str:
+    """Hash of the compile-path sources, for Makefile-level staleness."""
+    import hashlib
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--presets", default="tiny,small",
+                    help="comma-separated preset names (see model.PRESETS)")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    presets = [p.strip() for p in args.presets.split(",") if p.strip()]
+    manifest = {"presets": {}, "fingerprint": _inputs_fingerprint()}
+
+    for name in presets:
+        cfg = M.PRESETS[name]
+        for fn, lower in LOWERINGS.items():
+            path = os.path.join(out_dir, f"{name}_{fn}.hlo.txt")
+            text = to_hlo_text(lower(cfg))
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+        manifest["presets"][name] = preset_manifest(cfg)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

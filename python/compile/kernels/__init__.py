@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for the Hyper reproduction.
+
+Every kernel here is authored for TPU idioms (MXU-aligned tiles staged
+through VMEM via BlockSpec) but executed with ``interpret=True`` on this
+image: the CPU PJRT plugin cannot run Mosaic custom-calls, so interpret
+mode lowers each kernel to plain HLO that any backend executes.  TPU
+efficiency is estimated analytically in DESIGN.md / EXPERIMENTS.md §Perf.
+
+Correctness for every kernel is pinned against the pure-jnp oracles in
+``kernels.ref`` by ``python/tests/test_kernels.py``.
+"""
+
+from .fused_linear import fused_linear
+from .attention import fused_attention
+from .layernorm import fused_layernorm
+
+__all__ = ["fused_linear", "fused_attention", "fused_layernorm"]

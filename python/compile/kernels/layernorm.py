@@ -1,0 +1,137 @@
+"""Fused LayerNorm as a Pallas kernel (differentiable).
+
+TPU adaptation: one grid step owns a ``(block_rows, F)`` tile in VMEM and
+computes mean / variance / normalize / scale / shift in a single pass —
+the role CUDA implementations give to a blockwide Welford reduction in
+shared memory.  Keeping the full feature axis in the tile means the row
+statistics never leave VMEM.
+
+Autodiff: public entry point is a ``jax.custom_vjp``.  ``dx`` is computed
+by a second Pallas kernel that rematerializes the row statistics in VMEM
+(cheaper than saving mean/inv); ``dgamma``/``dbeta`` are column
+reductions across all rows and are left to XLA (a single fused reduce).
+
+VMEM per grid step (f32): ``block_rows * F * 2 + 2*F`` floats; with the
+default 128 rows and F<=4096 that is <= 4.2 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mean = x.mean(axis=-1, keepdims=True)
+    xc = x - mean
+    var = (xc * xc).mean(axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    y = xc * inv * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _ln_bwd_kernel(x_ref, g_ref, dy_ref, dx_ref, *, eps: float):
+    """dx for one row tile, rematerializing mean/inv in VMEM."""
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    mean = x.mean(axis=-1, keepdims=True)
+    xc = x - mean
+    var = (xc * xc).mean(axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = xc * inv
+    dxhat = dy * g
+    mdxhat = dxhat.mean(axis=-1, keepdims=True)
+    mdxx = (dxhat * xhat).mean(axis=-1, keepdims=True)
+    dx = inv * (dxhat - mdxhat - xhat * mdxx)
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+
+
+def _pick_rows(r: int, preferred: int) -> int:
+    br = min(preferred, r)
+    while br > 1 and r % br:
+        br //= 2
+    return max(br, 1)
+
+
+def _ln_call(kernel, x2, g, extra, eps: float, block_rows: int):
+    """Shared pallas_call plumbing for fwd (extra=beta) and bwd (extra=dy)."""
+    r, f = x2.shape
+    br = _pick_rows(r, block_rows)
+    pad = (-r) % br
+    xp = jnp.pad(x2, ((0, pad), (0, 0))) if pad else x2
+    ep = jnp.pad(extra, ((0, pad), (0, 0))) if (pad and extra.shape[0] == r) else extra
+    rp = r + pad
+    row_spec = pl.BlockSpec((br, f), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((1, f), lambda i: (0, 0))
+    extra_spec = row_spec if extra.shape[0] in (r, rp) else vec_spec
+    out = pl.pallas_call(
+        functools.partial(kernel, eps=eps),
+        grid=(rp // br,),
+        in_specs=[row_spec, vec_spec, extra_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((rp, f), x2.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, g.reshape(1, f), ep)
+    return out[:r]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ln_vjp(eps, block_rows, x2, gamma, beta):
+    return _ln_call(_ln_kernel, x2, gamma, beta.reshape(1, -1), eps, block_rows)
+
+
+def _ln_fwd(eps, block_rows, x2, gamma, beta):
+    out = _ln_call(_ln_kernel, x2, gamma, beta.reshape(1, -1), eps, block_rows)
+    return out, (x2, gamma)
+
+
+def _ln_bwd(eps, block_rows, res, dy):
+    x2, gamma = res
+    dx = _ln_call(_ln_bwd_kernel, x2, gamma, dy, eps, block_rows)
+    # row statistics for dgamma: xhat recomputed once in fused XLA ops
+    xf = x2.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    xc = xf - mean
+    var = (xc * xc).mean(axis=-1, keepdims=True)
+    xhat = xc * jax.lax.rsqrt(var + eps)
+    dyf = dy.astype(jnp.float32)
+    dgamma = (dyf * xhat).sum(axis=0).astype(gamma.dtype)
+    dbeta = dyf.sum(axis=0).astype(gamma.dtype)
+    return dx, dgamma, dbeta
+
+
+_ln_vjp.defvjp(_ln_fwd, _ln_bwd)
+
+
+def fused_layernorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    eps: float = 1e-5,
+    block_rows: int = 128,
+) -> jax.Array:
+    """LayerNorm over the last axis with a fused Pallas kernel.
+
+    Args:
+        x: ``(..., F)`` input; leading dims are flattened into rows.
+        gamma, beta: ``(F,)`` scale and shift.
+        eps: numerical stabilizer inside ``rsqrt``.
+        block_rows: rows per VMEM tile.
+
+    Returns:
+        Same shape/dtype as ``x``.
+    """
+    if gamma.ndim != 1 or beta.ndim != 1:
+        raise ValueError("gamma/beta must be 1-D (F,)")
+    f = x.shape[-1]
+    if gamma.shape[0] != f or beta.shape[0] != f:
+        raise ValueError(f"feature mismatch: x F={f}, gamma={gamma.shape}, beta={beta.shape}")
+    orig = x.shape
+    out = _ln_vjp(eps, block_rows, x.reshape(-1, f), gamma, beta)
+    return out.reshape(orig)

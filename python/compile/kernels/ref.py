@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+These are deliberately the most direct possible translations of the math
+(no tiling, no online softmax, no padding tricks) so that any divergence
+in the kernels is a kernel bug, not an oracle bug.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu_ref(x: jax.Array) -> jax.Array:
+    """tanh-approximate GELU (matches fused_linear's epilogue)."""
+    c = jnp.asarray(0.7978845608028654, x.dtype)  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def linear_ref(x, w, b, *, activation: str = "none") -> jax.Array:
+    """``act(x @ w + b)`` in full precision."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "gelu":
+        y = gelu_ref(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y.astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = False, scale: float | None = None) -> jax.Array:
+    """Materialized-logits softmax attention over (B, H, S, D)."""
+    b, h, s, d = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def layernorm_ref(x, gamma, beta, *, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis in full precision."""
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,226 @@
+"""Layer-2: the training / inference compute graph, in JAX, on the L1 kernels.
+
+This is the "client workload" of the Hyper paper — the deep-learning job
+that the rust coordination plane schedules, feeds from the Hyper File
+System, and checkpoints across spot preemptions.  The paper's evaluation
+uses PyTorch models (YoloV3, VGG, ResNet, DenseNet); per DESIGN.md
+§Substitutions we use a decoder-only transformer LM whose forward pass is
+built entirely from the Pallas kernels, so the same HLO exercises L1.
+
+Exports per preset, AOT-lowered by ``aot.py``:
+
+* ``init_fn(seed)``                    -> flat params (+ Adam m/v zeros, step)
+* ``train_step(state..., tokens, lr)`` -> new state... + loss
+* ``eval_step(params..., tokens)``     -> loss
+* ``infer_step(params..., tokens)``    -> last-position logits
+
+State crosses the rust boundary as a *flat ordered tuple* of arrays; the
+ordering is fixed by ``param_names()`` and recorded in the manifest so
+the rust runtime can address individual tensors (e.g. for checkpoints).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_attention, fused_layernorm, fused_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer hyperparameters (a preset of the model zoo)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    seq_len: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Exact trainable-parameter count (embeddings tied to the head)."""
+        per_layer = (
+            2 * self.d_model  # ln1 gamma/beta
+            + self.d_model * 3 * self.d_model + 3 * self.d_model  # qkv
+            + self.d_model * self.d_model + self.d_model  # attn proj
+            + 2 * self.d_model  # ln2
+            + self.d_model * self.d_ff + self.d_ff  # ff up
+            + self.d_ff * self.d_model + self.d_model  # ff down
+        )
+        return (
+            self.vocab * self.d_model  # tied token embedding / head
+            + self.seq_len * self.d_model  # learned positions
+            + self.n_layers * per_layer
+            + 2 * self.d_model  # final ln
+        )
+
+    def flops_per_token(self) -> int:
+        """~6N fwd+bwd FLOPs per token (standard decoder estimate) + attention."""
+        attn = 12 * self.n_layers * self.d_model * self.seq_len
+        return 6 * self.param_count() + attn
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # test-scale: fast enough for pytest / quickstart
+    "tiny": ModelConfig("tiny", vocab=512, d_model=64, n_heads=4, n_layers=2,
+                        d_ff=256, seq_len=64, batch=8),
+    # e2e training preset (~4.9M params)
+    "small": ModelConfig("small", vocab=4096, d_model=256, n_heads=8, n_layers=4,
+                         d_ff=1024, seq_len=128, batch=8),
+    # ~33M params; same code path, used for anchored scaling runs
+    "base": ModelConfig("base", vocab=16384, d_model=512, n_heads=8, n_layers=8,
+                        d_ff=2048, seq_len=128, batch=4),
+    # ~110M params; manifest-only by default (AOT on demand)
+    "large": ModelConfig("large", vocab=32768, d_model=768, n_heads=12, n_layers=12,
+                         d_ff=3072, seq_len=128, batch=2),
+}
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the contract with the rust runtime."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1_g", (cfg.d_model,)),
+            (p + "ln1_b", (cfg.d_model,)),
+            (p + "qkv_w", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "qkv_b", (3 * cfg.d_model,)),
+            (p + "proj_w", (cfg.d_model, cfg.d_model)),
+            (p + "proj_b", (cfg.d_model,)),
+            (p + "ln2_g", (cfg.d_model,)),
+            (p + "ln2_b", (cfg.d_model,)),
+            (p + "ff1_w", (cfg.d_model, cfg.d_ff)),
+            (p + "ff1_b", (cfg.d_ff,)),
+            (p + "ff2_w", (cfg.d_ff, cfg.d_model)),
+            (p + "ff2_b", (cfg.d_model,)),
+        ]
+    specs += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    return specs
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    return [n for n, _ in param_specs(cfg)]
+
+
+def init_params(seed, cfg: ModelConfig) -> List[jax.Array]:
+    """Initialize the flat parameter list from an int32 seed (pure-HLO RNG)."""
+    key = jax.random.PRNGKey(seed)
+    out: List[jax.Array] = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        base = name.rsplit(".", 1)[-1]
+        if base.endswith("_g"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif base.endswith("_b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = 0.02 if name in ("embed", "pos") else (1.0 / jnp.sqrt(fan_in))
+            out.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return out
+
+
+def _as_dict(cfg: ModelConfig, flat) -> Dict[str, jax.Array]:
+    return dict(zip(param_names(cfg), flat))
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+def forward(flat_params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits ``(B, S, V)`` for int32 tokens ``(B, S)``."""
+    p = _as_dict(cfg, flat_params)
+    b, s = tokens.shape
+    h = p["embed"][tokens] + p["pos"][None, :s, :]
+    for i in range(cfg.n_layers):
+        lp = f"layer{i}."
+        x = fused_layernorm(h, p[lp + "ln1_g"], p[lp + "ln1_b"])
+        qkv = fused_linear(x.reshape(b * s, -1), p[lp + "qkv_w"], p[lp + "qkv_b"])
+        qkv = qkv.reshape(b, s, 3, cfg.n_heads, cfg.head_dim)
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3)
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+        a = fused_attention(q, k, v, causal=True)
+        a = a.transpose(0, 2, 1, 3).reshape(b * s, cfg.d_model)
+        a = fused_linear(a, p[lp + "proj_w"], p[lp + "proj_b"]).reshape(b, s, -1)
+        h = h + a
+        x = fused_layernorm(h, p[lp + "ln2_g"], p[lp + "ln2_b"])
+        f = fused_linear(x.reshape(b * s, -1), p[lp + "ff1_w"], p[lp + "ff1_b"],
+                         activation="gelu")
+        f = fused_linear(f, p[lp + "ff2_w"], p[lp + "ff2_b"]).reshape(b, s, -1)
+        h = h + f
+    h = fused_layernorm(h, p["lnf_g"], p["lnf_b"])
+    return jnp.einsum("bsd,vd->bsv", h, p["embed"])  # tied head
+
+
+def loss_fn(flat_params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Mean next-token cross-entropy over ``(B, S)`` int32 tokens."""
+    logits = forward(flat_params, tokens, cfg)[:, :-1, :]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# step functions (the AOT exports)
+# --------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def train_step(params, m, v, step, tokens, lr, cfg: ModelConfig):
+    """One fused fwd+bwd+Adam step.
+
+    Args:
+        params / m / v: flat lists in ``param_names`` order.
+        step: f32 scalar Adam timestep (pre-increment).
+        tokens: int32 ``(B, S)`` batch.
+        lr: f32 scalar learning rate.
+
+    Returns:
+        (new_params, new_m, new_v, new_step, loss)
+    """
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(ps, tokens, cfg))(list(params))
+    t = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(params, m, v, grads):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * gi
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * gi * gi
+        update = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_p.append(pi - update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, t, loss
+
+
+def eval_step(params, tokens, cfg: ModelConfig):
+    """Loss only — used for validation passes from rust."""
+    return loss_fn(list(params), tokens, cfg)
+
+
+def infer_step(params, tokens, cfg: ModelConfig):
+    """Last-position logits ``(B, V)`` — the serving/inference export."""
+    logits = forward(list(params), tokens, cfg)
+    return logits[:, -1, :]

@@ -1,0 +1,260 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes / dtypes / block sizes; explicit cases pin the
+shapes the model actually uses.  This is the CORE correctness signal for
+the compute layer — the AOT HLO contains exactly these kernels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_attention, fused_layernorm, fused_linear, ref
+from compile.kernels.fused_linear import matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- fused_linear
+
+class TestFusedLinear:
+    @pytest.mark.parametrize("activation", ["none", "relu", "gelu"])
+    @pytest.mark.parametrize("shape", [(8, 16, 32), (128, 256, 64), (100, 96, 80)])
+    def test_matches_ref(self, activation, shape):
+        m, k, n = shape
+        x, w, b = rand(0, (m, k)), rand(1, (k, n)), rand(2, (n,))
+        out = fused_linear(x, w, b, activation=activation)
+        np.testing.assert_allclose(out, ref.linear_ref(x, w, b, activation=activation),
+                                   rtol=2e-5, atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 96),
+        n=st.integers(1, 120),
+        bm=st.sampled_from([8, 32, 128]),
+        bn=st.sampled_from([8, 32, 128]),
+        act=st.sampled_from(["none", "relu", "gelu"]),
+    )
+    def test_hypothesis_shapes_blocks(self, m, k, n, bm, bn, act):
+        x, w, b = rand(0, (m, k)), rand(1, (k, n)), rand(2, (n,))
+        out = fused_linear(x, w, b, activation=act, block_m=bm, block_n=bn)
+        np.testing.assert_allclose(out, ref.linear_ref(x, w, b, activation=act),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_leading_dims_flattened(self):
+        x, w, b = rand(0, (4, 6, 32)), rand(1, (32, 16)), rand(2, (16,))
+        out = fused_linear(x, w, b)
+        assert out.shape == (4, 6, 16)
+        np.testing.assert_allclose(out.reshape(24, 16),
+                                   ref.linear_ref(x.reshape(24, 32), w, b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_block_size_invariance(self):
+        x, w, b = rand(0, (64, 48), scale=2.0), rand(1, (48, 64)), rand(2, (64,))
+        a = fused_linear(x, w, b, activation="gelu", block_m=8, block_n=8)
+        c = fused_linear(x, w, b, activation="gelu", block_m=128, block_n=128)
+        # tile shape changes the f32 reduction order; agreement is to ~1e-5
+        np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("argnum", [0, 1, 2])
+    def test_gradients_match_ref(self, argnum):
+        x, w, b = rand(0, (32, 24)), rand(1, (24, 40)), rand(2, (40,))
+
+        def f_k(*args):
+            return (fused_linear(*args, activation="gelu", block_m=16, block_n=16) ** 2).sum()
+
+        def f_r(*args):
+            return (ref.linear_ref(*args, activation="gelu") ** 2).sum()
+
+        gk = jax.grad(f_k, argnums=argnum)(x, w, b)
+        gr = jax.grad(f_r, argnums=argnum)(x, w, b)
+        np.testing.assert_allclose(gk, gr, rtol=1e-3, atol=1e-3)
+
+    def test_relu_gradient(self):
+        x, w, b = rand(0, (16, 8)), rand(1, (8, 8)), rand(2, (8,))
+        gk = jax.grad(lambda x: fused_linear(x, w, b, activation="relu").sum())(x)
+        gr = jax.grad(lambda x: ref.linear_ref(x, w, b, activation="relu").sum())(x)
+        np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-4)
+
+    def test_bf16(self):
+        x = rand(0, (32, 32), jnp.bfloat16)
+        w = rand(1, (32, 32), jnp.bfloat16)
+        b = rand(2, (32,), jnp.bfloat16)
+        out = fused_linear(x, w, b)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(out.astype(np.float32),
+                                   ref.linear_ref(x, w, b).astype(np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_shape_errors(self):
+        x, w, b = rand(0, (8, 8)), rand(1, (8, 8)), rand(2, (8,))
+        with pytest.raises(ValueError, match="contraction"):
+            fused_linear(rand(0, (8, 4)), w, b)
+        with pytest.raises(ValueError, match="bias"):
+            fused_linear(x, w, rand(2, (4,)))
+        with pytest.raises(ValueError, match="activation"):
+            fused_linear(x, w, b, activation="swish")
+
+    def test_matmul_helper(self):
+        a, b = rand(0, (33, 17)), rand(1, (17, 29))
+        np.testing.assert_allclose(matmul(a, b), a @ b, rtol=2e-5, atol=2e-5)
+
+    def test_jit_composes(self):
+        x, w, b = rand(0, (32, 16)), rand(1, (16, 16)), rand(2, (16,))
+        f = jax.jit(lambda x: fused_linear(x, w, b, activation="gelu"))
+        np.testing.assert_allclose(f(x), ref.linear_ref(x, w, b, activation="gelu"),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------- fused_attention
+
+class TestFusedAttention:
+    @pytest.mark.parametrize("causal", [False, True])
+    @pytest.mark.parametrize("shape", [(1, 1, 16, 8), (2, 4, 64, 32), (2, 8, 128, 32)])
+    def test_matches_ref(self, causal, shape):
+        q, k, v = rand(0, shape), rand(1, shape), rand(2, shape)
+        out = fused_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref.attention_ref(q, k, v, causal=causal),
+                                   rtol=2e-5, atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 4),
+        s=st.sampled_from([8, 16, 32, 64, 96]),
+        d=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        bq=st.sampled_from([8, 32, 128]),
+        bk=st.sampled_from([8, 32, 128]),
+    )
+    def test_hypothesis(self, b, h, s, d, causal, bq, bk):
+        shape = (b, h, s, d)
+        q, k, v = rand(0, shape), rand(1, shape), rand(2, shape)
+        out = fused_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(out, ref.attention_ref(q, k, v, causal=causal),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_custom_scale(self):
+        shape = (1, 2, 32, 16)
+        q, k, v = rand(0, shape), rand(1, shape), rand(2, shape)
+        out = fused_attention(q, k, v, scale=0.5)
+        np.testing.assert_allclose(out, ref.attention_ref(q, k, v, scale=0.5),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_causal_is_actually_causal(self):
+        """Perturbing future keys/values must not change earlier outputs."""
+        shape = (1, 1, 32, 8)
+        q, k, v = rand(0, shape), rand(1, shape), rand(2, shape)
+        out1 = fused_attention(q, k, v, causal=True)
+        k2 = k.at[:, :, 20:, :].set(99.0)
+        v2 = v.at[:, :, 20:, :].set(-99.0)
+        out2 = fused_attention(q, k2, v2, causal=True)
+        np.testing.assert_allclose(out1[:, :, :20], out2[:, :, :20], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(out1[:, :, 20:], out2[:, :, 20:])
+
+    def test_softmax_rows_sum_to_one(self):
+        """With v = ones, attention output must be exactly ones."""
+        shape = (2, 2, 64, 16)
+        q, k = rand(0, shape, scale=3.0), rand(1, shape, scale=3.0)
+        out = fused_attention(q, k, jnp.ones(shape), causal=True, block_k=16)
+        np.testing.assert_allclose(out, np.ones(shape), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_gradients_match_ref(self, causal):
+        shape = (2, 2, 32, 16)
+        q, k, v = rand(0, shape), rand(1, shape), rand(2, shape)
+
+        def f_k(q, k, v):
+            return (fused_attention(q, k, v, causal=causal, block_q=16, block_k=8) ** 2).sum()
+
+        def f_r(q, k, v):
+            return (ref.attention_ref(q, k, v, causal=causal) ** 2).sum()
+
+        gk = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+    def test_large_logits_stable(self):
+        """Online softmax must survive logits that overflow naive exp."""
+        shape = (1, 1, 32, 8)
+        q = rand(0, shape, scale=30.0)
+        k = rand(1, shape, scale=30.0)
+        v = rand(2, shape)
+        out = fused_attention(q, k, v, scale=1.0, block_k=8)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(out, ref.attention_ref(q, k, v, scale=1.0),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_shape_errors(self):
+        q = rand(0, (2, 2, 16, 8))
+        with pytest.raises(ValueError):
+            fused_attention(q, rand(1, (2, 2, 8, 8)), q)
+
+
+# -------------------------------------------------------------- fused_layernorm
+
+class TestFusedLayernorm:
+    @pytest.mark.parametrize("shape", [(8, 16), (128, 256), (100, 96), (4, 6, 64)])
+    def test_matches_ref(self, shape):
+        x = rand(0, shape, scale=4.0)
+        g, b = rand(1, (shape[-1],)), rand(2, (shape[-1],))
+        out = fused_layernorm(x, g, b)
+        np.testing.assert_allclose(out, ref.layernorm_ref(x, g, b), rtol=2e-5, atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(
+        r=st.integers(1, 300),
+        f=st.sampled_from([8, 32, 64, 100, 256]),
+        br=st.sampled_from([1, 16, 128]),
+    )
+    def test_hypothesis(self, r, f, br):
+        x = rand(0, (r, f), scale=2.0)
+        g, b = rand(1, (f,)), rand(2, (f,))
+        out = fused_layernorm(x, g, b, block_rows=br)
+        np.testing.assert_allclose(out, ref.layernorm_ref(x, g, b), rtol=3e-5, atol=3e-5)
+
+    def test_normalization_invariants(self):
+        """gamma=1, beta=0 => rows have ~zero mean, ~unit variance."""
+        x = rand(0, (64, 128), scale=7.0) + 3.0
+        out = fused_layernorm(x, jnp.ones(128), jnp.zeros(128))
+        np.testing.assert_allclose(np.asarray(out).mean(-1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(out).std(-1), 1.0, atol=1e-2)
+
+    def test_gradients_match_ref(self):
+        x = rand(0, (48, 32), scale=2.0)
+        g, b = rand(1, (32,)), rand(2, (32,))
+        wvec = jnp.arange(32, dtype=jnp.float32)
+
+        def f_k(x, g, b):
+            return (fused_layernorm(x, g, b, block_rows=16) * wvec).sum()
+
+        def f_r(x, g, b):
+            return (ref.layernorm_ref(x, g, b) * wvec).sum()
+
+        gk = jax.grad(f_k, argnums=(0, 1, 2))(x, g, b)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(x, g, b)
+        for a, bb in zip(gk, gr):
+            np.testing.assert_allclose(a, bb, rtol=1e-3, atol=1e-3)
+
+    def test_eps_used(self):
+        x = jnp.zeros((4, 16))
+        out = fused_layernorm(x, jnp.ones(16), jnp.zeros(16), eps=1e-5)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_shape_errors(self):
+        with pytest.raises(ValueError, match="feature"):
+            fused_layernorm(rand(0, (8, 16)), jnp.ones(8), jnp.zeros(8))
+        with pytest.raises(ValueError, match="1-D"):
+            fused_layernorm(rand(0, (8, 16)), jnp.ones((1, 16)), jnp.zeros(16))

@@ -1,0 +1,147 @@
+"""L2 correctness: the transformer model built on the Pallas kernels."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(0, CFG)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jax.random.randint(jax.random.PRNGKey(1), (CFG.batch, CFG.seq_len), 0, CFG.vocab)
+
+
+class TestConfig:
+    def test_param_count_matches_init(self, params):
+        total = sum(int(np.prod(p.shape)) for p in params)
+        assert total == CFG.param_count()
+
+    @pytest.mark.parametrize("name", list(M.PRESETS))
+    def test_param_specs_consistent(self, name):
+        cfg = M.PRESETS[name]
+        specs = M.param_specs(cfg)
+        assert len(specs) == len(M.param_names(cfg))
+        assert len({n for n, _ in specs}) == len(specs)  # unique names
+        total = sum(int(np.prod(s)) for _, s in specs)
+        assert total == cfg.param_count()
+
+    def test_preset_scale_ordering(self):
+        counts = [M.PRESETS[n].param_count() for n in ("tiny", "small", "base", "large")]
+        assert counts == sorted(counts)
+        assert M.PRESETS["large"].param_count() > 100_000_000
+
+    def test_head_dim_divides(self):
+        for cfg in M.PRESETS.values():
+            assert cfg.d_model % cfg.n_heads == 0
+
+
+class TestInit:
+    def test_deterministic(self, params):
+        again = M.init_params(0, CFG)
+        for a, b in zip(params, again):
+            np.testing.assert_array_equal(a, b)
+
+    def test_seed_changes_params(self, params):
+        other = M.init_params(1, CFG)
+        names = M.param_names(CFG)
+        diffs = [not np.allclose(a, b) for n, a, b in zip(names, params, other)
+                 if not (n.endswith("_g") or n.endswith("_b"))]
+        assert all(diffs)
+
+    def test_ln_init_values(self, params):
+        d = dict(zip(M.param_names(CFG), params))
+        np.testing.assert_array_equal(d["layer0.ln1_g"], np.ones(CFG.d_model))
+        np.testing.assert_array_equal(d["layer0.ln1_b"], np.zeros(CFG.d_model))
+
+
+class TestForward:
+    def test_logits_shape(self, params, tokens):
+        logits = M.forward(params, tokens, CFG)
+        assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+    def test_causality(self, params, tokens):
+        """Changing token t must not change logits at positions < t."""
+        logits1 = M.forward(params, tokens, CFG)
+        toks2 = tokens.at[:, 32].set((tokens[:, 32] + 1) % CFG.vocab)
+        logits2 = M.forward(params, toks2, CFG)
+        np.testing.assert_allclose(logits1[:, :32], logits2[:, :32], rtol=1e-4, atol=1e-4)
+        assert not np.allclose(logits1[:, 32:], logits2[:, 32:])
+
+    def test_initial_loss_near_uniform(self, params, tokens):
+        loss = M.loss_fn(params, tokens, CFG)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+    def test_infer_step_is_last_position(self, params, tokens):
+        logits = M.forward(params, tokens, CFG)
+        last = M.infer_step(params, tokens, CFG)
+        np.testing.assert_allclose(last, logits[:, -1, :], rtol=1e-5, atol=1e-5)
+
+    def test_eval_step_equals_loss(self, params, tokens):
+        np.testing.assert_allclose(M.eval_step(params, tokens, CFG),
+                                   M.loss_fn(params, tokens, CFG), rtol=1e-6)
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, params, tokens):
+        ts = jax.jit(functools.partial(M.train_step, cfg=CFG))
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        state = (params, m, v, 0.0)
+        losses = []
+        for _ in range(15):
+            *state, loss = ts(*state, tokens, 1e-2)
+            state = tuple(state)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.5, losses
+
+    def test_step_counter_increments(self, params, tokens):
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        _, _, _, t, _ = M.train_step(params, m, v, 0.0, tokens, 1e-3, CFG)
+        assert float(t) == 1.0
+
+    def test_adam_matches_reference(self, params, tokens):
+        """One step of our inlined Adam vs a standalone numpy Adam."""
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        lr = 1e-3
+        loss, grads = jax.value_and_grad(lambda ps: M.loss_fn(ps, tokens, CFG))(list(params))
+        new_p, new_m, new_v, t, loss2 = M.train_step(params, m, v, 0.0, tokens, lr, CFG)
+        np.testing.assert_allclose(loss, loss2, rtol=1e-6)
+        i = 2  # spot-check one tensor
+        g = np.asarray(grads[i])
+        m_ref = 0.1 * g
+        v_ref = 0.001 * g * g
+        upd = lr * (m_ref / (1 - 0.9)) / (np.sqrt(v_ref / (1 - 0.999)) + 1e-8)
+        np.testing.assert_allclose(new_p[i], np.asarray(params[i]) - upd, rtol=1e-4, atol=1e-6)
+
+    def test_zero_lr_freezes_params(self, params, tokens):
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        new_p, *_ = M.train_step(params, m, v, 0.0, tokens, 0.0, CFG)
+        for a, b in zip(params, new_p):
+            np.testing.assert_allclose(a, b, atol=1e-7)
+
+    def test_gradients_flow_to_all_params(self, params, tokens):
+        grads = jax.grad(lambda ps: M.loss_fn(ps, tokens, CFG))(list(params))
+        for name, g in zip(M.param_names(CFG), grads):
+            assert float(jnp.abs(g).max()) > 0, f"zero grad for {name}"
+
+
+class TestFlops:
+    def test_flops_positive_and_monotone(self):
+        f = [M.PRESETS[n].flops_per_token() for n in ("tiny", "small", "base", "large")]
+        assert all(x > 0 for x in f) and f == sorted(f)

@@ -1,0 +1,108 @@
+//! Fig 3 — streaming data through HFS while training ≈ reading from the
+//! local file system.
+//!
+//! Paper result: per-model samples/s when streaming from HFS matches
+//! local-disk reads, because the async loader hides the (chunk-amortized)
+//! network behind GPU compute.
+//!
+//! Reproduction: the model zoo (per-sample FLOPs + sample bytes from the
+//! paper's architectures) against the p3.2xlarge V100 device model; the
+//! pipeline throughput is `batch / max(compute, io)` for each storage
+//! backend (local NVMe, HFS-streamed, and the download-first baseline's
+//! steady state). A real-code-path section runs the actual DataLoader
+//! over HFS vs a direct local loop.
+
+use std::sync::Arc;
+
+use hyper_dist::baselines::download_first;
+use hyper_dist::cloud::InstanceType;
+use hyper_dist::dataloader::{pipeline_throughput, DataLoader};
+use hyper_dist::hfs::{HyperFs, Uploader};
+use hyper_dist::storage::{MemStore, S3Profile, StoreHandle};
+use hyper_dist::util::bench::{header, row, section};
+
+/// The paper's Fig-3/4 model zoo: (name, fwd+bwd GFLOPs/sample, KB/sample, batch).
+const ZOO: &[(&str, f64, u64, usize)] = &[
+    ("VGG16", 46.5, 110, 64),
+    ("ResNet101", 23.4, 110, 64),
+    ("DenseNet201", 13.0, 110, 64),
+    ("ResNet50", 12.3, 110, 64),
+    ("AlexNet", 2.1, 110, 128),
+    ("SqueezeNet", 1.1, 110, 128),
+];
+
+fn main() {
+    let v100 = InstanceType::P3_2xlarge.spec();
+    let s3 = S3Profile::default();
+    let local_nvme_bw = 2.0e9; // p3 local NVMe
+    let lanes = 16;
+
+    section("Fig 3: samples/s while training — local vs HFS streaming");
+    header("model", &["local", "hfs-stream", "ratio", "dl-first stall"]);
+    for &(name, gflops, kb, batch) in ZOO {
+        let compute_s = batch as f64 * gflops * 1e9 / v100.flops;
+        let bytes = batch as u64 * kb * 1024;
+        // local: NVMe read; hfs: chunk-amortized multi-lane stream
+        let io_local = bytes as f64 / local_nvme_bw;
+        let hfs_bw = s3.aggregate_throughput(64 << 20, lanes);
+        let io_hfs = bytes as f64 / hfs_bw;
+        let t_local = pipeline_throughput(batch, compute_s, io_local);
+        let t_hfs = pipeline_throughput(batch, compute_s, io_hfs);
+        // download-first: same steady state as local, but pays an upfront
+        // stall to fetch the whole (10 GB here) dataset before step 1
+        let (stall, _) = download_first(&s3, 10 << 30, 64 << 20, lanes, local_nvme_bw);
+        row(
+            name,
+            &[
+                format!("{t_local:.0}/s"),
+                format!("{t_hfs:.0}/s"),
+                format!("{:.3}", t_hfs / t_local),
+                format!("{stall:.0}s"),
+            ],
+        );
+        // the paper's claim: streaming ≈ local for compute-bound models
+        if compute_s > io_hfs {
+            assert!((t_hfs / t_local - 1.0).abs() < 1e-9, "{name} must match local");
+        }
+    }
+    println!("\n(ratio 1.000 = paper's 'equivalent to local FS' claim)");
+
+    // --- real code path: DataLoader over HFS vs direct reads -------------
+    section("real-path: async DataLoader over HFS vs synchronous local loop");
+    let store: StoreHandle = Arc::new(MemStore::new());
+    let mut up = Uploader::new(store.clone(), "zoo", 4 << 20);
+    let n_files = 256;
+    let file_kb = 64;
+    let mut paths = Vec::new();
+    for i in 0..n_files {
+        let p = format!("train/{i:06}.bin");
+        up.add_file(&p, &vec![7u8; file_kb << 10]).unwrap();
+        paths.push(p);
+    }
+    up.seal().unwrap();
+    let fs = Arc::new(HyperFs::mount(store, "zoo", 128 << 20).unwrap());
+
+    // synchronous: read + "compute" serially; async: loader overlaps
+    let fake_compute = std::time::Duration::from_micros(500);
+    let t0 = std::time::Instant::now();
+    for p in &paths {
+        let b = fs.read_file(p).unwrap();
+        std::hint::black_box(&b);
+        std::thread::sleep(fake_compute);
+    }
+    let t_sync = t0.elapsed().as_secs_f64();
+
+    let loader = DataLoader::start(fs.clone(), paths.clone(), 8, 4, 4);
+    let t0 = std::time::Instant::now();
+    while let Some(b) = loader.next_batch() {
+        std::hint::black_box(&b.unwrap());
+        std::thread::sleep(fake_compute * 8); // per-batch compute
+    }
+    let t_async = t0.elapsed().as_secs_f64();
+    println!(
+        "  sync {t_sync:.3}s vs async-prefetch {t_async:.3}s ({:.2}x) over {} files",
+        t_sync / t_async,
+        n_files
+    );
+    println!("\nfig3 OK");
+}

@@ -1,0 +1,75 @@
+//! Fig 4 — asynchronous data loading: which models are data-bottlenecked?
+//!
+//! Paper result (p3.2xlarge + same-region S3): VGG, ResNet101 and
+//! DenseNet have *no data bottleneck* (GPU compute dominates); only very
+//! light models outrun the loader. "The batch size was chosen smaller
+//! for large models to fit in the GPU RAM."
+//!
+//! Reproduction: for each zoo model, compare loader supply (samples/s the
+//! HFS pipeline can deliver) against device demand (samples/s the V100
+//! model consumes); report the bound and the utilization the training
+//! loop would see.
+
+use hyper_dist::cloud::InstanceType;
+use hyper_dist::storage::S3Profile;
+use hyper_dist::util::bench::{header, row, section};
+
+/// (name, fwd+bwd GFLOPs/sample, KB/sample, batch) — batch shrinks with
+/// model size per the paper's footnote.
+const ZOO: &[(&str, f64, u64, usize)] = &[
+    ("VGG16", 46.5, 110, 32),
+    ("ResNet101", 23.4, 110, 48),
+    ("DenseNet201", 13.0, 110, 48),
+    ("ResNet50", 12.3, 110, 64),
+    ("AlexNet", 2.1, 110, 128),
+    ("SqueezeNet", 1.1, 110, 128),
+    ("MobileNetV2", 0.6, 110, 128),
+];
+
+fn main() {
+    let v100 = InstanceType::P3_2xlarge.spec();
+    let s3 = S3Profile::default();
+    let lanes = 16;
+    let loader_bw = s3.aggregate_throughput(64 << 20, lanes); // bytes/s
+
+    section("Fig 4: loader supply vs GPU demand (samples/s), p3.2xlarge + S3");
+    header("model", &["gpu demand", "loader supply", "bound", "gpu util"]);
+    let mut compute_bound = 0;
+    for &(name, gflops, kb, batch) in ZOO {
+        let demand = v100.flops / (gflops * 1e9); // samples/s the GPU eats
+        let supply = loader_bw / (kb as f64 * 1024.0); // samples/s the loader feeds
+        let bound = if supply >= demand { "compute" } else { "data" };
+        if supply >= demand {
+            compute_bound += 1;
+        }
+        let util = (supply / demand).min(1.0) * 100.0;
+        row(
+            name,
+            &[
+                format!("{demand:.0}/s"),
+                format!("{supply:.0}/s"),
+                bound.to_string(),
+                format!("{util:.0}%"),
+            ],
+        );
+        let _ = batch;
+    }
+    println!("\n{compute_bound}/{} models are compute-bound (paper: the first three are)", ZOO.len());
+
+    // the paper's named trio must be compute-bound under this profile
+    for name in ["VGG16", "ResNet101", "DenseNet201"] {
+        let &(_, gflops, kb, _) = ZOO.iter().find(|m| m.0 == name).expect("in zoo");
+        let demand = v100.flops / (gflops * 1e9);
+        let supply = loader_bw / (kb as f64 * 1024.0);
+        assert!(supply >= demand, "{name} must have no data bottleneck (paper Fig 4)");
+    }
+
+    // crossover: find the GFLOPs/sample where supply == demand
+    let crossover_gflops = v100.flops * (110.0 * 1024.0) / loader_bw / 1e9;
+    println!(
+        "crossover at ~{crossover_gflops:.1} GFLOPs/sample: lighter models become loader-bound"
+    );
+    assert!(crossover_gflops > 0.5 && crossover_gflops < 13.0,
+            "crossover must fall between the light models and the paper's trio");
+    println!("\nfig4 OK");
+}

@@ -1,0 +1,109 @@
+//! Baselines the paper compares against (DESIGN.md: implement the
+//! comparators too).
+//!
+//! * [`download_first`] — "download the data locally on the machine"
+//!   before training starts (Fig 3's comparison point).
+//! * [`NfsModel`] — an NFS-like shared filesystem: low per-op latency but
+//!   a single server whose bandwidth all clients share (the paper's
+//!   "NFS-based file systems … often do not scale on multi-write/read").
+//! * [`sequential_makespan`] — single-node sequential execution (the
+//!   §IV.C "28.4 days" comparator).
+
+use crate::storage::S3Profile;
+
+/// Time to download a whole dataset up front over `lanes` connections,
+/// then read it locally at `local_bw` while training (Fig 3 baseline).
+///
+/// Returns `(download_s, local_read_s_per_epoch)`.
+pub fn download_first(
+    profile: &S3Profile,
+    total_bytes: u64,
+    chunk_bytes: u64,
+    lanes: usize,
+    local_bw: f64,
+) -> (f64, f64) {
+    let n_chunks = total_bytes.div_ceil(chunk_bytes.max(1));
+    let sizes = vec![chunk_bytes; n_chunks as usize];
+    let tput = crate::hfs::FetchPool::simulated_throughput(profile, &sizes, lanes);
+    let download_s = if tput > 0.0 { total_bytes as f64 / tput } else { 0.0 };
+    (download_s, total_bytes as f64 / local_bw)
+}
+
+/// NFS timing model: shared single-server bandwidth, per-op latency.
+#[derive(Debug, Clone)]
+pub struct NfsModel {
+    /// Per-operation latency (seconds): lower than S3.
+    pub op_latency_s: f64,
+    /// Server NIC all clients share (bytes/s).
+    pub server_bw: f64,
+}
+
+impl Default for NfsModel {
+    /// A tuned single NFS server (EFS-like General Purpose class).
+    fn default() -> Self {
+        Self { op_latency_s: 0.001, server_bw: 1.25e9 }
+    }
+}
+
+impl NfsModel {
+    /// Per-client read bandwidth with `clients` concurrent readers.
+    pub fn client_bw(&self, clients: usize) -> f64 {
+        self.server_bw / clients.max(1) as f64
+    }
+
+    /// Time for one client to read `bytes` as `n_files` files while
+    /// `clients` are active: latency per file + shared bandwidth.
+    pub fn read_time(&self, bytes: u64, n_files: u64, clients: usize) -> f64 {
+        n_files as f64 * self.op_latency_s + bytes as f64 / self.client_bw(clients)
+    }
+}
+
+/// Sequential single-node makespan for `n_tasks` tasks of `task_s` each —
+/// the paper's "4096 combinations sequentially would take 28.4 days".
+pub fn sequential_makespan(n_tasks: usize, task_s: f64) -> f64 {
+    n_tasks as f64 * task_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_28_4_days() {
+        // 4096 tasks x 10 min = 28.44 days
+        let days = sequential_makespan(4096, 600.0) / 86_400.0;
+        assert!((days - 28.4).abs() < 0.1, "{days}");
+    }
+
+    #[test]
+    fn nfs_degrades_with_clients() {
+        let nfs = NfsModel::default();
+        let one = nfs.read_time(1 << 30, 1000, 1);
+        let many = nfs.read_time(1 << 30, 1000, 100);
+        assert!(many > one * 40.0, "shared server collapses: {one} vs {many}");
+    }
+
+    #[test]
+    fn s3_beats_nfs_at_fleet_scale() {
+        // the paper's motivation: object storage scales with readers,
+        // NFS does not.
+        let s3 = S3Profile::default();
+        let nfs = NfsModel::default();
+        let clients = 110;
+        let bytes = 10u64 << 30; // per client
+        // S3: every client gets its own NIC-bounded aggregate (service
+        // side scales with readers)
+        let s3_time = bytes as f64 / (s3.stream_bw(16) * 16.0).min(s3.nic_bw);
+        let nfs_time = nfs.read_time(bytes, 10_000, clients);
+        assert!(nfs_time > s3_time * 5.0, "nfs {nfs_time} vs s3 {s3_time}");
+    }
+
+    #[test]
+    fn download_first_has_upfront_cost() {
+        let p = S3Profile::default();
+        let (dl, local) = download_first(&p, 10 << 30, 64 << 20, 16, 2.0e9);
+        assert!(dl > 0.0 && local > 0.0);
+        // at NIC ~1.15GB/s, 10 GiB takes ~9.3+ s
+        assert!(dl > 8.0, "{dl}");
+    }
+}

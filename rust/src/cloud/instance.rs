@@ -1,0 +1,200 @@
+//! Instance catalog: the AWS types the paper evaluates on, with 2019
+//! specs and prices.
+//!
+//! The device performance numbers are the anchor for translating the
+//! paper's GPU wallclock claims to this CPU testbed (DESIGN.md §5): a
+//! task's simulated duration is `work_flops / effective_flops`, and the
+//! cost model reproduces the §IV.B economics (V100 spot at $0.95/h vs
+//! on-demand $3.06/h; "50x faster with 6x efficiency gain" vs K80).
+
+
+/// What kind of accelerator (if any) an instance carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    K80,
+    V100,
+}
+
+/// Known instance types (paper: M5 CPU family, P3/P2 GPU families).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InstanceType {
+    /// 96 vCPU ETL workhorse (§IV.A uses 110 of these).
+    M5_24xlarge,
+    /// 4 vCPU general purpose.
+    M5Xlarge,
+    /// 1× V100, "up to 10 Gbps" (Figs 2–4 testbed).
+    P3_2xlarge,
+    /// 4× V100.
+    P3_8xlarge,
+    /// 8× V100.
+    P3_16xlarge,
+    /// 1× K80 (the §IV.B slow baseline).
+    P2Xlarge,
+}
+
+/// Static description of an instance type.
+#[derive(Debug, Clone)]
+pub struct InstanceSpec {
+    pub ty: InstanceType,
+    pub name: &'static str,
+    pub vcpus: u32,
+    pub gpus: u32,
+    pub device: DeviceKind,
+    /// Peak f32 throughput of the full instance (FLOP/s). For GPU types
+    /// this is the tensor-workload effective figure, not the marketing peak.
+    pub flops: f64,
+    /// NIC bandwidth (bytes/s).
+    pub nic_bw: f64,
+    /// RAM (bytes).
+    pub ram: u64,
+    /// On-demand price (USD/hour, us-east-1, 2019).
+    pub usd_per_hour: f64,
+    /// Typical spot price (USD/hour; paper quotes $0.95 for p3.2xlarge).
+    pub spot_usd_per_hour: f64,
+}
+
+/// The catalog (ordered; index with [`InstanceType::spec`]).
+pub const CATALOG: &[InstanceSpec] = &[
+    InstanceSpec {
+        ty: InstanceType::M5_24xlarge,
+        name: "m5.24xlarge",
+        vcpus: 96,
+        gpus: 0,
+        device: DeviceKind::Cpu,
+        flops: 3.0e12, // 96 vCPU AVX-512 aggregate
+        nic_bw: 3.125e9, // 25 Gbps
+        ram: 384 << 30,
+        usd_per_hour: 4.608,
+        spot_usd_per_hour: 1.60,
+    },
+    InstanceSpec {
+        ty: InstanceType::M5Xlarge,
+        name: "m5.xlarge",
+        vcpus: 4,
+        gpus: 0,
+        device: DeviceKind::Cpu,
+        flops: 1.25e11,
+        nic_bw: 1.25e9,
+        ram: 16 << 30,
+        usd_per_hour: 0.192,
+        spot_usd_per_hour: 0.067,
+    },
+    InstanceSpec {
+        ty: InstanceType::P3_2xlarge,
+        name: "p3.2xlarge",
+        vcpus: 8,
+        gpus: 1,
+        device: DeviceKind::V100,
+        flops: 14.0e12, // V100 f32 effective on conv/transformer workloads
+        nic_bw: 1.15e9, // "up to 10 Gbps"
+        ram: 61 << 30,
+        usd_per_hour: 3.06,
+        spot_usd_per_hour: 0.95, // the paper's quoted figure
+    },
+    InstanceSpec {
+        ty: InstanceType::P3_8xlarge,
+        name: "p3.8xlarge",
+        vcpus: 32,
+        gpus: 4,
+        device: DeviceKind::V100,
+        flops: 56.0e12,
+        nic_bw: 1.25e9,
+        ram: 244 << 30,
+        usd_per_hour: 12.24,
+        spot_usd_per_hour: 3.67,
+    },
+    InstanceSpec {
+        ty: InstanceType::P3_16xlarge,
+        name: "p3.16xlarge",
+        vcpus: 64,
+        gpus: 8,
+        device: DeviceKind::V100,
+        flops: 112.0e12,
+        nic_bw: 3.125e9,
+        ram: 488 << 30,
+        usd_per_hour: 24.48,
+        spot_usd_per_hour: 7.34,
+    },
+    InstanceSpec {
+        ty: InstanceType::P2Xlarge,
+        name: "p2.xlarge",
+        vcpus: 4,
+        gpus: 1,
+        device: DeviceKind::K80,
+        // The paper reports V100 "50x faster" than K80 on their YoloV3 job
+        // (includes fp16 + batch-size effects); we encode the effective ratio.
+        flops: 14.0e12 / 50.0,
+        nic_bw: 1.25e9,
+        ram: 61 << 30,
+        usd_per_hour: 0.90,
+        spot_usd_per_hour: 0.27,
+    },
+];
+
+impl InstanceType {
+    pub fn spec(self) -> &'static InstanceSpec {
+        CATALOG.iter().find(|s| s.ty == self).expect("catalog covers all types")
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static InstanceSpec> {
+        CATALOG.iter().find(|s| s.name == name)
+    }
+}
+
+impl InstanceSpec {
+    /// Price actually paid per hour.
+    pub fn price(&self, spot: bool) -> f64 {
+        if spot {
+            self.spot_usd_per_hour
+        } else {
+            self.usd_per_hour
+        }
+    }
+
+    /// FLOPs per dollar — the §IV.B "efficiency" axis.
+    pub fn flops_per_usd(&self, spot: bool) -> f64 {
+        self.flops * 3600.0 / self.price(spot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_lookup() {
+        assert_eq!(InstanceType::P3_2xlarge.spec().gpus, 1);
+        assert_eq!(InstanceType::by_name("m5.24xlarge").unwrap().vcpus, 96);
+        assert!(InstanceType::by_name("x1e.unknown").is_none());
+    }
+
+    #[test]
+    fn paper_price_points() {
+        let p3 = InstanceType::P3_2xlarge.spec();
+        assert!((p3.spot_usd_per_hour - 0.95).abs() < 1e-9, "paper's $0.95/h");
+        // paper: $8.48/h for the V100 fleet vs $0.95/h baseline context;
+        // spot is ~3.2x cheaper than on-demand here
+        assert!(p3.usd_per_hour / p3.spot_usd_per_hour > 2.0);
+    }
+
+    #[test]
+    fn v100_vs_k80_ratio() {
+        let v = InstanceType::P3_2xlarge.spec();
+        let k = InstanceType::P2Xlarge.spec();
+        let speedup = v.flops / k.flops;
+        assert!((speedup - 50.0).abs() < 1e-6, "paper's 50x");
+        // efficiency gain (flops/$ at spot) ≈ 6x: 50x faster at ~8.5x cost...
+        // paper compares $8.48/h fleet vs $0.95/h: 50/8.48*0.95 ≈ 5.6
+        let eff = (v.flops / 0.95) / (k.flops / 0.27) * (0.27 / 0.95);
+        assert!(eff > 1.0);
+    }
+
+    #[test]
+    fn spot_always_cheaper() {
+        for s in CATALOG {
+            assert!(s.spot_usd_per_hour < s.usd_per_hour, "{}", s.name);
+            assert!(s.flops_per_usd(true) > s.flops_per_usd(false));
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Simulated cloud: instance catalog, provisioning, spot market, network.
+//!
+//! This is the DESIGN.md §2 substitution for AWS EC2: real 2019 instance
+//! specs and prices drive a deterministic discrete-event model of
+//! provisioning delays and spot preemptions, so the paper's fleet-scale
+//! experiments (110× m5.24xlarge, 300× p3) run in virtual time.
+
+pub mod instance;
+pub mod network;
+pub mod provisioner;
+pub mod spot;
+
+pub use instance::{DeviceKind, InstanceSpec, InstanceType, CATALOG};
+pub use network::NetworkModel;
+pub use provisioner::{NodeHandle, NodeState, Provisioner, ProvisionerConfig};
+pub use spot::{SpotMarket, SpotMarketConfig};

@@ -1,0 +1,82 @@
+//! VPC / network model (§III.B "Networking").
+//!
+//! The paper provisions a VPC with an internet gateway so nodes can
+//! synchronize state (Horovod allreduce) or fall back to object storage
+//! as a parameter server. We model both paths well enough to reproduce
+//! the §IV.B data-parallel scaling: intra-VPC bandwidth/latency for
+//! allreduce, and the S3 round-trip for the parameter-server fallback.
+
+use crate::storage::S3Profile;
+
+/// Timing model of the cluster network.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// Node-to-node latency within the VPC (seconds).
+    pub intra_vpc_latency_s: f64,
+    /// Node NIC bandwidth (bytes/s) — pairwise transfers share it.
+    pub node_bw: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        Self { intra_vpc_latency_s: 100e-6, node_bw: 1.15e9 }
+    }
+}
+
+impl NetworkModel {
+    /// Time for a ring allreduce of `bytes` across `n` nodes:
+    /// 2(n-1)/n * bytes / bw + 2(n-1) * latency  (standard ring model).
+    pub fn ring_allreduce_time(&self, bytes: u64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        2.0 * (nf - 1.0) / nf * bytes as f64 / self.node_bw
+            + 2.0 * (nf - 1.0) * self.intra_vpc_latency_s
+    }
+
+    /// Time for the object-storage parameter-server alternative: push
+    /// gradients + pull model, all `n` workers hitting S3 concurrently.
+    pub fn s3_param_server_time(&self, s3: &S3Profile, bytes: u64, n: usize) -> f64 {
+        // n concurrent streams share the service; each does put + get
+        let per_stream = s3.stream_bw(n).min(s3.service_bw / n.max(1) as f64);
+        2.0 * (s3.first_byte_latency_s + bytes as f64 / per_stream)
+    }
+
+    /// Point-to-point transfer time.
+    pub fn p2p_time(&self, bytes: u64) -> f64 {
+        self.intra_vpc_latency_s + bytes as f64 / self.node_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_scales_sublinearly() {
+        let net = NetworkModel::default();
+        let t2 = net.ring_allreduce_time(100 << 20, 2);
+        let t16 = net.ring_allreduce_time(100 << 20, 16);
+        // ring: bandwidth term approaches 2*bytes/bw, never n times worse
+        assert!(t16 < t2 * 2.0);
+        assert_eq!(net.ring_allreduce_time(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn param_server_slower_than_allreduce_at_scale() {
+        let net = NetworkModel::default();
+        let s3 = S3Profile::default();
+        let bytes = 50u64 << 20; // a 50 MB model
+        let ar = net.ring_allreduce_time(bytes, 8);
+        let ps = net.s3_param_server_time(&s3, bytes, 8);
+        assert!(ps > ar, "S3 param server {ps}s should cost more than allreduce {ar}s");
+    }
+
+    #[test]
+    fn p2p_dominated_by_bandwidth_for_large() {
+        let net = NetworkModel::default();
+        let t = net.p2p_time(1 << 30);
+        assert!((t - (1u64 << 30) as f64 / net.node_bw).abs() / t < 0.01);
+    }
+}

@@ -1,0 +1,166 @@
+//! Provisioning state machine (§III.B).
+//!
+//! Paper flow: Terraform creates the VPC + instances; each VM boots a
+//! prebaked image, pulls the client container (cached frameworks pull
+//! fast), mounts HFS, then its node server reports ready. We model each
+//! stage with a latency distribution; the result feeds the scheduler as
+//! `NodeReady` events in virtual time.
+
+use crate::sim::{SimRng, SimTime};
+
+use super::instance::InstanceType;
+
+/// Lifecycle of a simulated node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    Requested,
+    Booting,
+    PullingContainer,
+    MountingFs,
+    Ready,
+    /// Received the 2-minute spot notice.
+    Draining,
+    Terminated,
+}
+
+/// A provisioned (simulated) node.
+#[derive(Debug, Clone)]
+pub struct NodeHandle {
+    pub id: u32,
+    pub ty: InstanceType,
+    pub spot: bool,
+    pub state: NodeState,
+    pub ready_at: SimTime,
+    pub launched_at: SimTime,
+}
+
+/// Stage latency parameters (seconds).
+#[derive(Debug, Clone)]
+pub struct ProvisionerConfig {
+    /// EC2 request -> running (mean, jitter-frac).
+    pub boot_mean_s: f64,
+    /// Container pull when NOT cached in the VM image.
+    pub container_pull_cold_s: f64,
+    /// Container pull when cached ("we cache frequently used containers
+    /// such as Tensorflow, Pytorch, Jupyter directly inside VM images").
+    pub container_pull_warm_s: f64,
+    /// HFS mount + manifest fetch.
+    pub mount_s: f64,
+    /// Fraction of requests whose container is image-cached.
+    pub warm_cache_prob: f64,
+    /// Jitter half-range applied multiplicatively to every stage.
+    pub jitter: f64,
+}
+
+impl Default for ProvisionerConfig {
+    fn default() -> Self {
+        Self {
+            boot_mean_s: 45.0,
+            container_pull_cold_s: 90.0,
+            container_pull_warm_s: 8.0,
+            mount_s: 2.0,
+            warm_cache_prob: 0.8,
+            jitter: 0.2,
+        }
+    }
+}
+
+/// Deterministic provisioning-time sampler.
+pub struct Provisioner {
+    cfg: ProvisionerConfig,
+    rng: SimRng,
+    next_id: u32,
+}
+
+impl Provisioner {
+    pub fn new(cfg: ProvisionerConfig, seed: u64) -> Self {
+        Self { cfg, rng: SimRng::new(seed ^ 0x9E0F_11ED), next_id: 0 }
+    }
+
+    fn jittered(&mut self, mean: f64) -> f64 {
+        mean * (1.0 + self.cfg.jitter * (2.0 * self.rng.next_f64() - 1.0))
+    }
+
+    /// Request one node at virtual time `now`; returns the handle with its
+    /// `ready_at` already sampled through all provisioning stages.
+    pub fn request(&mut self, ty: InstanceType, spot: bool, now: SimTime) -> NodeHandle {
+        let boot = self.jittered(self.cfg.boot_mean_s);
+        let warm = self.rng.gen_bool(self.cfg.warm_cache_prob);
+        let pull = self.jittered(if warm {
+            self.cfg.container_pull_warm_s
+        } else {
+            self.cfg.container_pull_cold_s
+        });
+        let mount = self.jittered(self.cfg.mount_s);
+        let id = self.next_id;
+        self.next_id += 1;
+        NodeHandle {
+            id,
+            ty,
+            spot,
+            state: NodeState::Requested,
+            launched_at: now,
+            ready_at: now + SimTime::from_secs_f64(boot + pull + mount),
+        }
+    }
+
+    /// Request a whole fleet; ready times are independent samples (cloud
+    /// instances provision in parallel).
+    pub fn request_fleet(
+        &mut self,
+        ty: InstanceType,
+        spot: bool,
+        count: usize,
+        now: SimTime,
+    ) -> Vec<NodeHandle> {
+        (0..count).map(|_| self.request(ty, spot, now)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_time_after_launch() {
+        let mut p = Provisioner::new(ProvisionerConfig::default(), 3);
+        let n = p.request(InstanceType::P3_2xlarge, true, SimTime::from_secs(10));
+        assert!(n.ready_at > n.launched_at);
+        let dt = n.ready_at.saturating_sub(n.launched_at).as_secs_f64();
+        assert!(dt > 20.0 && dt < 300.0, "provision took {dt}s");
+    }
+
+    #[test]
+    fn ids_unique_and_increasing() {
+        let mut p = Provisioner::new(ProvisionerConfig::default(), 3);
+        let fleet = p.request_fleet(InstanceType::M5_24xlarge, false, 100, SimTime::ZERO);
+        for (i, n) in fleet.iter().enumerate() {
+            assert_eq!(n.id, i as u32);
+        }
+    }
+
+    #[test]
+    fn warm_cache_is_faster_on_average() {
+        let warm_cfg = ProvisionerConfig { warm_cache_prob: 1.0, ..Default::default() };
+        let cold_cfg = ProvisionerConfig { warm_cache_prob: 0.0, ..Default::default() };
+        let mean = |cfg: ProvisionerConfig| {
+            let mut p = Provisioner::new(cfg, 9);
+            p.request_fleet(InstanceType::M5Xlarge, false, 200, SimTime::ZERO)
+                .iter()
+                .map(|n| n.ready_at.as_secs_f64())
+                .sum::<f64>()
+                / 200.0
+        };
+        assert!(mean(warm_cfg) + 30.0 < mean(cold_cfg));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Provisioner::new(ProvisionerConfig::default(), 77);
+        let mut b = Provisioner::new(ProvisionerConfig::default(), 77);
+        assert_eq!(
+            a.request(InstanceType::P2Xlarge, true, SimTime::ZERO).ready_at,
+            b.request(InstanceType::P2Xlarge, true, SimTime::ZERO).ready_at
+        );
+    }
+}

@@ -1,0 +1,98 @@
+//! Spot-market preemption process.
+//!
+//! "Spot instances … are usually 2 or 3 times cheaper but can be
+//! terminated anytime depending on the demand and the price per hour bid"
+//! (§III.D). We model preemption as a Poisson process per node with a
+//! configurable mean time-to-preemption, plus a two-minute notice (AWS
+//! gives 2 min; the scheduler may use it to checkpoint).
+
+use crate::sim::{SimRng, SimTime};
+
+/// Parameters of the preemption process.
+#[derive(Debug, Clone)]
+pub struct SpotMarketConfig {
+    /// Mean time until a spot node is reclaimed (seconds of virtual time).
+    pub mean_ttp_s: f64,
+    /// Advance notice before the kill (AWS: 120 s).
+    pub notice_s: f64,
+}
+
+impl Default for SpotMarketConfig {
+    fn default() -> Self {
+        Self { mean_ttp_s: 2.0 * 3600.0, notice_s: 120.0 }
+    }
+}
+
+/// Deterministic, seedable generator of preemption times.
+#[derive(Debug)]
+pub struct SpotMarket {
+    cfg: SpotMarketConfig,
+    rng: SimRng,
+}
+
+impl SpotMarket {
+    pub fn new(cfg: SpotMarketConfig, seed: u64) -> Self {
+        Self { cfg, rng: SimRng::new(seed ^ 0x5907_A3C1) }
+    }
+
+    pub fn config(&self) -> &SpotMarketConfig {
+        &self.cfg
+    }
+
+    /// Sample the time (after `now`) at which a node launched now will be
+    /// preempted. Returns `(notice_at, kill_at)`.
+    pub fn sample_preemption(&mut self, now: SimTime) -> (SimTime, SimTime) {
+        let ttp = self.rng.gen_exp(self.cfg.mean_ttp_s);
+        let kill = now + SimTime::from_secs_f64(ttp.max(self.cfg.notice_s));
+        let notice = kill.saturating_sub(SimTime::from_secs_f64(self.cfg.notice_s));
+        (notice, kill)
+    }
+
+    /// Probability that a node survives `horizon_s` seconds (for capacity
+    /// planning in the scheduler: exp(-t/mean)).
+    pub fn survival(&self, horizon_s: f64) -> f64 {
+        (-horizon_s / self.cfg.mean_ttp_s).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn notice_precedes_kill_by_config() {
+        let mut m = SpotMarket::new(SpotMarketConfig::default(), 1);
+        let (notice, kill) = m.sample_preemption(SimTime::from_secs(100));
+        assert!(notice < kill);
+        assert!((kill.saturating_sub(notice).as_secs_f64() - 120.0).abs() < 1e-6);
+        assert!(notice >= SimTime::from_secs(100));
+    }
+
+    #[test]
+    fn mean_ttp_statistics() {
+        let mut m = SpotMarket::new(
+            SpotMarketConfig { mean_ttp_s: 1000.0, notice_s: 10.0 },
+            42,
+        );
+        let n = 5000;
+        let mean: f64 = (0..n)
+            .map(|_| m.sample_preemption(SimTime::ZERO).1.as_secs_f64())
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 1000.0).abs() < 60.0, "mean={mean}");
+    }
+
+    #[test]
+    fn survival_decreases() {
+        let m = SpotMarket::new(SpotMarketConfig { mean_ttp_s: 100.0, notice_s: 1.0 }, 7);
+        assert!(m.survival(10.0) > m.survival(100.0));
+        assert!((m.survival(100.0) - (-1.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = SpotMarket::new(SpotMarketConfig::default(), 5);
+        let mut b = SpotMarket::new(SpotMarketConfig::default(), 5);
+        assert_eq!(a.sample_preemption(SimTime::ZERO), b.sample_preemption(SimTime::ZERO));
+    }
+}

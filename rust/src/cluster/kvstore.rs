@@ -1,0 +1,211 @@
+//! In-process KV store standing in for Redis, with a snapshot "backup"
+//! path standing in for DynamoDB (DESIGN.md §7).
+//!
+//! Versioned writes + watch counters give the master the same primitives
+//! the paper gets from Redis: workflow objects as JSON values, cheap
+//! polling, and a dump that can be restored after a master restart.
+
+use std::collections::BTreeMap;
+
+use std::sync::RwLock;
+
+use crate::storage::StoreHandle;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// A versioned value.
+#[derive(Debug, Clone)]
+struct Versioned {
+    value: Vec<u8>,
+    version: u64,
+}
+
+/// Redis-like in-memory KV with JSON typed accessors.
+#[derive(Debug, Default)]
+pub struct KvStore {
+    map: RwLock<BTreeMap<String, Versioned>>,
+}
+
+impl KvStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set raw bytes; returns the new version (1 for a fresh key).
+    pub fn set(&self, key: &str, value: Vec<u8>) -> u64 {
+        let mut map = self.map.write().unwrap();
+        let version = map.get(key).map_or(1, |v| v.version + 1);
+        map.insert(key.to_string(), Versioned { value, version });
+        version
+    }
+
+    pub fn get(&self, key: &str) -> Option<Vec<u8>> {
+        self.map.read().unwrap().get(key).map(|v| v.value.clone())
+    }
+
+    /// Current version of a key (0 = absent). Pollers compare versions —
+    /// the "watch" primitive.
+    pub fn version(&self, key: &str) -> u64 {
+        self.map.read().unwrap().get(key).map_or(0, |v| v.version)
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        self.map.write().unwrap().remove(key).is_some()
+    }
+
+    pub fn keys(&self, prefix: &str) -> Vec<String> {
+        self.map
+            .read().unwrap()
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// JSON-valued set.
+    pub fn set_json(&self, key: &str, value: &Json) -> u64 {
+        self.set(key, value.to_bytes())
+    }
+
+    /// JSON-valued get.
+    pub fn get_json(&self, key: &str) -> Result<Json> {
+        let bytes = self.get(key).ok_or_else(|| Error::Kv(format!("missing key {key}")))?;
+        Json::parse_bytes(&bytes)
+    }
+
+    /// String convenience accessors (recipes, names).
+    pub fn set_str(&self, key: &str, value: &str) -> u64 {
+        self.set(key, value.as_bytes().to_vec())
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<String> {
+        let bytes = self.get(key).ok_or_else(|| Error::Kv(format!("missing key {key}")))?;
+        String::from_utf8(bytes).map_err(|e| Error::Kv(e.to_string()))
+    }
+
+    /// Compare-and-set on version; returns new version or None on conflict.
+    pub fn cas(&self, key: &str, expected_version: u64, value: Vec<u8>) -> Option<u64> {
+        let mut map = self.map.write().unwrap();
+        let cur = map.get(key).map_or(0, |v| v.version);
+        if cur != expected_version {
+            return None;
+        }
+        let version = cur + 1;
+        map.insert(key.to_string(), Versioned { value, version });
+        Some(version)
+    }
+
+    /// Snapshot every key to the backup object store (the DynamoDB path).
+    /// Values are hex-encoded (they may be arbitrary bytes).
+    pub fn backup(&self, store: &StoreHandle, prefix: &str) -> Result<usize> {
+        let map = self.map.read().unwrap();
+        let snapshot = Json::Obj(
+            map.iter().map(|(k, v)| (k.clone(), Json::Str(hex_encode(&v.value)))).collect(),
+        );
+        let n = map.len();
+        store.put(&format!("{prefix}/kv_backup.json"), &snapshot.to_bytes())?;
+        Ok(n)
+    }
+
+    /// Restore from a backup written by [`KvStore::backup`]. All restored
+    /// keys start at version 1.
+    pub fn restore(store: &StoreHandle, prefix: &str) -> Result<Self> {
+        let blob = store.get(&format!("{prefix}/kv_backup.json"))?;
+        let snapshot = Json::parse_bytes(&blob)?;
+        let obj = snapshot.as_obj().ok_or_else(|| Error::Kv("backup is not an object".into()))?;
+        let kv = Self::new();
+        for (k, v) in obj {
+            let hex = v.as_str().ok_or_else(|| Error::Kv(format!("bad backup value for {k}")))?;
+            kv.set(k, hex_decode(hex)?);
+        }
+        Ok(kv)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn hex_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len() * 2);
+    for b in data {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(Error::Kv("odd-length hex".into()));
+    }
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&s[i..i + 2], 16).map_err(|e| Error::Kv(format!("bad hex: {e}")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::storage::MemStore;
+
+    #[test]
+    fn set_get_versions() {
+        let kv = KvStore::new();
+        assert_eq!(kv.version("k"), 0);
+        assert_eq!(kv.set("k", b"v1".to_vec()), 1);
+        assert_eq!(kv.set("k", b"v2".to_vec()), 2);
+        assert_eq!(kv.get("k").unwrap(), b"v2");
+        assert!(kv.delete("k"));
+        assert!(!kv.delete("k"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let kv = KvStore::new();
+        kv.set_json("cfg", &Json::Arr(vec![Json::num(1), Json::num(2)]));
+        let v = kv.get_json("cfg").unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 2);
+        assert!(kv.get_json("missing").is_err());
+        kv.set_str("s", "recipe text");
+        assert_eq!(kv.get_str("s").unwrap(), "recipe text");
+    }
+
+    #[test]
+    fn cas_detects_conflicts() {
+        let kv = KvStore::new();
+        kv.set("k", b"a".to_vec());
+        assert_eq!(kv.cas("k", 1, b"b".to_vec()), Some(2));
+        assert_eq!(kv.cas("k", 1, b"c".to_vec()), None); // stale
+        assert_eq!(kv.get("k").unwrap(), b"b");
+    }
+
+    #[test]
+    fn prefix_scan() {
+        let kv = KvStore::new();
+        kv.set("task/1", vec![]);
+        kv.set("task/2", vec![]);
+        kv.set("node/1", vec![]);
+        assert_eq!(kv.keys("task/"), vec!["task/1", "task/2"]);
+    }
+
+    #[test]
+    fn backup_restore_roundtrip() {
+        let kv = KvStore::new();
+        kv.set("a", b"1".to_vec());
+        kv.set("b", b"2".to_vec());
+        let store: StoreHandle = Arc::new(MemStore::new());
+        assert_eq!(kv.backup(&store, "wf0").unwrap(), 2);
+        let restored = KvStore::restore(&store, "wf0").unwrap();
+        assert_eq!(restored.get("a").unwrap(), b"1");
+        assert_eq!(restored.len(), 2);
+    }
+}

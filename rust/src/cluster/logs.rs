@@ -1,0 +1,109 @@
+//! Log collection (§III.C): "three types of logs are collected into
+//! Elastic Logstash: client application logs, CPU/GPU utilization logs
+//! and operating system logs."
+
+use std::sync::Arc;
+
+use std::sync::Mutex;
+
+use crate::sim::SimTime;
+
+/// Which of the paper's three streams a record belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LogKind {
+    Application,
+    Utilization,
+    Os,
+}
+
+/// One collected record.
+#[derive(Debug, Clone)]
+pub struct LogRecord {
+    pub at: SimTime,
+    pub node: u32,
+    pub kind: LogKind,
+    pub message: String,
+}
+
+/// Bounded in-memory collector (the Logstash stand-in).
+#[derive(Clone)]
+pub struct LogCollector {
+    inner: Arc<Mutex<Inner>>,
+}
+
+struct Inner {
+    records: Vec<LogRecord>,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl LogCollector {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Inner {
+                records: Vec::new(),
+                capacity: capacity.max(1),
+                dropped: 0,
+            })),
+        }
+    }
+
+    pub fn log(&self, at: SimTime, node: u32, kind: LogKind, message: impl Into<String>) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.records.len() >= inner.capacity {
+            inner.dropped += 1;
+            return;
+        }
+        inner.records.push(LogRecord { at, node, kind, message: message.into() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Records matching a filter (node and/or kind).
+    pub fn query(&self, node: Option<u32>, kind: Option<LogKind>) -> Vec<LogRecord> {
+        self.inner
+            .lock().unwrap()
+            .records
+            .iter()
+            .filter(|r| node.is_none_or(|n| r.node == n) && kind.is_none_or(|k| r.kind == k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collect_and_query() {
+        let c = LogCollector::new(100);
+        c.log(SimTime::ZERO, 1, LogKind::Application, "train started");
+        c.log(SimTime::from_secs(1), 1, LogKind::Utilization, "gpu=87%");
+        c.log(SimTime::from_secs(2), 2, LogKind::Os, "oom-killer");
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.query(Some(1), None).len(), 2);
+        assert_eq!(c.query(None, Some(LogKind::Os)).len(), 1);
+        assert_eq!(c.query(Some(2), Some(LogKind::Application)).len(), 0);
+    }
+
+    #[test]
+    fn bounded_with_drop_counter() {
+        let c = LogCollector::new(2);
+        for i in 0..5 {
+            c.log(SimTime::ZERO, 0, LogKind::Application, format!("m{i}"));
+        }
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.dropped(), 3);
+    }
+}

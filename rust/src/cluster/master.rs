@@ -1,0 +1,175 @@
+//! The Master (§III.C): receives recipes, compiles workflows, stores the
+//! objects in the KV cache, and exposes status.
+//!
+//! Workflow objects are stored as (recipe text, seed) — compilation is
+//! deterministic, so recompiling on fetch is equivalent to deserializing
+//! the object graph and keeps the KV payload small (what the paper's
+//! Redis holds is exactly the recipe-derived objects).
+
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use crate::storage::StoreHandle;
+use crate::util::Json;
+use crate::workflow::{Recipe, Workflow};
+use crate::{Error, Result};
+
+use super::kvstore::KvStore;
+use super::logs::LogCollector;
+
+/// Master node: recipe intake + workflow object storage.
+pub struct Master {
+    pub kv: Arc<KvStore>,
+    pub logs: LogCollector,
+    backup: Option<StoreHandle>,
+    workflows: Mutex<Vec<String>>,
+}
+
+impl Master {
+    pub fn new() -> Self {
+        Self {
+            kv: Arc::new(KvStore::new()),
+            logs: LogCollector::new(100_000),
+            backup: None,
+            workflows: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Attach a DynamoDB-style backup target; every submit snapshots the KV.
+    pub fn with_backup(mut self, store: StoreHandle) -> Self {
+        self.backup = Some(store);
+        self
+    }
+
+    /// Parse, compile and register a workflow. Returns its name.
+    pub fn submit(&self, recipe_yaml: &str, seed: u64) -> Result<String> {
+        let recipe = Recipe::from_yaml(recipe_yaml)?;
+        let wf = Workflow::compile(recipe, seed)?;
+        let name = wf.name.clone();
+        self.kv.set_str(&format!("wf/{name}/recipe"), recipe_yaml);
+        self.kv.set_json(&format!("wf/{name}/seed"), &Json::num(seed as f64));
+        self.kv.set_json(
+            &format!("wf/{name}/meta"),
+            &Json::obj(vec![
+                ("experiments", Json::num(wf.n_experiments() as f64)),
+                ("tasks", Json::num(wf.total_tasks() as f64)),
+            ]),
+        );
+        self.workflows.lock().unwrap().push(name.clone());
+        if let Some(store) = &self.backup {
+            self.kv.backup(store, &format!("backup/{name}"))?;
+        }
+        Ok(name)
+    }
+
+    /// Fetch a workflow back out of the KV store (recompiled — identical
+    /// to the submitted one since compilation is seed-deterministic).
+    pub fn workflow(&self, name: &str) -> Result<Workflow> {
+        let yaml = self.kv.get_str(&format!("wf/{name}/recipe"))?;
+        let seed = self
+            .kv
+            .get_json(&format!("wf/{name}/seed"))?
+            .as_u64()
+            .ok_or_else(|| Error::Kv("bad seed".into()))?;
+        Workflow::compile(Recipe::from_yaml(&yaml)?, seed)
+    }
+
+    /// Persist a run outcome summary for `status`.
+    pub fn record_run(&self, name: &str, summary: &Json) {
+        self.kv.set_json(&format!("wf/{name}/last_run"), summary);
+    }
+
+    pub fn last_run(&self, name: &str) -> Result<Json> {
+        self.kv.get_json(&format!("wf/{name}/last_run"))
+    }
+
+    pub fn list_workflows(&self) -> Vec<String> {
+        self.workflows.lock().unwrap().clone()
+    }
+
+    /// Recover a master from a KV backup (the DynamoDB restore path).
+    pub fn recover(store: StoreHandle, workflow_name: &str) -> Result<Self> {
+        let kv = KvStore::restore(&store, &format!("backup/{workflow_name}"))
+            .map_err(|e| Error::Kv(format!("recover failed: {e}")))?;
+        let master = Self {
+            kv: Arc::new(kv),
+            logs: LogCollector::new(100_000),
+            backup: Some(store),
+            workflows: Mutex::new(vec![workflow_name.to_string()]),
+        };
+        // sanity: the workflow must recompile
+        master.workflow(workflow_name)?;
+        Ok(master)
+    }
+}
+
+impl Default for Master {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::storage::MemStore;
+
+    const YAML: &str = r#"
+name: demo
+experiments:
+  - name: prep
+    instance: m5.xlarge
+    workers: 2
+    command: "prep {i}"
+    params: { i: { range: [0, 9] } }
+"#;
+
+    #[test]
+    fn submit_and_fetch() {
+        let m = Master::new();
+        let name = m.submit(YAML, 0).unwrap();
+        assert_eq!(name, "demo");
+        let wf = m.workflow("demo").unwrap();
+        assert_eq!(wf.total_tasks(), 10);
+        assert_eq!(m.list_workflows(), vec!["demo"]);
+    }
+
+    #[test]
+    fn refetch_is_deterministic() {
+        let m = Master::new();
+        m.submit(YAML, 7).unwrap();
+        let a = m.workflow("demo").unwrap();
+        let b = m.workflow("demo").unwrap();
+        for (ta, tb) in a.tasks[0].iter().zip(&b.tasks[0]) {
+            assert_eq!(ta.command, tb.command);
+        }
+    }
+
+    #[test]
+    fn invalid_recipe_rejected() {
+        let m = Master::new();
+        assert!(m.submit("not: [valid", 0).is_err());
+        assert!(m.list_workflows().is_empty());
+    }
+
+    #[test]
+    fn run_summary_roundtrip() {
+        let m = Master::new();
+        m.submit(YAML, 0).unwrap();
+        m.record_run("demo", &Json::obj(vec![("makespan_s", Json::num(12.5))]));
+        assert_eq!(m.last_run("demo").unwrap().req_f64("makespan_s").unwrap(), 12.5);
+    }
+
+    #[test]
+    fn backup_and_recover() {
+        let store: StoreHandle = Arc::new(MemStore::new());
+        let m = Master::new().with_backup(store.clone());
+        m.submit(YAML, 0).unwrap();
+        drop(m); // master dies
+        let recovered = Master::recover(store, "demo").unwrap();
+        let wf = recovered.workflow("demo").unwrap();
+        assert_eq!(wf.total_tasks(), 10);
+    }
+}

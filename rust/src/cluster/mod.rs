@@ -1,0 +1,17 @@
+//! Cluster plane: master, node servers, KV store, log collection.
+//!
+//! §III.C: "Master is responsible for receiving the recipe … The objects
+//! are stored in-memory key-value cache Redis. As a backup alternative,
+//! the system stores the state into DynamoDB. … each compute worker runs
+//! a node server that listens to commands executed by the workflow
+//! manager."
+
+pub mod kvstore;
+pub mod logs;
+pub mod master;
+pub mod node;
+
+pub use kvstore::KvStore;
+pub use logs::{LogCollector, LogKind, LogRecord};
+pub use master::Master;
+pub use node::{NodeServer, TaskOutcome};

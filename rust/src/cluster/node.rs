@@ -1,0 +1,138 @@
+//! Node server (§III.C): the per-worker agent that "listens to commands
+//! executed by the workflow manager", pulls the container, mounts HFS and
+//! runs client tasks.
+//!
+//! In this reproduction a *local* node server executes real tasks (PJRT
+//! training steps, ETL shards) on the local machine with a thread pool;
+//! fleet-scale execution is simulated by [`crate::scheduler::SimDriver`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::workflow::Task;
+
+/// Result of running one task.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskOutcome {
+    Success,
+    /// Task-level error (consumes a retry).
+    Error(String),
+}
+
+/// A local worker that executes tasks with `slots` of parallelism.
+pub struct NodeServer {
+    pub id: u32,
+    slots: usize,
+}
+
+impl NodeServer {
+    pub fn new(id: u32, slots: usize) -> Self {
+        Self { id, slots: slots.max(1) }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Execute `tasks` with the given runner, `slots`-wide. Returns
+    /// outcomes in input order. The runner must be `Sync` (it is shared
+    /// across worker threads), mirroring the paper's stateless container
+    /// entrypoint.
+    pub fn run_batch<F>(&self, tasks: &[Task], runner: F) -> Vec<TaskOutcome>
+    where
+        F: Fn(&Task) -> TaskOutcome + Sync,
+    {
+        if tasks.is_empty() {
+            return Vec::new();
+        }
+        let results: Vec<std::sync::Mutex<Option<TaskOutcome>>> =
+            tasks.iter().map(|_| std::sync::Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let runner = &runner; // &F is Send because F: Sync
+        std::thread::scope(|s| {
+            for _ in 0..self.slots.min(tasks.len()) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= tasks.len() {
+                        break;
+                    }
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        runner(&tasks[i])
+                    }))
+                    .unwrap_or_else(|_| TaskOutcome::Error("task panicked".into()));
+                    *results[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every slot filled"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::{ExperimentSpec, WorkSpec};
+
+    fn mk_tasks(n: u32) -> Vec<Task> {
+        let spec = ExperimentSpec {
+            name: "e".into(),
+            image: "i".into(),
+            instance: "m5.xlarge".into(),
+            workers: 1,
+            spot: false,
+            command: "c".into(),
+            samples: None,
+            params: Default::default(),
+            depends_on: vec![],
+            max_retries: 0,
+            work: WorkSpec::default(),
+        };
+        (0..n).map(|i| Task::materialize(0, i, &spec, Default::default())).collect()
+    }
+
+    #[test]
+    fn runs_all_tasks_in_order() {
+        let node = NodeServer::new(0, 4);
+        let tasks = mk_tasks(32);
+        let out = node.run_batch(&tasks, |_| TaskOutcome::Success);
+        assert_eq!(out.len(), 32);
+        assert!(out.iter().all(|o| *o == TaskOutcome::Success));
+    }
+
+    #[test]
+    fn per_task_errors_reported() {
+        let node = NodeServer::new(0, 2);
+        let tasks = mk_tasks(10);
+        let out = node.run_batch(&tasks, |t| {
+            if t.id.index % 3 == 0 {
+                TaskOutcome::Error("boom".into())
+            } else {
+                TaskOutcome::Success
+            }
+        });
+        let errors = out.iter().filter(|o| matches!(o, TaskOutcome::Error(_))).count();
+        assert_eq!(errors, 4); // indices 0,3,6,9
+    }
+
+    #[test]
+    fn panics_become_errors() {
+        let node = NodeServer::new(0, 2);
+        let tasks = mk_tasks(4);
+        let out = node.run_batch(&tasks, |t| {
+            if t.id.index == 2 {
+                panic!("kaboom");
+            }
+            TaskOutcome::Success
+        });
+        assert!(matches!(out[2], TaskOutcome::Error(_)));
+        assert_eq!(out.iter().filter(|o| **o == TaskOutcome::Success).count(), 3);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let node = NodeServer::new(0, 2);
+        assert!(node.run_batch(&[], |_| TaskOutcome::Success).is_empty());
+    }
+}

@@ -1,0 +1,61 @@
+//! Crate-level configuration: artifact locations and run options.
+
+use std::path::{Path, PathBuf};
+
+/// Where the AOT artifacts live and which preset to run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts_dir: PathBuf,
+    pub preset: String,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self { artifacts_dir: default_artifacts_dir(), preset: "tiny".into(), seed: 0 }
+    }
+}
+
+/// `artifacts/` next to the workspace root (env `HYPER_ARTIFACTS` wins).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("HYPER_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // walk up from CWD looking for artifacts/manifest.json
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..5 {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// True if the artifacts for `preset` exist under `dir`.
+pub fn artifacts_available(dir: &Path, preset: &str) -> bool {
+    dir.join("manifest.json").exists() && dir.join(format!("{preset}_train.hlo.txt")).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config() {
+        let c = RunConfig::default();
+        assert_eq!(c.preset, "tiny");
+    }
+
+    #[test]
+    fn availability_check() {
+        let dir = crate::util::TempDir::new().unwrap();
+        assert!(!artifacts_available(dir.path(), "tiny"));
+        std::fs::write(dir.path().join("manifest.json"), "{}").unwrap();
+        std::fs::write(dir.path().join("tiny_train.hlo.txt"), "x").unwrap();
+        assert!(artifacts_available(dir.path(), "tiny"));
+    }
+}

@@ -1,0 +1,57 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for all hyper-dist subsystems.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("object not found: {0}")]
+    NotFound(String),
+
+    #[error("file not found in HFS namespace: {0}")]
+    FileNotFound(String),
+
+    #[error("storage error: {0}")]
+    Storage(String),
+
+    #[error("recipe error: {0}")]
+    Recipe(String),
+
+    #[error("workflow error: {0}")]
+    Workflow(String),
+
+    #[error("scheduler error: {0}")]
+    Scheduler(String),
+
+    #[error("cloud error: {0}")]
+    Cloud(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+
+    #[error("kv store error: {0}")]
+    Kv(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("yaml: {0}")]
+    Yaml(String),
+
+    #[error("json: {0}")]
+    Json(String),
+
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,90 @@
+//! The §IV.A preprocessing pipeline: text files -> filtered / tokenized /
+//! paragraph-split records (the spaCy job, rebuilt in rust per DESIGN.md
+//! §6), framed into tfrecord-like shards.
+
+mod record;
+mod tokenizer;
+
+pub use record::{RecordReader, RecordWriter};
+pub use tokenizer::{split_paragraphs, tokenize, TokenStats};
+
+use crate::hfs::HyperFs;
+use crate::Result;
+
+/// Output of preprocessing one batch of input files.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EtlReport {
+    pub files_in: usize,
+    pub paragraphs: usize,
+    pub tokens: usize,
+    pub records_out: usize,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Inputs dropped by the length/quality filter.
+    pub filtered: usize,
+}
+
+/// Preprocess every file under `prefix` in the mounted fs into a shard.
+///
+/// Pipeline per file (mirrors the paper's spaCy script): split paragraphs
+/// -> filter short/garbage paragraphs -> tokenize -> emit one record per
+/// paragraph with whitespace-normalized tokens.
+pub fn preprocess_shard(fs: &HyperFs, prefix: &str, min_tokens: usize) -> Result<(Vec<u8>, EtlReport)> {
+    let mut report = EtlReport::default();
+    let mut writer = RecordWriter::new();
+    for path in fs.list(prefix) {
+        let data = fs.read_file(&path)?;
+        report.files_in += 1;
+        report.bytes_in += data.len() as u64;
+        let text = String::from_utf8_lossy(&data);
+        for para in split_paragraphs(&text) {
+            let tokens = tokenize(para);
+            if tokens.len() < min_tokens {
+                report.filtered += 1;
+                continue;
+            }
+            report.paragraphs += 1;
+            report.tokens += tokens.len();
+            writer.push(tokens.join(" ").as_bytes());
+            report.records_out += 1;
+        }
+    }
+    let shard = writer.finish();
+    report.bytes_out = shard.len() as u64;
+    Ok((shard, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::hfs::Uploader;
+    use crate::storage::{MemStore, StoreHandle};
+
+    #[test]
+    fn end_to_end_shard() {
+        let store: StoreHandle = Arc::new(MemStore::new());
+        let mut up = Uploader::new(store.clone(), "corpus", 1 << 20);
+        up.add_file(
+            "docs/a.txt",
+            b"First paragraph with enough tokens here.\n\nshort\n\nSecond good paragraph, also long enough to pass!",
+        )
+        .unwrap();
+        up.add_file("docs/b.txt", b"Third paragraph of the corpus, with plenty of words inside.")
+            .unwrap();
+        up.seal().unwrap();
+        let fs = HyperFs::mount(store, "corpus", 1 << 20).unwrap();
+        let (shard, report) = preprocess_shard(&fs, "docs/", 5).unwrap();
+        assert_eq!(report.files_in, 2);
+        assert_eq!(report.paragraphs, 3);
+        assert_eq!(report.filtered, 1, "the 'short' paragraph is dropped");
+        assert_eq!(report.records_out, 3);
+        // records round-trip
+        let texts: Vec<String> = RecordReader::new(&shard)
+            .map(|r| String::from_utf8(r.unwrap().to_vec()).unwrap())
+            .collect();
+        assert_eq!(texts.len(), 3);
+        assert!(texts[0].starts_with("first paragraph"));
+    }
+}

@@ -1,0 +1,148 @@
+//! tfrecord-like record framing: `[u32 little-endian length][payload]*`
+//! with a trailing crc of the whole shard for corruption detection.
+
+use crate::{Error, Result};
+
+/// Append-only record shard writer.
+#[derive(Debug, Default)]
+pub struct RecordWriter {
+    buf: Vec<u8>,
+    count: u32,
+}
+
+impl RecordWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, payload: &[u8]) {
+        self.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(payload);
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u32 {
+        self.count
+    }
+
+    /// Finish: append `[record count][fnv1a checksum]`.
+    pub fn finish(mut self) -> Vec<u8> {
+        let crc = fnv1a(&self.buf);
+        self.buf.extend_from_slice(&self.count.to_le_bytes());
+        self.buf.extend_from_slice(&crc.to_le_bytes());
+        self.buf
+    }
+}
+
+/// Iterator over records in a shard; validates the checksum up front.
+pub struct RecordReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    end: usize,
+    valid: bool,
+}
+
+impl<'a> RecordReader<'a> {
+    pub fn new(shard: &'a [u8]) -> Self {
+        if shard.len() < 8 {
+            return Self { data: shard, pos: 0, end: 0, valid: false };
+        }
+        let body_end = shard.len() - 8;
+        let crc_stored = u32::from_le_bytes(shard[shard.len() - 4..].try_into().expect("4 bytes"));
+        let valid = fnv1a(&shard[..body_end]) == crc_stored;
+        Self { data: shard, pos: 0, end: body_end, valid }
+    }
+
+    /// Number of records recorded in the trailer.
+    pub fn trailer_count(shard: &[u8]) -> Option<u32> {
+        if shard.len() < 8 {
+            return None;
+        }
+        Some(u32::from_le_bytes(
+            shard[shard.len() - 8..shard.len() - 4].try_into().expect("4 bytes"),
+        ))
+    }
+}
+
+impl<'a> Iterator for RecordReader<'a> {
+    type Item = Result<&'a [u8]>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if !self.valid {
+            if self.pos == 0 {
+                self.pos = 1; // emit the error once
+                return Some(Err(Error::Storage("record shard checksum mismatch".into())));
+            }
+            return None;
+        }
+        if self.pos >= self.end {
+            return None;
+        }
+        if self.pos + 4 > self.end {
+            self.valid = false;
+            return Some(Err(Error::Storage("truncated record header".into())));
+        }
+        let len =
+            u32::from_le_bytes(self.data[self.pos..self.pos + 4].try_into().expect("4 bytes"))
+                as usize;
+        self.pos += 4;
+        if self.pos + len > self.end {
+            self.valid = false;
+            return Some(Err(Error::Storage("truncated record payload".into())));
+        }
+        let payload = &self.data[self.pos..self.pos + len];
+        self.pos += len;
+        Some(Ok(payload))
+    }
+}
+
+fn fnv1a(data: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in data {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut w = RecordWriter::new();
+        w.push(b"alpha");
+        w.push(b"");
+        w.push(b"gamma rays");
+        assert_eq!(w.count(), 3);
+        let shard = w.finish();
+        assert_eq!(RecordReader::trailer_count(&shard), Some(3));
+        let records: Vec<&[u8]> = RecordReader::new(&shard).map(|r| r.unwrap()).collect();
+        assert_eq!(records, vec![&b"alpha"[..], &b""[..], &b"gamma rays"[..]]);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut w = RecordWriter::new();
+        w.push(b"payload");
+        let mut shard = w.finish();
+        shard[2] ^= 0xFF;
+        let mut reader = RecordReader::new(&shard);
+        assert!(reader.next().unwrap().is_err());
+        assert!(reader.next().is_none());
+    }
+
+    #[test]
+    fn empty_shard() {
+        let shard = RecordWriter::new().finish();
+        assert_eq!(RecordReader::trailer_count(&shard), Some(0));
+        assert_eq!(RecordReader::new(&shard).count(), 0);
+    }
+
+    #[test]
+    fn garbage_input() {
+        let mut r = RecordReader::new(b"xy");
+        assert!(r.next().unwrap().is_err());
+    }
+}

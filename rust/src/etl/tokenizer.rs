@@ -1,0 +1,92 @@
+//! Tokenization + paragraph splitting (the spaCy substitute).
+//!
+//! Deliberately simple and fast: lowercasing, unicode-whitespace word
+//! splits, punctuation stripping at token edges — enough to preserve the
+//! ETL cost structure (CPU-bound per-byte work) without a model download.
+
+/// Paragraphs = runs of non-empty lines separated by blank lines.
+pub fn split_paragraphs(text: &str) -> Vec<&str> {
+    text.split("\n\n")
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .collect()
+}
+
+/// Lowercased word tokens with edge punctuation stripped; pure-punctuation
+/// and empty tokens are dropped.
+pub fn tokenize(text: &str) -> Vec<String> {
+    text.split_whitespace()
+        .filter_map(|raw| {
+            let t = raw.trim_matches(|c: char| !c.is_alphanumeric());
+            if t.is_empty() {
+                None
+            } else {
+                Some(t.to_lowercase())
+            }
+        })
+        .collect()
+}
+
+/// Corpus-level statistics the §IV.A bench reports.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TokenStats {
+    pub tokens: usize,
+    pub unique_estimate: usize,
+    pub mean_token_len: f64,
+}
+
+impl TokenStats {
+    pub fn from_tokens(tokens: &[String]) -> Self {
+        if tokens.is_empty() {
+            return Self::default();
+        }
+        let mut set: std::collections::HashSet<&str> =
+            std::collections::HashSet::with_capacity(tokens.len());
+        let mut total_len = 0usize;
+        for t in tokens {
+            set.insert(t.as_str());
+            total_len += t.len();
+        }
+        Self {
+            tokens: tokens.len(),
+            unique_estimate: set.len(),
+            mean_token_len: total_len as f64 / tokens.len() as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paragraphs_split_on_blank_lines() {
+        let ps = split_paragraphs("one\ntwo\n\nthree\n\n\n  \n\nfour");
+        assert_eq!(ps, vec!["one\ntwo", "three", "four"]);
+        assert!(split_paragraphs("").is_empty());
+    }
+
+    #[test]
+    fn tokenize_strips_punct_and_lowercases() {
+        assert_eq!(
+            tokenize("Hello, World! (nested-word) 42..."),
+            vec!["hello", "world", "nested-word", "42"]
+        );
+        assert_eq!(tokenize("!!! ... ---"), Vec::<String>::new());
+    }
+
+    #[test]
+    fn keeps_inner_punctuation() {
+        assert_eq!(tokenize("state-of-the-art's"), vec!["state-of-the-art's"]);
+    }
+
+    #[test]
+    fn stats() {
+        let toks = tokenize("a b a c a");
+        let s = TokenStats::from_tokens(&toks);
+        assert_eq!(s.tokens, 5);
+        assert_eq!(s.unique_estimate, 3);
+        assert!((s.mean_token_len - 1.0).abs() < 1e-9);
+        assert_eq!(TokenStats::from_tokens(&[]), TokenStats::default());
+    }
+}

@@ -1,0 +1,155 @@
+//! Node-local LRU chunk cache with a byte budget.
+//!
+//! Every node mounting HFS holds recently-used chunks in RAM (the paper's
+//! "caching … mechanisms across all nodes"); the budget models instance
+//! memory, and eviction is strict LRU.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use std::sync::Mutex;
+
+/// Thread-safe LRU of chunk id -> bytes.
+#[derive(Clone)]
+pub struct ChunkCache {
+    inner: Arc<Mutex<CacheInner>>,
+}
+
+struct CacheInner {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    tick: u64,
+    entries: HashMap<u32, Entry>,
+}
+
+struct Entry {
+    data: Arc<Vec<u8>>,
+    last_used: u64,
+}
+
+impl ChunkCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(CacheInner {
+                capacity_bytes,
+                used_bytes: 0,
+                tick: 0,
+                entries: HashMap::new(),
+            })),
+        }
+    }
+
+    /// Look up a chunk, refreshing its recency.
+    pub fn get(&self, id: u32) -> Option<Arc<Vec<u8>>> {
+        let mut c = self.inner.lock().unwrap();
+        c.tick += 1;
+        let tick = c.tick;
+        c.entries.get_mut(&id).map(|e| {
+            e.last_used = tick;
+            e.data.clone()
+        })
+    }
+
+    /// Insert a chunk, evicting LRU entries to fit. Oversized chunks
+    /// (bigger than the whole budget) are not cached.
+    pub fn insert(&self, id: u32, data: Arc<Vec<u8>>) {
+        let size = data.len() as u64;
+        let mut c = self.inner.lock().unwrap();
+        if size > c.capacity_bytes {
+            return;
+        }
+        if let Some(old) = c.entries.remove(&id) {
+            c.used_bytes -= old.data.len() as u64;
+        }
+        while c.used_bytes + size > c.capacity_bytes {
+            let Some((&victim, _)) = c.entries.iter().min_by_key(|(_, e)| e.last_used) else {
+                break;
+            };
+            let e = c.entries.remove(&victim).expect("victim exists");
+            c.used_bytes -= e.data.len() as u64;
+        }
+        c.tick += 1;
+        let tick = c.tick;
+        c.used_bytes += size;
+        c.entries.insert(id, Entry { data, last_used: tick });
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&id)
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        let mut c = self.inner.lock().unwrap();
+        c.entries.clear();
+        c.used_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(n: usize) -> Arc<Vec<u8>> {
+        Arc::new(vec![0u8; n])
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let c = ChunkCache::new(300);
+        c.insert(1, chunk(100));
+        c.insert(2, chunk(100));
+        c.insert(3, chunk(100));
+        c.get(1); // refresh 1 -> 2 is now LRU
+        c.insert(4, chunk(100));
+        assert!(c.contains(1) && c.contains(3) && c.contains(4));
+        assert!(!c.contains(2));
+        assert_eq!(c.used_bytes(), 300);
+    }
+
+    #[test]
+    fn oversized_not_cached() {
+        let c = ChunkCache::new(50);
+        c.insert(1, chunk(100));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn reinsert_same_id_replaces() {
+        let c = ChunkCache::new(300);
+        c.insert(1, chunk(100));
+        c.insert(1, chunk(50));
+        assert_eq!(c.used_bytes(), 50);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn multiple_evictions_to_fit() {
+        let c = ChunkCache::new(100);
+        c.insert(1, chunk(40));
+        c.insert(2, chunk(40));
+        c.insert(3, chunk(90)); // must evict both
+        assert_eq!(c.len(), 1);
+        assert!(c.contains(3));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let c = ChunkCache::new(100);
+        c.insert(1, chunk(10));
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+    }
+}

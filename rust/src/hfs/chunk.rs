@@ -1,0 +1,195 @@
+//! On-store layout of an HFS namespace.
+//!
+//! A namespace `ns` occupies:
+//!
+//! ```text
+//! <ns>/manifest.json      — FsManifest: file table + chunk table
+//! <ns>/chunks/<id>        — packed chunk objects
+//! ```
+//!
+//! Files are packed *in upload order*, which for deep-learning datasets is
+//! the order loaders will read them — that locality is what makes the
+//! next-file-in-same-chunk lookahead (§III.A) effective.
+
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// A file inside the namespace: where it lives in which chunk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileEntry {
+    pub path: String,
+    pub chunk: u32,
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// A chunk object and its total size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkRef {
+    pub id: u32,
+    pub len: u64,
+}
+
+/// The namespace manifest: ordered file table plus chunk table.
+#[derive(Debug, Clone, Default)]
+pub struct FsManifest {
+    pub chunk_size: u64,
+    /// Files in upload (≈ read) order.
+    pub files: Vec<FileEntry>,
+    pub chunks: Vec<ChunkRef>,
+}
+
+impl FsManifest {
+    pub fn new(chunk_size: u64) -> Self {
+        Self { chunk_size, files: Vec::new(), chunks: Vec::new() }
+    }
+
+    /// Index of the file with exactly this path.
+    pub fn find(&self, path: &str) -> Result<usize> {
+        // file table is sorted by path at seal time -> binary search
+        self.files
+            .binary_search_by(|f| f.path.as_str().cmp(path))
+            .map_err(|_| Error::FileNotFound(path.to_string()))
+    }
+
+    /// Files under a directory prefix.
+    pub fn list(&self, prefix: &str) -> Vec<&FileEntry> {
+        let start = self.files.partition_point(|f| f.path.as_str() < prefix);
+        self.files[start..]
+            .iter()
+            .take_while(|f| f.path.starts_with(prefix))
+            .collect()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.len).sum()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+
+    /// Key of a chunk object within the namespace.
+    pub fn chunk_key(ns: &str, id: u32) -> String {
+        format!("{ns}/chunks/{id:08}")
+    }
+
+    pub fn manifest_key(ns: &str) -> String {
+        format!("{ns}/manifest.json")
+    }
+
+    /// Sort the file table by path (called once at seal time) while
+    /// recording the upload order needed by the sequential prefetcher.
+    /// Returns `read_order[i] = index into files` for the i-th uploaded file.
+    pub(crate) fn seal(&mut self) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..self.files.len() as u32).collect();
+        order.sort_by(|&a, &b| self.files[a as usize].path.cmp(&self.files[b as usize].path));
+        // order maps sorted-pos -> upload-pos; invert to upload-pos -> sorted-pos
+        let mut sorted_files = Vec::with_capacity(self.files.len());
+        let mut upload_to_sorted = vec![0u32; self.files.len()];
+        for (sorted_pos, &upload_pos) in order.iter().enumerate() {
+            upload_to_sorted[upload_pos as usize] = sorted_pos as u32;
+            sorted_files.push(self.files[upload_pos as usize].clone());
+        }
+        self.files = sorted_files;
+        upload_to_sorted
+    }
+
+    pub fn to_json(&self) -> Result<Vec<u8>> {
+        let files: Vec<Json> = self
+            .files
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("path", Json::str(f.path.clone())),
+                    ("chunk", Json::num(f.chunk as f64)),
+                    ("offset", Json::num(f.offset as f64)),
+                    ("len", Json::num(f.len as f64)),
+                ])
+            })
+            .collect();
+        let chunks: Vec<Json> = self
+            .chunks
+            .iter()
+            .map(|c| {
+                Json::obj(vec![("id", Json::num(c.id as f64)), ("len", Json::num(c.len as f64))])
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("chunk_size", Json::num(self.chunk_size as f64)),
+            ("files", Json::Arr(files)),
+            ("chunks", Json::Arr(chunks)),
+        ])
+        .to_bytes())
+    }
+
+    pub fn from_json(data: &[u8]) -> Result<Self> {
+        let v = Json::parse_bytes(data)?;
+        let files = v
+            .req_arr("files")?
+            .iter()
+            .map(|f| {
+                Ok(FileEntry {
+                    path: f.req_str("path")?.to_string(),
+                    chunk: f.req_u64("chunk")? as u32,
+                    offset: f.req_u64("offset")?,
+                    len: f.req_u64("len")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let chunks = v
+            .req_arr("chunks")?
+            .iter()
+            .map(|c| Ok(ChunkRef { id: c.req_u64("id")? as u32, len: c.req_u64("len")? }))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FsManifest { chunk_size: v.req_u64("chunk_size")?, files, chunks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(path: &str, chunk: u32) -> FileEntry {
+        FileEntry { path: path.into(), chunk, offset: 0, len: 1 }
+    }
+
+    #[test]
+    fn find_and_list_after_seal() {
+        let mut m = FsManifest::new(1024);
+        m.files = vec![entry("b/2", 0), entry("a/1", 0), entry("b/1", 1)];
+        m.seal();
+        assert!(m.find("a/1").is_ok());
+        assert!(m.find("missing").is_err());
+        let listed: Vec<_> = m.list("b/").iter().map(|f| f.path.clone()).collect();
+        assert_eq!(listed, vec!["b/1", "b/2"]);
+    }
+
+    #[test]
+    fn seal_preserves_upload_order_mapping() {
+        let mut m = FsManifest::new(1024);
+        m.files = vec![entry("c", 0), entry("a", 1), entry("b", 2)];
+        let upload_to_sorted = m.seal();
+        // upload order was c, a, b; sorted is a, b, c
+        assert_eq!(upload_to_sorted, vec![2, 0, 1]);
+        assert_eq!(m.files[0].path, "a");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut m = FsManifest::new(4096);
+        m.files = vec![entry("x", 0)];
+        m.chunks = vec![ChunkRef { id: 0, len: 1 }];
+        let j = m.to_json().unwrap();
+        let back = FsManifest::from_json(&j).unwrap();
+        assert_eq!(back.files, m.files);
+        assert_eq!(back.chunk_size, 4096);
+    }
+
+    #[test]
+    fn keys() {
+        assert_eq!(FsManifest::chunk_key("ns", 3), "ns/chunks/00000003");
+        assert_eq!(FsManifest::manifest_key("ns"), "ns/manifest.json");
+    }
+}

@@ -1,0 +1,162 @@
+//! Multi-lane chunk fetching — the paper's "multithreading T and
+//! multiprocessing P" knob from Fig 2.
+//!
+//! Two modes share one type:
+//!
+//! * **Real mode** (`fetch_many`): a scoped thread pool pulls chunks from
+//!   the backing store concurrently; wallclock is whatever the backend
+//!   costs (disk / memory).
+//! * **Sim mode** (`simulate_schedule`): list-scheduling over `lanes`
+//!   virtual connections using an [`S3Profile`]; returns per-fetch virtual
+//!   completion times and the aggregate makespan. This is the engine
+//!   behind the Fig-2 sweep.
+
+use std::sync::Arc;
+
+use crate::storage::{S3Profile, StoreHandle};
+use crate::Result;
+
+/// Parallel chunk fetcher over `lanes` connections.
+pub struct FetchPool {
+    store: StoreHandle,
+    lanes: usize,
+}
+
+/// One simulated transfer: (chunk index, start, end) in virtual seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimFetch {
+    pub index: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl FetchPool {
+    pub fn new(store: StoreHandle, lanes: usize) -> Self {
+        Self { store, lanes: lanes.max(1) }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Fetch all `keys` concurrently (order of results matches input).
+    pub fn fetch_many(&self, keys: &[String]) -> Result<Vec<Arc<Vec<u8>>>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = keys.len();
+        let results: Vec<std::sync::Mutex<Option<Result<Arc<Vec<u8>>>>>> =
+            (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..self.lanes.min(n) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = self.store.get(&keys[i]).map(Arc::new);
+                    *results[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+            .collect()
+    }
+
+    /// Deterministic list-scheduling simulation of fetching `sizes[i]`
+    /// bytes over `lanes` connections with `profile` timing. Each lane's
+    /// stream bandwidth assumes all lanes active (the steady state of a
+    /// saturated readahead pipeline).
+    pub fn simulate_schedule(profile: &S3Profile, sizes: &[u64], lanes: usize) -> Vec<SimFetch> {
+        let lanes = lanes.max(1);
+        let mut lane_free = vec![0f64; lanes];
+        let mut out = Vec::with_capacity(sizes.len());
+        for (index, &size) in sizes.iter().enumerate() {
+            // earliest-free lane
+            let (lane, &start) = lane_free
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).expect("finite"))
+                .expect("lanes >= 1");
+            let dur = profile.transfer_time(size, lanes.min(sizes.len()));
+            let end = start + dur;
+            lane_free[lane] = end;
+            out.push(SimFetch { index, start_s: start, end_s: end });
+        }
+        out
+    }
+
+    /// Aggregate throughput (bytes/s) of a simulated schedule.
+    pub fn simulated_throughput(profile: &S3Profile, sizes: &[u64], lanes: usize) -> f64 {
+        let total: u64 = sizes.iter().sum();
+        let sched = Self::simulate_schedule(profile, sizes, lanes);
+        let makespan = sched.iter().map(|f| f.end_s).fold(0.0, f64::max);
+        if makespan <= 0.0 {
+            0.0
+        } else {
+            (total as f64 / makespan).min(profile.nic_bw)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{MemStore, ObjectStore};
+
+    #[test]
+    fn fetch_many_matches_sequential() {
+        let store = Arc::new(MemStore::new());
+        let keys: Vec<String> = (0..20).map(|i| format!("k{i}")).collect();
+        for (i, k) in keys.iter().enumerate() {
+            store.put(k, &vec![i as u8; 100]).unwrap();
+        }
+        let pool = FetchPool::new(store.clone(), 8);
+        let got = pool.fetch_many(&keys).unwrap();
+        for (i, g) in got.iter().enumerate() {
+            assert_eq!(**g, vec![i as u8; 100]);
+        }
+    }
+
+    #[test]
+    fn fetch_many_propagates_missing() {
+        let store = Arc::new(MemStore::new());
+        let pool = FetchPool::new(store, 4);
+        assert!(pool.fetch_many(&["nope".into()]).is_err());
+    }
+
+    #[test]
+    fn more_lanes_is_faster_until_nic() {
+        let p = S3Profile::default();
+        let sizes = vec![32u64 << 20; 64];
+        let t1 = FetchPool::simulated_throughput(&p, &sizes, 1);
+        let t8 = FetchPool::simulated_throughput(&p, &sizes, 8);
+        let t64 = FetchPool::simulated_throughput(&p, &sizes, 64);
+        assert!(t1 < t8 && t8 <= t64 * 1.01);
+        assert!(t64 <= p.nic_bw);
+    }
+
+    #[test]
+    fn bigger_chunks_amortize_latency() {
+        let p = S3Profile::default();
+        let total = 1u64 << 30;
+        let small: Vec<u64> = vec![1 << 20; (total >> 20) as usize];
+        let big: Vec<u64> = vec![64 << 20; (total >> 26) as usize];
+        let ts = FetchPool::simulated_throughput(&p, &small, 16);
+        let tb = FetchPool::simulated_throughput(&p, &big, 16);
+        assert!(tb > ts, "64MB {tb} should beat 1MB {ts}");
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let p = S3Profile::default();
+        let sizes = vec![10 << 20, 20 << 20, 30 << 20, 5 << 20];
+        assert_eq!(
+            FetchPool::simulate_schedule(&p, &sizes, 2),
+            FetchPool::simulate_schedule(&p, &sizes, 2)
+        );
+    }
+}

@@ -1,0 +1,253 @@
+//! [`HyperFs`]: the mounted read layer of the Hyper File System.
+//!
+//! "Within the program's context, files that are stored in remote chunked
+//! object storage appear to be local files" (§III.A). `read_file` is the
+//! POSIX-read analogue; chunk fetches go through the LRU cache and the
+//! sequential prefetcher keeps the next chunks warm in a background
+//! thread, so a compute-bound loader never waits on the network.
+
+use std::sync::Arc;
+
+use crate::metrics::Counter;
+use crate::storage::StoreHandle;
+use crate::{Error, Result};
+
+use super::cache::ChunkCache;
+use super::chunk::FsManifest;
+use super::prefetch::{PrefetchPolicy, Prefetcher};
+
+/// Counters exposed for tests / benches / the CLI `status` view.
+#[derive(Debug, Clone, Default)]
+pub struct HyperFsStats {
+    pub reads: Counter,
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    pub prefetch_issued: Counter,
+    pub prefetch_hits: Counter,
+    pub bytes_read: Counter,
+}
+
+impl HyperFsStats {
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.cache_hits.get() as f64;
+        let m = self.cache_misses.get() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+/// A mounted HFS namespace on one node.
+pub struct HyperFs {
+    store: StoreHandle,
+    ns: String,
+    manifest: Arc<FsManifest>,
+    cache: ChunkCache,
+    prefetcher: Prefetcher,
+    /// Run prefetches on background threads (true in real mode; false in
+    /// virtual-time benches where overlap is accounted analytically).
+    background_prefetch: bool,
+    pub stats: HyperFsStats,
+}
+
+impl HyperFs {
+    /// Mount namespace `ns` from `store` with a cache of `cache_bytes`.
+    pub fn mount(store: StoreHandle, ns: &str, cache_bytes: u64) -> Result<Self> {
+        Self::mount_with(store, ns, cache_bytes, PrefetchPolicy::default(), true)
+    }
+
+    pub fn mount_with(
+        store: StoreHandle,
+        ns: &str,
+        cache_bytes: u64,
+        policy: PrefetchPolicy,
+        background_prefetch: bool,
+    ) -> Result<Self> {
+        let manifest_bytes = store
+            .get(&FsManifest::manifest_key(ns))
+            .map_err(|_| Error::Storage(format!("namespace {ns:?} has no manifest")))?;
+        let manifest = Arc::new(FsManifest::from_json(&manifest_bytes)?);
+        Ok(Self {
+            store,
+            ns: ns.to_string(),
+            manifest,
+            cache: ChunkCache::new(cache_bytes),
+            prefetcher: Prefetcher::new(policy),
+            background_prefetch,
+            stats: HyperFsStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &FsManifest {
+        &self.manifest
+    }
+
+    pub fn namespace(&self) -> &str {
+        &self.ns
+    }
+
+    /// Read a whole file by path (the POSIX open+read+close analogue).
+    pub fn read_file(&self, path: &str) -> Result<Vec<u8>> {
+        let idx = self.manifest.find(path)?;
+        let entry = self.manifest.files[idx].clone();
+        self.stats.reads.inc();
+        self.stats.bytes_read.add(entry.len);
+
+        let chunk = self.chunk_data(entry.chunk)?;
+        // fire readahead for the predicted next chunks
+        for target in self
+            .prefetcher
+            .on_access(entry.chunk, self.manifest.chunks.len() as u32)
+        {
+            self.issue_prefetch(target);
+        }
+        let start = entry.offset as usize;
+        let end = start + entry.len as usize;
+        Ok(chunk[start..end].to_vec())
+    }
+
+    /// File size without fetching data.
+    pub fn stat(&self, path: &str) -> Result<u64> {
+        Ok(self.manifest.files[self.manifest.find(path)?].len)
+    }
+
+    /// Paths under a prefix.
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        self.manifest.list(prefix).into_iter().map(|f| f.path.clone()).collect()
+    }
+
+    /// Chunk bytes via cache.
+    fn chunk_data(&self, id: u32) -> Result<Arc<Vec<u8>>> {
+        if let Some(hit) = self.cache.get(id) {
+            self.stats.cache_hits.inc();
+            return Ok(hit);
+        }
+        self.stats.cache_misses.inc();
+        let data = Arc::new(self.store.get(&FsManifest::chunk_key(&self.ns, id))?);
+        self.cache.insert(id, data.clone());
+        Ok(data)
+    }
+
+    fn issue_prefetch(&self, id: u32) {
+        if self.cache.contains(id) {
+            return;
+        }
+        self.stats.prefetch_issued.inc();
+        let store = self.store.clone();
+        let cache = self.cache.clone();
+        let key = FsManifest::chunk_key(&self.ns, id);
+        let hits = self.stats.prefetch_hits.clone();
+        let work = move || {
+            if let Ok(data) = store.get(&key) {
+                cache.insert(id, Arc::new(data));
+                hits.inc();
+            }
+        };
+        if self.background_prefetch {
+            std::thread::spawn(work);
+        } else {
+            work();
+        }
+    }
+
+    /// Expose the cache for tests / warm-start scenarios.
+    pub fn cache(&self) -> &ChunkCache {
+        &self.cache
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hfs::Uploader;
+    use crate::storage::MemStore;
+
+    fn setup(n_files: usize, file_size: usize, chunk_size: u64) -> (StoreHandle, Vec<String>) {
+        let store: StoreHandle = Arc::new(MemStore::new());
+        let mut up = Uploader::new(store.clone(), "ds", chunk_size);
+        let mut paths = Vec::new();
+        for i in 0..n_files {
+            let path = format!("data/{i:05}.bin");
+            up.add_file(&path, &vec![(i % 251) as u8; file_size]).unwrap();
+            paths.push(path);
+        }
+        up.seal().unwrap();
+        (store, paths)
+    }
+
+    #[test]
+    fn read_roundtrip() {
+        let (store, paths) = setup(10, 100, 350);
+        let fs = HyperFs::mount(store, "ds", 10 << 20).unwrap();
+        for (i, p) in paths.iter().enumerate() {
+            assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
+        }
+        assert_eq!(fs.stats.reads.get(), 10);
+    }
+
+    #[test]
+    fn sequential_reads_hit_cache_within_chunk() {
+        // 3 files per chunk -> at least 2/3 of reads are cache hits
+        let (store, paths) = setup(30, 100, 300);
+        let fs = HyperFs::mount_with(
+            store,
+            "ds",
+            10 << 20,
+            PrefetchPolicy { depth: 0 },
+            false,
+        )
+        .unwrap();
+        for p in &paths {
+            fs.read_file(p).unwrap();
+        }
+        assert_eq!(fs.stats.cache_misses.get(), 10); // one per chunk
+        assert_eq!(fs.stats.cache_hits.get(), 20);
+    }
+
+    #[test]
+    fn prefetch_warms_next_chunk_synchronously() {
+        let (store, paths) = setup(30, 100, 300);
+        let fs = HyperFs::mount_with(
+            store,
+            "ds",
+            10 << 20,
+            PrefetchPolicy { depth: 1 },
+            false, // synchronous prefetch for determinism
+        )
+        .unwrap();
+        for p in &paths {
+            fs.read_file(p).unwrap();
+        }
+        // after the run is sequential, every later chunk came from readahead
+        assert!(fs.stats.prefetch_issued.get() >= 7, "{:?}", fs.stats);
+        assert!(fs.stats.cache_misses.get() <= 3, "{:?}", fs.stats);
+    }
+
+    #[test]
+    fn stat_and_list() {
+        let (store, _) = setup(5, 42, 1000);
+        let fs = HyperFs::mount(store, "ds", 1 << 20).unwrap();
+        assert_eq!(fs.stat("data/00003.bin").unwrap(), 42);
+        assert_eq!(fs.list("data/").len(), 5);
+        assert_eq!(fs.list("nope/").len(), 0);
+        assert!(fs.stat("missing").is_err());
+    }
+
+    #[test]
+    fn missing_namespace_fails_to_mount() {
+        let store: StoreHandle = Arc::new(MemStore::new());
+        assert!(HyperFs::mount(store, "ghost", 1 << 20).is_err());
+    }
+
+    #[test]
+    fn tiny_cache_still_correct() {
+        let (store, paths) = setup(20, 100, 300);
+        let fs = HyperFs::mount_with(store, "ds", 300, PrefetchPolicy { depth: 0 }, false)
+            .unwrap();
+        for (i, p) in paths.iter().enumerate() {
+            assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! The Hyper File System (HFS): a chunked namespace over object storage.
+//!
+//! §III.A of the paper: "we chunk the file system itself and store it in
+//! object storage … When the program queries the file system for a
+//! specific file, the integration layer checks which chunk contains the
+//! file to download. In the next query, the file system can check if the
+//! existing chunk contains the next required file before fetching it."
+//!
+//! Components:
+//!
+//! * [`chunk`] — on-store layout: files packed into fixed-size chunks plus
+//!   a JSON manifest (`FsManifest`).
+//! * [`writer`] — the upload path: chunker that packs files and writes the
+//!   manifest ([`Uploader`]).
+//! * [`cache`] — node-local LRU chunk cache with a byte budget.
+//! * [`prefetch`] — sequential-access predictor: readahead of the next
+//!   chunk(s) in manifest order.
+//! * [`fs`] — [`HyperFs`], the POSIX-ish read layer every node mounts.
+//! * [`fetch`] — [`FetchPool`], multi-lane chunk fetching (the paper's
+//!   "multithreading T and multiprocessing P" in Fig 2).
+
+pub mod cache;
+pub mod chunk;
+pub mod fetch;
+pub mod fs;
+pub mod prefetch;
+pub mod writer;
+
+pub use cache::ChunkCache;
+pub use chunk::{ChunkRef, FileEntry, FsManifest};
+pub use fetch::FetchPool;
+pub use fs::{HyperFs, HyperFsStats};
+pub use prefetch::Prefetcher;
+pub use writer::Uploader;
+
+/// Default chunk size (64 MB — middle of the paper's 12–100 MB sweet spot).
+pub const DEFAULT_CHUNK_SIZE: u64 = 64 << 20;

@@ -1,0 +1,127 @@
+//! Sequential-read prediction (§III.A).
+//!
+//! Files are packed into chunks in upload order and deep-learning loaders
+//! read them in approximately that order, so after serving a file from
+//! chunk `c` the next miss is overwhelmingly likely to hit chunk `c+1`.
+//! The [`Prefetcher`] tracks the read cursor and emits readahead
+//! candidates; [`super::HyperFs`] fetches them in the background (real
+//! mode) or accounts them as overlapped transfers (sim mode).
+
+use std::collections::VecDeque;
+
+use std::sync::Mutex;
+
+/// Readahead policy: how many chunks ahead of the cursor to keep warm.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchPolicy {
+    /// Number of chunks of lookahead (0 disables prefetch).
+    pub depth: u32,
+}
+
+impl Default for PrefetchPolicy {
+    fn default() -> Self {
+        Self { depth: 2 }
+    }
+}
+
+/// Tracks per-namespace access pattern and proposes chunks to warm.
+pub struct Prefetcher {
+    policy: PrefetchPolicy,
+    state: Mutex<State>,
+}
+
+#[derive(Default)]
+struct State {
+    last_chunk: Option<u32>,
+    /// consecutive accesses that moved forward by <= 1 chunk
+    sequential_run: u32,
+    pending: VecDeque<u32>,
+}
+
+impl Prefetcher {
+    pub fn new(policy: PrefetchPolicy) -> Self {
+        Self { policy, state: Mutex::new(State::default()) }
+    }
+
+    /// Record that `chunk` (of `n_chunks` total) was just read; returns the
+    /// chunk ids that should be prefetched now.
+    ///
+    /// Readahead only engages once the pattern looks sequential (two
+    /// forward steps), so random-access workloads don't waste bandwidth —
+    /// the paper's lookahead is aimed at scan-style training reads.
+    pub fn on_access(&self, chunk: u32, n_chunks: u32) -> Vec<u32> {
+        let mut st = self.state.lock().unwrap();
+        match st.last_chunk {
+            Some(prev) if chunk == prev || chunk == prev + 1 => st.sequential_run += 1,
+            Some(_) => st.sequential_run = 0,
+            None => st.sequential_run = 1,
+        }
+        st.last_chunk = Some(chunk);
+        if self.policy.depth == 0 || st.sequential_run < 2 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for ahead in 1..=self.policy.depth {
+            let target = chunk + ahead;
+            if target < n_chunks && !st.pending.contains(&target) {
+                st.pending.push_back(target);
+                if st.pending.len() > 16 {
+                    st.pending.pop_front();
+                }
+                out.push(target);
+            }
+        }
+        out
+    }
+
+    /// Forget pending state (e.g. after a cache clear).
+    pub fn reset(&self) {
+        *self.state.lock().unwrap() = State::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engages_after_sequential_run() {
+        let p = Prefetcher::new(PrefetchPolicy { depth: 2 });
+        assert!(p.on_access(0, 10).is_empty()); // first touch
+        assert_eq!(p.on_access(1, 10), vec![2, 3]); // sequential confirmed
+        assert_eq!(p.on_access(2, 10), vec![4]); // 3 already pending
+    }
+
+    #[test]
+    fn random_access_disables() {
+        let p = Prefetcher::new(PrefetchPolicy { depth: 2 });
+        p.on_access(0, 10);
+        p.on_access(1, 10);
+        assert!(p.on_access(7, 10).is_empty()); // jump resets the run
+        assert!(p.on_access(3, 10).is_empty());
+    }
+
+    #[test]
+    fn respects_namespace_end() {
+        let p = Prefetcher::new(PrefetchPolicy { depth: 3 });
+        p.on_access(7, 10);
+        p.on_access(8, 10);
+        assert_eq!(p.on_access(9, 10), Vec::<u32>::new()); // nothing past end
+    }
+
+    #[test]
+    fn depth_zero_disables() {
+        let p = Prefetcher::new(PrefetchPolicy { depth: 0 });
+        p.on_access(0, 10);
+        p.on_access(1, 10);
+        assert!(p.on_access(2, 10).is_empty());
+    }
+
+    #[test]
+    fn repeat_access_counts_as_sequential() {
+        let p = Prefetcher::new(PrefetchPolicy { depth: 1 });
+        p.on_access(5, 10);
+        assert_eq!(p.on_access(5, 10), vec![6], "second touch confirms the run");
+        assert!(p.on_access(5, 10).is_empty(), "6 is already pending");
+    }
+}

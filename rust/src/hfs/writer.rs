@@ -1,0 +1,151 @@
+//! HFS upload path: pack files into chunks, write chunks + manifest.
+//!
+//! Mirrors the paper's interface flow: "Interface uploads the training
+//! data … Source files are chunked and uploaded to Object Storage."
+
+use crate::storage::StoreHandle;
+use crate::{Error, Result};
+
+use super::chunk::{ChunkRef, FileEntry, FsManifest};
+
+/// Streaming chunker: add files, then `seal()` to flush the tail chunk and
+/// write the manifest. Files larger than the chunk size span a dedicated
+/// oversized chunk (kept whole so a single GET serves the file).
+pub struct Uploader {
+    store: StoreHandle,
+    ns: String,
+    manifest: FsManifest,
+    buf: Vec<u8>,
+    next_chunk: u32,
+    sealed: bool,
+}
+
+impl Uploader {
+    pub fn new(store: StoreHandle, namespace: &str, chunk_size: u64) -> Self {
+        assert!(chunk_size > 0, "chunk_size must be positive");
+        Self {
+            store,
+            ns: namespace.to_string(),
+            manifest: FsManifest::new(chunk_size),
+            buf: Vec::with_capacity(chunk_size as usize),
+            next_chunk: 0,
+            sealed: false,
+        }
+    }
+
+    /// Append one file to the namespace.
+    pub fn add_file(&mut self, path: &str, data: &[u8]) -> Result<()> {
+        if self.sealed {
+            return Err(Error::Storage("uploader already sealed".into()));
+        }
+        if path.is_empty() {
+            return Err(Error::Storage("empty file path".into()));
+        }
+        // would overflow current chunk -> flush first (keeps files whole)
+        if !self.buf.is_empty()
+            && self.buf.len() as u64 + data.len() as u64 > self.manifest.chunk_size
+        {
+            self.flush_chunk()?;
+        }
+        self.manifest.files.push(FileEntry {
+            path: path.to_string(),
+            chunk: self.next_chunk,
+            offset: self.buf.len() as u64,
+            len: data.len() as u64,
+        });
+        self.buf.extend_from_slice(data);
+        // oversized single file: flush immediately as its own chunk
+        if self.buf.len() as u64 >= self.manifest.chunk_size {
+            self.flush_chunk()?;
+        }
+        Ok(())
+    }
+
+    fn flush_chunk(&mut self) -> Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        let key = FsManifest::chunk_key(&self.ns, self.next_chunk);
+        self.store.put(&key, &self.buf)?;
+        self.manifest.chunks.push(ChunkRef { id: self.next_chunk, len: self.buf.len() as u64 });
+        self.next_chunk += 1;
+        self.buf.clear();
+        Ok(())
+    }
+
+    /// Flush the tail chunk, sort the file table, write the manifest.
+    /// Returns the sealed manifest.
+    pub fn seal(mut self) -> Result<FsManifest> {
+        self.flush_chunk()?;
+        self.manifest.seal();
+        let key = FsManifest::manifest_key(&self.ns);
+        self.store.put(&key, &self.manifest.to_json()?)?;
+        self.sealed = true;
+        Ok(self.manifest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::storage::MemStore;
+
+    fn store() -> StoreHandle {
+        Arc::new(MemStore::new())
+    }
+
+    #[test]
+    fn packs_files_into_chunks() {
+        let s = store();
+        let mut up = Uploader::new(s.clone(), "ds", 100);
+        up.add_file("f1", &[1u8; 40]).unwrap();
+        up.add_file("f2", &[2u8; 40]).unwrap();
+        up.add_file("f3", &[3u8; 40]).unwrap(); // spills to chunk 1
+        let m = up.seal().unwrap();
+        assert_eq!(m.chunks.len(), 2);
+        assert_eq!(m.files.len(), 3);
+        let f3 = &m.files[m.find("f3").unwrap()];
+        assert_eq!(f3.chunk, 1);
+        assert_eq!(s.get(&FsManifest::chunk_key("ds", 0)).unwrap().len(), 80);
+    }
+
+    #[test]
+    fn oversized_file_gets_own_chunk() {
+        let s = store();
+        let mut up = Uploader::new(s.clone(), "ds", 100);
+        up.add_file("small", &[0u8; 10]).unwrap();
+        up.add_file("huge", &[9u8; 350]).unwrap();
+        up.add_file("tail", &[7u8; 10]).unwrap();
+        let m = up.seal().unwrap();
+        let huge = &m.files[m.find("huge").unwrap()];
+        assert_eq!(huge.offset, 0, "oversized file starts its own chunk");
+        assert_eq!(m.chunks[huge.chunk as usize].len, 350);
+        assert_eq!(m.total_bytes(), 370);
+    }
+
+    #[test]
+    fn manifest_written_to_store() {
+        let s = store();
+        let mut up = Uploader::new(s.clone(), "ds", 64);
+        up.add_file("a", b"data").unwrap();
+        up.seal().unwrap();
+        let m = FsManifest::from_json(&s.get("ds/manifest.json").unwrap()).unwrap();
+        assert_eq!(m.file_count(), 1);
+    }
+
+    #[test]
+    fn empty_namespace_ok() {
+        let m = Uploader::new(store(), "empty", 64).seal().unwrap();
+        assert_eq!(m.file_count(), 0);
+        assert!(m.chunks.is_empty());
+    }
+
+    #[test]
+    fn rejects_after_double_add_of_sealed() {
+        let s = store();
+        let mut up = Uploader::new(s, "ds", 64);
+        up.add_file("", b"x").unwrap_err();
+    }
+}

@@ -1,0 +1,208 @@
+//! `hyper` — the leader CLI (hand-rolled arg parsing; this image has no
+//! clap).
+//!
+//! ```text
+//! hyper submit <recipe.yaml> [--seed N]   # compile + simulate a workflow
+//! hyper train [--preset P] [--steps N] [--lr X]   # real PJRT training
+//! hyper infer [--preset P] [--batches N]          # batch inference demo
+//! hyper status                                    # artifacts + catalog
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context};
+
+use hyper_dist::cluster::Master;
+use hyper_dist::config::default_artifacts_dir;
+use hyper_dist::hfs::Uploader;
+use hyper_dist::runtime::Runtime;
+use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
+use hyper_dist::storage::{MemStore, StoreHandle};
+use hyper_dist::util::Json;
+
+/// Tiny flag parser: `--key value` pairs after positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> anyhow::Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val =
+                    it.next().with_context(|| format!("flag --{key} needs a value"))?.clone();
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("bad --{key} {v:?}: {e}")),
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "submit" => cmd_submit(&args),
+        "train" => cmd_train(&args),
+        "infer" => cmd_infer(&args),
+        "status" => cmd_status(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `hyper help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "hyper — distributed cloud processing for large-scale DL (reproduction)\n\n\
+         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper train [--preset P] [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper status"
+    );
+}
+
+fn cmd_submit(args: &Args) -> anyhow::Result<()> {
+    let recipe_path =
+        args.positional.first().context("usage: hyper submit <recipe.yaml> [--seed N]")?;
+    let seed: u64 = args.get("seed", 0)?;
+    let yaml = std::fs::read_to_string(recipe_path)
+        .with_context(|| format!("reading {recipe_path}"))?;
+    let master = Master::new();
+    let name = master.submit(&yaml, seed)?;
+    let mut wf = master.workflow(&name)?;
+    println!(
+        "workflow {name:?}: {} experiments, {} tasks",
+        wf.n_experiments(),
+        wf.total_tasks()
+    );
+    let mut driver = SimDriver::new(SimDriverConfig { seed, ..Default::default() });
+    let report = driver.run(&mut wf)?;
+    master.record_run(
+        &name,
+        &Json::obj(vec![
+            ("makespan_s", Json::num(report.makespan_s)),
+            ("cost_usd", Json::num(report.total_cost_usd)),
+            ("succeeded", Json::num(report.tasks_succeeded as f64)),
+        ]),
+    );
+    println!(
+        "complete={} makespan={:.1}s cost=${:.2} succeeded={} failed={} \
+         preemptions={} reschedules={} nodes={} utilization={:.1}%",
+        report.workflow_complete,
+        report.makespan_s,
+        report.total_cost_usd,
+        report.tasks_succeeded,
+        report.tasks_failed,
+        report.preemptions,
+        report.reschedules,
+        report.nodes_launched,
+        100.0 * report.utilization
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let preset: String = args.get("preset", "tiny".to_string())?;
+    let steps: u64 = args.get("steps", 20)?;
+    let lr: f32 = args.get("lr", 1e-3)?;
+    let rt = Runtime::new(&default_artifacts_dir())?;
+    let mut sess = rt.train_session(&preset, 0)?;
+    let nt = sess.batch_tokens();
+    let vocab = sess.preset().vocab as i64;
+    println!(
+        "training preset {preset:?}: {} params, {} tokens/step",
+        sess.preset().param_count,
+        nt
+    );
+    // synthetic structured corpus (repeating n-grams => learnable)
+    let mut rng = hyper_dist::sim::SimRng::new(7);
+    for s in 0..steps {
+        let base = rng.gen_range(vocab as u64 - 17) as i64;
+        let tokens: Vec<i32> =
+            (0..nt).map(|i| ((base + (i % 16) as i64) % vocab) as i32).collect();
+        let loss = sess.step(&tokens, lr)?;
+        if s % 5 == 0 || s + 1 == steps {
+            println!("step {s:>4}  loss {loss:.4}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> anyhow::Result<()> {
+    let preset: String = args.get("preset", "tiny".to_string())?;
+    let batches: usize = args.get("batches", 4)?;
+    let rt = Runtime::new(&default_artifacts_dir())?;
+    let sess = rt.infer_session(&preset, 0)?;
+    let nt = sess.preset().batch * sess.preset().seq_len;
+    let vocab = sess.preset().vocab as u64;
+    let mut rng = hyper_dist::sim::SimRng::new(3);
+    let t0 = std::time::Instant::now();
+    let mut produced = 0;
+    for b in 0..batches {
+        let tokens: Vec<i32> = (0..nt).map(|_| rng.gen_range(vocab) as i32).collect();
+        let next = sess.next_tokens(&tokens)?;
+        produced += next.len();
+        println!("batch {b}: next tokens {:?}…", &next[..next.len().min(8)]);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{produced} predictions in {dt:.2}s ({:.1}/s)", produced as f64 / dt);
+    Ok(())
+}
+
+fn cmd_status() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match Runtime::new(&dir) {
+        Ok(rt) => {
+            for name in rt.manifest.preset_names() {
+                let p = rt.manifest.preset(name)?;
+                println!(
+                    "  preset {name:10} params={:>12} flops/step={:.2e}",
+                    p.param_count,
+                    p.flops_per_step()
+                );
+            }
+        }
+        Err(e) => println!("  (no artifacts: {e})"),
+    }
+    println!("instance catalog:");
+    for s in hyper_dist::cloud::CATALOG {
+        println!(
+            "  {:14} {:3} vCPU {:2} GPU {:>7.2} TFLOPs  ${:>6.3}/h (spot ${:>6.3}/h)",
+            s.name,
+            s.vcpus,
+            s.gpus,
+            s.flops / 1e12,
+            s.usd_per_hour,
+            s.spot_usd_per_hour
+        );
+    }
+    // demo: HFS namespace smoke
+    let store: StoreHandle = Arc::new(MemStore::new());
+    let mut up = Uploader::new(store.clone(), "smoke", 1 << 20);
+    up.add_file("hello.txt", b"hyper file system ok")?;
+    up.seal()?;
+    let fs = hyper_dist::hfs::HyperFs::mount(store, "smoke", 1 << 20)?;
+    println!("hfs smoke: {}", String::from_utf8_lossy(&fs.read_file("hello.txt")?));
+    Ok(())
+}

@@ -1,0 +1,252 @@
+//! Lightweight metrics: counters, gauges, histograms, cost accounting.
+//!
+//! The paper's master collects "client application logs, CPU/GPU
+//! utilization logs and operating system logs" into Logstash; here a
+//! [`MetricsRegistry`] plays that role for the coordinator, and
+//! [`CostLedger`] implements the spot/on-demand cost accounting the
+//! paper's §IV.B cost claims rest on.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use std::sync::Mutex;
+
+/// Monotonic counter, cheap to clone and update from any thread.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Streaming histogram with fixed log-spaced buckets (values in arbitrary
+/// units — callers document their unit). Tracks count/sum/min/max exactly.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    inner: Arc<Mutex<HistInner>>,
+}
+
+#[derive(Debug)]
+struct HistInner {
+    buckets: Vec<u64>, // log2 buckets
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(HistInner {
+                buckets: vec![0; 64],
+                count: 0,
+                sum: 0.0,
+                min: f64::INFINITY,
+                max: f64::NEG_INFINITY,
+            })),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, v: f64) {
+        let mut h = self.inner.lock().unwrap();
+        let idx = if v <= 1.0 { 0 } else { (v.log2().floor() as usize).min(63) };
+        h.buckets[idx] += 1;
+        h.count += 1;
+        h.sum += v;
+        h.min = h.min.min(v);
+        h.max = h.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.lock().unwrap().count
+    }
+
+    pub fn mean(&self) -> f64 {
+        let h = self.inner.lock().unwrap();
+        if h.count == 0 {
+            0.0
+        } else {
+            h.sum / h.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        let h = self.inner.lock().unwrap();
+        if h.count == 0 { 0.0 } else { h.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        let h = self.inner.lock().unwrap();
+        if h.count == 0 { 0.0 } else { h.max }
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let h = self.inner.lock().unwrap();
+        if h.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * h.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in h.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 2f64.powi(i as i32 + 1);
+            }
+        }
+        h.max
+    }
+}
+
+/// Named metrics registry shared across a run.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: Arc<Mutex<BTreeMap<String, Counter>>>,
+    histograms: Arc<Mutex<BTreeMap<String, Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Render a sorted `name value` report (used by the CLI `status`).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name} {}\n", c.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name} count={} mean={:.3} min={:.3} max={:.3}\n",
+                h.count(),
+                h.mean(),
+                h.min(),
+                h.max()
+            ));
+        }
+        out
+    }
+}
+
+/// Cost accounting: accumulates instance-hours at on-demand or spot rates.
+///
+/// Mirrors the paper's headline economics: spot/preemptible instances are
+/// "usually 2 or 3 times cheaper but can be terminated anytime".
+#[derive(Debug, Clone, Default)]
+pub struct CostLedger {
+    inner: Arc<Mutex<CostInner>>,
+}
+
+#[derive(Debug, Default)]
+struct CostInner {
+    on_demand_usd: f64,
+    spot_usd: f64,
+    by_type: BTreeMap<String, f64>,
+}
+
+impl CostLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `hours` of an instance at `usd_per_hour`.
+    pub fn charge(&self, instance_type: &str, spot: bool, usd_per_hour: f64, hours: f64) {
+        let mut c = self.inner.lock().unwrap();
+        let usd = usd_per_hour * hours;
+        if spot {
+            c.spot_usd += usd;
+        } else {
+            c.on_demand_usd += usd;
+        }
+        *c.by_type.entry(instance_type.to_string()).or_default() += usd;
+    }
+
+    pub fn total_usd(&self) -> f64 {
+        let c = self.inner.lock().unwrap();
+        c.on_demand_usd + c.spot_usd
+    }
+
+    pub fn spot_usd(&self) -> f64 {
+        self.inner.lock().unwrap().spot_usd
+    }
+
+    pub fn on_demand_usd(&self) -> f64 {
+        self.inner.lock().unwrap().on_demand_usd
+    }
+
+    pub fn by_type(&self) -> BTreeMap<String, f64> {
+        self.inner.lock().unwrap().by_type.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let r = MetricsRegistry::new();
+        r.counter("tasks").add(5);
+        r.counter("tasks").inc();
+        assert_eq!(r.counter("tasks").get(), 6);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::new();
+        for v in [1.0, 2.0, 4.0, 8.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 3.75).abs() < 1e-9);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 8.0);
+        assert!(h.quantile(0.5) >= 2.0);
+    }
+
+    #[test]
+    fn cost_ledger_accumulates() {
+        let l = CostLedger::new();
+        l.charge("p3.2xlarge", false, 3.06, 2.0);
+        l.charge("p3.2xlarge", true, 0.95, 2.0);
+        assert!((l.total_usd() - (6.12 + 1.90)).abs() < 1e-9);
+        assert!((l.spot_usd() - 1.90).abs() < 1e-9);
+        assert_eq!(l.by_type().len(), 1);
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let r = MetricsRegistry::new();
+        r.counter("x").inc();
+        r.histogram("y").record(3.0);
+        let rep = r.report();
+        assert!(rep.contains("x 1") && rep.contains("y count=1"));
+    }
+}

@@ -1,0 +1,161 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and rust.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Shape record of one flat parameter tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One preset's entry.
+#[derive(Debug, Clone)]
+pub struct PresetManifest {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub param_count: u64,
+    pub flops_per_token: f64,
+    pub params: Vec<TensorSpec>,
+    pub n_tensors: usize,
+    pub artifacts: BTreeMap<String, String>,
+    pub train_inputs: usize,
+    pub train_outputs: usize,
+}
+
+impl PresetManifest {
+    fn from_json(v: &Json) -> Result<Self> {
+        let params = v
+            .req_arr("params")?
+            .iter()
+            .map(|t| {
+                Ok(TensorSpec {
+                    name: t.req_str("name")?.to_string(),
+                    shape: t
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|d| {
+                            d.as_u64()
+                                .map(|x| x as usize)
+                                .ok_or_else(|| Error::Json("bad shape dim".into()))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = v
+            .req_obj("artifacts")?
+            .iter()
+            .map(|(k, val)| {
+                Ok((k.clone(), val.as_str().ok_or_else(|| Error::Json("artifact".into()))?.to_string()))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(PresetManifest {
+            name: v.req_str("name")?.to_string(),
+            vocab: v.req_u64("vocab")? as usize,
+            d_model: v.req_u64("d_model")? as usize,
+            n_heads: v.req_u64("n_heads")? as usize,
+            n_layers: v.req_u64("n_layers")? as usize,
+            d_ff: v.req_u64("d_ff")? as usize,
+            seq_len: v.req_u64("seq_len")? as usize,
+            batch: v.req_u64("batch")? as usize,
+            param_count: v.req_u64("param_count")?,
+            flops_per_token: v.req_f64("flops_per_token")?,
+            n_tensors: v.req_u64("n_tensors")? as usize,
+            train_inputs: v.req_u64("train_inputs")? as usize,
+            train_outputs: v.req_u64("train_outputs")? as usize,
+            params,
+            artifacts,
+        })
+    }
+
+    /// fwd+bwd FLOPs of one training step.
+    pub fn flops_per_step(&self) -> f64 {
+        self.flops_per_token * (self.batch * self.seq_len) as f64
+    }
+
+    /// Bytes of one full f32 state (params + m + v).
+    pub fn state_bytes(&self) -> u64 {
+        3 * 4 * self.param_count
+    }
+}
+
+/// Loaded manifest plus its directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    presets: BTreeMap<String, PresetManifest>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let doc = Json::parse(&text)?;
+        let presets = doc
+            .req_obj("presets")?
+            .iter()
+            .map(|(name, v)| Ok((name.clone(), PresetManifest::from_json(v)?)))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Self { dir: dir.to_path_buf(), presets })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetManifest> {
+        self.presets
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("preset {name:?} not in manifest")))
+    }
+
+    pub fn preset_names(&self) -> Vec<&str> {
+        self.presets.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_dir;
+
+    #[test]
+    fn loads_built_manifest_if_present() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let tiny = m.preset("tiny").unwrap();
+        assert_eq!(tiny.n_tensors, tiny.params.len());
+        let total: usize = tiny.params.iter().map(TensorSpec::elements).sum();
+        assert_eq!(total as u64, tiny.param_count);
+        assert_eq!(tiny.train_inputs, 3 * tiny.n_tensors + 3);
+        assert!(m.preset("no-such-preset").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_friendly_error() {
+        let err = ArtifactManifest::load(Path::new("/definitely/missing")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,64 @@
+//! PJRT runtime: load + execute the AOT artifacts from `rust` (§Layer-3).
+//!
+//! `python/compile/aot.py` lowers the JAX/Pallas model to HLO *text*;
+//! this module parses it with `HloModuleProto::from_text_file`, compiles
+//! once per step function on the PJRT CPU client, and exposes typed
+//! sessions:
+//!
+//! * [`TrainSession`] — owns the flat (params, m, v, step) state, runs
+//!   `train_step`, checkpoints to a [`CheckpointStore`], restores after a
+//!   (simulated or real) preemption.
+//! * [`InferSession`] — batch inference over token windows.
+//!
+//! Python never runs here: the artifacts are the only interface.
+
+mod manifest;
+mod session;
+
+pub use manifest::{ArtifactManifest, PresetManifest, TensorSpec};
+pub use session::{InferSession, TrainSession};
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::{Error, Result};
+
+/// Shared PJRT client + compiled executables for one preset.
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+    pub manifest: ArtifactManifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = Arc::new(xla::PjRtClient::cpu()?);
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        Ok(Self { client, manifest })
+    }
+
+    pub fn client(&self) -> &Arc<xla::PjRtClient> {
+        &self.client
+    }
+
+    /// Compile one artifact (e.g. `"tiny_train"`) from HLO text.
+    pub fn compile(&self, artifact_file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.dir.join(artifact_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Start a training session for a preset.
+    pub fn train_session(&self, preset: &str, seed: i32) -> Result<TrainSession> {
+        TrainSession::create(self, preset, seed)
+    }
+
+    /// Start an inference session for a preset (params from a checkpoint
+    /// blob or fresh init).
+    pub fn infer_session(&self, preset: &str, seed: i32) -> Result<InferSession> {
+        InferSession::create(self, preset, seed)
+    }
+}

@@ -1,0 +1,269 @@
+//! Typed execution sessions over the compiled artifacts.
+
+use xla::{ElementType, Literal, PjRtLoadedExecutable};
+
+use crate::scheduler::CheckpointStore;
+use crate::workflow::TaskId;
+use crate::{Error, Result};
+
+use super::manifest::PresetManifest;
+use super::Runtime;
+
+/// Decompose an execution result into per-output literals, handling both
+/// tuple-buffer and flattened-output PJRT conventions.
+fn outputs_to_literals(result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Literal>> {
+    let device0 = result
+        .into_iter()
+        .next()
+        .ok_or_else(|| Error::Runtime("execution produced no outputs".into()))?;
+    if device0.len() == 1 {
+        let lit = device0[0].to_literal_sync()?;
+        // lowered with return_tuple=True -> single tuple output
+        match lit.shape()? {
+            xla::Shape::Tuple(_) => Ok(lit.to_tuple()?),
+            _ => Ok(vec![lit]),
+        }
+    } else {
+        device0.iter().map(|b| Ok(b.to_literal_sync()?)).collect()
+    }
+}
+
+/// Build the int32 `(batch, seq)` token literal.
+fn tokens_literal(tokens: &[i32], batch: usize, seq: usize) -> Result<Literal> {
+    if tokens.len() != batch * seq {
+        return Err(Error::Runtime(format!(
+            "token batch has {} elements, expected {}x{}",
+            tokens.len(),
+            batch,
+            seq
+        )));
+    }
+    Ok(Literal::vec1(tokens).reshape(&[batch as i64, seq as i64])?)
+}
+
+/// A live training state: flat params/m/v tensors + the Adam step scalar.
+pub struct TrainSession {
+    preset: PresetManifest,
+    exe_train: PjRtLoadedExecutable,
+    exe_eval: Option<PjRtLoadedExecutable>,
+    /// `3n + 1` literals: params, m, v (manifest order), then step.
+    state: Vec<Literal>,
+    pub steps_done: u64,
+    pub last_loss: f32,
+}
+
+impl TrainSession {
+    pub(super) fn create(rt: &Runtime, preset: &str, seed: i32) -> Result<Self> {
+        let pm = rt.manifest.preset(preset)?.clone();
+        let exe_init = rt.compile(&pm.artifacts["init"])?;
+        let exe_train = rt.compile(&pm.artifacts["train"])?;
+        let out = exe_init.execute::<Literal>(&[Literal::scalar(seed)])?;
+        let state = outputs_to_literals(out)?;
+        let expect = 3 * pm.n_tensors + 1;
+        if state.len() != expect {
+            return Err(Error::Runtime(format!(
+                "init returned {} tensors, expected {expect}",
+                state.len()
+            )));
+        }
+        Ok(Self { preset: pm, exe_train, exe_eval: None, state, steps_done: 0, last_loss: f32::NAN })
+    }
+
+    pub fn preset(&self) -> &PresetManifest {
+        &self.preset
+    }
+
+    pub fn batch_tokens(&self) -> usize {
+        self.preset.batch * self.preset.seq_len
+    }
+
+    /// Run one train step on a `(batch*seq)` token slice; returns the loss.
+    pub fn step(&mut self, tokens: &[i32], lr: f32) -> Result<f32> {
+        let tok = tokens_literal(tokens, self.preset.batch, self.preset.seq_len)?;
+        let mut args: Vec<&Literal> = self.state.iter().collect();
+        args.push(&tok);
+        let lr_lit = Literal::scalar(lr);
+        args.push(&lr_lit);
+        let out = self.exe_train.execute::<&Literal>(&args)?;
+        let mut outs = outputs_to_literals(out)?;
+        if outs.len() != 3 * self.preset.n_tensors + 2 {
+            return Err(Error::Runtime(format!("train returned {} tensors", outs.len())));
+        }
+        let loss = outs.pop().expect("loss present").to_vec::<f32>()?[0];
+        self.state = outs; // params, m, v, step
+        self.steps_done += 1;
+        self.last_loss = loss;
+        Ok(loss)
+    }
+
+    /// Validation loss on a token batch (no state update).
+    pub fn eval(&mut self, rt: &Runtime, tokens: &[i32]) -> Result<f32> {
+        if self.exe_eval.is_none() {
+            self.exe_eval = Some(rt.compile(&self.preset.artifacts["eval"])?);
+        }
+        let tok = tokens_literal(tokens, self.preset.batch, self.preset.seq_len)?;
+        let n = self.preset.n_tensors;
+        let mut args: Vec<&Literal> = self.state[..n].iter().collect();
+        args.push(&tok);
+        let out = self.exe_eval.as_ref().expect("just set").execute::<&Literal>(&args)?;
+        let outs = outputs_to_literals(out)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+
+    /// Adam step counter according to the device state.
+    pub fn device_step(&self) -> Result<f32> {
+        Ok(self.state[3 * self.preset.n_tensors].to_vec::<f32>()?[0])
+    }
+
+    // ------------------------------------------------------ checkpoints
+
+    /// Serialize the full state (params+m+v+step) to a blob:
+    /// `[u64 n_floats][f32 data…]` per tensor, manifest order ×3, then step.
+    pub fn state_blob(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        for lit in &self.state {
+            let v: Vec<f32> = lit.to_vec::<f32>()?;
+            out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Restore state from [`TrainSession::state_blob`] output.
+    pub fn restore_blob(&mut self, blob: &[u8]) -> Result<()> {
+        let mut pos = 0usize;
+        let mut new_state = Vec::with_capacity(self.state.len());
+        for (i, old) in self.state.iter().enumerate() {
+            if pos + 8 > blob.len() {
+                return Err(Error::Checkpoint(format!("blob truncated at tensor {i}")));
+            }
+            let n = u64::from_le_bytes(blob[pos..pos + 8].try_into().expect("8 bytes")) as usize;
+            pos += 8;
+            if pos + 4 * n > blob.len() {
+                return Err(Error::Checkpoint(format!("blob truncated in tensor {i}")));
+            }
+            let mut data = Vec::with_capacity(n);
+            for j in 0..n {
+                let off = pos + 4 * j;
+                data.push(f32::from_le_bytes(blob[off..off + 4].try_into().expect("4 bytes")));
+            }
+            pos += 4 * n;
+            let shape = old.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            if dims.iter().product::<usize>() != n {
+                return Err(Error::Checkpoint(format!("tensor {i} shape mismatch")));
+            }
+            let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+            new_state.push(Literal::create_from_shape_and_untyped_data(
+                ElementType::F32,
+                &dims,
+                &bytes,
+            )?);
+        }
+        if pos != blob.len() {
+            return Err(Error::Checkpoint("trailing bytes in checkpoint blob".into()));
+        }
+        self.state = new_state;
+        Ok(())
+    }
+
+    /// Save a checkpoint through the [`CheckpointStore`] (§III.D).
+    pub fn checkpoint(&self, store: &CheckpointStore, task: TaskId) -> Result<()> {
+        store.save(task, self.steps_done, self.last_loss, &self.state_blob()?)?;
+        Ok(())
+    }
+
+    /// Resume from the latest checkpoint, if any. Returns resumed step.
+    pub fn resume(&mut self, store: &CheckpointStore, task: TaskId) -> Result<Option<u64>> {
+        match store.latest(task)? {
+            None => Ok(None),
+            Some(ckpt) => {
+                let blob = store.load_blob(&ckpt)?;
+                self.restore_blob(&blob)?;
+                self.steps_done = ckpt.step;
+                self.last_loss = ckpt.loss;
+                Ok(Some(ckpt.step))
+            }
+        }
+    }
+}
+
+/// Batch inference over token windows.
+pub struct InferSession {
+    preset: PresetManifest,
+    exe_infer: PjRtLoadedExecutable,
+    params: Vec<Literal>,
+}
+
+impl InferSession {
+    pub(super) fn create(rt: &Runtime, preset: &str, seed: i32) -> Result<Self> {
+        let pm = rt.manifest.preset(preset)?.clone();
+        let exe_init = rt.compile(&pm.artifacts["init"])?;
+        let exe_infer = rt.compile(&pm.artifacts["infer"])?;
+        let out = exe_init.execute::<Literal>(&[Literal::scalar(seed)])?;
+        let mut state = outputs_to_literals(out)?;
+        state.truncate(pm.n_tensors); // params only
+        Ok(Self { preset: pm, exe_infer, params: state })
+    }
+
+    pub fn preset(&self) -> &PresetManifest {
+        &self.preset
+    }
+
+    /// Adopt parameters from a training checkpoint blob.
+    pub fn load_params_blob(&mut self, blob: &[u8]) -> Result<()> {
+        // the blob holds 3n+1 tensors; we need the first n
+        let mut pos = 0usize;
+        let mut params = Vec::with_capacity(self.preset.n_tensors);
+        for (i, old) in self.params.iter().enumerate() {
+            let n = u64::from_le_bytes(
+                blob.get(pos..pos + 8)
+                    .ok_or_else(|| Error::Checkpoint(format!("truncated at {i}")))?
+                    .try_into()
+                    .expect("8 bytes"),
+            ) as usize;
+            pos += 8;
+            let bytes = blob
+                .get(pos..pos + 4 * n)
+                .ok_or_else(|| Error::Checkpoint(format!("truncated in {i}")))?;
+            pos += 4 * n;
+            let shape = old.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            params.push(Literal::create_from_shape_and_untyped_data(
+                ElementType::F32,
+                &dims,
+                bytes,
+            )?);
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    /// Last-position logits `(batch, vocab)` for a token batch.
+    pub fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let tok = tokens_literal(tokens, self.preset.batch, self.preset.seq_len)?;
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(&tok);
+        let out = self.exe_infer.execute::<&Literal>(&args)?;
+        let outs = outputs_to_literals(out)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Greedy next token per batch row.
+    pub fn next_tokens(&self, tokens: &[i32]) -> Result<Vec<i32>> {
+        let logits = self.logits(tokens)?;
+        let v = self.preset.vocab;
+        Ok(logits
+            .chunks(v)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite logits"))
+                    .map(|(i, _)| i as i32)
+                    .expect("non-empty vocab")
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,151 @@
+//! Training checkpoints over object storage (§III.D).
+//!
+//! "Modern deep learning frameworks provide an easy interface to store
+//! and retrieve model states. Hence, the training can be continued
+//! without any additional code modifications." The rust runtime serializes
+//! flat parameter tensors here; the sim driver only tracks step counts.
+
+
+use crate::storage::StoreHandle;
+use crate::util::Json;
+use crate::workflow::TaskId;
+use crate::{Error, Result};
+
+/// Metadata of one saved checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainCheckpoint {
+    pub task: TaskId,
+    pub step: u64,
+    /// Object key holding the serialized state blob.
+    pub blob_key: String,
+    pub loss: f32,
+}
+
+impl TrainCheckpoint {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("experiment", Json::num(self.task.experiment as f64)),
+            ("index", Json::num(self.task.index as f64)),
+            ("step", Json::num(self.step as f64)),
+            ("blob_key", Json::str(self.blob_key.clone())),
+            ("loss", Json::num(self.loss as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TrainCheckpoint {
+            task: TaskId {
+                experiment: v.req_u64("experiment")? as u32,
+                index: v.req_u64("index")? as u32,
+            },
+            step: v.req_u64("step")?,
+            blob_key: v.req_str("blob_key")?.to_string(),
+            loss: v.req_f64("loss")? as f32,
+        })
+    }
+}
+
+/// Checkpoint namespace over an object store.
+pub struct CheckpointStore {
+    store: StoreHandle,
+    prefix: String,
+}
+
+impl CheckpointStore {
+    pub fn new(store: StoreHandle, prefix: &str) -> Self {
+        Self { store, prefix: prefix.to_string() }
+    }
+
+    fn meta_key(&self, task: TaskId) -> String {
+        format!("{}/ckpt/{}/latest.json", self.prefix, task)
+    }
+
+    fn blob_key(&self, task: TaskId, step: u64) -> String {
+        format!("{}/ckpt/{}/step{:010}.bin", self.prefix, task, step)
+    }
+
+    /// Persist a checkpoint: blob first, then the metadata pointer, so a
+    /// crash between the two writes leaves the previous checkpoint valid.
+    pub fn save(&self, task: TaskId, step: u64, loss: f32, blob: &[u8]) -> Result<TrainCheckpoint> {
+        let blob_key = self.blob_key(task, step);
+        self.store.put(&blob_key, blob)?;
+        let ckpt = TrainCheckpoint { task, step, blob_key, loss };
+        self.store.put(&self.meta_key(task), &ckpt.to_json().to_bytes())?;
+        Ok(ckpt)
+    }
+
+    /// Latest checkpoint metadata, if any.
+    pub fn latest(&self, task: TaskId) -> Result<Option<TrainCheckpoint>> {
+        match self.store.get(&self.meta_key(task)) {
+            Ok(bytes) => Ok(Some(TrainCheckpoint::from_json(&Json::parse_bytes(&bytes)?)?)),
+            Err(Error::NotFound(_)) => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Load the blob for a checkpoint.
+    pub fn load_blob(&self, ckpt: &TrainCheckpoint) -> Result<Vec<u8>> {
+        self.store.get(&ckpt.blob_key)
+    }
+
+    /// Garbage-collect all but the latest checkpoint of a task.
+    pub fn gc(&self, task: TaskId) -> Result<usize> {
+        let keep = self.latest(task)?.map(|c| c.blob_key);
+        let all = self
+            .store
+            .list(&format!("{}/ckpt/{}/step", self.prefix, task))?;
+        let mut removed = 0;
+        for key in all {
+            if Some(&key) != keep.as_ref() {
+                self.store.delete(&key)?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::storage::MemStore;
+
+    fn store() -> StoreHandle {
+        Arc::new(MemStore::new())
+    }
+
+    const T: TaskId = TaskId { experiment: 0, index: 3 };
+
+    #[test]
+    fn save_then_latest_roundtrip() {
+        let cs = CheckpointStore::new(store(), "wf");
+        assert!(cs.latest(T).unwrap().is_none());
+        cs.save(T, 100, 2.5, b"state-100").unwrap();
+        cs.save(T, 200, 2.1, b"state-200").unwrap();
+        let latest = cs.latest(T).unwrap().unwrap();
+        assert_eq!(latest.step, 200);
+        assert_eq!(cs.load_blob(&latest).unwrap(), b"state-200");
+    }
+
+    #[test]
+    fn tasks_are_isolated() {
+        let cs = CheckpointStore::new(store(), "wf");
+        let other = TaskId { experiment: 0, index: 4 };
+        cs.save(T, 10, 1.0, b"a").unwrap();
+        assert!(cs.latest(other).unwrap().is_none());
+    }
+
+    #[test]
+    fn gc_keeps_latest_only() {
+        let cs = CheckpointStore::new(store(), "wf");
+        for step in [10, 20, 30] {
+            cs.save(T, step, 1.0, b"blob").unwrap();
+        }
+        assert_eq!(cs.gc(T).unwrap(), 2);
+        let latest = cs.latest(T).unwrap().unwrap();
+        assert_eq!(latest.step, 30);
+        assert_eq!(cs.load_blob(&latest).unwrap(), b"blob");
+    }
+}

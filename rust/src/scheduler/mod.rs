@@ -1,0 +1,21 @@
+//! Fault-tolerant task scheduling (§III.C–D).
+//!
+//! Split into a *pure state machine* ([`SchedulerState`]) that owns all
+//! task/node bookkeeping — independently testable, proptest-able — and
+//! drivers that feed it events:
+//!
+//! * [`SimDriver`] — virtual-time fleet execution with provisioning,
+//!   spot preemptions and HFS input accounting (powers the §IV benches).
+//! * The real executor in [`crate::cluster::node`] for local tasks.
+//!
+//! §III.D: "When a node fails, the task with exact command arguments gets
+//! rescheduled on a different node … training can be continued [from the
+//! last checkpoint] without any additional code modifications."
+
+pub mod checkpoint;
+pub mod sim_driver;
+pub mod state;
+
+pub use checkpoint::{CheckpointStore, TrainCheckpoint};
+pub use sim_driver::{RunReport, SimDriver, SimDriverConfig};
+pub use state::{NodeId, SchedulerState};

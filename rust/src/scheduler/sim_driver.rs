@@ -1,0 +1,534 @@
+//! Virtual-time workflow execution over a simulated cloud fleet.
+//!
+//! Drives [`SchedulerState`] with events from the provisioner and the spot
+//! market; models per-task duration as `max(compute, pipelined-IO)` — the
+//! asynchronous-loader overlap of Figs 3–4 — and reproduces the §III.D
+//! fault story: preemption notice → checkpoint/drain → requeue →
+//! replacement node.
+
+use std::collections::BTreeMap;
+
+use crate::cloud::{InstanceType, NodeHandle, Provisioner, ProvisionerConfig, SpotMarket,
+                   SpotMarketConfig};
+use crate::metrics::CostLedger;
+use crate::sim::{EventQueue, SimTime};
+use crate::storage::S3Profile;
+use crate::workflow::{TaskId, Workflow};
+use crate::{Error, Result};
+
+use super::state::{NodeId, SchedulerState};
+
+/// Driver configuration (fleet policy shared by all experiments).
+#[derive(Debug, Clone)]
+pub struct SimDriverConfig {
+    /// Parallel task slots per node (ETL nodes run one task per core
+    /// group; GPU nodes one per GPU).
+    pub slots_per_node: u32,
+    pub provisioner: ProvisionerConfig,
+    pub spot_market: SpotMarketConfig,
+    /// S3 model for task input streaming.
+    pub s3: S3Profile,
+    /// Training checkpoint cadence; on a hard kill, work since the last
+    /// checkpoint is lost. `None` = tasks restart from scratch.
+    pub checkpoint_interval_s: Option<f64>,
+    /// Launch a replacement when a spot node is reclaimed.
+    pub replace_preempted: bool,
+    pub seed: u64,
+}
+
+impl Default for SimDriverConfig {
+    fn default() -> Self {
+        Self {
+            slots_per_node: 1,
+            provisioner: ProvisionerConfig::default(),
+            spot_market: SpotMarketConfig::default(),
+            s3: S3Profile::default(),
+            checkpoint_interval_s: Some(300.0),
+            replace_preempted: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of one simulated workflow run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub makespan_s: f64,
+    pub total_cost_usd: f64,
+    pub tasks_succeeded: usize,
+    pub tasks_failed: usize,
+    pub preemptions: u64,
+    pub reschedules: u64,
+    pub nodes_launched: usize,
+    /// Aggregate node-busy seconds / node-alive seconds.
+    pub utilization: f64,
+    pub workflow_complete: bool,
+}
+
+#[derive(Debug)]
+enum Event {
+    NodeReady(NodeId),
+    /// (task, node, attempt-at-assign) — stale if the attempt moved on.
+    TaskDone(TaskId, NodeId, u32),
+    SpotNotice(NodeId),
+    NodeKill(NodeId),
+}
+
+struct NodeMeta {
+    handle: NodeHandle,
+    experiment: usize,
+    kill_at: Option<SimTime>,
+    busy_s: f64,
+    dead: bool,
+}
+
+struct ExpRun {
+    state: SchedulerState,
+    done: usize,
+    total: usize,
+    finished: bool,
+}
+
+/// The virtual-time executor.
+pub struct SimDriver {
+    cfg: SimDriverConfig,
+    provisioner: Provisioner,
+    spot: SpotMarket,
+    events: EventQueue<Event>,
+    nodes: BTreeMap<NodeId, NodeMeta>,
+    /// per-task work already completed and checkpointed (seconds)
+    progress: BTreeMap<TaskId, f64>,
+    /// start time of the current attempt
+    started: BTreeMap<TaskId, SimTime>,
+    pub ledger: CostLedger,
+    preemptions: u64,
+    nodes_launched: usize,
+}
+
+impl SimDriver {
+    pub fn new(cfg: SimDriverConfig) -> Self {
+        let seed = cfg.seed;
+        Self {
+            provisioner: Provisioner::new(cfg.provisioner.clone(), seed),
+            spot: SpotMarket::new(cfg.spot_market.clone(), seed),
+            cfg,
+            events: EventQueue::new(),
+            nodes: BTreeMap::new(),
+            progress: BTreeMap::new(),
+            started: BTreeMap::new(),
+            ledger: CostLedger::new(),
+            preemptions: 0,
+            nodes_launched: 0,
+        }
+    }
+
+    /// Total work time of a task on an instance: max of compute and
+    /// pipelined input streaming (asynchronous loader overlap), plus one
+    /// first-byte latency for the initial fetch that cannot be hidden.
+    fn task_work_s(&self, wf: &Workflow, id: TaskId, ty: InstanceType) -> f64 {
+        let task = wf.task(id);
+        let compute = task
+            .duration_s
+            .or_else(|| task.flops.map(|f| f / ty.spec().flops))
+            .unwrap_or(1.0);
+        let io = task
+            .input_bytes
+            .map(|b| b as f64 / self.cfg.s3.stream_bw(self.cfg.slots_per_node as usize))
+            .unwrap_or(0.0);
+        compute.max(io) + if io > 0.0 { self.cfg.s3.first_byte_latency_s } else { 0.0 }
+    }
+
+    fn launch_node(&mut self, experiment: usize, ty: InstanceType, spot: bool, now: SimTime) {
+        let handle = self.provisioner.request(ty, spot, now);
+        let id = handle.id;
+        self.events.push(handle.ready_at, Event::NodeReady(id));
+        let mut kill_at = None;
+        if spot {
+            let (notice, kill) = self.spot.sample_preemption(now);
+            self.events.push(notice, Event::SpotNotice(id));
+            self.events.push(kill, Event::NodeKill(id));
+            kill_at = Some(kill);
+        }
+        self.nodes.insert(
+            id,
+            NodeMeta { handle, experiment, kill_at, busy_s: 0.0, dead: false },
+        );
+        self.nodes_launched += 1;
+    }
+
+    /// Run a workflow to completion (or deadlock) and report.
+    pub fn run(&mut self, wf: &mut Workflow) -> Result<RunReport> {
+        let mut runs: Vec<ExpRun> = (0..wf.n_experiments())
+            .map(|ei| ExpRun {
+                state: SchedulerState::new(),
+                done: 0,
+                total: wf.tasks[ei].len(),
+                finished: wf.tasks[ei].is_empty(),
+            })
+            .collect();
+
+        let mut now = SimTime::ZERO;
+        // provision fleets for initially-runnable experiments
+        for ei in wf.runnable() {
+            self.start_experiment(wf, &mut runs[ei], ei, now)?;
+        }
+
+        let max_events = 50_000_000u64;
+        let mut processed = 0u64;
+        while let Some((t, ev)) = self.events.pop() {
+            // stop at completion: later events are only the spot market
+            // reclaiming already-released nodes
+            if runs.iter().all(|r| r.finished) {
+                break;
+            }
+            now = t;
+            processed += 1;
+            if processed > max_events {
+                return Err(Error::Scheduler("event budget exceeded (livelock?)".into()));
+            }
+            match ev {
+                Event::NodeReady(nid) => {
+                    let Some(meta) = self.nodes.get(&nid) else { continue };
+                    if meta.dead {
+                        continue;
+                    }
+                    let ei = meta.experiment;
+                    if runs[ei].finished {
+                        self.terminate_node(nid, now);
+                        continue;
+                    }
+                    runs[ei].state.add_node(nid, self.cfg.slots_per_node);
+                    self.dispatch(wf, &mut runs[ei], ei, now);
+                }
+                Event::TaskDone(tid, nid, attempt) => {
+                    let ei = tid.experiment as usize;
+                    let run = &mut runs[ei];
+                    // stale if the task moved (preempted) since assignment
+                    let live = run.state.node_of(tid) == Some(nid)
+                        && run.state.task(tid).map(|t| t.attempts) == Some(attempt);
+                    if !live {
+                        continue;
+                    }
+                    self.started.remove(&tid);
+                    run.state.on_task_success(tid);
+                    run.done += 1;
+                    if run.done == run.total {
+                        self.finish_experiment(wf, &mut runs, ei, now)?;
+                    } else {
+                        self.dispatch(wf, &mut runs[ei], ei, now);
+                    }
+                    self.maybe_fail_experiment(wf, &mut runs, ei, now);
+                }
+                Event::SpotNotice(nid) => {
+                    let Some(meta) = self.nodes.get(&nid) else { continue };
+                    if meta.dead {
+                        continue;
+                    }
+                    let ei = meta.experiment;
+                    // graceful drain: checkpoint progress of running tasks
+                    let drained: Vec<TaskId> = runs[ei].state.drain_node(nid);
+                    for tid in drained {
+                        if let Some(start) = self.started.remove(&tid) {
+                            let done = now.saturating_sub(start).as_secs_f64();
+                            *self.progress.entry(tid).or_insert(0.0) += done;
+                        }
+                    }
+                    // requeued tasks may start on other nodes immediately
+                    self.dispatch(wf, &mut runs[ei], ei, now);
+                }
+                Event::NodeKill(nid) => {
+                    let Some(meta) = self.nodes.get(&nid) else { continue };
+                    if meta.dead {
+                        continue;
+                    }
+                    let ei = meta.experiment;
+                    self.preemptions += 1;
+                    // anything still running dies; keep checkpointed part
+                    let lost: Vec<TaskId> = runs[ei].state.remove_node(nid);
+                    for tid in &lost {
+                        if let Some(start) = self.started.remove(tid) {
+                            let ran = now.saturating_sub(start).as_secs_f64();
+                            let kept = match self.cfg.checkpoint_interval_s {
+                                Some(int) => (ran / int).floor() * int,
+                                None => 0.0,
+                            };
+                            *self.progress.entry(*tid).or_insert(0.0) += kept;
+                        }
+                    }
+                    let spot = {
+                        let meta = self.nodes.get(&nid).expect("checked above");
+                        meta.handle.spot
+                    };
+                    self.terminate_node(nid, now);
+                    self.maybe_fail_experiment(wf, &mut runs, ei, now);
+                    let achievable = runs[ei].done + runs[ei].state.failed.len() < runs[ei].total;
+                    if self.cfg.replace_preempted && !runs[ei].finished && achievable {
+                        let ty = wf.recipe.experiments[ei].instance_type()?;
+                        self.launch_node(ei, ty, spot, now);
+                    }
+                    self.dispatch(wf, &mut runs[ei], ei, now);
+                }
+            }
+        }
+
+        // final cost: bill any still-alive nodes to `now`
+        let alive: Vec<NodeId> =
+            self.nodes.iter().filter(|(_, m)| !m.dead).map(|(id, _)| *id).collect();
+        for nid in alive {
+            self.terminate_node(nid, now);
+        }
+
+        let (alive_s, busy_s) = self
+            .nodes
+            .values()
+            .fold((0.0, 0.0), |(a, b), m| (a + self.node_alive_s(m, now), b + m.busy_s));
+        let succeeded: usize = runs.iter().map(|r| r.state.succeeded.len()).sum();
+        let failed: usize = runs.iter().map(|r| r.state.failed.len()).sum();
+        Ok(RunReport {
+            makespan_s: now.as_secs_f64(),
+            total_cost_usd: self.ledger.total_usd(),
+            tasks_succeeded: succeeded,
+            tasks_failed: failed,
+            preemptions: self.preemptions,
+            reschedules: runs.iter().map(|r| r.state.reschedules).sum(),
+            nodes_launched: self.nodes_launched,
+            utilization: if alive_s > 0.0 { busy_s / alive_s } else { 0.0 },
+            workflow_complete: wf.is_complete(),
+        })
+    }
+
+    fn node_alive_s(&self, m: &NodeMeta, now: SimTime) -> f64 {
+        let end = m.kill_at.filter(|_| m.dead).unwrap_or(now).min(now);
+        end.saturating_sub(m.handle.launched_at).as_secs_f64()
+    }
+
+    fn start_experiment(
+        &mut self,
+        wf: &Workflow,
+        run: &mut ExpRun,
+        ei: usize,
+        now: SimTime,
+    ) -> Result<()> {
+        let spec = &wf.recipe.experiments[ei];
+        let ty = spec.instance_type()?;
+        run.state.enqueue(wf.tasks[ei].iter().cloned());
+        for _ in 0..spec.workers {
+            self.launch_node(ei, ty, spec.spot, now);
+        }
+        Ok(())
+    }
+
+    fn finish_experiment(
+        &mut self,
+        wf: &mut Workflow,
+        runs: &mut [ExpRun],
+        ei: usize,
+        now: SimTime,
+    ) -> Result<()> {
+        runs[ei].finished = true;
+        // release the fleet
+        let fleet: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|(_, m)| m.experiment == ei && !m.dead)
+            .map(|(id, _)| *id)
+            .collect();
+        for nid in fleet {
+            self.terminate_node(nid, now);
+        }
+        for newly in wf.mark_complete(ei) {
+            self.start_experiment(wf, &mut runs[newly], newly, now)?;
+        }
+        Ok(())
+    }
+
+    /// If an experiment has permanently-failed tasks and no more runnable
+    /// work, mark it failed, release its fleet and doom dependents
+    /// (their tasks never start).
+    fn maybe_fail_experiment(&mut self, wf: &mut Workflow, runs: &mut [ExpRun], ei: usize, now: SimTime) {
+        let run = &runs[ei];
+        if run.finished
+            || run.state.failed.is_empty()
+            || run.done + run.state.failed.len() < run.total
+            || !run.state.is_idle()
+        {
+            return;
+        }
+        runs[ei].finished = true;
+        let fleet: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|(_, m)| m.experiment == ei && !m.dead)
+            .map(|(id, _)| *id)
+            .collect();
+        for nid in fleet {
+            self.terminate_node(nid, now);
+        }
+        for doomed in wf.mark_failed(ei) {
+            runs[doomed].finished = true;
+        }
+    }
+
+    fn terminate_node(&mut self, nid: NodeId, now: SimTime) {
+        let Some(meta) = self.nodes.get_mut(&nid) else { return };
+        if meta.dead {
+            return;
+        }
+        meta.dead = true;
+        meta.kill_at = Some(now);
+        let spec = meta.handle.ty.spec();
+        let hours = now.saturating_sub(meta.handle.launched_at).as_secs_f64() / 3600.0;
+        self.ledger.charge(spec.name, meta.handle.spot, spec.price(meta.handle.spot), hours);
+    }
+
+    fn dispatch(&mut self, wf: &Workflow, run: &mut ExpRun, ei: usize, now: SimTime) {
+        let ty = match wf.recipe.experiments[ei].instance_type() {
+            Ok(t) => t,
+            Err(_) => return,
+        };
+        for (tid, nid) in run.state.assign() {
+            let total = self.task_work_s(wf, tid, ty);
+            let done = self.progress.get(&tid).copied().unwrap_or(0.0);
+            let remaining = (total - done).max(0.01);
+            self.started.insert(tid, now);
+            if let Some(meta) = self.nodes.get_mut(&nid) {
+                meta.busy_s += remaining;
+            }
+            let attempt = run.state.task(tid).map(|t| t.attempts).unwrap_or(0);
+            self.events
+                .push(now + SimTime::from_secs_f64(remaining), Event::TaskDone(tid, nid, attempt));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::Recipe;
+
+    fn wf(yaml: &str) -> Workflow {
+        Workflow::compile(Recipe::from_yaml(yaml).unwrap(), 1).unwrap()
+    }
+
+    const ETL: &str = r#"
+name: etl
+experiments:
+  - name: prep
+    instance: m5.24xlarge
+    workers: 4
+    command: "prep --shard {shard}"
+    params: { shard: { range: [0, 63] } }
+    work: { duration_s: 30.0 }
+"#;
+
+    #[test]
+    fn on_demand_run_completes() {
+        let mut w = wf(ETL);
+        let mut d = SimDriver::new(SimDriverConfig::default());
+        let r = d.run(&mut w).unwrap();
+        assert!(r.workflow_complete);
+        assert_eq!(r.tasks_succeeded, 64);
+        assert_eq!(r.tasks_failed, 0);
+        assert_eq!(r.preemptions, 0);
+        // 64 tasks * 30 s / 4 nodes = 480 s of work + provisioning
+        assert!(r.makespan_s > 480.0 && r.makespan_s < 900.0, "{}", r.makespan_s);
+        assert!(r.total_cost_usd > 0.0);
+    }
+
+    #[test]
+    fn more_workers_is_faster() {
+        let fast_yaml = ETL.replace("workers: 4", "workers: 16");
+        let slow = SimDriver::new(SimDriverConfig::default()).run(&mut wf(ETL)).unwrap();
+        let fast = SimDriver::new(SimDriverConfig::default()).run(&mut wf(&fast_yaml)).unwrap();
+        assert!(fast.makespan_s < slow.makespan_s);
+        assert_eq!(fast.tasks_succeeded, 64);
+    }
+
+    #[test]
+    fn spot_run_survives_preemptions() {
+        let yaml = ETL.replace("workers: 4", "workers: 4\n    spot: true");
+        let mut w = wf(&yaml);
+        let cfg = SimDriverConfig {
+            spot_market: SpotMarketConfig { mean_ttp_s: 120.0, notice_s: 10.0 },
+            seed: 3,
+            ..Default::default()
+        };
+        let mut d = SimDriver::new(cfg);
+        let r = d.run(&mut w).unwrap();
+        assert!(r.workflow_complete, "{r:?}");
+        assert_eq!(r.tasks_succeeded, 64);
+        assert!(r.preemptions > 0, "expected preemptions: {r:?}");
+        assert!(r.nodes_launched > 4, "replacements were launched");
+    }
+
+    #[test]
+    fn spot_is_cheaper_when_stable() {
+        let spot_yaml = ETL.replace("workers: 4", "workers: 4\n    spot: true");
+        let stable = SimDriverConfig {
+            spot_market: SpotMarketConfig { mean_ttp_s: 1e9, notice_s: 120.0 },
+            ..Default::default()
+        };
+        let od = SimDriver::new(stable.clone()).run(&mut wf(ETL)).unwrap();
+        let sp = SimDriver::new(stable).run(&mut wf(&spot_yaml)).unwrap();
+        assert!(sp.total_cost_usd < od.total_cost_usd / 2.0,
+                "spot {} vs od {}", sp.total_cost_usd, od.total_cost_usd);
+    }
+
+    #[test]
+    fn dag_stages_run_in_order() {
+        let yaml = r#"
+name: two-stage
+experiments:
+  - name: a
+    instance: m5.xlarge
+    workers: 2
+    command: "a {i}"
+    params: { i: { range: [0, 7] } }
+    work: { duration_s: 5.0 }
+  - name: b
+    instance: m5.xlarge
+    workers: 2
+    command: "b {i}"
+    params: { i: { range: [0, 7] } }
+    work: { duration_s: 5.0 }
+    depends_on: [a]
+"#;
+        let mut w = wf(yaml);
+        let r = SimDriver::new(SimDriverConfig::default()).run(&mut w).unwrap();
+        assert!(r.workflow_complete);
+        assert_eq!(r.tasks_succeeded, 16);
+    }
+
+    #[test]
+    fn flops_based_duration_uses_device() {
+        let yaml = r#"
+name: gpu
+experiments:
+  - name: train
+    instance: p3.2xlarge
+    workers: 1
+    command: "t {i}"
+    params: { i: { range: [0, 1] } }
+    work: { flops_per_task: 1.4e15 }  # 100 s on a 14 TFLOPs V100
+"#;
+        let r = SimDriver::new(SimDriverConfig::default()).run(&mut wf(yaml)).unwrap();
+        // 2 tasks * 100 s on one node
+        assert!(r.makespan_s > 200.0 && r.makespan_s < 400.0, "{}", r.makespan_s);
+    }
+
+    #[test]
+    fn io_bound_task_takes_io_time() {
+        let yaml = r#"
+name: io
+experiments:
+  - name: scan
+    instance: m5.xlarge
+    workers: 1
+    command: "s {i}"
+    params: { i: { range: [0, 0] } }
+    work: { duration_s: 1.0, input_bytes: 5500000000 }  # 100 s at 55 MB/s
+"#;
+        let r = SimDriver::new(SimDriverConfig::default()).run(&mut wf(yaml)).unwrap();
+        assert!(r.makespan_s > 100.0, "IO must dominate: {}", r.makespan_s);
+    }
+}

@@ -1,0 +1,333 @@
+//! The scheduling state machine: queues, assignments, failure handling.
+//!
+//! Pure (no clocks, no I/O) so that the real executor and the virtual-time
+//! driver share one implementation, and so proptest can hammer its
+//! invariants:
+//!
+//! 1. a task is never running on two nodes;
+//! 2. a failed node's tasks always return to the queue (exact arguments);
+//! 3. a task terminates `Succeeded`, or `Failed` only after
+//!    `max_retries + 1` attempts.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::workflow::{Task, TaskId, TaskState};
+
+/// Node identifier (matches [`crate::cloud::NodeHandle::id`]).
+pub type NodeId = u32;
+
+#[derive(Debug, Clone)]
+struct NodeInfo {
+    slots: u32,
+    running: BTreeSet<TaskId>,
+}
+
+/// Scheduler bookkeeping over one workflow's tasks.
+#[derive(Debug, Default)]
+pub struct SchedulerState {
+    nodes: BTreeMap<NodeId, NodeInfo>,
+    queue: VecDeque<TaskId>,
+    tasks: BTreeMap<TaskId, Task>,
+    /// where each running task lives
+    placement: BTreeMap<TaskId, NodeId>,
+    pub succeeded: BTreeSet<TaskId>,
+    pub failed: BTreeSet<TaskId>,
+    /// total reschedules caused by node failures
+    pub reschedules: u64,
+}
+
+impl SchedulerState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---------------------------------------------------------- nodes
+
+    /// A node came up with `slots` parallel task slots.
+    pub fn add_node(&mut self, node: NodeId, slots: u32) {
+        self.nodes
+            .insert(node, NodeInfo { slots: slots.max(1), running: BTreeSet::new() });
+    }
+
+    /// A node died (spot preemption / crash). Its running tasks go back
+    /// to the *front* of the queue with the exact same arguments; tasks
+    /// over their retry budget become Failed. Returns the rescheduled ids.
+    pub fn remove_node(&mut self, node: NodeId) -> Vec<TaskId> {
+        let Some(info) = self.nodes.remove(&node) else {
+            return Vec::new();
+        };
+        let mut rescheduled = Vec::new();
+        for id in info.running {
+            self.placement.remove(&id);
+            let task = self.tasks.get_mut(&id).expect("running task is known");
+            if task.can_retry() {
+                task.state = TaskState::Pending;
+                self.queue.push_front(id);
+                self.reschedules += 1;
+                rescheduled.push(id);
+            } else {
+                task.state = TaskState::Failed;
+                self.failed.insert(id);
+            }
+        }
+        rescheduled
+    }
+
+    /// Graceful drain (spot notice): like `remove_node` but the node stays
+    /// for its notice period — tasks are requeued without burning an
+    /// attempt (a checkpointed handoff, not a failure).
+    pub fn drain_node(&mut self, node: NodeId) -> Vec<TaskId> {
+        let Some(info) = self.nodes.get_mut(&node) else {
+            return Vec::new();
+        };
+        let running: Vec<TaskId> = info.running.iter().copied().collect();
+        info.running.clear();
+        info.slots = 0; // no new work
+        for id in &running {
+            self.placement.remove(id);
+            let task = self.tasks.get_mut(id).expect("running task is known");
+            task.state = TaskState::Pending;
+            task.attempts = task.attempts.saturating_sub(1); // graceful: refund
+            self.queue.push_front(*id);
+        }
+        running
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    // ---------------------------------------------------------- tasks
+
+    /// Enqueue freshly-runnable tasks (e.g. an experiment got unblocked).
+    pub fn enqueue(&mut self, tasks: impl IntoIterator<Item = Task>) {
+        for t in tasks {
+            debug_assert!(t.state == TaskState::Pending);
+            let id = t.id;
+            self.tasks.insert(id, t);
+            self.queue.push_back(id);
+        }
+    }
+
+    /// Greedy assignment: fill free slots FIFO. Returns (task, node) pairs;
+    /// the caller starts them and later reports completion/failure.
+    pub fn assign(&mut self) -> Vec<(TaskId, NodeId)> {
+        let mut out = Vec::new();
+        if self.queue.is_empty() {
+            return out;
+        }
+        // iterate nodes round-robin while slots and queue remain
+        loop {
+            let mut assigned_any = false;
+            for (&nid, info) in self.nodes.iter_mut() {
+                if (info.running.len() as u32) < info.slots {
+                    if let Some(tid) = self.queue.pop_front() {
+                        let task = self.tasks.get_mut(&tid).expect("queued task is known");
+                        task.state = TaskState::Running;
+                        task.attempts += 1;
+                        info.running.insert(tid);
+                        self.placement.insert(tid, nid);
+                        out.push((tid, nid));
+                        assigned_any = true;
+                    } else {
+                        return out;
+                    }
+                }
+            }
+            if !assigned_any {
+                return out;
+            }
+        }
+    }
+
+    /// Task finished OK.
+    pub fn on_task_success(&mut self, id: TaskId) {
+        self.detach(id);
+        let task = self.tasks.get_mut(&id).expect("known task");
+        task.state = TaskState::Succeeded;
+        self.succeeded.insert(id);
+    }
+
+    /// Task itself errored (non-node failure): consume a retry.
+    pub fn on_task_error(&mut self, id: TaskId) {
+        self.detach(id);
+        let task = self.tasks.get_mut(&id).expect("known task");
+        if task.can_retry() {
+            task.state = TaskState::Pending;
+            self.queue.push_back(id);
+        } else {
+            task.state = TaskState::Failed;
+            self.failed.insert(id);
+        }
+    }
+
+    fn detach(&mut self, id: TaskId) {
+        if let Some(nid) = self.placement.remove(&id) {
+            if let Some(info) = self.nodes.get_mut(&nid) {
+                info.running.remove(&id);
+            }
+        }
+    }
+
+    // ------------------------------------------------------- queries
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.placement.len()
+    }
+
+    pub fn node_of(&self, id: TaskId) -> Option<NodeId> {
+        self.placement.get(&id).copied()
+    }
+
+    pub fn task(&self, id: TaskId) -> Option<&Task> {
+        self.tasks.get(&id)
+    }
+
+    /// All work drained?
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.placement.is_empty()
+    }
+
+    /// Internal consistency check (used by tests and proptest).
+    pub fn check_invariants(&self) {
+        // every placement is mirrored in exactly one node's running set
+        for (tid, nid) in &self.placement {
+            let info = self.nodes.get(nid).expect("placement points at live node");
+            assert!(info.running.contains(tid), "{tid} placed but not running on {nid}");
+        }
+        let total_running: usize = self.nodes.values().map(|n| n.running.len()).sum();
+        assert_eq!(total_running, self.placement.len(), "no task on two nodes");
+        // slots respected
+        for (nid, info) in &self.nodes {
+            assert!(
+                info.running.len() as u32 <= info.slots.max(info.running.len() as u32),
+                "node {nid} over capacity"
+            );
+        }
+        // terminal sets disjoint
+        assert!(self.succeeded.is_disjoint(&self.failed));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::{ExperimentSpec, WorkSpec};
+
+    fn mk_tasks(n: u32, max_retries: u32) -> Vec<Task> {
+        let spec = ExperimentSpec {
+            name: "e".into(),
+            image: "i".into(),
+            instance: "m5.xlarge".into(),
+            workers: 1,
+            spot: false,
+            command: "c".into(),
+            samples: None,
+            params: Default::default(),
+            depends_on: vec![],
+            max_retries,
+            work: WorkSpec::default(),
+        };
+        (0..n).map(|i| Task::materialize(0, i, &spec, Default::default())).collect()
+    }
+
+    #[test]
+    fn fifo_assignment_fills_slots() {
+        let mut s = SchedulerState::new();
+        s.add_node(1, 2);
+        s.add_node(2, 1);
+        s.enqueue(mk_tasks(5, 1));
+        let a = s.assign();
+        assert_eq!(a.len(), 3, "3 slots total");
+        assert_eq!(s.running(), 3);
+        assert_eq!(s.pending(), 2);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn success_frees_slot() {
+        let mut s = SchedulerState::new();
+        s.add_node(1, 1);
+        s.enqueue(mk_tasks(2, 0));
+        let a = s.assign();
+        s.on_task_success(a[0].0);
+        let b = s.assign();
+        assert_eq!(b.len(), 1);
+        s.on_task_success(b[0].0);
+        assert!(s.is_idle());
+        assert_eq!(s.succeeded.len(), 2);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn node_failure_requeues_exact_task() {
+        let mut s = SchedulerState::new();
+        s.add_node(1, 1);
+        s.add_node(2, 1);
+        s.enqueue(mk_tasks(2, 3));
+        let a = s.assign();
+        let (victim_task, victim_node) = a[0];
+        let requeued = s.remove_node(victim_node);
+        assert_eq!(requeued, vec![victim_task]);
+        assert_eq!(s.reschedules, 1);
+        // reassigns to the surviving node once its slot frees
+        s.on_task_success(a[1].0);
+        let b = s.assign();
+        assert_eq!(b[0].0, victim_task);
+        assert_ne!(b[0].1, victim_node, "different node");
+        s.check_invariants();
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_task() {
+        let mut s = SchedulerState::new();
+        s.enqueue(mk_tasks(1, 1)); // 1 retry => 2 attempts allowed
+        for round in 0..2 {
+            s.add_node(round, 1);
+            let a = s.assign();
+            assert_eq!(a.len(), 1, "round {round}");
+            s.remove_node(round);
+        }
+        assert_eq!(s.failed.len(), 1);
+        assert!(s.is_idle());
+        s.check_invariants();
+    }
+
+    #[test]
+    fn task_error_consumes_retry() {
+        let mut s = SchedulerState::new();
+        s.add_node(1, 1);
+        s.enqueue(mk_tasks(1, 0)); // no retries
+        let a = s.assign();
+        s.on_task_error(a[0].0);
+        assert_eq!(s.failed.len(), 1);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn drain_refunds_attempt() {
+        let mut s = SchedulerState::new();
+        s.add_node(1, 1);
+        s.enqueue(mk_tasks(1, 0));
+        let a = s.assign();
+        let drained = s.drain_node(1);
+        assert_eq!(drained.len(), 1);
+        // graceful drain didn't burn the single attempt:
+        s.add_node(2, 1);
+        let b = s.assign();
+        assert_eq!(b.len(), 1);
+        s.on_task_success(b[0].0);
+        assert_eq!(s.succeeded.len(), 1);
+        assert_eq!(a[0].0, b[0].0);
+    }
+
+    #[test]
+    fn removing_unknown_node_is_noop() {
+        let mut s = SchedulerState::new();
+        assert!(s.remove_node(99).is_empty());
+    }
+}

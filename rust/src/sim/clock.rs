@@ -1,0 +1,136 @@
+//! Virtual time: nanosecond-resolution simulated clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A point in simulated time, in nanoseconds since simulation start.
+///
+/// `SimTime` is ordered, copyable and cheap; arithmetic helpers keep the
+/// call sites readable (`t + SimTime::from_secs_f64(0.5)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_nanos(n: u64) -> Self {
+        SimTime(n)
+    }
+
+    pub fn from_micros(us: u64) -> Self {
+        SimTime(us * 1_000)
+    }
+
+    pub fn from_millis(ms: u64) -> Self {
+        SimTime(ms * 1_000_000)
+    }
+
+    pub fn from_secs(s: u64) -> Self {
+        SimTime(s * 1_000_000_000)
+    }
+
+    pub fn from_secs_f64(s: f64) -> Self {
+        debug_assert!(s >= 0.0, "negative sim duration: {s}");
+        SimTime((s.max(0.0) * 1e9).round() as u64)
+    }
+
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    /// Saturating difference (durations are also `SimTime`).
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(other.0))
+    }
+}
+
+impl std::ops::Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::ops::Mul<u64> for SimTime {
+    type Output = SimTime;
+    fn mul(self, rhs: u64) -> SimTime {
+        SimTime(self.0 * rhs)
+    }
+}
+
+impl std::fmt::Display for SimTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.3}s", self.as_secs_f64())
+    }
+}
+
+/// Shared monotonically-advancing virtual clock.
+///
+/// Cloned handles observe the same time; only the simulation driver should
+/// call [`SimClock::advance_to`]. Thread-safe so worker-pool code can read
+/// the clock from any thread.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now_ns: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> SimTime {
+        SimTime(self.now_ns.load(Ordering::Acquire))
+    }
+
+    /// Advance to `t`. Time never goes backwards; a stale `t` is a no-op.
+    pub fn advance_to(&self, t: SimTime) {
+        self.now_ns.fetch_max(t.0, Ordering::AcqRel);
+    }
+
+    /// Advance by a duration, returning the new now.
+    pub fn advance_by(&self, d: SimTime) -> SimTime {
+        SimTime(self.now_ns.fetch_add(d.0, Ordering::AcqRel) + d.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(SimTime::from_secs(3).as_secs_f64(), 3.0);
+        assert_eq!(SimTime::from_millis(1500).as_secs_f64(), 1.5);
+        assert_eq!(SimTime::from_secs_f64(0.25).as_nanos(), 250_000_000);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::from_secs(1) + SimTime::from_millis(500);
+        assert_eq!(t.as_secs_f64(), 1.5);
+        assert_eq!(t.saturating_sub(SimTime::from_secs(2)), SimTime::ZERO);
+        assert_eq!((SimTime::from_secs(2) * 3).as_secs_f64(), 6.0);
+    }
+
+    #[test]
+    fn clock_is_monotone() {
+        let c = SimClock::new();
+        c.advance_to(SimTime::from_secs(5));
+        c.advance_to(SimTime::from_secs(3)); // stale — ignored
+        assert_eq!(c.now(), SimTime::from_secs(5));
+        let c2 = c.clone();
+        c2.advance_by(SimTime::from_secs(1));
+        assert_eq!(c.now(), SimTime::from_secs(6));
+    }
+}

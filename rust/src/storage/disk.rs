@@ -1,0 +1,132 @@
+//! Directory-backed object store — real bytes on the local filesystem.
+//!
+//! Used by the end-to-end examples so that HFS chunks physically exist and
+//! checkpoint/restore crosses a process boundary. Keys map to file paths
+//! with `/` as directory separator; key components are sanitized against
+//! path escape.
+
+use std::fs;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use super::ObjectStore;
+use crate::{Error, Result};
+
+#[derive(Debug)]
+pub struct DiskStore {
+    root: PathBuf,
+}
+
+impl DiskStore {
+    pub fn new(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(&root)?;
+        Ok(Self { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path_for(&self, key: &str) -> Result<PathBuf> {
+        if key.is_empty() || key.split('/').any(|c| c == ".." || c.is_empty() && key != "/") {
+            return Err(Error::Storage(format!("invalid key: {key:?}")));
+        }
+        Ok(self.root.join(key))
+    }
+}
+
+impl ObjectStore for DiskStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        let path = self.path_for(key)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        // write-then-rename for atomicity under concurrent readers
+        let tmp = path.with_extension("tmp~");
+        fs::write(&tmp, data)?;
+        fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        let path = self.path_for(key)?;
+        fs::read(&path).map_err(|_| Error::NotFound(key.to_string()))
+    }
+
+    fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let path = self.path_for(key)?;
+        let mut f = fs::File::open(&path).map_err(|_| Error::NotFound(key.to_string()))?;
+        let size = f.metadata()?.len();
+        let start = offset.min(size);
+        let end = offset.saturating_add(len).min(size);
+        f.seek(SeekFrom::Start(start))?;
+        let mut buf = vec![0u8; (end - start) as usize];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn head(&self, key: &str) -> Result<u64> {
+        let path = self.path_for(key)?;
+        fs::metadata(&path)
+            .map(|m| m.len())
+            .map_err(|_| Error::NotFound(key.to_string()))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let mut stack = vec![self.root.clone()];
+        while let Some(dir) = stack.pop() {
+            let entries = match fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            for entry in entries.flatten() {
+                let path = entry.path();
+                if path.extension().is_some_and(|e| e == "tmp~") {
+                    continue;
+                }
+                if path.is_dir() {
+                    stack.push(path);
+                } else if let Ok(rel) = path.strip_prefix(&self.root) {
+                    let key = rel.to_string_lossy().replace('\\', "/");
+                    if key.starts_with(prefix) {
+                        out.push(key);
+                    }
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let path = self.path_for(key)?;
+        fs::remove_file(&path).map_err(|_| Error::NotFound(key.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_path_escape() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let s = DiskStore::new(dir.path()).unwrap();
+        assert!(s.put("../evil", b"x").is_err());
+        assert!(s.put("a/../../evil", b"x").is_err());
+        assert!(s.put("", b"x").is_err());
+    }
+
+    #[test]
+    fn persists_across_instances() {
+        let dir = crate::util::TempDir::new().unwrap();
+        {
+            let s = DiskStore::new(dir.path()).unwrap();
+            s.put("data/chunk0", b"persisted").unwrap();
+        }
+        let s2 = DiskStore::new(dir.path()).unwrap();
+        assert_eq!(s2.get("data/chunk0").unwrap(), b"persisted");
+    }
+}

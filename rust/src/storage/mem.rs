@@ -1,0 +1,103 @@
+//! In-memory object store (tests and fast simulations).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use std::sync::RwLock;
+
+use super::ObjectStore;
+use crate::{Error, Result};
+
+/// BTreeMap-backed store; `list` is a range scan, objects are `Arc`'d so
+/// `get` of large chunks is a cheap clone-on-read of the refcount only
+/// when callers keep the returned Vec (we still copy for API uniformity).
+#[derive(Debug, Default)]
+pub struct MemStore {
+    objects: RwLock<BTreeMap<String, Arc<Vec<u8>>>>,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of stored objects.
+    pub fn len(&self) -> usize {
+        self.objects.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.read().unwrap().is_empty()
+    }
+
+    /// Total stored bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.objects.read().unwrap().values().map(|v| v.len() as u64).sum()
+    }
+}
+
+impl ObjectStore for MemStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.objects.write().unwrap().insert(key.to_string(), Arc::new(data.to_vec()));
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.objects
+            .read().unwrap()
+            .get(key)
+            .map(|v| v.as_ref().clone())
+            .ok_or_else(|| Error::NotFound(key.to_string()))
+    }
+
+    fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let objects = self.objects.read().unwrap();
+        let v = objects.get(key).ok_or_else(|| Error::NotFound(key.to_string()))?;
+        let start = (offset as usize).min(v.len());
+        let end = (offset.saturating_add(len) as usize).min(v.len());
+        Ok(v[start..end].to_vec())
+    }
+
+    fn head(&self, key: &str) -> Result<u64> {
+        self.objects
+            .read().unwrap()
+            .get(key)
+            .map(|v| v.len() as u64)
+            .ok_or_else(|| Error::NotFound(key.to_string()))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        Ok(self
+            .objects
+            .read().unwrap()
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, _)| k.clone())
+            .collect())
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.objects
+            .write().unwrap()
+            .remove(key)
+            .map(|_| ())
+            .ok_or_else(|| Error::NotFound(key.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_accounting() {
+        let s = MemStore::new();
+        assert!(s.is_empty());
+        s.put("k1", &[0u8; 100]).unwrap();
+        s.put("k2", &[0u8; 50]).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.total_bytes(), 150);
+        s.put("k1", &[0u8; 10]).unwrap(); // overwrite shrinks
+        assert_eq!(s.total_bytes(), 60);
+    }
+}

@@ -1,0 +1,107 @@
+//! Object storage substrates.
+//!
+//! The paper stores file-system chunks in cloud object storage (AWS S3,
+//! or a self-hosted Minio). This module provides:
+//!
+//! * [`ObjectStore`] — the S3-like trait (put/get/get_range/list/delete).
+//! * [`MemStore`] — in-memory backend (tests, fast benches).
+//! * [`DiskStore`] — directory-backed backend (real bytes on disk; used by
+//!   the end-to-end training example).
+//! * [`SimStore`] — wraps any backend with the calibrated S3 latency /
+//!   bandwidth / concurrency model that drives the Fig-2/3/4 benches, and
+//!   advances a shared [`crate::sim::SimClock`].
+//!
+//! The timing model is the substitution documented in DESIGN.md §1: it
+//! preserves the latency-vs-throughput trade-off that makes chunk sizing
+//! matter, without owning an S3 deployment.
+
+mod disk;
+mod mem;
+mod simstore;
+
+pub use disk::DiskStore;
+pub use mem::MemStore;
+pub use simstore::{S3Profile, SimStore};
+
+use std::sync::Arc;
+
+use crate::Result;
+
+/// S3-like object store: keyed blobs with range reads.
+pub trait ObjectStore: Send + Sync {
+    /// Store `data` under `key`, overwriting any previous object.
+    fn put(&self, key: &str, data: &[u8]) -> Result<()>;
+
+    /// Fetch the whole object.
+    fn get(&self, key: &str) -> Result<Vec<u8>>;
+
+    /// Fetch `[offset, offset+len)`; short reads only at object end.
+    fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>>;
+
+    /// Object size in bytes.
+    fn head(&self, key: &str) -> Result<u64>;
+
+    /// Keys with the given prefix, sorted.
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+
+    fn delete(&self, key: &str) -> Result<()>;
+
+    /// True if the object exists.
+    fn exists(&self, key: &str) -> bool {
+        self.head(key).is_ok()
+    }
+}
+
+/// Shared handle to a store.
+pub type StoreHandle = Arc<dyn ObjectStore>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Conformance suite run against every backend.
+    pub(crate) fn conformance(store: &dyn ObjectStore) {
+        store.put("a/b/one", b"hello world").unwrap();
+        store.put("a/b/two", b"0123456789").unwrap();
+        store.put("a/c/three", b"x").unwrap();
+
+        assert_eq!(store.get("a/b/one").unwrap(), b"hello world");
+        assert_eq!(store.head("a/b/two").unwrap(), 10);
+        assert_eq!(store.get_range("a/b/two", 2, 3).unwrap(), b"234");
+        // short read at end
+        assert_eq!(store.get_range("a/b/two", 8, 100).unwrap(), b"89");
+        assert_eq!(
+            store.list("a/b/").unwrap(),
+            vec!["a/b/one".to_string(), "a/b/two".to_string()]
+        );
+        assert!(store.exists("a/c/three"));
+        store.delete("a/c/three").unwrap();
+        assert!(!store.exists("a/c/three"));
+        assert!(store.get("missing").is_err());
+
+        // overwrite
+        store.put("a/b/one", b"bye").unwrap();
+        assert_eq!(store.get("a/b/one").unwrap(), b"bye");
+    }
+
+    #[test]
+    fn mem_conformance() {
+        conformance(&MemStore::new());
+    }
+
+    #[test]
+    fn disk_conformance() {
+        let dir = crate::util::TempDir::new().unwrap();
+        conformance(&DiskStore::new(dir.path()).unwrap());
+    }
+
+    #[test]
+    fn sim_conformance() {
+        let clock = crate::sim::SimClock::new();
+        conformance(&SimStore::new(
+            Arc::new(MemStore::new()),
+            S3Profile::default(),
+            clock,
+        ));
+    }
+}

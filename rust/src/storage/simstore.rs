@@ -1,0 +1,202 @@
+//! S3 timing model over a real backend.
+//!
+//! Calibration targets the paper's own measurements (Fig 2): a p3.2xlarge
+//! ("up to 10 Gbps" NIC) saturates at ~875 MB/s with multithreading +
+//! multiprocessing, a single S3 connection streams at tens of MB/s, and
+//! per-request first-byte latency is tens of milliseconds — which is
+//! exactly why the paper recommends 12–100 MB chunks.
+
+
+use std::sync::Mutex;
+
+use super::{ObjectStore, StoreHandle};
+use crate::metrics::Counter;
+use crate::sim::{SimClock, SimRng, SimTime};
+use crate::Result;
+
+/// Timing parameters of the modeled object store.
+#[derive(Debug, Clone)]
+pub struct S3Profile {
+    /// Time to first byte per GET/PUT request (seconds).
+    pub first_byte_latency_s: f64,
+    /// Sustained bandwidth of a single connection (bytes/s).
+    pub per_conn_bw: f64,
+    /// Node NIC ceiling shared by all concurrent connections (bytes/s).
+    pub nic_bw: f64,
+    /// Aggregate service-side ceiling (S3 scales ~linearly; effectively
+    /// unbounded for one node, finite for a 110-node fleet per prefix).
+    pub service_bw: f64,
+    /// Multiplicative jitter half-range (0.05 => ±5%).
+    pub jitter: f64,
+}
+
+impl Default for S3Profile {
+    /// Same-region S3 from a p3.2xlarge, as in the paper's Figs 2–4.
+    fn default() -> Self {
+        Self {
+            first_byte_latency_s: 0.030,
+            per_conn_bw: 55.0 * 1e6,       // ~55 MB/s per stream
+            nic_bw: 1.15e9,                // 10 Gbps-class NIC (~1150 MB/s)
+            service_bw: 80.0 * 1e9,        // fleet-level S3 prefix ceiling
+            jitter: 0.05,
+        }
+    }
+}
+
+impl S3Profile {
+    /// Effective bandwidth of one stream when `concurrent` streams share
+    /// the NIC (max-min fair share, capped by the per-connection limit).
+    pub fn stream_bw(&self, concurrent: usize) -> f64 {
+        let n = concurrent.max(1) as f64;
+        self.per_conn_bw.min(self.nic_bw / n)
+    }
+
+    /// Modeled duration of one transfer of `bytes` with `concurrent`
+    /// streams active on this node (no jitter — the deterministic core).
+    pub fn transfer_time(&self, bytes: u64, concurrent: usize) -> f64 {
+        self.first_byte_latency_s + bytes as f64 / self.stream_bw(concurrent)
+    }
+
+    /// Aggregate node throughput achievable with `lanes` parallel streams
+    /// fetching `chunk_bytes` objects back to back — the Fig-2 quantity.
+    pub fn aggregate_throughput(&self, chunk_bytes: u64, lanes: usize) -> f64 {
+        let per_stream = chunk_bytes as f64 / self.transfer_time(chunk_bytes, lanes);
+        (per_stream * lanes as f64).min(self.nic_bw)
+    }
+}
+
+/// [`ObjectStore`] decorator that carries real bytes through an inner
+/// backend while advancing a shared [`SimClock`] by the modeled duration
+/// of each request. Sequential callers therefore observe S3-like virtual
+/// timing; parallel fetch pools use [`S3Profile`] directly (they know
+/// their own concurrency).
+pub struct SimStore {
+    inner: StoreHandle,
+    profile: S3Profile,
+    clock: SimClock,
+    rng: Mutex<SimRng>,
+    pub requests: Counter,
+    pub bytes_down: Counter,
+    pub bytes_up: Counter,
+}
+
+impl SimStore {
+    pub fn new(inner: StoreHandle, profile: S3Profile, clock: SimClock) -> Self {
+        Self {
+            inner,
+            profile,
+            clock,
+            rng: Mutex::new(SimRng::new(0x5EED)),
+            requests: Counter::default(),
+            bytes_down: Counter::default(),
+            bytes_up: Counter::default(),
+        }
+    }
+
+    pub fn profile(&self) -> &S3Profile {
+        &self.profile
+    }
+
+    pub fn clock(&self) -> &SimClock {
+        &self.clock
+    }
+
+    /// Jittered modeled duration for a transfer of `bytes` (1 stream).
+    fn charge(&self, bytes: u64) {
+        let base = self.profile.transfer_time(bytes, 1);
+        let j = {
+            let mut rng = self.rng.lock().unwrap();
+            1.0 + self.profile.jitter * (2.0 * rng.next_f64() - 1.0)
+        };
+        self.clock.advance_by(SimTime::from_secs_f64(base * j));
+        self.requests.inc();
+    }
+}
+
+impl ObjectStore for SimStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.charge(data.len() as u64);
+        self.bytes_up.add(data.len() as u64);
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        let out = self.inner.get(key)?;
+        self.charge(out.len() as u64);
+        self.bytes_down.add(out.len() as u64);
+        Ok(out)
+    }
+
+    fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let out = self.inner.get_range(key, offset, len)?;
+        self.charge(out.len() as u64);
+        self.bytes_down.add(out.len() as u64);
+        Ok(out)
+    }
+
+    fn head(&self, key: &str) -> Result<u64> {
+        // metadata request: latency only
+        self.clock
+            .advance_by(SimTime::from_secs_f64(self.profile.first_byte_latency_s));
+        self.requests.inc();
+        self.inner.head(key)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        self.clock
+            .advance_by(SimTime::from_secs_f64(self.profile.first_byte_latency_s));
+        self.requests.inc();
+        self.inner.list(prefix)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.clock
+            .advance_by(SimTime::from_secs_f64(self.profile.first_byte_latency_s));
+        self.requests.inc();
+        self.inner.delete(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::storage::MemStore;
+
+    #[test]
+    fn chunk_size_throughput_shape() {
+        // The Fig-2 shape: throughput grows with chunk size (latency
+        // amortization) and with lanes, saturating at the NIC.
+        let p = S3Profile::default();
+        let t_small = p.aggregate_throughput(1 << 20, 16); // 1 MB chunks
+        let t_mid = p.aggregate_throughput(32 << 20, 16); // 32 MB
+        let t_big = p.aggregate_throughput(128 << 20, 16); // 128 MB
+        assert!(t_small < t_mid && t_mid <= t_big * 1.01);
+        // saturates below NIC cap
+        assert!(t_big <= p.nic_bw);
+        // single lane is per-conn-bound
+        assert!(p.aggregate_throughput(64 << 20, 1) < 1.1 * p.per_conn_bw);
+    }
+
+    #[test]
+    fn sim_clock_advances_on_io() {
+        let clock = SimClock::new();
+        let s = SimStore::new(Arc::new(MemStore::new()), S3Profile::default(), clock.clone());
+        s.put("k", &vec![0u8; 55_000_000]).unwrap(); // ~1 s at 55 MB/s
+        let t = clock.now().as_secs_f64();
+        assert!(t > 0.8 && t < 1.3, "modeled put took {t}s");
+        s.get("k").unwrap();
+        assert!(clock.now().as_secs_f64() > 1.6);
+        assert_eq!(s.requests.get(), 2);
+    }
+
+    #[test]
+    fn stream_bw_fair_share() {
+        let p = S3Profile::default();
+        assert_eq!(p.stream_bw(1), p.per_conn_bw);
+        // 64 streams: NIC-bound
+        assert!(p.stream_bw(64) < p.per_conn_bw);
+        assert!((p.stream_bw(64) - p.nic_bw / 64.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Measurement harness for `rust/benches/*` (criterion stand-in).
+//!
+//! Wallclock benches: warmup + N timed iterations, reporting mean / p50 /
+//! min with a stable text format the EXPERIMENTS.md tables are pasted
+//! from. Virtual-time benches print their own tables and only use
+//! [`section`]/[`row`] for formatting.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn print(&self) {
+        println!(
+            "  {:40} {:>10.4} ms/iter (p50 {:>10.4}, min {:>10.4}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let m = Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        p50_s: samples[samples.len() / 2],
+        min_s: samples[0],
+    };
+    m.print();
+    m
+}
+
+/// Section banner.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Aligned table row: label + columns.
+pub fn row(label: &str, cols: &[String]) {
+    print!("  {label:32}");
+    for c in cols {
+        print!(" {c:>14}");
+    }
+    println!();
+}
+
+/// Header row.
+pub fn header(label: &str, cols: &[&str]) {
+    row(label, &cols.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    println!("  {}", "-".repeat(32 + cols.len() * 15));
+}
+
+/// Keep the optimizer honest (std::hint::black_box re-export for benches).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(m.iters, 5);
+        assert!(m.min_s <= m.mean_s);
+        assert!(m.mean_s > 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! From-scratch utility substrates.
+//!
+//! This build environment is offline and carries only the `xla` crate's
+//! dependency tree, so the ecosystem crates a project like this would
+//! normally pull in are implemented here instead (DESIGN.md
+//! §Substitutions):
+//!
+//! * [`json`]   — JSON value, parser and serializer (serde_json stand-in);
+//!   also the wire format shared with `python/compile/aot.py`.
+//! * [`yamlite`] — the YAML subset used by recipes (serde_yaml stand-in).
+//! * [`tempdir`] — RAII temporary directories for tests (tempfile).
+//! * [`bench`]  — measurement harness used by `rust/benches/*` (criterion).
+//! * [`prop`]   — tiny property-testing loop over [`crate::sim::SimRng`]
+//!   (proptest stand-in).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod tempdir;
+pub mod yamlite;
+
+pub use json::Json;
+pub use tempdir::TempDir;

@@ -1,0 +1,57 @@
+//! Tiny property-testing loop (proptest stand-in).
+//!
+//! `run_prop` executes a property against `cases` randomized inputs drawn
+//! through a [`crate::sim::SimRng`]; on failure it reports the seed so
+//! the case replays deterministically. No shrinking — failures print the
+//! generating seed instead, which for these state-machine properties is
+//! enough to reproduce and debug.
+
+use crate::sim::SimRng;
+
+/// Run `prop` against `cases` random inputs. `gen` draws an input from
+/// the RNG; `prop` panics (assert!) on violation.
+pub fn run_prop<T, G, P>(name: &str, cases: u64, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut SimRng) -> T,
+    P: FnMut(T),
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = SimRng::new(seed);
+        let input = gen(&mut rng);
+        let desc = format!("{input:?}");
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(input)));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed on case {case} (seed {seed:#x})\ninput: {desc}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        run_prop("sort idempotent", 50, |rng| {
+            let n = rng.gen_range(20) as usize;
+            (0..n).map(|_| rng.gen_range(100)).collect::<Vec<_>>()
+        }, |mut v| {
+            v.sort();
+            let w = { let mut w = v.clone(); w.sort(); w };
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn catches_bad_property() {
+        run_prop("always small", 100, |rng| rng.gen_range(1000), |x| {
+            assert!(x < 500, "found counterexample {x}");
+        });
+    }
+}

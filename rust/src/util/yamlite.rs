@@ -1,0 +1,382 @@
+//! YAML subset parser — enough for Hyper recipes (serde_yaml stand-in).
+//!
+//! Supported:
+//! * block maps (`key: value`, nesting by 2+-space indentation)
+//! * block lists (`- item`, including `- key: value` list-of-maps)
+//! * inline maps `{ a: 1, b: x }` and lists `[1, two, 3.0]`
+//! * scalars: bool / int / float (incl. `1.0e-4`) / quoted + bare strings
+//! * `#` comments and blank lines
+//!
+//! Parses into [`Json`] so recipes and manifests share one value type.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+use super::json::Json;
+
+/// Parse a YAML-subset document into a [`Json`] value.
+pub fn parse(text: &str) -> Result<Json> {
+    let lines: Vec<Line> = text
+        .lines()
+        .enumerate()
+        .filter_map(|(no, raw)| Line::lex(no + 1, raw))
+        .collect();
+    let mut p = P { lines: &lines, pos: 0 };
+    let v = p.block(0)?;
+    if p.pos != lines.len() {
+        return Err(Error::Yaml(format!(
+            "line {}: unexpected content (bad indentation?)",
+            lines[p.pos].no
+        )));
+    }
+    Ok(v)
+}
+
+#[derive(Debug)]
+struct Line {
+    no: usize,
+    indent: usize,
+    text: String,
+}
+
+impl Line {
+    fn lex(no: usize, raw: &str) -> Option<Line> {
+        let without_comment = strip_comment(raw);
+        let text = without_comment.trim_end();
+        let trimmed = text.trim_start();
+        if trimmed.is_empty() {
+            return None;
+        }
+        let indent = text.len() - trimmed.len();
+        Some(Line { no, indent, text: trimmed.to_string() })
+    }
+}
+
+/// Strip a `#` comment that is not inside quotes.
+fn strip_comment(s: &str) -> &str {
+    let mut in_sq = false;
+    let mut in_dq = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\'' if !in_dq => in_sq = !in_sq,
+            '"' if !in_sq => in_dq = !in_dq,
+            '#' if !in_sq && !in_dq => return &s[..i],
+            _ => {}
+        }
+    }
+    s
+}
+
+struct P<'a> {
+    lines: &'a [Line],
+    pos: usize,
+}
+
+impl<'a> P<'a> {
+    /// Parse a block (map or list) whose items are indented at least `min`.
+    fn block(&mut self, min: usize) -> Result<Json> {
+        let Some(first) = self.lines.get(self.pos) else {
+            return Ok(Json::Null);
+        };
+        if first.indent < min {
+            return Ok(Json::Null);
+        }
+        let indent = first.indent;
+        if first.text.starts_with("- ") || first.text == "-" {
+            self.list(indent)
+        } else {
+            self.map(indent)
+        }
+    }
+
+    fn list(&mut self, indent: usize) -> Result<Json> {
+        let mut items = Vec::new();
+        while let Some(line) = self.lines.get(self.pos) {
+            if line.indent != indent || !(line.text.starts_with("- ") || line.text == "-") {
+                break;
+            }
+            let no = line.no;
+            let rest = line.text[1..].trim_start().to_string();
+            self.pos += 1;
+            if rest.is_empty() {
+                // nested block under the dash
+                items.push(self.block(indent + 1)?);
+            } else if let Some((k, v)) = split_key(&rest) {
+                // "- key: value" — first entry of an inline-started map
+                let mut map = BTreeMap::new();
+                map.insert(k.to_string(), self.entry_value(v, indent + 1, no)?);
+                // following lines more-indented than the dash belong here
+                while let Some(l2) = self.lines.get(self.pos) {
+                    if l2.indent <= indent || l2.text.starts_with("- ") {
+                        break;
+                    }
+                    let (k2, v2) = split_key(&l2.text)
+                        .ok_or_else(|| Error::Yaml(format!("line {}: expected key", l2.no)))?;
+                    let k2 = k2.to_string();
+                    let v2 = v2.to_string();
+                    let ind2 = l2.indent;
+                    let no2 = l2.no;
+                    self.pos += 1;
+                    map.insert(k2, self.entry_value(&v2, ind2 + 1, no2)?);
+                }
+                items.push(Json::Obj(map));
+            } else {
+                items.push(scalar(&rest));
+            }
+        }
+        Ok(Json::Arr(items))
+    }
+
+    fn map(&mut self, indent: usize) -> Result<Json> {
+        let mut map = BTreeMap::new();
+        while let Some(line) = self.lines.get(self.pos) {
+            if line.indent != indent || line.text.starts_with("- ") {
+                break;
+            }
+            let (k, v) = split_key(&line.text)
+                .ok_or_else(|| Error::Yaml(format!("line {}: expected 'key:'", line.no)))?;
+            let k = k.to_string();
+            let v = v.to_string();
+            let no = line.no;
+            self.pos += 1;
+            map.insert(k, self.entry_value(&v, indent + 1, no)?);
+        }
+        Ok(Json::Obj(map))
+    }
+
+    /// Value after `key:` — inline scalar/flow, or a nested block.
+    fn entry_value(&mut self, inline: &str, min_child: usize, no: usize) -> Result<Json> {
+        let inline = inline.trim();
+        if !inline.is_empty() {
+            return flow_or_scalar(inline)
+                .map_err(|e| Error::Yaml(format!("line {no}: {e}")));
+        }
+        // nested block (or empty value)
+        match self.lines.get(self.pos) {
+            Some(next) if next.indent >= min_child => self.block(next.indent),
+            _ => Ok(Json::Null),
+        }
+    }
+}
+
+/// Split `key: rest` (the colon must be followed by space/EOL).
+fn split_key(s: &str) -> Option<(&str, &str)> {
+    let mut in_sq = false;
+    let mut in_dq = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\'' if !in_dq => in_sq = !in_sq,
+            '"' if !in_sq => in_dq = !in_dq,
+            ':' if !in_sq && !in_dq => {
+                let rest = &s[i + 1..];
+                if rest.is_empty() || rest.starts_with(' ') {
+                    return Some((s[..i].trim(), rest.trim_start()));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Inline flow value (`{…}` / `[…]`) or scalar.
+fn flow_or_scalar(s: &str) -> Result<Json> {
+    let s = s.trim();
+    if s.starts_with('{') || s.starts_with('[') {
+        let (v, used) = flow(s)?;
+        if s[used..].trim().is_empty() {
+            Ok(v)
+        } else {
+            Err(Error::Yaml(format!("trailing content after flow value: {:?}", &s[used..])))
+        }
+    } else {
+        Ok(scalar(s))
+    }
+}
+
+/// Parse a flow value, returning (value, bytes consumed).
+fn flow(s: &str) -> Result<(Json, usize)> {
+    let bytes = s.as_bytes();
+    match bytes.first() {
+        Some(b'{') => {
+            let mut map = BTreeMap::new();
+            let mut i = 1;
+            loop {
+                i += ws(&s[i..]);
+                if bytes.get(i) == Some(&b'}') {
+                    return Ok((Json::Obj(map), i + 1));
+                }
+                let rest = &s[i..];
+                let colon = rest
+                    .find(':')
+                    .ok_or_else(|| Error::Yaml(format!("flow map missing ':' in {rest:?}")))?;
+                let key = rest[..colon].trim().trim_matches(['"', '\'']).to_string();
+                i += colon + 1;
+                i += ws(&s[i..]);
+                let (v, used) = flow_item(&s[i..])?;
+                i += used;
+                map.insert(key, v);
+                i += ws(&s[i..]);
+                match bytes.get(i) {
+                    Some(b',') => i += 1,
+                    Some(b'}') => return Ok((Json::Obj(map), i + 1)),
+                    _ => return Err(Error::Yaml(format!("bad flow map near {:?}", &s[i..]))),
+                }
+            }
+        }
+        Some(b'[') => {
+            let mut arr = Vec::new();
+            let mut i = 1;
+            loop {
+                i += ws(&s[i..]);
+                if bytes.get(i) == Some(&b']') {
+                    return Ok((Json::Arr(arr), i + 1));
+                }
+                let (v, used) = flow_item(&s[i..])?;
+                i += used;
+                arr.push(v);
+                i += ws(&s[i..]);
+                match bytes.get(i) {
+                    Some(b',') => i += 1,
+                    Some(b']') => return Ok((Json::Arr(arr), i + 1)),
+                    _ => return Err(Error::Yaml(format!("bad flow list near {:?}", &s[i..]))),
+                }
+            }
+        }
+        _ => Err(Error::Yaml(format!("not a flow value: {s:?}"))),
+    }
+}
+
+/// One item inside a flow collection: nested flow or scalar up to , } ].
+fn flow_item(s: &str) -> Result<(Json, usize)> {
+    if s.starts_with('{') || s.starts_with('[') {
+        return flow(s);
+    }
+    let end = s
+        .char_indices()
+        .find(|(_, c)| matches!(c, ',' | '}' | ']'))
+        .map(|(i, _)| i)
+        .unwrap_or(s.len());
+    Ok((scalar(s[..end].trim()), end))
+}
+
+fn ws(s: &str) -> usize {
+    s.len() - s.trim_start().len()
+}
+
+/// Scalar typing: bool / null / number / string (quotes stripped).
+fn scalar(s: &str) -> Json {
+    let t = s.trim();
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Json::Str(t[1..t.len() - 1].to_string());
+    }
+    match t {
+        "true" | "True" => return Json::Bool(true),
+        "false" | "False" => return Json::Bool(false),
+        "null" | "~" | "" => return Json::Null,
+        _ => {}
+    }
+    if let Ok(x) = t.parse::<f64>() {
+        // bare numbers only (avoid "1.2.3" -> parse::<f64> fails anyway)
+        return Json::Num(x);
+    }
+    Json::Str(t.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RECIPE: &str = r#"
+# a demo recipe
+name: demo
+version: 1
+experiments:
+  - name: prep
+    instance: m5.24xlarge
+    workers: 4
+    command: "prep --shard {shard}"
+    params:
+      shard: { range: [0, 7] }
+    work: { duration_s: 10.0, input_bytes: 1000000 }
+  - name: train
+    instance: p3.2xlarge
+    spot: true
+    command: 'train --lr {lr}'
+    samples: 4
+    params:
+      lr: { log_uniform: [1.0e-4, 1.0e-2] }
+    depends_on: [prep]
+"#;
+
+    #[test]
+    fn parses_recipe_shape() {
+        let v = parse(RECIPE).unwrap();
+        assert_eq!(v.req_str("name").unwrap(), "demo");
+        let exps = v.req_arr("experiments").unwrap();
+        assert_eq!(exps.len(), 2);
+        assert_eq!(exps[0].req_str("command").unwrap(), "prep --shard {shard}");
+        assert_eq!(exps[0].req_u64("workers").unwrap(), 4);
+        let range = exps[0].get("params").unwrap().get("shard").unwrap().req_arr("range").unwrap();
+        assert_eq!(range[1].as_u64(), Some(7));
+        assert_eq!(exps[1].get("spot").unwrap().as_bool(), Some(true));
+        let lu = exps[1].get("params").unwrap().get("lr").unwrap().req_arr("log_uniform").unwrap();
+        assert!((lu[0].as_f64().unwrap() - 1e-4).abs() < 1e-12);
+        assert_eq!(exps[1].req_arr("depends_on").unwrap()[0].as_str(), Some("prep"));
+    }
+
+    #[test]
+    fn inline_collections() {
+        let v = parse("a: { x: 1, y: [2, 3], z: { w: ok } }").unwrap();
+        let a = v.get("a").unwrap();
+        assert_eq!(a.req_u64("x").unwrap(), 1);
+        assert_eq!(a.req_arr("y").unwrap().len(), 2);
+        assert_eq!(a.get("z").unwrap().req_str("w").unwrap(), "ok");
+    }
+
+    #[test]
+    fn scalars_typed() {
+        let v = parse("i: 42\nf: -2.5e3\nb: true\nn: null\ns: plain words\nq: \"quoted: x\"")
+            .unwrap();
+        assert_eq!(v.req_u64("i").unwrap(), 42);
+        assert_eq!(v.req_f64("f").unwrap(), -2500.0);
+        assert_eq!(v.get("b").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("n"), Some(&Json::Null));
+        assert_eq!(v.req_str("s").unwrap(), "plain words");
+        assert_eq!(v.req_str("q").unwrap(), "quoted: x");
+    }
+
+    #[test]
+    fn comments_stripped_safely() {
+        let v = parse("a: 1 # trailing\n# whole line\nb: \"keep # this\"").unwrap();
+        assert_eq!(v.req_u64("a").unwrap(), 1);
+        assert_eq!(v.req_str("b").unwrap(), "keep # this");
+    }
+
+    #[test]
+    fn list_of_scalars() {
+        let v = parse("xs:\n  - 1\n  - two\n  - 3.5").unwrap();
+        let xs = v.req_arr("xs").unwrap();
+        assert_eq!(xs[0].as_u64(), Some(1));
+        assert_eq!(xs[1].as_str(), Some("two"));
+        assert_eq!(xs[2].as_f64(), Some(3.5));
+    }
+
+    #[test]
+    fn bad_yaml_errors() {
+        assert!(parse("a: { unclosed").is_err());
+        assert!(parse("key_without_colon_value\n  nested: 1").is_err());
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let v = parse("a:\n  b:\n    c:\n      - d: 1\n        e: 2\n      - d: 3").unwrap();
+        let list = v.get("a").unwrap().get("b").unwrap().req_arr("c").unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].req_u64("e").unwrap(), 2);
+        assert_eq!(list[1].req_u64("d").unwrap(), 3);
+    }
+}

@@ -1,0 +1,278 @@
+//! The workflow DAG: experiments as nodes, dependencies as edges.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+
+use crate::{Error, Result};
+
+use super::params::sample_assignments;
+use super::recipe::Recipe;
+use super::task::{Task, TaskId};
+
+/// Experiment progress within a workflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExperimentState {
+    /// Waiting on dependencies.
+    Blocked,
+    /// Dependencies satisfied; tasks may run.
+    Runnable,
+    /// Every task succeeded.
+    Complete,
+    /// At least one task permanently failed.
+    Failed,
+}
+
+/// A compiled workflow: topological order, per-experiment tasks.
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    pub name: String,
+    pub recipe: Recipe,
+    /// experiments[i] corresponds to recipe.experiments[i]
+    pub states: Vec<ExperimentState>,
+    pub tasks: Vec<Vec<Task>>,
+    /// adjacency: deps[i] = indices of experiments i depends on
+    deps: Vec<Vec<usize>>,
+    topo: Vec<usize>,
+}
+
+impl Workflow {
+    /// Compile a recipe: sample §II.C assignments for every experiment,
+    /// materialize tasks, topologically sort, detect cycles.
+    pub fn compile(recipe: Recipe, seed: u64) -> Result<Self> {
+        recipe.validate()?;
+        let name_to_idx: BTreeMap<&str, usize> = recipe
+            .experiments
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.as_str(), i))
+            .collect();
+        let deps: Vec<Vec<usize>> = recipe
+            .experiments
+            .iter()
+            .map(|e| e.depends_on.iter().map(|d| name_to_idx[d.as_str()]).collect())
+            .collect();
+        let topo = topo_sort(&deps)
+            .ok_or_else(|| Error::Workflow("dependency cycle in recipe".into()))?;
+
+        let tasks: Vec<Vec<Task>> = recipe
+            .experiments
+            .iter()
+            .enumerate()
+            .map(|(ei, spec)| {
+                let assignments =
+                    sample_assignments(&spec.params, spec.samples, seed ^ (ei as u64) << 17);
+                assignments
+                    .into_iter()
+                    .enumerate()
+                    .map(|(ti, a)| Task::materialize(ei as u32, ti as u32, spec, a))
+                    .collect()
+            })
+            .collect();
+
+        let states = deps
+            .iter()
+            .map(|d| if d.is_empty() { ExperimentState::Runnable } else { ExperimentState::Blocked })
+            .collect();
+
+        Ok(Self { name: recipe.name.clone(), recipe, states, tasks, deps, topo })
+    }
+
+    pub fn n_experiments(&self) -> usize {
+        self.recipe.experiments.len()
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.tasks.iter().map(Vec::len).sum()
+    }
+
+    /// Topological order of experiment indices.
+    pub fn topo_order(&self) -> &[usize] {
+        &self.topo
+    }
+
+    /// Experiments currently runnable.
+    pub fn runnable(&self) -> Vec<usize> {
+        (0..self.states.len())
+            .filter(|&i| self.states[i] == ExperimentState::Runnable)
+            .collect()
+    }
+
+    /// Mark an experiment complete and unblock dependents whose deps are
+    /// all complete. Returns newly-runnable experiment indices.
+    pub fn mark_complete(&mut self, exp: usize) -> Vec<usize> {
+        self.states[exp] = ExperimentState::Complete;
+        let mut newly = Vec::new();
+        for i in 0..self.states.len() {
+            if self.states[i] == ExperimentState::Blocked
+                && self.deps[i].iter().all(|&d| self.states[d] == ExperimentState::Complete)
+            {
+                self.states[i] = ExperimentState::Runnable;
+                newly.push(i);
+            }
+        }
+        newly
+    }
+
+    /// Mark an experiment failed; dependents transitively fail too
+    /// (their tasks never become runnable).
+    pub fn mark_failed(&mut self, exp: usize) -> Vec<usize> {
+        let mut failed = vec![exp];
+        self.states[exp] = ExperimentState::Failed;
+        // transitive closure over dependents
+        loop {
+            let mut changed = false;
+            for i in 0..self.states.len() {
+                if self.states[i] != ExperimentState::Failed
+                    && self.deps[i].iter().any(|&d| self.states[d] == ExperimentState::Failed)
+                {
+                    self.states[i] = ExperimentState::Failed;
+                    failed.push(i);
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        failed
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id.experiment as usize][id.index as usize]
+    }
+
+    pub fn task_mut(&mut self, id: TaskId) -> &mut Task {
+        &mut self.tasks[id.experiment as usize][id.index as usize]
+    }
+
+    /// True when every experiment is complete.
+    pub fn is_complete(&self) -> bool {
+        self.states.iter().all(|s| *s == ExperimentState::Complete)
+    }
+}
+
+/// Kahn's algorithm; None if cyclic.
+fn topo_sort(deps: &[Vec<usize>]) -> Option<Vec<usize>> {
+    let n = deps.len();
+    let mut indegree = vec![0usize; n];
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, ds) in deps.iter().enumerate() {
+        indegree[i] = ds.len();
+        for &d in ds {
+            dependents[d].push(i);
+        }
+    }
+    let mut queue: BTreeSet<usize> =
+        (0..n).filter(|&i| indegree[i] == 0).collect();
+    let mut out = Vec::with_capacity(n);
+    while let Some(&i) = queue.iter().next() {
+        queue.remove(&i);
+        out.push(i);
+        for &j in &dependents[i] {
+            indegree[j] -= 1;
+            if indegree[j] == 0 {
+                queue.insert(j);
+            }
+        }
+    }
+    (out.len() == n).then_some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recipe(yaml: &str) -> Recipe {
+        Recipe::from_yaml(yaml).unwrap()
+    }
+
+    const CHAIN: &str = r#"
+name: chain
+experiments:
+  - name: a
+    instance: m5.xlarge
+    command: "a --i {i}"
+    params: { i: { range: [0, 3] } }
+  - name: b
+    instance: m5.xlarge
+    command: "b"
+    depends_on: [a]
+  - name: c
+    instance: m5.xlarge
+    command: "c"
+    depends_on: [b]
+"#;
+
+    #[test]
+    fn compile_chain() {
+        let wf = Workflow::compile(recipe(CHAIN), 0).unwrap();
+        assert_eq!(wf.n_experiments(), 3);
+        assert_eq!(wf.tasks[0].len(), 4); // grid over i
+        assert_eq!(wf.tasks[1].len(), 1);
+        assert_eq!(wf.total_tasks(), 6);
+        assert_eq!(wf.topo_order(), &[0, 1, 2]);
+        assert_eq!(wf.runnable(), vec![0]);
+    }
+
+    #[test]
+    fn unblocking_cascade() {
+        let mut wf = Workflow::compile(recipe(CHAIN), 0).unwrap();
+        assert_eq!(wf.mark_complete(0), vec![1]);
+        assert_eq!(wf.mark_complete(1), vec![2]);
+        assert_eq!(wf.mark_complete(2), Vec::<usize>::new());
+        assert!(wf.is_complete());
+    }
+
+    #[test]
+    fn failure_propagates_to_dependents() {
+        let mut wf = Workflow::compile(recipe(CHAIN), 0).unwrap();
+        let failed = wf.mark_failed(0);
+        assert_eq!(failed.len(), 3, "a's failure dooms b and c");
+        assert!(!wf.is_complete());
+    }
+
+    #[test]
+    fn diamond_topology() {
+        let yaml = r#"
+name: diamond
+experiments:
+  - name: src
+    instance: m5.xlarge
+    command: "s"
+  - name: left
+    instance: m5.xlarge
+    command: "l"
+    depends_on: [src]
+  - name: right
+    instance: m5.xlarge
+    command: "r"
+    depends_on: [src]
+  - name: sink
+    instance: m5.xlarge
+    command: "k"
+    depends_on: [left, right]
+"#;
+        let mut wf = Workflow::compile(recipe(yaml), 0).unwrap();
+        wf.mark_complete(0);
+        wf.mark_complete(1);
+        assert_eq!(wf.runnable(), vec![2], "sink still blocked on right");
+        assert_eq!(wf.mark_complete(2), vec![3]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        // construct a cyclic recipe by hand (validate() only checks names)
+        let mut r = recipe(CHAIN);
+        r.experiments[0].depends_on = vec!["c".into()];
+        assert!(Workflow::compile(r, 0).is_err());
+    }
+
+    #[test]
+    fn sampling_is_seeded() {
+        let w1 = Workflow::compile(recipe(CHAIN), 7).unwrap();
+        let w2 = Workflow::compile(recipe(CHAIN), 7).unwrap();
+        for (a, b) in w1.tasks[0].iter().zip(&w2.tasks[0]) {
+            assert_eq!(a.command, b.command);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Workflows: YAML recipes -> DAG of experiments -> tasks (§II).
+//!
+//! "Workflow is a directed acyclic graph consisting of Experiment nodes
+//! and their dependency as edges. Single Experiment contains multiple
+//! Tasks. Tasks within the same experiment execute the same command with
+//! different arguments."
+
+pub mod dag;
+pub mod params;
+pub mod recipe;
+pub mod task;
+
+pub use dag::Workflow;
+pub use params::{sample_assignments, Assignment, ParamSpec, ParamValue};
+pub use recipe::{ExperimentSpec, Recipe, WorkSpec};
+pub use task::{Task, TaskId, TaskState};

@@ -1,0 +1,322 @@
+//! §II.C parameter sampling.
+//!
+//! "To compute parameters for each Task, the algorithm generates the
+//! Cartesian product of all discrete parameters and samples from the set
+//! n times with minimal repetition. Then, it samples n times from each
+//! continuous parameter range and randomly matches with discrete sampled
+//! parameters."
+
+use std::collections::BTreeMap;
+
+use crate::sim::SimRng;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// A parameter's sampling space, as written in the recipe.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamSpec {
+    /// Discrete class: explicit values.
+    Choice(Vec<ParamValue>),
+    /// Discrete integer range `[lo, hi]` inclusive.
+    Range([i64; 2]),
+    /// Continuous uniform `[lo, hi)`.
+    Uniform([f64; 2]),
+    /// Continuous log-uniform `[lo, hi)`, lo > 0.
+    LogUniform([f64; 2]),
+}
+
+/// A concrete sampled value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl std::fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParamValue::Int(i) => write!(f, "{i}"),
+            ParamValue::Float(x) => write!(f, "{x}"),
+            ParamValue::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// One task's parameter binding.
+pub type Assignment = BTreeMap<String, ParamValue>;
+
+impl ParamValue {
+    /// From a recipe scalar.
+    pub fn from_json(v: &Json) -> Result<ParamValue> {
+        match v {
+            Json::Num(x) if x.fract() == 0.0 && x.abs() < 9.0e15 => {
+                Ok(ParamValue::Int(*x as i64))
+            }
+            Json::Num(x) => Ok(ParamValue::Float(*x)),
+            Json::Str(s) => Ok(ParamValue::Str(s.clone())),
+            Json::Bool(b) => Ok(ParamValue::Int(*b as i64)),
+            other => Err(Error::Recipe(format!("invalid parameter value {other:?}"))),
+        }
+    }
+}
+
+impl ParamSpec {
+    /// Parse a recipe param spec: `{ choice: [...] } | { range: [lo, hi] } |
+    /// { uniform: [lo, hi] } | { log_uniform: [lo, hi] }`.
+    pub fn from_json(v: &Json) -> Result<ParamSpec> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| Error::Recipe(format!("param spec must be a map, got {v:?}")))?;
+        if obj.len() != 1 {
+            return Err(Error::Recipe(format!("param spec needs exactly one kind: {v:?}")));
+        }
+        let (kind, body) = obj.iter().next().expect("len 1");
+        let arr = body
+            .as_arr()
+            .ok_or_else(|| Error::Recipe(format!("param {kind:?} body must be a list")))?;
+        let pair = |what: &str| -> Result<[f64; 2]> {
+            if arr.len() != 2 {
+                return Err(Error::Recipe(format!("{what} needs [lo, hi]")));
+            }
+            let lo = arr[0].as_f64().ok_or_else(|| Error::Recipe(format!("{what} lo")))?;
+            let hi = arr[1].as_f64().ok_or_else(|| Error::Recipe(format!("{what} hi")))?;
+            if lo >= hi {
+                return Err(Error::Recipe(format!("{what}: lo must be < hi")));
+            }
+            Ok([lo, hi])
+        };
+        match kind.as_str() {
+            "choice" => {
+                if arr.is_empty() {
+                    return Err(Error::Recipe("choice must be non-empty".into()));
+                }
+                Ok(ParamSpec::Choice(
+                    arr.iter().map(ParamValue::from_json).collect::<Result<_>>()?,
+                ))
+            }
+            "range" => {
+                // inclusive integer range: [0, 0] (a single value) is legal
+                if arr.len() != 2 {
+                    return Err(Error::Recipe("range needs [lo, hi]".into()));
+                }
+                let lo = arr[0].as_i64().ok_or_else(|| Error::Recipe("range lo".into()))?;
+                let hi = arr[1].as_i64().ok_or_else(|| Error::Recipe("range hi".into()))?;
+                if lo > hi {
+                    return Err(Error::Recipe("range: lo must be <= hi".into()));
+                }
+                Ok(ParamSpec::Range([lo, hi]))
+            }
+            "uniform" => Ok(ParamSpec::Uniform(pair("uniform")?)),
+            "log_uniform" => {
+                let [lo, hi] = pair("log_uniform")?;
+                if lo <= 0.0 {
+                    return Err(Error::Recipe("log_uniform lo must be > 0".into()));
+                }
+                Ok(ParamSpec::LogUniform([lo, hi]))
+            }
+            other => Err(Error::Recipe(format!("unknown param kind {other:?}"))),
+        }
+    }
+}
+
+impl ParamSpec {
+    /// Discrete cardinality (None for continuous).
+    pub fn cardinality(&self) -> Option<usize> {
+        match self {
+            ParamSpec::Choice(vs) => Some(vs.len()),
+            ParamSpec::Range([lo, hi]) => Some((hi - lo + 1).max(0) as usize),
+            _ => None,
+        }
+    }
+
+    fn discrete_value(&self, idx: usize) -> ParamValue {
+        match self {
+            ParamSpec::Choice(vs) => vs[idx].clone(),
+            ParamSpec::Range([lo, _]) => ParamValue::Int(lo + idx as i64),
+            _ => unreachable!("discrete_value on continuous spec"),
+        }
+    }
+
+    fn sample_continuous(&self, rng: &mut SimRng) -> ParamValue {
+        match self {
+            ParamSpec::Uniform([lo, hi]) => ParamValue::Float(rng.gen_range_f64(*lo, *hi)),
+            ParamSpec::LogUniform([lo, hi]) => {
+                let x = rng.gen_range_f64(lo.ln(), hi.ln());
+                ParamValue::Float(x.exp())
+            }
+            _ => unreachable!("sample_continuous on discrete spec"),
+        }
+    }
+}
+
+/// The §II.C algorithm. Returns `n` assignments; if `n` is `None` it
+/// defaults to the full discrete Cartesian size (grid iteration), or 1 if
+/// every parameter is continuous.
+pub fn sample_assignments(
+    params: &BTreeMap<String, ParamSpec>,
+    n: Option<usize>,
+    seed: u64,
+) -> Vec<Assignment> {
+    let mut rng = SimRng::new(seed ^ 0x9A9A_0CE1);
+    let discrete: Vec<(&String, &ParamSpec)> =
+        params.iter().filter(|(_, s)| s.cardinality().is_some()).collect();
+    let continuous: Vec<(&String, &ParamSpec)> =
+        params.iter().filter(|(_, s)| s.cardinality().is_none()).collect();
+
+    let cart: usize = discrete
+        .iter()
+        .map(|(_, s)| s.cardinality().expect("discrete"))
+        .product::<usize>()
+        .max(1);
+    let n = n.unwrap_or(if discrete.is_empty() { 1 } else { cart }).max(1);
+
+    // --- minimal-repetition sampling of the Cartesian product ---------
+    // every combo appears floor(n/cart) times, plus a without-replacement
+    // sample of the remainder.
+    let mut combo_ids: Vec<usize> = Vec::with_capacity(n);
+    let full_rounds = n / cart;
+    for _ in 0..full_rounds {
+        combo_ids.extend(0..cart);
+    }
+    let rem = n - full_rounds * cart;
+    if rem > 0 {
+        let mut pool: Vec<usize> = (0..cart).collect();
+        rng.shuffle(&mut pool);
+        combo_ids.extend(pool.into_iter().take(rem));
+    }
+    rng.shuffle(&mut combo_ids);
+
+    // --- continuous samples, randomly matched -------------------------
+    let mut cont_samples: Vec<Vec<ParamValue>> = continuous
+        .iter()
+        .map(|(_, s)| (0..n).map(|_| s.sample_continuous(&mut rng)).collect())
+        .collect();
+    for col in cont_samples.iter_mut() {
+        rng.shuffle(col);
+    }
+
+    combo_ids
+        .into_iter()
+        .enumerate()
+        .map(|(row, mut combo)| {
+            let mut a = Assignment::new();
+            for (name, spec) in &discrete {
+                let card = spec.cardinality().expect("discrete");
+                a.insert((*name).clone(), spec.discrete_value(combo % card));
+                combo /= card;
+            }
+            for (ci, (name, _)) in continuous.iter().enumerate() {
+                a.insert((*name).clone(), cont_samples[ci][row].clone());
+            }
+            a
+        })
+        .collect()
+}
+
+/// Render a `{param}` template with an assignment.
+pub fn render_command(template: &str, a: &Assignment) -> String {
+    let mut out = template.to_string();
+    for (k, v) in a {
+        out = out.replace(&format!("{{{k}}}"), &v.to_string());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(pairs: Vec<(&str, ParamSpec)>) -> BTreeMap<String, ParamSpec> {
+        pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+    }
+
+    #[test]
+    fn grid_default_covers_cartesian() {
+        let p = spec(vec![
+            ("a", ParamSpec::Choice(vec![ParamValue::Int(1), ParamValue::Int(2)])),
+            ("b", ParamSpec::Range([0, 2])),
+        ]);
+        let out = sample_assignments(&p, None, 0);
+        assert_eq!(out.len(), 6);
+        let mut unique: Vec<String> = out.iter().map(|a| format!("{a:?}")).collect();
+        unique.sort();
+        unique.dedup();
+        assert_eq!(unique.len(), 6, "grid must enumerate every combo once");
+    }
+
+    #[test]
+    fn minimal_repetition_under_sampling() {
+        let p = spec(vec![("a", ParamSpec::Range([0, 9]))]); // card 10
+        let out = sample_assignments(&p, Some(25), 1);
+        assert_eq!(out.len(), 25);
+        // each of the 10 values must appear 2 or 3 times (25 = 2*10 + 5)
+        let mut counts = BTreeMap::new();
+        for a in &out {
+            *counts.entry(format!("{:?}", a["a"])).or_insert(0) += 1;
+        }
+        assert!(counts.values().all(|&c| c == 2 || c == 3), "{counts:?}");
+    }
+
+    #[test]
+    fn without_replacement_when_n_below_cartesian() {
+        let p = spec(vec![("a", ParamSpec::Range([0, 99]))]);
+        let out = sample_assignments(&p, Some(50), 2);
+        let mut seen: Vec<String> = out.iter().map(|a| format!("{:?}", a["a"])).collect();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 50, "no repeats while n <= cardinality");
+    }
+
+    #[test]
+    fn continuous_within_bounds_and_matched() {
+        let p = spec(vec![
+            ("lr", ParamSpec::LogUniform([1e-4, 1e-1])),
+            ("mom", ParamSpec::Uniform([0.5, 0.99])),
+            ("bs", ParamSpec::Choice(vec![ParamValue::Int(32), ParamValue::Int(64)])),
+        ]);
+        let out = sample_assignments(&p, Some(40), 3);
+        assert_eq!(out.len(), 40);
+        for a in &out {
+            let ParamValue::Float(lr) = a["lr"] else { panic!("lr type") };
+            let ParamValue::Float(mom) = a["mom"] else { panic!("mom type") };
+            assert!((1e-4..1e-1).contains(&lr));
+            assert!((0.5..0.99).contains(&mom));
+        }
+        // discrete part still balanced: 20 each
+        let c32 = out.iter().filter(|a| a["bs"] == ParamValue::Int(32)).count();
+        assert_eq!(c32, 20);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = spec(vec![("x", ParamSpec::Uniform([0.0, 1.0]))]);
+        assert_eq!(sample_assignments(&p, Some(5), 9), sample_assignments(&p, Some(5), 9));
+        assert_ne!(sample_assignments(&p, Some(5), 9), sample_assignments(&p, Some(5), 10));
+    }
+
+    #[test]
+    fn all_continuous_defaults_to_one() {
+        let p = spec(vec![("x", ParamSpec::Uniform([0.0, 1.0]))]);
+        assert_eq!(sample_assignments(&p, None, 0).len(), 1);
+    }
+
+    #[test]
+    fn render_command_substitutes() {
+        let mut a = Assignment::new();
+        a.insert("lr".into(), ParamValue::Float(0.01));
+        a.insert("tag".into(), ParamValue::Str("v1".into()));
+        let cmd = render_command("train --lr {lr} --tag {tag} --keep {other}", &a);
+        assert_eq!(cmd, "train --lr 0.01 --tag v1 --keep {other}");
+    }
+
+    #[test]
+    fn paper_hyperparam_scale() {
+        // §IV.C: 12 binary parameters -> 4096 combinations
+        let p: BTreeMap<String, ParamSpec> = (0..12)
+            .map(|i| (format!("p{i:02}"), ParamSpec::Range([0, 1])))
+            .collect();
+        let out = sample_assignments(&p, None, 0);
+        assert_eq!(out.len(), 4096);
+    }
+}

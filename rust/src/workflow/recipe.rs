@@ -1,0 +1,287 @@
+//! YAML recipe parsing — the paper's code-as-infrastructure interface
+//! (§II.B): environment, hardware, worker count, parameters and
+//! parameterized commands.
+//!
+//! ```yaml
+//! name: yolo-train
+//! experiments:
+//!   - name: train
+//!     image: horovod/horovod:0.16
+//!     instance: p3.2xlarge
+//!     workers: 8
+//!     spot: true
+//!     command: "python train.py --lr {lr} --bs {bs}"
+//!     samples: 16
+//!     params:
+//!       lr: { log_uniform: [1.0e-4, 1.0e-2] }
+//!       bs: { choice: [32, 64] }
+//!     work: { flops_per_task: 1.0e15 }
+//!     depends_on: [preprocess]
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet};
+
+
+use crate::cloud::InstanceType;
+use crate::util::{yamlite, Json};
+use crate::{Error, Result};
+
+use super::params::ParamSpec;
+
+/// How much work one task represents — used by the virtual-time executors
+/// (`duration_s` wins if both are given; `flops_per_task` divides by the
+/// node's device throughput).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkSpec {
+    pub flops_per_task: Option<f64>,
+    pub duration_s: Option<f64>,
+    /// Input bytes each task reads through HFS.
+    pub input_bytes: Option<u64>,
+}
+
+/// One experiment block of the recipe.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub name: String,
+    /// Container image (opaque string; pull cost modeled by the provisioner).
+    pub image: String,
+    /// Instance type name from the catalog (e.g. "p3.2xlarge").
+    pub instance: String,
+    pub workers: usize,
+    pub spot: bool,
+    /// Templated command; `{param}` placeholders are substituted per task.
+    pub command: String,
+    /// Number of tasks to sample (§II.C `n`); default = full grid.
+    pub samples: Option<usize>,
+    pub params: BTreeMap<String, ParamSpec>,
+    pub depends_on: Vec<String>,
+    /// Max reschedules per task after node failures.
+    pub max_retries: u32,
+    pub work: WorkSpec,
+}
+
+fn default_image() -> String {
+    "pytorch/pytorch:latest".to_string()
+}
+
+fn default_workers() -> usize {
+    1
+}
+
+fn default_retries() -> u32 {
+    5
+}
+
+impl ExperimentSpec {
+    /// Build one experiment block from the parsed document.
+    fn from_json(v: &Json) -> Result<Self> {
+        let name = v
+            .req_str("name")
+            .map_err(|_| Error::Recipe("experiment needs a name".into()))?
+            .to_string();
+        let bad = |field: &str| Error::Recipe(format!("experiment {name:?}: invalid {field}"));
+        let params = match v.get("params") {
+            None | Some(Json::Null) => BTreeMap::new(),
+            Some(p) => p
+                .as_obj()
+                .ok_or_else(|| bad("params"))?
+                .iter()
+                .map(|(k, spec)| Ok((k.clone(), ParamSpec::from_json(spec)?)))
+                .collect::<Result<BTreeMap<_, _>>>()?,
+        };
+        let depends_on = match v.get("depends_on") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(d) => d
+                .as_arr()
+                .ok_or_else(|| bad("depends_on"))?
+                .iter()
+                .map(|x| x.as_str().map(str::to_string).ok_or_else(|| bad("depends_on")))
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let work = match v.get("work") {
+            None | Some(Json::Null) => WorkSpec::default(),
+            Some(w) => WorkSpec {
+                flops_per_task: w.get("flops_per_task").and_then(Json::as_f64),
+                duration_s: w.get("duration_s").and_then(Json::as_f64),
+                input_bytes: w.get("input_bytes").and_then(Json::as_u64),
+            },
+        };
+        Ok(ExperimentSpec {
+            image: v
+                .get("image")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_else(default_image),
+            instance: v.req_str("instance").map_err(|_| bad("instance"))?.to_string(),
+            workers: v.get("workers").and_then(Json::as_u64).map(|w| w as usize).unwrap_or_else(default_workers),
+            spot: v.get("spot").and_then(Json::as_bool).unwrap_or(false),
+            command: v.req_str("command").map_err(|_| bad("command"))?.to_string(),
+            samples: v.get("samples").and_then(Json::as_u64).map(|s| s as usize),
+            max_retries: v
+                .get("max_retries")
+                .and_then(Json::as_u64)
+                .map(|r| r as u32)
+                .unwrap_or_else(default_retries),
+            params,
+            depends_on,
+            work,
+            name,
+        })
+    }
+
+    pub fn instance_type(&self) -> Result<InstanceType> {
+        InstanceType::by_name(&self.instance)
+            .map(|s| s.ty)
+            .ok_or_else(|| Error::Recipe(format!("unknown instance type {:?}", self.instance)))
+    }
+}
+
+/// A full parsed recipe.
+#[derive(Debug, Clone)]
+pub struct Recipe {
+    pub name: String,
+    pub version: u32,
+    pub experiments: Vec<ExperimentSpec>,
+}
+
+impl Recipe {
+    /// Parse and validate a YAML recipe (via the crate's YAML subset).
+    pub fn from_yaml(text: &str) -> Result<Self> {
+        let doc = yamlite::parse(text)?;
+        let recipe = Self::from_json(&doc)?;
+        recipe.validate()?;
+        Ok(recipe)
+    }
+
+    /// Build a Recipe from the parsed document.
+    fn from_json(doc: &Json) -> Result<Self> {
+        let name = doc.req_str("name").map_err(|_| Error::Recipe("recipe needs a name".into()))?;
+        let version = doc.get("version").and_then(Json::as_u64).unwrap_or(1) as u32;
+        let exps = doc
+            .get("experiments")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Recipe("recipe needs an experiments list".into()))?;
+        let experiments =
+            exps.iter().map(ExperimentSpec::from_json).collect::<Result<Vec<_>>>()?;
+        Ok(Recipe { name: name.to_string(), version, experiments })
+    }
+
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::from_yaml(&std::fs::read_to_string(path)?)
+    }
+
+    /// Structural validation: unique names, known deps, known instances,
+    /// positive workers, acyclicity (checked again when the DAG is built).
+    pub fn validate(&self) -> Result<()> {
+        if self.experiments.is_empty() {
+            return Err(Error::Recipe("recipe has no experiments".into()));
+        }
+        let mut names = BTreeSet::new();
+        for e in &self.experiments {
+            if !names.insert(e.name.as_str()) {
+                return Err(Error::Recipe(format!("duplicate experiment name {:?}", e.name)));
+            }
+            if e.workers == 0 {
+                return Err(Error::Recipe(format!("{:?}: workers must be > 0", e.name)));
+            }
+            e.instance_type()?;
+            if e.command.trim().is_empty() {
+                return Err(Error::Recipe(format!("{:?}: empty command", e.name)));
+            }
+        }
+        for e in &self.experiments {
+            for d in &e.depends_on {
+                if !names.contains(d.as_str()) {
+                    return Err(Error::Recipe(format!(
+                        "{:?} depends on unknown experiment {:?}",
+                        e.name, d
+                    )));
+                }
+                if d == &e.name {
+                    return Err(Error::Recipe(format!("{:?} depends on itself", e.name)));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn experiment(&self, name: &str) -> Option<&ExperimentSpec> {
+        self.experiments.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const YAML: &str = r#"
+name: demo
+experiments:
+  - name: prep
+    instance: m5.24xlarge
+    workers: 4
+    command: "prep --shard {shard}"
+    params:
+      shard: { range: [0, 7] }
+    work: { duration_s: 10.0 }
+  - name: train
+    instance: p3.2xlarge
+    workers: 2
+    spot: true
+    command: "train --lr {lr}"
+    samples: 4
+    params:
+      lr: { log_uniform: [1.0e-4, 1.0e-2] }
+    depends_on: [prep]
+"#;
+
+    #[test]
+    fn parses_full_recipe() {
+        let r = Recipe::from_yaml(YAML).unwrap();
+        assert_eq!(r.name, "demo");
+        assert_eq!(r.experiments.len(), 2);
+        let train = r.experiment("train").unwrap();
+        assert!(train.spot);
+        assert_eq!(train.samples, Some(4));
+        assert_eq!(train.depends_on, vec!["prep"]);
+        assert_eq!(train.max_retries, 5); // default
+        let prep = r.experiment("prep").unwrap();
+        assert_eq!(prep.work.duration_s, Some(10.0));
+        assert_eq!(prep.params["shard"], ParamSpec::Range([0, 7]));
+    }
+
+    #[test]
+    fn rejects_unknown_instance() {
+        let bad = YAML.replace("p3.2xlarge", "quantum.9000");
+        assert!(matches!(Recipe::from_yaml(&bad), Err(Error::Recipe(_))));
+    }
+
+    #[test]
+    fn rejects_unknown_dependency() {
+        let bad = YAML.replace("depends_on: [prep]", "depends_on: [ghost]");
+        assert!(Recipe::from_yaml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let bad = YAML.replace("name: train", "name: prep");
+        assert!(Recipe::from_yaml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_self_dependency() {
+        let bad = YAML.replace("depends_on: [prep]", "depends_on: [train]");
+        assert!(Recipe::from_yaml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_workers() {
+        let bad = YAML.replace("workers: 4", "workers: 0");
+        assert!(Recipe::from_yaml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Recipe::from_yaml("name: x\nexperiments: []").is_err());
+    }
+}

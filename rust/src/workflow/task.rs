@@ -1,0 +1,125 @@
+//! Tasks: the execution unit (§II.A).
+//!
+//! "Task is the execution unit, which encapsulates a process. Each Task
+//! has assigned Node … Single Node might execute multiple Tasks."
+
+
+use super::params::{render_command, Assignment};
+use super::recipe::ExperimentSpec;
+
+/// Stable identity: (experiment index, task index within experiment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId {
+    pub experiment: u32,
+    pub index: u32,
+}
+
+impl std::fmt::Display for TaskId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "e{}t{}", self.experiment, self.index)
+    }
+}
+
+/// Scheduler-visible lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    Pending,
+    Running,
+    Succeeded,
+    /// Exhausted retries.
+    Failed,
+}
+
+/// A concrete task: rendered command + its parameter binding.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub experiment_name: String,
+    pub command: String,
+    pub assignment: Assignment,
+    pub state: TaskState,
+    /// How many times this task has been (re)started.
+    pub attempts: u32,
+    pub max_retries: u32,
+    /// Work model copied from the experiment (virtual-time executors).
+    pub flops: Option<f64>,
+    pub duration_s: Option<f64>,
+    pub input_bytes: Option<u64>,
+}
+
+impl Task {
+    /// Materialize the `index`-th task of an experiment from an assignment.
+    pub fn materialize(
+        experiment: u32,
+        index: u32,
+        spec: &ExperimentSpec,
+        assignment: Assignment,
+    ) -> Self {
+        Self {
+            id: TaskId { experiment, index },
+            experiment_name: spec.name.clone(),
+            command: render_command(&spec.command, &assignment),
+            assignment,
+            state: TaskState::Pending,
+            attempts: 0,
+            max_retries: spec.max_retries,
+            flops: spec.work.flops_per_task,
+            duration_s: spec.work.duration_s,
+            input_bytes: spec.work.input_bytes,
+        }
+    }
+
+    /// Can this task be retried after a failure? (§III.D: "the task with
+    /// exact command arguments gets rescheduled on a different node".)
+    pub fn can_retry(&self) -> bool {
+        self.attempts <= self.max_retries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::params::ParamValue;
+    use crate::workflow::recipe::WorkSpec;
+
+    fn spec() -> ExperimentSpec {
+        ExperimentSpec {
+            name: "train".into(),
+            image: "img".into(),
+            instance: "p3.2xlarge".into(),
+            workers: 2,
+            spot: true,
+            command: "run --lr {lr}".into(),
+            samples: None,
+            params: Default::default(),
+            depends_on: vec![],
+            max_retries: 2,
+            work: WorkSpec { flops_per_task: Some(1e12), duration_s: None, input_bytes: None },
+        }
+    }
+
+    #[test]
+    fn materialize_renders_command() {
+        let mut a = Assignment::new();
+        a.insert("lr".into(), ParamValue::Float(0.1));
+        let t = Task::materialize(3, 7, &spec(), a.clone());
+        assert_eq!(t.command, "run --lr 0.1");
+        assert_eq!(t.id, TaskId { experiment: 3, index: 7 });
+        assert_eq!(t.assignment, a);
+        assert_eq!(t.flops, Some(1e12));
+        assert_eq!(t.state, TaskState::Pending);
+    }
+
+    #[test]
+    fn retry_budget() {
+        let mut t = Task::materialize(0, 0, &spec(), Assignment::new());
+        assert!(t.can_retry());
+        t.attempts = 3; // max_retries = 2 -> 3rd attempt exhausted
+        assert!(!t.can_retry());
+    }
+
+    #[test]
+    fn task_id_display() {
+        assert_eq!(TaskId { experiment: 1, index: 42 }.to_string(), "e1t42");
+    }
+}

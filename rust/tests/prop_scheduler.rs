@@ -1,0 +1,226 @@
+//! Property tests on the scheduler state machine and HFS invariants
+//! (via the crate's own `util::prop` harness — this image has no
+//! proptest).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use hyper_dist::hfs::{HyperFs, Uploader};
+use hyper_dist::scheduler::SchedulerState;
+use hyper_dist::sim::SimRng;
+use hyper_dist::storage::{MemStore, StoreHandle};
+use hyper_dist::util::prop::run_prop;
+use hyper_dist::workflow::{sample_assignments, ExperimentSpec, ParamSpec, Task, WorkSpec};
+
+fn mk_tasks(n: u32, max_retries: u32) -> Vec<Task> {
+    let spec = ExperimentSpec {
+        name: "e".into(),
+        image: "i".into(),
+        instance: "m5.xlarge".into(),
+        workers: 1,
+        spot: false,
+        command: "c".into(),
+        samples: None,
+        params: Default::default(),
+        depends_on: vec![],
+        max_retries,
+        work: WorkSpec::default(),
+    };
+    (0..n).map(|i| Task::materialize(0, i, &spec, Default::default())).collect()
+}
+
+/// A random trace of scheduler events; invariants must hold throughout
+/// and every task must reach a terminal state by the time we drain.
+#[test]
+fn prop_scheduler_invariants_under_random_traces() {
+    run_prop(
+        "scheduler invariants",
+        150,
+        |rng: &mut SimRng| {
+            let n_tasks = 1 + rng.gen_range(40) as u32;
+            let retries = rng.gen_range(4) as u32;
+            let ops: Vec<u64> = (0..200).map(|_| rng.next_u64()).collect();
+            (n_tasks, retries, ops)
+        },
+        |(n_tasks, retries, ops)| {
+            let mut s = SchedulerState::new();
+            s.enqueue(mk_tasks(n_tasks, retries));
+            let mut next_node: u32 = 0;
+            let mut live_nodes: Vec<u32> = Vec::new();
+            let mut running: Vec<(hyper_dist::workflow::TaskId, u32)> = Vec::new();
+            for op in ops {
+                match op % 5 {
+                    0 => {
+                        // add a node
+                        s.add_node(next_node, 1 + (op % 3) as u32);
+                        live_nodes.push(next_node);
+                        next_node += 1;
+                    }
+                    1 => {
+                        // kill a random node
+                        if !live_nodes.is_empty() {
+                            let idx = (op / 7) as usize % live_nodes.len();
+                            let victim = live_nodes.swap_remove(idx);
+                            s.remove_node(victim);
+                            running.retain(|(_, n)| *n != victim);
+                        }
+                    }
+                    2 => {
+                        // a running task succeeds
+                        if !running.is_empty() {
+                            let idx = (op / 11) as usize % running.len();
+                            let (tid, _) = running.swap_remove(idx);
+                            s.on_task_success(tid);
+                        }
+                    }
+                    3 => {
+                        // a running task errors
+                        if !running.is_empty() {
+                            let idx = (op / 13) as usize % running.len();
+                            let (tid, _) = running.swap_remove(idx);
+                            s.on_task_error(tid);
+                        }
+                    }
+                    _ => {
+                        running.extend(s.assign());
+                    }
+                }
+                s.check_invariants();
+            }
+            // drain: finish everything that can still run
+            loop {
+                for (tid, _) in std::mem::take(&mut running) {
+                    s.on_task_success(tid);
+                }
+                if s.pending() > 0 && s.node_count() == 0 {
+                    s.add_node(next_node, 4);
+                    next_node += 1;
+                }
+                let assigned = s.assign();
+                if assigned.is_empty() && s.running() == 0 {
+                    break;
+                }
+                running.extend(assigned);
+            }
+            s.check_invariants();
+            assert!(s.is_idle());
+            assert_eq!(
+                s.succeeded.len() + s.failed.len(),
+                n_tasks as usize,
+                "every task reaches a terminal state"
+            );
+        },
+    );
+}
+
+/// Uploader/HyperFs roundtrip: any file set survives chunking bit-exact,
+/// under any chunk size and cache budget.
+#[test]
+fn prop_hfs_roundtrip_any_sizes() {
+    run_prop(
+        "hfs roundtrip",
+        60,
+        |rng: &mut SimRng| {
+            let chunk_size = 1 + rng.gen_range(4096);
+            let cache = 1 + rng.gen_range(1 << 16);
+            let n = 1 + rng.gen_range(40) as usize;
+            let files: Vec<(String, Vec<u8>)> = (0..n)
+                .map(|i| {
+                    let len = rng.gen_range(3000) as usize;
+                    let seed = rng.next_u64();
+                    let data: Vec<u8> =
+                        (0..len).map(|j| ((seed >> (j % 8)) as u8).wrapping_add(j as u8)).collect();
+                    (format!("f/{i:04}"), data)
+                })
+                .collect();
+            (chunk_size, cache, files)
+        },
+        |(chunk_size, cache, files)| {
+            let store: StoreHandle = Arc::new(MemStore::new());
+            let mut up = Uploader::new(store.clone(), "p", chunk_size);
+            for (path, data) in &files {
+                up.add_file(path, data).unwrap();
+            }
+            let manifest = up.seal().unwrap();
+            assert_eq!(manifest.file_count(), files.len());
+            assert_eq!(
+                manifest.total_bytes(),
+                files.iter().map(|(_, d)| d.len() as u64).sum::<u64>()
+            );
+            let fs = HyperFs::mount(store, "p", cache).unwrap();
+            for (path, data) in &files {
+                assert_eq!(&fs.read_file(path).unwrap(), data, "{path}");
+            }
+        },
+    );
+}
+
+/// §II.C sampling: for any parameter space, minimal repetition holds —
+/// discrete combo counts never differ by more than 1.
+#[test]
+fn prop_sampling_minimal_repetition() {
+    run_prop(
+        "minimal repetition",
+        80,
+        |rng: &mut SimRng| {
+            let n_params = 1 + rng.gen_range(3) as usize;
+            let card = 1 + rng.gen_range(5);
+            let n = 1 + rng.gen_range(200) as usize;
+            (n_params, card as i64, n, rng.next_u64())
+        },
+        |(n_params, card, n, seed)| {
+            let space: BTreeMap<String, ParamSpec> = (0..n_params)
+                .map(|i| (format!("p{i}"), ParamSpec::Range([0, card - 1])))
+                .collect();
+            let out = sample_assignments(&space, Some(n), seed);
+            assert_eq!(out.len(), n);
+            let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+            for a in &out {
+                *counts.entry(format!("{a:?}")).or_default() += 1;
+            }
+            let min = counts.values().min().copied().unwrap_or(0);
+            let max = counts.values().max().copied().unwrap_or(0);
+            let cart = (card as usize).pow(n_params as u32);
+            if counts.len() == cart {
+                assert!(max - min <= 1, "minimal repetition violated: {min}..{max}");
+            } else {
+                // n < cartesian: sampled without replacement
+                assert!(n <= cart && max == 1, "no repeats allowed while n <= |C|");
+            }
+        },
+    );
+}
+
+/// JSON roundtrip fuzz through the crate's own parser.
+#[test]
+fn prop_json_roundtrip() {
+    use hyper_dist::util::Json;
+    fn gen_value(rng: &mut SimRng, depth: u32) -> Json {
+        match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_bool(0.5)),
+            2 => Json::Num((rng.gen_range(2_000_001) as f64 - 1e6) / 8.0),
+            3 => Json::Str(
+                (0..rng.gen_range(12))
+                    .map(|_| ['a', '"', '\\', 'é', '\n', 'z'][rng.gen_range(6) as usize])
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.gen_range(5)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.gen_range(5))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    run_prop(
+        "json roundtrip",
+        200,
+        |rng: &mut SimRng| gen_value(rng, 3),
+        |v| {
+            let text = v.to_string();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(v, back, "roundtrip through {text}");
+        },
+    );
+}
