@@ -11,20 +11,35 @@
 //! files through a mounted [`HyperFs`] ahead of the consumer, batches
 //! flow through a bounded channel (backpressure), and the consumer (the
 //! PJRT train loop) blocks only when the pipeline truly falls behind.
+//!
+//! Batches carry zero-copy [`ByteView`]s: a batch whose files sit in a
+//! cached chunk costs one `Arc` clone per file, not one memcpy per file,
+//! and many concurrent loader workers hit different cache shards instead
+//! of serializing on a single cache mutex. A view pins its whole chunk
+//! in memory, so in-flight memory is bounded by the prefetch window
+//! (`prefetch + workers` batches); consumers that stash samples past the
+//! current step should `.to_vec()` them instead of keeping views alive.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 
-use crate::hfs::HyperFs;
+use crate::hfs::{ByteView, HyperFs};
 use crate::Result;
 
-/// One loaded batch: the concatenated payloads of `batch_size` files.
+/// One loaded batch: zero-copy views of `batch_size` sample files.
 #[derive(Debug, Clone)]
 pub struct Batch {
     pub index: usize,
-    pub files: Vec<Vec<u8>>,
+    pub files: Vec<ByteView>,
+}
+
+impl Batch {
+    /// Total payload bytes across the batch.
+    pub fn bytes(&self) -> usize {
+        self.files.iter().map(|f| f.len()).sum()
+    }
 }
 
 /// Async prefetching loader over a mounted HFS namespace.
@@ -149,6 +164,21 @@ mod tests {
             seen += 1;
         }
         assert_eq!(seen, 8);
+    }
+
+    #[test]
+    fn batches_are_zero_copy_views() {
+        // files within one chunk share the chunk allocation — no memcpy
+        let (fs, paths) = mounted(16, 128); // 1<<16 chunk: all 16 files fit in one chunk
+        let loader = DataLoader::start(fs, paths, 16, 1, 1);
+        let b = loader.next_batch().unwrap().unwrap();
+        assert_eq!(b.bytes(), 16 * 128);
+        for w in b.files.windows(2) {
+            assert!(
+                Arc::ptr_eq(w[0].chunk(), w[1].chunk()),
+                "same-chunk files must share one allocation"
+            );
+        }
     }
 
     #[test]

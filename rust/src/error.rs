@@ -1,51 +1,61 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`; this image has no
+//! thiserror).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for all hyper-dist subsystems.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("object not found: {0}")]
     NotFound(String),
-
-    #[error("file not found in HFS namespace: {0}")]
     FileNotFound(String),
-
-    #[error("storage error: {0}")]
     Storage(String),
-
-    #[error("recipe error: {0}")]
     Recipe(String),
-
-    #[error("workflow error: {0}")]
     Workflow(String),
-
-    #[error("scheduler error: {0}")]
     Scheduler(String),
-
-    #[error("cloud error: {0}")]
     Cloud(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("checkpoint error: {0}")]
     Checkpoint(String),
-
-    #[error("kv store error: {0}")]
     Kv(String),
-
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("yaml: {0}")]
+    Io(std::io::Error),
     Yaml(String),
-
-    #[error("json: {0}")]
     Json(String),
-
-    #[error("xla: {0}")]
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::NotFound(s) => write!(f, "object not found: {s}"),
+            Error::FileNotFound(s) => write!(f, "file not found in HFS namespace: {s}"),
+            Error::Storage(s) => write!(f, "storage error: {s}"),
+            Error::Recipe(s) => write!(f, "recipe error: {s}"),
+            Error::Workflow(s) => write!(f, "workflow error: {s}"),
+            Error::Scheduler(s) => write!(f, "scheduler error: {s}"),
+            Error::Cloud(s) => write!(f, "cloud error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::Checkpoint(s) => write!(f, "checkpoint error: {s}"),
+            Error::Kv(s) => write!(f, "kv store error: {s}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Yaml(s) => write!(f, "yaml: {s}"),
+            Error::Json(s) => write!(f, "json: {s}"),
+            Error::Xla(s) => write!(f, "xla: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

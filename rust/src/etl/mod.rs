@@ -29,6 +29,10 @@ pub struct EtlReport {
 /// Pipeline per file (mirrors the paper's spaCy script): split paragraphs
 /// -> filter short/garbage paragraphs -> tokenize -> emit one record per
 /// paragraph with whitespace-normalized tokens.
+///
+/// Inputs are consumed as zero-copy [`crate::hfs::ByteView`]s straight
+/// out of the chunk cache; the only copies on the hot path are the ones
+/// the records themselves require.
 pub fn preprocess_shard(fs: &HyperFs, prefix: &str, min_tokens: usize) -> Result<(Vec<u8>, EtlReport)> {
     let mut report = EtlReport::default();
     let mut writer = RecordWriter::new();

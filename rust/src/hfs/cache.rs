@@ -1,89 +1,227 @@
-//! Node-local LRU chunk cache with a byte budget.
+//! Node-local chunk cache: sharded LRU with per-shard byte budgets.
 //!
 //! Every node mounting HFS holds recently-used chunks in RAM (the paper's
-//! "caching … mechanisms across all nodes"); the budget models instance
-//! memory, and eviction is strict LRU.
+//! "caching … mechanisms across all nodes"). The seed kept one global
+//! mutex around a `HashMap` and found eviction victims with an O(n) scan;
+//! under many concurrent readers every cache hit serialized on that lock.
+//! This version shards by chunk id so readers of different chunks take
+//! different locks, and each shard keeps an intrusive doubly-linked
+//! recency list over a slab, making get / insert / evict all O(1).
+//!
+//! The total byte budget models instance memory and is split evenly
+//! across shards; small budgets collapse to a single shard so strict LRU
+//! semantics (and the seed's tests) hold exactly when the cache is tiny.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use std::sync::Mutex;
 
-/// Thread-safe LRU of chunk id -> bytes.
+use crate::metrics::Counter;
+
+use super::view::ChunkData;
+
+/// Shards stop multiplying once each would hold less than this budget.
+const MIN_SHARD_BYTES: u64 = 1 << 20;
+
+/// Hard ceiling on shard count.
+const MAX_SHARDS: usize = 16;
+
+/// Sentinel slab index for "no slot".
+const NIL: usize = usize::MAX;
+
+/// Thread-safe sharded LRU of chunk id -> bytes.
 #[derive(Clone)]
 pub struct ChunkCache {
-    inner: Arc<Mutex<CacheInner>>,
+    shards: Arc<Vec<Mutex<Shard>>>,
+    /// Total evictions across all shards (contention-free counter).
+    evictions: Counter,
 }
 
-struct CacheInner {
+struct Slot {
+    id: u32,
+    data: ChunkData,
+    prev: usize,
+    next: usize,
+}
+
+struct Shard {
     capacity_bytes: u64,
     used_bytes: u64,
-    tick: u64,
-    entries: HashMap<u32, Entry>,
+    map: HashMap<u32, usize>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    /// Most-recently-used slot, or NIL.
+    head: usize,
+    /// Least-recently-used slot (eviction victim), or NIL.
+    tail: usize,
 }
 
-struct Entry {
-    data: Arc<Vec<u8>>,
-    last_used: u64,
+impl Shard {
+    fn new(capacity_bytes: u64) -> Self {
+        Self {
+            capacity_bytes,
+            used_bytes: 0,
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    /// Unlink `slot` from the recency list (O(1)).
+    fn detach(&mut self, slot: usize) {
+        let (prev, next) = (self.slots[slot].prev, self.slots[slot].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.slots[slot].prev = NIL;
+        self.slots[slot].next = NIL;
+    }
+
+    /// Link `slot` at the MRU head (O(1)).
+    fn push_front(&mut self, slot: usize) {
+        self.slots[slot].prev = NIL;
+        self.slots[slot].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = slot;
+        }
+        self.head = slot;
+        if self.tail == NIL {
+            self.tail = slot;
+        }
+    }
+
+    /// Remove the entry in `slot` entirely, returning its byte size.
+    fn remove_slot(&mut self, slot: usize) -> u64 {
+        self.detach(slot);
+        let size = self.slots[slot].data.len() as u64;
+        let id = self.slots[slot].id;
+        self.map.remove(&id);
+        self.used_bytes -= size;
+        // drop the payload now; the slab slot is recycled
+        self.slots[slot].data = Arc::new(Vec::new());
+        self.free.push(slot);
+        size
+    }
+
+    fn alloc_slot(&mut self, id: u32, data: ChunkData) -> usize {
+        match self.free.pop() {
+            Some(slot) => {
+                self.slots[slot] = Slot { id, data, prev: NIL, next: NIL };
+                slot
+            }
+            None => {
+                self.slots.push(Slot { id, data, prev: NIL, next: NIL });
+                self.slots.len() - 1
+            }
+        }
+    }
 }
 
 impl ChunkCache {
+    /// Cache with `capacity_bytes` total budget and an automatic shard
+    /// count: one shard per [`MIN_SHARD_BYTES`] of budget, capped at
+    /// [`MAX_SHARDS`]. Tiny budgets get exactly one shard (strict LRU).
+    ///
+    /// Callers that know their chunk size should prefer
+    /// [`ChunkCache::with_chunk_hint`]: over-sharding a small budget
+    /// would make large chunks uncacheable (each shard only admits
+    /// chunks within its own slice of the budget).
     pub fn new(capacity_bytes: u64) -> Self {
+        let shards = ((capacity_bytes / MIN_SHARD_BYTES) as usize).clamp(1, MAX_SHARDS);
+        Self::with_shards(capacity_bytes, shards)
+    }
+
+    /// Cache sized so that every shard can hold at least a few chunks of
+    /// `max_chunk_bytes`: shards = budget / (4 * chunk), capped at
+    /// [`MAX_SHARDS`], minimum 1. With fewer than 4 chunks of budget the
+    /// cache collapses to a single shard, reproducing the seed's strict
+    /// LRU (a chunk is cacheable iff it fits the whole budget).
+    pub fn with_chunk_hint(capacity_bytes: u64, max_chunk_bytes: u64) -> Self {
+        let per_shard_floor = 4 * max_chunk_bytes.max(1);
+        let shards = ((capacity_bytes / per_shard_floor) as usize).clamp(1, MAX_SHARDS);
+        Self::with_shards(capacity_bytes, shards)
+    }
+
+    /// Cache with an explicit shard count (`n_shards >= 1`). The byte
+    /// budget is split evenly; chunks larger than one shard's budget are
+    /// served but not cached.
+    pub fn with_shards(capacity_bytes: u64, n_shards: usize) -> Self {
+        let n = n_shards.max(1);
+        let per_shard = capacity_bytes / n as u64;
         Self {
-            inner: Arc::new(Mutex::new(CacheInner {
-                capacity_bytes,
-                used_bytes: 0,
-                tick: 0,
-                entries: HashMap::new(),
-            })),
+            shards: Arc::new((0..n).map(|_| Mutex::new(Shard::new(per_shard))).collect()),
+            evictions: Counter::default(),
         }
     }
 
-    /// Look up a chunk, refreshing its recency.
-    pub fn get(&self, id: u32) -> Option<Arc<Vec<u8>>> {
-        let mut c = self.inner.lock().unwrap();
-        c.tick += 1;
-        let tick = c.tick;
-        c.entries.get_mut(&id).map(|e| {
-            e.last_used = tick;
-            e.data.clone()
-        })
+    fn shard(&self, id: u32) -> &Mutex<Shard> {
+        &self.shards[id as usize % self.shards.len()]
     }
 
-    /// Insert a chunk, evicting LRU entries to fit. Oversized chunks
-    /// (bigger than the whole budget) are not cached.
-    pub fn insert(&self, id: u32, data: Arc<Vec<u8>>) {
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total evictions since creation.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.get()
+    }
+
+    /// Look up a chunk, refreshing its recency. O(1).
+    pub fn get(&self, id: u32) -> Option<ChunkData> {
+        let mut s = self.shard(id).lock().unwrap();
+        let slot = *s.map.get(&id)?;
+        s.detach(slot);
+        s.push_front(slot);
+        Some(s.slots[slot].data.clone())
+    }
+
+    /// Insert a chunk, evicting LRU entries of its shard to fit. O(1) per
+    /// evicted entry. Chunks bigger than the shard budget are not cached.
+    pub fn insert(&self, id: u32, data: ChunkData) {
         let size = data.len() as u64;
-        let mut c = self.inner.lock().unwrap();
-        if size > c.capacity_bytes {
+        let mut s = self.shard(id).lock().unwrap();
+        if size > s.capacity_bytes {
             return;
         }
-        if let Some(old) = c.entries.remove(&id) {
-            c.used_bytes -= old.data.len() as u64;
+        let existing = s.map.get(&id).copied();
+        if let Some(slot) = existing {
+            s.remove_slot(slot);
         }
-        while c.used_bytes + size > c.capacity_bytes {
-            let Some((&victim, _)) = c.entries.iter().min_by_key(|(_, e)| e.last_used) else {
+        while s.used_bytes + size > s.capacity_bytes {
+            let victim = s.tail;
+            if victim == NIL {
                 break;
-            };
-            let e = c.entries.remove(&victim).expect("victim exists");
-            c.used_bytes -= e.data.len() as u64;
+            }
+            s.remove_slot(victim);
+            self.evictions.inc();
         }
-        c.tick += 1;
-        let tick = c.tick;
-        c.used_bytes += size;
-        c.entries.insert(id, Entry { data, last_used: tick });
+        let slot = s.alloc_slot(id, data);
+        s.map.insert(id, slot);
+        s.used_bytes += size;
+        s.push_front(slot);
     }
 
     pub fn contains(&self, id: u32) -> bool {
-        self.inner.lock().unwrap().entries.contains_key(&id)
+        self.shard(id).lock().unwrap().map.contains_key(&id)
     }
 
     pub fn used_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().used_bytes
+        self.shards.iter().map(|s| s.lock().unwrap().used_bytes).sum()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -91,9 +229,15 @@ impl ChunkCache {
     }
 
     pub fn clear(&self) {
-        let mut c = self.inner.lock().unwrap();
-        c.entries.clear();
-        c.used_bytes = 0;
+        for shard in self.shards.iter() {
+            let mut s = shard.lock().unwrap();
+            s.map.clear();
+            s.slots.clear();
+            s.free.clear();
+            s.head = NIL;
+            s.tail = NIL;
+            s.used_bytes = 0;
+        }
     }
 }
 
@@ -101,13 +245,15 @@ impl ChunkCache {
 mod tests {
     use super::*;
 
-    fn chunk(n: usize) -> Arc<Vec<u8>> {
+    fn chunk(n: usize) -> ChunkData {
         Arc::new(vec![0u8; n])
     }
 
+    // ---- strict-LRU semantics on a single shard (seed behavior) --------
+
     #[test]
     fn lru_eviction_order() {
-        let c = ChunkCache::new(300);
+        let c = ChunkCache::with_shards(300, 1);
         c.insert(1, chunk(100));
         c.insert(2, chunk(100));
         c.insert(3, chunk(100));
@@ -116,6 +262,7 @@ mod tests {
         assert!(c.contains(1) && c.contains(3) && c.contains(4));
         assert!(!c.contains(2));
         assert_eq!(c.used_bytes(), 300);
+        assert_eq!(c.evictions(), 1);
     }
 
     #[test]
@@ -127,7 +274,7 @@ mod tests {
 
     #[test]
     fn reinsert_same_id_replaces() {
-        let c = ChunkCache::new(300);
+        let c = ChunkCache::with_shards(300, 1);
         c.insert(1, chunk(100));
         c.insert(1, chunk(50));
         assert_eq!(c.used_bytes(), 50);
@@ -136,20 +283,109 @@ mod tests {
 
     #[test]
     fn multiple_evictions_to_fit() {
-        let c = ChunkCache::new(100);
+        let c = ChunkCache::with_shards(100, 1);
         c.insert(1, chunk(40));
         c.insert(2, chunk(40));
         c.insert(3, chunk(90)); // must evict both
         assert_eq!(c.len(), 1);
         assert!(c.contains(3));
+        assert_eq!(c.evictions(), 2);
     }
 
     #[test]
     fn clear_resets() {
-        let c = ChunkCache::new(100);
+        let c = ChunkCache::with_shards(100, 2);
         c.insert(1, chunk(10));
+        c.insert(2, chunk(10));
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.used_bytes(), 0);
+    }
+
+    // ---- sharding behavior ---------------------------------------------
+
+    #[test]
+    fn tiny_budget_collapses_to_one_shard() {
+        assert_eq!(ChunkCache::new(300).shard_count(), 1);
+        assert_eq!(ChunkCache::new(64 << 20).shard_count(), MAX_SHARDS);
+    }
+
+    #[test]
+    fn chunk_hint_keeps_big_chunks_cacheable() {
+        // 128 MiB budget with 64 MiB chunks: must not over-shard into
+        // slices too small to admit a single chunk
+        let c = ChunkCache::with_chunk_hint(128 << 20, 64 << 20);
+        assert_eq!(c.shard_count(), 1);
+        c.insert(0, chunk(64 << 20));
+        assert!(c.contains(0), "a default-size chunk must be cacheable");
+        // plentiful budget relative to chunk size shards out
+        assert_eq!(ChunkCache::with_chunk_hint(1 << 30, 32 << 20).shard_count(), 8);
+        assert_eq!(ChunkCache::with_chunk_hint(1 << 30, 1 << 20).shard_count(), MAX_SHARDS);
+    }
+
+    #[test]
+    fn shards_isolate_ids() {
+        // 4 shards x 100 bytes; ids 0..4 land in distinct shards, so all
+        // four fit even though each shard only holds one
+        let c = ChunkCache::with_shards(400, 4);
+        for id in 0..4 {
+            c.insert(id, chunk(100));
+        }
+        assert_eq!(c.len(), 4);
+        // id 4 maps to shard 0 and evicts id 0, never ids 1..3
+        c.insert(4, chunk(100));
+        assert!(!c.contains(0));
+        assert!(c.contains(1) && c.contains(2) && c.contains(3) && c.contains(4));
+    }
+
+    #[test]
+    fn slab_recycles_slots() {
+        let c = ChunkCache::with_shards(100, 1);
+        for round in 0..1000u32 {
+            c.insert(round % 7, chunk(60)); // each insert evicts the last
+        }
+        // one live entry, slab did not grow without bound
+        assert_eq!(c.len(), 1);
+        let s = c.shards[0].lock().unwrap();
+        assert!(s.slots.len() <= 2, "slab grew to {}", s.slots.len());
+    }
+
+    #[test]
+    fn long_recency_chain_stays_consistent() {
+        let c = ChunkCache::with_shards(1000, 1);
+        for id in 0..10 {
+            c.insert(id, chunk(100));
+        }
+        // refresh in a scrambled order, then insert to evict exactly the LRU
+        for &id in &[3u32, 1, 4, 1, 5, 9, 2, 6] {
+            c.get(id);
+        }
+        // LRU order now: 0, 7, 8, 3, 4, 1, 5, 9, 2, 6 (0 least recent)
+        c.insert(10, chunk(100));
+        assert!(!c.contains(0));
+        c.insert(11, chunk(100));
+        assert!(!c.contains(7));
+        assert_eq!(c.len(), 10);
+        assert_eq!(c.used_bytes(), 1000);
+    }
+
+    #[test]
+    fn concurrent_hammering_is_consistent() {
+        let c = ChunkCache::with_shards(8 << 20, 8);
+        std::thread::scope(|s| {
+            for t in 0..8u32 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for i in 0..2000u32 {
+                        let id = (t * 31 + i) % 64;
+                        if c.get(id).is_none() {
+                            c.insert(id, chunk(4096));
+                        }
+                    }
+                });
+            }
+        });
+        assert!(c.len() <= 64);
+        assert!(c.used_bytes() <= 8 << 20);
     }
 }

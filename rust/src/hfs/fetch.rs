@@ -1,8 +1,14 @@
 //! Multi-lane chunk fetching — the paper's "multithreading T and
 //! multiprocessing P" knob from Fig 2.
 //!
-//! Two modes share one type:
+//! Three modes share one type:
 //!
+//! * **Worker-pool mode** (`try_submit`): `lanes` long-lived background
+//!   workers drain a bounded job queue. [`super::HyperFs`] routes all
+//!   readahead through this queue instead of spawning one OS thread per
+//!   prefetched chunk (the seed's `std::thread::spawn` per chunk); when
+//!   the queue is full the job is rejected and the caller drops the
+//!   readahead rather than queueing unboundedly.
 //! * **Real mode** (`fetch_many`): a scoped thread pool pulls chunks from
 //!   the backing store concurrently; wallclock is whatever the backend
 //!   costs (disk / memory).
@@ -11,15 +17,27 @@
 //!   completion times and the aggregate makespan. This is the engine
 //!   behind the Fig-2 sweep.
 
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
 use crate::storage::{S3Profile, StoreHandle};
 use crate::Result;
 
-/// Parallel chunk fetcher over `lanes` connections.
+/// A queued unit of background work.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Pending jobs allowed per lane before `try_submit` starts rejecting.
+const QUEUE_DEPTH_PER_LANE: usize = 4;
+
+/// Parallel chunk fetcher over `lanes` connections, with a shared
+/// bounded worker pool for background jobs.
 pub struct FetchPool {
     store: StoreHandle,
     lanes: usize,
+    /// Job queue feeding the background workers; `None` once closed.
+    queue: Option<SyncSender<Job>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 /// One simulated transfer: (chunk index, start, end) in virtual seconds.
@@ -31,8 +49,42 @@ pub struct SimFetch {
 }
 
 impl FetchPool {
+    /// Spawn `lanes` background workers over a bounded job queue.
     pub fn new(store: StoreHandle, lanes: usize) -> Self {
-        Self { store, lanes: lanes.max(1) }
+        let lanes = lanes.max(1);
+        let (tx, rx) = sync_channel::<Job>(lanes * QUEUE_DEPTH_PER_LANE);
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..lanes)
+            .map(|_| {
+                let rx = rx.clone();
+                std::thread::spawn(move || Self::worker_loop(&rx))
+            })
+            .collect();
+        Self { store, lanes, queue: Some(tx), workers: Mutex::new(workers) }
+    }
+
+    fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+        loop {
+            // hold the lock only while dequeuing, never while running a job
+            let job = match rx.lock().unwrap().recv() {
+                Ok(job) => job,
+                Err(_) => return, // queue closed: pool is shutting down
+            };
+            job();
+        }
+    }
+
+    /// Submit a background job. Returns `false` (dropping the job) when
+    /// the queue is full or the pool is shut down — backpressure for
+    /// readahead, which is always safe to skip.
+    pub fn try_submit(&self, job: Job) -> bool {
+        match &self.queue {
+            Some(tx) => match tx.try_send(job) {
+                Ok(()) => true,
+                Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => false,
+            },
+            None => false,
+        }
     }
 
     pub fn lanes(&self) -> usize {
@@ -102,6 +154,16 @@ impl FetchPool {
     }
 }
 
+impl Drop for FetchPool {
+    fn drop(&mut self) {
+        // closing the channel wakes every worker out of recv()
+        self.queue.take();
+        for h in self.workers.get_mut().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +188,52 @@ mod tests {
         let store = Arc::new(MemStore::new());
         let pool = FetchPool::new(store, 4);
         assert!(pool.fetch_many(&["nope".into()]).is_err());
+    }
+
+    #[test]
+    fn worker_pool_runs_submitted_jobs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = FetchPool::new(Arc::new(MemStore::new()), 4);
+        let done = Arc::new(AtomicUsize::new(0));
+        let mut accepted = 0;
+        for _ in 0..8 {
+            let done = done.clone();
+            if pool.try_submit(Box::new(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            })) {
+                accepted += 1;
+            }
+        }
+        // pool drop joins the workers, so every accepted job has run
+        drop(pool);
+        assert_eq!(done.load(Ordering::SeqCst), accepted);
+        assert!(accepted >= 1);
+    }
+
+    #[test]
+    fn full_queue_rejects_instead_of_blocking() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = FetchPool::new(Arc::new(MemStore::new()), 1);
+        let gate = Arc::new(std::sync::Barrier::new(2));
+        let g = gate.clone();
+        // park the single worker so the queue can only drain after we allow it
+        assert!(pool.try_submit(Box::new(move || {
+            g.wait();
+        })));
+        let ran = Arc::new(AtomicUsize::new(0));
+        let mut accepted = 0;
+        for _ in 0..64 {
+            let ran = ran.clone();
+            if pool.try_submit(Box::new(move || {
+                ran.fetch_add(1, Ordering::SeqCst);
+            })) {
+                accepted += 1;
+            }
+        }
+        assert!(accepted < 64, "bounded queue must reject under backlog");
+        gate.wait();
+        drop(pool); // join: all accepted jobs drain
+        assert_eq!(ran.load(Ordering::SeqCst), accepted);
     }
 
     #[test]

@@ -2,9 +2,19 @@
 //!
 //! "Within the program's context, files that are stored in remote chunked
 //! object storage appear to be local files" (§III.A). `read_file` is the
-//! POSIX-read analogue; chunk fetches go through the LRU cache and the
-//! sequential prefetcher keeps the next chunks warm in a background
-//! thread, so a compute-bound loader never waits on the network.
+//! POSIX-read analogue, rebuilt for throughput under many concurrent
+//! readers:
+//!
+//! * **Zero-copy** — reads return a [`ByteView`] into the cached chunk:
+//!   a cache hit does no allocation and no memcpy.
+//! * **Sharded cache** — the LRU is sharded by chunk id with O(1)
+//!   get/insert/evict, so readers of different chunks never contend on
+//!   one mutex.
+//! * **Single-flight** — concurrent misses (and prefetches) of the same
+//!   chunk coalesce into exactly one backend GET.
+//! * **Bounded readahead** — prefetch jobs run on the shared
+//!   [`FetchPool`] worker lanes instead of one spawned thread per chunk,
+//!   and are dropped (not queued unboundedly) when the lanes are saturated.
 
 use std::sync::Arc;
 
@@ -14,7 +24,29 @@ use crate::{Error, Result};
 
 use super::cache::ChunkCache;
 use super::chunk::FsManifest;
+use super::fetch::FetchPool;
 use super::prefetch::{PrefetchPolicy, Prefetcher};
+use super::singleflight::{FetchError, SingleFlight};
+use super::view::{ByteView, ChunkData};
+
+/// Preserve the not-found / storage distinction across the cloneable
+/// single-flight boundary.
+fn to_fetch_error(e: Error) -> FetchError {
+    match e {
+        Error::NotFound(s) => FetchError::NotFound(s),
+        other => FetchError::Storage(other.to_string()),
+    }
+}
+
+fn from_fetch_error(e: FetchError) -> Error {
+    match e {
+        FetchError::NotFound(s) => Error::NotFound(s),
+        FetchError::Storage(s) => Error::Storage(s),
+    }
+}
+
+/// Worker lanes of the per-mount readahead pool.
+const PREFETCH_LANES: usize = 4;
 
 /// Counters exposed for tests / benches / the CLI `status` view.
 #[derive(Debug, Clone, Default)]
@@ -25,6 +57,12 @@ pub struct HyperFsStats {
     pub prefetch_issued: Counter,
     pub prefetch_hits: Counter,
     pub bytes_read: Counter,
+    /// Actual GETs issued to the backing store (per-chunk, post-coalescing).
+    pub backend_gets: Counter,
+    /// Misses that piggybacked on another reader's in-flight GET.
+    pub coalesced_reads: Counter,
+    /// Readahead jobs dropped because the fetch lanes were saturated.
+    pub prefetch_dropped: Counter,
 }
 
 impl HyperFsStats {
@@ -46,9 +84,11 @@ pub struct HyperFs {
     manifest: Arc<FsManifest>,
     cache: ChunkCache,
     prefetcher: Prefetcher,
-    /// Run prefetches on background threads (true in real mode; false in
-    /// virtual-time benches where overlap is accounted analytically).
-    background_prefetch: bool,
+    /// Readahead worker pool; `None` in synchronous mode (virtual-time
+    /// benches where overlap is accounted analytically), so sim-mode
+    /// mounts spawn no threads at all.
+    fetch_pool: Option<Arc<FetchPool>>,
+    inflight: Arc<SingleFlight>,
     pub stats: HyperFsStats,
 }
 
@@ -69,13 +109,25 @@ impl HyperFs {
             .get(&FsManifest::manifest_key(ns))
             .map_err(|_| Error::Storage(format!("namespace {ns:?} has no manifest")))?;
         let manifest = Arc::new(FsManifest::from_json(&manifest_bytes)?);
+        // size shards to the namespace's actual chunks so the largest
+        // chunk always fits one shard's slice of the budget
+        let max_chunk = manifest
+            .chunks
+            .iter()
+            .map(|c| c.len)
+            .max()
+            .unwrap_or(manifest.chunk_size)
+            .max(1);
+        let fetch_pool = background_prefetch
+            .then(|| Arc::new(FetchPool::new(store.clone(), PREFETCH_LANES)));
         Ok(Self {
             store,
             ns: ns.to_string(),
             manifest,
-            cache: ChunkCache::new(cache_bytes),
+            cache: ChunkCache::with_chunk_hint(cache_bytes, max_chunk),
             prefetcher: Prefetcher::new(policy),
-            background_prefetch,
+            fetch_pool,
+            inflight: Arc::new(SingleFlight::new()),
             stats: HyperFsStats::default(),
         })
     }
@@ -89,9 +141,13 @@ impl HyperFs {
     }
 
     /// Read a whole file by path (the POSIX open+read+close analogue).
-    pub fn read_file(&self, path: &str) -> Result<Vec<u8>> {
+    ///
+    /// Returns a zero-copy [`ByteView`] into the cached chunk: on a cache
+    /// hit this is one shard lock and one `Arc` clone — no allocation, no
+    /// memcpy. Call `.to_vec()` on the view if owned bytes are needed.
+    pub fn read_file(&self, path: &str) -> Result<ByteView> {
         let idx = self.manifest.find(path)?;
-        let entry = self.manifest.files[idx].clone();
+        let entry = &self.manifest.files[idx];
         self.stats.reads.inc();
         self.stats.bytes_read.add(entry.len);
 
@@ -103,9 +159,7 @@ impl HyperFs {
         {
             self.issue_prefetch(target);
         }
-        let start = entry.offset as usize;
-        let end = start + entry.len as usize;
-        Ok(chunk[start..end].to_vec())
+        Ok(ByteView::new(chunk, entry.offset as usize, entry.len as usize))
     }
 
     /// File size without fetching data.
@@ -118,37 +172,84 @@ impl HyperFs {
         self.manifest.list(prefix).into_iter().map(|f| f.path.clone()).collect()
     }
 
-    /// Chunk bytes via cache.
-    fn chunk_data(&self, id: u32) -> Result<Arc<Vec<u8>>> {
+    /// Chunk bytes via cache, coalescing concurrent misses of the same
+    /// chunk into exactly one backend GET.
+    fn chunk_data(&self, id: u32) -> Result<ChunkData> {
         if let Some(hit) = self.cache.get(id) {
             self.stats.cache_hits.inc();
             return Ok(hit);
         }
         self.stats.cache_misses.inc();
-        let data = Arc::new(self.store.get(&FsManifest::chunk_key(&self.ns, id))?);
+        let (outcome, leader) = self.inflight.run(id, || self.fetch_into_cache(id));
+        if !leader {
+            self.stats.coalesced_reads.inc();
+        }
+        outcome.map_err(from_fetch_error)
+    }
+
+    /// Leader path of a single-flight fetch: re-check the cache (the
+    /// chunk may have landed between our miss and winning leadership),
+    /// then GET and insert *before* the flight retires, so "no cache
+    /// entry and no flight" always implies "no fetch outstanding".
+    fn fetch_into_cache(&self, id: u32) -> std::result::Result<ChunkData, FetchError> {
+        if let Some(hit) = self.cache.get(id) {
+            // raced with a completed fetch: served without our own GET
+            self.stats.coalesced_reads.inc();
+            return Ok(hit);
+        }
+        self.stats.backend_gets.inc();
+        let data = self
+            .store
+            .get(&FsManifest::chunk_key(&self.ns, id))
+            .map(Arc::new)
+            .map_err(to_fetch_error)?;
         self.cache.insert(id, data.clone());
         Ok(data)
     }
 
     fn issue_prefetch(&self, id: u32) {
         if self.cache.contains(id) {
+            self.prefetcher.complete(id);
             return;
         }
         self.stats.prefetch_issued.inc();
         let store = self.store.clone();
         let cache = self.cache.clone();
+        let inflight = self.inflight.clone();
+        let prefetcher = self.prefetcher.clone();
         let key = FsManifest::chunk_key(&self.ns, id);
         let hits = self.stats.prefetch_hits.clone();
+        let gets = self.stats.backend_gets.clone();
         let work = move || {
-            if let Ok(data) = store.get(&key) {
-                cache.insert(id, Arc::new(data));
-                hits.inc();
+            // skip without waiting if a reader is already fetching it
+            if !cache.contains(id) {
+                let _ = inflight.run_if_absent(id, || {
+                    // re-check under flight ownership: a reader may have
+                    // cached it between our contains() and leading. The
+                    // insert also happens inside the flight, upholding the
+                    // "no cache entry + no flight => no fetch outstanding"
+                    // invariant for prefetched chunks too.
+                    if let Some(hit) = cache.get(id) {
+                        return Ok(hit);
+                    }
+                    gets.inc();
+                    let data = store.get(&key).map(Arc::new).map_err(to_fetch_error)?;
+                    cache.insert(id, data.clone());
+                    hits.inc();
+                    Ok(data)
+                });
             }
+            // queued-or-in-flight marker is now stale either way
+            prefetcher.complete(id);
         };
-        if self.background_prefetch {
-            std::thread::spawn(work);
-        } else {
-            work();
+        match &self.fetch_pool {
+            Some(pool) => {
+                if !pool.try_submit(Box::new(work)) {
+                    self.stats.prefetch_dropped.inc();
+                    self.prefetcher.complete(id);
+                }
+            }
+            None => work(),
         }
     }
 
@@ -156,13 +257,25 @@ impl HyperFs {
     pub fn cache(&self) -> &ChunkCache {
         &self.cache
     }
+
+    /// Chunk fetches currently in flight (misses + readahead).
+    pub fn in_flight(&self) -> i64 {
+        self.inflight.in_flight()
+    }
+
+    /// Drop all cached chunks and forget prefetch state together, so the
+    /// predictor cannot suppress re-prefetch of evicted chunks.
+    pub fn clear_cache(&self) {
+        self.cache.clear();
+        self.prefetcher.reset();
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hfs::Uploader;
-    use crate::storage::MemStore;
+    use crate::storage::{CountingStore, MemStore};
 
     fn setup(n_files: usize, file_size: usize, chunk_size: u64) -> (StoreHandle, Vec<String>) {
         let store: StoreHandle = Arc::new(MemStore::new());
@@ -204,6 +317,7 @@ mod tests {
         }
         assert_eq!(fs.stats.cache_misses.get(), 10); // one per chunk
         assert_eq!(fs.stats.cache_hits.get(), 20);
+        assert_eq!(fs.stats.backend_gets.get(), 10);
     }
 
     #[test]
@@ -249,5 +363,94 @@ mod tests {
         for (i, p) in paths.iter().enumerate() {
             assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
         }
+    }
+
+    #[test]
+    fn cache_hit_reads_share_one_allocation() {
+        let (store, paths) = setup(6, 64, 400);
+        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
+            .unwrap();
+        let a = fs.read_file(&paths[0]).unwrap();
+        let b = fs.read_file(&paths[1]).unwrap(); // same chunk, different file
+        assert!(
+            Arc::ptr_eq(a.chunk(), b.chunk()),
+            "views into one chunk must share the cached allocation"
+        );
+        assert_ne!(&a[..], &b[..]);
+    }
+
+    #[test]
+    fn view_survives_eviction() {
+        // a ByteView handed out must stay valid even after the cache
+        // evicts its chunk (the Arc keeps the payload alive)
+        let (store, paths) = setup(20, 100, 300);
+        let fs = HyperFs::mount_with(store, "ds", 300, PrefetchPolicy { depth: 0 }, false)
+            .unwrap();
+        let first = fs.read_file(&paths[0]).unwrap();
+        for p in &paths {
+            fs.read_file(p).unwrap(); // thrashes the 1-chunk cache
+        }
+        assert_eq!(first, vec![0u8; 100]);
+    }
+
+    #[test]
+    fn clear_cache_resets_prefetch_state_too() {
+        let (store, paths) = setup(30, 100, 300);
+        let fs = HyperFs::mount_with(store, "ds", 10 << 20, PrefetchPolicy { depth: 2 }, false)
+            .unwrap();
+        for p in &paths {
+            fs.read_file(p).unwrap();
+        }
+        fs.clear_cache();
+        assert!(fs.cache().is_empty());
+        // a second epoch re-prefetches instead of being suppressed by
+        // stale pending state
+        let issued_before = fs.stats.prefetch_issued.get();
+        for p in &paths {
+            fs.read_file(p).unwrap();
+        }
+        assert!(
+            fs.stats.prefetch_issued.get() > issued_before,
+            "second epoch must prefetch again: {:?}",
+            fs.stats
+        );
+    }
+
+    #[test]
+    fn concurrent_cold_reads_issue_one_get_per_chunk() {
+        // 32 threads cold-read files that all live in one chunk: the
+        // single-flight table must collapse them into exactly 1 GET
+        let (inner, paths) = setup(8, 100, 8 * 100);
+        let counting = Arc::new(CountingStore::new(inner));
+        let store: StoreHandle = counting.clone();
+        let fs = Arc::new(
+            HyperFs::mount_with(store, "ds", 10 << 20, PrefetchPolicy { depth: 0 }, false)
+                .unwrap(),
+        );
+        let barrier = Arc::new(std::sync::Barrier::new(32));
+        std::thread::scope(|s| {
+            for t in 0..32usize {
+                let fs = fs.clone();
+                let paths = paths.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    barrier.wait();
+                    let p = &paths[t % paths.len()];
+                    let expect = vec![((t % paths.len()) % 251) as u8; 100];
+                    assert_eq!(fs.read_file(p).unwrap(), expect);
+                });
+            }
+        });
+        assert_eq!(
+            counting.gets_for(&FsManifest::chunk_key("ds", 0)),
+            1,
+            "thundering herd must coalesce to one backend GET"
+        );
+        assert_eq!(fs.stats.backend_gets.get(), 1);
+        assert_eq!(
+            fs.stats.cache_misses.get(),
+            fs.stats.backend_gets.get() + fs.stats.coalesced_reads.get(),
+            "every miss either led or coalesced"
+        );
     }
 }

@@ -6,31 +6,63 @@
 //! file to download. In the next query, the file system can check if the
 //! existing chunk contains the next required file before fetching it."
 //!
+//! The paper's performance claim — streaming from remote chunked storage
+//! is "almost the same as if the data was stored locally" — only holds if
+//! the node-local read path adds near-zero overhead on cache hits. The
+//! read path is therefore built around three ideas:
+//!
+//! * **Zero-copy reads.** [`HyperFs::read_file`] returns a [`ByteView`]:
+//!   an `Arc`-backed handle to the cached chunk plus an offset/len range,
+//!   derefing to `&[u8]`. A cache hit performs no allocation and no
+//!   memcpy; consumers that need owned bytes opt into the copy with
+//!   `.to_vec()`. Views stay valid after eviction — the `Arc` keeps the
+//!   chunk alive until the last reader drops it. The flip side: a live
+//!   view pins its *whole chunk* in memory, so consumers that retain
+//!   small samples long-term (beyond the current batch) should copy out
+//!   with `.to_vec()` rather than hold the view.
+//! * **Sharded, O(1) caching.** [`ChunkCache`] shards by chunk id with an
+//!   intrusive recency list per shard, so concurrent readers of different
+//!   chunks never contend on one mutex and eviction never scans the
+//!   table. Tiny budgets collapse to one shard (strict LRU).
+//! * **Single-flight fetching.** [`SingleFlight`] coalesces concurrent
+//!   misses and prefetches of one chunk into exactly one backend GET;
+//!   followers share the leader's allocation. Readahead runs on the
+//!   bounded [`FetchPool`] worker lanes and is dropped under saturation
+//!   instead of queueing without bound.
+//!
 //! Components:
 //!
 //! * [`chunk`] — on-store layout: files packed into fixed-size chunks plus
 //!   a JSON manifest (`FsManifest`).
 //! * [`writer`] — the upload path: chunker that packs files and writes the
 //!   manifest ([`Uploader`]).
-//! * [`cache`] — node-local LRU chunk cache with a byte budget.
+//! * [`view`] — [`ByteView`], the zero-copy chunk window every read returns.
+//! * [`cache`] — [`ChunkCache`], the sharded LRU with a byte budget.
+//! * [`singleflight`] — [`SingleFlight`], the in-flight fetch table.
 //! * [`prefetch`] — sequential-access predictor: readahead of the next
-//!   chunk(s) in manifest order.
+//!   chunk(s) in manifest order, with a pending window that clears on
+//!   access/completion so evicted chunks can be re-prefetched.
 //! * [`fs`] — [`HyperFs`], the POSIX-ish read layer every node mounts.
 //! * [`fetch`] — [`FetchPool`], multi-lane chunk fetching (the paper's
-//!   "multithreading T and multiprocessing P" in Fig 2).
+//!   "multithreading T and multiprocessing P" in Fig 2) plus the shared
+//!   bounded worker pool that serves readahead.
 
 pub mod cache;
 pub mod chunk;
 pub mod fetch;
 pub mod fs;
 pub mod prefetch;
+pub mod singleflight;
+pub mod view;
 pub mod writer;
 
 pub use cache::ChunkCache;
 pub use chunk::{ChunkRef, FileEntry, FsManifest};
 pub use fetch::FetchPool;
 pub use fs::{HyperFs, HyperFsStats};
-pub use prefetch::Prefetcher;
+pub use prefetch::{PrefetchPolicy, Prefetcher};
+pub use singleflight::{FetchError, SingleFlight};
+pub use view::{ByteView, ChunkData};
 pub use writer::Uploader;
 
 /// Default chunk size (64 MB — middle of the paper's 12–100 MB sweet spot).

@@ -4,12 +4,23 @@
 //! read them in approximately that order, so after serving a file from
 //! chunk `c` the next miss is overwhelmingly likely to hit chunk `c+1`.
 //! The [`Prefetcher`] tracks the read cursor and emits readahead
-//! candidates; [`super::HyperFs`] fetches them in the background (real
-//! mode) or accounts them as overlapped transfers (sim mode).
+//! candidates; [`super::HyperFs`] fetches them through the shared
+//! [`super::FetchPool`] (real mode) or accounts them as overlapped
+//! transfers (sim mode).
+//!
+//! The `pending` window holds chunks that are *queued or in flight* —
+//! nothing else. The seed let entries linger after the chunk was read or
+//! evicted, which permanently suppressed legitimate re-prefetch of that
+//! chunk (e.g. on the next epoch after eviction). Entries are therefore
+//! cleared when the chunk is accessed ([`Prefetcher::on_access`]), when
+//! its fetch finishes ([`Prefetcher::complete`]), and wholesale on
+//! [`Prefetcher::reset`] (cache clear).
 
 use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
 
-use std::sync::Mutex;
+/// Upper bound on the pending window; keeps every scan O(1)-bounded.
+const PENDING_WINDOW: usize = 16;
 
 /// Readahead policy: how many chunks ahead of the cursor to keep warm.
 #[derive(Debug, Clone, Copy)]
@@ -25,9 +36,12 @@ impl Default for PrefetchPolicy {
 }
 
 /// Tracks per-namespace access pattern and proposes chunks to warm.
+/// Cheap to clone: clones share state, so background fetch workers can
+/// report completion.
+#[derive(Clone)]
 pub struct Prefetcher {
     policy: PrefetchPolicy,
-    state: Mutex<State>,
+    state: Arc<Mutex<State>>,
 }
 
 #[derive(Default)]
@@ -35,12 +49,17 @@ struct State {
     last_chunk: Option<u32>,
     /// consecutive accesses that moved forward by <= 1 chunk
     sequential_run: u32,
+    /// chunks whose prefetch is queued or in flight
     pending: VecDeque<u32>,
 }
 
 impl Prefetcher {
     pub fn new(policy: PrefetchPolicy) -> Self {
-        Self { policy, state: Mutex::new(State::default()) }
+        Self { policy, state: Arc::new(Mutex::new(State::default())) }
+    }
+
+    pub fn policy(&self) -> PrefetchPolicy {
+        self.policy
     }
 
     /// Record that `chunk` (of `n_chunks` total) was just read; returns the
@@ -57,6 +76,8 @@ impl Prefetcher {
             None => st.sequential_run = 1,
         }
         st.last_chunk = Some(chunk);
+        // the chunk was just served, so any pending marker for it is stale
+        st.pending.retain(|&c| c != chunk);
         if self.policy.depth == 0 || st.sequential_run < 2 {
             return Vec::new();
         }
@@ -65,13 +86,19 @@ impl Prefetcher {
             let target = chunk + ahead;
             if target < n_chunks && !st.pending.contains(&target) {
                 st.pending.push_back(target);
-                if st.pending.len() > 16 {
+                if st.pending.len() > PENDING_WINDOW {
                     st.pending.pop_front();
                 }
                 out.push(target);
             }
         }
         out
+    }
+
+    /// A prefetch of `chunk` finished (or was abandoned): it is no longer
+    /// in flight, so a future eviction may legitimately re-trigger it.
+    pub fn complete(&self, chunk: u32) {
+        self.state.lock().unwrap().pending.retain(|&c| c != chunk);
     }
 
     /// Forget pending state (e.g. after a cache clear).
@@ -123,5 +150,51 @@ mod tests {
         p.on_access(5, 10);
         assert_eq!(p.on_access(5, 10), vec![6], "second touch confirms the run");
         assert!(p.on_access(5, 10).is_empty(), "6 is already pending");
+    }
+
+    #[test]
+    fn access_clears_stale_pending() {
+        // seed bug: once a chunk entered `pending` it stayed there, so a
+        // chunk that was read (or later evicted) could never be
+        // re-prefetched while the window remembered it
+        let p = Prefetcher::new(PrefetchPolicy { depth: 1 });
+        p.on_access(0, 10);
+        assert_eq!(p.on_access(1, 10), vec![2]);
+        // reading chunk 2 clears its pending marker and proposes 3
+        assert_eq!(p.on_access(2, 10), vec![3]);
+        // chunk 3 evicted before being read; after its in-flight fetch is
+        // complete()d, a repeat access may propose it again
+        p.complete(3);
+        assert_eq!(p.on_access(2, 10), vec![3], "re-prefetch after completion");
+    }
+
+    #[test]
+    fn completion_unblocks_re_prefetch() {
+        let p = Prefetcher::new(PrefetchPolicy { depth: 2 });
+        p.on_access(0, 10);
+        assert_eq!(p.on_access(1, 10), vec![2, 3]);
+        assert!(p.on_access(1, 10).is_empty(), "both targets pending");
+        p.complete(2);
+        p.complete(3);
+        assert_eq!(p.on_access(1, 10), vec![2, 3], "fetches done; window clear");
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let p = Prefetcher::new(PrefetchPolicy { depth: 1 });
+        let q = p.clone();
+        p.on_access(0, 10);
+        assert_eq!(q.on_access(1, 10), vec![2]);
+        q.complete(2);
+        assert_eq!(p.on_access(1, 10), vec![2]);
+    }
+
+    #[test]
+    fn reset_forgets_everything() {
+        let p = Prefetcher::new(PrefetchPolicy { depth: 2 });
+        p.on_access(0, 10);
+        p.on_access(1, 10);
+        p.reset();
+        assert!(p.on_access(5, 10).is_empty(), "run restarts after reset");
     }
 }

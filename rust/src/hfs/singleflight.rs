@@ -1,0 +1,276 @@
+//! Single-flight coalescing for chunk fetches.
+//!
+//! Under many concurrent readers, a cold chunk used to trigger one backend
+//! GET *per reader* (and the prefetcher could pile on more) — the classic
+//! thundering herd. [`SingleFlight`] keeps an in-flight table keyed by
+//! chunk id: the first caller becomes the **leader** and performs the
+//! fetch; every concurrent caller for the same chunk becomes a
+//! **follower** and blocks on a condvar until the leader publishes the
+//! result. Exactly one backend GET happens per cold chunk.
+//!
+//! Results carry `Arc`'d chunk data, so followers share the leader's
+//! allocation — coalescing is also zero-copy.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::metrics::Gauge;
+
+use super::view::ChunkData;
+
+/// Cloneable fetch error shared across waiters. Keeps the not-found /
+/// storage distinction so `HyperFs` can map back to the crate error
+/// variants callers match on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FetchError {
+    /// The chunk object does not exist in the backing store.
+    NotFound(String),
+    /// Any other backend failure, rendered.
+    Storage(String),
+}
+
+impl std::fmt::Display for FetchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FetchError::NotFound(s) | FetchError::Storage(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// Fetch outcome shared between leader and followers.
+pub type FetchOutcome = std::result::Result<ChunkData, FetchError>;
+
+struct Flight {
+    done: Mutex<Option<FetchOutcome>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Self {
+        Self { done: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn publish(&self, outcome: FetchOutcome) {
+        *self.done.lock().unwrap() = Some(outcome);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> FetchOutcome {
+        let mut done = self.done.lock().unwrap();
+        while done.is_none() {
+            done = self.cv.wait(done).unwrap();
+        }
+        done.clone().expect("published")
+    }
+}
+
+/// In-flight fetch table; one per mounted [`super::HyperFs`].
+#[derive(Default)]
+pub struct SingleFlight {
+    inflight: Mutex<HashMap<u32, Arc<Flight>>>,
+    /// Number of fetches currently in flight (exposed for status views).
+    gauge: Gauge,
+}
+
+impl SingleFlight {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Chunks currently being fetched.
+    pub fn in_flight(&self) -> i64 {
+        self.gauge.get()
+    }
+
+    /// Run `fetch` for `id`, coalescing with any concurrent call for the
+    /// same id. Returns the (possibly shared) outcome and whether this
+    /// caller was the leader that actually executed `fetch`.
+    ///
+    /// The leader's `fetch` runs to completion (including any cache
+    /// insertion done inside it) *before* the flight is retired, so a
+    /// caller that finds neither cache entry nor flight is guaranteed the
+    /// previous fetch fully finished.
+    pub fn run<F: FnOnce() -> FetchOutcome>(&self, id: u32, fetch: F) -> (FetchOutcome, bool) {
+        let (flight, leader) = self.join_or_lead(id);
+        if leader {
+            (self.lead(id, &flight, fetch), true)
+        } else {
+            (flight.wait(), false)
+        }
+    }
+
+    /// Like [`SingleFlight::run`], but if another fetch of `id` is already
+    /// in flight, returns `None` immediately instead of waiting — the
+    /// non-blocking flavor prefetch workers use.
+    pub fn run_if_absent<F: FnOnce() -> FetchOutcome>(
+        &self,
+        id: u32,
+        fetch: F,
+    ) -> Option<FetchOutcome> {
+        let (flight, leader) = self.join_or_lead(id);
+        if leader {
+            Some(self.lead(id, &flight, fetch))
+        } else {
+            None
+        }
+    }
+
+    fn join_or_lead(&self, id: u32) -> (Arc<Flight>, bool) {
+        let mut m = self.inflight.lock().unwrap();
+        match m.get(&id) {
+            Some(f) => (f.clone(), false),
+            None => {
+                let f = Arc::new(Flight::new());
+                m.insert(id, f.clone());
+                self.gauge.inc();
+                (f, true)
+            }
+        }
+    }
+
+    fn lead<F: FnOnce() -> FetchOutcome>(
+        &self,
+        id: u32,
+        flight: &Arc<Flight>,
+        fetch: F,
+    ) -> FetchOutcome {
+        // Retire the flight even if `fetch` panics: followers must never
+        // block forever on a wedged flight, and the id must stay
+        // fetchable. The guard publishes an error on unwind and always
+        // removes the map entry.
+        struct Retire<'a> {
+            sf: &'a SingleFlight,
+            id: u32,
+            flight: &'a Arc<Flight>,
+            published: bool,
+        }
+        impl Drop for Retire<'_> {
+            fn drop(&mut self) {
+                if !self.published {
+                    self.flight
+                        .publish(Err(FetchError::Storage("chunk fetch panicked".into())));
+                }
+                let mut m = match self.sf.inflight.lock() {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                m.remove(&self.id);
+                self.sf.gauge.dec();
+            }
+        }
+        let mut retire = Retire { sf: self, id, flight, published: false };
+        let outcome = fetch();
+        flight.publish(outcome.clone());
+        retire.published = true;
+        drop(retire);
+        outcome
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use super::*;
+
+    #[test]
+    fn single_caller_leads() {
+        let sf = SingleFlight::new();
+        let (out, leader) = sf.run(1, || Ok(Arc::new(vec![1, 2, 3])));
+        assert!(leader);
+        assert_eq!(*out.unwrap(), vec![1, 2, 3]);
+        assert_eq!(sf.in_flight(), 0);
+    }
+
+    #[test]
+    fn errors_propagate_to_followers() {
+        let sf = SingleFlight::new();
+        let (out, _) = sf.run(2, || Err(FetchError::Storage("backend down".into())));
+        assert_eq!(out.unwrap_err(), FetchError::Storage("backend down".into()));
+        // flight retired: next call leads again
+        let (out, leader) = sf.run(2, || Ok(Arc::new(vec![9])));
+        assert!(leader && out.is_ok());
+    }
+
+    #[test]
+    fn panicking_leader_retires_the_flight() {
+        let sf = SingleFlight::new();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sf.run(9, || panic!("backend exploded"));
+        }));
+        assert!(caught.is_err());
+        assert_eq!(sf.in_flight(), 0, "panicked flight must be retired");
+        // the id is fetchable again, not wedged forever
+        let (out, leader) = sf.run(9, || Ok(Arc::new(vec![1])));
+        assert!(leader);
+        assert_eq!(*out.unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn concurrent_callers_coalesce_to_one_fetch() {
+        let sf = Arc::new(SingleFlight::new());
+        let fetches = Arc::new(AtomicU64::new(0));
+        let barrier = Arc::new(std::sync::Barrier::new(32));
+        std::thread::scope(|s| {
+            for _ in 0..32 {
+                let sf = sf.clone();
+                let fetches = fetches.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    barrier.wait();
+                    let (out, _) = sf.run(7, || {
+                        fetches.fetch_add(1, Ordering::SeqCst);
+                        // widen the race window so followers really pile up
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        Ok(Arc::new(vec![7u8; 8]))
+                    });
+                    assert_eq!(*out.unwrap(), vec![7u8; 8]);
+                });
+            }
+        });
+        assert_eq!(fetches.load(Ordering::SeqCst), 1, "exactly one leader fetch");
+        assert_eq!(sf.in_flight(), 0);
+    }
+
+    #[test]
+    fn run_if_absent_skips_while_in_flight() {
+        let sf = Arc::new(SingleFlight::new());
+        let entered = Arc::new(std::sync::Barrier::new(2));
+        let release = Arc::new(std::sync::Barrier::new(2));
+        std::thread::scope(|s| {
+            let sf2 = sf.clone();
+            let entered2 = entered.clone();
+            let release2 = release.clone();
+            s.spawn(move || {
+                sf2.run(3, || {
+                    entered2.wait(); // leader is now mid-fetch
+                    release2.wait();
+                    Ok(Arc::new(vec![3]))
+                })
+                .0
+                .unwrap();
+            });
+            entered.wait();
+            assert_eq!(sf.in_flight(), 1);
+            assert!(sf.run_if_absent(3, || Ok(Arc::new(vec![0]))).is_none());
+            release.wait();
+        });
+        // retired: absent now leads
+        assert!(sf.run_if_absent(3, || Ok(Arc::new(vec![1]))).is_some());
+    }
+
+    #[test]
+    fn distinct_ids_do_not_coalesce() {
+        let sf = SingleFlight::new();
+        let fetches = AtomicU64::new(0);
+        for id in 0..4 {
+            sf.run(id, || {
+                fetches.fetch_add(1, Ordering::SeqCst);
+                Ok(Arc::new(vec![id as u8]))
+            })
+            .0
+            .unwrap();
+        }
+        assert_eq!(fetches.load(Ordering::SeqCst), 4);
+    }
+}

@@ -1,0 +1,176 @@
+//! [`ByteView`]: a zero-copy window into a cached chunk.
+//!
+//! The seed read path returned `Vec<u8>`, paying one full memcpy per file
+//! read even on a cache hit. A `ByteView` instead keeps the whole chunk
+//! alive via its `Arc` and exposes the file's `[offset, offset+len)` range
+//! through `Deref<Target = [u8]>`, so a cache-hit `read_file` is one shard
+//! lock, one `Arc` clone and two integer stores — no allocation, no copy.
+//!
+//! Consumers that really need owned bytes call `to_vec()` (a slice method,
+//! available through deref) and pay the copy explicitly.
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// Shared chunk payload. Chunks come out of the backend as `Vec<u8>` and
+/// are never mutated afterwards, so one allocation serves every reader.
+pub type ChunkData = Arc<Vec<u8>>;
+
+/// A cheap, clonable, read-only view of a byte range inside a chunk.
+#[derive(Clone)]
+pub struct ByteView {
+    chunk: ChunkData,
+    offset: usize,
+    len: usize,
+}
+
+impl ByteView {
+    /// View `[offset, offset + len)` of `chunk`.
+    ///
+    /// # Panics
+    /// If the range is out of bounds — manifests are validated at upload
+    /// time, so a bad range here is a logic error, not an I/O error.
+    pub fn new(chunk: ChunkData, offset: usize, len: usize) -> Self {
+        assert!(
+            offset + len <= chunk.len(),
+            "view [{offset}, {offset}+{len}) out of bounds of {}-byte chunk",
+            chunk.len()
+        );
+        Self { chunk, offset, len }
+    }
+
+    /// View of an entire chunk.
+    pub fn full(chunk: ChunkData) -> Self {
+        let len = chunk.len();
+        Self { chunk, offset: 0, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.chunk[self.offset..self.offset + self.len]
+    }
+
+    /// Sub-view relative to this view (still zero-copy, same chunk).
+    pub fn slice(&self, start: usize, end: usize) -> ByteView {
+        assert!(start <= end && end <= self.len, "slice [{start}, {end}) out of view");
+        ByteView { chunk: self.chunk.clone(), offset: self.offset + start, len: end - start }
+    }
+
+    /// The backing chunk handle (tests use this to prove reads share one
+    /// allocation via `Arc::ptr_eq`).
+    pub fn chunk(&self) -> &ChunkData {
+        &self.chunk
+    }
+
+    /// Explicit copy-out for consumers that need owned bytes.
+    pub fn into_vec(self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl Deref for ByteView {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for ByteView {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for ByteView {
+    fn from(v: Vec<u8>) -> Self {
+        Self::full(Arc::new(v))
+    }
+}
+
+impl fmt::Debug for ByteView {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ByteView {{ offset: {}, len: {} }}", self.offset, self.len)
+    }
+}
+
+impl PartialEq for ByteView {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for ByteView {}
+
+impl PartialEq<[u8]> for ByteView {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Vec<u8>> for ByteView {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<&[u8]> for ByteView {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_and_deref() {
+        let chunk = Arc::new((0u8..100).collect::<Vec<u8>>());
+        let v = ByteView::new(chunk.clone(), 10, 5);
+        assert_eq!(v.len(), 5);
+        assert_eq!(&v[..], &[10, 11, 12, 13, 14]);
+        assert_eq!(v, vec![10u8, 11, 12, 13, 14]);
+        // deref gives slice methods for free
+        assert_eq!(v.first(), Some(&10));
+        assert_eq!(v.to_vec(), vec![10, 11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn clone_shares_the_chunk() {
+        let chunk = Arc::new(vec![7u8; 64]);
+        let a = ByteView::new(chunk, 0, 32);
+        let b = a.clone();
+        assert!(Arc::ptr_eq(a.chunk(), b.chunk()));
+        assert_eq!(Arc::strong_count(a.chunk()), 2);
+    }
+
+    #[test]
+    fn sub_slice() {
+        let v = ByteView::from((0u8..32).collect::<Vec<u8>>());
+        let s = v.slice(4, 8);
+        assert_eq!(&s[..], &[4, 5, 6, 7]);
+        assert!(Arc::ptr_eq(v.chunk(), s.chunk()));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_panics() {
+        ByteView::new(Arc::new(vec![0u8; 4]), 2, 4);
+    }
+
+    #[test]
+    fn empty_view() {
+        let v = ByteView::new(Arc::new(Vec::new()), 0, 0);
+        assert!(v.is_empty());
+        assert_eq!(v.into_vec(), Vec::<u8>::new());
+    }
+}

@@ -7,7 +7,7 @@
 //! paper's §IV.B cost claims rest on.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use std::sync::Mutex;
@@ -26,6 +26,33 @@ impl Counter {
     }
 
     pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge for instantaneous levels (in-flight fetches, queue
+/// depths, live connections). Cheap to clone and update from any thread.
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -120,6 +147,7 @@ impl Histogram {
 #[derive(Debug, Clone, Default)]
 pub struct MetricsRegistry {
     counters: Arc<Mutex<BTreeMap<String, Counter>>>,
+    gauges: Arc<Mutex<BTreeMap<String, Gauge>>>,
     histograms: Arc<Mutex<BTreeMap<String, Histogram>>>,
 }
 
@@ -132,6 +160,10 @@ impl MetricsRegistry {
         self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
     pub fn histogram(&self, name: &str) -> Histogram {
         self.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
@@ -141,6 +173,9 @@ impl MetricsRegistry {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{name} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name} {}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -216,6 +251,19 @@ mod tests {
         r.counter("tasks").add(5);
         r.counter("tasks").inc();
         assert_eq!(r.counter("tasks").get(), 6);
+    }
+
+    #[test]
+    fn gauges_go_up_and_down() {
+        let r = MetricsRegistry::new();
+        let g = r.gauge("inflight");
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(r.gauge("inflight").get(), 1);
+        g.set(-3);
+        assert_eq!(g.get(), -3);
+        assert!(r.report().contains("inflight -3"));
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! [`CountingStore`]: a transparent wrapper that counts backend calls.
+//!
+//! Used by tests and benches to make I/O behavior observable — e.g. the
+//! HFS single-flight test proves that 32 concurrent cold readers of one
+//! chunk issue exactly one backend GET.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::Result;
+
+use super::{ObjectStore, StoreHandle};
+
+/// Wraps any [`ObjectStore`], counting `get` / `get_range` / `put` calls
+/// (total and per key) while delegating all behavior to the inner store.
+pub struct CountingStore {
+    inner: StoreHandle,
+    total_gets: AtomicU64,
+    total_puts: AtomicU64,
+    gets_by_key: Mutex<BTreeMap<String, u64>>,
+}
+
+impl CountingStore {
+    pub fn new(inner: StoreHandle) -> Self {
+        Self {
+            inner,
+            total_gets: AtomicU64::new(0),
+            total_puts: AtomicU64::new(0),
+            gets_by_key: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn record_get(&self, key: &str) {
+        self.total_gets.fetch_add(1, Ordering::SeqCst);
+        *self.gets_by_key.lock().unwrap().entry(key.to_string()).or_default() += 1;
+    }
+
+    /// Total whole-object and range GETs issued so far.
+    pub fn total_gets(&self) -> u64 {
+        self.total_gets.load(Ordering::SeqCst)
+    }
+
+    pub fn total_puts(&self) -> u64 {
+        self.total_puts.load(Ordering::SeqCst)
+    }
+
+    /// GETs issued for one exact key.
+    pub fn gets_for(&self, key: &str) -> u64 {
+        self.gets_by_key.lock().unwrap().get(key).copied().unwrap_or(0)
+    }
+
+    /// Per-key GET counts (sorted by key).
+    pub fn gets_by_key(&self) -> BTreeMap<String, u64> {
+        self.gets_by_key.lock().unwrap().clone()
+    }
+
+    pub fn reset(&self) {
+        self.total_gets.store(0, Ordering::SeqCst);
+        self.total_puts.store(0, Ordering::SeqCst);
+        self.gets_by_key.lock().unwrap().clear();
+    }
+}
+
+impl ObjectStore for CountingStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.total_puts.fetch_add(1, Ordering::SeqCst);
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.record_get(key);
+        self.inner.get(key)
+    }
+
+    fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        self.record_get(key);
+        self.inner.get_range(key, offset, len)
+    }
+
+    fn head(&self, key: &str) -> Result<u64> {
+        self.inner.head(key)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        self.inner.list(prefix)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.inner.delete(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::MemStore;
+    use super::*;
+
+    #[test]
+    fn counts_and_delegates() {
+        let s = CountingStore::new(Arc::new(MemStore::new()));
+        s.put("k1", b"abc").unwrap();
+        s.put("k2", b"defg").unwrap();
+        assert_eq!(s.get("k1").unwrap(), b"abc");
+        assert_eq!(s.get("k1").unwrap(), b"abc");
+        assert_eq!(s.get_range("k2", 1, 2).unwrap(), b"ef");
+        assert_eq!(s.total_puts(), 2);
+        assert_eq!(s.total_gets(), 3);
+        assert_eq!(s.gets_for("k1"), 2);
+        assert_eq!(s.gets_for("k2"), 1);
+        assert_eq!(s.gets_for("missing"), 0);
+        // misses still count as attempts and still error
+        assert!(s.get("nope").is_err());
+        assert_eq!(s.gets_for("nope"), 1);
+        s.reset();
+        assert_eq!(s.total_gets(), 0);
+        assert!(s.gets_by_key().is_empty());
+    }
+
+    #[test]
+    fn conformance_through_the_wrapper() {
+        let s = CountingStore::new(Arc::new(MemStore::new()));
+        s.put("a/x", b"1").unwrap();
+        assert_eq!(s.head("a/x").unwrap(), 1);
+        assert_eq!(s.list("a/").unwrap(), vec!["a/x".to_string()]);
+        assert!(s.exists("a/x"));
+        s.delete("a/x").unwrap();
+        assert!(!s.exists("a/x"));
+    }
+}

@@ -10,15 +10,19 @@
 //! * [`SimStore`] — wraps any backend with the calibrated S3 latency /
 //!   bandwidth / concurrency model that drives the Fig-2/3/4 benches, and
 //!   advances a shared [`crate::sim::SimClock`].
+//! * [`CountingStore`] — transparent wrapper counting backend calls
+//!   (tests/benches; proves single-flight coalescing).
 //!
 //! The timing model is the substitution documented in DESIGN.md §1: it
 //! preserves the latency-vs-throughput trade-off that makes chunk sizing
 //! matter, without owning an S3 deployment.
 
+mod counting;
 mod disk;
 mod mem;
 mod simstore;
 
+pub use counting::CountingStore;
 pub use disk::DiskStore;
 pub use mem::MemStore;
 pub use simstore::{S3Profile, SimStore};

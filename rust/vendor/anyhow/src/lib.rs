@@ -1,0 +1,118 @@
+//! Offline stand-in for the `anyhow` crate, vendored because this image has
+//! no crates.io registry (DESIGN.md §Substitutions). Covers the surface the
+//! workspace uses: [`Error`], [`Result`], [`anyhow!`], [`bail!`] and the
+//! [`Context`] extension for `Result` and `Option`.
+//!
+//! Semantics match real `anyhow` where it matters here: `Error` is a cheap
+//! opaque wrapper, any `std::error::Error` converts into it via `?`, and
+//! `Error` itself deliberately does **not** implement `std::error::Error`
+//! (that is what makes the blanket `From` impl coherent).
+
+use std::fmt;
+
+/// Opaque error: a rendered message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("...")` — format an [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to a fallible value.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macros_and_context() {
+        fn inner() -> Result<u32> {
+            let v: Option<u32> = None;
+            v.context("missing value")
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+
+        fn bails() -> Result<()> {
+            bail!("code {}", 7)
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "code 7");
+
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        let e = r.with_context(|| "reading x").unwrap_err();
+        assert_eq!(format!("{e}"), "reading x: boom");
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn f() -> Result<String> {
+            Ok(std::str::from_utf8(&[0xFF])?.to_string())
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,0 +1,317 @@
+//! Offline stand-in for the `xla` (PJRT bindings) crate.
+//!
+//! This image has no crates.io registry and no XLA shared library, so the
+//! workspace vendors the *API surface* the [`hyper_dist::runtime`] module
+//! compiles against (DESIGN.md §Substitutions). [`Literal`] is a real
+//! host-side tensor (shape + little-endian bytes) so literal construction,
+//! reshape and checkpoint-blob round-trips behave; only
+//! [`PjRtLoadedExecutable::execute`] is unimplementable without a device
+//! runtime and returns an error. Callers already gate on
+//! `artifacts_available(..)`, so tests and examples skip gracefully.
+//!
+//! Swap this path dependency for real PJRT bindings to run the AOT
+//! artifacts; no source change in the main crate is required.
+
+use std::fmt;
+
+/// Crate error: a rendered message.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes used by the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_width(self) -> usize {
+        4
+    }
+}
+
+/// Scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn write_le(self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes(bytes[..4].try_into().expect("4 bytes"))
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes(bytes[..4].try_into().expect("4 bytes"))
+    }
+}
+
+/// Array shape: dims + dtype.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Shape of a literal: an array or a tuple of shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Host-side tensor: shape plus raw little-endian element bytes, or a tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+    /// Non-empty => this literal is a tuple and `data`/`dims` are unused.
+    tuple: Vec<Literal>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut data = Vec::with_capacity(4);
+        v.write_le(&mut data);
+        Literal { ty: T::TY, dims: Vec::new(), data, tuple: Vec::new() }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        let mut data = Vec::with_capacity(v.len() * 4);
+        for &x in v {
+            x.write_le(&mut data);
+        }
+        Literal { ty: T::TY, dims: vec![v.len() as i64], data, tuple: Vec::new() }
+    }
+
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::F32, dims: Vec::new(), data: Vec::new(), tuple: elems }
+    }
+
+    fn element_count(&self) -> usize {
+        self.data.len() / self.ty.byte_width()
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if !self.tuple.is_empty() {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        if want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal {
+            ty: self.ty,
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+            tuple: Vec::new(),
+        })
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        if self.tuple.is_empty() {
+            Ok(Shape::Array(ArrayShape { dims: self.dims.clone(), ty: self.ty }))
+        } else {
+            let inner: Result<Vec<Shape>> = self.tuple.iter().map(|l| l.shape()).collect();
+            Ok(Shape::Tuple(inner?))
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_empty() {
+            Ok(ArrayShape { dims: self.dims.clone(), ty: self.ty })
+        } else {
+            Err(Error("tuple literal has no array shape".into()))
+        }
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        if self.tuple.is_empty() {
+            Err(Error("literal is not a tuple".into()))
+        } else {
+            Ok(self.tuple)
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if !self.tuple.is_empty() {
+            return Err(Error("cannot read elements of a tuple literal".into()));
+        }
+        if T::TY != self.ty {
+            return Err(Error(format!("dtype mismatch: literal is {:?}", self.ty)));
+        }
+        Ok(self.data.chunks_exact(4).map(T::read_le).collect())
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want: usize = dims.iter().product::<usize>() * ty.byte_width();
+        if data.len() != want {
+            return Err(Error(format!(
+                "untyped data is {} bytes, shape {dims:?} needs {want}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+            tuple: Vec::new(),
+        })
+    }
+}
+
+/// Parsed HLO module text (the stub keeps the raw text only).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        std::fs::read_to_string(path)
+            .map(|text| Self { text })
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))
+    }
+}
+
+/// A computation handed to [`PjRtClient::compile`].
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub hlo_text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(p: &HloModuleProto) -> Self {
+        Self { hlo_text: p.text.clone() }
+    }
+}
+
+/// Stub PJRT client: construction succeeds, execution is unavailable.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable)
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(
+            "PJRT execution unavailable in the offline xla stub; \
+             link real PJRT bindings to run AOT artifacts"
+                .into(),
+        ))
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_untyped() {
+        let s = Literal::scalar(1.5f32);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![1.5]);
+        let bytes: Vec<u8> = [1.0f32, 2.0].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let l =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &bytes).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).is_err()
+        );
+    }
+
+    #[test]
+    fn tuple_shape() {
+        let t = Literal::tuple(vec![Literal::scalar(1i32), Literal::scalar(2.0f32)]);
+        assert!(matches!(t.shape().unwrap(), Shape::Tuple(ref v) if v.len() == 2));
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn execute_is_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client
+            .compile(&XlaComputation { hlo_text: String::new() })
+            .unwrap();
+        assert!(exe.execute::<Literal>(&[Literal::scalar(0i32)]).is_err());
+    }
+}
