@@ -96,8 +96,10 @@ fn cache_contention(shards: usize, threads: usize) -> f64 {
 fn main() {
     let (fs, paths) = mounted();
     // everything fit in cache during warmup: misses are bounded by chunk
-    // count (readahead may have absorbed some of them)
-    assert!(fs.stats.cache_misses.get() as usize <= fs.manifest().chunks.len());
+    // count (readahead may have absorbed some of them) plus the <=2
+    // probing reads the range-GET fast path serves before the sequential
+    // detector engages
+    assert!(fs.stats.cache_misses.get() as usize <= fs.manifest().chunks.len() + 2);
 
     section("read path: seed-style copying vs zero-copy ByteView (cache-hit MB/s)");
     header("readers", &["copying", "zero-copy", "speedup"]);

@@ -34,6 +34,36 @@ pub struct NodeHandle {
     pub launched_at: SimTime,
 }
 
+impl NodeHandle {
+    /// Still provisioning or serving (not draining, not terminated).
+    pub fn is_alive(&self) -> bool {
+        !matches!(self.state, NodeState::Draining | NodeState::Terminated)
+    }
+
+    /// Mark the node ready (provisioning finished).
+    pub fn mark_ready(&mut self) {
+        if self.is_alive() {
+            self.state = NodeState::Ready;
+        }
+    }
+
+    /// Spot-notice / scale-down hook: stop accepting new work, finish what
+    /// is in flight. Returns `false` when already draining or terminated,
+    /// so callers can make drain idempotent.
+    pub fn begin_drain(&mut self) -> bool {
+        if !self.is_alive() {
+            return false;
+        }
+        self.state = NodeState::Draining;
+        true
+    }
+
+    /// Terminal transition (kill or voluntary release). Idempotent.
+    pub fn terminate(&mut self) {
+        self.state = NodeState::Terminated;
+    }
+}
+
 /// Stage latency parameters (seconds).
 #[derive(Debug, Clone)]
 pub struct ProvisionerConfig {
@@ -162,5 +192,39 @@ mod tests {
             a.request(InstanceType::P2Xlarge, true, SimTime::ZERO).ready_at,
             b.request(InstanceType::P2Xlarge, true, SimTime::ZERO).ready_at
         );
+    }
+
+    #[test]
+    fn jitter_free_config_is_exact() {
+        // the serving sim's hand-calculable tests rely on this
+        let cfg = ProvisionerConfig {
+            boot_mean_s: 45.0,
+            container_pull_warm_s: 8.0,
+            mount_s: 2.0,
+            warm_cache_prob: 1.0,
+            jitter: 0.0,
+            ..Default::default()
+        };
+        let mut p = Provisioner::new(cfg, 1);
+        let n = p.request(InstanceType::P3_2xlarge, true, SimTime::from_secs(100));
+        assert_eq!(n.ready_at, SimTime::from_secs(155));
+    }
+
+    #[test]
+    fn drain_and_terminate_transitions() {
+        let mut p = Provisioner::new(ProvisionerConfig::default(), 3);
+        let mut n = p.request(InstanceType::P3_2xlarge, true, SimTime::ZERO);
+        assert!(n.is_alive());
+        n.mark_ready();
+        assert_eq!(n.state, NodeState::Ready);
+        assert!(n.begin_drain(), "first drain succeeds");
+        assert_eq!(n.state, NodeState::Draining);
+        assert!(!n.is_alive(), "draining nodes take no new work");
+        assert!(!n.begin_drain(), "drain is idempotent");
+        n.terminate();
+        assert_eq!(n.state, NodeState::Terminated);
+        assert!(!n.begin_drain());
+        n.mark_ready();
+        assert_eq!(n.state, NodeState::Terminated, "no resurrection");
     }
 }

@@ -14,6 +14,9 @@ pub enum Error {
     Scheduler(String),
     Cloud(String),
     Runtime(String),
+    /// Serving-layer errors; `Shed` is the admission-control rejection.
+    Serve(String),
+    Shed,
     Checkpoint(String),
     Kv(String),
     Io(std::io::Error),
@@ -33,6 +36,8 @@ impl fmt::Display for Error {
             Error::Scheduler(s) => write!(f, "scheduler error: {s}"),
             Error::Cloud(s) => write!(f, "cloud error: {s}"),
             Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::Serve(s) => write!(f, "serve error: {s}"),
+            Error::Shed => write!(f, "request shed: queue at admission limit"),
             Error::Checkpoint(s) => write!(f, "checkpoint error: {s}"),
             Error::Kv(s) => write!(f, "kv store error: {s}"),
             Error::Io(e) => write!(f, "io: {e}"),

@@ -15,6 +15,10 @@
 //! * **Bounded readahead** — prefetch jobs run on the shared
 //!   [`FetchPool`] worker lanes instead of one spawned thread per chunk,
 //!   and are dropped (not queued unboundedly) when the lanes are saturated.
+//! * **Range-GET fast path** — a cold, non-sequential read of a file much
+//!   smaller than its chunk (`len * 4 < chunk_len`) fetches only the
+//!   file's byte range; whole-chunk fetching (and its cache/prefetch
+//!   locality) is reserved for scans, where it pays.
 
 use std::sync::Arc;
 
@@ -48,6 +52,21 @@ fn from_fetch_error(e: FetchError) -> Error {
 /// Worker lanes of the per-mount readahead pool.
 const PREFETCH_LANES: usize = 4;
 
+/// Range-GET fast path threshold: a cold, *non-sequential* read of a file
+/// more than this many times smaller than its chunk fetches just the
+/// file's byte range instead of the whole chunk. Sequential scans keep the
+/// whole-chunk fetch (neighbors will want the rest of the chunk, and the
+/// prefetcher amortizes it); isolated small reads stop paying a
+/// chunk-sized transfer for a file-sized answer.
+const RANGE_GET_RATIO: u64 = 4;
+
+/// After this many range-GET serves from one chunk, the next small read
+/// *invests* in the whole chunk (fetch + cache) instead — repeated random
+/// access over the same chunk (e.g. shuffled epochs) must converge to
+/// cache hits, not re-transfer the dataset per epoch. Promotion only
+/// happens when the cache could plausibly retain the chunk.
+const RANGE_PROMOTE_AFTER: u32 = 2;
+
 /// Counters exposed for tests / benches / the CLI `status` view.
 #[derive(Debug, Clone, Default)]
 pub struct HyperFsStats {
@@ -63,6 +82,11 @@ pub struct HyperFsStats {
     pub coalesced_reads: Counter,
     /// Readahead jobs dropped because the fetch lanes were saturated.
     pub prefetch_dropped: Counter,
+    /// Cold non-sequential small-file reads served by `get_range` instead
+    /// of a whole-chunk fetch.
+    pub range_gets: Counter,
+    /// Bytes those range GETs transferred (vs. the chunk bytes they avoided).
+    pub range_bytes: Counter,
 }
 
 impl HyperFsStats {
@@ -83,12 +107,20 @@ pub struct HyperFs {
     ns: String,
     manifest: Arc<FsManifest>,
     cache: ChunkCache,
+    cache_bytes: u64,
     prefetcher: Prefetcher,
     /// Readahead worker pool; `None` in synchronous mode (virtual-time
     /// benches where overlap is accounted analytically), so sim-mode
     /// mounts spawn no threads at all.
     fetch_pool: Option<Arc<FetchPool>>,
     inflight: Arc<SingleFlight>,
+    /// Single-flight table for the range-GET fast path, keyed by *file*
+    /// index (different files of one chunk fetch independently; identical
+    /// files coalesce).
+    range_inflight: Arc<SingleFlight>,
+    /// Range-GET serves per chunk since its last whole fetch (promotion
+    /// counter for the fast path).
+    range_served: std::sync::Mutex<std::collections::HashMap<u32, u32>>,
     pub stats: HyperFsStats,
 }
 
@@ -125,9 +157,12 @@ impl HyperFs {
             ns: ns.to_string(),
             manifest,
             cache: ChunkCache::with_chunk_hint(cache_bytes, max_chunk),
+            cache_bytes,
             prefetcher: Prefetcher::new(policy),
             fetch_pool,
             inflight: Arc::new(SingleFlight::new()),
+            range_inflight: Arc::new(SingleFlight::new()),
+            range_served: std::sync::Mutex::new(std::collections::HashMap::new()),
             stats: HyperFsStats::default(),
         })
     }
@@ -150,6 +185,74 @@ impl HyperFs {
         let entry = &self.manifest.files[idx];
         self.stats.reads.inc();
         self.stats.bytes_read.add(entry.len);
+
+        // Range-GET fast path: a cold read of a small file during a
+        // non-sequential access pattern fetches just the file's bytes.
+        // The result is NOT cached (the cache stores whole chunks), so
+        // after RANGE_PROMOTE_AFTER range serves a chunk is *promoted* —
+        // the next small read falls through to the cached whole-chunk
+        // path, so repeated random access (shuffled epochs) converges to
+        // cache hits instead of re-transferring the dataset each epoch.
+        // Promotion is skipped when the cache could not plausibly retain
+        // the chunk anyway (thrashing budgets keep ranging: strictly
+        // fewer bytes). Concurrent readers of the SAME file coalesce
+        // through their own single-flight table.
+        let chunk_len = self
+            .manifest
+            .chunks
+            .get(entry.chunk as usize)
+            .map(|c| c.len)
+            .unwrap_or(self.manifest.chunk_size);
+        // guard order matters: the sharded cache probe short-circuits the
+        // global prefetcher mutex away from every cache-hit read
+        if entry.len.saturating_mul(RANGE_GET_RATIO) < chunk_len
+            && !self.cache.contains(entry.chunk)
+            && !self.prefetcher.is_sequential()
+        {
+            let retainable = chunk_len.saturating_mul(4) <= self.cache_bytes;
+            let promote = retainable && {
+                let mut served = self.range_served.lock().unwrap();
+                let n = served.entry(entry.chunk).or_insert(0);
+                if *n >= RANGE_PROMOTE_AFTER {
+                    served.remove(&entry.chunk);
+                    true // invest: whole-chunk fetch + cache below
+                } else {
+                    *n += 1;
+                    false
+                }
+            };
+            if !promote {
+                let key = FsManifest::chunk_key(&self.ns, entry.chunk);
+                let (offset, len) = (entry.offset, entry.len);
+                let (outcome, leader) = self.range_inflight.run(idx as u32, || {
+                    let data =
+                        self.store.get_range(&key, offset, len).map_err(to_fetch_error)?;
+                    if data.len() as u64 != len {
+                        return Err(FetchError::Storage(format!(
+                            "range GET for {key:?} returned {} bytes, expected {len}",
+                            data.len()
+                        )));
+                    }
+                    Ok(Arc::new(data))
+                });
+                if leader {
+                    self.stats.range_gets.inc();
+                    self.stats.range_bytes.add(len);
+                } else {
+                    self.stats.coalesced_reads.inc();
+                }
+                self.stats.cache_misses.inc();
+                // still feed the predictor: if this turns into a scan,
+                // the next reads go back to whole chunks + readahead
+                for target in self
+                    .prefetcher
+                    .on_access(entry.chunk, self.manifest.chunks.len() as u32)
+                {
+                    self.issue_prefetch(target);
+                }
+                return Ok(ByteView::full(outcome.map_err(from_fetch_error)?));
+            }
+        }
 
         let chunk = self.chunk_data(entry.chunk)?;
         // fire readahead for the predicted next chunks
@@ -367,7 +470,9 @@ mod tests {
 
     #[test]
     fn cache_hit_reads_share_one_allocation() {
-        let (store, paths) = setup(6, 64, 400);
+        // files at 1/2 of the chunk: big enough that the range-GET fast
+        // path stays out of the way and the whole chunk is cached
+        let (store, paths) = setup(6, 150, 400);
         let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
             .unwrap();
         let a = fs.read_file(&paths[0]).unwrap();
@@ -419,8 +524,10 @@ mod tests {
     #[test]
     fn concurrent_cold_reads_issue_one_get_per_chunk() {
         // 32 threads cold-read files that all live in one chunk: the
-        // single-flight table must collapse them into exactly 1 GET
-        let (inner, paths) = setup(8, 100, 8 * 100);
+        // single-flight table must collapse them into exactly 1 GET.
+        // Files fill a third of the chunk each, so the small-file
+        // range-GET fast path does not reroute these reads.
+        let (inner, paths) = setup(3, 100, 300);
         let counting = Arc::new(CountingStore::new(inner));
         let store: StoreHandle = counting.clone();
         let fs = Arc::new(
@@ -452,5 +559,215 @@ mod tests {
             fs.stats.backend_gets.get() + fs.stats.coalesced_reads.get(),
             "every miss either led or coalesced"
         );
+    }
+
+    // ------------------------------------------- range-GET fast path
+
+    /// One tiny file packed with big siblings into a large chunk.
+    fn small_file_setup() -> (Arc<CountingStore>, StoreHandle) {
+        let inner: StoreHandle = Arc::new(MemStore::new());
+        let mut up = Uploader::new(inner.clone(), "ds", 8192);
+        up.add_file("tiny.bin", &[42u8; 100]).unwrap();
+        up.add_file("big1.bin", &[1u8; 3000]).unwrap();
+        up.add_file("big2.bin", &[2u8; 3000]).unwrap();
+        up.seal().unwrap(); // one 6100-byte chunk
+        let counting = Arc::new(CountingStore::new(inner));
+        let handle: StoreHandle = counting.clone();
+        (counting, handle)
+    }
+
+    #[test]
+    fn cold_small_read_uses_range_get_and_moves_fewer_bytes() {
+        let (counting, store) = small_file_setup();
+        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
+            .unwrap();
+        counting.reset(); // ignore the manifest GET from mount
+        let view = fs.read_file("tiny.bin").unwrap();
+        assert_eq!(view, vec![42u8; 100], "byte-for-byte equality");
+        assert_eq!(counting.total_range_gets(), 1, "served by get_range");
+        assert_eq!(
+            counting.total_get_bytes(),
+            100,
+            "transferred the file, not the 6100-byte chunk"
+        );
+        assert_eq!(fs.stats.range_gets.get(), 1);
+        assert_eq!(fs.stats.range_bytes.get(), 100);
+        assert_eq!(fs.stats.backend_gets.get(), 0, "no whole-chunk fetch");
+        assert!(fs.cache().is_empty(), "partial data is never cached");
+    }
+
+    #[test]
+    fn big_file_in_same_chunk_still_fetches_whole_chunk() {
+        let (counting, store) = small_file_setup();
+        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
+            .unwrap();
+        counting.reset();
+        // 3000 * 4 >= 6100: not "much smaller" than its chunk
+        assert_eq!(fs.read_file("big1.bin").unwrap(), vec![1u8; 3000]);
+        assert_eq!(counting.total_range_gets(), 0);
+        assert_eq!(fs.stats.backend_gets.get(), 1);
+        // ...and now the chunk is cached, so the tiny neighbor is a hit
+        assert_eq!(fs.read_file("tiny.bin").unwrap(), vec![42u8; 100]);
+        assert_eq!(fs.stats.cache_hits.get(), 1);
+        assert_eq!(counting.total_gets(), 1, "no second backend call");
+    }
+
+    #[test]
+    fn sequential_scan_keeps_whole_chunk_fetches() {
+        // 20 small files per 2000-byte chunk: a scan must settle into
+        // whole-chunk fetches (locality pays), with at most the first two
+        // probing reads allowed to take the range path
+        let (inner, paths) = setup(60, 100, 2000);
+        let counting = Arc::new(CountingStore::new(inner));
+        let store: StoreHandle = counting.clone();
+        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
+            .unwrap();
+        counting.reset();
+        for (i, p) in paths.iter().enumerate() {
+            assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
+        }
+        assert!(
+            fs.stats.range_gets.get() <= 2,
+            "scan must not degrade into per-file range GETs: {:?}",
+            fs.stats
+        );
+        assert_eq!(fs.stats.backend_gets.get(), 3, "one GET per chunk");
+        // transfer accounting: ~3 chunks + 2 probe files, nowhere near
+        // 60 files' worth of chunk fetches
+        assert!(counting.total_get_bytes() <= 3 * 2000 + 2 * 100);
+    }
+
+    #[test]
+    fn repeated_random_small_reads_promote_to_cached_chunks() {
+        // shuffled epochs with an ample cache: after <=2 range probes per
+        // chunk the path must invest in whole chunks, so later epochs are
+        // pure cache hits instead of re-transferring the dataset
+        let (inner, paths) = setup(40, 100, 1000);
+        let counting = Arc::new(CountingStore::new(inner));
+        let store: StoreHandle = counting.clone();
+        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
+            .unwrap();
+        counting.reset();
+        let n = paths.len();
+        let order: Vec<String> = (0..n).map(|i| paths[(i * 17) % n].clone()).collect();
+        for p in &order {
+            fs.read_file(p).unwrap();
+        }
+        let after_first_epoch = counting.total_get_bytes();
+        // epoch 1: at most 2 range probes (100 B) + 1 whole fetch
+        // (1000 B) per chunk
+        assert!(
+            after_first_epoch <= 4 * (1000 + 2 * 100),
+            "epoch 1 moved {after_first_epoch} bytes"
+        );
+        for _ in 0..2 {
+            for p in &order {
+                fs.read_file(p).unwrap();
+            }
+        }
+        assert_eq!(
+            counting.total_get_bytes(),
+            after_first_epoch,
+            "later epochs must be served from cache, not re-fetched"
+        );
+        assert!(fs.stats.cache_hits.get() >= 80, "{:?}", fs.stats);
+    }
+
+    /// Delegating store whose `get_range` stalls, widening the race
+    /// window so concurrent small-file readers really pile onto one
+    /// in-flight range GET.
+    struct SlowRangeStore(StoreHandle);
+
+    impl crate::storage::ObjectStore for SlowRangeStore {
+        fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+            self.0.put(key, data)
+        }
+        fn get(&self, key: &str) -> Result<Vec<u8>> {
+            self.0.get(key)
+        }
+        fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            self.0.get_range(key, offset, len)
+        }
+        fn head(&self, key: &str) -> Result<u64> {
+            self.0.head(key)
+        }
+        fn list(&self, prefix: &str) -> Result<Vec<String>> {
+            self.0.list(prefix)
+        }
+        fn delete(&self, key: &str) -> Result<()> {
+            self.0.delete(key)
+        }
+    }
+
+    #[test]
+    fn concurrent_small_cold_reads_coalesce_range_gets() {
+        // 16 threads cold-read the SAME small file: the range single-flight
+        // table must collapse them into one backend range GET
+        let inner: StoreHandle = Arc::new(MemStore::new());
+        let mut up = Uploader::new(inner.clone(), "ds", 8192);
+        up.add_file("tiny.bin", &[42u8; 100]).unwrap();
+        up.add_file("pad.bin", &[1u8; 3000]).unwrap();
+        up.seal().unwrap();
+        let counting = Arc::new(CountingStore::new(inner));
+        let slow: StoreHandle = Arc::new(SlowRangeStore(counting.clone()));
+        // cache too small to retain the chunk: promotion stays off, so
+        // every thread is on the pure range path and must coalesce
+        let fs = Arc::new(
+            HyperFs::mount_with(slow, "ds", 2048, PrefetchPolicy { depth: 0 }, false)
+                .unwrap(),
+        );
+        counting.reset();
+        let barrier = Arc::new(std::sync::Barrier::new(16));
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                let fs = fs.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    barrier.wait();
+                    assert_eq!(fs.read_file("tiny.bin").unwrap(), vec![42u8; 100]);
+                });
+            }
+        });
+        assert_eq!(
+            counting.total_range_gets(),
+            1,
+            "concurrent same-file readers must coalesce: {:?}",
+            counting.gets_by_key()
+        );
+        assert_eq!(fs.stats.range_gets.get(), 1);
+        // nearly all riders shared the flight (a severely descheduled
+        // thread may legitimately arrive after the predictor flipped)
+        assert!(fs.stats.coalesced_reads.get() >= 10, "{:?}", fs.stats);
+    }
+
+    #[test]
+    fn shuffled_small_reads_transfer_fewer_bytes_than_chunk_fetches() {
+        // worst case for the old path: random access over small files
+        // (10 per 1000-byte chunk) with a one-chunk cache that thrashes.
+        // the seed path paid a whole chunk per cold read; the fast path
+        // pays the file
+        let (inner, mut paths) = setup(40, 100, 1000);
+        let counting = Arc::new(CountingStore::new(inner));
+        let store: StoreHandle = counting.clone();
+        let fs = HyperFs::mount_with(store, "ds", 1000, PrefetchPolicy { depth: 0 }, false)
+            .unwrap();
+        counting.reset();
+        // deterministic stride-17 shuffle: chunk order rarely steps +1,
+        // so the scan detector stays off for almost every read
+        let n = paths.len();
+        paths = (0..n).map(|i| paths[(i * 17) % n].clone()).collect();
+        for p in &paths {
+            let i: usize = p["data/".len()..p.len() - 4].parse().unwrap();
+            assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
+        }
+        let moved = counting.total_get_bytes();
+        assert!(
+            moved < 40 * 1000 / RANGE_GET_RATIO,
+            "random small reads moved {moved} bytes; whole-chunk fetching \
+             would have moved up to {} through this thrashing cache",
+            40 * 1000
+        );
+        assert!(fs.stats.range_gets.get() > 0);
     }
 }

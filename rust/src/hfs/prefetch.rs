@@ -95,6 +95,15 @@ impl Prefetcher {
         out
     }
 
+    /// Does the access pattern currently look like a sequential scan?
+    /// (Two forward steps — the same threshold that arms readahead.)
+    /// The read path uses this to decide between whole-chunk fetching
+    /// (scan: neighbors will want the rest of the chunk) and a range GET
+    /// (isolated read: the rest of the chunk would be wasted transfer).
+    pub fn is_sequential(&self) -> bool {
+        self.state.lock().unwrap().sequential_run >= 2
+    }
+
     /// A prefetch of `chunk` finished (or was abandoned): it is no longer
     /// in flight, so a future eviction may legitimately re-trigger it.
     pub fn complete(&self, chunk: u32) {
@@ -117,6 +126,18 @@ mod tests {
         assert!(p.on_access(0, 10).is_empty()); // first touch
         assert_eq!(p.on_access(1, 10), vec![2, 3]); // sequential confirmed
         assert_eq!(p.on_access(2, 10), vec![4]); // 3 already pending
+    }
+
+    #[test]
+    fn sequential_probe_tracks_run() {
+        let p = Prefetcher::new(PrefetchPolicy { depth: 2 });
+        assert!(!p.is_sequential(), "cold start is not a scan");
+        p.on_access(0, 10);
+        assert!(!p.is_sequential(), "one touch is not a scan");
+        p.on_access(1, 10);
+        assert!(p.is_sequential(), "two forward steps confirm the scan");
+        p.on_access(7, 10);
+        assert!(!p.is_sequential(), "a jump resets the probe");
     }
 
     #[test]

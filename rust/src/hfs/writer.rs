@@ -3,6 +3,8 @@
 //! Mirrors the paper's interface flow: "Interface uploads the training
 //! data … Source files are chunked and uploaded to Object Storage."
 
+use std::collections::BTreeSet;
+
 use crate::storage::StoreHandle;
 use crate::{Error, Result};
 
@@ -18,6 +20,10 @@ pub struct Uploader {
     buf: Vec<u8>,
     next_chunk: u32,
     sealed: bool,
+    /// Paths seen so far: duplicates must error, not silently shadow
+    /// (the sealed file table is binary-searched by path, so a duplicate
+    /// would make one copy unreachable forever).
+    seen_paths: BTreeSet<String>,
 }
 
 impl Uploader {
@@ -30,6 +36,7 @@ impl Uploader {
             buf: Vec::with_capacity(chunk_size as usize),
             next_chunk: 0,
             sealed: false,
+            seen_paths: BTreeSet::new(),
         }
     }
 
@@ -40,6 +47,12 @@ impl Uploader {
         }
         if path.is_empty() {
             return Err(Error::Storage("empty file path".into()));
+        }
+        if !self.seen_paths.insert(path.to_string()) {
+            return Err(Error::Storage(format!(
+                "duplicate path {path:?} in namespace {:?}",
+                self.ns
+            )));
         }
         // would overflow current chunk -> flush first (keeps files whole)
         if !self.buf.is_empty()
@@ -140,6 +153,46 @@ mod tests {
         let m = Uploader::new(store(), "empty", 64).seal().unwrap();
         assert_eq!(m.file_count(), 0);
         assert!(m.chunks.is_empty());
+    }
+
+    #[test]
+    fn empty_namespace_manifest_round_trips_and_mounts() {
+        // seal() with zero files must still write a manifest good enough
+        // to mount: list is empty, reads fail cleanly, nothing panics
+        let s = store();
+        Uploader::new(s.clone(), "empty", 64).seal().unwrap();
+        let m = FsManifest::from_json(&s.get("empty/manifest.json").unwrap()).unwrap();
+        assert_eq!(m.file_count(), 0);
+        assert_eq!(m.chunk_size, 64);
+        let fs = crate::hfs::HyperFs::mount(s, "empty", 1 << 20).unwrap();
+        assert!(fs.list("").is_empty());
+        assert!(matches!(fs.read_file("anything"), Err(Error::FileNotFound(_))));
+        assert!(fs.stat("anything").is_err());
+    }
+
+    #[test]
+    fn duplicate_path_errors_instead_of_shadowing() {
+        let s = store();
+        let mut up = Uploader::new(s, "ds", 100);
+        up.add_file("a/same", &[1u8; 10]).unwrap();
+        up.add_file("a/other", &[2u8; 10]).unwrap();
+        let err = up.add_file("a/same", &[3u8; 10]).unwrap_err();
+        assert!(err.to_string().contains("duplicate path"), "{err}");
+        // the uploader remains usable and the first copy is intact
+        up.add_file("a/third", &[4u8; 10]).unwrap();
+        let m = up.seal().unwrap();
+        assert_eq!(m.file_count(), 3);
+        let same = &m.files[m.find("a/same").unwrap()];
+        assert_eq!(same.len, 10);
+    }
+
+    #[test]
+    fn duplicates_across_chunk_boundaries_also_error() {
+        let s = store();
+        let mut up = Uploader::new(s, "ds", 20);
+        up.add_file("x", &[1u8; 15]).unwrap(); // fills chunk 0
+        up.add_file("y", &[2u8; 15]).unwrap(); // chunk 1
+        assert!(up.add_file("x", &[3u8; 5]).is_err(), "dup in a later chunk");
     }
 
     #[test]

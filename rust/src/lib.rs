@@ -23,6 +23,8 @@
 //! * [`workflow`] — YAML recipes -> DAG of experiments -> tasks, §II.C params.
 //! * [`scheduler`] — fault-tolerant task scheduling state machine + drivers.
 //! * [`runtime`] — PJRT executor for the AOT artifacts (train/eval/infer).
+//! * [`serve`] — inference serving: dynamic batching, admission control,
+//!   preemption-aware replica autoscaling (§IV.D at request granularity).
 //! * [`dataloader`] — async prefetching data pipeline over HFS.
 //! * [`etl`] — the §IV.A text preprocessing pipeline.
 //! * [`metrics`] — counters, histograms, cost accounting.
@@ -41,6 +43,7 @@ pub mod hfs;
 pub mod metrics;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod storage;
 pub mod util;

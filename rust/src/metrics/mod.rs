@@ -57,33 +57,115 @@ impl Gauge {
     }
 }
 
-/// Streaming histogram with fixed log-spaced buckets (values in arbitrary
-/// units — callers document their unit). Tracks count/sum/min/max exactly.
+/// Lowest tracked exponent: values below 2^-30 (~1 ns in seconds) share
+/// bucket 0.
+const HIST_MIN_EXP: i32 = -30;
+/// Highest tracked exponent: values at/above 2^33 share the last octave.
+const HIST_MAX_EXP: i32 = 32;
+/// Linear sub-buckets per octave; bounds relative quantile error by 1/16.
+const HIST_SUBS: usize = 16;
+const HIST_BUCKETS: usize = ((HIST_MAX_EXP - HIST_MIN_EXP + 1) as usize) * HIST_SUBS;
+
+/// Streaming histogram over log-linear buckets (values in arbitrary units —
+/// callers document their unit; the serving layer records seconds).
+///
+/// Each power-of-two octave from 2^-30 to 2^32 is split into 16 linear
+/// sub-buckets, so quantiles resolve to ~6% relative error across the whole
+/// range — fine enough that a p99 latency SLO check on millisecond-scale
+/// values is meaningful. Count/sum/min/max are tracked exactly.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     inner: Arc<Mutex<HistInner>>,
 }
 
+/// Point-in-time summary of a [`Histogram`] (quantiles are upper bucket
+/// edges, clamped to the observed min/max).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
 #[derive(Debug)]
 struct HistInner {
-    buckets: Vec<u64>, // log2 buckets
+    buckets: Vec<u64>,
     count: u64,
     sum: f64,
     min: f64,
     max: f64,
 }
 
+impl HistInner {
+    fn fresh() -> Self {
+        Self {
+            buckets: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_upper_edge(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    fn snapshot(&self) -> HistogramSnapshot {
+        if self.count == 0 {
+            return HistogramSnapshot::default();
+        }
+        HistogramSnapshot {
+            count: self.count,
+            mean: self.sum / self.count as f64,
+            min: self.min,
+            max: self.max,
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+/// Bucket index for a finite positive value (clamped into the tracked
+/// range); `record` filters non-finite input before calling this.
+fn bucket_index(v: f64) -> usize {
+    if v <= 0.0 || v < 2f64.powi(HIST_MIN_EXP) {
+        return 0;
+    }
+    let exp = (v.log2().floor() as i32).clamp(HIST_MIN_EXP, HIST_MAX_EXP);
+    let frac = v / 2f64.powi(exp); // in [1, 2) modulo fp rounding
+    let sub = (((frac - 1.0) * HIST_SUBS as f64) as usize).min(HIST_SUBS - 1);
+    ((exp - HIST_MIN_EXP) as usize) * HIST_SUBS + sub
+}
+
+/// Upper edge of bucket `i`: `2^exp * (1 + (sub+1)/16)`.
+fn bucket_upper_edge(i: usize) -> f64 {
+    let exp = (i / HIST_SUBS) as i32 + HIST_MIN_EXP;
+    let sub = i % HIST_SUBS;
+    2f64.powi(exp) * (1.0 + (sub + 1) as f64 / HIST_SUBS as f64)
+}
+
 impl Default for Histogram {
     fn default() -> Self {
-        Self {
-            inner: Arc::new(Mutex::new(HistInner {
-                buckets: vec![0; 64],
-                count: 0,
-                sum: 0.0,
-                min: f64::INFINITY,
-                max: f64::NEG_INFINITY,
-            })),
-        }
+        Self { inner: Arc::new(Mutex::new(HistInner::fresh())) }
     }
 }
 
@@ -92,9 +174,15 @@ impl Histogram {
         Self::default()
     }
 
+    /// Record one value. Non-finite values are ignored: NaN/inf would
+    /// corrupt min/max (and thus the clamp in `quantile`) while meaning
+    /// nothing as a measurement.
     pub fn record(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
         let mut h = self.inner.lock().unwrap();
-        let idx = if v <= 1.0 { 0 } else { (v.log2().floor() as usize).min(63) };
+        let idx = bucket_index(v);
         h.buckets[idx] += 1;
         h.count += 1;
         h.sum += v;
@@ -125,21 +213,28 @@ impl Histogram {
         if h.count == 0 { 0.0 } else { h.max }
     }
 
-    /// Approximate quantile from the log buckets (upper bucket edge).
+    /// Approximate quantile (upper bucket edge, clamped to observed range).
     pub fn quantile(&self, q: f64) -> f64 {
-        let h = self.inner.lock().unwrap();
-        if h.count == 0 {
-            return 0.0;
-        }
-        let target = (q.clamp(0.0, 1.0) * h.count as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, c) in h.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return 2f64.powi(i as i32 + 1);
-            }
-        }
-        h.max
+        self.inner.lock().unwrap().quantile(q)
+    }
+
+    /// Consistent snapshot of count/mean/min/max and p50/p90/p95/p99 under
+    /// one lock acquisition (the autoscaler samples this per control tick).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        self.inner.lock().unwrap().snapshot()
+    }
+
+    /// Drop all recorded values (windowed use: snapshot, then reset).
+    pub fn reset(&self) {
+        *self.inner.lock().unwrap() = HistInner::fresh();
+    }
+
+    /// Snapshot the current window and atomically start a new one.
+    pub fn snapshot_and_reset(&self) -> HistogramSnapshot {
+        let mut h = self.inner.lock().unwrap();
+        let snap = h.snapshot();
+        *h = HistInner::fresh();
+        snap
     }
 }
 
@@ -178,12 +273,10 @@ impl MetricsRegistry {
             out.push_str(&format!("{name} {}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
+            let s = h.snapshot();
             out.push_str(&format!(
-                "{name} count={} mean={:.3} min={:.3} max={:.3}\n",
-                h.count(),
-                h.mean(),
-                h.min(),
-                h.max()
+                "{name} count={} mean={:.3} min={:.3} max={:.3} p50={:.3} p99={:.3}\n",
+                s.count, s.mean, s.min, s.max, s.p50, s.p99
             ));
         }
         out
@@ -277,6 +370,76 @@ mod tests {
         assert_eq!(h.min(), 1.0);
         assert_eq!(h.max(), 8.0);
         assert!(h.quantile(0.5) >= 2.0);
+    }
+
+    #[test]
+    fn histogram_resolves_sub_second_quantiles() {
+        // latency-style values in seconds: the old power-of-two buckets
+        // collapsed everything below 1.0 into one bin
+        let h = Histogram::new();
+        for i in 0..1000 {
+            // 1 ms .. 10 ms uniform, plus a 2% tail at 100 ms straddling p99
+            let v = if i < 980 { 0.001 + 0.009 * (i as f64 / 980.0) } else { 0.1 };
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        // p50 ~ 5.5 ms within bucket error (6.25%) + discretization
+        assert!(s.p50 > 0.004 && s.p50 < 0.007, "p50={}", s.p50);
+        // the 1% tail at 100 ms must surface in p99
+        assert!(s.p99 > 0.08, "p99={}", s.p99);
+        assert!(s.p90 < s.p95 + 1e-12 && s.p95 <= s.p99);
+        assert!(s.min > 0.0009 && s.max < 0.11);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone_and_clamped() {
+        let h = Histogram::new();
+        for v in [3.0, 3.0, 3.0] {
+            h.record(v);
+        }
+        // one bucket: every quantile clamps into [min, max] = [3, 3]
+        assert_eq!(h.quantile(0.5), 3.0);
+        assert_eq!(h.quantile(0.99), 3.0);
+        // zero and negative values land in bucket 0 without panicking
+        h.record(0.0);
+        h.record(-1.0);
+        assert_eq!(h.count(), 5);
+        // non-finite values are ignored, not recorded
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 5);
+        let nan_only = Histogram::new();
+        nan_only.record(f64::NAN);
+        assert_eq!(nan_only.snapshot(), HistogramSnapshot::default(), "no panic, no data");
+    }
+
+    #[test]
+    fn histogram_snapshot_and_reset_windows() {
+        let h = Histogram::new();
+        h.record(1.0);
+        h.record(2.0);
+        let w1 = h.snapshot_and_reset();
+        assert_eq!(w1.count, 2);
+        assert_eq!(h.count(), 0, "window cleared");
+        assert_eq!(h.snapshot(), HistogramSnapshot::default());
+        h.record(8.0);
+        let w2 = h.snapshot_and_reset();
+        assert_eq!(w2.count, 1);
+        assert_eq!(w2.max, 8.0);
+    }
+
+    #[test]
+    fn histogram_bucket_edges_cover_range() {
+        // extremes index into valid buckets
+        assert_eq!(bucket_index(1e-12), 0);
+        assert!(bucket_index(1e12) < HIST_BUCKETS);
+        // upper edge of a value's bucket is >= the value (within an octave)
+        for v in [0.001, 0.37, 1.0, 7.3, 1000.0] {
+            let edge = bucket_upper_edge(bucket_index(v));
+            assert!(edge >= v * 0.999, "edge {edge} < value {v}");
+            assert!(edge <= v * 2.0, "edge {edge} too far above {v}");
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@ mod manifest;
 mod session;
 
 pub use manifest::{ArtifactManifest, PresetManifest, TensorSpec};
-pub use session::{InferSession, TrainSession};
+pub use session::{BatchSlot, InferSession, TrainSession};
 
 use std::path::Path;
 use std::sync::Arc;

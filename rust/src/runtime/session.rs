@@ -190,6 +190,76 @@ impl TrainSession {
     }
 }
 
+/// Reusable token staging buffer for serving (§IV.D).
+///
+/// The AOT `infer` artifact is compiled for a fixed `(batch, seq)` shape,
+/// but a serving batcher closes batches of *up to* `batch` requests. A
+/// `BatchSlot` owns one `batch * seq` buffer that is reused across every
+/// batch a replica serves: rows are packed in, the unfilled remainder
+/// stays padding (token 0), and [`InferSession::run_slot`] returns
+/// predictions for the filled rows only. One allocation per replica
+/// lifetime instead of one per batch.
+#[derive(Debug)]
+pub struct BatchSlot {
+    buf: Vec<i32>,
+    rows: usize,
+    batch: usize,
+    seq: usize,
+}
+
+impl BatchSlot {
+    /// A slot for a `(batch, seq)`-shaped artifact.
+    pub fn new(batch: usize, seq: usize) -> Self {
+        Self { buf: vec![0; batch * seq], rows: 0, batch, seq }
+    }
+
+    /// Stage one request row. Errors when the slot is full or the row has
+    /// the wrong length.
+    pub fn push_row(&mut self, tokens: &[i32]) -> Result<()> {
+        if self.rows == self.batch {
+            return Err(Error::Serve(format!("batch slot full ({} rows)", self.batch)));
+        }
+        if tokens.len() != self.seq {
+            return Err(Error::Serve(format!(
+                "row has {} tokens, artifact expects seq_len {}",
+                tokens.len(),
+                self.seq
+            )));
+        }
+        let at = self.rows * self.seq;
+        self.buf[at..at + self.seq].copy_from_slice(tokens);
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Forget staged rows; keeps the allocation. Padding from previous
+    /// batches may linger beyond `rows` — `run_slot` ignores those rows.
+    pub fn clear(&mut self) {
+        self.rows = 0;
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.batch
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.rows == self.batch
+    }
+
+    /// The packed `(batch * seq)` token buffer (padded rows included).
+    pub fn tokens(&self) -> &[i32] {
+        &self.buf
+    }
+}
+
 /// Batch inference over token windows.
 pub struct InferSession {
     preset: PresetManifest,
@@ -265,5 +335,63 @@ impl InferSession {
                     .expect("non-empty vocab")
             })
             .collect())
+    }
+
+    // ------------------------------------------------------ batch reuse
+
+    /// A staging slot matching this session's `(batch, seq)` shape.
+    pub fn new_slot(&self) -> BatchSlot {
+        BatchSlot::new(self.preset.batch, self.preset.seq_len)
+    }
+
+    /// Run inference on a packed [`BatchSlot`], returning one greedy next
+    /// token per *staged* row (padding rows are computed by the fixed-shape
+    /// artifact but dropped here). The slot is reusable afterwards.
+    pub fn run_slot(&self, slot: &BatchSlot) -> Result<Vec<i32>> {
+        if slot.batch != self.preset.batch || slot.seq != self.preset.seq_len {
+            return Err(Error::Serve(format!(
+                "slot shape ({}, {}) does not match preset ({}, {})",
+                slot.batch, slot.seq, self.preset.batch, self.preset.seq_len
+            )));
+        }
+        if slot.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut out = self.next_tokens(slot.tokens())?;
+        out.truncate(slot.rows);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_slot_packs_and_reuses() {
+        let mut slot = BatchSlot::new(3, 4);
+        assert_eq!(slot.capacity(), 3);
+        assert!(slot.is_empty());
+        slot.push_row(&[1, 2, 3, 4]).unwrap();
+        slot.push_row(&[5, 6, 7, 8]).unwrap();
+        assert_eq!(slot.rows(), 2);
+        assert_eq!(&slot.tokens()[..8], &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(&slot.tokens()[8..], &[0, 0, 0, 0], "unfilled row stays padding");
+        slot.push_row(&[9, 9, 9, 9]).unwrap();
+        assert!(slot.is_full());
+        assert!(slot.push_row(&[1, 1, 1, 1]).is_err(), "overflow rejected");
+        // reuse: clear keeps the allocation, row count resets
+        slot.clear();
+        assert!(slot.is_empty());
+        slot.push_row(&[7, 7, 7, 7]).unwrap();
+        assert_eq!(&slot.tokens()[..4], &[7, 7, 7, 7]);
+    }
+
+    #[test]
+    fn batch_slot_rejects_wrong_row_length() {
+        let mut slot = BatchSlot::new(2, 4);
+        assert!(slot.push_row(&[1, 2, 3]).is_err());
+        assert!(slot.push_row(&[1, 2, 3, 4, 5]).is_err());
+        assert_eq!(slot.rows(), 0, "failed pushes stage nothing");
     }
 }

@@ -475,6 +475,49 @@ experiments:
     }
 
     #[test]
+    fn preemption_notice_drain_checkpoints_and_loses_no_work() {
+        // ISSUE 2 satellite: end-to-end exercise of SpotMarket::notice_s.
+        // One 3000-second task on one spot node with mean time-to-preempt
+        // of 400 s, and NO periodic checkpointing: a hard kill banks
+        // nothing, so the run can only finish in bounded time if the
+        // 2-minute-notice drain path checkpoints progress at every notice
+        // (≈245 useful seconds per ~495 s node lifetime ⇒ makespan in the
+        // low thousands). Without the drain, completion would need one
+        // node to survive the whole 3175 s (p ≈ e^-7.9 per node), i.e. a
+        // makespan in the hundreds of thousands of seconds.
+        let yaml = r#"
+name: drain
+experiments:
+  - name: long
+    instance: p3.2xlarge
+    workers: 1
+    spot: true
+    max_retries: 50
+    command: "train {i}"
+    params: { i: { range: [0, 0] } }
+    work: { duration_s: 3000.0 }
+"#;
+        let mut w = wf(yaml);
+        let cfg = SimDriverConfig {
+            spot_market: SpotMarketConfig { mean_ttp_s: 400.0, notice_s: 120.0 },
+            checkpoint_interval_s: None, // notice-drain is the only savior
+            seed: 11,
+            ..Default::default()
+        };
+        let mut d = SimDriver::new(cfg);
+        let r = d.run(&mut w).unwrap();
+        assert!(r.workflow_complete, "{r:?}");
+        assert_eq!(r.tasks_succeeded, 1);
+        assert_eq!(r.tasks_failed, 0, "no work may be lost");
+        assert!(r.preemptions > 0, "the node churned: {r:?}");
+        assert!(
+            r.makespan_s < 30_000.0,
+            "makespan {} says notice-drain did not bank progress",
+            r.makespan_s
+        );
+    }
+
+    #[test]
     fn dag_stages_run_in_order() {
         let yaml = r#"
 name: two-stage

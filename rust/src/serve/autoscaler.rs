@@ -1,0 +1,224 @@
+//! Replica autoscaler: queue-depth + p99-latency driven scaling policy.
+//!
+//! The paper's serving claim is economic: heavy traffic is served from
+//! "unstable cheap resources" (spot), with elasticity absorbing both load
+//! swings *and* preemption losses. The controller here is deliberately
+//! boring — hysteresis around two observable signals:
+//!
+//! * **hot** — windowed p99 latency near the SLO, or backlog per live
+//!   replica above a watermark → add replicas (bounded step, cooldown).
+//! * **cold** — p99 far below the SLO and negligible backlog → drain one
+//!   replica (slow bleed, longer cooldown).
+//!
+//! Provisioning in flight counts toward capacity so a scale-up burst is
+//! not re-ordered every tick while nodes boot ("provisioning debt").
+//! The policy is pure (no clocks, no I/O): the virtual-time serving sim
+//! drives it with sampled [`ScaleSignal`]s, and unit tests hit every
+//! branch directly.
+
+/// Controller configuration.
+#[derive(Debug, Clone)]
+pub struct AutoscalerConfig {
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// The latency objective the controller defends (p99, seconds).
+    pub slo_p99_s: f64,
+    /// Scale up when windowed p99 exceeds this fraction of the SLO.
+    pub hot_p99_frac: f64,
+    /// Scale down only when windowed p99 is below this fraction.
+    pub cold_p99_frac: f64,
+    /// Scale up when queue depth exceeds this many requests per live
+    /// replica (capacity-normalized backlog watermark).
+    pub backlog_per_replica: f64,
+    /// Replicas added per scale-up decision.
+    pub up_step: usize,
+    /// Minimum seconds between scale-ups / scale-downs.
+    pub up_cooldown_s: f64,
+    pub down_cooldown_s: f64,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        Self {
+            min_replicas: 1,
+            max_replicas: 64,
+            slo_p99_s: 0.25,
+            hot_p99_frac: 0.8,
+            cold_p99_frac: 0.3,
+            backlog_per_replica: 4.0,
+            up_step: 2,
+            up_cooldown_s: 10.0,
+            down_cooldown_s: 30.0,
+        }
+    }
+}
+
+/// One control-tick observation.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleSignal {
+    pub now_s: f64,
+    /// Requests waiting for a batch.
+    pub queue_depth: usize,
+    /// p99 latency over the window since the previous tick (0 when the
+    /// window saw no completions).
+    pub window_p99_s: f64,
+    /// Replicas currently able to serve.
+    pub live: usize,
+    /// Replicas requested but not yet ready.
+    pub provisioning: usize,
+}
+
+/// What the control loop should do this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Provision this many additional replicas.
+    Up(usize),
+    /// Drain this many replicas (graceful: finish in-flight, then release).
+    Down(usize),
+}
+
+/// The stateful controller (cooldown bookkeeping only).
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: AutoscalerConfig,
+    last_up_s: f64,
+    last_down_s: f64,
+}
+
+impl Autoscaler {
+    /// Cooldowns are measured from t=0: the fleet was just sized, so the
+    /// first scale decision must also wait out its cooldown (otherwise a
+    /// `down_cooldown_s` of e.g. 1e9 — the "never scale down" idiom —
+    /// would still allow one initial drain).
+    pub fn new(cfg: AutoscalerConfig) -> Self {
+        Self { cfg, last_up_s: 0.0, last_down_s: 0.0 }
+    }
+
+    pub fn config(&self) -> &AutoscalerConfig {
+        &self.cfg
+    }
+
+    /// Decide this tick's action. Mutates only cooldown state.
+    pub fn decide(&mut self, sig: &ScaleSignal) -> ScaleDecision {
+        let cfg = &self.cfg;
+        let capacity = sig.live + sig.provisioning;
+
+        // floor repair runs regardless of cooldowns: preemptions must not
+        // leave the fleet below the configured minimum
+        if capacity < cfg.min_replicas {
+            let n = cfg.min_replicas - capacity;
+            self.last_up_s = sig.now_s;
+            return ScaleDecision::Up(n);
+        }
+
+        let hot_latency = sig.window_p99_s >= cfg.hot_p99_frac * cfg.slo_p99_s;
+        let hot_backlog =
+            sig.queue_depth as f64 >= cfg.backlog_per_replica * sig.live.max(1) as f64;
+        if (hot_latency || hot_backlog)
+            && capacity < cfg.max_replicas
+            && sig.now_s - self.last_up_s >= cfg.up_cooldown_s
+        {
+            let n = cfg.up_step.max(1).min(cfg.max_replicas - capacity);
+            self.last_up_s = sig.now_s;
+            return ScaleDecision::Up(n);
+        }
+
+        let cold_latency = sig.window_p99_s < cfg.cold_p99_frac * cfg.slo_p99_s;
+        let cold_backlog =
+            (sig.queue_depth as f64) < 0.5 * cfg.backlog_per_replica * sig.live.max(1) as f64;
+        if cold_latency
+            && cold_backlog
+            && capacity > cfg.min_replicas
+            && sig.now_s - self.last_down_s >= cfg.down_cooldown_s
+            && sig.now_s - self.last_up_s >= cfg.up_cooldown_s
+        {
+            self.last_down_s = sig.now_s;
+            return ScaleDecision::Down(1);
+        }
+
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(now_s: f64, depth: usize, p99: f64, live: usize, prov: usize) -> ScaleSignal {
+        ScaleSignal { now_s, queue_depth: depth, window_p99_s: p99, live, provisioning: prov }
+    }
+
+    fn ctl() -> Autoscaler {
+        Autoscaler::new(AutoscalerConfig {
+            min_replicas: 2,
+            max_replicas: 8,
+            slo_p99_s: 1.0,
+            up_cooldown_s: 10.0,
+            down_cooldown_s: 30.0,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn scales_up_on_backlog() {
+        let mut a = ctl();
+        // depth 40 over 4 live >> 4/replica watermark
+        assert_eq!(a.decide(&sig(50.0, 40, 0.1, 4, 0)), ScaleDecision::Up(2));
+    }
+
+    #[test]
+    fn scales_up_on_hot_p99() {
+        let mut a = ctl();
+        assert_eq!(a.decide(&sig(50.0, 0, 0.9, 4, 0)), ScaleDecision::Up(2));
+    }
+
+    #[test]
+    fn up_cooldown_throttles() {
+        let mut a = ctl();
+        // cooldowns run from t=0: hot at t=5 is still inside the window
+        assert_eq!(a.decide(&sig(5.0, 100, 2.0, 2, 0)), ScaleDecision::Hold, "initial cooldown");
+        assert_eq!(a.decide(&sig(10.0, 100, 2.0, 2, 0)), ScaleDecision::Up(2));
+        assert_eq!(a.decide(&sig(15.0, 100, 2.0, 2, 2)), ScaleDecision::Hold, "cooling down");
+        assert_eq!(a.decide(&sig(20.0, 100, 2.0, 2, 2)), ScaleDecision::Up(2));
+    }
+
+    #[test]
+    fn provisioning_counts_toward_capacity_cap() {
+        let mut a = ctl();
+        // 6 live + 1 provisioning = 7; max 8 -> step clamps to 1
+        assert_eq!(a.decide(&sig(50.0, 100, 2.0, 6, 1)), ScaleDecision::Up(1));
+        // at the cap: hold even though hot
+        assert_eq!(a.decide(&sig(70.0, 100, 2.0, 6, 2)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn floor_repair_ignores_cooldown() {
+        let mut a = ctl();
+        assert_eq!(a.decide(&sig(50.0, 100, 2.0, 2, 0)), ScaleDecision::Up(2));
+        // a storm just killed everything: repair below-min immediately,
+        // cooldown or not
+        assert_eq!(a.decide(&sig(51.0, 0, 0.0, 0, 0)), ScaleDecision::Up(2));
+    }
+
+    #[test]
+    fn scales_down_when_cold() {
+        let mut a = ctl();
+        assert_eq!(a.decide(&sig(100.0, 0, 0.01, 4, 0)), ScaleDecision::Down(1));
+        assert_eq!(a.decide(&sig(110.0, 0, 0.01, 3, 0)), ScaleDecision::Hold, "down cooldown");
+        assert_eq!(a.decide(&sig(130.0, 0, 0.01, 3, 0)), ScaleDecision::Down(1));
+    }
+
+    #[test]
+    fn never_drains_below_min() {
+        let mut a = ctl();
+        assert_eq!(a.decide(&sig(100.0, 0, 0.0, 2, 0)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn warm_p99_holds() {
+        let mut a = ctl();
+        // between cold (0.3) and hot (0.8) fractions of the SLO: stable
+        assert_eq!(a.decide(&sig(100.0, 1, 0.5, 4, 0)), ScaleDecision::Hold);
+    }
+}

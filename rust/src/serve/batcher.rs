@@ -1,0 +1,122 @@
+//! Dynamic batching policy: close on size OR deadline, whichever first.
+//!
+//! GPU inference cost is `base + per_item * n`: the fixed per-dispatch
+//! overhead (kernel launch, weight streaming, framework bookkeeping)
+//! dominates at small `n`, so serving one request per dispatch wastes most
+//! of the accelerator. Batching amortizes `base` across up to `max_batch`
+//! requests — but an unbounded wait for a full batch turns low-traffic
+//! latency pathological. The policy therefore closes a batch when it
+//! reaches `max_batch` *or* when the oldest waiting request has aged
+//! `max_delay_s`, whichever trips first.
+//!
+//! This struct is pure decision logic (no queues, no I/O). The
+//! virtual-time [`super::ServeSim`] drives it through the exact
+//! [`SimTime`] form ([`BatchPolicy::should_close`] /
+//! [`BatchPolicy::close_at`] — nanosecond arithmetic, so a deadline
+//! event at the exact instant always closes); the threaded
+//! [`super::BoundedQueue::next_batch`] applies the same size-or-deadline
+//! rule as a wallclock window. Either way the rule itself lives here.
+
+use crate::sim::SimTime;
+
+/// When does a batch close?
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest batch a replica accepts (the artifact's compiled batch).
+    pub max_batch: usize,
+    /// Longest the oldest request may wait for co-riders, in seconds.
+    pub max_delay_s: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 16, max_delay_s: 0.005 }
+    }
+}
+
+impl BatchPolicy {
+    /// Should a batch close *now*, given the queue depth and the age of
+    /// the oldest waiting request?
+    pub fn close_now(&self, depth: usize, oldest_age_s: f64) -> bool {
+        depth > 0 && (depth >= self.max_batch || oldest_age_s >= self.max_delay_s)
+    }
+
+    /// Seconds until the deadline would close a (non-empty, non-full)
+    /// batch whose oldest member has waited `oldest_age_s`.
+    pub fn deadline_in_s(&self, oldest_age_s: f64) -> f64 {
+        (self.max_delay_s - oldest_age_s).max(0.0)
+    }
+
+    /// How many requests the next batch takes from a queue of `depth`.
+    pub fn take(&self, depth: usize) -> usize {
+        depth.min(self.max_batch.max(1))
+    }
+
+    /// Virtual-time deadline of a batch whose oldest member was admitted
+    /// at `oldest_admitted` (exact nanosecond arithmetic — an f64 seconds
+    /// round-trip can miss an exact deadline event by half a nanosecond).
+    pub fn close_at(&self, oldest_admitted: SimTime) -> SimTime {
+        oldest_admitted + SimTime::from_secs_f64(self.max_delay_s)
+    }
+
+    /// Virtual-time close decision: size limit reached, or the oldest
+    /// member's deadline has arrived.
+    pub fn should_close(&self, depth: usize, oldest_admitted: SimTime, now: SimTime) -> bool {
+        depth > 0 && (depth >= self.max_batch || self.close_at(oldest_admitted) <= now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closes_on_size() {
+        let p = BatchPolicy { max_batch: 8, max_delay_s: 1.0 };
+        assert!(p.close_now(8, 0.0));
+        assert!(p.close_now(20, 0.0));
+        assert!(!p.close_now(7, 0.5));
+    }
+
+    #[test]
+    fn closes_on_deadline() {
+        let p = BatchPolicy { max_batch: 8, max_delay_s: 0.01 };
+        assert!(p.close_now(1, 0.01));
+        assert!(p.close_now(1, 5.0));
+        assert!(!p.close_now(1, 0.0099));
+    }
+
+    #[test]
+    fn empty_queue_never_closes() {
+        let p = BatchPolicy::default();
+        assert!(!p.close_now(0, 100.0));
+    }
+
+    #[test]
+    fn deadline_countdown_saturates() {
+        let p = BatchPolicy { max_batch: 8, max_delay_s: 0.01 };
+        assert!((p.deadline_in_s(0.004) - 0.006).abs() < 1e-12);
+        assert_eq!(p.deadline_in_s(0.02), 0.0);
+    }
+
+    #[test]
+    fn simtime_close_matches_exact_deadline() {
+        let p = BatchPolicy { max_batch: 8, max_delay_s: 0.005 };
+        let t0 = SimTime::from_secs(10);
+        let deadline = p.close_at(t0);
+        assert_eq!(deadline, t0 + SimTime::from_micros(5000));
+        assert!(!p.should_close(1, t0, SimTime(deadline.0 - 1)));
+        assert!(p.should_close(1, t0, deadline), "exact instant closes");
+        assert!(p.should_close(8, t0, t0), "size closes regardless of age");
+        assert!(!p.should_close(0, t0, deadline + SimTime::from_secs(1)));
+    }
+
+    #[test]
+    fn take_clamps_to_batch() {
+        let p = BatchPolicy { max_batch: 8, max_delay_s: 1.0 };
+        assert_eq!(p.take(3), 3);
+        assert_eq!(p.take(100), 8);
+        let degenerate = BatchPolicy { max_batch: 0, max_delay_s: 1.0 };
+        assert_eq!(degenerate.take(5), 1, "max_batch 0 behaves as 1");
+    }
+}

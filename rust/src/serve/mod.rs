@@ -1,0 +1,48 @@
+//! The serving layer: dynamic batching, admission control, and
+//! preemption-aware elastic replicas over the Hyper runtime.
+//!
+//! §IV.D of the paper demonstrates "large-scale inference" as one of
+//! Hyper's four headline workloads (300 GPU spot instances fanning out
+//! YOLO over ImageNet), and §III.D's economics rest on serving heavy
+//! traffic from "unstable cheap resources". A one-shot
+//! [`crate::runtime::InferSession`] cannot express any of that — serving
+//! lives or dies on the *request path*: queueing, batching, and elastic
+//! capacity. This module is that vertical slice:
+//!
+//! | component | paper hook |
+//! |---|---|
+//! | [`BoundedQueue`] — bounded MPMC queue, admission control | §III.B master/request fan-in; overload sheds instead of queueing unbounded |
+//! | [`BatchPolicy`] — close a batch on size OR deadline | §IV.D batch fan-out: amortize the per-dispatch cost `base + per_item·n` |
+//! | [`BatchBackend`] / [`PjrtBackend`] — replica model runner | Layer-3 PJRT execution of the AOT artifacts (batch-reuse [`crate::runtime::BatchSlot`]) |
+//! | [`ServeStack`] — threaded queue → batcher → worker pool | single-node serving; the `serve_batching` bench measures the ≥3x batching win |
+//! | [`Autoscaler`] — p99/backlog-driven replica controller | §III.D elasticity: capacity follows load *and* replaces preempted nodes |
+//! | [`ServeSim`] — virtual-time serving with scripted preemption storms | §III.D "terminated anytime": in-flight batches requeue, admitted work never drops |
+//!
+//! Two invariants define correctness here, and the tests pin both:
+//!
+//! 1. **Bounded latency under overload.** Admission control sheds at the
+//!    door, so the p99 of *admitted* requests is bounded by
+//!    `queue_depth / service_rate` no matter how long a capacity gap
+//!    lasts.
+//! 2. **Zero dropped requests.** Preemption (2-minute notice → drain, or
+//!    instant kill → requeue at queue front) may delay admitted work,
+//!    never lose it.
+//!
+//! The scenario family this opens (SLO sweeps, preemption storms,
+//! overload shedding, cost-vs-SLO frontiers) runs deterministically in
+//! virtual time — see `examples/serve_slo.rs` and the `serve_batching`
+//! bench.
+
+pub mod autoscaler;
+pub mod backend;
+pub mod batcher;
+pub mod queue;
+pub mod server;
+pub mod sim;
+
+pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleDecision, ScaleSignal};
+pub use backend::{BatchBackend, PjrtBackend, SyntheticBackend};
+pub use batcher::BatchPolicy;
+pub use queue::BoundedQueue;
+pub use server::{ResponseHandle, ServeStack, ServeStats, ServerConfig};
+pub use sim::{Load, ServeReport, ServeSim, ServeSimConfig, StormEvent, TickTrace};

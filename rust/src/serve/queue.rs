@@ -1,0 +1,225 @@
+//! [`BoundedQueue`]: the serving layer's bounded MPMC request queue with
+//! admission control and deadline-based batch collection.
+//!
+//! Overload policy is *reject at the door*: once `capacity` requests are
+//! waiting, new arrivals are shed immediately (the caller sees
+//! [`crate::Error::Shed`]) instead of queueing into latencies no client
+//! would wait out. Everything admitted is eventually served — requeues
+//! from preempted replicas re-enter at the *front*, above the admission
+//! limit, because dropping admitted work is the one thing the layer must
+//! never do.
+//!
+//! [`BoundedQueue::next_batch`] is the dynamic batcher's collection
+//! primitive for real-time (threaded) serving: it blocks until work
+//! exists, then closes a batch on `max_batch` OR a deadline, whichever
+//! comes first.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer / multi-consumer queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be positive");
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().items.is_empty()
+    }
+
+    /// Admission-controlled enqueue: `Err(item)` hands the item back when
+    /// the queue is at capacity (shed) or closed, without blocking.
+    pub fn offer(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed || q.items.len() >= self.capacity {
+            return Err(item);
+        }
+        q.items.push_back(item);
+        drop(q);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Requeue path for preempted in-flight work: re-enters at the front
+    /// (oldest first) and bypasses the admission limit — admitted requests
+    /// are never dropped, even if a preemption lands while the queue is
+    /// full. `items` must be in original queue order.
+    pub fn requeue_front(&self, items: Vec<T>) {
+        if items.is_empty() {
+            return;
+        }
+        let mut q = self.inner.lock().unwrap();
+        for item in items.into_iter().rev() {
+            q.items.push_front(item);
+        }
+        drop(q);
+        self.not_empty.notify_all();
+    }
+
+    /// Collect the next batch: blocks until at least one item exists, then
+    /// waits up to `max_wait` (from the moment the batch opened) for it to
+    /// fill to `max_batch`. Whichever limit trips first closes the batch.
+    /// Returns `None` once the queue is closed *and* drained. Under
+    /// collector contention a racing drain can leave a batch empty —
+    /// callers skip those rather than treating them as work.
+    pub fn next_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
+        let max_batch = max_batch.max(1);
+        let mut q = self.inner.lock().unwrap();
+        // phase 1: wait for the first item (or shutdown)
+        loop {
+            if !q.items.is_empty() {
+                break;
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.not_empty.wait(q).unwrap();
+        }
+        // phase 2: batch window opens now; fill until size or deadline
+        let deadline = Instant::now() + max_wait;
+        while q.items.len() < max_batch && !q.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let n = q.items.len().min(max_batch);
+        Some(q.items.drain(..n).collect())
+    }
+
+    /// Shut the queue: rejects new offers and wakes all collectors, which
+    /// drain remaining items and then observe `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+
+    #[test]
+    fn offer_sheds_at_capacity() {
+        let q = BoundedQueue::new(2);
+        assert!(q.offer(1).is_ok());
+        assert!(q.offer(2).is_ok());
+        assert_eq!(q.offer(3), Err(3), "third is shed with the item back");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn full_batch_closes_without_waiting() {
+        let q = BoundedQueue::new(64);
+        for i in 0..10 {
+            q.offer(i).unwrap();
+        }
+        let t0 = Instant::now();
+        // long deadline: must return immediately because size trips first
+        let b = q.next_batch(4, Duration::from_secs(30)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(5), "size-close must not wait");
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let q = BoundedQueue::new(64);
+        q.offer(7).unwrap();
+        let t0 = Instant::now();
+        let b = q.next_batch(16, Duration::from_millis(30)).unwrap();
+        assert_eq!(b, vec![7], "partial batch after the window");
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(25), "waited {waited:?}");
+        assert!(waited < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn requeue_front_preserves_order_and_ignores_capacity() {
+        let q = BoundedQueue::new(2);
+        q.offer(10).unwrap();
+        q.offer(11).unwrap();
+        // a preempted batch [1, 2] returns; queue already full
+        q.requeue_front(vec![1, 2]);
+        assert_eq!(q.len(), 4);
+        let b = q.next_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![1, 2, 10, 11], "requeued work is oldest, in order");
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = Arc::new(BoundedQueue::new(8));
+        q.offer(1).unwrap();
+        q.close();
+        assert_eq!(q.offer(2), Err(2), "closed queue rejects offers");
+        assert_eq!(q.next_batch(4, Duration::from_millis(1)), Some(vec![1]));
+        assert_eq!(q.next_batch(4, Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_collector() {
+        let q = Arc::new(BoundedQueue::<u32>::new(8));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.next_batch(4, Duration::from_secs(60)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None, "blocked collector observes shutdown");
+    }
+
+    #[test]
+    fn concurrent_producers_and_collectors_lose_nothing() {
+        let q = Arc::new(BoundedQueue::new(100_000));
+        let producers = 4;
+        let per = 1000;
+        std::thread::scope(|s| {
+            for p in 0..producers {
+                let q = q.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        q.offer(p * per + i).unwrap();
+                    }
+                });
+            }
+            let mut seen = Vec::new();
+            while seen.len() < producers * per {
+                if let Some(b) = q.next_batch(64, Duration::from_millis(5)) {
+                    seen.extend(b);
+                }
+            }
+            seen.sort();
+            assert_eq!(seen, (0..producers * per).collect::<Vec<_>>());
+        });
+    }
+}

@@ -1,0 +1,939 @@
+//! [`ServeSim`]: deterministic virtual-time serving simulation.
+//!
+//! This is where the serving layer meets the paper's §III.D claim — heavy
+//! traffic on "unstable cheap resources" — at a scale the threaded
+//! [`super::ServeStack`] cannot reach on one host. Replicas are simulated
+//! cloud nodes (provisioned through [`Provisioner`], optionally preempted
+//! by the [`SpotMarket`] or by *scripted storms*), requests arrive from an
+//! open- or closed-loop generator ([`crate::sim`]), the dynamic batcher is
+//! the shared [`BatchPolicy`], and the [`Autoscaler`] runs as a periodic
+//! control tick over windowed p99 / queue-depth signals.
+//!
+//! Invariants the tests pin down:
+//!
+//! * **No admitted request is ever dropped.** Preempting a replica
+//!   requeues its in-flight batch at the queue front (original admission
+//!   timestamps preserved, admission limit bypassed); the only way out of
+//!   the system is a response or an admission-time shed.
+//! * **Determinism.** Same config + seed ⇒ bit-identical [`ServeReport`].
+//!   Storms are scripted `(time, kills, notice)` triples, so a preemption
+//!   storm is a reproducible experiment rather than an anecdote.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cloud::{InstanceType, NodeHandle, Provisioner, ProvisionerConfig, SpotMarket,
+                   SpotMarketConfig};
+use crate::metrics::{CostLedger, Histogram, HistogramSnapshot};
+use crate::sim::{ClosedLoop, EventQueue, OpenLoop, RateSchedule, SimRng, SimTime};
+use crate::{Error, Result};
+
+use super::autoscaler::{Autoscaler, AutoscalerConfig, ScaleDecision, ScaleSignal};
+use super::batcher::BatchPolicy;
+
+/// Client model driving the simulation.
+#[derive(Debug, Clone)]
+pub enum Load {
+    Open(OpenLoop),
+    Closed(ClosedLoop),
+    /// Open loop whose rate follows a piecewise-constant [`RateSchedule`]
+    /// (ramps, flash crowds). Gaps are exponential at the rate in effect
+    /// when each arrival is scheduled; a gap that crosses a phase
+    /// boundary keeps its sampled length (boundary-exact thinning is not
+    /// modeled).
+    Scheduled(RateSchedule),
+}
+
+/// One scripted preemption wave: at `at_s`, `kills` replicas receive a
+/// `notice_s`-second warning (0 = instant kill, in-flight batches requeue).
+#[derive(Debug, Clone, Copy)]
+pub struct StormEvent {
+    pub at_s: f64,
+    pub kills: usize,
+    pub notice_s: f64,
+}
+
+/// Full serving-scenario configuration.
+#[derive(Debug, Clone)]
+pub struct ServeSimConfig {
+    pub batch: BatchPolicy,
+    /// Admission limit (requests beyond this are shed).
+    pub queue_depth: usize,
+    /// Replica batch service time: `base + per_item * n` seconds.
+    pub service_base_s: f64,
+    pub service_per_item_s: f64,
+    pub instance: InstanceType,
+    pub spot_replicas: bool,
+    pub initial_replicas: usize,
+    /// Initial replicas start Ready at t=0 (fleet provisioned before the
+    /// traffic cutover). Autoscaled additions always pay provisioning.
+    pub warm_start: bool,
+    pub autoscaler: AutoscalerConfig,
+    pub scale_interval_s: f64,
+    pub provisioner: ProvisionerConfig,
+    /// Background random preemptions; `None` = scripted storms only.
+    pub spot_market: Option<SpotMarketConfig>,
+    pub storm: Vec<StormEvent>,
+    pub seed: u64,
+    /// Record a per-tick timeline into [`ServeReport::trace`].
+    pub trace: bool,
+}
+
+impl Default for ServeSimConfig {
+    fn default() -> Self {
+        Self {
+            batch: BatchPolicy::default(),
+            queue_depth: 256,
+            service_base_s: 0.002,
+            service_per_item_s: 0.001,
+            instance: InstanceType::P3_2xlarge,
+            spot_replicas: true,
+            initial_replicas: 2,
+            warm_start: true,
+            autoscaler: AutoscalerConfig::default(),
+            scale_interval_s: 5.0,
+            provisioner: ProvisionerConfig::default(),
+            spot_market: None,
+            storm: Vec::new(),
+            seed: 0,
+            trace: false,
+        }
+    }
+}
+
+/// One autoscaler control-tick observation (when tracing is on).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TickTrace {
+    pub t_s: f64,
+    pub live: usize,
+    pub provisioning: usize,
+    pub queue_depth: usize,
+    pub window_p99_s: f64,
+    pub completed: u64,
+    pub shed: u64,
+}
+
+/// Outcome of one simulated serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    /// Load-generation horizon (drain continues past it).
+    pub duration_s: f64,
+    /// Virtual time when the last response left the system.
+    pub makespan_s: f64,
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub completed: u64,
+    /// Requests re-queued out of preempted in-flight batches.
+    pub requeued: u64,
+    /// Replicas lost to storms or the background spot market.
+    pub preemptions: u64,
+    /// Replicas provisioned beyond the initial fleet.
+    pub scale_ups: u64,
+    /// Replicas drained by the autoscaler's cold path.
+    pub scale_downs: u64,
+    pub replicas_launched: usize,
+    pub max_live: usize,
+    pub final_live: usize,
+    /// End-to-end latency (admission → response), seconds.
+    pub latency: HistogramSnapshot,
+    pub mean_batch_fill: f64,
+    pub throughput_rps: f64,
+    pub cost_usd: f64,
+    pub trace: Vec<TickTrace>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Req {
+    admitted_at: SimTime,
+    /// Closed-loop user to wake after the response (open loop: `None`).
+    user: Option<u64>,
+}
+
+struct Replica {
+    handle: NodeHandle,
+    ready: bool,
+    dead: bool,
+    /// In-flight batch; invalidated by bumping `epoch`.
+    busy: Option<Vec<Req>>,
+    epoch: u64,
+    preempted: bool,
+}
+
+impl Replica {
+    fn draining(&self) -> bool {
+        !self.handle.is_alive() && !self.dead
+    }
+
+    fn idle_and_serving(&self) -> bool {
+        self.ready && !self.dead && self.handle.is_alive() && self.busy.is_none()
+    }
+}
+
+#[derive(Debug)]
+enum Ev {
+    Arrive { user: Option<u64> },
+    ReplicaReady(u32),
+    BatchDone { rid: u32, epoch: u64 },
+    BatchDeadline,
+    ScaleTick,
+    Storm(usize),
+    ReplicaNotice(u32),
+    ReplicaKill(u32),
+}
+
+/// The simulator. Construct, then [`ServeSim::run`] one scenario.
+pub struct ServeSim {
+    cfg: ServeSimConfig,
+    provisioner: Provisioner,
+    spot: Option<SpotMarket>,
+    rng: SimRng,
+    events: EventQueue<Ev>,
+    replicas: BTreeMap<u32, Replica>,
+    queue: VecDeque<Req>,
+    deadline_at: Option<SimTime>,
+    latency: Histogram,
+    window: Histogram,
+    scaler: Autoscaler,
+    ledger: CostLedger,
+    // counters
+    offered: u64,
+    admitted: u64,
+    shed: u64,
+    completed: u64,
+    requeued: u64,
+    preemptions: u64,
+    scale_ups: u64,
+    scale_downs: u64,
+    launched: usize,
+    max_live: usize,
+    batches: u64,
+    batched_reqs: u64,
+    /// A ScaleTick is in the event queue. The control loop must stay
+    /// armed while admitted work can still appear (floor repair is what
+    /// guarantees "no admitted request is ever dropped").
+    tick_armed: bool,
+    load_end: SimTime,
+    think: Option<ClosedLoop>,
+    open: Option<OpenLoop>,
+    sched: Option<RateSchedule>,
+    last_completion: SimTime,
+    trace: Vec<TickTrace>,
+}
+
+impl ServeSim {
+    pub fn new(cfg: ServeSimConfig) -> Self {
+        let seed = cfg.seed;
+        Self {
+            provisioner: Provisioner::new(cfg.provisioner.clone(), seed),
+            spot: cfg.spot_market.clone().map(|c| SpotMarket::new(c, seed)),
+            rng: SimRng::new(seed ^ 0x5EE7_BA7C),
+            scaler: Autoscaler::new(cfg.autoscaler.clone()),
+            cfg,
+            events: EventQueue::new(),
+            replicas: BTreeMap::new(),
+            queue: VecDeque::new(),
+            deadline_at: None,
+            latency: Histogram::new(),
+            window: Histogram::new(),
+            ledger: CostLedger::new(),
+            offered: 0,
+            admitted: 0,
+            shed: 0,
+            completed: 0,
+            requeued: 0,
+            preemptions: 0,
+            scale_ups: 0,
+            scale_downs: 0,
+            launched: 0,
+            max_live: 0,
+            batches: 0,
+            batched_reqs: 0,
+            tick_armed: false,
+            load_end: SimTime::ZERO,
+            think: None,
+            open: None,
+            sched: None,
+            last_completion: SimTime::ZERO,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Run `load` for `duration_s` of virtual time (plus drain) and report.
+    pub fn run(&mut self, load: Load, duration_s: f64) -> Result<ServeReport> {
+        self.load_end = SimTime::from_secs_f64(duration_s);
+
+        // initial fleet
+        for _ in 0..self.cfg.initial_replicas {
+            self.launch_replica(SimTime::ZERO, self.cfg.warm_start);
+        }
+
+        // load generator bootstrap
+        match load {
+            Load::Open(gen) => {
+                self.open = Some(gen);
+                let first = SimTime::from_secs_f64(gen.gap_s(&mut self.rng));
+                if first <= self.load_end {
+                    self.events.push(first, Ev::Arrive { user: None });
+                }
+            }
+            Load::Closed(cl) => {
+                self.think = Some(cl);
+                for u in 0..cl.users as u64 {
+                    // stagger first issues across one think time
+                    let at = SimTime::from_secs_f64(self.rng.next_f64() * cl.think_s.max(1e-6));
+                    if at <= self.load_end {
+                        self.events.push(at, Ev::Arrive { user: Some(u) });
+                    }
+                }
+            }
+            Load::Scheduled(sched) => {
+                if let Some(first) =
+                    Self::sched_next(&sched, SimTime::ZERO, &mut self.rng, self.load_end)
+                {
+                    self.events.push(first, Ev::Arrive { user: None });
+                }
+                self.sched = Some(sched);
+            }
+        }
+
+        // storms + first control tick
+        for (i, storm) in self.cfg.storm.iter().enumerate() {
+            self.events.push(SimTime::from_secs_f64(storm.at_s), Ev::Storm(i));
+        }
+        self.arm_tick(SimTime::ZERO);
+
+        let max_events = 50_000_000u64;
+        let mut processed = 0u64;
+        let mut now = SimTime::ZERO;
+        while let Some((t, ev)) = self.events.pop() {
+            // the scenario is over once the load horizon has passed and
+            // every admitted request has been answered: remaining events
+            // are pre-sampled tails (spot kills hours out, idle
+            // provisioning) that would otherwise bill and count activity
+            // the scenario never observed
+            if t > self.load_end
+                && self.queue.is_empty()
+                && !self.replicas.values().any(|r| r.busy.is_some())
+            {
+                break;
+            }
+            now = t;
+            processed += 1;
+            if processed > max_events {
+                return Err(Error::Serve("serve sim event budget exceeded".into()));
+            }
+            match ev {
+                Ev::Arrive { user } => self.on_arrive(now, user),
+                Ev::ReplicaReady(rid) => self.on_ready(now, rid),
+                Ev::BatchDone { rid, epoch } => self.on_batch_done(now, rid, epoch),
+                Ev::BatchDeadline => {
+                    if self.deadline_at == Some(now) {
+                        self.deadline_at = None;
+                        self.try_dispatch(now);
+                    }
+                }
+                Ev::ScaleTick => self.on_scale_tick(now),
+                Ev::Storm(i) => self.on_storm(now, i),
+                Ev::ReplicaNotice(rid) => self.on_notice(now, rid),
+                Ev::ReplicaKill(rid) => self.on_kill(now, rid),
+            }
+        }
+
+        // bill whatever is still alive
+        let open_ids: Vec<u32> =
+            self.replicas.iter().filter(|(_, r)| !r.dead).map(|(id, _)| *id).collect();
+        let final_live = open_ids.len();
+        let end = now.max(self.load_end);
+        for rid in open_ids {
+            self.bill_and_mark_dead(rid, end);
+        }
+
+        Ok(ServeReport {
+            duration_s,
+            makespan_s: self.last_completion.as_secs_f64(),
+            offered: self.offered,
+            admitted: self.admitted,
+            shed: self.shed,
+            completed: self.completed,
+            requeued: self.requeued,
+            preemptions: self.preemptions,
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+            replicas_launched: self.launched,
+            max_live: self.max_live,
+            final_live,
+            latency: self.latency.snapshot(),
+            mean_batch_fill: if self.batches == 0 {
+                0.0
+            } else {
+                self.batched_reqs as f64 / self.batches as f64
+            },
+            throughput_rps: if duration_s > 0.0 {
+                self.completed as f64 / duration_s
+            } else {
+                0.0
+            },
+            cost_usd: self.ledger.total_usd(),
+            trace: std::mem::take(&mut self.trace),
+        })
+    }
+
+    // ------------------------------------------------------------ events
+
+    /// Schedule the next control tick if none is pending.
+    fn arm_tick(&mut self, now: SimTime) {
+        if !self.tick_armed {
+            self.tick_armed = true;
+            self.events.push(
+                now + SimTime::from_secs_f64(self.cfg.scale_interval_s),
+                Ev::ScaleTick,
+            );
+        }
+    }
+
+    fn on_arrive(&mut self, now: SimTime, user: Option<u64>) {
+        self.offered += 1;
+        if self.queue.len() >= self.cfg.queue_depth {
+            self.shed += 1;
+            // a shed closed-loop user retries after thinking
+            if let (Some(cl), Some(u)) = (self.think, user) {
+                self.schedule_user(now, cl, u);
+            }
+        } else {
+            self.admitted += 1;
+            self.queue.push_back(Req { admitted_at: now, user });
+            // admitted work must keep the control loop alive: a late
+            // arrival after the tick chain wound down still deserves
+            // floor repair if a kill then strands it
+            self.arm_tick(now);
+            self.try_dispatch(now);
+        }
+        if let Some(gen) = self.open {
+            let next = now + SimTime::from_secs_f64(gen.gap_s(&mut self.rng));
+            if next <= self.load_end {
+                self.events.push(next, Ev::Arrive { user: None });
+            }
+        } else if let Some(sched) = self.sched.as_ref() {
+            if let Some(next) = Self::sched_next(sched, now, &mut self.rng, self.load_end) {
+                self.events.push(next, Ev::Arrive { user: None });
+            }
+        }
+    }
+
+    /// Next arrival under a piecewise-constant schedule: an exponential
+    /// gap at the rate in effect now, or a jump to the next phase start
+    /// while the current rate is zero. `None` past `load_end`.
+    fn sched_next(
+        sched: &RateSchedule,
+        now: SimTime,
+        rng: &mut SimRng,
+        load_end: SimTime,
+    ) -> Option<SimTime> {
+        let mut t = now;
+        loop {
+            let rate = sched.rate_at(t.as_secs_f64());
+            if rate > 0.0 {
+                let next = t + SimTime::from_secs_f64(rng.gen_exp(1.0 / rate));
+                return (next <= load_end).then_some(next);
+            }
+            let change = sched.next_change_after(t.as_secs_f64())?;
+            t = SimTime::from_secs_f64(change);
+            if t > load_end {
+                return None;
+            }
+        }
+    }
+
+    fn schedule_user(&mut self, now: SimTime, cl: ClosedLoop, user: u64) {
+        let at = now + SimTime::from_secs_f64(cl.think_s);
+        if at <= self.load_end {
+            self.events.push(at, Ev::Arrive { user: Some(user) });
+        }
+    }
+
+    fn on_ready(&mut self, now: SimTime, rid: u32) {
+        let Some(r) = self.replicas.get_mut(&rid) else { return };
+        if r.dead || !r.handle.is_alive() {
+            return; // preempted or drained while provisioning
+        }
+        r.ready = true;
+        r.handle.mark_ready();
+        let live = self.live_count();
+        self.max_live = self.max_live.max(live);
+        self.try_dispatch(now);
+    }
+
+    fn on_batch_done(&mut self, now: SimTime, rid: u32, epoch: u64) {
+        let finished = {
+            let Some(r) = self.replicas.get_mut(&rid) else { return };
+            if r.dead || r.epoch != epoch {
+                return; // stale completion from a preempted assignment
+            }
+            r.busy.take()
+        };
+        let Some(batch) = finished else { return };
+        for req in &batch {
+            let lat = now.saturating_sub(req.admitted_at).as_secs_f64();
+            self.latency.record(lat);
+            self.window.record(lat);
+            self.completed += 1;
+            self.last_completion = now;
+            if let (Some(cl), Some(u)) = (self.think, req.user) {
+                self.schedule_user(now, cl, u);
+            }
+        }
+        // a draining replica (spot notice / scale-down) exits after its
+        // final batch
+        let drained = self.replicas.get(&rid).map(|r| r.draining()).unwrap_or(false);
+        if drained {
+            self.bill_and_mark_dead(rid, now);
+        }
+        self.try_dispatch(now);
+    }
+
+    fn on_scale_tick(&mut self, now: SimTime) {
+        self.tick_armed = false;
+        let snap = self.window.snapshot_and_reset();
+        let live = self.live_count();
+        let provisioning = self
+            .replicas
+            .values()
+            .filter(|r| !r.ready && !r.dead && r.handle.is_alive())
+            .count();
+        let sig = ScaleSignal {
+            now_s: now.as_secs_f64(),
+            queue_depth: self.queue.len(),
+            window_p99_s: snap.p99,
+            live,
+            provisioning,
+        };
+        match self.scaler.decide(&sig) {
+            ScaleDecision::Hold => {}
+            ScaleDecision::Up(n) => {
+                for _ in 0..n {
+                    self.launch_replica(now, false);
+                    self.scale_ups += 1;
+                }
+            }
+            ScaleDecision::Down(n) => {
+                // drain the newest live replicas first (LIFO release)
+                let victims: Vec<u32> = self
+                    .replicas
+                    .iter()
+                    .rev()
+                    .filter(|(_, r)| r.ready && !r.dead && r.handle.is_alive())
+                    .map(|(id, _)| *id)
+                    .take(n)
+                    .collect();
+                for rid in victims {
+                    self.scale_downs += 1;
+                    let idle = {
+                        let r = self.replicas.get_mut(&rid).expect("victim exists");
+                        r.handle.begin_drain();
+                        r.busy.is_none()
+                    };
+                    if idle {
+                        self.bill_and_mark_dead(rid, now);
+                    } // else: exits at its BatchDone
+                }
+            }
+        }
+        if self.cfg.trace {
+            self.trace.push(TickTrace {
+                t_s: now.as_secs_f64(),
+                live,
+                provisioning,
+                queue_depth: self.queue.len(),
+                window_p99_s: snap.p99,
+                completed: self.completed,
+                shed: self.shed,
+            });
+        }
+        // keep ticking while load is running or admitted work remains —
+        // floor repair must be reachable until the system drains (on_arrive
+        // and on_kill re-arm if work appears after the chain winds down)
+        let next = now + SimTime::from_secs_f64(self.cfg.scale_interval_s);
+        let work_pending =
+            !self.queue.is_empty() || self.replicas.values().any(|r| r.busy.is_some());
+        if next <= self.load_end || work_pending {
+            self.tick_armed = true;
+            self.events.push(next, Ev::ScaleTick);
+        }
+    }
+
+    fn on_storm(&mut self, now: SimTime, idx: usize) {
+        let storm = self.cfg.storm[idx];
+        let victims: Vec<u32> = self
+            .replicas
+            .iter()
+            .filter(|(_, r)| !r.dead && r.handle.is_alive())
+            .map(|(id, _)| *id)
+            .take(storm.kills)
+            .collect();
+        for rid in victims {
+            if storm.notice_s <= 0.0 {
+                self.on_kill(now, rid);
+            } else {
+                self.on_notice(now, rid);
+                self.events.push(
+                    now + SimTime::from_secs_f64(storm.notice_s),
+                    Ev::ReplicaKill(rid),
+                );
+            }
+        }
+    }
+
+    /// Two-minute-notice path: stop feeding the replica, let the in-flight
+    /// batch finish (it requeues at the hard kill if it overruns).
+    fn on_notice(&mut self, now: SimTime, rid: u32) {
+        let Some(r) = self.replicas.get_mut(&rid) else { return };
+        if r.dead || !r.handle.begin_drain() {
+            return;
+        }
+        self.note_preemption(rid);
+        let idle = self.replicas.get(&rid).map(|r| r.busy.is_none()).unwrap_or(false);
+        if idle {
+            self.bill_and_mark_dead(rid, now);
+        }
+    }
+
+    fn on_kill(&mut self, now: SimTime, rid: u32) {
+        let requeue = {
+            let Some(r) = self.replicas.get_mut(&rid) else { return };
+            if r.dead {
+                return;
+            }
+            r.epoch += 1; // any scheduled BatchDone is now stale
+            r.busy.take()
+        };
+        self.note_preemption(rid);
+        if let Some(batch) = requeue {
+            // in-flight work returns to the FRONT in original order,
+            // admission timestamps intact, admission limit bypassed:
+            // admitted requests are never dropped
+            self.requeued += batch.len() as u64;
+            for req in batch.into_iter().rev() {
+                self.queue.push_front(req);
+            }
+        }
+        self.bill_and_mark_dead(rid, now);
+        if !self.queue.is_empty() {
+            // stranded work needs the control loop for floor repair
+            self.arm_tick(now);
+        }
+        self.try_dispatch(now);
+    }
+
+    fn note_preemption(&mut self, rid: u32) {
+        if let Some(r) = self.replicas.get_mut(&rid) {
+            if !r.preempted {
+                r.preempted = true;
+                self.preemptions += 1;
+            }
+        }
+    }
+
+    // ------------------------------------------------------- dispatching
+
+    /// Assign closed batches to idle replicas until neither the size nor
+    /// the deadline rule can close one; schedule the deadline wake-up for
+    /// a partial batch.
+    fn try_dispatch(&mut self, now: SimTime) {
+        loop {
+            if self.queue.is_empty() {
+                return;
+            }
+            let Some(rid) = self
+                .replicas
+                .iter()
+                .find(|(_, r)| r.idle_and_serving())
+                .map(|(id, _)| *id)
+            else {
+                return;
+            };
+            let oldest = self.queue.front().expect("non-empty").admitted_at;
+            if !self.cfg.batch.should_close(self.queue.len(), oldest, now) {
+                // partial batch: arm the deadline wake-up if it is earlier
+                // than whatever is already armed
+                let deadline = self.cfg.batch.close_at(oldest);
+                let rearm = match self.deadline_at {
+                    Some(d) => deadline < d,
+                    None => true,
+                };
+                if rearm {
+                    self.deadline_at = Some(deadline);
+                    self.events.push(deadline, Ev::BatchDeadline);
+                }
+                return;
+            }
+            let take = self.cfg.batch.take(self.queue.len());
+            let batch: Vec<Req> = self.queue.drain(..take).collect();
+            self.batches += 1;
+            self.batched_reqs += batch.len() as u64;
+            let service = self.cfg.service_base_s
+                + self.cfg.service_per_item_s * batch.len() as f64;
+            let r = self.replicas.get_mut(&rid).expect("found above");
+            r.busy = Some(batch);
+            let epoch = r.epoch;
+            self.events
+                .push(now + SimTime::from_secs_f64(service), Ev::BatchDone { rid, epoch });
+        }
+    }
+
+    // ---------------------------------------------------------- replicas
+
+    fn launch_replica(&mut self, now: SimTime, warm: bool) {
+        let mut handle = self.provisioner.request(self.cfg.instance, self.cfg.spot_replicas, now);
+        let rid = handle.id;
+        let ready_at = if warm { now } else { handle.ready_at };
+        if warm {
+            handle.mark_ready();
+            handle.ready_at = now;
+        }
+        self.events.push(ready_at, Ev::ReplicaReady(rid));
+        if self.cfg.spot_replicas {
+            if let Some(spot) = self.spot.as_mut() {
+                let (notice, kill) = spot.sample_preemption(now);
+                self.events.push(notice, Ev::ReplicaNotice(rid));
+                self.events.push(kill, Ev::ReplicaKill(rid));
+            }
+        }
+        self.replicas.insert(
+            rid,
+            Replica {
+                handle,
+                ready: false,
+                dead: false,
+                busy: None,
+                epoch: 0,
+                preempted: false,
+            },
+        );
+        self.launched += 1;
+    }
+
+    fn live_count(&self) -> usize {
+        self.replicas
+            .values()
+            .filter(|r| r.ready && !r.dead && r.handle.is_alive())
+            .count()
+    }
+
+    fn bill_and_mark_dead(&mut self, rid: u32, now: SimTime) {
+        let Some(r) = self.replicas.get_mut(&rid) else { return };
+        if r.dead {
+            return;
+        }
+        r.dead = true;
+        r.handle.terminate();
+        let spec = r.handle.ty.spec();
+        let hours = now.saturating_sub(r.handle.launched_at).as_secs_f64() / 3600.0;
+        self.ledger.charge(spec.name, r.handle.spot, spec.price(r.handle.spot), hours);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-calculable scenario: jitter-free provisioning, metronome
+    /// arrivals, 10-second batches, one scripted instant kill mid-batch.
+    fn exact_cfg() -> ServeSimConfig {
+        ServeSimConfig {
+            batch: BatchPolicy { max_batch: 8, max_delay_s: 0.005 },
+            queue_depth: 64,
+            service_base_s: 10.0,
+            service_per_item_s: 0.0,
+            initial_replicas: 1,
+            warm_start: false,
+            // only floor repair may fire: hot/cold signals are pushed out
+            // of reach so the timeline stays hand-calculable
+            autoscaler: AutoscalerConfig {
+                min_replicas: 1,
+                max_replicas: 4,
+                slo_p99_s: 1e9,
+                backlog_per_replica: 1e9,
+                up_cooldown_s: 5.0,
+                down_cooldown_s: 1e9,
+                ..Default::default()
+            },
+            scale_interval_s: 5.0,
+            provisioner: ProvisionerConfig {
+                warm_cache_prob: 1.0,
+                jitter: 0.0,
+                ..Default::default()
+            },
+            storm: vec![StormEvent { at_s: 60.0, kills: 1, notice_s: 0.0 }],
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn preempted_batch_requeues_and_completes_exactly() {
+        // timeline: arrivals at t=1..=5; replica 0 ready at t=55
+        // (45 boot + 8 warm pull + 2 mount, jitter 0); batch of 5 starts at
+        // 55, would finish at 65; instant kill at 60 requeues all 5; floor
+        // repair at the t=60 tick launches replica 1, ready at 115; the
+        // redone batch completes at 125. Nothing is lost.
+        let mut sim = ServeSim::new(exact_cfg());
+        let r = sim.run(Load::Open(OpenLoop::metronome(1.0)), 5.0).unwrap();
+        assert_eq!(r.offered, 5);
+        assert_eq!(r.admitted, 5);
+        assert_eq!(r.shed, 0);
+        assert_eq!(r.completed, 5, "zero dropped despite the mid-batch kill");
+        assert_eq!(r.requeued, 5, "whole in-flight batch came back");
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.replicas_launched, 2, "initial + floor repair");
+        assert_eq!(r.final_live, 1);
+        assert!((r.makespan_s - 125.0).abs() < 1e-6, "makespan {}", r.makespan_s);
+        // the oldest request (t=1) waited the whole saga: 124 s
+        assert!((r.latency.max - 124.0).abs() < 1e-6, "max latency {}", r.latency.max);
+        assert_eq!(r.latency.count, 5);
+    }
+
+    #[test]
+    fn graceful_notice_lets_batch_finish_without_requeue() {
+        // same scenario, but a 120 s notice instead of an instant kill:
+        // the batch (55 → 65) finishes inside the notice window, the
+        // replica drains, and nothing requeues
+        let mut cfg = exact_cfg();
+        cfg.storm = vec![StormEvent { at_s: 60.0, kills: 1, notice_s: 120.0 }];
+        let mut sim = ServeSim::new(cfg);
+        let r = sim.run(Load::Open(OpenLoop::metronome(1.0)), 5.0).unwrap();
+        assert_eq!(r.completed, 5);
+        assert_eq!(r.requeued, 0, "graceful drain: in-flight batch finished");
+        assert_eq!(r.preemptions, 1);
+        assert!((r.makespan_s - 65.0).abs() < 1e-6, "makespan {}", r.makespan_s);
+    }
+
+    fn storm_cfg() -> ServeSimConfig {
+        ServeSimConfig {
+            batch: BatchPolicy { max_batch: 8, max_delay_s: 0.005 },
+            queue_depth: 128,
+            service_base_s: 0.002,
+            service_per_item_s: 0.001,
+            initial_replicas: 8,
+            warm_start: true,
+            autoscaler: AutoscalerConfig {
+                min_replicas: 2,
+                max_replicas: 16,
+                slo_p99_s: 0.25,
+                up_step: 2,
+                up_cooldown_s: 10.0,
+                down_cooldown_s: 1e9, // storms only; no cold bleed
+                ..Default::default()
+            },
+            scale_interval_s: 5.0,
+            storm: vec![StormEvent { at_s: 60.0, kills: 7, notice_s: 0.0 }],
+            seed: 42,
+            ..Default::default()
+        }
+    }
+
+    /// ISSUE 2 acceptance: the autoscaler holds the p99 SLO through a
+    /// scripted preemption storm with zero dropped (non-shed) requests.
+    #[test]
+    fn autoscaler_holds_slo_through_preemption_storm() {
+        let mut sim = ServeSim::new(storm_cfg());
+        let r = sim.run(Load::Open(OpenLoop::poisson(1200.0)), 180.0).unwrap();
+        assert_eq!(r.preemptions, 7, "the storm reclaimed 7 of 8 replicas");
+        assert_eq!(
+            r.completed, r.admitted,
+            "zero dropped: every admitted request was answered ({r:?})"
+        );
+        assert!(
+            r.latency.p99 <= 0.25,
+            "p99 {}s blew the 0.25s SLO (shedding + scale-up must bound waits)",
+            r.latency.p99
+        );
+        assert!(r.shed > 0, "overload during the capacity gap must shed, not queue");
+        assert!(r.scale_ups > 0, "the autoscaler reacted to the storm");
+        assert!(
+            r.offered > 200_000,
+            "open loop kept offering through the storm: {}",
+            r.offered
+        );
+        // batching actually happened under load
+        assert!(r.mean_batch_fill > 1.5, "mean fill {}", r.mean_batch_fill);
+    }
+
+    #[test]
+    fn storm_run_is_deterministic() {
+        let run = || {
+            let mut cfg = storm_cfg();
+            cfg.trace = true;
+            ServeSim::new(cfg).run(Load::Open(OpenLoop::poisson(1200.0)), 60.0).unwrap()
+        };
+        assert_eq!(run(), run(), "same seed, bit-identical report");
+    }
+
+    #[test]
+    fn closed_loop_is_self_limiting() {
+        let mut cfg = storm_cfg();
+        cfg.storm = vec![];
+        cfg.initial_replicas = 4;
+        let cl = ClosedLoop { users: 64, think_s: 0.05 };
+        let mut sim = ServeSim::new(cfg);
+        let r = sim.run(Load::Closed(cl), 30.0).unwrap();
+        assert_eq!(r.completed, r.admitted);
+        assert_eq!(r.shed, 0, "64 users can never exceed a 128-deep queue");
+        assert!(r.completed > 5_000, "completed {}", r.completed);
+        // closed-loop law: throughput <= users / think
+        assert!(
+            r.throughput_rps <= cl.max_throughput_rps(0.0) * 1.01,
+            "throughput {} exceeds the closed-loop bound",
+            r.throughput_rps
+        );
+    }
+
+    #[test]
+    fn cold_autoscaler_drains_to_min() {
+        let mut cfg = storm_cfg();
+        cfg.storm = vec![];
+        cfg.autoscaler.down_cooldown_s = 10.0;
+        cfg.autoscaler.min_replicas = 2;
+        let mut sim = ServeSim::new(cfg);
+        // 100 rps against 8 replicas: cold from the first window
+        let r = sim.run(Load::Open(OpenLoop::poisson(100.0)), 180.0).unwrap();
+        assert_eq!(r.completed, r.admitted);
+        assert_eq!(r.shed, 0);
+        assert!(r.scale_downs > 0, "idle fleet must shrink");
+        assert_eq!(r.final_live, 2, "drained to the floor: {r:?}");
+        assert!(r.latency.p99 < 0.25, "scale-down must not break the SLO");
+    }
+
+    #[test]
+    fn scheduled_flash_crowd_sheds_then_recovers() {
+        let mut cfg = storm_cfg();
+        cfg.storm = vec![];
+        cfg.initial_replicas = 2; // 1600 req/s of capacity
+        let sched =
+            RateSchedule::new(vec![(0.0, 200.0), (30.0, 4000.0), (60.0, 200.0)]);
+        let mut sim = ServeSim::new(cfg);
+        let r = sim.run(Load::Scheduled(sched), 90.0).unwrap();
+        assert_eq!(r.completed, r.admitted, "the crowd never drops admitted work");
+        assert!(r.shed > 0, "a 4000 req/s crowd against 1600 req/s must shed: {r:?}");
+        assert!(r.offered > 100_000, "offered {}", r.offered);
+        assert!(r.scale_ups > 0, "the backlog during the crowd triggers scale-up");
+    }
+
+    #[test]
+    fn background_spot_market_preempts_and_recovers() {
+        let mut cfg = storm_cfg();
+        cfg.storm = vec![];
+        cfg.initial_replicas = 4;
+        // floor at 3 so replica loss reliably dips below the minimum and
+        // exercises floor repair regardless of which replicas the market
+        // happens to reclaim first
+        cfg.autoscaler.min_replicas = 3;
+        // vicious market: mean 40 s to preemption, 10 s notice
+        cfg.spot_market =
+            Some(SpotMarketConfig { mean_ttp_s: 40.0, notice_s: 10.0 });
+        let mut sim = ServeSim::new(cfg);
+        let r = sim.run(Load::Open(OpenLoop::poisson(400.0)), 120.0).unwrap();
+        assert!(r.preemptions > 0, "market this hostile must preempt: {r:?}");
+        assert_eq!(r.completed, r.admitted, "churn never drops admitted work");
+        assert!(r.replicas_launched > 4, "floor repair replaced lost replicas");
+    }
+}

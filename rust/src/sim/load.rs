@@ -1,0 +1,155 @@
+//! Deterministic load generators for the serving scenario family.
+//!
+//! Two canonical client models drive every serving experiment:
+//!
+//! * **Open loop** — requests arrive on their own schedule (Poisson or
+//!   metronome), regardless of how the system is doing. This is internet
+//!   traffic: overload does not slow the clients down, which is exactly
+//!   why admission control exists.
+//! * **Closed loop** — a fixed population of users, each with at most one
+//!   request outstanding, re-issuing after a think time. Throughput is
+//!   self-limiting (`users / (think + latency)`), the classic
+//!   interactive-session model.
+//!
+//! Both are pure samplers over [`SimRng`], so a seeded run reproduces
+//! bit-for-bit. A [`RateSchedule`] composes piecewise-constant open-loop
+//! phases for scripted scenarios (ramps, flash crowds, overload storms).
+
+use super::SimRng;
+
+/// Open-loop arrival process at a target rate.
+#[derive(Debug, Clone, Copy)]
+pub struct OpenLoop {
+    /// Mean arrival rate, requests per second. Must be > 0.
+    pub rate_rps: f64,
+    /// Poisson (exponential gaps) when true; a fixed-gap metronome when
+    /// false (useful for hand-calculable tests).
+    pub poisson: bool,
+}
+
+impl OpenLoop {
+    pub fn poisson(rate_rps: f64) -> Self {
+        Self { rate_rps, poisson: true }
+    }
+
+    pub fn metronome(rate_rps: f64) -> Self {
+        Self { rate_rps, poisson: false }
+    }
+
+    /// Seconds until the next arrival.
+    pub fn gap_s(&self, rng: &mut SimRng) -> f64 {
+        debug_assert!(self.rate_rps > 0.0);
+        let mean = 1.0 / self.rate_rps;
+        if self.poisson {
+            rng.gen_exp(mean)
+        } else {
+            mean
+        }
+    }
+}
+
+/// Closed-loop population: `users` clients, one request in flight each,
+/// re-issuing `think_s` after the previous response (or shed decision).
+#[derive(Debug, Clone, Copy)]
+pub struct ClosedLoop {
+    pub users: usize,
+    pub think_s: f64,
+}
+
+impl ClosedLoop {
+    /// Upper bound on sustained throughput for a given mean latency.
+    pub fn max_throughput_rps(&self, latency_s: f64) -> f64 {
+        self.users as f64 / (self.think_s + latency_s).max(1e-9)
+    }
+}
+
+/// Piecewise-constant open-loop rate over time: `(start_s, rate_rps)`
+/// phases, sorted by start. Rate before the first phase is 0.
+#[derive(Debug, Clone, Default)]
+pub struct RateSchedule {
+    phases: Vec<(f64, f64)>,
+}
+
+impl RateSchedule {
+    /// Build from phases; sorts by start time.
+    pub fn new(mut phases: Vec<(f64, f64)>) -> Self {
+        phases.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite phase starts"));
+        Self { phases }
+    }
+
+    /// A single constant rate from t=0.
+    pub fn constant(rate_rps: f64) -> Self {
+        Self { phases: vec![(0.0, rate_rps)] }
+    }
+
+    /// The rate in effect at time `t_s`.
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        let mut rate = 0.0;
+        for &(start, r) in &self.phases {
+            if start <= t_s {
+                rate = r;
+            } else {
+                break;
+            }
+        }
+        rate
+    }
+
+    /// First phase boundary strictly after `t_s` (arrival generators jump
+    /// here when the current rate is zero).
+    pub fn next_change_after(&self, t_s: f64) -> Option<f64> {
+        self.phases.iter().map(|&(start, _)| start).find(|&start| start > t_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_gap_mean_matches_rate() {
+        let gen = OpenLoop::poisson(50.0);
+        let mut rng = SimRng::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| gen.gap_s(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 0.02).abs() < 0.001, "mean gap {mean}");
+    }
+
+    #[test]
+    fn metronome_is_exact() {
+        let gen = OpenLoop::metronome(4.0);
+        let mut rng = SimRng::new(1);
+        assert_eq!(gen.gap_s(&mut rng), 0.25);
+        assert_eq!(gen.gap_s(&mut rng), 0.25);
+    }
+
+    #[test]
+    fn closed_loop_throughput_bound() {
+        let cl = ClosedLoop { users: 100, think_s: 0.9 };
+        assert!((cl.max_throughput_rps(0.1) - 100.0).abs() < 1e-9);
+        // zero think + zero latency stays finite
+        let hot = ClosedLoop { users: 1, think_s: 0.0 };
+        assert!(hot.max_throughput_rps(0.0).is_finite());
+    }
+
+    #[test]
+    fn schedule_lookup() {
+        let s = RateSchedule::new(vec![(60.0, 500.0), (0.0, 100.0), (120.0, 0.0)]);
+        assert_eq!(s.rate_at(0.0), 100.0);
+        assert_eq!(s.rate_at(59.9), 100.0);
+        assert_eq!(s.rate_at(60.0), 500.0);
+        assert_eq!(s.rate_at(119.0), 500.0);
+        assert_eq!(s.rate_at(1e9), 0.0);
+        assert_eq!(RateSchedule::default().rate_at(5.0), 0.0);
+        assert_eq!(RateSchedule::constant(7.0).rate_at(1e6), 7.0);
+    }
+
+    #[test]
+    fn schedule_next_change() {
+        let s = RateSchedule::new(vec![(0.0, 100.0), (60.0, 500.0), (120.0, 0.0)]);
+        assert_eq!(s.next_change_after(0.0), Some(60.0));
+        assert_eq!(s.next_change_after(60.0), Some(120.0));
+        assert_eq!(s.next_change_after(120.0), None);
+        assert_eq!(RateSchedule::default().next_change_after(0.0), None);
+    }
+}

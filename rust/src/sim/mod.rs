@@ -4,12 +4,16 @@
 //! inference, spot preemptions) runs on *virtual time*: benches advance a
 //! [`SimClock`] through an [`EventQueue`] instead of sleeping, so a
 //! 28.4-day hyperparameter sweep simulates in milliseconds while remaining
-//! deterministic and seedable.
+//! deterministic and seedable. [`OpenLoop`] / [`ClosedLoop`] /
+//! [`RateSchedule`] supply the canonical client models for the serving
+//! scenarios.
 
 mod clock;
 mod events;
+mod load;
 mod rng;
 
 pub use clock::{SimClock, SimTime};
 pub use events::EventQueue;
+pub use load::{ClosedLoop, OpenLoop, RateSchedule};
 pub use rng::SimRng;

@@ -18,6 +18,10 @@ pub struct CountingStore {
     inner: StoreHandle,
     total_gets: AtomicU64,
     total_puts: AtomicU64,
+    /// Range GETs only (subset of `total_gets`).
+    total_range_gets: AtomicU64,
+    /// Bytes actually returned by get/get_range (transfer accounting).
+    total_get_bytes: AtomicU64,
     gets_by_key: Mutex<BTreeMap<String, u64>>,
 }
 
@@ -27,6 +31,8 @@ impl CountingStore {
             inner,
             total_gets: AtomicU64::new(0),
             total_puts: AtomicU64::new(0),
+            total_range_gets: AtomicU64::new(0),
+            total_get_bytes: AtomicU64::new(0),
             gets_by_key: Mutex::new(BTreeMap::new()),
         }
     }
@@ -39,6 +45,16 @@ impl CountingStore {
     /// Total whole-object and range GETs issued so far.
     pub fn total_gets(&self) -> u64 {
         self.total_gets.load(Ordering::SeqCst)
+    }
+
+    /// GETs that used a byte range rather than fetching the whole object.
+    pub fn total_range_gets(&self) -> u64 {
+        self.total_range_gets.load(Ordering::SeqCst)
+    }
+
+    /// Bytes transferred out of the store by successful get/get_range.
+    pub fn total_get_bytes(&self) -> u64 {
+        self.total_get_bytes.load(Ordering::SeqCst)
     }
 
     pub fn total_puts(&self) -> u64 {
@@ -58,6 +74,8 @@ impl CountingStore {
     pub fn reset(&self) {
         self.total_gets.store(0, Ordering::SeqCst);
         self.total_puts.store(0, Ordering::SeqCst);
+        self.total_range_gets.store(0, Ordering::SeqCst);
+        self.total_get_bytes.store(0, Ordering::SeqCst);
         self.gets_by_key.lock().unwrap().clear();
     }
 }
@@ -70,12 +88,17 @@ impl ObjectStore for CountingStore {
 
     fn get(&self, key: &str) -> Result<Vec<u8>> {
         self.record_get(key);
-        self.inner.get(key)
+        let out = self.inner.get(key)?;
+        self.total_get_bytes.fetch_add(out.len() as u64, Ordering::SeqCst);
+        Ok(out)
     }
 
     fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
         self.record_get(key);
-        self.inner.get_range(key, offset, len)
+        self.total_range_gets.fetch_add(1, Ordering::SeqCst);
+        let out = self.inner.get_range(key, offset, len)?;
+        self.total_get_bytes.fetch_add(out.len() as u64, Ordering::SeqCst);
+        Ok(out)
     }
 
     fn head(&self, key: &str) -> Result<u64> {
@@ -108,14 +131,18 @@ mod tests {
         assert_eq!(s.get_range("k2", 1, 2).unwrap(), b"ef");
         assert_eq!(s.total_puts(), 2);
         assert_eq!(s.total_gets(), 3);
+        assert_eq!(s.total_range_gets(), 1);
+        assert_eq!(s.total_get_bytes(), 3 + 3 + 2, "two full k1 gets + 2-byte range");
         assert_eq!(s.gets_for("k1"), 2);
         assert_eq!(s.gets_for("k2"), 1);
         assert_eq!(s.gets_for("missing"), 0);
-        // misses still count as attempts and still error
+        // misses still count as attempts and still error (no bytes moved)
         assert!(s.get("nope").is_err());
         assert_eq!(s.gets_for("nope"), 1);
+        assert_eq!(s.total_get_bytes(), 8);
         s.reset();
         assert_eq!(s.total_gets(), 0);
+        assert_eq!(s.total_get_bytes(), 0);
         assert!(s.gets_by_key().is_empty());
     }
 
