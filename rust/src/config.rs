@@ -1,18 +1,65 @@
-//! Crate-level configuration: artifact locations and run options.
+//! Crate-level configuration: artifact locations, run options, and the
+//! HFS mount tunables.
+//!
+//! Every knob here is documented (defaults and the subsystem that reads
+//! it) in `docs/CONFIG.md`.
 
 use std::path::{Path, PathBuf};
 
 /// Where the AOT artifacts live and which preset to run.
+///
+/// Read by [`crate::runtime`] (artifact loading) and the CLI entry points.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Directory holding `manifest.json` and the lowered HLO artifacts.
     pub artifacts_dir: PathBuf,
+    /// Preset name (`tiny`, ...) selecting which artifact set to execute.
     pub preset: String,
+    /// RNG seed threaded through deterministic runs.
     pub seed: u64,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
         Self { artifacts_dir: default_artifacts_dir(), preset: "tiny".into(), seed: 0 }
+    }
+}
+
+/// Tunables of one mounted HFS namespace: the RAM cache tier, the
+/// optional local-disk spill tier, and adaptive prefetch.
+///
+/// Read by [`crate::hfs::HyperFs::mount_cfg`]. The convenience
+/// constructors `mount` / `mount_with` cover the common cases (defaults;
+/// explicit RAM budget + prefetch cap); this struct is the full surface.
+#[derive(Debug, Clone)]
+pub struct HfsConfig {
+    /// Byte budget of the in-RAM chunk cache (models instance memory).
+    pub cache_bytes: u64,
+    /// Directory for the local-disk spill tier; `None` disables spilling
+    /// (RAM evictions are dropped, as on diskless nodes).
+    pub spill_dir: Option<PathBuf>,
+    /// Byte budget of the spill tier's on-disk LRU (only read when
+    /// `spill_dir` is set).
+    pub spill_bytes: u64,
+    /// Cap on the adaptive prefetch depth, in chunks (0 disables
+    /// readahead). The working depth moves within `[0, cap]` with the
+    /// observed access pattern; this is the ceiling, not a fixed depth.
+    pub prefetch_max_depth: u32,
+    /// Run readahead and spill writes on background fetch lanes. Turn off
+    /// for deterministic tests/benches (all I/O inline) and virtual-time
+    /// sims (no threads at all).
+    pub background_prefetch: bool,
+}
+
+impl Default for HfsConfig {
+    fn default() -> Self {
+        Self {
+            cache_bytes: 1 << 30,
+            spill_dir: None,
+            spill_bytes: 8 << 30,
+            prefetch_max_depth: 8,
+            background_prefetch: true,
+        }
     }
 }
 
@@ -48,6 +95,14 @@ mod tests {
     fn default_config() {
         let c = RunConfig::default();
         assert_eq!(c.preset, "tiny");
+    }
+
+    #[test]
+    fn default_hfs_config_spills_nowhere() {
+        let c = HfsConfig::default();
+        assert!(c.spill_dir.is_none());
+        assert!(c.prefetch_max_depth > 0);
+        assert!(c.background_prefetch);
     }
 
     #[test]

@@ -100,17 +100,18 @@ impl Shard {
         }
     }
 
-    /// Remove the entry in `slot` entirely, returning its byte size.
-    fn remove_slot(&mut self, slot: usize) -> u64 {
+    /// Remove the entry in `slot` entirely, returning its payload (so an
+    /// evicted chunk can flow to a lower cache tier instead of dropping).
+    fn remove_slot(&mut self, slot: usize) -> ChunkData {
         self.detach(slot);
         let size = self.slots[slot].data.len() as u64;
         let id = self.slots[slot].id;
         self.map.remove(&id);
         self.used_bytes -= size;
-        // drop the payload now; the slab slot is recycled
-        self.slots[slot].data = Arc::new(Vec::new());
+        // hand the payload out now; the slab slot is recycled
+        let data = std::mem::replace(&mut self.slots[slot].data, Arc::new(Vec::new()));
         self.free.push(slot);
-        size
+        data
     }
 
     fn alloc_slot(&mut self, id: u32, data: ChunkData) -> usize {
@@ -168,6 +169,7 @@ impl ChunkCache {
         &self.shards[id as usize % self.shards.len()]
     }
 
+    /// Number of independent LRU shards (1 for tiny budgets).
     pub fn shard_count(&self) -> usize {
         self.shards.len()
     }
@@ -189,10 +191,19 @@ impl ChunkCache {
     /// Insert a chunk, evicting LRU entries of its shard to fit. O(1) per
     /// evicted entry. Chunks bigger than the shard budget are not cached.
     pub fn insert(&self, id: u32, data: ChunkData) {
+        self.insert_evicting(id, data);
+    }
+
+    /// Like [`ChunkCache::insert`], but returns the `(id, payload)` pairs
+    /// evicted to make room, so the caller can demote them to a lower tier
+    /// (the disk spill tier) instead of dropping them. Replacing an
+    /// existing entry for `id` is not an eviction and is not reported.
+    pub fn insert_evicting(&self, id: u32, data: ChunkData) -> Vec<(u32, ChunkData)> {
         let size = data.len() as u64;
+        let mut evicted = Vec::new();
         let mut s = self.shard(id).lock().unwrap();
         if size > s.capacity_bytes {
-            return;
+            return evicted;
         }
         let existing = s.map.get(&id).copied();
         if let Some(slot) = existing {
@@ -203,31 +214,38 @@ impl ChunkCache {
             if victim == NIL {
                 break;
             }
-            s.remove_slot(victim);
+            let victim_id = s.slots[victim].id;
+            evicted.push((victim_id, s.remove_slot(victim)));
             self.evictions.inc();
         }
         let slot = s.alloc_slot(id, data);
         s.map.insert(id, slot);
         s.used_bytes += size;
         s.push_front(slot);
+        evicted
     }
 
+    /// Is `id` currently cached? Does not refresh recency.
     pub fn contains(&self, id: u32) -> bool {
         self.shard(id).lock().unwrap().map.contains_key(&id)
     }
 
+    /// Bytes of chunk payload currently held, summed across shards.
     pub fn used_bytes(&self) -> u64 {
         self.shards.iter().map(|s| s.lock().unwrap().used_bytes).sum()
     }
 
+    /// Cached chunk count, summed across shards.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
+    /// True when no chunk is cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Drop every cached chunk (shard by shard; not atomic across shards).
     pub fn clear(&self) {
         for shard in self.shards.iter() {
             let mut s = shard.lock().unwrap();
@@ -290,6 +308,22 @@ mod tests {
         assert_eq!(c.len(), 1);
         assert!(c.contains(3));
         assert_eq!(c.evictions(), 2);
+    }
+
+    #[test]
+    fn insert_evicting_hands_out_victims_in_lru_order() {
+        let c = ChunkCache::with_shards(100, 1);
+        c.insert(1, chunk(40));
+        c.insert(2, chunk(40));
+        let evicted = c.insert_evicting(3, chunk(90));
+        let ids: Vec<u32> = evicted.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![1, 2], "oldest first");
+        assert_eq!(evicted[0].1.len(), 40, "payload travels with the id");
+        // replacing an entry is not an eviction
+        assert!(c.insert_evicting(3, chunk(50)).is_empty());
+        // an uncacheable chunk evicts nothing
+        assert!(c.insert_evicting(4, chunk(500)).is_empty());
+        assert!(c.contains(3));
     }
 
     #[test]

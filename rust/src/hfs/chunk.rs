@@ -18,29 +18,55 @@ use crate::{Error, Result};
 /// A file inside the namespace: where it lives in which chunk.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FileEntry {
+    /// Full path within the namespace.
     pub path: String,
+    /// Id of the chunk holding this file's bytes.
     pub chunk: u32,
+    /// Byte offset of the file within its chunk.
     pub offset: u64,
+    /// File length in bytes.
     pub len: u64,
 }
 
-/// A chunk object and its total size.
+/// A chunk object, its total size, and its content digest.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ChunkRef {
+    /// Chunk id (also its position in the chunk table).
     pub id: u32,
+    /// Packed size of the chunk object in bytes.
     pub len: u64,
+    /// FNV-1a 64 digest of the chunk bytes, recorded at upload time; the
+    /// spill tier verifies spilled files against it so a rebuilt
+    /// namespace invalidates stale disk data even at identical lengths.
+    /// `0` = unknown (manifest written before digests existed): length
+    /// checks still apply, digest checks are skipped.
+    pub hash: u64,
+}
+
+/// 64-bit FNV-1a — the chunk content digest recorded in manifests at
+/// upload time and re-verified by the spill tier before serving.
+pub(crate) fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// The namespace manifest: ordered file table plus chunk table.
 #[derive(Debug, Clone, Default)]
 pub struct FsManifest {
+    /// Target chunk size the namespace was packed with.
     pub chunk_size: u64,
-    /// Files in upload (≈ read) order.
+    /// Files, sorted by path after seal (upload order before).
     pub files: Vec<FileEntry>,
+    /// Chunk table, in id order.
     pub chunks: Vec<ChunkRef>,
 }
 
 impl FsManifest {
+    /// An empty manifest packing into `chunk_size`-byte chunks.
     pub fn new(chunk_size: u64) -> Self {
         Self { chunk_size, files: Vec::new(), chunks: Vec::new() }
     }
@@ -62,10 +88,12 @@ impl FsManifest {
             .collect()
     }
 
+    /// Total payload bytes across all files.
     pub fn total_bytes(&self) -> u64 {
         self.files.iter().map(|f| f.len).sum()
     }
 
+    /// Number of files in the namespace.
     pub fn file_count(&self) -> usize {
         self.files.len()
     }
@@ -75,6 +103,7 @@ impl FsManifest {
         format!("{ns}/chunks/{id:08}")
     }
 
+    /// Key of the namespace's manifest object.
     pub fn manifest_key(ns: &str) -> String {
         format!("{ns}/manifest.json")
     }
@@ -96,6 +125,7 @@ impl FsManifest {
         upload_to_sorted
     }
 
+    /// Serialize to the on-store JSON form.
     pub fn to_json(&self) -> Result<Vec<u8>> {
         let files: Vec<Json> = self
             .files
@@ -113,7 +143,13 @@ impl FsManifest {
             .chunks
             .iter()
             .map(|c| {
-                Json::obj(vec![("id", Json::num(c.id as f64)), ("len", Json::num(c.len as f64))])
+                Json::obj(vec![
+                    ("id", Json::num(c.id as f64)),
+                    ("len", Json::num(c.len as f64)),
+                    // hex string: a u64 digest does not survive the f64
+                    // round-trip JSON numbers take
+                    ("hash", Json::str(format!("{:016x}", c.hash))),
+                ])
             })
             .collect();
         Ok(Json::obj(vec![
@@ -124,6 +160,7 @@ impl FsManifest {
         .to_bytes())
     }
 
+    /// Parse the on-store JSON form back into a manifest.
     pub fn from_json(data: &[u8]) -> Result<Self> {
         let v = Json::parse_bytes(data)?;
         let files = v
@@ -141,7 +178,16 @@ impl FsManifest {
         let chunks = v
             .req_arr("chunks")?
             .iter()
-            .map(|c| Ok(ChunkRef { id: c.req_u64("id")? as u32, len: c.req_u64("len")? }))
+            .map(|c| {
+                // digest is optional: manifests written before it existed
+                // (or by other tools) parse with hash 0 = "unknown"
+                let hash = c
+                    .get("hash")
+                    .and_then(|h| h.as_str())
+                    .and_then(|h| u64::from_str_radix(h, 16).ok())
+                    .unwrap_or(0);
+                Ok(ChunkRef { id: c.req_u64("id")? as u32, len: c.req_u64("len")?, hash })
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok(FsManifest { chunk_size: v.req_u64("chunk_size")?, files, chunks })
     }
@@ -180,11 +226,27 @@ mod tests {
     fn json_roundtrip() {
         let mut m = FsManifest::new(4096);
         m.files = vec![entry("x", 0)];
-        m.chunks = vec![ChunkRef { id: 0, len: 1 }];
+        m.chunks = vec![ChunkRef { id: 0, len: 1, hash: 0xdead_beef_dead_beef }];
         let j = m.to_json().unwrap();
         let back = FsManifest::from_json(&j).unwrap();
         assert_eq!(back.files, m.files);
+        assert_eq!(back.chunks, m.chunks, "digest survives the JSON round-trip");
         assert_eq!(back.chunk_size, 4096);
+    }
+
+    #[test]
+    fn manifest_without_digests_parses_with_hash_zero() {
+        // manifests written before chunk digests existed must still mount
+        let j = br#"{"chunk_size": 64, "files": [], "chunks": [{"id": 0, "len": 10}]}"#;
+        let m = FsManifest::from_json(j).unwrap();
+        assert_eq!(m.chunks[0].hash, 0, "absent digest reads as unknown");
+    }
+
+    #[test]
+    fn digest_is_stable_and_content_sensitive() {
+        assert_eq!(fnv1a64(b"abc"), fnv1a64(b"abc"));
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+        assert_ne!(fnv1a64(b""), fnv1a64(b"\0"));
     }
 
     #[test]

@@ -38,13 +38,20 @@ pub struct FetchPool {
     /// Job queue feeding the background workers; `None` once closed.
     queue: Option<SyncSender<Job>>,
     workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Serializes [`FetchPool::drain`]: two drains interleaving their
+    /// barrier sentinels in the FIFO would park lanes on different
+    /// barriers and deadlock the pool.
+    drain_lock: Mutex<()>,
 }
 
 /// One simulated transfer: (chunk index, start, end) in virtual seconds.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimFetch {
+    /// Index of the fetched chunk in the input list.
     pub index: usize,
+    /// Virtual time the transfer started, seconds.
     pub start_s: f64,
+    /// Virtual time the transfer completed, seconds.
     pub end_s: f64,
 }
 
@@ -60,7 +67,13 @@ impl FetchPool {
                 std::thread::spawn(move || Self::worker_loop(&rx))
             })
             .collect();
-        Self { store, lanes, queue: Some(tx), workers: Mutex::new(workers) }
+        Self {
+            store,
+            lanes,
+            queue: Some(tx),
+            workers: Mutex::new(workers),
+            drain_lock: Mutex::new(()),
+        }
     }
 
     fn worker_loop(rx: &Mutex<Receiver<Job>>) {
@@ -70,7 +83,10 @@ impl FetchPool {
                 Ok(job) => job,
                 Err(_) => return, // queue closed: pool is shutting down
             };
-            job();
+            // a panicking job must not kill the lane: pool work is
+            // best-effort (readahead, spill writes), and drain()'s
+            // barrier assumes every lane stays alive
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
         }
     }
 
@@ -87,8 +103,36 @@ impl FetchPool {
         }
     }
 
+    /// Number of worker lanes (parallel connections).
     pub fn lanes(&self) -> usize {
         self.lanes
+    }
+
+    /// Block until every job queued *before this call* has finished.
+    ///
+    /// Implemented as a barrier: one sentinel job per lane is enqueued
+    /// (with a blocking send, so a full queue waits rather than failing),
+    /// and each worker parks on the shared barrier after draining the
+    /// FIFO ahead of it. Concurrent drains are serialized internally
+    /// (interleaved sentinel sets would deadlock the lanes). Jobs
+    /// submitted concurrently with or after the drain are not waited
+    /// for. Must not be called from a worker lane itself (a lane waiting
+    /// on its own barrier would deadlock) — callers are readers/owners,
+    /// never pool jobs.
+    pub fn drain(&self) {
+        let _exclusive = self.drain_lock.lock().unwrap();
+        let Some(tx) = &self.queue else { return };
+        let barrier = Arc::new(std::sync::Barrier::new(self.lanes + 1));
+        for _ in 0..self.lanes {
+            let b = barrier.clone();
+            let sentinel: Job = Box::new(move || {
+                b.wait();
+            });
+            if tx.send(sentinel).is_err() {
+                return; // pool already shut down: nothing left to wait on
+            }
+        }
+        barrier.wait();
     }
 
     /// Fetch all `keys` concurrently (order of results matches input).
@@ -208,6 +252,50 @@ mod tests {
         drop(pool);
         assert_eq!(done.load(Ordering::SeqCst), accepted);
         assert!(accepted >= 1);
+    }
+
+    #[test]
+    fn drain_waits_for_previously_queued_jobs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = FetchPool::new(Arc::new(MemStore::new()), 2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let mut accepted = 0;
+        for _ in 0..6 {
+            let done = done.clone();
+            if pool.try_submit(Box::new(move || {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                done.fetch_add(1, Ordering::SeqCst);
+            })) {
+                accepted += 1;
+            }
+        }
+        assert!(accepted >= 1);
+        pool.drain();
+        assert_eq!(
+            done.load(Ordering::SeqCst),
+            accepted,
+            "drain must return only after every queued job ran"
+        );
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_lane() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = FetchPool::new(Arc::new(MemStore::new()), 1);
+        assert!(pool.try_submit(Box::new(|| panic!("job exploded"))));
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = done.clone();
+        // wait for a free queue slot: the single lane survives the panic
+        while !pool.try_submit(Box::new({
+            let d = d.clone();
+            move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            }
+        })) {
+            std::thread::yield_now();
+        }
+        pool.drain();
+        assert_eq!(done.load(Ordering::SeqCst), 1, "lane still serving after a panic");
     }
 
     #[test]

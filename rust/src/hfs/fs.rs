@@ -7,14 +7,22 @@
 //!
 //! * **Zero-copy** — reads return a [`ByteView`] into the cached chunk:
 //!   a cache hit does no allocation and no memcpy.
-//! * **Sharded cache** — the LRU is sharded by chunk id with O(1)
+//! * **Sharded cache** — the RAM LRU is sharded by chunk id with O(1)
 //!   get/insert/evict, so readers of different chunks never contend on
 //!   one mutex.
+//! * **Disk spill tier** — RAM evictions flow down into a bounded
+//!   on-disk [`SpillTier`] (when mounted with a spill directory) instead
+//!   of being dropped; a later miss promotes the chunk back into RAM
+//!   without touching the object store. Spill writes run on the fetch
+//!   lanes so they never block readers.
 //! * **Single-flight** — concurrent misses (and prefetches) of the same
-//!   chunk coalesce into exactly one backend GET.
-//! * **Bounded readahead** — prefetch jobs run on the shared
-//!   [`FetchPool`] worker lanes instead of one spawned thread per chunk,
-//!   and are dropped (not queued unboundedly) when the lanes are saturated.
+//!   chunk coalesce into exactly one load, whether it comes from the
+//!   spill tier or the backend.
+//! * **Adaptive, bounded readahead** — prefetch depth follows the
+//!   observed access pattern (deep on scans, zero under shuffle; the
+//!   config knob is only a cap); jobs run on the shared [`FetchPool`]
+//!   worker lanes instead of one spawned thread per chunk, and are
+//!   dropped (not queued unboundedly) when the lanes are saturated.
 //! * **Range-GET fast path** — a cold, non-sequential read of a file much
 //!   smaller than its chunk (`len * 4 < chunk_len`) fetches only the
 //!   file's byte range; whole-chunk fetching (and its cache/prefetch
@@ -22,6 +30,7 @@
 
 use std::sync::Arc;
 
+use crate::config::HfsConfig;
 use crate::metrics::Counter;
 use crate::storage::StoreHandle;
 use crate::{Error, Result};
@@ -31,6 +40,7 @@ use super::chunk::FsManifest;
 use super::fetch::FetchPool;
 use super::prefetch::{PrefetchPolicy, Prefetcher};
 use super::singleflight::{FetchError, SingleFlight};
+use super::spill::SpillTier;
 use super::view::{ByteView, ChunkData};
 
 /// Preserve the not-found / storage distinction across the cloneable
@@ -46,6 +56,33 @@ fn from_fetch_error(e: FetchError) -> Error {
     match e {
         FetchError::NotFound(s) => Error::NotFound(s),
         FetchError::Storage(s) => Error::Storage(s),
+    }
+}
+
+/// Two-tier admission shared by the demand and prefetch paths: insert
+/// into the RAM tier, then route every eviction victim — and, when
+/// `respill_self` is set, the chunk itself if the RAM tier cannot hold
+/// it — down to the spill tier via `spill_write`. Callers pass
+/// `respill_self: false` when the data was just read *from* the spill
+/// tier: it is already on disk with fresh recency, and re-putting it
+/// would only re-hash the payload to discover that. How the write
+/// executes (pooled job vs inline on the current fetch lane) is the
+/// caller's choice; the policy lives here so the paths cannot drift.
+fn admit_two_tier(
+    cache: &ChunkCache,
+    spill: Option<&Arc<SpillTier>>,
+    id: u32,
+    data: &ChunkData,
+    respill_self: bool,
+    mut spill_write: impl FnMut(&Arc<SpillTier>, u32, ChunkData),
+) {
+    let evicted = cache.insert_evicting(id, data.clone());
+    let Some(spill) = spill else { return };
+    for (eid, edata) in evicted {
+        spill_write(spill, eid, edata);
+    }
+    if respill_self && !cache.contains(id) {
+        spill_write(spill, id, data.clone());
     }
 }
 
@@ -70,11 +107,18 @@ const RANGE_PROMOTE_AFTER: u32 = 2;
 /// Counters exposed for tests / benches / the CLI `status` view.
 #[derive(Debug, Clone, Default)]
 pub struct HyperFsStats {
+    /// `read_file` calls.
     pub reads: Counter,
+    /// Reads served from the RAM chunk cache.
     pub cache_hits: Counter,
+    /// Reads that missed the RAM tier (spill hits still count as misses
+    /// here; see [`HyperFsStats::spill_hits`]).
     pub cache_misses: Counter,
+    /// Readahead jobs handed to the fetch lanes.
     pub prefetch_issued: Counter,
+    /// Prefetched chunks that landed in the cache.
     pub prefetch_hits: Counter,
+    /// Payload bytes returned to readers.
     pub bytes_read: Counter,
     /// Actual GETs issued to the backing store (per-chunk, post-coalescing).
     pub backend_gets: Counter,
@@ -87,9 +131,20 @@ pub struct HyperFsStats {
     pub range_gets: Counter,
     /// Bytes those range GETs transferred (vs. the chunk bytes they avoided).
     pub range_bytes: Counter,
+    /// RAM misses served from the local-disk spill tier — each one is a
+    /// backend GET (and a chunk of network transfer) that never happened.
+    pub spill_hits: Counter,
+    /// RAM misses that also missed the spill tier and went to the store.
+    pub spill_misses: Counter,
+    /// Eviction write jobs executed against the spill tier.
+    pub spill_writes: Counter,
+    /// Eviction writes dropped because the fetch lanes were saturated
+    /// (the chunk is simply not spilled; a future miss refetches).
+    pub spill_drops: Counter,
 }
 
 impl HyperFsStats {
+    /// RAM-tier hit rate over all reads so far (0 before any read).
     pub fn hit_rate(&self) -> f64 {
         let h = self.cache_hits.get() as f64;
         let m = self.cache_misses.get() as f64;
@@ -108,6 +163,8 @@ pub struct HyperFs {
     manifest: Arc<FsManifest>,
     cache: ChunkCache,
     cache_bytes: u64,
+    /// Local-disk second tier; `None` on diskless mounts.
+    spill: Option<Arc<SpillTier>>,
     prefetcher: Prefetcher,
     /// Readahead worker pool; `None` in synchronous mode (virtual-time
     /// benches where overlap is accounted analytically), so sim-mode
@@ -121,21 +178,54 @@ pub struct HyperFs {
     /// Range-GET serves per chunk since its last whole fetch (promotion
     /// counter for the fast path).
     range_served: std::sync::Mutex<std::collections::HashMap<u32, u32>>,
+    /// Read-path counters (cheap to clone; shared with fetch workers).
     pub stats: HyperFsStats,
 }
 
 impl HyperFs {
-    /// Mount namespace `ns` from `store` with a cache of `cache_bytes`.
+    /// Mount namespace `ns` from `store` with a RAM cache of
+    /// `cache_bytes` and default policy (adaptive prefetch, no spill).
     pub fn mount(store: StoreHandle, ns: &str, cache_bytes: u64) -> Result<Self> {
         Self::mount_with(store, ns, cache_bytes, PrefetchPolicy::default(), true)
     }
 
+    /// Mount with an explicit prefetch cap and threading mode (no spill
+    /// tier). `background_prefetch: false` runs all readahead inline —
+    /// deterministic for tests and virtual-time benches.
     pub fn mount_with(
         store: StoreHandle,
         ns: &str,
         cache_bytes: u64,
         policy: PrefetchPolicy,
         background_prefetch: bool,
+    ) -> Result<Self> {
+        Self::mount_inner(store, ns, cache_bytes, policy, background_prefetch, None)
+    }
+
+    /// Mount with the full [`HfsConfig`] surface, including the
+    /// local-disk spill tier and the adaptive-prefetch cap.
+    pub fn mount_cfg(store: StoreHandle, ns: &str, cfg: &HfsConfig) -> Result<Self> {
+        let spill = match &cfg.spill_dir {
+            Some(dir) => Some(Arc::new(SpillTier::open(dir, ns, cfg.spill_bytes)?)),
+            None => None,
+        };
+        Self::mount_inner(
+            store,
+            ns,
+            cfg.cache_bytes,
+            PrefetchPolicy { max_depth: cfg.prefetch_max_depth },
+            cfg.background_prefetch,
+            spill,
+        )
+    }
+
+    fn mount_inner(
+        store: StoreHandle,
+        ns: &str,
+        cache_bytes: u64,
+        policy: PrefetchPolicy,
+        background_prefetch: bool,
+        spill: Option<Arc<SpillTier>>,
     ) -> Result<Self> {
         let manifest_bytes = store
             .get(&FsManifest::manifest_key(ns))
@@ -158,6 +248,7 @@ impl HyperFs {
             manifest,
             cache: ChunkCache::with_chunk_hint(cache_bytes, max_chunk),
             cache_bytes,
+            spill,
             prefetcher: Prefetcher::new(policy),
             fetch_pool,
             inflight: Arc::new(SingleFlight::new()),
@@ -167,12 +258,35 @@ impl HyperFs {
         })
     }
 
+    /// The sealed manifest this mount serves.
     pub fn manifest(&self) -> &FsManifest {
         &self.manifest
     }
 
+    /// The namespace name this mount serves.
     pub fn namespace(&self) -> &str {
         &self.ns
+    }
+
+    /// Manifest-recorded length of chunk `id` (falls back to the
+    /// namespace chunk size for ids the manifest does not know).
+    fn chunk_len(&self, id: u32) -> u64 {
+        self.manifest
+            .chunks
+            .get(id as usize)
+            .map(|c| c.len)
+            .unwrap_or(self.manifest.chunk_size)
+    }
+
+    /// Manifest-recorded content digest of chunk `id` (0 = unknown: the
+    /// manifest predates digests, so spill reads skip the digest check).
+    fn chunk_hash(&self, id: u32) -> u64 {
+        self.manifest.chunks.get(id as usize).map(|c| c.hash).unwrap_or(0)
+    }
+
+    /// Does the spill tier hold a (possibly unverified) copy of `id`?
+    fn spill_contains(&self, id: u32) -> bool {
+        self.spill.as_ref().is_some_and(|s| s.contains(id))
     }
 
     /// Read a whole file by path (the POSIX open+read+close analogue).
@@ -197,16 +311,15 @@ impl HyperFs {
         // the chunk anyway (thrashing budgets keep ranging: strictly
         // fewer bytes). Concurrent readers of the SAME file coalesce
         // through their own single-flight table.
-        let chunk_len = self
-            .manifest
-            .chunks
-            .get(entry.chunk as usize)
-            .map(|c| c.len)
-            .unwrap_or(self.manifest.chunk_size);
+        let chunk_len = self.chunk_len(entry.chunk);
         // guard order matters: the sharded cache probe short-circuits the
-        // global prefetcher mutex away from every cache-hit read
+        // global prefetcher mutex away from every cache-hit read. A chunk
+        // already sitting in the local-disk spill tier is never "cold"
+        // enough to range-GET: the whole-chunk path below serves it from
+        // disk for free instead of paying an object-store round trip.
         if entry.len.saturating_mul(RANGE_GET_RATIO) < chunk_len
             && !self.cache.contains(entry.chunk)
+            && !self.spill_contains(entry.chunk)
             && !self.prefetcher.is_sequential()
         {
             let retainable = chunk_len.saturating_mul(4) <= self.cache_bytes;
@@ -244,21 +357,23 @@ impl HyperFs {
                 self.stats.cache_misses.inc();
                 // still feed the predictor: if this turns into a scan,
                 // the next reads go back to whole chunks + readahead
-                for target in self
-                    .prefetcher
-                    .on_access(entry.chunk, self.manifest.chunks.len() as u32)
-                {
+                for target in self.prefetcher.on_access(
+                    entry.chunk,
+                    self.manifest.chunks.len() as u32,
+                    false,
+                ) {
                     self.issue_prefetch(target);
                 }
                 return Ok(ByteView::full(outcome.map_err(from_fetch_error)?));
             }
         }
 
-        let chunk = self.chunk_data(entry.chunk)?;
-        // fire readahead for the predicted next chunks
-        for target in self
-            .prefetcher
-            .on_access(entry.chunk, self.manifest.chunks.len() as u32)
+        let (chunk, ram_hit) = self.chunk_data(entry.chunk)?;
+        // feed the adaptive predictor and fire readahead for the
+        // predicted next chunks
+        for target in
+            self.prefetcher
+                .on_access(entry.chunk, self.manifest.chunks.len() as u32, ram_hit)
         {
             self.issue_prefetch(target);
         }
@@ -275,30 +390,43 @@ impl HyperFs {
         self.manifest.list(prefix).into_iter().map(|f| f.path.clone()).collect()
     }
 
-    /// Chunk bytes via cache, coalescing concurrent misses of the same
-    /// chunk into exactly one backend GET.
-    fn chunk_data(&self, id: u32) -> Result<ChunkData> {
+    /// Chunk bytes via the cache tiers, coalescing concurrent misses of
+    /// the same chunk into exactly one load. Returns the payload and
+    /// whether it was a RAM-tier hit.
+    fn chunk_data(&self, id: u32) -> Result<(ChunkData, bool)> {
         if let Some(hit) = self.cache.get(id) {
             self.stats.cache_hits.inc();
-            return Ok(hit);
+            return Ok((hit, true));
         }
         self.stats.cache_misses.inc();
         let (outcome, leader) = self.inflight.run(id, || self.fetch_into_cache(id));
         if !leader {
             self.stats.coalesced_reads.inc();
         }
-        outcome.map_err(from_fetch_error)
+        Ok((outcome.map_err(from_fetch_error)?, false))
     }
 
-    /// Leader path of a single-flight fetch: re-check the cache (the
+    /// Leader path of a single-flight fetch: re-check the RAM cache (the
     /// chunk may have landed between our miss and winning leadership),
-    /// then GET and insert *before* the flight retires, so "no cache
-    /// entry and no flight" always implies "no fetch outstanding".
+    /// probe the spill tier, then GET — and admit *before* the flight
+    /// retires, so "no cache entry and no flight" always implies "no
+    /// fetch outstanding". The single-flight key covers the disk tier
+    /// too: concurrent misses issue at most one spill load.
     fn fetch_into_cache(&self, id: u32) -> std::result::Result<ChunkData, FetchError> {
         if let Some(hit) = self.cache.get(id) {
             // raced with a completed fetch: served without our own GET
             self.stats.coalesced_reads.inc();
             return Ok(hit);
+        }
+        if let Some(spill) = &self.spill {
+            if let Some(data) = spill.get(id, self.chunk_len(id), self.chunk_hash(id)) {
+                // promoted back into RAM without touching the object
+                // store; no respill — the bytes are already on disk
+                self.stats.spill_hits.inc();
+                self.admit(id, &data, false);
+                return Ok(data);
+            }
+            self.stats.spill_misses.inc();
         }
         self.stats.backend_gets.inc();
         let data = self
@@ -306,8 +434,46 @@ impl HyperFs {
             .get(&FsManifest::chunk_key(&self.ns, id))
             .map(Arc::new)
             .map_err(to_fetch_error)?;
-        self.cache.insert(id, data.clone());
+        self.admit(id, &data, true);
         Ok(data)
+    }
+
+    /// Admit a chunk to the RAM tier. With a spill tier mounted, RAM
+    /// victims are demoted to disk (on the fetch lanes, so the reader is
+    /// never blocked on spill I/O), and — when `respill_self` is set — a
+    /// chunk the RAM tier cannot hold at all is spilled directly, so
+    /// repeated reads of an oversized chunk converge to disk speed
+    /// instead of network speed.
+    fn admit(&self, id: u32, data: &ChunkData, respill_self: bool) {
+        admit_two_tier(
+            &self.cache,
+            self.spill.as_ref(),
+            id,
+            data,
+            respill_self,
+            |spill, eid, edata| self.spill_out(spill, eid, edata),
+        );
+    }
+
+    /// Hand one RAM-evicted chunk down to the spill tier: a background
+    /// job on the fetch lanes in threaded mode, inline in sync mode.
+    /// When the lanes are saturated the write is dropped — spilling is
+    /// best-effort and must never apply backpressure to readers.
+    fn spill_out(&self, spill: &Arc<SpillTier>, id: u32, data: ChunkData) {
+        let spill = spill.clone();
+        let writes = self.stats.spill_writes.clone();
+        let work = move || {
+            writes.inc();
+            spill.put(id, &data);
+        };
+        match &self.fetch_pool {
+            Some(pool) => {
+                if !pool.try_submit(Box::new(work)) {
+                    self.stats.spill_drops.inc();
+                }
+            }
+            None => work(),
+        }
     }
 
     fn issue_prefetch(&self, id: u32) {
@@ -320,24 +486,48 @@ impl HyperFs {
         let cache = self.cache.clone();
         let inflight = self.inflight.clone();
         let prefetcher = self.prefetcher.clone();
+        let spill = self.spill.clone();
+        let expected_len = self.chunk_len(id);
+        let expected_hash = self.chunk_hash(id);
         let key = FsManifest::chunk_key(&self.ns, id);
         let hits = self.stats.prefetch_hits.clone();
         let gets = self.stats.backend_gets.clone();
+        let spill_hits = self.stats.spill_hits.clone();
+        let spill_misses = self.stats.spill_misses.clone();
+        let spill_writes = self.stats.spill_writes.clone();
         let work = move || {
+            // same two-tier admission as the demand path, but run on the
+            // fetch lane itself: we are already on background I/O
+            // threads, so victim spills happen inline, not re-queued
+            let admit = |data: &ChunkData, respill_self: bool| {
+                admit_two_tier(&cache, spill.as_ref(), id, data, respill_self, |s, eid, edata| {
+                    spill_writes.inc();
+                    s.put(eid, &edata);
+                });
+            };
             // skip without waiting if a reader is already fetching it
             if !cache.contains(id) {
                 let _ = inflight.run_if_absent(id, || {
                     // re-check under flight ownership: a reader may have
                     // cached it between our contains() and leading. The
-                    // insert also happens inside the flight, upholding the
-                    // "no cache entry + no flight => no fetch outstanding"
-                    // invariant for prefetched chunks too.
+                    // admission also happens inside the flight, upholding
+                    // the "no cache entry + no flight => no fetch
+                    // outstanding" invariant for prefetched chunks too.
                     if let Some(hit) = cache.get(id) {
                         return Ok(hit);
                     }
+                    if let Some(s) = &spill {
+                        if let Some(data) = s.get(id, expected_len, expected_hash) {
+                            spill_hits.inc();
+                            admit(&data, false);
+                            hits.inc();
+                            return Ok(data);
+                        }
+                        spill_misses.inc();
+                    }
                     gets.inc();
                     let data = store.get(&key).map(Arc::new).map_err(to_fetch_error)?;
-                    cache.insert(id, data.clone());
+                    admit(&data, true);
                     hits.inc();
                     Ok(data)
                 });
@@ -361,15 +551,39 @@ impl HyperFs {
         &self.cache
     }
 
+    /// The local-disk spill tier, when this mount has one.
+    pub fn spill(&self) -> Option<&SpillTier> {
+        self.spill.as_deref()
+    }
+
+    /// Current adaptive prefetch depth (see [`Prefetcher::depth`]).
+    pub fn prefetch_depth(&self) -> u32 {
+        self.prefetcher.depth()
+    }
+
     /// Chunk fetches currently in flight (misses + readahead).
     pub fn in_flight(&self) -> i64 {
         self.inflight.in_flight()
     }
 
-    /// Drop all cached chunks and forget prefetch state together, so the
-    /// predictor cannot suppress re-prefetch of evicted chunks.
+    /// Drop every cached chunk from *both* tiers (RAM and disk spill) and
+    /// reset prefetch state — the sequential run, the adaptive depth, and
+    /// the hit/miss window — so the predictor cannot suppress re-prefetch
+    /// of dropped chunks and stale spill files cannot outlive the clear.
+    ///
+    /// Queued background work (readahead, spill writes) is drained
+    /// *before* the tiers are cleared, so nothing enqueued by earlier
+    /// reads can repopulate them afterwards: once this returns — and
+    /// absent concurrent `read_file` calls, which are new work and may
+    /// cache again — the next read of anything is a full backend fetch.
     pub fn clear_cache(&self) {
+        if let Some(pool) = &self.fetch_pool {
+            pool.drain();
+        }
         self.cache.clear();
+        if let Some(spill) = &self.spill {
+            spill.clear();
+        }
         self.prefetcher.reset();
     }
 }
@@ -411,7 +625,7 @@ mod tests {
             store,
             "ds",
             10 << 20,
-            PrefetchPolicy { depth: 0 },
+            PrefetchPolicy { max_depth: 0 },
             false,
         )
         .unwrap();
@@ -430,7 +644,7 @@ mod tests {
             store,
             "ds",
             10 << 20,
-            PrefetchPolicy { depth: 1 },
+            PrefetchPolicy { max_depth: 1 },
             false, // synchronous prefetch for determinism
         )
         .unwrap();
@@ -461,7 +675,7 @@ mod tests {
     #[test]
     fn tiny_cache_still_correct() {
         let (store, paths) = setup(20, 100, 300);
-        let fs = HyperFs::mount_with(store, "ds", 300, PrefetchPolicy { depth: 0 }, false)
+        let fs = HyperFs::mount_with(store, "ds", 300, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
         for (i, p) in paths.iter().enumerate() {
             assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
@@ -473,7 +687,7 @@ mod tests {
         // files at 1/2 of the chunk: big enough that the range-GET fast
         // path stays out of the way and the whole chunk is cached
         let (store, paths) = setup(6, 150, 400);
-        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
+        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
         let a = fs.read_file(&paths[0]).unwrap();
         let b = fs.read_file(&paths[1]).unwrap(); // same chunk, different file
@@ -489,7 +703,7 @@ mod tests {
         // a ByteView handed out must stay valid even after the cache
         // evicts its chunk (the Arc keeps the payload alive)
         let (store, paths) = setup(20, 100, 300);
-        let fs = HyperFs::mount_with(store, "ds", 300, PrefetchPolicy { depth: 0 }, false)
+        let fs = HyperFs::mount_with(store, "ds", 300, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
         let first = fs.read_file(&paths[0]).unwrap();
         for p in &paths {
@@ -501,7 +715,7 @@ mod tests {
     #[test]
     fn clear_cache_resets_prefetch_state_too() {
         let (store, paths) = setup(30, 100, 300);
-        let fs = HyperFs::mount_with(store, "ds", 10 << 20, PrefetchPolicy { depth: 2 }, false)
+        let fs = HyperFs::mount_with(store, "ds", 10 << 20, PrefetchPolicy { max_depth: 2 }, false)
             .unwrap();
         for p in &paths {
             fs.read_file(p).unwrap();
@@ -531,7 +745,7 @@ mod tests {
         let counting = Arc::new(CountingStore::new(inner));
         let store: StoreHandle = counting.clone();
         let fs = Arc::new(
-            HyperFs::mount_with(store, "ds", 10 << 20, PrefetchPolicy { depth: 0 }, false)
+            HyperFs::mount_with(store, "ds", 10 << 20, PrefetchPolicy { max_depth: 0 }, false)
                 .unwrap(),
         );
         let barrier = Arc::new(std::sync::Barrier::new(32));
@@ -579,7 +793,7 @@ mod tests {
     #[test]
     fn cold_small_read_uses_range_get_and_moves_fewer_bytes() {
         let (counting, store) = small_file_setup();
-        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
+        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
         counting.reset(); // ignore the manifest GET from mount
         let view = fs.read_file("tiny.bin").unwrap();
@@ -599,7 +813,7 @@ mod tests {
     #[test]
     fn big_file_in_same_chunk_still_fetches_whole_chunk() {
         let (counting, store) = small_file_setup();
-        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
+        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
         counting.reset();
         // 3000 * 4 >= 6100: not "much smaller" than its chunk
@@ -620,7 +834,7 @@ mod tests {
         let (inner, paths) = setup(60, 100, 2000);
         let counting = Arc::new(CountingStore::new(inner));
         let store: StoreHandle = counting.clone();
-        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
+        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
         counting.reset();
         for (i, p) in paths.iter().enumerate() {
@@ -645,7 +859,7 @@ mod tests {
         let (inner, paths) = setup(40, 100, 1000);
         let counting = Arc::new(CountingStore::new(inner));
         let store: StoreHandle = counting.clone();
-        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { depth: 0 }, false)
+        let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
         counting.reset();
         let n = paths.len();
@@ -714,7 +928,7 @@ mod tests {
         // cache too small to retain the chunk: promotion stays off, so
         // every thread is on the pure range path and must coalesce
         let fs = Arc::new(
-            HyperFs::mount_with(slow, "ds", 2048, PrefetchPolicy { depth: 0 }, false)
+            HyperFs::mount_with(slow, "ds", 2048, PrefetchPolicy { max_depth: 0 }, false)
                 .unwrap(),
         );
         counting.reset();
@@ -750,7 +964,7 @@ mod tests {
         let (inner, mut paths) = setup(40, 100, 1000);
         let counting = Arc::new(CountingStore::new(inner));
         let store: StoreHandle = counting.clone();
-        let fs = HyperFs::mount_with(store, "ds", 1000, PrefetchPolicy { depth: 0 }, false)
+        let fs = HyperFs::mount_with(store, "ds", 1000, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
         counting.reset();
         // deterministic stride-17 shuffle: chunk order rarely steps +1,
@@ -769,5 +983,283 @@ mod tests {
             40 * 1000
         );
         assert!(fs.stats.range_gets.get() > 0);
+    }
+
+    // ------------------------------------------- two-tier spill cache
+
+    /// Spill-enabled mount config: sync mode so every spill read/write
+    /// happens inline (deterministic), prefetch off unless a test arms it.
+    fn spill_cfg(dir: &std::path::Path, cache_bytes: u64) -> HfsConfig {
+        HfsConfig {
+            cache_bytes,
+            spill_dir: Some(dir.to_path_buf()),
+            spill_bytes: 64 << 20,
+            prefetch_max_depth: 0,
+            background_prefetch: false,
+        }
+    }
+
+    /// 32 files x 100 B, 4 per 400-byte chunk (files are 1/4 of the chunk,
+    /// so the range-GET fast path stays out of the way), behind a counter.
+    fn spill_setup() -> (Arc<CountingStore>, StoreHandle, Vec<String>) {
+        let (inner, paths) = setup(32, 100, 400);
+        let counting = Arc::new(CountingStore::new(inner));
+        let handle: StoreHandle = counting.clone();
+        (counting, handle, paths)
+    }
+
+    #[test]
+    fn ram_evicted_chunk_promotes_from_spill_without_backend_get() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let (counting, store, paths) = spill_setup();
+        // RAM holds 2 of the 8 chunks; the spill tier catches the rest
+        let fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 800)).unwrap();
+        counting.reset();
+        for (i, p) in paths.iter().enumerate() {
+            assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
+        }
+        assert_eq!(fs.stats.backend_gets.get(), 8, "cold epoch: one GET per chunk");
+        assert!(fs.spill().unwrap().len() >= 6, "evictions landed on disk");
+        let cold_gets = counting.total_gets();
+        let cold_bytes = counting.total_get_bytes();
+        for (i, p) in paths.iter().enumerate() {
+            assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
+        }
+        assert_eq!(
+            counting.total_gets(),
+            cold_gets,
+            "epoch 2 must not touch the object store at all"
+        );
+        assert_eq!(counting.total_get_bytes(), cold_bytes, "zero bytes transferred");
+        assert_eq!(fs.stats.spill_hits.get(), 8, "every chunk promoted from disk");
+    }
+
+    #[test]
+    fn clear_cache_purges_spill_tier_and_refetches_from_backend() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let (counting, store, paths) = spill_setup();
+        let fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 800)).unwrap();
+        for p in &paths {
+            fs.read_file(p).unwrap();
+        }
+        assert!(!fs.spill().unwrap().is_empty());
+        let gets_before = counting.total_gets();
+        fs.clear_cache();
+        assert!(fs.cache().is_empty(), "RAM tier cleared");
+        assert!(fs.spill().unwrap().is_empty(), "disk tier cleared too");
+        assert_eq!(fs.prefetch_depth(), 0, "adaptive window reset");
+        for (i, p) in paths.iter().enumerate() {
+            assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
+        }
+        assert_eq!(
+            counting.total_gets(),
+            gets_before + 8,
+            "a cleared cache must re-fetch every chunk from the backend"
+        );
+        assert_eq!(counting.gets_for(&FsManifest::chunk_key("ds", 0)), 2);
+    }
+
+    #[test]
+    fn clear_cache_in_background_mode_drains_queued_spill_writes() {
+        // spill writes ride the fetch lanes in threaded mode; clear_cache
+        // must drain them first or a queued put lands *after* the clear
+        // and resurrects the chunk
+        let dir = crate::util::TempDir::new().unwrap();
+        let (counting, store, paths) = spill_setup();
+        let mut cfg = spill_cfg(dir.path(), 800);
+        cfg.background_prefetch = true;
+        let fs = HyperFs::mount_cfg(store, "ds", &cfg).unwrap();
+        for p in &paths {
+            fs.read_file(p).unwrap();
+        }
+        fs.clear_cache();
+        assert!(fs.cache().is_empty());
+        assert!(
+            fs.spill().unwrap().is_empty(),
+            "no queued spill write may outlive the clear"
+        );
+        let gets = counting.total_gets();
+        fs.read_file(&paths[0]).unwrap();
+        assert!(counting.total_gets() > gets, "post-clear read hits the backend");
+    }
+
+    #[test]
+    fn fresh_mount_reuses_valid_spill_dir() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let (counting, store, paths) = spill_setup();
+        {
+            let fs =
+                HyperFs::mount_cfg(store.clone(), "ds", &spill_cfg(dir.path(), 800)).unwrap();
+            for p in &paths {
+                fs.read_file(p).unwrap();
+            }
+            // chunks 0..=5 were evicted to disk; 6 and 7 die with the mount
+        }
+        let fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 800)).unwrap();
+        counting.reset();
+        for (i, p) in paths.iter().enumerate() {
+            assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
+        }
+        assert_eq!(
+            fs.stats.backend_gets.get(),
+            2,
+            "only the chunks that never spilled (they were still in RAM at \
+             shutdown) go back to the store: {:?}",
+            counting.gets_by_key()
+        );
+        assert_eq!(fs.stats.spill_hits.get(), 6, "the rest restart from disk");
+        assert_eq!(fs.spill().unwrap().rejected(), 0);
+    }
+
+    #[test]
+    fn fresh_mount_never_serves_corrupt_spill_bytes() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let (counting, store, paths) = spill_setup();
+        {
+            let fs =
+                HyperFs::mount_cfg(store.clone(), "ds", &spill_cfg(dir.path(), 800)).unwrap();
+            for p in &paths {
+                fs.read_file(p).unwrap();
+            }
+        }
+        // corrupt every spilled file in place (same length, wrong bytes,
+        // so only the content digest can tell)
+        let spill_dir = dir.path().join("spill/ds");
+        let mut corrupted = 0usize;
+        for entry in std::fs::read_dir(&spill_dir).unwrap() {
+            let path = entry.unwrap().path();
+            let len = std::fs::metadata(&path).unwrap().len() as usize;
+            std::fs::write(&path, vec![0xAAu8; len]).unwrap();
+            corrupted += 1;
+        }
+        assert!(corrupted >= 6);
+        let fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 800)).unwrap();
+        counting.reset();
+        for (i, p) in paths.iter().enumerate() {
+            assert_eq!(
+                fs.read_file(p).unwrap(),
+                vec![(i % 251) as u8; 100],
+                "corrupt spill data must never reach a reader"
+            );
+        }
+        assert_eq!(fs.stats.backend_gets.get(), 8, "all chunks re-fetched");
+        assert_eq!(fs.spill().unwrap().rejected() as usize, corrupted);
+        assert_eq!(fs.stats.spill_hits.get(), 0);
+    }
+
+    #[test]
+    fn rebuilt_namespace_with_same_sizes_never_serves_stale_spill() {
+        // the nasty case for name-only content addressing: the namespace
+        // is re-uploaded with byte-identical LAYOUT (same paths, sizes,
+        // chunk lengths) but different content — only the
+        // manifest-recorded chunk digest can tell the spill data is stale
+        let dir = crate::util::TempDir::new().unwrap();
+        let store: StoreHandle = Arc::new(MemStore::new());
+        let upload = |byte: u8| {
+            let mut up = Uploader::new(store.clone(), "ds", 400);
+            for i in 0..32 {
+                up.add_file(&format!("data/{i:05}.bin"), &vec![byte; 100]).unwrap();
+            }
+            up.seal().unwrap();
+        };
+        upload(1);
+        {
+            let fs =
+                HyperFs::mount_cfg(store.clone(), "ds", &spill_cfg(dir.path(), 800)).unwrap();
+            for i in 0..32 {
+                fs.read_file(&format!("data/{i:05}.bin")).unwrap();
+            }
+            assert!(!fs.spill().unwrap().is_empty());
+        }
+        upload(2); // rebuild: same sizes, different bytes
+        let fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 800)).unwrap();
+        for i in 0..32 {
+            assert_eq!(
+                fs.read_file(&format!("data/{i:05}.bin")).unwrap(),
+                vec![2u8; 100],
+                "v1 bytes must never be served for the rebuilt namespace"
+            );
+        }
+        assert_eq!(fs.stats.backend_gets.get(), 8, "every chunk re-fetched");
+        assert_eq!(fs.stats.spill_hits.get(), 0);
+        assert!(fs.spill().unwrap().rejected() >= 6, "stale spill files purged");
+    }
+
+    #[test]
+    fn oversized_chunks_are_served_from_spill_not_network() {
+        // chunks bigger than the whole RAM budget are uncacheable in RAM;
+        // with a spill tier they still converge to local-disk reads
+        let dir = crate::util::TempDir::new().unwrap();
+        let (inner, paths) = setup(3, 400, 400); // 1 file per 400-byte chunk
+        let counting = Arc::new(CountingStore::new(inner));
+        let store: StoreHandle = counting.clone();
+        let fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 300)).unwrap();
+        counting.reset();
+        for _ in 0..3 {
+            for (i, p) in paths.iter().enumerate() {
+                assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 400]);
+            }
+        }
+        assert!(fs.cache().is_empty(), "RAM tier cannot hold these chunks");
+        assert_eq!(fs.stats.backend_gets.get(), 3, "one GET per chunk, ever");
+        assert_eq!(fs.stats.spill_hits.get(), 6, "epochs 2 and 3 came from disk");
+    }
+
+    #[test]
+    fn small_cold_reads_prefer_spill_over_range_gets() {
+        // a chunk already on local disk must be served from the spill
+        // tier, not re-fetched (even partially) over the network — the
+        // range-GET fast path only applies to chunks in neither tier
+        let dir = crate::util::TempDir::new().unwrap();
+        let inner: StoreHandle = Arc::new(MemStore::new());
+        let mut up = Uploader::new(inner.clone(), "ds", 8192);
+        up.add_file("tiny.bin", &[42u8; 100]).unwrap();
+        up.add_file("big1.bin", &[1u8; 3000]).unwrap();
+        up.add_file("big2.bin", &[2u8; 3000]).unwrap();
+        up.seal().unwrap(); // one 6100-byte chunk
+        let counting = Arc::new(CountingStore::new(inner));
+        let store: StoreHandle = counting.clone();
+        // RAM too small for the chunk: it spills directly on first fetch
+        let fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 2048)).unwrap();
+        counting.reset();
+        assert_eq!(fs.read_file("big1.bin").unwrap(), vec![1u8; 3000]);
+        assert_eq!(fs.stats.backend_gets.get(), 1);
+        assert_eq!(fs.spill().unwrap().len(), 1, "uncacheable chunk hit the disk tier");
+        // cold small read of the same chunk: without the spill guard this
+        // would pay an object-store range GET despite the local copy
+        assert_eq!(fs.read_file("tiny.bin").unwrap(), vec![42u8; 100]);
+        assert_eq!(counting.total_range_gets(), 0, "no network range GET");
+        assert_eq!(fs.stats.spill_hits.get(), 1, "served from local disk");
+        assert_eq!(counting.total_gets(), 1, "exactly the one cold chunk GET, ever");
+    }
+
+    #[test]
+    fn adaptive_prefetch_deepens_on_scan_and_collapses_on_shuffle() {
+        let (store, paths) = setup(64, 100, 400); // 16 chunks, 4 files each
+        let fs = HyperFs::mount_with(
+            store,
+            "ds",
+            10 << 20,
+            PrefetchPolicy { max_depth: 8 },
+            false,
+        )
+        .unwrap();
+        for p in &paths {
+            fs.read_file(p).unwrap();
+        }
+        assert!(
+            fs.prefetch_depth() >= 2,
+            "a sequential scan must reach at least the old static depth: {}",
+            fs.prefetch_depth()
+        );
+        let n = paths.len();
+        for i in 0..n {
+            fs.read_file(&paths[(i * 17) % n]).unwrap();
+        }
+        assert!(
+            fs.prefetch_depth() <= 1,
+            "shuffled access must collapse readahead: {}",
+            fs.prefetch_depth()
+        );
     }
 }

@@ -8,8 +8,35 @@
 //!
 //! The paper's performance claim — streaming from remote chunked storage
 //! is "almost the same as if the data was stored locally" — only holds if
-//! the node-local read path adds near-zero overhead on cache hits. The
-//! read path is therefore built around three ideas:
+//! the node-local read path adds near-zero overhead on cache hits and
+//! keeps hot data *near* compute when RAM runs out. Data flows through
+//! the read path like this:
+//!
+//! ```text
+//!             read_file(path)
+//!                   │
+//!        ┌──────────▼──────────┐  hit: zero-copy ByteView
+//!        │  ChunkCache (RAM,   ├────────────────────────────► reader
+//!        │  sharded LRU)       │
+//!        └──────────┬──────────┘
+//!             miss  │                ┌────────────────┐
+//!        ┌──────────▼──────────┐     │   Prefetcher   │ adaptive depth
+//!        │    SingleFlight     │◄────┤ (scan detector,│ (0..=cap)
+//!        │  (1 load per chunk) │     │  hit window)   │
+//!        └──────────┬──────────┘     └────────────────┘
+//!             miss  │      ▲ promote
+//!        ┌──────────▼──────┴──┐   RAM eviction   ┌───────────────┐
+//!        │  SpillTier (local  │◄─────────────────┤  FetchPool    │
+//!        │  disk LRU, bounded)│   (spill writes) │ (bounded lanes│
+//!        └──────────┬─────────┘                  │  readahead +  │
+//!             miss  │                            │  spill I/O)   │
+//!        ┌──────────▼──────────┐                 └───────────────┘
+//!        │ ObjectStore (S3-ish │  GET / range GET
+//!        │  chunks + manifest) │
+//!        └─────────────────────┘
+//! ```
+//!
+//! The read path is built around four ideas:
 //!
 //! * **Zero-copy reads.** [`HyperFs::read_file`] returns a [`ByteView`]:
 //!   an `Arc`-backed handle to the cached chunk plus an offset/len range,
@@ -20,15 +47,22 @@
 //!   view pins its *whole chunk* in memory, so consumers that retain
 //!   small samples long-term (beyond the current batch) should copy out
 //!   with `.to_vec()` rather than hold the view.
-//! * **Sharded, O(1) caching.** [`ChunkCache`] shards by chunk id with an
-//!   intrusive recency list per shard, so concurrent readers of different
-//!   chunks never contend on one mutex and eviction never scans the
-//!   table. Tiny budgets collapse to one shard (strict LRU).
+//! * **Sharded, O(1) RAM caching with a disk tier below it.**
+//!   [`ChunkCache`] shards by chunk id with an intrusive recency list per
+//!   shard, so concurrent readers of different chunks never contend on
+//!   one mutex and eviction never scans the table. Evicted chunks demote
+//!   into the bounded local-disk [`SpillTier`] (when mounted with one)
+//!   instead of being dropped, and a later miss promotes them back at
+//!   disk speed — no object-store round trip.
 //! * **Single-flight fetching.** [`SingleFlight`] coalesces concurrent
-//!   misses and prefetches of one chunk into exactly one backend GET;
-//!   followers share the leader's allocation. Readahead runs on the
-//!   bounded [`FetchPool`] worker lanes and is dropped under saturation
-//!   instead of queueing without bound.
+//!   misses and prefetches of one chunk into exactly one load (spill or
+//!   backend); followers share the leader's allocation.
+//! * **Adaptive readahead.** The [`Prefetcher`] deepens lookahead while
+//!   the access pattern is a sequential scan and collapses it to zero
+//!   under shuffle, using a windowed cache hit/miss ratio; the old static
+//!   depth knob survives only as the cap. Readahead runs on the bounded
+//!   [`FetchPool`] worker lanes and is dropped under saturation instead
+//!   of queueing without bound.
 //!
 //! Components:
 //!
@@ -37,15 +71,20 @@
 //! * [`writer`] — the upload path: chunker that packs files and writes the
 //!   manifest ([`Uploader`]).
 //! * [`view`] — [`ByteView`], the zero-copy chunk window every read returns.
-//! * [`cache`] — [`ChunkCache`], the sharded LRU with a byte budget.
+//! * [`cache`] — [`ChunkCache`], the sharded RAM LRU with a byte budget.
+//! * [`spill`] — [`SpillTier`], the bounded, content-checked local-disk
+//!   tier that catches RAM evictions.
 //! * [`singleflight`] — [`SingleFlight`], the in-flight fetch table.
-//! * [`prefetch`] — sequential-access predictor: readahead of the next
-//!   chunk(s) in manifest order, with a pending window that clears on
-//!   access/completion so evicted chunks can be re-prefetched.
+//! * [`prefetch`] — adaptive sequential-access predictor: readahead of the
+//!   next chunk(s) in manifest order, depth driven by the observed
+//!   pattern, with a pending window that clears on access/completion so
+//!   evicted chunks can be re-prefetched.
 //! * [`fs`] — [`HyperFs`], the POSIX-ish read layer every node mounts.
 //! * [`fetch`] — [`FetchPool`], multi-lane chunk fetching (the paper's
 //!   "multithreading T and multiprocessing P" in Fig 2) plus the shared
-//!   bounded worker pool that serves readahead.
+//!   bounded worker pool that serves readahead and spill writes.
+
+#![warn(missing_docs)]
 
 pub mod cache;
 pub mod chunk;
@@ -53,6 +92,7 @@ pub mod fetch;
 pub mod fs;
 pub mod prefetch;
 pub mod singleflight;
+pub mod spill;
 pub mod view;
 pub mod writer;
 
@@ -62,6 +102,7 @@ pub use fetch::FetchPool;
 pub use fs::{HyperFs, HyperFsStats};
 pub use prefetch::{PrefetchPolicy, Prefetcher};
 pub use singleflight::{FetchError, SingleFlight};
+pub use spill::SpillTier;
 pub use view::{ByteView, ChunkData};
 pub use writer::Uploader;
 

@@ -1,4 +1,4 @@
-//! Sequential-read prediction (§III.A).
+//! Adaptive sequential-read prediction (§III.A).
 //!
 //! Files are packed into chunks in upload order and deep-learning loaders
 //! read them in approximately that order, so after serving a file from
@@ -7,6 +7,23 @@
 //! candidates; [`super::HyperFs`] fetches them through the shared
 //! [`super::FetchPool`] (real mode) or accounts them as overlapped
 //! transfers (sim mode).
+//!
+//! **Depth is adaptive.** Earlier versions prefetched a fixed number of
+//! chunks ahead (the static `readahead` knob). That constant is wrong in
+//! both directions: a long sequential scan wants the pipeline as deep as
+//! the fetch lanes allow, while a shuffled epoch wants no readahead at
+//! all (every speculative chunk is wasted transfer). The policy's
+//! [`PrefetchPolicy::max_depth`] is therefore only a *cap*; the working
+//! depth moves inside `[0, max_depth]`:
+//!
+//! * each access that continues a confirmed sequential run widens depth
+//!   by one chunk, up to the cap;
+//! * a jump (non-sequential step) halves the depth, so sustained shuffle
+//!   decays it toward zero geometrically;
+//! * a full observation window (the last [`HIT_WINDOW`] reads) with a
+//!   RAM-tier hit rate below 25% and no sequential run in progress shuts
+//!   readahead off entirely — the cache is thrashing and speculative
+//!   fetches only add to the churn.
 //!
 //! The `pending` window holds chunks that are *queued or in flight* —
 //! nothing else. The seed let entries linger after the chunk was read or
@@ -22,16 +39,29 @@ use std::sync::{Arc, Mutex};
 /// Upper bound on the pending window; keeps every scan O(1)-bounded.
 const PENDING_WINDOW: usize = 16;
 
-/// Readahead policy: how many chunks ahead of the cursor to keep warm.
+/// Accesses remembered by the hit/miss observation window.
+pub const HIT_WINDOW: usize = 32;
+
+/// Below this hit rate (with a full window and no sequential run), the
+/// adaptive depth collapses to zero: the access pattern defeats the cache,
+/// so readahead is pure wasted transfer.
+const SHUTOFF_HIT_RATE: f64 = 0.25;
+
+/// The static readahead depth older builds shipped with; kept as the
+/// reference point benches compare the adaptive depth against.
+pub const STATIC_DEFAULT_DEPTH: u32 = 2;
+
+/// Readahead policy: the *cap* on adaptive lookahead.
 #[derive(Debug, Clone, Copy)]
 pub struct PrefetchPolicy {
-    /// Number of chunks of lookahead (0 disables prefetch).
-    pub depth: u32,
+    /// Most chunks of lookahead the adaptive depth may reach
+    /// (0 disables prefetch entirely).
+    pub max_depth: u32,
 }
 
 impl Default for PrefetchPolicy {
     fn default() -> Self {
-        Self { depth: 2 }
+        Self { max_depth: 8 }
     }
 }
 
@@ -49,40 +79,86 @@ struct State {
     last_chunk: Option<u32>,
     /// consecutive accesses that moved forward by <= 1 chunk
     sequential_run: u32,
+    /// current adaptive lookahead, in `[0, policy.max_depth]`
+    depth: u32,
+    /// RAM-tier outcome of the last `HIT_WINDOW` reads (true = hit)
+    window: VecDeque<bool>,
+    /// hits currently inside `window`
+    window_hits: u32,
     /// chunks whose prefetch is queued or in flight
     pending: VecDeque<u32>,
 }
 
 impl Prefetcher {
+    /// A fresh predictor: depth 0, empty observation window.
     pub fn new(policy: PrefetchPolicy) -> Self {
         Self { policy, state: Arc::new(Mutex::new(State::default())) }
     }
 
+    /// The configured cap (not the current adaptive depth).
     pub fn policy(&self) -> PrefetchPolicy {
         self.policy
     }
 
-    /// Record that `chunk` (of `n_chunks` total) was just read; returns the
-    /// chunk ids that should be prefetched now.
+    /// The current adaptive lookahead depth, in `[0, max_depth]`.
+    pub fn depth(&self) -> u32 {
+        self.state.lock().unwrap().depth
+    }
+
+    /// RAM-tier hit rate over the observation window (0 when empty).
+    pub fn window_hit_rate(&self) -> f64 {
+        let st = self.state.lock().unwrap();
+        if st.window.is_empty() {
+            0.0
+        } else {
+            st.window_hits as f64 / st.window.len() as f64
+        }
+    }
+
+    /// Record that `chunk` (of `n_chunks` total) was just read and whether
+    /// the read was a RAM-cache hit; returns the chunk ids that should be
+    /// prefetched now.
     ///
     /// Readahead only engages once the pattern looks sequential (two
-    /// forward steps), so random-access workloads don't waste bandwidth —
-    /// the paper's lookahead is aimed at scan-style training reads.
-    pub fn on_access(&self, chunk: u32, n_chunks: u32) -> Vec<u32> {
+    /// forward steps), then deepens one chunk per sequential access up to
+    /// the policy cap; jumps halve it and a thrashing observation window
+    /// shuts it off (see the module docs for the full rule).
+    pub fn on_access(&self, chunk: u32, n_chunks: u32, hit: bool) -> Vec<u32> {
         let mut st = self.state.lock().unwrap();
-        match st.last_chunk {
-            Some(prev) if chunk == prev || chunk == prev + 1 => st.sequential_run += 1,
-            Some(_) => st.sequential_run = 0,
-            None => st.sequential_run = 1,
+        // observation window
+        st.window.push_back(hit);
+        st.window_hits += hit as u32;
+        if st.window.len() > HIT_WINDOW && st.window.pop_front() == Some(true) {
+            st.window_hits -= 1;
+        }
+        // sequential-run tracking + depth adaptation
+        let sequential =
+            matches!(st.last_chunk, Some(prev) if chunk == prev || chunk == prev + 1);
+        match (sequential, st.last_chunk) {
+            (true, _) => st.sequential_run += 1,
+            (false, Some(_)) => {
+                st.sequential_run = 0;
+                st.depth /= 2; // shuffle decays lookahead geometrically
+            }
+            (false, None) => st.sequential_run = 1, // first touch
         }
         st.last_chunk = Some(chunk);
+        if sequential && st.sequential_run >= 2 {
+            st.depth = (st.depth + 1).min(self.policy.max_depth);
+        }
+        if st.window.len() >= HIT_WINDOW
+            && st.sequential_run < 2
+            && (st.window_hits as f64) < SHUTOFF_HIT_RATE * st.window.len() as f64
+        {
+            st.depth = 0;
+        }
         // the chunk was just served, so any pending marker for it is stale
         st.pending.retain(|&c| c != chunk);
-        if self.policy.depth == 0 || st.sequential_run < 2 {
+        if st.depth == 0 || st.sequential_run < 2 {
             return Vec::new();
         }
         let mut out = Vec::new();
-        for ahead in 1..=self.policy.depth {
+        for ahead in 1..=st.depth {
             let target = chunk + ahead;
             if target < n_chunks && !st.pending.contains(&target) {
                 st.pending.push_back(target);
@@ -110,7 +186,8 @@ impl Prefetcher {
         self.state.lock().unwrap().pending.retain(|&c| c != chunk);
     }
 
-    /// Forget pending state (e.g. after a cache clear).
+    /// Forget everything — pending markers, the sequential run, the
+    /// adaptive depth, and the hit/miss window (e.g. after a cache clear).
     pub fn reset(&self) {
         *self.state.lock().unwrap() = State::default();
     }
@@ -121,56 +198,111 @@ mod tests {
     use super::*;
 
     #[test]
-    fn engages_after_sequential_run() {
-        let p = Prefetcher::new(PrefetchPolicy { depth: 2 });
-        assert!(p.on_access(0, 10).is_empty()); // first touch
-        assert_eq!(p.on_access(1, 10), vec![2, 3]); // sequential confirmed
-        assert_eq!(p.on_access(2, 10), vec![4]); // 3 already pending
+    fn engages_after_sequential_run_and_widens() {
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 4 });
+        assert!(p.on_access(0, 20, false).is_empty()); // first touch
+        assert_eq!(p.on_access(1, 20, false), vec![2]); // run confirmed, depth 1
+        assert_eq!(p.depth(), 1);
+        assert_eq!(p.on_access(2, 20, true), vec![3, 4]); // depth 2
+        assert_eq!(p.on_access(3, 20, true), vec![5, 6]); // depth 3; 4 pending
+        assert_eq!(p.on_access(4, 20, true), vec![7, 8]); // depth 4; 5,6 pending
+        p.on_access(5, 20, true);
+        assert_eq!(p.depth(), 4, "depth is capped at max_depth");
+    }
+
+    #[test]
+    fn scan_reaches_static_default_depth() {
+        // acceptance: on a sequential scan the adaptive depth must reach at
+        // least the old static default
+        let p = Prefetcher::new(PrefetchPolicy::default());
+        for c in 0..8 {
+            p.on_access(c, 100, true);
+        }
+        assert!(p.depth() >= STATIC_DEFAULT_DEPTH, "depth {}", p.depth());
+    }
+
+    #[test]
+    fn jumps_halve_depth_toward_zero() {
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 8 });
+        for c in 0..10 {
+            p.on_access(c, 100, true); // widen to the cap
+        }
+        assert_eq!(p.depth(), 8);
+        p.on_access(50, 100, false);
+        assert_eq!(p.depth(), 4);
+        p.on_access(13, 100, false);
+        assert_eq!(p.depth(), 2);
+        p.on_access(77, 100, false);
+        p.on_access(31, 100, false);
+        assert!(p.depth() <= 1, "shuffle must decay depth to <= 1");
+    }
+
+    #[test]
+    fn thrashing_window_shuts_readahead_off() {
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 8 });
+        // random-looking misses fill the observation window
+        for i in 0..(HIT_WINDOW as u32 + 4) {
+            p.on_access((i * 17) % 97, 100, false);
+        }
+        assert_eq!(p.depth(), 0, "low hit rate + no run must shut off");
+        assert!(p.on_access(((HIT_WINDOW as u32 + 4) * 17) % 97, 100, false).is_empty());
+    }
+
+    #[test]
+    fn sequential_run_overrides_cold_window() {
+        // a cold scan (all misses, e.g. one file per chunk) must still
+        // engage readahead: structure beats the hit-rate signal
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 8 });
+        for c in 0..(HIT_WINDOW as u32 + 8) {
+            p.on_access(c, 1000, false);
+        }
+        assert!(p.depth() >= STATIC_DEFAULT_DEPTH, "depth {}", p.depth());
     }
 
     #[test]
     fn sequential_probe_tracks_run() {
-        let p = Prefetcher::new(PrefetchPolicy { depth: 2 });
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 2 });
         assert!(!p.is_sequential(), "cold start is not a scan");
-        p.on_access(0, 10);
+        p.on_access(0, 10, false);
         assert!(!p.is_sequential(), "one touch is not a scan");
-        p.on_access(1, 10);
+        p.on_access(1, 10, false);
         assert!(p.is_sequential(), "two forward steps confirm the scan");
-        p.on_access(7, 10);
+        p.on_access(7, 10, false);
         assert!(!p.is_sequential(), "a jump resets the probe");
     }
 
     #[test]
-    fn random_access_disables() {
-        let p = Prefetcher::new(PrefetchPolicy { depth: 2 });
-        p.on_access(0, 10);
-        p.on_access(1, 10);
-        assert!(p.on_access(7, 10).is_empty()); // jump resets the run
-        assert!(p.on_access(3, 10).is_empty());
+    fn random_access_emits_nothing() {
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 2 });
+        p.on_access(0, 10, false);
+        p.on_access(1, 10, false);
+        assert!(p.on_access(7, 10, false).is_empty()); // jump resets the run
+        assert!(p.on_access(3, 10, false).is_empty());
     }
 
     #[test]
     fn respects_namespace_end() {
-        let p = Prefetcher::new(PrefetchPolicy { depth: 3 });
-        p.on_access(7, 10);
-        p.on_access(8, 10);
-        assert_eq!(p.on_access(9, 10), Vec::<u32>::new()); // nothing past end
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 3 });
+        p.on_access(7, 10, true);
+        p.on_access(8, 10, true);
+        assert_eq!(p.on_access(9, 10, true), Vec::<u32>::new()); // nothing past end
     }
 
     #[test]
-    fn depth_zero_disables() {
-        let p = Prefetcher::new(PrefetchPolicy { depth: 0 });
-        p.on_access(0, 10);
-        p.on_access(1, 10);
-        assert!(p.on_access(2, 10).is_empty());
+    fn depth_zero_cap_disables() {
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 0 });
+        p.on_access(0, 10, true);
+        p.on_access(1, 10, true);
+        assert!(p.on_access(2, 10, true).is_empty());
+        assert_eq!(p.depth(), 0);
     }
 
     #[test]
     fn repeat_access_counts_as_sequential() {
-        let p = Prefetcher::new(PrefetchPolicy { depth: 1 });
-        p.on_access(5, 10);
-        assert_eq!(p.on_access(5, 10), vec![6], "second touch confirms the run");
-        assert!(p.on_access(5, 10).is_empty(), "6 is already pending");
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 1 });
+        p.on_access(5, 10, true);
+        assert_eq!(p.on_access(5, 10, true), vec![6], "second touch confirms the run");
+        assert!(p.on_access(5, 10, true).is_empty(), "6 is already pending");
     }
 
     #[test]
@@ -178,44 +310,56 @@ mod tests {
         // seed bug: once a chunk entered `pending` it stayed there, so a
         // chunk that was read (or later evicted) could never be
         // re-prefetched while the window remembered it
-        let p = Prefetcher::new(PrefetchPolicy { depth: 1 });
-        p.on_access(0, 10);
-        assert_eq!(p.on_access(1, 10), vec![2]);
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 1 });
+        p.on_access(0, 10, true);
+        assert_eq!(p.on_access(1, 10, true), vec![2]);
         // reading chunk 2 clears its pending marker and proposes 3
-        assert_eq!(p.on_access(2, 10), vec![3]);
+        assert_eq!(p.on_access(2, 10, true), vec![3]);
         // chunk 3 evicted before being read; after its in-flight fetch is
         // complete()d, a repeat access may propose it again
         p.complete(3);
-        assert_eq!(p.on_access(2, 10), vec![3], "re-prefetch after completion");
+        assert_eq!(p.on_access(2, 10, true), vec![3], "re-prefetch after completion");
     }
 
     #[test]
     fn completion_unblocks_re_prefetch() {
-        let p = Prefetcher::new(PrefetchPolicy { depth: 2 });
-        p.on_access(0, 10);
-        assert_eq!(p.on_access(1, 10), vec![2, 3]);
-        assert!(p.on_access(1, 10).is_empty(), "both targets pending");
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 2 });
+        p.on_access(0, 10, true);
+        assert_eq!(p.on_access(1, 10, true), vec![2]);
+        assert_eq!(p.on_access(1, 10, true), vec![3], "deeper now; 2 still pending");
+        assert!(p.on_access(1, 10, true).is_empty(), "both targets pending");
         p.complete(2);
         p.complete(3);
-        assert_eq!(p.on_access(1, 10), vec![2, 3], "fetches done; window clear");
+        assert_eq!(p.on_access(1, 10, true), vec![2, 3], "fetches done; window clear");
     }
 
     #[test]
     fn clones_share_state() {
-        let p = Prefetcher::new(PrefetchPolicy { depth: 1 });
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 1 });
         let q = p.clone();
-        p.on_access(0, 10);
-        assert_eq!(q.on_access(1, 10), vec![2]);
+        p.on_access(0, 10, true);
+        assert_eq!(q.on_access(1, 10, true), vec![2]);
         q.complete(2);
-        assert_eq!(p.on_access(1, 10), vec![2]);
+        assert_eq!(p.on_access(1, 10, true), vec![2]);
     }
 
     #[test]
     fn reset_forgets_everything() {
-        let p = Prefetcher::new(PrefetchPolicy { depth: 2 });
-        p.on_access(0, 10);
-        p.on_access(1, 10);
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 2 });
+        p.on_access(0, 10, true);
+        p.on_access(1, 10, true);
+        assert!(p.depth() > 0);
         p.reset();
-        assert!(p.on_access(5, 10).is_empty(), "run restarts after reset");
+        assert_eq!(p.depth(), 0, "adaptive depth cleared");
+        assert_eq!(p.window_hit_rate(), 0.0, "observation window cleared");
+        assert!(p.on_access(5, 10, true).is_empty(), "run restarts after reset");
+    }
+
+    #[test]
+    fn window_hit_rate_tracks_outcomes() {
+        let p = Prefetcher::new(PrefetchPolicy { max_depth: 2 });
+        p.on_access(0, 10, true);
+        p.on_access(1, 10, false);
+        assert!((p.window_hit_rate() - 0.5).abs() < 1e-9);
     }
 }

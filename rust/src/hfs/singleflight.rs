@@ -73,6 +73,7 @@ pub struct SingleFlight {
 }
 
 impl SingleFlight {
+    /// An empty in-flight table.
     pub fn new() -> Self {
         Self::default()
     }

@@ -1,0 +1,572 @@
+//! [`SpillTier`]: the bounded local-disk second tier of the chunk cache.
+//!
+//! The paper's cost story depends on cheap unstable nodes staying fed
+//! from object storage; that only works if hot data stays *near* compute.
+//! The RAM [`super::ChunkCache`] used to be the whole story — an evicted
+//! chunk was simply dropped and the next read paid a full network fetch.
+//! This tier catches RAM evictions on node-local disk (the FfDL-style
+//! NVMe tier between object storage and workers), so a later miss
+//! promotes the chunk back into RAM at disk speed without touching the
+//! object store:
+//!
+//! ```text
+//!   read_file ── RAM LRU hit ──────────────► ByteView      (ns)
+//!        │ miss
+//!        ├──── SpillTier hit ─► promote to RAM ─► ByteView (disk, ~100 µs)
+//!        │ miss                      │ RAM eviction
+//!        └──── ObjectStore GET ──────┴─► SpillTier::put    (network, ~100 ms)
+//! ```
+//!
+//! Design points:
+//!
+//! * **Content-addressed by `(namespace, chunk id)`.** Every spill file
+//!   name carries the chunk id, its byte length, and an FNV-1a 64-bit
+//!   digest of its content. A read verifies three things before a single
+//!   byte is served: the length against the caller's manifest, the bytes
+//!   against the digest in the file's own name (truncation, bit rot),
+//!   and that digest against the *manifest-recorded* chunk digest (a
+//!   namespace rebuilt with identical chunk sizes but different content
+//!   must not serve yesterday's bytes). Any mismatch purges the entry
+//!   and falls back to the object store. The tier can therefore be
+//!   pointed at a *pre-existing* spill directory after a crash/restart
+//!   and either reuse valid chunks or safely ignore stale ones.
+//! * **Bounded, LRU by file size.** A byte budget caps the directory;
+//!   eviction removes least-recently-used files first.
+//! * **fsync-free, atomic writes.** Files appear via write-then-rename
+//!   (through [`DiskStore`]), so readers never observe partial writes;
+//!   durability is *not* promised — this is a cache, and a lost spill
+//!   file is just a future miss.
+//! * **Best-effort.** I/O errors on the spill path never fail a read;
+//!   they only cost the fallback fetch.
+//!
+//! Concurrency: callers ([`super::HyperFs`]) route demand-miss probes
+//! through the same single-flight table as object-store fetches, so
+//! concurrent misses issue at most one disk load, and eviction writes run
+//! on the shared fetch lanes so they never block readers.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Counter;
+use crate::storage::{DiskStore, ObjectStore};
+use crate::Result;
+
+use super::chunk::fnv1a64;
+use super::view::ChunkData;
+
+/// Index entry for one spilled chunk (the bytes live on disk).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Entry {
+    len: u64,
+    hash: u64,
+    /// Monotonic recency stamp; the smallest stamp is the LRU victim.
+    stamp: u64,
+}
+
+/// In-RAM index over the spill directory. `by_stamp` mirrors `entries`
+/// in recency order (stamps are unique), so the LRU victim is O(log n)
+/// instead of a full-table scan under the mutex.
+#[derive(Default)]
+struct Index {
+    entries: HashMap<u32, Entry>,
+    /// stamp -> id; the first key is the LRU victim.
+    by_stamp: BTreeMap<u64, u32>,
+    used_bytes: u64,
+    clock: u64,
+}
+
+impl Index {
+    fn next_stamp(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Insert or replace `id`, returning the displaced entry, if any.
+    fn insert(&mut self, id: u32, len: u64, hash: u64) -> Option<Entry> {
+        let stamp = self.next_stamp();
+        let old = self.entries.insert(id, Entry { len, hash, stamp });
+        if let Some(o) = &old {
+            self.by_stamp.remove(&o.stamp);
+            self.used_bytes -= o.len;
+        }
+        self.by_stamp.insert(stamp, id);
+        self.used_bytes += len;
+        old
+    }
+
+    fn touch(&mut self, id: u32) {
+        let stamp = self.next_stamp();
+        if let Some(e) = self.entries.get_mut(&id) {
+            self.by_stamp.remove(&e.stamp);
+            e.stamp = stamp;
+            self.by_stamp.insert(stamp, id);
+        }
+    }
+
+    fn remove(&mut self, id: u32) -> Option<Entry> {
+        let e = self.entries.remove(&id)?;
+        self.by_stamp.remove(&e.stamp);
+        self.used_bytes -= e.len;
+        Some(e)
+    }
+
+    /// Least-recently-used id, O(log n).
+    fn lru(&self) -> Option<u32> {
+        self.by_stamp.first_key_value().map(|(_, id)| *id)
+    }
+}
+
+/// Bounded on-disk LRU of chunks, keyed by `(namespace, chunk id)`.
+pub struct SpillTier {
+    store: DiskStore,
+    ns: String,
+    capacity_bytes: u64,
+    index: Mutex<Index>,
+    hits: Counter,
+    writes: Counter,
+    evictions: Counter,
+    /// Entries purged because they failed the length/identity check.
+    rejected: Counter,
+}
+
+impl SpillTier {
+    /// Open (or create) the spill tier for namespace `ns` under `dir`.
+    ///
+    /// An existing directory is scanned: files whose names parse and whose
+    /// ids are unique are adopted into the index (their integrity is
+    /// verified lazily, on first read); everything else — junk names,
+    /// duplicate ids from an interrupted rewrite — is deleted. The scan
+    /// then enforces the byte budget, so shrinking `capacity_bytes`
+    /// across a restart trims the directory immediately.
+    pub fn open(dir: &Path, ns: &str, capacity_bytes: u64) -> Result<Self> {
+        let tier = Self {
+            store: DiskStore::new(dir)?,
+            ns: ns.to_string(),
+            capacity_bytes,
+            index: Mutex::new(Index::default()),
+            hits: Counter::default(),
+            writes: Counter::default(),
+            evictions: Counter::default(),
+            rejected: Counter::default(),
+        };
+        let prefix = format!("spill/{ns}/");
+        // crash litter first: temp files from writers killed mid-spill
+        // are invisible to list() and to the byte budget, so they must
+        // be reclaimed here or they accumulate across preemption cycles
+        tier.store.sweep_temp(&prefix);
+        let mut junk = Vec::new();
+        {
+            let mut idx = tier.index.lock().unwrap();
+            for key in tier.store.list(&prefix)? {
+                match Self::parse_name(&key[prefix.len()..]) {
+                    Some((id, len, hash)) if !idx.entries.contains_key(&id) => {
+                        idx.insert(id, len, hash);
+                    }
+                    _ => junk.push(key),
+                }
+            }
+        }
+        for key in junk {
+            let _ = tier.store.delete(&key);
+        }
+        tier.enforce_capacity();
+        Ok(tier)
+    }
+
+    /// On-store key of one spilled chunk. The name is the whole identity:
+    /// `spill/<ns>/<id>_<len>_<fnv1a64 hex>`.
+    fn key(&self, id: u32, len: u64, hash: u64) -> String {
+        format!("spill/{}/{id:08}_{len}_{hash:016x}", self.ns)
+    }
+
+    /// Parse `<id>_<len>_<hash>` back out of a file name.
+    fn parse_name(name: &str) -> Option<(u32, u64, u64)> {
+        let mut parts = name.split('_');
+        let id = parts.next()?.parse::<u32>().ok()?;
+        let len = parts.next()?.parse::<u64>().ok()?;
+        let hash = u64::from_str_radix(parts.next()?, 16).ok()?;
+        parts.next().is_none().then_some((id, len, hash))
+    }
+
+    /// Fetch a spilled chunk, refreshing its recency.
+    ///
+    /// `expected_len` and `expected_hash` are what the caller's manifest
+    /// records for the chunk (`expected_hash` 0 = manifest predates
+    /// digests; the digest check is skipped). An entry that disagrees
+    /// with either is stale — the namespace was rebuilt — and is purged;
+    /// the bytes read from disk must additionally match the digest in
+    /// the file's own name (truncation, corruption), or the entry is
+    /// purged and `None` returned. Stale or corrupt spill files are
+    /// never served.
+    pub fn get(&self, id: u32, expected_len: u64, expected_hash: u64) -> Option<ChunkData> {
+        let entry = {
+            let mut idx = self.index.lock().unwrap();
+            let e = *idx.entries.get(&id)?;
+            if e.len != expected_len || (expected_hash != 0 && e.hash != expected_hash) {
+                idx.remove(id);
+                drop(idx);
+                self.rejected.inc();
+                let _ = self.store.delete(&self.key(id, e.len, e.hash));
+                return None;
+            }
+            idx.touch(id);
+            e
+        };
+        let key = self.key(id, entry.len, entry.hash);
+        let bytes = match self.store.get(&key) {
+            Ok(b) => b,
+            Err(_) => {
+                // file vanished underneath us (external cleanup)
+                self.forget_if_current(id, &entry);
+                return None;
+            }
+        };
+        if bytes.len() as u64 != entry.len || fnv1a64(&bytes) != entry.hash {
+            self.rejected.inc();
+            // drop only OUR entry: a concurrent put may have replaced it
+            // with a fresh one that must survive (its file has a
+            // different name, so the delete below cannot touch it)
+            self.forget_if_current(id, &entry);
+            let _ = self.store.delete(&key);
+            return None;
+        }
+        // a clear() may have raced the disk read; do not resurrect
+        match self.index.lock().unwrap().entries.get(&id) {
+            Some(e) if e.len == entry.len && e.hash == entry.hash => {}
+            _ => return None,
+        }
+        self.hits.inc();
+        Some(Arc::new(bytes))
+    }
+
+    /// Remove `id` from the index only if it still refers to the same
+    /// payload as `entry` — failure paths must not clobber an entry a
+    /// concurrent `put` just replaced.
+    fn forget_if_current(&self, id: u32, entry: &Entry) {
+        let mut idx = self.index.lock().unwrap();
+        let current = idx
+            .entries
+            .get(&id)
+            .is_some_and(|e| e.len == entry.len && e.hash == entry.hash);
+        if current {
+            idx.remove(id);
+        }
+    }
+
+    /// Spill a chunk to disk (best-effort; failures are future misses).
+    ///
+    /// Identical bytes already on disk only refresh recency — re-evicting
+    /// a chunk that round-tripped through RAM costs no I/O. A different
+    /// payload for the same id (the namespace was rebuilt) replaces the
+    /// old file.
+    pub fn put(&self, id: u32, data: &ChunkData) {
+        let len = data.len() as u64;
+        if len == 0 || len > self.capacity_bytes {
+            return;
+        }
+        let hash = fnv1a64(data);
+        {
+            let mut idx = self.index.lock().unwrap();
+            if let Some(e) = idx.entries.get(&id) {
+                if e.len == len && e.hash == hash {
+                    idx.touch(id);
+                    return;
+                }
+            }
+        }
+        let key = self.key(id, len, hash);
+        if self.store.put(&key, data).is_err() {
+            return;
+        }
+        self.writes.inc();
+        let stale = self.index.lock().unwrap().insert(id, len, hash);
+        if let Some(o) = stale {
+            if o.len != len || o.hash != hash {
+                // a racing identical put cannot delete the file just written
+                let _ = self.store.delete(&self.key(id, o.len, o.hash));
+            }
+        }
+        self.enforce_capacity();
+    }
+
+    /// Evict LRU entries (deleting their files) until within budget.
+    /// Victim selection is O(log n) via the recency index; file deletion
+    /// happens outside the lock.
+    fn enforce_capacity(&self) {
+        loop {
+            let victim = {
+                let mut idx = self.index.lock().unwrap();
+                if idx.used_bytes <= self.capacity_bytes {
+                    return;
+                }
+                match idx.lru() {
+                    Some(id) => idx.remove(id).map(|e| (id, e)),
+                    None => return,
+                }
+            };
+            let Some((id, e)) = victim else { return };
+            self.evictions.inc();
+            let _ = self.store.delete(&self.key(id, e.len, e.hash));
+        }
+    }
+
+    /// Drop every spilled chunk and delete its file.
+    pub fn clear(&self) {
+        let victims: Vec<(u32, Entry)> = {
+            let mut idx = self.index.lock().unwrap();
+            idx.used_bytes = 0;
+            idx.by_stamp.clear();
+            idx.entries.drain().collect()
+        };
+        for (id, e) in victims {
+            let _ = self.store.delete(&self.key(id, e.len, e.hash));
+        }
+    }
+
+    /// Is a (possibly unverified) entry for `id` present?
+    pub fn contains(&self, id: u32) -> bool {
+        self.index.lock().unwrap().entries.contains_key(&id)
+    }
+
+    /// Spilled chunks currently indexed.
+    pub fn len(&self) -> usize {
+        self.index.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is spilled.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes of spilled payload currently indexed.
+    pub fn used_bytes(&self) -> u64 {
+        self.index.lock().unwrap().used_bytes
+    }
+
+    /// The configured byte budget.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Reads served from disk since open.
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Chunk files written since open (dedup-refreshes not counted).
+    pub fn writes(&self) -> u64 {
+        self.writes.get()
+    }
+
+    /// Entries evicted to stay within the byte budget since open.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.get()
+    }
+
+    /// Entries purged by the length/identity check since open.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn chunk(byte: u8, n: usize) -> ChunkData {
+        Arc::new(vec![byte; n])
+    }
+
+    #[test]
+    fn roundtrip_and_recency() {
+        let dir = TempDir::new().unwrap();
+        let t = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+        assert!(t.is_empty());
+        t.put(3, &chunk(7, 100));
+        assert!(t.contains(3));
+        assert_eq!(t.used_bytes(), 100);
+        assert_eq!(*t.get(3, 100, 0).unwrap(), vec![7u8; 100]);
+        assert_eq!(t.hits(), 1);
+        assert!(t.get(4, 100, 0).is_none(), "absent id misses");
+    }
+
+    #[test]
+    fn lru_eviction_by_bytes() {
+        let dir = TempDir::new().unwrap();
+        let t = SpillTier::open(dir.path(), "ds", 250).unwrap();
+        t.put(1, &chunk(1, 100));
+        t.put(2, &chunk(2, 100));
+        t.get(1, 100, 0).unwrap(); // refresh 1 -> 2 is LRU
+        t.put(3, &chunk(3, 100)); // evicts 2
+        assert!(t.contains(1) && t.contains(3));
+        assert!(!t.contains(2));
+        assert_eq!(t.evictions(), 1);
+        assert_eq!(t.used_bytes(), 200);
+    }
+
+    #[test]
+    fn oversized_chunk_not_spilled() {
+        let dir = TempDir::new().unwrap();
+        let t = SpillTier::open(dir.path(), "ds", 50).unwrap();
+        t.put(1, &chunk(1, 100));
+        assert!(t.is_empty());
+        t.put(2, &Arc::new(Vec::new()));
+        assert!(t.is_empty(), "empty payloads are not spilled");
+    }
+
+    #[test]
+    fn dedup_put_skips_rewrite() {
+        let dir = TempDir::new().unwrap();
+        let t = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+        let data = chunk(9, 500);
+        t.put(1, &data);
+        t.put(1, &data); // identical bytes: recency refresh only
+        assert_eq!(t.writes(), 1);
+        // different bytes for the same id replace the file
+        t.put(1, &chunk(8, 500));
+        assert_eq!(t.writes(), 2);
+        assert_eq!(t.len(), 1);
+        assert_eq!(*t.get(1, 500, 0).unwrap(), vec![8u8; 500]);
+    }
+
+    #[test]
+    fn restart_reuses_valid_chunks() {
+        let dir = TempDir::new().unwrap();
+        {
+            let t = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+            t.put(5, &chunk(5, 300));
+            t.put(6, &chunk(6, 300));
+        }
+        let t2 = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+        assert_eq!(t2.len(), 2);
+        assert_eq!(t2.used_bytes(), 600);
+        assert_eq!(*t2.get(5, 300, 0).unwrap(), vec![5u8; 300]);
+        assert_eq!(t2.rejected(), 0);
+    }
+
+    #[test]
+    fn restart_deletes_junk_and_respects_smaller_budget() {
+        let dir = TempDir::new().unwrap();
+        {
+            let t = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+            t.put(1, &chunk(1, 300));
+            t.put(2, &chunk(2, 300));
+        }
+        // junk the directory: a name that does not parse, plus a temp
+        // file stranded by a writer killed between write and rename
+        let junk = dir.path().join("spill/ds/not_a_chunk");
+        std::fs::write(&junk, b"garbage").unwrap();
+        let stranded = dir.path().join("spill/ds/00000009_300_0badc0de.tmp~1-2");
+        std::fs::write(&stranded, vec![9u8; 300]).unwrap();
+        let t2 = SpillTier::open(dir.path(), "ds", 350).unwrap();
+        assert!(!junk.exists(), "unparseable files are removed at open");
+        assert!(!stranded.exists(), "crash-stranded temp files are swept at open");
+        assert_eq!(t2.len(), 1, "budget shrank: one chunk had to go");
+        assert!(t2.used_bytes() <= 350);
+    }
+
+    #[test]
+    fn corrupt_content_is_never_served() {
+        let dir = TempDir::new().unwrap();
+        {
+            let t = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+            t.put(1, &chunk(1, 300));
+        }
+        // flip bytes in place (same length, so only the digest can tell)
+        let file = std::fs::read_dir(dir.path().join("spill/ds"))
+            .unwrap()
+            .next()
+            .unwrap()
+            .unwrap()
+            .path();
+        std::fs::write(&file, vec![2u8; 300]).unwrap();
+        let t2 = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+        assert!(t2.contains(1), "adopted before verification");
+        assert!(t2.get(1, 300, 0).is_none(), "digest mismatch must not serve");
+        assert_eq!(t2.rejected(), 1);
+        assert!(!t2.contains(1), "purged after the failed check");
+        assert!(!file.exists(), "the corrupt file is deleted");
+    }
+
+    #[test]
+    fn truncated_file_is_never_served() {
+        let dir = TempDir::new().unwrap();
+        {
+            let t = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+            t.put(1, &chunk(1, 300));
+        }
+        let file = std::fs::read_dir(dir.path().join("spill/ds"))
+            .unwrap()
+            .next()
+            .unwrap()
+            .unwrap()
+            .path();
+        std::fs::write(&file, vec![1u8; 100]).unwrap(); // truncate
+        let t2 = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+        assert!(t2.get(1, 300, 0).is_none(), "length mismatch must not serve");
+        assert_eq!(t2.rejected(), 1);
+    }
+
+    #[test]
+    fn manifest_digest_disagreement_purges() {
+        let dir = TempDir::new().unwrap();
+        let t = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+        let data = chunk(1, 300);
+        let h = fnv1a64(&data);
+        t.put(1, &data);
+        assert!(t.get(1, 300, h).is_some(), "matching manifest digest serves");
+        assert!(t.get(1, 300, 0).is_some(), "digest-less manifest skips the check");
+        // the namespace was rebuilt: same length, different content
+        assert!(t.get(1, 300, h ^ 1).is_none(), "stale spill must not serve");
+        assert_eq!(t.rejected(), 1);
+        assert!(!t.contains(1));
+    }
+
+    #[test]
+    fn manifest_length_disagreement_purges() {
+        let dir = TempDir::new().unwrap();
+        let t = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+        t.put(1, &chunk(1, 300));
+        // the namespace was rebuilt with a different chunk layout
+        assert!(t.get(1, 400, 0).is_none());
+        assert_eq!(t.rejected(), 1);
+        assert!(!t.contains(1));
+    }
+
+    #[test]
+    fn clear_removes_files() {
+        let dir = TempDir::new().unwrap();
+        let t = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+        t.put(1, &chunk(1, 100));
+        t.put(2, &chunk(2, 100));
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.used_bytes(), 0);
+        let left = std::fs::read_dir(dir.path().join("spill/ds")).unwrap().count();
+        assert_eq!(left, 0, "files deleted, not just forgotten");
+    }
+
+    #[test]
+    fn namespaces_do_not_collide() {
+        let dir = TempDir::new().unwrap();
+        let a = SpillTier::open(dir.path(), "ns-a", 1 << 20).unwrap();
+        let b = SpillTier::open(dir.path(), "ns-b", 1 << 20).unwrap();
+        a.put(1, &chunk(1, 100));
+        b.put(1, &chunk(2, 100));
+        assert_eq!(*a.get(1, 100, 0).unwrap(), vec![1u8; 100]);
+        assert_eq!(*b.get(1, 100, 0).unwrap(), vec![2u8; 100]);
+    }
+
+    #[test]
+    fn name_parsing() {
+        assert_eq!(
+            SpillTier::parse_name("00000042_100_00000000deadbeef"),
+            Some((42, 100, 0xdead_beef))
+        );
+        assert_eq!(SpillTier::parse_name("junk"), None);
+        assert_eq!(SpillTier::parse_name("1_2_3_4"), None);
+        assert_eq!(SpillTier::parse_name("x_2_3"), None);
+    }
+}

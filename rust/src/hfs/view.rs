@@ -46,14 +46,17 @@ impl ByteView {
         Self { chunk, offset: 0, len }
     }
 
+    /// Length of the viewed range in bytes.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True for a zero-length view.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// The viewed bytes (also available through `Deref`).
     pub fn as_slice(&self) -> &[u8] {
         &self.chunk[self.offset..self.offset + self.len]
     }

@@ -27,6 +27,11 @@ pub struct Uploader {
 }
 
 impl Uploader {
+    /// Start uploading `namespace` to `store` with `chunk_size`-byte
+    /// chunks.
+    ///
+    /// # Panics
+    /// If `chunk_size` is zero.
     pub fn new(store: StoreHandle, namespace: &str, chunk_size: u64) -> Self {
         assert!(chunk_size > 0, "chunk_size must be positive");
         Self {
@@ -80,7 +85,11 @@ impl Uploader {
         }
         let key = FsManifest::chunk_key(&self.ns, self.next_chunk);
         self.store.put(&key, &self.buf)?;
-        self.manifest.chunks.push(ChunkRef { id: self.next_chunk, len: self.buf.len() as u64 });
+        self.manifest.chunks.push(ChunkRef {
+            id: self.next_chunk,
+            len: self.buf.len() as u64,
+            hash: super::chunk::fnv1a64(&self.buf),
+        });
         self.next_chunk += 1;
         self.buf.clear();
         Ok(())

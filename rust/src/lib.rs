@@ -1,36 +1,7 @@
-//! # hyper-dist — reproduction of *Hyper: Distributed Cloud Processing for
-//! Large-Scale Deep Learning Tasks* (Buniatyan, 2019).
-//!
-//! Hyper is a hybrid distributed cloud framework: a chunked distributed
-//! file system backed by object storage (HFS), a fault-tolerant workflow /
-//! task scheduler driven by YAML recipes, spot-instance cost optimization,
-//! and the four evaluation workloads (ETL preprocessing, distributed
-//! training, hyperparameter search, large-scale inference).
-//!
-//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
-//! Layer 2 (JAX model) and Layer 1 (Pallas kernels) live in `python/` and
-//! are AOT-lowered to HLO text in `artifacts/`, which [`runtime`] loads
-//! and executes through the PJRT C API. Python is never on the request
-//! path.
-//!
-//! Module map (see DESIGN.md for the full inventory):
-//!
-//! * [`sim`] — deterministic discrete-event simulation core (virtual time).
-//! * [`storage`] — object stores: in-memory, disk, and the S3 latency model.
-//! * [`hfs`] — the Hyper File System: chunking, caching, prefetch.
-//! * [`cloud`] — instance catalog, provisioner, spot market, network model.
-//! * [`cluster`] — master, node servers, KV store, log collection.
-//! * [`workflow`] — YAML recipes -> DAG of experiments -> tasks, §II.C params.
-//! * [`scheduler`] — fault-tolerant task scheduling state machine + drivers.
-//! * [`runtime`] — PJRT executor for the AOT artifacts (train/eval/infer).
-//! * [`serve`] — inference serving: dynamic batching, admission control,
-//!   preemption-aware replica autoscaling (§IV.D at request granularity).
-//! * [`dataloader`] — async prefetching data pipeline over HFS.
-//! * [`etl`] — the §IV.A text preprocessing pipeline.
-//! * [`metrics`] — counters, histograms, cost accounting.
-//! * [`baselines`] — download-first FS, NFS model, sequential scheduler.
-//! * [`util`] — from-scratch JSON / YAML / bench / property-test
-//!   substrates (this image is offline; see DESIGN.md §Substitutions).
+//! The repository README below is the front page of this documentation
+//! (`#![doc = include_str!(...)]` keeps the two in lockstep); the module
+//! list in the sidebar is the same map with live links.
+#![doc = include_str!(concat!("../", env!("CARGO_PKG_README")))]
 
 pub mod baselines;
 pub mod cloud;

@@ -17,14 +17,17 @@ use std::sync::Mutex;
 pub struct Counter(Arc<AtomicU64>);
 
 impl Counter {
+    /// Add 1.
     pub fn inc(&self) {
         self.add(1);
     }
 
+    /// Add `n` (relaxed ordering; counters are statistics, not sync).
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current count.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -36,22 +39,27 @@ impl Counter {
 pub struct Gauge(Arc<AtomicI64>);
 
 impl Gauge {
+    /// Add 1 to the level.
     pub fn inc(&self) {
         self.add(1);
     }
 
+    /// Subtract 1 from the level.
     pub fn dec(&self) {
         self.add(-1);
     }
 
+    /// Shift the level by `n` (may be negative).
     pub fn add(&self, n: i64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Overwrite the level.
     pub fn set(&self, v: i64) {
         self.0.store(v, Ordering::Relaxed);
     }
 
+    /// Current level.
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -170,6 +178,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
@@ -190,10 +199,12 @@ impl Histogram {
         h.max = h.max.max(v);
     }
 
+    /// Values recorded so far.
     pub fn count(&self) -> u64 {
         self.inner.lock().unwrap().count
     }
 
+    /// Exact mean of recorded values (0 when empty).
     pub fn mean(&self) -> f64 {
         let h = self.inner.lock().unwrap();
         if h.count == 0 {
@@ -203,11 +214,13 @@ impl Histogram {
         }
     }
 
+    /// Exact minimum recorded value (0 when empty).
     pub fn min(&self) -> f64 {
         let h = self.inner.lock().unwrap();
         if h.count == 0 { 0.0 } else { h.min }
     }
 
+    /// Exact maximum recorded value (0 when empty).
     pub fn max(&self) -> f64 {
         let h = self.inner.lock().unwrap();
         if h.count == 0 { 0.0 } else { h.max }
@@ -247,18 +260,22 @@ pub struct MetricsRegistry {
 }
 
 impl MetricsRegistry {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// The counter registered under `name` (created on first use).
     pub fn counter(&self, name: &str) -> Counter {
         self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
+    /// The gauge registered under `name` (created on first use).
     pub fn gauge(&self, name: &str) -> Gauge {
         self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
+    /// The histogram registered under `name` (created on first use).
     pub fn histogram(&self, name: &str) -> Histogram {
         self.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
@@ -300,6 +317,7 @@ struct CostInner {
 }
 
 impl CostLedger {
+    /// An empty ledger.
     pub fn new() -> Self {
         Self::default()
     }
@@ -316,19 +334,23 @@ impl CostLedger {
         *c.by_type.entry(instance_type.to_string()).or_default() += usd;
     }
 
+    /// Everything charged so far, USD.
     pub fn total_usd(&self) -> f64 {
         let c = self.inner.lock().unwrap();
         c.on_demand_usd + c.spot_usd
     }
 
+    /// Spot-rate charges, USD.
     pub fn spot_usd(&self) -> f64 {
         self.inner.lock().unwrap().spot_usd
     }
 
+    /// On-demand charges, USD.
     pub fn on_demand_usd(&self) -> f64 {
         self.inner.lock().unwrap().on_demand_usd
     }
 
+    /// Charges grouped by instance type, USD.
     pub fn by_type(&self) -> BTreeMap<String, f64> {
         self.inner.lock().unwrap().by_type.clone()
     }

@@ -19,7 +19,9 @@
 /// Controller configuration.
 #[derive(Debug, Clone)]
 pub struct AutoscalerConfig {
+    /// Fleet floor: preemption losses below this trigger immediate repair.
     pub min_replicas: usize,
+    /// Fleet ceiling: scale-ups never push capacity past this.
     pub max_replicas: usize,
     /// The latency objective the controller defends (p99, seconds).
     pub slo_p99_s: f64,
@@ -32,8 +34,9 @@ pub struct AutoscalerConfig {
     pub backlog_per_replica: f64,
     /// Replicas added per scale-up decision.
     pub up_step: usize,
-    /// Minimum seconds between scale-ups / scale-downs.
+    /// Minimum seconds between scale-ups.
     pub up_cooldown_s: f64,
+    /// Minimum seconds between scale-downs (also held after a scale-up).
     pub down_cooldown_s: f64,
 }
 
@@ -56,6 +59,7 @@ impl Default for AutoscalerConfig {
 /// One control-tick observation.
 #[derive(Debug, Clone, Copy)]
 pub struct ScaleSignal {
+    /// Tick timestamp, seconds.
     pub now_s: f64,
     /// Requests waiting for a batch.
     pub queue_depth: usize,
@@ -71,6 +75,7 @@ pub struct ScaleSignal {
 /// What the control loop should do this tick.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScaleDecision {
+    /// Leave the fleet as it is.
     Hold,
     /// Provision this many additional replicas.
     Up(usize),
@@ -95,6 +100,7 @@ impl Autoscaler {
         Self { cfg, last_up_s: 0.0, last_down_s: 0.0 }
     }
 
+    /// The configuration this controller runs.
     pub fn config(&self) -> &AutoscalerConfig {
         &self.cfg
     }

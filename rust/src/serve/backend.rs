@@ -38,6 +38,11 @@ pub struct SyntheticBackend {
 }
 
 impl SyntheticBackend {
+    /// A synthetic replica with service time `base_s + per_item_s * n`;
+    /// `sleep` selects wallclock mode (the modeled time is slept out).
+    ///
+    /// # Panics
+    /// If `max_batch` is zero.
     pub fn new(base_s: f64, per_item_s: f64, max_batch: usize, sleep: bool) -> Self {
         assert!(max_batch > 0, "max_batch must be positive");
         Self { base_s, per_item_s, max_batch, sleep }
@@ -83,6 +88,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Wrap an inference session, allocating its reusable batch slot.
     pub fn new(sess: InferSession) -> Self {
         let slot = sess.new_slot();
         Self { sess, slot }

@@ -32,6 +32,24 @@
 //! overload shedding, cost-vs-SLO frontiers) runs deterministically in
 //! virtual time — see `examples/serve_slo.rs` and the `serve_batching`
 //! bench.
+//!
+//! Request flow through the threaded stack (the virtual-time sim mirrors
+//! the same shape with simulated replicas):
+//!
+//! ```text
+//!  clients ── submit ──► BoundedQueue ── next_batch ──► worker 0 ─► BatchBackend
+//!               │        (admission     (close on size │
+//!             shed       limit, shed    OR deadline)   ├► worker 1 ─► BatchBackend
+//!           (Error::Shed) at the door)                 │      │
+//!                            ▲                         │   response
+//!                            │ requeue_front           ▼      ▼
+//!                            └───── preempted batch ── ServeSim / ResponseHandle
+//!                                                           ▲
+//!                              Autoscaler ── Up/Down ───────┘
+//!                              (p99 + backlog per control tick)
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod autoscaler;
 pub mod backend;

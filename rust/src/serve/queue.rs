@@ -31,6 +31,10 @@ pub struct BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// An empty queue admitting at most `capacity` waiting items.
+    ///
+    /// # Panics
+    /// If `capacity` is zero.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "queue capacity must be positive");
         Self {
@@ -40,14 +44,17 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// The admission limit.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Items currently waiting (may exceed `capacity` after requeues).
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().items.len()
     }
 
+    /// True when nothing is waiting.
     pub fn is_empty(&self) -> bool {
         self.inner.lock().unwrap().items.is_empty()
     }

@@ -51,10 +51,15 @@ impl Default for ServerConfig {
 /// Observable serving counters (all cheap to clone; shared with workers).
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Requests accepted past admission control.
     pub admitted: Counter,
+    /// Requests rejected at the door (queue at capacity).
     pub shed: Counter,
+    /// Requests answered successfully.
     pub completed: Counter,
+    /// Requests whose batch errored.
     pub failed: Counter,
+    /// Batches dispatched to backends.
     pub batches: Counter,
     /// Requests per closed batch.
     pub batch_fill: Histogram,
@@ -62,6 +67,7 @@ pub struct ServeStats {
     pub queue_wait_s: Histogram,
     /// Seconds from admission to response.
     pub latency_s: Histogram,
+    /// Requests waiting at the last observation.
     pub queue_depth: Gauge,
 }
 
@@ -89,6 +95,7 @@ impl ResponseHandle {
 pub struct ServeStack {
     queue: Arc<BoundedQueue<Pending>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Live serving counters (shared with the worker threads).
     pub stats: ServeStats,
 }
 

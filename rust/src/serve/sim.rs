@@ -33,7 +33,9 @@ use super::batcher::BatchPolicy;
 /// Client model driving the simulation.
 #[derive(Debug, Clone)]
 pub enum Load {
+    /// Open loop: arrivals keep coming regardless of system state.
     Open(OpenLoop),
+    /// Closed loop: each user thinks, issues, waits for the response.
     Closed(ClosedLoop),
     /// Open loop whose rate follows a piecewise-constant [`RateSchedule`]
     /// (ramps, flash crowds). Gaps are exponential at the rate in effect
@@ -47,32 +49,45 @@ pub enum Load {
 /// `notice_s`-second warning (0 = instant kill, in-flight batches requeue).
 #[derive(Debug, Clone, Copy)]
 pub struct StormEvent {
+    /// Virtual time the wave lands, seconds.
     pub at_s: f64,
+    /// Replicas reclaimed by this wave.
     pub kills: usize,
+    /// Warning before the hard kill, seconds (0 = instant).
     pub notice_s: f64,
 }
 
 /// Full serving-scenario configuration.
 #[derive(Debug, Clone)]
 pub struct ServeSimConfig {
+    /// Dynamic batching rule (size / deadline).
     pub batch: BatchPolicy,
     /// Admission limit (requests beyond this are shed).
     pub queue_depth: usize,
     /// Replica batch service time: `base + per_item * n` seconds.
     pub service_base_s: f64,
+    /// Marginal per-request service time, seconds.
     pub service_per_item_s: f64,
+    /// Instance type replicas run on (pricing + provisioning profile).
     pub instance: InstanceType,
+    /// Provision replicas on the spot market (vs on-demand).
     pub spot_replicas: bool,
+    /// Fleet size at t=0.
     pub initial_replicas: usize,
     /// Initial replicas start Ready at t=0 (fleet provisioned before the
     /// traffic cutover). Autoscaled additions always pay provisioning.
     pub warm_start: bool,
+    /// Replica controller configuration.
     pub autoscaler: AutoscalerConfig,
+    /// Seconds between autoscaler control ticks.
     pub scale_interval_s: f64,
+    /// Node provisioning model (boot time, jitter, warm-cache odds).
     pub provisioner: ProvisionerConfig,
     /// Background random preemptions; `None` = scripted storms only.
     pub spot_market: Option<SpotMarketConfig>,
+    /// Scripted preemption waves.
     pub storm: Vec<StormEvent>,
+    /// RNG seed (same seed ⇒ bit-identical report).
     pub seed: u64,
     /// Record a per-tick timeline into [`ServeReport::trace`].
     pub trace: bool,
@@ -103,12 +118,19 @@ impl Default for ServeSimConfig {
 /// One autoscaler control-tick observation (when tracing is on).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TickTrace {
+    /// Tick timestamp, virtual seconds.
     pub t_s: f64,
+    /// Replicas able to serve at the tick.
     pub live: usize,
+    /// Replicas requested but not yet ready.
     pub provisioning: usize,
+    /// Requests waiting at the tick.
     pub queue_depth: usize,
+    /// p99 latency over the window since the previous tick, seconds.
     pub window_p99_s: f64,
+    /// Cumulative completed responses at the tick.
     pub completed: u64,
+    /// Cumulative shed requests at the tick.
     pub shed: u64,
 }
 
@@ -119,9 +141,13 @@ pub struct ServeReport {
     pub duration_s: f64,
     /// Virtual time when the last response left the system.
     pub makespan_s: f64,
+    /// Requests the load generator produced.
     pub offered: u64,
+    /// Requests accepted past admission control.
     pub admitted: u64,
+    /// Requests rejected at the door.
     pub shed: u64,
+    /// Requests answered (must equal `admitted` when nothing is lost).
     pub completed: u64,
     /// Requests re-queued out of preempted in-flight batches.
     pub requeued: u64,
@@ -131,14 +157,21 @@ pub struct ServeReport {
     pub scale_ups: u64,
     /// Replicas drained by the autoscaler's cold path.
     pub scale_downs: u64,
+    /// Total replicas provisioned over the run.
     pub replicas_launched: usize,
+    /// Peak concurrently-live replicas.
     pub max_live: usize,
+    /// Replicas still alive when the run ended.
     pub final_live: usize,
     /// End-to-end latency (admission → response), seconds.
     pub latency: HistogramSnapshot,
+    /// Average requests per dispatched batch.
     pub mean_batch_fill: f64,
+    /// Completions per second of load horizon.
     pub throughput_rps: f64,
+    /// Instance-hours billed, USD.
     pub cost_usd: f64,
+    /// Per-tick timeline (empty unless tracing was enabled).
     pub trace: Vec<TickTrace>,
 }
 
@@ -221,6 +254,7 @@ pub struct ServeSim {
 }
 
 impl ServeSim {
+    /// Build a simulator for one scenario configuration.
     pub fn new(cfg: ServeSimConfig) -> Self {
         let seed = cfg.seed;
         Self {

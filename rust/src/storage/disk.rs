@@ -8,9 +8,17 @@
 use std::fs;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::ObjectStore;
 use crate::{Error, Result};
+
+/// Per-process sequence distinguishing in-flight temp files; combined
+/// with the pid in the temp name, concurrent `put`s on keys sharing a
+/// file stem (or on the same key) — from this process or another one
+/// sharing the store root — never rename each other's half-written
+/// temp away.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 #[derive(Debug)]
 pub struct DiskStore {
@@ -34,6 +42,44 @@ impl DiskStore {
         }
         Ok(self.root.join(key))
     }
+
+    /// Delete stranded temp files under `prefix` — litter from writers
+    /// that crashed between write and rename. `list()` hides temp files,
+    /// so without this sweep they would accumulate invisibly and escape
+    /// any caller-side byte accounting. Callers that own a directory
+    /// (e.g. the HFS spill tier) run this once at open; racing a
+    /// concurrently *live* writer can at worst fail that writer's rename,
+    /// which best-effort writers tolerate as a skipped put.
+    pub fn sweep_temp(&self, prefix: &str) -> usize {
+        let mut removed = 0;
+        let mut stack = vec![self.root.clone()];
+        while let Some(dir) = stack.pop() {
+            let entries = match fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            for entry in entries.flatten() {
+                let path = entry.path();
+                if path.is_dir() {
+                    stack.push(path);
+                    continue;
+                }
+                let is_tmp = path
+                    .extension()
+                    .is_some_and(|e| e.to_string_lossy().starts_with("tmp~"));
+                if !is_tmp {
+                    continue;
+                }
+                if let Ok(rel) = path.strip_prefix(&self.root) {
+                    let key = rel.to_string_lossy().replace('\\', "/");
+                    if key.starts_with(prefix) && fs::remove_file(&path).is_ok() {
+                        removed += 1;
+                    }
+                }
+            }
+        }
+        removed
+    }
 }
 
 impl ObjectStore for DiskStore {
@@ -42,10 +88,19 @@ impl ObjectStore for DiskStore {
         if let Some(parent) = path.parent() {
             fs::create_dir_all(parent)?;
         }
-        // write-then-rename for atomicity under concurrent readers
-        let tmp = path.with_extension("tmp~");
-        fs::write(&tmp, data)?;
-        fs::rename(&tmp, &path)?;
+        // write-then-rename for atomicity under concurrent readers; the
+        // temp name is unique per call (pid + seq), so two writers
+        // racing on one stem — even from different processes — each
+        // rename their own complete bytes. A failed write/rename must
+        // clean its own temp up: unique names mean nobody else will
+        // (high-frequency best-effort callers like the spill tier would
+        // otherwise litter a nearly-full disk on every ENOSPC).
+        let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp~{}-{seq}", std::process::id()));
+        if let Err(e) = fs::write(&tmp, data).and_then(|()| fs::rename(&tmp, &path)) {
+            let _ = fs::remove_file(&tmp);
+            return Err(e.into());
+        }
         Ok(())
     }
 
@@ -83,7 +138,10 @@ impl ObjectStore for DiskStore {
             };
             for entry in entries.flatten() {
                 let path = entry.path();
-                if path.extension().is_some_and(|e| e == "tmp~") {
+                if path
+                    .extension()
+                    .is_some_and(|e| e.to_string_lossy().starts_with("tmp~"))
+                {
                     continue;
                 }
                 if path.is_dir() {
@@ -117,6 +175,48 @@ mod tests {
         assert!(s.put("../evil", b"x").is_err());
         assert!(s.put("a/../../evil", b"x").is_err());
         assert!(s.put("", b"x").is_err());
+    }
+
+    #[test]
+    fn concurrent_puts_on_sibling_keys_do_not_collide() {
+        // keys sharing a stem ("k.1", "k.2") used to share one "k.tmp~"
+        // temp file, so racing writers could rename each other's partial
+        // bytes into place; unique temp names make every rename whole
+        let dir = crate::util::TempDir::new().unwrap();
+        let s = std::sync::Arc::new(DiskStore::new(dir.path()).unwrap());
+        std::thread::scope(|scope| {
+            for t in 0..4u8 {
+                let s = s.clone();
+                scope.spawn(move || {
+                    for round in 0..50 {
+                        s.put(&format!("k.{}", t % 2), &vec![t; 64 + round]).unwrap();
+                    }
+                });
+            }
+        });
+        for key in ["k.0", "k.1"] {
+            let got = s.get(key).unwrap();
+            assert!(!got.is_empty());
+            assert!(got.iter().all(|&b| b == got[0]), "no torn write for {key}");
+        }
+        // no temp litter survives, and list() hides nothing real
+        assert_eq!(s.list("k").unwrap(), vec!["k.0".to_string(), "k.1".to_string()]);
+    }
+
+    #[test]
+    fn sweep_temp_removes_only_stranded_temps_under_prefix() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let s = DiskStore::new(dir.path()).unwrap();
+        s.put("spill/ns/chunk0", b"real").unwrap();
+        // simulate writers that died between write and rename
+        std::fs::write(dir.path().join("spill/ns/chunk1.tmp~123-0"), b"half").unwrap();
+        std::fs::write(dir.path().join("spill/ns/chunk2.tmp~9-44"), b"half").unwrap();
+        std::fs::create_dir_all(dir.path().join("other")).unwrap();
+        std::fs::write(dir.path().join("other/x.tmp~1-1"), b"half").unwrap();
+        assert_eq!(s.sweep_temp("spill/ns/"), 2, "both stranded temps removed");
+        assert_eq!(s.get("spill/ns/chunk0").unwrap(), b"real", "real data untouched");
+        assert!(dir.path().join("other/x.tmp~1-1").exists(), "outside prefix: kept");
+        assert_eq!(s.sweep_temp("spill/ns/"), 0, "idempotent");
     }
 
     #[test]

@@ -27,6 +27,15 @@ impl TempDir {
     pub fn path(&self) -> &Path {
         &self.path
     }
+
+    /// Create (if needed) and return a named child directory — handy for
+    /// giving one test separate roots, e.g. an object store and an HFS
+    /// spill tier, that are cleaned up together.
+    pub fn subdir(&self, name: &str) -> std::io::Result<PathBuf> {
+        let dir = self.path.join(name);
+        std::fs::create_dir_all(&dir)?;
+        Ok(dir)
+    }
 }
 
 impl Drop for TempDir {
@@ -56,5 +65,14 @@ mod tests {
         let a = TempDir::new().unwrap();
         let b = TempDir::new().unwrap();
         assert_ne!(a.path(), b.path());
+    }
+
+    #[test]
+    fn subdir_creates_and_is_idempotent() {
+        let d = TempDir::new().unwrap();
+        let s = d.subdir("store").unwrap();
+        assert!(s.is_dir());
+        assert_eq!(d.subdir("store").unwrap(), s);
+        assert_ne!(d.subdir("spill").unwrap(), s);
     }
 }
