@@ -1,22 +1,31 @@
 //! §IV.C hyperparameter search, end to end.
 //!
-//! Two levels:
+//! Three levels:
 //!
 //! 1. **Fleet level (simulated):** the paper's 12-binary-parameter grid —
 //!    4096 combinations × 10 min each = 28.4 days sequentially — scheduled
 //!    on a growing cluster until the whole sweep fits in ~10 minutes.
-//! 2. **Real level (PJRT):** a small lr × batch-interpretation search over
+//! 2. **Trial level (search/):** the same sweep idea upgraded to
+//!    checkpointable trials with ASHA early stopping on the preemptible
+//!    fleet — a fraction of the grid's trial-steps for the same best
+//!    loss, surviving a storm that reclaims most of the fleet.
+//! 3. **Real level (PJRT):** a small lr × batch-interpretation search over
 //!    the AOT `tiny` transformer, each trial actually trained for a few
 //!    steps, ranked by final loss — the "log results of hyperparameter
 //!    search" interface the paper describes.
 //!
 //! Run with: `cargo run --release --example hyperparam_search`
 
+use std::sync::Arc;
+
 use hyper_dist::baselines::sequential_makespan;
+use hyper_dist::cloud::StormEvent;
 use hyper_dist::cluster::Master;
-use hyper_dist::config::{artifacts_available, default_artifacts_dir};
+use hyper_dist::config::{artifacts_available, default_artifacts_dir, SearchAlgo, SearchConfig};
 use hyper_dist::runtime::Runtime;
 use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
+use hyper_dist::search::{CurveConfig, SearchDriver, SearchDriverConfig};
+use hyper_dist::storage::MemStore;
 use hyper_dist::workflow::{sample_assignments, ParamSpec, ParamValue};
 
 fn fleet_level() -> anyhow::Result<()> {
@@ -54,6 +63,65 @@ experiments:
             r.total_cost_usd,
             sequential_makespan(4096, 600.0) / r.makespan_s
         );
+    }
+    Ok(())
+}
+
+fn trial_level() -> anyhow::Result<()> {
+    println!("\n== trial level: ASHA early stopping on the preemptible fleet ==");
+    // a structured space: the lr optimum sits at 3e-3, so the search has
+    // something real to find
+    let mut space = std::collections::BTreeMap::new();
+    space.insert("lr".to_string(), ParamSpec::LogUniform([1e-4, 1e-1]));
+    space.insert(
+        "bs".to_string(),
+        ParamSpec::Choice(vec![ParamValue::Int(32), ParamValue::Int(64), ParamValue::Int(128)]),
+    );
+    let cfg = |algo| SearchDriverConfig {
+        search: SearchConfig {
+            trials: 64,
+            max_steps: 81,
+            rung_first_steps: 3,
+            eta: 3,
+            workers: 8,
+            algo,
+            seed: 7,
+            ..SearchConfig::default()
+        },
+        curve: CurveConfig { lr_optimum: Some(3e-3), noise: 0.01, ..Default::default() },
+        ..Default::default()
+    };
+    for algo in [SearchAlgo::Grid, SearchAlgo::Asha, SearchAlgo::Hyperband, SearchAlgo::Median] {
+        let store = Arc::new(MemStore::new());
+        let mut d =
+            SearchDriver::new(cfg(algo), store, &space, "python train.py --lr {lr} --bs {bs}")?;
+        let r = d.run()?;
+        println!(
+            "{:9}  steps {:>6}  best loss {:.4}  makespan {:>6.0}s  cost ${:<7.2} \
+             completed {:>2} stopped {:>2}",
+            r.algo, r.total_steps, r.best_loss, r.makespan_s, r.cost_usd, r.completed, r.stopped
+        );
+    }
+
+    // now the §III.D story: a storm reclaims 6 of the 8 nodes mid-search
+    let mut storm_cfg = cfg(SearchAlgo::Asha);
+    storm_cfg.storm = vec![StormEvent { at_s: 120.0, kills: 6, notice_s: 5.0 }];
+    let mut d = SearchDriver::new(
+        storm_cfg,
+        Arc::new(MemStore::new()),
+        &space,
+        "python train.py --lr {lr} --bs {bs}",
+    )?;
+    let r = d.run()?;
+    println!(
+        "asha+storm  preemptions {}  pauses {}  resumes {}  full restarts {}  lost {} \
+         (every trial resumed from its checkpoint on another node)",
+        r.preemptions, r.pauses, r.resumes, r.full_restarts, r.lost
+    );
+    assert_eq!(r.lost, 0, "zero lost trials through the storm");
+    if let Some(best) = &r.best_assignment {
+        let rendered: Vec<String> = best.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        println!("best assignment: {}", rendered.join(" "));
     }
     Ok(())
 }
@@ -98,5 +166,6 @@ fn real_level() -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     fleet_level()?;
+    trial_level()?;
     real_level()
 }

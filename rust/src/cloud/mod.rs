@@ -13,4 +13,4 @@ pub mod spot;
 pub use instance::{DeviceKind, InstanceSpec, InstanceType, CATALOG};
 pub use network::NetworkModel;
 pub use provisioner::{NodeHandle, NodeState, Provisioner, ProvisionerConfig};
-pub use spot::{SpotMarket, SpotMarketConfig};
+pub use spot::{SpotMarket, SpotMarketConfig, StormEvent};

@@ -23,6 +23,23 @@ impl Default for SpotMarketConfig {
     }
 }
 
+/// One scripted preemption wave: at `at_s`, `kills` nodes receive a
+/// `notice_s`-second warning (0 = instant kill).
+///
+/// Storms turn "a preemption storm happened" into a reproducible
+/// experiment: the serving sim ([`crate::serve::ServeSim`]) and the
+/// hyperparameter-search driver ([`crate::search::SearchDriver`]) both
+/// script their §III.D fault-injection scenarios as lists of these.
+#[derive(Debug, Clone, Copy)]
+pub struct StormEvent {
+    /// Virtual time the wave lands, seconds.
+    pub at_s: f64,
+    /// Nodes reclaimed by this wave.
+    pub kills: usize,
+    /// Warning before the hard kill, seconds (0 = instant).
+    pub notice_s: f64,
+}
+
 /// Deterministic, seedable generator of preemption times.
 #[derive(Debug)]
 pub struct SpotMarket {

@@ -88,6 +88,7 @@ mod tests {
             depends_on: vec![],
             max_retries: 0,
             work: WorkSpec::default(),
+            search: None,
         };
         (0..n).map(|i| Task::materialize(0, i, &spec, Default::default())).collect()
     }

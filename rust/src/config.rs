@@ -6,6 +6,8 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::Error;
+
 /// Where the AOT artifacts live and which preset to run.
 ///
 /// Read by [`crate::runtime`] (artifact loading) and the CLI entry points.
@@ -63,6 +65,108 @@ impl Default for HfsConfig {
     }
 }
 
+/// Which early-stopping policy a hyperparameter search runs under.
+///
+/// Read by [`crate::search`] (`make_scheduler`) and the `search:` stanza of
+/// workflow recipes. `Grid` is the no-early-stopping baseline the paper's
+/// §IV.C sweep corresponds to; the other three trade exhaustiveness for
+/// trial-steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchAlgo {
+    /// Run every trial to `max_steps` (the §IV.C full sweep).
+    Grid,
+    /// Asynchronous successive halving: geometric rungs, top-`1/eta`
+    /// promotion.
+    Asha,
+    /// Hyperband-style sweep of ASHA brackets with staggered first rungs.
+    Hyperband,
+    /// Median stopping rule: stop a trial whose milestone loss is above
+    /// the median of all losses reported at that milestone.
+    Median,
+}
+
+impl std::str::FromStr for SearchAlgo {
+    type Err = Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Error> {
+        match s.to_ascii_lowercase().as_str() {
+            "grid" => Ok(SearchAlgo::Grid),
+            "asha" => Ok(SearchAlgo::Asha),
+            "hyperband" => Ok(SearchAlgo::Hyperband),
+            "median" => Ok(SearchAlgo::Median),
+            other => Err(Error::Recipe(format!("unknown search algo {other:?}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for SearchAlgo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SearchAlgo::Grid => "grid",
+            SearchAlgo::Asha => "asha",
+            SearchAlgo::Hyperband => "hyperband",
+            SearchAlgo::Median => "median",
+        })
+    }
+}
+
+/// Tunables of one hyperparameter search run: trial budget, rung geometry,
+/// virtual-time step cost, checkpoint cadence, and the fleet it runs on.
+///
+/// Read by [`crate::search::SearchDriver`]; recipes populate it from their
+/// `search:` stanza. Every knob is documented (defaults and the subsystem
+/// that reads it) in `docs/CONFIG.md`.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Trials to sample from the parameter space (§II.C `n`); `0` means
+    /// the full discrete Cartesian grid.
+    pub trials: usize,
+    /// Steps a trial must complete to count as finished (`R`).
+    pub max_steps: u64,
+    /// First rung milestone in steps (`r`); later rungs are `r * eta^k`.
+    pub rung_first_steps: u64,
+    /// Successive-halving reduction factor (promote the top `1/eta`).
+    pub eta: u32,
+    /// Virtual seconds one training step takes on a fleet node.
+    pub step_time_s: f64,
+    /// Save a `TrainCheckpoint` every this many steps while inside a rung
+    /// (`0` = checkpoint only at rung milestones). Milestones and
+    /// preemption-notice drains always checkpoint.
+    pub checkpoint_every_steps: u64,
+    /// Keep only the newest `k` checkpoint blobs per trial (`0` =
+    /// unbounded, not recommended for thousand-trial searches).
+    pub keep_last_k: usize,
+    /// Fleet size (one trial runs per node at a time).
+    pub workers: usize,
+    /// Provision fleet nodes on the spot market (vs on-demand).
+    pub spot: bool,
+    /// Instance type name from the catalog (e.g. `"m5.xlarge"`).
+    pub instance: String,
+    /// Early-stopping policy.
+    pub algo: SearchAlgo,
+    /// Seed for assignment sampling, learning curves, and the cloud models.
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            trials: 64,
+            max_steps: 81,
+            rung_first_steps: 3,
+            eta: 3,
+            step_time_s: 1.0,
+            checkpoint_every_steps: 3,
+            keep_last_k: 2,
+            workers: 8,
+            spot: true,
+            instance: "m5.xlarge".into(),
+            algo: SearchAlgo::Asha,
+            seed: 0,
+        }
+    }
+}
+
 /// `artifacts/` next to the workspace root (env `HYPER_ARTIFACTS` wins).
 pub fn default_artifacts_dir() -> PathBuf {
     if let Ok(dir) = std::env::var("HYPER_ARTIFACTS") {
@@ -103,6 +207,30 @@ mod tests {
         assert!(c.spill_dir.is_none());
         assert!(c.prefetch_max_depth > 0);
         assert!(c.background_prefetch);
+    }
+
+    #[test]
+    fn search_algo_parses_and_displays() {
+        for (s, a) in [
+            ("grid", SearchAlgo::Grid),
+            ("ASHA", SearchAlgo::Asha),
+            ("hyperband", SearchAlgo::Hyperband),
+            ("median", SearchAlgo::Median),
+        ] {
+            assert_eq!(s.parse::<SearchAlgo>().unwrap(), a);
+        }
+        assert_eq!(SearchAlgo::Asha.to_string(), "asha");
+        assert!(matches!("annealing".parse::<SearchAlgo>(), Err(Error::Recipe(_))));
+    }
+
+    #[test]
+    fn default_search_config_is_coherent() {
+        let c = SearchConfig::default();
+        assert!(c.eta >= 2);
+        assert!(c.rung_first_steps >= 1);
+        assert!(c.max_steps >= c.rung_first_steps);
+        assert!(c.step_time_s > 0.0);
+        assert_eq!(c.algo, SearchAlgo::Asha);
     }
 
     #[test]

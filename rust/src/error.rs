@@ -17,6 +17,8 @@ pub enum Error {
     /// Serving-layer errors; `Shed` is the admission-control rejection.
     Serve(String),
     Shed,
+    /// Hyperparameter-search subsystem errors.
+    Search(String),
     Checkpoint(String),
     Kv(String),
     Io(std::io::Error),
@@ -38,6 +40,7 @@ impl fmt::Display for Error {
             Error::Runtime(s) => write!(f, "runtime error: {s}"),
             Error::Serve(s) => write!(f, "serve error: {s}"),
             Error::Shed => write!(f, "request shed: queue at admission limit"),
+            Error::Search(s) => write!(f, "search error: {s}"),
             Error::Checkpoint(s) => write!(f, "checkpoint error: {s}"),
             Error::Kv(s) => write!(f, "kv store error: {s}"),
             Error::Io(e) => write!(f, "io: {e}"),

@@ -14,6 +14,7 @@ pub mod hfs;
 pub mod metrics;
 pub mod runtime;
 pub mod scheduler;
+pub mod search;
 pub mod serve;
 pub mod sim;
 pub mod storage;

@@ -3,6 +3,8 @@
 //!
 //! ```text
 //! hyper submit <recipe.yaml> [--seed N]   # compile + simulate a workflow
+//! hyper search [recipe.yaml] [--seed N] [--algo A] [--storm-kills K]
+//!                                          # ASHA hyperparameter search
 //! hyper train [--preset P] [--steps N] [--lr X]   # real PJRT training
 //! hyper infer [--preset P] [--batches N]          # batch inference demo
 //! hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]
@@ -65,6 +67,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(&argv[1..])?;
     match cmd {
         "submit" => cmd_submit(&args),
+        "search" => cmd_search(&args),
         "train" => cmd_train(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
@@ -80,7 +83,7 @@ fn main() -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "hyper — distributed cloud processing for large-scale DL (reproduction)\n\n\
-         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper train [--preset P] [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper status"
+         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n  hyper train [--preset P] [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper status"
     );
 }
 
@@ -121,6 +124,123 @@ fn cmd_submit(args: &Args) -> anyhow::Result<()> {
         report.nodes_launched,
         100.0 * report.utilization
     );
+    Ok(())
+}
+
+/// Built-in demo recipe for `hyper search` without a file: a 64-trial
+/// ASHA sweep over learning rate x batch size on a spot fleet.
+const SEARCH_DEMO_RECIPE: &str = r#"
+name: search-demo
+experiments:
+  - name: tune
+    instance: m5.xlarge
+    workers: 8
+    spot: true
+    command: "python train.py --lr {lr} --bs {bs}"
+    samples: 64
+    params:
+      lr: { log_uniform: [1.0e-4, 1.0e-1] }
+      bs: { choice: [32, 64, 128] }
+    search: { algo: asha, max_steps: 81, rung_steps: 3, eta: 3 }
+"#;
+
+/// Trial-based hyperparameter search on the virtual spot fleet: run the
+/// recipe's `search:` stanza (or the built-in demo), optionally through a
+/// scripted preemption storm, and compare against the grid baseline.
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    use hyper_dist::cloud::StormEvent;
+    use hyper_dist::config::SearchAlgo;
+    use hyper_dist::search::{SearchDriver, SearchReport};
+    use hyper_dist::workflow::Recipe;
+
+    let seed: u64 = args.get("seed", 0)?;
+    let storm_at: f64 = args.get("storm-at", 120.0)?;
+    let storm_kills: usize = args.get("storm-kills", 0)?;
+    let storm_notice: f64 = args.get("storm-notice", 5.0)?;
+    let compare_grid: bool = args.get("compare-grid", true)?;
+
+    let yaml = match args.positional.first() {
+        Some(path) => {
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?
+        }
+        None => SEARCH_DEMO_RECIPE.to_string(),
+    };
+    let recipe = Recipe::from_yaml(&yaml)?;
+    let spec = recipe
+        .experiments
+        .iter()
+        .find(|e| e.search.is_some())
+        .context("recipe has no experiment with a search: stanza")?;
+
+    let mut cfg = SearchDriver::config_for_experiment(spec, seed)?;
+    if let Some(algo) = args.flags.get("algo") {
+        cfg.search.algo = algo.parse::<SearchAlgo>()?;
+    }
+    if storm_kills > 0 {
+        cfg.storm.push(StormEvent {
+            at_s: storm_at,
+            kills: storm_kills,
+            notice_s: storm_notice,
+        });
+    }
+
+    let run = |cfg| -> anyhow::Result<SearchReport> {
+        let store: StoreHandle = Arc::new(MemStore::new());
+        Ok(SearchDriver::new(cfg, store, &spec.params, &spec.command)?.run()?)
+    };
+    let print = |r: &SearchReport| {
+        println!(
+            "  {:9} steps {:>7}  best {:.4}  makespan {:>7.1}s  cost ${:<8.2} \
+             completed {} stopped {} lost {}",
+            r.algo, r.total_steps, r.best_loss, r.makespan_s, r.cost_usd, r.completed,
+            r.stopped, r.lost
+        );
+    };
+
+    let trials = match spec.samples.unwrap_or(0) {
+        0 => "grid".to_string(),
+        n => n.to_string(),
+    };
+    println!(
+        "search {:?}: {} trials x {} steps on {} {} nodes ({})",
+        spec.name,
+        trials,
+        cfg.search.max_steps,
+        cfg.search.workers,
+        cfg.search.instance,
+        if cfg.search.spot { "spot" } else { "on-demand" },
+    );
+    let report = run(cfg.clone())?;
+    print(&report);
+    if report.preemptions > 0 {
+        println!(
+            "  preemptions {}  pauses {}  resumes {}  replayed steps {}  full restarts {}",
+            report.preemptions,
+            report.pauses,
+            report.resumes,
+            report.replayed_steps,
+            report.full_restarts
+        );
+    }
+    if let Some(best) = &report.best_assignment {
+        let rendered: Vec<String> = best.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        println!("  best assignment: {}", rendered.join(" "));
+    }
+    if compare_grid && cfg.search.algo != SearchAlgo::Grid {
+        let mut gcfg = cfg.clone();
+        gcfg.search.algo = SearchAlgo::Grid;
+        let grid = run(gcfg)?;
+        print(&grid);
+        if grid.total_steps > 0 {
+            println!(
+                "  {} spent {:.0}% of the grid's trial-steps (best {:.4} vs {:.4})",
+                report.algo,
+                100.0 * report.total_steps as f64 / grid.total_steps as f64,
+                report.best_loss,
+                grid.best_loss
+            );
+        }
+    }
     Ok(())
 }
 

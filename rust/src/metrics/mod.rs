@@ -65,6 +65,35 @@ impl Gauge {
     }
 }
 
+/// Gauge over `f64` levels (best loss so far, current rate, ...) where an
+/// integer [`Gauge`] would lose the fraction. Stores the value's bits in an
+/// `AtomicU64`; cheap to clone and update from any thread.
+#[derive(Debug, Clone)]
+pub struct FloatGauge(Arc<AtomicU64>);
+
+impl Default for FloatGauge {
+    fn default() -> Self {
+        Self(Arc::new(AtomicU64::new(0f64.to_bits())))
+    }
+}
+
+impl FloatGauge {
+    /// A gauge at level 0.0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Overwrite the level.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
 /// Lowest tracked exponent: values below 2^-30 (~1 ns in seconds) share
 /// bucket 0.
 const HIST_MIN_EXP: i32 = -30;
@@ -256,6 +285,7 @@ impl Histogram {
 pub struct MetricsRegistry {
     counters: Arc<Mutex<BTreeMap<String, Counter>>>,
     gauges: Arc<Mutex<BTreeMap<String, Gauge>>>,
+    float_gauges: Arc<Mutex<BTreeMap<String, FloatGauge>>>,
     histograms: Arc<Mutex<BTreeMap<String, Histogram>>>,
 }
 
@@ -275,6 +305,11 @@ impl MetricsRegistry {
         self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
+    /// The float gauge registered under `name` (created on first use).
+    pub fn float_gauge(&self, name: &str) -> FloatGauge {
+        self.float_gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
     /// The histogram registered under `name` (created on first use).
     pub fn histogram(&self, name: &str) -> Histogram {
         self.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
@@ -288,6 +323,9 @@ impl MetricsRegistry {
         }
         for (name, g) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("{name} {}\n", g.get()));
+        }
+        for (name, g) in self.float_gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name} {:.6}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             let s = h.snapshot();
@@ -379,6 +417,18 @@ mod tests {
         g.set(-3);
         assert_eq!(g.get(), -3);
         assert!(r.report().contains("inflight -3"));
+    }
+
+    #[test]
+    fn float_gauges_hold_fractions() {
+        let r = MetricsRegistry::new();
+        let g = r.float_gauge("best_loss");
+        assert_eq!(g.get(), 0.0);
+        g.set(0.731);
+        assert_eq!(r.float_gauge("best_loss").get(), 0.731);
+        g.set(-1.5);
+        assert_eq!(g.get(), -1.5);
+        assert!(r.report().contains("best_loss -1.5"));
     }
 
     #[test]

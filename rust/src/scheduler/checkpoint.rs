@@ -49,11 +49,22 @@ impl TrainCheckpoint {
 pub struct CheckpointStore {
     store: StoreHandle,
     prefix: String,
+    /// Retain only the newest `k` blobs per task after each save
+    /// (`None` = unbounded; see [`CheckpointStore::with_keep_last`]).
+    keep_last: Option<usize>,
 }
 
 impl CheckpointStore {
     pub fn new(store: StoreHandle, prefix: &str) -> Self {
-        Self { store, prefix: prefix.to_string() }
+        Self { store, prefix: prefix.to_string(), keep_last: None }
+    }
+
+    /// Like [`CheckpointStore::new`], but every `save` prunes the task's
+    /// blobs down to the newest `k` (`k >= 1`). Thousand-trial searches
+    /// checkpoint continuously; without pruning the namespace grows
+    /// without bound.
+    pub fn with_keep_last(store: StoreHandle, prefix: &str, k: usize) -> Self {
+        Self { store, prefix: prefix.to_string(), keep_last: Some(k.max(1)) }
     }
 
     fn meta_key(&self, task: TaskId) -> String {
@@ -66,12 +77,47 @@ impl CheckpointStore {
 
     /// Persist a checkpoint: blob first, then the metadata pointer, so a
     /// crash between the two writes leaves the previous checkpoint valid.
+    /// With [`CheckpointStore::with_keep_last`], older blobs beyond `k`
+    /// are deleted afterwards — always excluding the blob the pointer
+    /// references, so the restorable latest survives even a non-monotone
+    /// save (a lower step written after a higher one).
     pub fn save(&self, task: TaskId, step: u64, loss: f32, blob: &[u8]) -> Result<TrainCheckpoint> {
         let blob_key = self.blob_key(task, step);
         self.store.put(&blob_key, blob)?;
         let ckpt = TrainCheckpoint { task, step, blob_key, loss };
         self.store.put(&self.meta_key(task), &ckpt.to_json().to_bytes())?;
+        if let Some(k) = self.keep_last {
+            // the pointer we just wrote is authoritative: protect its
+            // blob without re-reading the metadata
+            self.prune_protecting(task, k, Some(&ckpt.blob_key))?;
+        }
         Ok(ckpt)
+    }
+
+    /// Delete all but the newest `k` checkpoint blobs of a task (never
+    /// the one the latest-metadata pointer references). Returns how many
+    /// were removed. Blob keys embed a zero-padded step, so lexicographic
+    /// order == step order.
+    pub fn prune(&self, task: TaskId, k: usize) -> Result<usize> {
+        let keep = self.latest(task)?.map(|c| c.blob_key);
+        self.prune_protecting(task, k, keep.as_deref())
+    }
+
+    fn prune_protecting(&self, task: TaskId, k: usize, protect: Option<&str>) -> Result<usize> {
+        let mut blobs = self
+            .store
+            .list(&format!("{}/ckpt/{}/step", self.prefix, task))?;
+        blobs.sort();
+        let excess = blobs.len().saturating_sub(k.max(1));
+        let mut removed = 0;
+        for key in &blobs[..excess] {
+            if Some(key.as_str()) == protect {
+                continue;
+            }
+            self.store.delete(key)?;
+            removed += 1;
+        }
+        Ok(removed)
     }
 
     /// Latest checkpoint metadata, if any.
@@ -135,6 +181,58 @@ mod tests {
         let other = TaskId { experiment: 0, index: 4 };
         cs.save(T, 10, 1.0, b"a").unwrap();
         assert!(cs.latest(other).unwrap().is_none());
+    }
+
+    #[test]
+    fn keep_last_k_prunes_older_blobs() {
+        let s = store();
+        let cs = CheckpointStore::with_keep_last(s.clone(), "wf", 2);
+        for step in [10, 20, 30, 40, 50] {
+            cs.save(T, step, 1.0, format!("state-{step}").as_bytes()).unwrap();
+        }
+        // exactly k blobs survive, and they are the newest two
+        let blobs = s.list(&format!("wf/ckpt/{T}/step")).unwrap();
+        assert_eq!(blobs.len(), 2, "{blobs:?}");
+        assert!(blobs.iter().any(|k| k.contains("0000000040")));
+        assert!(blobs.iter().any(|k| k.contains("0000000050")));
+        // the latest is the one restored
+        let latest = cs.latest(T).unwrap().unwrap();
+        assert_eq!(latest.step, 50);
+        assert_eq!(cs.load_blob(&latest).unwrap(), b"state-50");
+    }
+
+    #[test]
+    fn keep_last_never_deletes_the_pointed_at_checkpoint() {
+        // non-monotone save order: the pointer moves to step 40 AFTER
+        // step 50 was written; pruning to k=1 must keep the restorable
+        // latest (40), not the lexicographically-newest blob (50)
+        let s = store();
+        let cs = CheckpointStore::with_keep_last(s.clone(), "wf", 1);
+        cs.save(T, 50, 0.9, b"state-50").unwrap();
+        cs.save(T, 40, 1.1, b"state-40").unwrap();
+        let latest = cs.latest(T).unwrap().unwrap();
+        assert_eq!(latest.step, 40, "pointer follows save order, not step order");
+        assert_eq!(cs.load_blob(&latest).unwrap(), b"state-40", "restorable");
+        // the public prune honors the pointer too
+        cs.save(T, 45, 1.0, b"state-45").unwrap();
+        cs.save(T, 41, 1.05, b"state-41").unwrap();
+        cs.prune(T, 1).unwrap();
+        let latest = cs.latest(T).unwrap().unwrap();
+        assert_eq!(latest.step, 41);
+        assert_eq!(cs.load_blob(&latest).unwrap(), b"state-41");
+    }
+
+    #[test]
+    fn keep_last_prunes_per_task_not_across_tasks() {
+        let s = store();
+        let cs = CheckpointStore::with_keep_last(s.clone(), "wf", 1);
+        let other = TaskId { experiment: 0, index: 9 };
+        cs.save(T, 10, 1.0, b"a").unwrap();
+        cs.save(other, 10, 1.0, b"b").unwrap();
+        cs.save(T, 20, 0.9, b"c").unwrap();
+        assert_eq!(s.list(&format!("wf/ckpt/{T}/step")).unwrap().len(), 1);
+        let kept = cs.latest(other).unwrap().unwrap();
+        assert_eq!(cs.load_blob(&kept).unwrap(), b"b", "other task untouched");
     }
 
     #[test]

@@ -17,5 +17,5 @@ pub mod sim_driver;
 pub mod state;
 
 pub use checkpoint::{CheckpointStore, TrainCheckpoint};
-pub use sim_driver::{RunReport, SimDriver, SimDriverConfig};
+pub use sim_driver::{AssignmentRecord, RunReport, SimDriver, SimDriverConfig};
 pub use state::{NodeId, SchedulerState};

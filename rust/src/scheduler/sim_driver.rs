@@ -33,6 +33,9 @@ pub struct SimDriverConfig {
     pub checkpoint_interval_s: Option<f64>,
     /// Launch a replacement when a spot node is reclaimed.
     pub replace_preempted: bool,
+    /// Record every task-to-node assignment into
+    /// [`SimDriver::assignments`] (tests pin the §III.D story with it).
+    pub record_assignments: bool,
     pub seed: u64,
 }
 
@@ -45,9 +48,29 @@ impl Default for SimDriverConfig {
             s3: S3Profile::default(),
             checkpoint_interval_s: Some(300.0),
             replace_preempted: true,
+            record_assignments: false,
             seed: 0,
         }
     }
+}
+
+/// One task-to-node assignment, recorded when
+/// [`SimDriverConfig::record_assignments`] is on. A task preempted and
+/// rescheduled appears once per attempt; §III.D demands the `command`
+/// stays byte-identical while `node` changes and `resumed_from_s` carries
+/// the checkpointed progress forward.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AssignmentRecord {
+    pub task: TaskId,
+    pub node: NodeId,
+    /// Attempt number at assignment (1 = first run).
+    pub attempt: u32,
+    /// Virtual time of the assignment, seconds.
+    pub at_s: f64,
+    /// Checkpointed work already banked when this attempt started, seconds.
+    pub resumed_from_s: f64,
+    /// The rendered command this attempt runs.
+    pub command: String,
 }
 
 /// Outcome of one simulated workflow run.
@@ -101,6 +124,8 @@ pub struct SimDriver {
     /// start time of the current attempt
     started: BTreeMap<TaskId, SimTime>,
     pub ledger: CostLedger,
+    /// Assignment log (empty unless `record_assignments` is configured).
+    pub assignments: Vec<AssignmentRecord>,
     preemptions: u64,
     nodes_launched: usize,
 }
@@ -117,6 +142,7 @@ impl SimDriver {
             progress: BTreeMap::new(),
             started: BTreeMap::new(),
             ledger: CostLedger::new(),
+            assignments: Vec::new(),
             preemptions: 0,
             nodes_launched: 0,
         }
@@ -395,6 +421,16 @@ impl SimDriver {
                 meta.busy_s += remaining;
             }
             let attempt = run.state.task(tid).map(|t| t.attempts).unwrap_or(0);
+            if self.cfg.record_assignments {
+                self.assignments.push(AssignmentRecord {
+                    task: tid,
+                    node: nid,
+                    attempt,
+                    at_s: now.as_secs_f64(),
+                    resumed_from_s: done,
+                    command: wf.task(tid).command.clone(),
+                });
+            }
             self.events
                 .push(now + SimTime::from_secs_f64(remaining), Event::TaskDone(tid, nid, attempt));
         }
@@ -515,6 +551,61 @@ experiments:
             "makespan {} says notice-drain did not bank progress",
             r.makespan_s
         );
+    }
+
+    #[test]
+    fn preemption_reschedules_identical_args_on_different_node_from_checkpoint() {
+        // §III.D pinned end to end: "When a node fails, the task with
+        // exact command arguments gets rescheduled on a different node …
+        // training can be continued [from the last checkpoint]". Same
+        // scenario as the drain test above, with the assignment log on:
+        // one long spot task churns through several nodes; every
+        // reassignment must carry byte-identical arguments, land on a
+        // fresh node, and start from monotonically growing checkpointed
+        // progress.
+        let yaml = r#"
+name: pin
+experiments:
+  - name: long
+    instance: p3.2xlarge
+    workers: 1
+    spot: true
+    max_retries: 50
+    command: "train {i}"
+    params: { i: { range: [0, 0] } }
+    work: { duration_s: 3000.0 }
+"#;
+        let mut w = wf(yaml);
+        let cfg = SimDriverConfig {
+            spot_market: SpotMarketConfig { mean_ttp_s: 400.0, notice_s: 120.0 },
+            checkpoint_interval_s: None,
+            record_assignments: true,
+            seed: 11,
+            ..Default::default()
+        };
+        let mut d = SimDriver::new(cfg);
+        let r = d.run(&mut w).unwrap();
+        assert!(r.workflow_complete, "{r:?}");
+        let tid = TaskId { experiment: 0, index: 0 };
+        let recs: Vec<&AssignmentRecord> =
+            d.assignments.iter().filter(|a| a.task == tid).collect();
+        assert!(recs.len() >= 2, "task must have been rescheduled: {recs:?}");
+        assert_eq!(recs[0].command, "train 0", "rendered arguments");
+        assert_eq!(recs[0].resumed_from_s, 0.0, "first attempt starts cold");
+        for pair in recs.windows(2) {
+            assert_eq!(pair[0].command, pair[1].command, "§III.D: exact command arguments");
+            assert_ne!(pair[0].node, pair[1].node, "§III.D: a different node");
+            assert!(
+                pair[1].resumed_from_s >= pair[0].resumed_from_s,
+                "checkpointed progress never regresses: {recs:?}"
+            );
+        }
+        let last = recs.last().expect("non-empty");
+        assert!(
+            last.resumed_from_s > 0.0,
+            "the final attempt continued from a checkpoint, not step 0"
+        );
+        assert!(last.resumed_from_s < 3000.0, "resume point is mid-task");
     }
 
     #[test]

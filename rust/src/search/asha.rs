@@ -1,0 +1,375 @@
+//! Early-stopping schedulers: ASHA, Hyperband brackets, median rule, grid.
+//!
+//! All four speak one protocol: the driver asks for a trial's first
+//! milestone, runs it there, reports `(step, loss)`, and gets back
+//! [`Decision::Continue`] with the next milestone or [`Decision::Stop`].
+//! Schedulers never see virtual time or nodes — preemptions are invisible
+//! to them (a paused trial simply reports later), which is exactly the
+//! asynchrony ASHA was designed for.
+//!
+//! * [`AshaScheduler`] — asynchronous successive halving (Li et al.,
+//!   arXiv:1810.05934), stopping variant: at rung `r·eta^k` a trial
+//!   continues iff its loss ranks in the top `ceil(n/eta)` of all reports
+//!   that rung has seen so far (itself included). No synchronization
+//!   barrier: the first reporter at a rung always continues.
+//! * [`HyperbandSweep`] — a fixed set of ASHA brackets with staggered
+//!   first rungs (`r·eta^b`); trials are spread across brackets by a
+//!   weighted round-robin, so part of the budget hedges against
+//!   slow-starting curves that aggressive early rungs would cut.
+//! * [`MedianStoppingRule`] — the classic baseline: stop a trial whose
+//!   milestone loss is above the median of all losses reported at that
+//!   milestone (once enough trials have reported to form one).
+//! * [`GridScheduler`] — no early stopping; every trial runs to
+//!   `max_steps`. The §IV.C full sweep, and the cost baseline the
+//!   `search_asha` bench compares against.
+
+use std::collections::BTreeMap;
+
+use crate::config::{SearchAlgo, SearchConfig};
+
+/// What a trial should do after reporting at a milestone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Keep training until the given step (promotion to the next rung).
+    Continue(u64),
+    /// Early-stop the trial; its node goes back to the pool.
+    Stop,
+}
+
+/// The scheduling protocol between the driver and an early-stopping
+/// policy. `idx` is the trial's index in the driver's trial list.
+pub trait TrialScheduler {
+    /// Short policy name for reports.
+    fn name(&self) -> &'static str;
+
+    /// First milestone (in steps) for trial `idx`. Must be `>= 1`.
+    fn first_milestone(&mut self, idx: usize) -> u64;
+
+    /// Called when trial `idx` reaches a milestone with its observed
+    /// loss; decides promotion or stopping. `step` is always a milestone
+    /// this scheduler previously handed out and below `max_steps`
+    /// (reaching `max_steps` completes the trial without asking).
+    fn on_report(&mut self, idx: usize, step: u64, loss: f64) -> Decision;
+}
+
+/// Build the scheduler a [`SearchConfig`] asks for.
+pub fn make_scheduler(cfg: &SearchConfig) -> Box<dyn TrialScheduler> {
+    match cfg.algo {
+        SearchAlgo::Grid => Box::new(GridScheduler::new(cfg.max_steps)),
+        SearchAlgo::Asha => {
+            Box::new(AshaScheduler::new(cfg.rung_first_steps, cfg.eta, cfg.max_steps))
+        }
+        SearchAlgo::Hyperband => {
+            Box::new(HyperbandSweep::new(cfg.rung_first_steps, cfg.eta, cfg.max_steps))
+        }
+        SearchAlgo::Median => {
+            Box::new(MedianStoppingRule::new(cfg.rung_first_steps, cfg.eta, cfg.max_steps, 5))
+        }
+    }
+}
+
+// ------------------------------------------------------------------ ASHA
+
+/// Asynchronous successive halving (stopping variant).
+#[derive(Debug)]
+pub struct AshaScheduler {
+    r0: u64,
+    eta: u32,
+    max_steps: u64,
+    /// Losses reported so far at each rung milestone.
+    rungs: BTreeMap<u64, Vec<f64>>,
+}
+
+impl AshaScheduler {
+    /// Rungs at `r0·eta^k`, capped by `max_steps`. `eta >= 2`, `r0 >= 1`.
+    pub fn new(r0: u64, eta: u32, max_steps: u64) -> Self {
+        Self {
+            r0: r0.clamp(1, max_steps.max(1)),
+            eta: eta.max(2),
+            max_steps: max_steps.max(1),
+            rungs: BTreeMap::new(),
+        }
+    }
+
+    /// The rung after `step` (capped at `max_steps`).
+    fn next_rung(&self, step: u64) -> u64 {
+        step.saturating_mul(self.eta as u64).min(self.max_steps)
+    }
+
+    /// Top-`1/eta` test over everything this rung has seen (including the
+    /// loss just reported): rank `<= ceil(n/eta)` continues.
+    fn promotes(&mut self, step: u64, loss: f64) -> bool {
+        let losses = self.rungs.entry(step).or_default();
+        losses.push(loss);
+        let n = losses.len();
+        let k = n.div_ceil(self.eta as usize).max(1);
+        let mut sorted = losses.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite loss"));
+        loss <= sorted[k - 1]
+    }
+}
+
+impl TrialScheduler for AshaScheduler {
+    fn name(&self) -> &'static str {
+        "asha"
+    }
+
+    fn first_milestone(&mut self, _idx: usize) -> u64 {
+        self.r0
+    }
+
+    fn on_report(&mut self, _idx: usize, step: u64, loss: f64) -> Decision {
+        if self.promotes(step, loss) {
+            Decision::Continue(self.next_rung(step))
+        } else {
+            Decision::Stop
+        }
+    }
+}
+
+// ------------------------------------------------------------- Hyperband
+
+/// A Hyperband-style sweep: several ASHA brackets whose first rungs are
+/// staggered geometrically, with more trials routed to the aggressive
+/// brackets (weight `eta^(s_max - b)` for bracket `b`).
+#[derive(Debug)]
+pub struct HyperbandSweep {
+    brackets: Vec<AshaScheduler>,
+    /// Cumulative routing weights (bracket `b` owns the residue classes
+    /// below `cum[b]` modulo the total weight).
+    cum: Vec<u64>,
+}
+
+impl HyperbandSweep {
+    /// Brackets `b = 0..=s_max` with first rung `r0·eta^b`, where `s_max`
+    /// is the largest exponent keeping the first rung below `max_steps`.
+    pub fn new(r0: u64, eta: u32, max_steps: u64) -> Self {
+        let r0 = r0.clamp(1, max_steps.max(1));
+        let eta = eta.max(2);
+        let mut brackets = Vec::new();
+        let mut first = r0;
+        while first < max_steps.max(1) && brackets.len() < 8 {
+            brackets.push(AshaScheduler::new(first, eta, max_steps));
+            first = first.saturating_mul(eta as u64);
+        }
+        if brackets.is_empty() {
+            brackets.push(AshaScheduler::new(r0, eta, max_steps));
+        }
+        let s_max = brackets.len() as u32 - 1;
+        let mut cum = Vec::with_capacity(brackets.len());
+        let mut acc = 0u64;
+        for b in 0..brackets.len() as u32 {
+            acc += (eta as u64).pow(s_max - b).max(1);
+            cum.push(acc);
+        }
+        Self { brackets, cum }
+    }
+
+    /// Deterministic weighted round-robin assignment of trials to
+    /// brackets.
+    pub fn bracket_of(&self, idx: usize) -> usize {
+        let total = *self.cum.last().expect("at least one bracket");
+        let pos = idx as u64 % total;
+        self.cum.iter().position(|&c| pos < c).expect("pos < total")
+    }
+
+    /// Number of brackets in the sweep.
+    pub fn n_brackets(&self) -> usize {
+        self.brackets.len()
+    }
+}
+
+impl TrialScheduler for HyperbandSweep {
+    fn name(&self) -> &'static str {
+        "hyperband"
+    }
+
+    fn first_milestone(&mut self, idx: usize) -> u64 {
+        let b = self.bracket_of(idx);
+        self.brackets[b].first_milestone(idx)
+    }
+
+    fn on_report(&mut self, idx: usize, step: u64, loss: f64) -> Decision {
+        let b = self.bracket_of(idx);
+        self.brackets[b].on_report(idx, step, loss)
+    }
+}
+
+// ----------------------------------------------------------- median rule
+
+/// Median stopping rule over geometric milestones.
+#[derive(Debug)]
+pub struct MedianStoppingRule {
+    r0: u64,
+    eta: u32,
+    max_steps: u64,
+    /// Minimum reports a milestone needs before the rule can stop anyone.
+    min_reports: usize,
+    records: BTreeMap<u64, Vec<f64>>,
+}
+
+impl MedianStoppingRule {
+    /// Milestones at `r0·eta^k` (same grid as ASHA, so step budgets
+    /// compare apples to apples); stops a trial whose loss exceeds the
+    /// milestone median once `min_reports` trials have reported there.
+    pub fn new(r0: u64, eta: u32, max_steps: u64, min_reports: usize) -> Self {
+        Self {
+            r0: r0.clamp(1, max_steps.max(1)),
+            eta: eta.max(2),
+            max_steps: max_steps.max(1),
+            min_reports: min_reports.max(2),
+            records: BTreeMap::new(),
+        }
+    }
+}
+
+impl TrialScheduler for MedianStoppingRule {
+    fn name(&self) -> &'static str {
+        "median"
+    }
+
+    fn first_milestone(&mut self, _idx: usize) -> u64 {
+        self.r0
+    }
+
+    fn on_report(&mut self, _idx: usize, step: u64, loss: f64) -> Decision {
+        let losses = self.records.entry(step).or_default();
+        losses.push(loss);
+        if losses.len() >= self.min_reports {
+            let mut sorted = losses.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite loss"));
+            let median = sorted[sorted.len() / 2];
+            if loss > median {
+                return Decision::Stop;
+            }
+        }
+        Decision::Continue(step.saturating_mul(self.eta as u64).min(self.max_steps))
+    }
+}
+
+// ------------------------------------------------------------------ grid
+
+/// No early stopping: every trial runs straight to `max_steps`.
+#[derive(Debug)]
+pub struct GridScheduler {
+    max_steps: u64,
+}
+
+impl GridScheduler {
+    /// A grid run to `max_steps`.
+    pub fn new(max_steps: u64) -> Self {
+        Self { max_steps: max_steps.max(1) }
+    }
+}
+
+impl TrialScheduler for GridScheduler {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn first_milestone(&mut self, _idx: usize) -> u64 {
+        self.max_steps
+    }
+
+    fn on_report(&mut self, _idx: usize, _step: u64, _loss: f64) -> Decision {
+        Decision::Continue(self.max_steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asha_first_reporter_continues_then_threshold_tightens() {
+        let mut s = AshaScheduler::new(1, 3, 27);
+        // first report at rung 1 is optimistically promoted
+        assert_eq!(s.on_report(0, 1, 0.9), Decision::Continue(3));
+        // second and third reports: top ceil(n/3) = 1 slot, held by 0.5
+        assert_eq!(s.on_report(1, 1, 0.5), Decision::Continue(3));
+        assert_eq!(s.on_report(2, 1, 0.7), Decision::Stop);
+        // fourth report: ceil(4/3) = 2 slots, threshold is 2nd best (0.6)
+        assert_eq!(s.on_report(3, 1, 0.6), Decision::Continue(3));
+        // rungs are independent
+        assert_eq!(s.on_report(1, 3, 0.4), Decision::Continue(9));
+    }
+
+    #[test]
+    fn asha_best_so_far_always_survives() {
+        // the running best at a rung is rank 1 <= ceil(n/eta) for any n,
+        // so a strictly-improving report stream promotes every time
+        let mut s = AshaScheduler::new(2, 4, 100);
+        for i in 0..50 {
+            let loss = 5.0 - i as f64 * 0.07;
+            assert_eq!(s.on_report(i, 2, loss), Decision::Continue(8), "new best stopped at {i}");
+        }
+        // and a clearly-worst report into that crowded rung is cut
+        assert_eq!(s.on_report(50, 2, 9.0), Decision::Stop);
+    }
+
+    #[test]
+    fn asha_rungs_are_geometric_and_capped() {
+        let mut s = AshaScheduler::new(3, 3, 81);
+        assert_eq!(s.first_milestone(0), 3);
+        assert_eq!(s.on_report(0, 3, 0.1), Decision::Continue(9));
+        assert_eq!(s.on_report(0, 9, 0.1), Decision::Continue(27));
+        assert_eq!(s.on_report(0, 27, 0.1), Decision::Continue(81));
+        // a rung above max_steps/eta caps at max_steps
+        let mut t = AshaScheduler::new(50, 3, 81);
+        assert_eq!(t.on_report(0, 50, 0.1), Decision::Continue(81));
+    }
+
+    #[test]
+    fn grid_never_stops() {
+        let mut g = GridScheduler::new(10);
+        assert_eq!(g.first_milestone(5), 10);
+        assert_eq!(g.on_report(5, 10, 99.0), Decision::Continue(10));
+    }
+
+    #[test]
+    fn median_rule_needs_quorum_then_stops_above_median() {
+        let mut m = MedianStoppingRule::new(1, 2, 16, 3);
+        // below quorum: everything continues
+        assert_eq!(m.on_report(0, 1, 5.0), Decision::Continue(2));
+        assert_eq!(m.on_report(1, 1, 1.0), Decision::Continue(2));
+        // third report forms a median; sorted [1, 3, 5], median 3:
+        // a 3.0 report is not above it -> continues
+        assert_eq!(m.on_report(2, 1, 3.0), Decision::Continue(2));
+        // 4.0 > median of [1, 3, 4, 5] (= 4? sorted[2] = 4) -> not above
+        assert_eq!(m.on_report(3, 1, 4.0), Decision::Continue(2));
+        // 6.0 is above the median of [1, 3, 4, 5, 6] (= 4) -> stop
+        assert_eq!(m.on_report(4, 1, 6.0), Decision::Stop);
+    }
+
+    #[test]
+    fn hyperband_brackets_stagger_first_rungs() {
+        let mut h = HyperbandSweep::new(1, 3, 27);
+        // brackets at r0 = 1, 3, 9 (27 would not be < max_steps)
+        assert_eq!(h.n_brackets(), 3);
+        let firsts: std::collections::BTreeSet<u64> =
+            (0..100).map(|i| h.first_milestone(i)).collect();
+        assert_eq!(firsts, [1u64, 3, 9].into_iter().collect());
+        // weighted routing: bracket 0 (weight 9) gets most trials
+        let counts = (0..130).fold([0usize; 3], |mut acc, i| {
+            acc[h.bracket_of(i)] += 1;
+            acc
+        });
+        assert!(counts[0] > counts[1] && counts[1] > counts[2], "{counts:?}");
+        // deterministic
+        assert_eq!(h.bracket_of(42), h.bracket_of(42));
+    }
+
+    #[test]
+    fn make_scheduler_honors_the_algo_knob() {
+        let mut cfg = SearchConfig::default();
+        for (algo, name) in [
+            (SearchAlgo::Grid, "grid"),
+            (SearchAlgo::Asha, "asha"),
+            (SearchAlgo::Hyperband, "hyperband"),
+            (SearchAlgo::Median, "median"),
+        ] {
+            cfg.algo = algo;
+            assert_eq!(make_scheduler(&cfg).name(), name);
+        }
+    }
+}

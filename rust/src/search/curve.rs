@@ -1,0 +1,218 @@
+//! Synthetic-but-configurable learning curves.
+//!
+//! Every trial needs a loss trajectory the schedulers can rank without a
+//! real training run: an exponential decay `floor + (l0 - floor)·e^(-s/τ)`
+//! whose floor and time constant are deterministic functions of the
+//! trial's [`Assignment`] and the search seed. Two properties matter:
+//!
+//! 1. **Determinism across resumes.** A trial preempted at step 40 and
+//!    resumed on another node reports the exact same losses it would have
+//!    reported uninterrupted — the curve is a pure function of
+//!    `(assignment, seed, step)`, mirroring §III.D's "training can be
+//!    continued without any additional code modifications".
+//! 2. **Configurable rank stability.** With `tau` pinned to a single
+//!    value and `noise = 0`, the loss ranking of any two trials is the
+//!    same at every step, so ASHA provably never cuts the eventual best
+//!    trial — the `search_asha` bench's equal-best guarantee rests on
+//!    this. Widening `tau` and adding noise makes early rungs deceptive,
+//!    which is the regime the median-rule baseline is for.
+
+use crate::sim::SimRng;
+use crate::workflow::{Assignment, ParamValue};
+
+/// Shape of the synthetic loss curves a search runs against.
+#[derive(Debug, Clone)]
+pub struct CurveConfig {
+    /// Loss every trial starts from at step 0.
+    pub loss_start: f64,
+    /// Final-loss (`floor`) sampling range per trial, `[lo, hi)`.
+    pub floor: [f64; 2],
+    /// Decay time-constant sampling range in steps, `[lo, hi)`. Equal
+    /// endpoints pin τ and make trial rankings step-invariant.
+    pub tau: [f64; 2],
+    /// Uniform per-step observation noise amplitude (0 = noiseless).
+    pub noise: f64,
+    /// When set and the assignment carries a float `lr`, the floor is
+    /// determined by the squared log10-distance to this optimum instead
+    /// of being sampled — gives the space a structure worth searching.
+    pub lr_optimum: Option<f64>,
+    /// Floor added per unit of squared log10-distance from `lr_optimum`.
+    pub lr_penalty: f64,
+}
+
+impl Default for CurveConfig {
+    fn default() -> Self {
+        Self {
+            loss_start: 4.0,
+            floor: [0.5, 2.5],
+            tau: [10.0, 40.0],
+            noise: 0.02,
+            lr_optimum: None,
+            lr_penalty: 0.8,
+        }
+    }
+}
+
+/// Factory turning assignments into [`LearningCurve`]s.
+#[derive(Debug, Clone)]
+pub struct CurveModel {
+    cfg: CurveConfig,
+    seed: u64,
+}
+
+impl CurveModel {
+    /// A model over `cfg`, keyed by the search seed.
+    pub fn new(cfg: CurveConfig, seed: u64) -> Self {
+        Self { cfg, seed }
+    }
+
+    /// The deterministic curve of one assignment.
+    pub fn curve(&self, a: &Assignment) -> LearningCurve {
+        let key = assignment_key(a) ^ self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = SimRng::new(key);
+        let sampled_floor = rng.gen_range_f64(self.cfg.floor[0], self.cfg.floor[1]);
+        let floor = match (self.cfg.lr_optimum, a.get("lr")) {
+            (Some(opt), Some(ParamValue::Float(lr))) if *lr > 0.0 && opt > 0.0 => {
+                let d = lr.log10() - opt.log10();
+                self.cfg.floor[0] + self.cfg.lr_penalty * d * d
+            }
+            _ => sampled_floor,
+        };
+        let tau = rng.gen_range_f64(self.cfg.tau[0], self.cfg.tau[1]).max(1e-9);
+        LearningCurve {
+            l0: self.cfg.loss_start.max(floor),
+            floor,
+            tau,
+            noise: self.cfg.noise,
+            key,
+        }
+    }
+}
+
+/// One trial's loss trajectory: `floor + (l0 - floor)·e^(-step/τ)` plus
+/// optional deterministic per-step noise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LearningCurve {
+    /// Loss at step 0.
+    pub l0: f64,
+    /// Asymptotic loss as steps → ∞.
+    pub floor: f64,
+    /// Decay time constant, steps.
+    pub tau: f64,
+    /// Observation-noise amplitude.
+    pub noise: f64,
+    key: u64,
+}
+
+impl LearningCurve {
+    /// Observed loss after `step` completed steps. Pure: the same
+    /// `(curve, step)` always yields the same value, so a resumed trial
+    /// replays its history bit-for-bit.
+    pub fn loss_at(&self, step: u64) -> f64 {
+        let base = self.floor + (self.l0 - self.floor) * (-(step as f64) / self.tau).exp();
+        if self.noise == 0.0 {
+            return base;
+        }
+        let mut rng = SimRng::new(self.key ^ step.wrapping_mul(0xA076_1D64_78BD_642F));
+        base + self.noise * (2.0 * rng.next_f64() - 1.0)
+    }
+}
+
+/// Digest of the canonical `k=v;` rendering (BTreeMap order is stable),
+/// via the crate's one FNV-1a implementation.
+fn assignment_key(a: &Assignment) -> u64 {
+    let mut canonical = String::new();
+    for (k, v) in a {
+        canonical.push_str(k);
+        canonical.push('=');
+        canonical.push_str(&v.to_string());
+        canonical.push(';');
+    }
+    crate::hfs::chunk::fnv1a64(canonical.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn asg(pairs: &[(&str, ParamValue)]) -> Assignment {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    #[test]
+    fn noiseless_curve_decays_monotonically_to_floor() {
+        let cfg = CurveConfig { noise: 0.0, ..Default::default() };
+        let c = CurveModel::new(cfg, 7).curve(&asg(&[("x", ParamValue::Int(1))]));
+        let mut prev = f64::INFINITY;
+        for s in 0..200 {
+            let l = c.loss_at(s);
+            assert!(l <= prev + 1e-12, "loss rose at step {s}");
+            assert!(l >= c.floor - 1e-12);
+            prev = l;
+        }
+        assert!((c.loss_at(100_000) - c.floor).abs() < 1e-6);
+        assert_eq!(c.loss_at(0), c.l0);
+    }
+
+    #[test]
+    fn deterministic_per_assignment_and_seed() {
+        let a = asg(&[("lr", ParamValue::Float(0.01)), ("bs", ParamValue::Int(64))]);
+        let m = CurveModel::new(CurveConfig::default(), 3);
+        let (c1, c2) = (m.curve(&a), m.curve(&a));
+        assert_eq!(c1, c2);
+        for s in [0u64, 1, 17, 999] {
+            assert_eq!(c1.loss_at(s), c2.loss_at(s), "same observation at step {s}");
+        }
+        // a different assignment or seed moves the curve
+        let b = asg(&[("lr", ParamValue::Float(0.02)), ("bs", ParamValue::Int(64))]);
+        assert_ne!(m.curve(&b), c1);
+        assert_ne!(CurveModel::new(CurveConfig::default(), 4).curve(&a), c1);
+    }
+
+    #[test]
+    fn lr_shaping_rewards_the_optimum() {
+        let cfg = CurveConfig {
+            lr_optimum: Some(1e-2),
+            lr_penalty: 1.0,
+            noise: 0.0,
+            ..Default::default()
+        };
+        let m = CurveModel::new(cfg, 0);
+        let floor_of = |lr: f64| m.curve(&asg(&[("lr", ParamValue::Float(lr))])).floor;
+        assert!(floor_of(1e-2) < floor_of(1e-3));
+        assert!(floor_of(1e-3) < floor_of(1e-4), "floor grows with log-distance");
+        assert!((floor_of(1e-2) - 0.5).abs() < 1e-12, "optimum sits at the floor minimum");
+    }
+
+    #[test]
+    fn pinned_tau_makes_rankings_step_invariant() {
+        // the search_asha bench's "ASHA best == grid best" guarantee
+        let cfg = CurveConfig { tau: [25.0, 25.0], noise: 0.0, ..Default::default() };
+        let m = CurveModel::new(cfg, 11);
+        let curves: Vec<LearningCurve> = (0..20)
+            .map(|i| m.curve(&asg(&[("p", ParamValue::Int(i))])))
+            .collect();
+        for s in [1u64, 3, 9, 27, 81] {
+            for x in &curves {
+                for y in &curves {
+                    let final_order = x.loss_at(10_000) <= y.loss_at(10_000);
+                    let early_order = x.loss_at(s) <= y.loss_at(s);
+                    assert_eq!(final_order, early_order, "rank flip at step {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn noise_is_bounded_and_replayable() {
+        let cfg = CurveConfig { noise: 0.05, ..Default::default() };
+        let c = CurveModel::new(cfg, 5).curve(&asg(&[("x", ParamValue::Int(0))]));
+        let clean =
+            CurveModel::new(CurveConfig { noise: 0.0, ..Default::default() }, 5)
+                .curve(&asg(&[("x", ParamValue::Int(0))]));
+        for s in 0..100 {
+            assert!((c.loss_at(s) - clean.loss_at(s)).abs() <= 0.05 + 1e-12);
+            assert_eq!(c.loss_at(s), c.loss_at(s), "replay is exact");
+        }
+    }
+}

@@ -1,0 +1,908 @@
+//! [`SearchDriver`]: checkpointable trials on the preemptible virtual fleet.
+//!
+//! The third end-to-end scenario over the cloud/sim stack (after the ETL
+//! fan-out and the serving layer): hundreds-to-thousands of trials
+//! multiplexed onto provisioned nodes, early-stopped by a
+//! [`TrialScheduler`], checkpointed through [`CheckpointStore`], and
+//! carried through spot preemptions the §III.D way — a preempted trial
+//! pauses, re-queues at the front, and resumes *from its last checkpoint
+//! on a different node with byte-identical arguments*.
+//!
+//! Invariants the tests pin down:
+//!
+//! * **Zero lost trials.** Every trial ends `Completed` or `Stopped`
+//!   (scheduler's call); preemption can only delay one. A killed fleet
+//!   is replaced (`replace_preempted`), so even a storm that reclaims
+//!   most nodes mid-search leaves no trial stranded.
+//! * **No duplicate full restarts.** A resume reads the newest
+//!   [`crate::scheduler::TrainCheckpoint`] (observable as exactly one
+//!   metadata GET + one blob GET per resume on a counting store) and
+//!   continues from its step; [`SearchReport::full_restarts`] counts the
+//!   only legitimate exception — a kill before the first checkpoint.
+//! * **Determinism.** Same config + store ⇒ bit-identical
+//!   [`SearchReport`]. Storms are scripted [`StormEvent`]s; the optional
+//!   background [`SpotMarket`] is seeded.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cloud::{InstanceType, NodeHandle, Provisioner, ProvisionerConfig, SpotMarket,
+                   SpotMarketConfig, StormEvent};
+use crate::config::SearchConfig;
+use crate::metrics::{CostLedger, MetricsRegistry};
+use crate::scheduler::CheckpointStore;
+use crate::sim::{EventQueue, SimTime};
+use crate::storage::StoreHandle;
+use crate::workflow::{sample_assignments, Assignment, ExperimentSpec, ParamSpec};
+use crate::{Error, Result};
+
+use super::asha::{make_scheduler, Decision, TrialScheduler};
+use super::curve::{CurveConfig, CurveModel, LearningCurve};
+use super::trial::{Trial, TrialState};
+
+/// Full search-scenario configuration: the [`SearchConfig`] knobs plus
+/// the cloud models and fault injection.
+#[derive(Debug, Clone)]
+pub struct SearchDriverConfig {
+    /// Algorithm + trial + fleet knobs (see `docs/CONFIG.md`).
+    pub search: SearchConfig,
+    /// Synthetic learning-curve shape.
+    pub curve: CurveConfig,
+    /// Node provisioning model (boot time, jitter, warm-cache odds).
+    pub provisioner: ProvisionerConfig,
+    /// Background random preemptions of spot nodes; `None` = scripted
+    /// storms only (deterministic fault timing).
+    pub spot_market: Option<SpotMarketConfig>,
+    /// Scripted preemption waves.
+    pub storm: Vec<StormEvent>,
+    /// Launch a replacement when a node is reclaimed.
+    pub replace_preempted: bool,
+}
+
+impl Default for SearchDriverConfig {
+    fn default() -> Self {
+        Self {
+            search: SearchConfig::default(),
+            curve: CurveConfig::default(),
+            provisioner: ProvisionerConfig::default(),
+            spot_market: None,
+            storm: Vec::new(),
+            replace_preempted: true,
+        }
+    }
+}
+
+/// Outcome of one search run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchReport {
+    /// Scheduler that ran (`asha`, `grid`, ...).
+    pub algo: &'static str,
+    /// Trials sampled.
+    pub trials: usize,
+    /// Trials that reached `max_steps`.
+    pub completed: usize,
+    /// Trials early-stopped by the scheduler.
+    pub stopped: usize,
+    /// Trials left non-terminal (must be 0: zero lost trials).
+    pub lost: usize,
+    /// Virtual time until the last trial went terminal, seconds.
+    pub makespan_s: f64,
+    /// Instance-hours billed, USD.
+    pub cost_usd: f64,
+    /// Training steps executed, including work later thrown away.
+    pub total_steps: u64,
+    /// Steps re-executed because a hard kill lost them (0 when every
+    /// preemption came with a notice-drain checkpoint).
+    pub replayed_steps: u64,
+    /// Nodes reclaimed (storms + background spot market).
+    pub preemptions: u64,
+    /// Trial pauses caused by preemptions.
+    pub pauses: u64,
+    /// Trial resumes (each reads the latest checkpoint once).
+    pub resumes: u64,
+    /// Resumes that found no checkpoint after real progress — genuine
+    /// restarts from step 0.
+    pub full_restarts: u64,
+    /// Resumes landing on the node they were preempted from (§III.D
+    /// wants a *different* node; preempted nodes never take work again,
+    /// so this stays 0).
+    pub resumed_same_node: u64,
+    /// Checkpoints saved (periodic + milestone + drain).
+    pub checkpoints: u64,
+    /// Scheduler promotions past a rung.
+    pub promotions: u64,
+    /// Nodes provisioned over the run.
+    pub nodes_launched: usize,
+    /// Best final loss among completed trials (`inf` if none completed).
+    pub best_loss: f64,
+    /// Assignment of the best completed trial.
+    pub best_assignment: Option<Assignment>,
+    /// Best loss observed at any report (completed or not).
+    pub best_observed_loss: f64,
+}
+
+#[derive(Debug)]
+enum Ev {
+    NodeReady(u32),
+    SegmentDone { trial: usize, node: u32, epoch: u64 },
+    SpotNotice(u32),
+    NodeKill(u32),
+    Storm(usize),
+}
+
+#[derive(Debug)]
+struct Node {
+    handle: NodeHandle,
+    ready: bool,
+    dead: bool,
+    draining: bool,
+    running: Option<usize>,
+    /// Bumped on preemption so in-flight [`Ev::SegmentDone`]s go stale.
+    epoch: u64,
+}
+
+/// The virtual-time search executor. Construct, then [`SearchDriver::run`]
+/// once.
+pub struct SearchDriver {
+    cfg: SearchDriverConfig,
+    instance: InstanceType,
+    trials: Vec<Trial>,
+    curves: Vec<LearningCurve>,
+    sched: Box<dyn TrialScheduler>,
+    ckpts: CheckpointStore,
+    provisioner: Provisioner,
+    spot: Option<SpotMarket>,
+    events: EventQueue<Ev>,
+    nodes: BTreeMap<u32, Node>,
+    queue: VecDeque<usize>,
+    ledger: CostLedger,
+    /// Counters + best-loss gauge (`search.*` names).
+    pub metrics: MetricsRegistry,
+    terminal: usize,
+    preemptions: u64,
+    pauses: u64,
+    resumes: u64,
+    full_restarts: u64,
+    resumed_same_node: u64,
+    total_steps: u64,
+    replayed_steps: u64,
+    checkpoints: u64,
+    promotions: u64,
+    nodes_launched: usize,
+    best_loss: f64,
+    best_idx: Option<usize>,
+    best_observed: f64,
+    ran: bool,
+}
+
+impl SearchDriver {
+    /// Build a driver: sample `cfg.search.trials` assignments from
+    /// `space` (0 = the full discrete grid), materialize trials over
+    /// `command`, and checkpoint into `store` under the `search/` prefix.
+    pub fn new(
+        cfg: SearchDriverConfig,
+        store: StoreHandle,
+        space: &BTreeMap<String, ParamSpec>,
+        command: &str,
+    ) -> Result<Self> {
+        let sc = &cfg.search;
+        let instance = InstanceType::by_name(&sc.instance)
+            .map(|s| s.ty)
+            .ok_or_else(|| Error::Search(format!("unknown instance type {:?}", sc.instance)))?;
+        if sc.max_steps == 0 || sc.rung_first_steps == 0 {
+            return Err(Error::Search("max_steps and rung_first_steps must be > 0".into()));
+        }
+        if sc.step_time_s <= 0.0 || sc.step_time_s.is_nan() {
+            return Err(Error::Search("step_time_s must be > 0".into()));
+        }
+        let n = if sc.trials == 0 { None } else { Some(sc.trials) };
+        let assignments = sample_assignments(space, n, sc.seed);
+        if assignments.is_empty() {
+            return Err(Error::Search("no trials sampled from the parameter space".into()));
+        }
+        let mut sched = make_scheduler(sc);
+        let model = CurveModel::new(cfg.curve.clone(), sc.seed);
+        let mut trials = Vec::with_capacity(assignments.len());
+        let mut curves = Vec::with_capacity(assignments.len());
+        for (i, a) in assignments.into_iter().enumerate() {
+            let first = sched.first_milestone(i).clamp(1, sc.max_steps);
+            curves.push(model.curve(&a));
+            trials.push(Trial::new(i as u32, command, a, first));
+        }
+        let ckpts = if sc.keep_last_k == 0 {
+            CheckpointStore::new(store, "search")
+        } else {
+            CheckpointStore::with_keep_last(store, "search", sc.keep_last_k)
+        };
+        let seed = sc.seed;
+        Ok(Self {
+            provisioner: Provisioner::new(cfg.provisioner.clone(), seed),
+            spot: cfg.spot_market.clone().map(|m| SpotMarket::new(m, seed)),
+            instance,
+            trials,
+            curves,
+            sched,
+            ckpts,
+            cfg,
+            events: EventQueue::new(),
+            nodes: BTreeMap::new(),
+            queue: VecDeque::new(),
+            ledger: CostLedger::new(),
+            metrics: MetricsRegistry::new(),
+            terminal: 0,
+            preemptions: 0,
+            pauses: 0,
+            resumes: 0,
+            full_restarts: 0,
+            resumed_same_node: 0,
+            total_steps: 0,
+            replayed_steps: 0,
+            checkpoints: 0,
+            promotions: 0,
+            nodes_launched: 0,
+            best_loss: f64::INFINITY,
+            best_idx: None,
+            best_observed: f64::INFINITY,
+            ran: false,
+        })
+    }
+
+    /// The [`SearchDriverConfig`] a recipe experiment describes: the
+    /// `search:` stanza supplies the algorithm knobs, the experiment
+    /// supplies the fleet (`workers`/`spot`/`instance`) and trial count
+    /// (`samples`, default = full grid); everything else defaults.
+    /// Errors if the experiment has no `search:` stanza.
+    pub fn config_for_experiment(spec: &ExperimentSpec, seed: u64) -> Result<SearchDriverConfig> {
+        let s = spec.search.as_ref().ok_or_else(|| {
+            Error::Search(format!("experiment {:?} has no search: stanza", spec.name))
+        })?;
+        let search = SearchConfig {
+            trials: spec.samples.unwrap_or(0),
+            max_steps: s.max_steps,
+            rung_first_steps: s.rung_steps,
+            eta: s.eta,
+            step_time_s: s.step_time_s,
+            checkpoint_every_steps: s.checkpoint_every_steps,
+            workers: spec.workers,
+            spot: spec.spot,
+            instance: spec.instance.clone(),
+            algo: s.algo,
+            seed,
+            ..SearchConfig::default()
+        };
+        Ok(SearchDriverConfig { search, ..Default::default() })
+    }
+
+    /// Build a driver straight from a recipe experiment carrying a
+    /// `search:` stanza (see [`SearchDriver::config_for_experiment`]).
+    pub fn from_experiment(spec: &ExperimentSpec, store: StoreHandle, seed: u64) -> Result<Self> {
+        let cfg = Self::config_for_experiment(spec, seed)?;
+        Self::new(cfg, store, &spec.params, &spec.command)
+    }
+
+    /// The materialized trials (inspect states/steps after `run`).
+    pub fn trials(&self) -> &[Trial] {
+        &self.trials
+    }
+
+    /// Run the search to completion and report. Single-use.
+    pub fn run(&mut self) -> Result<SearchReport> {
+        if std::mem::replace(&mut self.ran, true) {
+            return Err(Error::Search("SearchDriver::run is single-use".into()));
+        }
+        let mut now = SimTime::ZERO;
+        self.queue = (0..self.trials.len()).collect();
+        for _ in 0..self.cfg.search.workers.max(1) {
+            self.launch_node(now);
+        }
+        for i in 0..self.cfg.storm.len() {
+            let at = SimTime::from_secs_f64(self.cfg.storm[i].at_s);
+            self.events.push(at, Ev::Storm(i));
+        }
+
+        let max_events = 50_000_000u64;
+        let mut processed = 0u64;
+        while let Some((t, ev)) = self.events.pop() {
+            now = t;
+            processed += 1;
+            if processed > max_events {
+                return Err(Error::Search("event budget exceeded (livelock?)".into()));
+            }
+            match ev {
+                Ev::NodeReady(nid) => self.on_ready(now, nid)?,
+                Ev::SegmentDone { trial, node, epoch } => {
+                    self.on_segment_done(now, trial, node, epoch)?
+                }
+                Ev::SpotNotice(nid) => self.on_notice(now, nid)?,
+                Ev::NodeKill(nid) => self.on_kill(now, nid)?,
+                Ev::Storm(i) => self.on_storm(now, i)?,
+            }
+            if self.terminal == self.trials.len() {
+                break;
+            }
+        }
+
+        // bill whatever is still alive
+        let alive: Vec<u32> =
+            self.nodes.iter().filter(|(_, n)| !n.dead).map(|(id, _)| *id).collect();
+        for nid in alive {
+            self.bill_and_mark_dead(nid, now);
+        }
+
+        let completed = self.trials.iter().filter(|t| t.state == TrialState::Completed).count();
+        let stopped = self.trials.iter().filter(|t| t.state == TrialState::Stopped).count();
+        Ok(SearchReport {
+            algo: self.sched.name(),
+            trials: self.trials.len(),
+            completed,
+            stopped,
+            lost: self.trials.len() - completed - stopped,
+            makespan_s: now.as_secs_f64(),
+            cost_usd: self.ledger.total_usd(),
+            total_steps: self.total_steps,
+            replayed_steps: self.replayed_steps,
+            preemptions: self.preemptions,
+            pauses: self.pauses,
+            resumes: self.resumes,
+            full_restarts: self.full_restarts,
+            resumed_same_node: self.resumed_same_node,
+            checkpoints: self.checkpoints,
+            promotions: self.promotions,
+            nodes_launched: self.nodes_launched,
+            best_loss: self.best_loss,
+            best_assignment: self.best_idx.map(|i| self.trials[i].assignment.clone()),
+            best_observed_loss: self.best_observed,
+        })
+    }
+
+    // ------------------------------------------------------------ events
+
+    fn on_ready(&mut self, now: SimTime, nid: u32) -> Result<()> {
+        let Some(n) = self.nodes.get_mut(&nid) else { return Ok(()) };
+        if n.dead || n.draining {
+            return Ok(());
+        }
+        n.ready = true;
+        n.handle.mark_ready();
+        self.dispatch(now)
+    }
+
+    fn on_segment_done(&mut self, now: SimTime, ti: usize, nid: u32, epoch: u64) -> Result<()> {
+        let stale = match self.nodes.get(&nid) {
+            None => true,
+            Some(n) => n.dead || n.epoch != epoch || n.running != Some(ti),
+        };
+        if stale {
+            return Ok(());
+        }
+        let (step, executed) = {
+            let t = &mut self.trials[ti];
+            let executed = t.seg_target - t.seg_start_step;
+            t.step = t.seg_target;
+            t.lifetime_steps += executed;
+            (t.step, executed)
+        };
+        self.total_steps += executed;
+        let loss = self.curves[ti].loss_at(step);
+        self.save_checkpoint(ti, step, loss)?;
+        self.trials[ti].last_loss = loss;
+        if loss < self.best_observed {
+            self.best_observed = loss;
+        }
+
+        let max_steps = self.cfg.search.max_steps;
+        if step >= max_steps {
+            // trial done: the top rung is completion
+            self.trials[ti].state = TrialState::Completed;
+            self.terminal += 1;
+            self.metrics.counter("search.trials_completed").inc();
+            if loss < self.best_loss {
+                self.best_loss = loss;
+                self.best_idx = Some(ti);
+                self.metrics.float_gauge("search.best_loss").set(loss);
+            }
+            if let Some(n) = self.nodes.get_mut(&nid) {
+                n.running = None;
+            }
+            return self.dispatch(now);
+        }
+        if step >= self.trials[ti].next_milestone {
+            match self.sched.on_report(ti, step, loss) {
+                Decision::Continue(next) => {
+                    self.promotions += 1;
+                    self.metrics.counter("search.promotions").inc();
+                    self.trials[ti].next_milestone = next.clamp(step + 1, max_steps);
+                    self.start_segment(now, ti, nid);
+                }
+                Decision::Stop => {
+                    self.trials[ti].state = TrialState::Stopped;
+                    self.terminal += 1;
+                    self.metrics.counter("search.early_stops").inc();
+                    if let Some(n) = self.nodes.get_mut(&nid) {
+                        n.running = None;
+                    }
+                    return self.dispatch(now);
+                }
+            }
+        } else {
+            // mid-rung periodic checkpoint: keep going on the same node
+            self.start_segment(now, ti, nid);
+        }
+        Ok(())
+    }
+
+    /// Spot notice / storm warning: drain the node gracefully — bank the
+    /// running trial's partial progress in a checkpoint and re-queue it
+    /// at the front. The node takes no further work.
+    fn on_notice(&mut self, now: SimTime, nid: u32) -> Result<()> {
+        let running = {
+            let Some(n) = self.nodes.get_mut(&nid) else { return Ok(()) };
+            if n.dead || n.draining {
+                return Ok(());
+            }
+            n.draining = true;
+            n.handle.begin_drain();
+            n.epoch += 1;
+            n.running.take()
+        };
+        if let Some(ti) = running {
+            let done = self.partial_steps(now, ti);
+            let step = {
+                let t = &mut self.trials[ti];
+                t.step = t.seg_start_step + done;
+                t.lifetime_steps += done;
+                t.step
+            };
+            self.total_steps += done;
+            let loss = self.curves[ti].loss_at(step);
+            self.save_checkpoint(ti, step, loss)?;
+            let t = &mut self.trials[ti];
+            t.last_loss = loss;
+            t.state = TrialState::Paused;
+            t.pauses += 1;
+            self.pauses += 1;
+            self.metrics.counter("search.pauses").inc();
+            self.queue.push_front(ti);
+        }
+        self.dispatch(now)
+    }
+
+    /// Hard kill: work since the last checkpoint is lost; the trial will
+    /// resume from that checkpoint (step 0 if none existed yet).
+    fn on_kill(&mut self, now: SimTime, nid: u32) -> Result<()> {
+        let running = {
+            let Some(n) = self.nodes.get_mut(&nid) else { return Ok(()) };
+            if n.dead {
+                return Ok(());
+            }
+            n.epoch += 1;
+            n.running.take()
+        };
+        self.preemptions += 1;
+        if let Some(ti) = running {
+            let done = self.partial_steps(now, ti);
+            let t = &mut self.trials[ti];
+            let reached = t.seg_start_step + done;
+            t.lifetime_steps += done;
+            self.total_steps += done;
+            let resume_from = t.ckpt_step.unwrap_or(0);
+            self.replayed_steps += reached - resume_from;
+            t.step = resume_from;
+            t.state = TrialState::Paused;
+            t.pauses += 1;
+            self.pauses += 1;
+            self.metrics.counter("search.pauses").inc();
+            self.queue.push_front(ti);
+        }
+        self.bill_and_mark_dead(nid, now);
+        if self.cfg.replace_preempted && self.terminal < self.trials.len() {
+            self.launch_node(now);
+        }
+        self.dispatch(now)
+    }
+
+    fn on_storm(&mut self, now: SimTime, idx: usize) -> Result<()> {
+        let storm = self.cfg.storm[idx];
+        let victims: Vec<u32> = self
+            .nodes
+            .iter()
+            .filter(|(_, n)| !n.dead && !n.draining)
+            .map(|(id, _)| *id)
+            .take(storm.kills)
+            .collect();
+        for nid in victims {
+            if storm.notice_s <= 0.0 {
+                self.on_kill(now, nid)?;
+            } else {
+                self.on_notice(now, nid)?;
+                self.events
+                    .push(now + SimTime::from_secs_f64(storm.notice_s), Ev::NodeKill(nid));
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------- dispatching
+
+    /// Fill idle nodes from the queue (paused trials sit at the front,
+    /// §III.D: preempted work resumes first).
+    fn dispatch(&mut self, now: SimTime) -> Result<()> {
+        loop {
+            if self.queue.is_empty() {
+                return Ok(());
+            }
+            let Some(nid) = self
+                .nodes
+                .iter()
+                .find(|(_, n)| n.ready && !n.dead && !n.draining && n.running.is_none())
+                .map(|(id, _)| *id)
+            else {
+                return Ok(());
+            };
+            let ti = self.queue.pop_front().expect("non-empty");
+            self.start_attempt(now, ti, nid)?;
+        }
+    }
+
+    /// Start (or resume) a trial on a node. A resume reads the latest
+    /// checkpoint from the store — exactly one metadata GET and one blob
+    /// GET — and verifies it belongs to the same byte-identical command.
+    fn start_attempt(&mut self, now: SimTime, ti: usize, nid: u32) -> Result<()> {
+        let resuming = self.trials[ti].pauses > 0;
+        if resuming {
+            self.resumes += 1;
+            self.metrics.counter("search.resumes").inc();
+            let task = self.trials[ti].task;
+            match self.ckpts.latest(task)? {
+                Some(ckpt) => {
+                    let blob = self.ckpts.load_blob(&ckpt)?;
+                    let step = self.trials[ti].restore(&ckpt, &blob)?;
+                    self.trials[ti].step = step;
+                }
+                None => {
+                    // killed before the first checkpoint ever landed
+                    if self.trials[ti].lifetime_steps > 0 {
+                        self.full_restarts += 1;
+                    }
+                    self.trials[ti].step = 0;
+                }
+            }
+            if self.trials[ti].last_node == Some(nid) {
+                self.resumed_same_node += 1;
+            }
+        } else if self.trials[ti].state == TrialState::Pending {
+            self.metrics.counter("search.trials_started").inc();
+        }
+        self.trials[ti].last_node = Some(nid);
+        self.start_segment(now, ti, nid);
+        Ok(())
+    }
+
+    /// Schedule the next run segment: up to the next periodic checkpoint
+    /// or the next scheduler milestone, whichever is nearer.
+    fn start_segment(&mut self, now: SimTime, ti: usize, nid: u32) {
+        let target = self.segment_target(ti);
+        let dur_steps = {
+            let t = &mut self.trials[ti];
+            t.state = TrialState::Running;
+            t.seg_start_step = t.step;
+            t.seg_started_at = now;
+            t.seg_target = target;
+            target - t.step
+        };
+        let epoch = self.nodes[&nid].epoch;
+        self.nodes.get_mut(&nid).expect("live node").running = Some(ti);
+        let dur = dur_steps as f64 * self.cfg.search.step_time_s;
+        let done = Ev::SegmentDone { trial: ti, node: nid, epoch };
+        self.events.push(now + SimTime::from_secs_f64(dur), done);
+    }
+
+    fn segment_target(&self, ti: usize) -> u64 {
+        let t = &self.trials[ti];
+        let ms = t.next_milestone.min(self.cfg.search.max_steps).max(t.step);
+        let ck = self.cfg.search.checkpoint_every_steps;
+        if ck == 0 {
+            ms
+        } else {
+            ((t.step / ck + 1) * ck).min(ms)
+        }
+    }
+
+    /// Whole steps the in-flight segment completed by `now`.
+    fn partial_steps(&self, now: SimTime, ti: usize) -> u64 {
+        let t = &self.trials[ti];
+        let elapsed = now.saturating_sub(t.seg_started_at).as_secs_f64();
+        let raw = (elapsed / self.cfg.search.step_time_s + 1e-9).floor() as u64;
+        raw.min(t.seg_target.saturating_sub(t.seg_start_step))
+    }
+
+    fn save_checkpoint(&mut self, ti: usize, step: u64, loss: f64) -> Result<()> {
+        let blob = self.trials[ti].blob(step, loss);
+        self.ckpts.save(self.trials[ti].task, step, loss as f32, &blob)?;
+        self.trials[ti].ckpt_step = Some(step);
+        self.checkpoints += 1;
+        self.metrics.counter("search.checkpoints").inc();
+        Ok(())
+    }
+
+    // ---------------------------------------------------------- fleet
+
+    fn launch_node(&mut self, now: SimTime) {
+        let spot = self.cfg.search.spot;
+        let handle = self.provisioner.request(self.instance, spot, now);
+        let nid = handle.id;
+        self.events.push(handle.ready_at, Ev::NodeReady(nid));
+        if spot {
+            if let Some(market) = self.spot.as_mut() {
+                let (notice, kill) = market.sample_preemption(now);
+                self.events.push(notice, Ev::SpotNotice(nid));
+                self.events.push(kill, Ev::NodeKill(nid));
+            }
+        }
+        self.nodes.insert(
+            nid,
+            Node { handle, ready: false, dead: false, draining: false, running: None, epoch: 0 },
+        );
+        self.nodes_launched += 1;
+    }
+
+    fn bill_and_mark_dead(&mut self, nid: u32, now: SimTime) {
+        let Some(n) = self.nodes.get_mut(&nid) else { return };
+        if n.dead {
+            return;
+        }
+        n.dead = true;
+        n.handle.terminate();
+        let spec = n.handle.ty.spec();
+        let hours = now.saturating_sub(n.handle.launched_at).as_secs_f64() / 3600.0;
+        self.ledger.charge(spec.name, n.handle.spot, spec.price(n.handle.spot), hours);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::config::SearchAlgo;
+    use crate::storage::MemStore;
+    use crate::workflow::Recipe;
+
+    fn lr_space() -> BTreeMap<String, ParamSpec> {
+        let mut m = BTreeMap::new();
+        m.insert("lr".to_string(), ParamSpec::LogUniform([1e-4, 1e-1]));
+        m
+    }
+
+    fn grid_space(card: i64) -> BTreeMap<String, ParamSpec> {
+        let mut m = BTreeMap::new();
+        m.insert("p".to_string(), ParamSpec::Range([0, card - 1]));
+        m
+    }
+
+    /// Deterministic fleet: jitter-free warm provisioning (node ready at
+    /// exactly t=55), noiseless pinned-τ curves, storms only.
+    fn exact_cfg(algo: SearchAlgo) -> SearchDriverConfig {
+        SearchDriverConfig {
+            search: SearchConfig {
+                trials: 0, // full grid of the discrete space
+                max_steps: 27,
+                rung_first_steps: 1,
+                eta: 3,
+                step_time_s: 1.0,
+                checkpoint_every_steps: 10,
+                keep_last_k: 2,
+                workers: 4,
+                spot: false,
+                algo,
+                seed: 5,
+                ..SearchConfig::default()
+            },
+            curve: CurveConfig { tau: [30.0, 30.0], noise: 0.0, ..Default::default() },
+            provisioner: ProvisionerConfig {
+                warm_cache_prob: 1.0,
+                jitter: 0.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn store() -> StoreHandle {
+        Arc::new(MemStore::new())
+    }
+
+    #[test]
+    fn grid_completes_every_trial() {
+        let mut cfg = exact_cfg(SearchAlgo::Grid);
+        cfg.search.trials = 8;
+        let mut d = SearchDriver::new(cfg, store(), &lr_space(), "train --lr {lr}").unwrap();
+        let r = d.run().unwrap();
+        assert_eq!(r.algo, "grid");
+        assert_eq!((r.trials, r.completed, r.stopped, r.lost), (8, 8, 0, 0));
+        assert_eq!(r.total_steps, 8 * 27);
+        assert_eq!(r.preemptions, 0);
+        assert_eq!(r.resumes, 0);
+        assert_eq!(r.replayed_steps, 0);
+        assert!(r.best_loss.is_finite());
+        // the report's best really is the minimum over completed trials
+        let min = d
+            .trials()
+            .iter()
+            .map(|t| t.last_loss)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(r.best_loss, min);
+        assert_eq!(
+            r.best_assignment.as_ref(),
+            d.trials().iter().find(|t| t.last_loss == min).map(|t| &t.assignment)
+        );
+        assert!(r.cost_usd > 0.0);
+        // 8 trials × 27 s on 4 nodes from t=55: two waves, done at 109
+        assert!((r.makespan_s - 109.0).abs() < 1e-6, "{}", r.makespan_s);
+    }
+
+    #[test]
+    fn asha_matches_grid_best_on_rank_stable_curves_with_far_fewer_steps() {
+        // τ pinned + zero noise ⇒ trial rankings are identical at every
+        // rung, so ASHA can never cut the eventual winner: equal best
+        // loss is guaranteed, at a fraction of the grid's trial-steps.
+        let grid = SearchDriver::new(exact_cfg(SearchAlgo::Grid), store(), &grid_space(27), "t {p}")
+            .unwrap()
+            .run()
+            .unwrap();
+        let asha = SearchDriver::new(exact_cfg(SearchAlgo::Asha), store(), &grid_space(27), "t {p}")
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(grid.trials, 27);
+        assert_eq!(asha.trials, 27);
+        assert_eq!(grid.total_steps, 27 * 27);
+        assert_eq!(asha.lost, 0);
+        assert_eq!(
+            asha.best_loss, grid.best_loss,
+            "rank-stable curves: ASHA keeps the winner ({asha:?})"
+        );
+        assert!(
+            asha.total_steps * 2 < grid.total_steps,
+            "asha spent {} of grid's {} steps",
+            asha.total_steps,
+            grid.total_steps
+        );
+        assert!(asha.stopped > 0, "halving must have cut someone");
+        assert!(asha.promotions > 0);
+        assert!(asha.makespan_s <= grid.makespan_s, "less work, same fleet");
+    }
+
+    #[test]
+    fn notice_storm_pauses_resume_elsewhere_zero_lost() {
+        // 8 grid trials × 40 steps on 4 nodes (ready t=55); a storm at
+        // t=70 drains 2 nodes with a 3 s notice. The 2 running trials
+        // checkpoint their 15 banked steps and resume on other nodes —
+        // nothing is lost and nothing replays.
+        let mut cfg = exact_cfg(SearchAlgo::Grid);
+        cfg.search.trials = 8;
+        cfg.search.max_steps = 40;
+        cfg.storm = vec![StormEvent { at_s: 70.0, kills: 2, notice_s: 3.0 }];
+        let s = store();
+        let mut d = SearchDriver::new(cfg, s.clone(), &lr_space(), "train --lr {lr}").unwrap();
+        let r = d.run().unwrap();
+        assert_eq!((r.completed, r.stopped, r.lost), (8, 0, 0), "{r:?}");
+        assert_eq!(r.preemptions, 2);
+        assert_eq!(r.pauses, 2);
+        assert_eq!(r.resumes, 2);
+        assert_eq!(r.full_restarts, 0, "drain checkpoints mean no restart from 0");
+        assert_eq!(r.resumed_same_node, 0, "§III.D: resumed on a different node");
+        assert_eq!(r.replayed_steps, 0, "graceful drain banks every step");
+        assert_eq!(r.total_steps, 8 * 40, "exactly the nominal work was executed");
+        assert!(r.nodes_launched > 4, "replacements for the killed nodes");
+        // keep-last-k pruning held during the run
+        for t in d.trials() {
+            let blobs = s.list(&format!("search/ckpt/{}/step", t.task)).unwrap();
+            assert!(blobs.len() <= 2, "task {} kept {} blobs", t.task, blobs.len());
+        }
+    }
+
+    #[test]
+    fn hard_kill_replays_only_since_last_checkpoint() {
+        // one 40-step trial, checkpoints every 10 steps; instant kill at
+        // t=70 (step 15): resume must come from step 10 — 5 replayed
+        // steps, no full restart. Exact timeline: ready 55, ckpt@65
+        // (step 10), kill@70, replacement ready 125, done 125+30=155.
+        let mut cfg = exact_cfg(SearchAlgo::Grid);
+        cfg.search.trials = 1;
+        cfg.search.max_steps = 40;
+        cfg.search.workers = 1;
+        cfg.storm = vec![StormEvent { at_s: 70.0, kills: 1, notice_s: 0.0 }];
+        let mut d = SearchDriver::new(cfg, store(), &lr_space(), "train --lr {lr}").unwrap();
+        let r = d.run().unwrap();
+        assert_eq!((r.completed, r.lost), (1, 0), "{r:?}");
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.resumes, 1);
+        assert_eq!(r.full_restarts, 0);
+        assert_eq!(r.replayed_steps, 5);
+        assert_eq!(r.total_steps, 45, "40 nominal + 5 replayed");
+        assert!((r.makespan_s - 155.0).abs() < 1e-6, "{}", r.makespan_s);
+        let t = &d.trials()[0];
+        assert_eq!(t.pauses, 1);
+        assert_eq!(t.lifetime_steps, 45);
+    }
+
+    #[test]
+    fn same_seed_bit_identical_reports() {
+        let run = || {
+            let mut cfg = exact_cfg(SearchAlgo::Asha);
+            cfg.search.spot = true;
+            cfg.spot_market = Some(SpotMarketConfig { mean_ttp_s: 200.0, notice_s: 20.0 });
+            cfg.storm = vec![StormEvent { at_s: 90.0, kills: 2, notice_s: 0.0 }];
+            SearchDriver::new(cfg, store(), &grid_space(27), "t {p}").unwrap().run().unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn metrics_mirror_the_report() {
+        let mut cfg = exact_cfg(SearchAlgo::Asha);
+        cfg.search.trials = 0;
+        cfg.storm = vec![StormEvent { at_s: 70.0, kills: 2, notice_s: 3.0 }];
+        let mut d = SearchDriver::new(cfg, store(), &grid_space(27), "t {p}").unwrap();
+        let r = d.run().unwrap();
+        assert_eq!(d.metrics.counter("search.trials_started").get(), 27);
+        assert_eq!(d.metrics.counter("search.pauses").get(), r.pauses);
+        assert_eq!(d.metrics.counter("search.resumes").get(), r.resumes);
+        assert_eq!(d.metrics.counter("search.promotions").get(), r.promotions);
+        assert_eq!(d.metrics.counter("search.checkpoints").get(), r.checkpoints);
+        assert_eq!(
+            d.metrics.counter("search.trials_completed").get() as usize
+                + d.metrics.counter("search.early_stops").get() as usize,
+            r.completed + r.stopped
+        );
+        assert_eq!(d.metrics.float_gauge("search.best_loss").get(), r.best_loss);
+    }
+
+    #[test]
+    fn builds_and_runs_from_a_recipe_search_stanza() {
+        let yaml = r#"
+name: sweep
+experiments:
+  - name: tune
+    instance: m5.xlarge
+    workers: 4
+    spot: true
+    command: "train --lr {lr} --wd {wd}"
+    samples: 9
+    params:
+      lr: { log_uniform: [1.0e-4, 1.0e-1] }
+      wd: { choice: [0.0, 0.1] }
+    search: { algo: asha, max_steps: 27, rung_steps: 3, eta: 3 }
+"#;
+        let recipe = Recipe::from_yaml(yaml).unwrap();
+        let spec = recipe.experiment("tune").unwrap();
+        let mut d = SearchDriver::from_experiment(spec, store(), 3).unwrap();
+        let r = d.run().unwrap();
+        assert_eq!(r.algo, "asha");
+        assert_eq!(r.trials, 9);
+        assert_eq!(r.lost, 0);
+        assert!(r.completed >= 1, "{r:?}");
+        // the stanza-less experiment is rejected
+        let mut no_stanza = spec.clone();
+        no_stanza.search = None;
+        assert!(matches!(
+            SearchDriver::from_experiment(&no_stanza, store(), 3),
+            Err(Error::Search(_))
+        ));
+    }
+
+    #[test]
+    fn driver_is_single_use_and_validates_inputs() {
+        let mut d =
+            SearchDriver::new(exact_cfg(SearchAlgo::Grid), store(), &grid_space(2), "t {p}")
+                .unwrap();
+        d.run().unwrap();
+        assert!(matches!(d.run(), Err(Error::Search(_))));
+        let mut bad = exact_cfg(SearchAlgo::Grid);
+        bad.search.instance = "quantum.9000".into();
+        assert!(matches!(
+            SearchDriver::new(bad, store(), &grid_space(2), "t {p}"),
+            Err(Error::Search(_))
+        ));
+    }
+}

@@ -1,0 +1,176 @@
+//! Trial lifecycle: one sampled configuration training toward `max_steps`.
+//!
+//! A trial is the search-side twin of a workflow task: a rendered command
+//! (byte-identical across every resume, per §III.D), an [`Assignment`],
+//! and a step counter that only moves forward through checkpoints. The
+//! driver parks the whole state machine here so preemption handling reads
+//! as transitions: `Running → Paused` (notice/kill) and `Paused → Running`
+//! (resume from the last [`crate::scheduler::TrainCheckpoint`] on a
+//! different node).
+
+use crate::scheduler::TrainCheckpoint;
+use crate::sim::SimTime;
+use crate::util::Json;
+use crate::workflow::{render_command, Assignment, TaskId};
+use crate::{Error, Result};
+
+/// Where a trial is in its life.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrialState {
+    /// Waiting in the queue for a node (also the initial state).
+    Pending,
+    /// Training on a node.
+    Running,
+    /// Preempted mid-run; queued to resume from its last checkpoint.
+    Paused,
+    /// Reached `max_steps`.
+    Completed,
+    /// Early-stopped by the scheduler.
+    Stopped,
+}
+
+/// One hyperparameter configuration working through the rungs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trial {
+    /// Index into the driver's trial list.
+    pub id: u32,
+    /// Checkpoint-store identity (experiment 0, index = trial id).
+    pub task: TaskId,
+    /// The sampled parameter binding.
+    pub assignment: Assignment,
+    /// Rendered command; never re-rendered, so resumes are byte-identical.
+    pub command: String,
+    /// Lifecycle state.
+    pub state: TrialState,
+    /// Completed (and durable) training steps.
+    pub step: u64,
+    /// Next step the scheduler wants a report at.
+    pub next_milestone: u64,
+    /// Loss at the last report (or checkpoint).
+    pub last_loss: f64,
+    /// Step of the newest saved checkpoint, if any.
+    pub ckpt_step: Option<u64>,
+    /// Times this trial was preempted off a node.
+    pub pauses: u32,
+    /// Times it came back from a checkpoint.
+    pub resumes: u32,
+    /// Steps executed across all attempts, including work a hard kill
+    /// later threw away (`lifetime_steps - step` = replayed so far).
+    pub lifetime_steps: u64,
+    /// Node of the current/most recent attempt.
+    pub last_node: Option<u32>,
+    /// Step the in-flight segment started from.
+    pub(crate) seg_start_step: u64,
+    /// Virtual time the in-flight segment started.
+    pub(crate) seg_started_at: SimTime,
+    /// Step the in-flight segment runs to.
+    pub(crate) seg_target: u64,
+}
+
+impl Trial {
+    /// Materialize trial `id` from a command template and an assignment.
+    pub fn new(id: u32, template: &str, assignment: Assignment, first_milestone: u64) -> Self {
+        Self {
+            id,
+            task: TaskId { experiment: 0, index: id },
+            command: render_command(template, &assignment),
+            assignment,
+            state: TrialState::Pending,
+            step: 0,
+            next_milestone: first_milestone.max(1),
+            last_loss: f64::INFINITY,
+            ckpt_step: None,
+            pauses: 0,
+            resumes: 0,
+            lifetime_steps: 0,
+            last_node: None,
+            seg_start_step: 0,
+            seg_started_at: SimTime::ZERO,
+            seg_target: 0,
+        }
+    }
+
+    /// Terminal (no more work)?
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.state, TrialState::Completed | TrialState::Stopped)
+    }
+
+    /// Serialize the checkpoint blob: step, loss, and the command the
+    /// checkpoint belongs to (so a resume can prove it is continuing the
+    /// exact same arguments).
+    pub fn blob(&self, step: u64, loss: f64) -> Vec<u8> {
+        Json::obj(vec![
+            ("step", Json::num(step as f64)),
+            ("loss", Json::num(loss)),
+            ("command", Json::str(self.command.clone())),
+        ])
+        .to_bytes()
+    }
+
+    /// Validate a checkpoint blob against this trial and return the step
+    /// it restores to. Errors if the blob belongs to different arguments
+    /// or disagrees with the checkpoint metadata — a resumed trial must
+    /// continue the §III.D way: same command, last checkpointed step.
+    pub fn restore(&self, ckpt: &TrainCheckpoint, blob: &[u8]) -> Result<u64> {
+        let v = Json::parse_bytes(blob)?;
+        let step = v.req_u64("step")?;
+        let command = v.req_str("command")?;
+        if command != self.command {
+            return Err(Error::Search(format!(
+                "trial {}: checkpoint belongs to {command:?}, not {:?}",
+                self.id, self.command
+            )));
+        }
+        if step != ckpt.step {
+            return Err(Error::Search(format!(
+                "trial {}: blob step {step} != checkpoint step {}",
+                self.id, ckpt.step
+            )));
+        }
+        Ok(step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::ParamValue;
+
+    fn trial() -> Trial {
+        let mut a = Assignment::new();
+        a.insert("lr".into(), ParamValue::Float(0.01));
+        Trial::new(3, "train --lr {lr}", a, 9)
+    }
+
+    #[test]
+    fn materializes_rendered_command_and_task_id() {
+        let t = trial();
+        assert_eq!(t.command, "train --lr 0.01");
+        assert_eq!(t.task, TaskId { experiment: 0, index: 3 });
+        assert_eq!(t.state, TrialState::Pending);
+        assert_eq!(t.next_milestone, 9);
+        assert!(!t.is_terminal());
+    }
+
+    #[test]
+    fn blob_roundtrips_through_restore() {
+        let t = trial();
+        let blob = t.blob(42, 1.25);
+        let ckpt = TrainCheckpoint { task: t.task, step: 42, blob_key: "k".into(), loss: 1.25 };
+        assert_eq!(t.restore(&ckpt, &blob).unwrap(), 42);
+    }
+
+    #[test]
+    fn restore_rejects_foreign_or_inconsistent_blobs() {
+        let t = trial();
+        // a blob rendered from different arguments
+        let mut other = Assignment::new();
+        other.insert("lr".into(), ParamValue::Float(0.5));
+        let foreign = Trial::new(4, "train --lr {lr}", other, 9).blob(42, 1.0);
+        let ckpt = TrainCheckpoint { task: t.task, step: 42, blob_key: "k".into(), loss: 1.0 };
+        assert!(matches!(t.restore(&ckpt, &foreign), Err(Error::Search(_))));
+        // a blob whose step disagrees with the metadata pointer
+        let stale = t.blob(41, 1.0);
+        assert!(matches!(t.restore(&ckpt, &stale), Err(Error::Search(_))));
+    }
+}

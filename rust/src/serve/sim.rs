@@ -45,17 +45,7 @@ pub enum Load {
     Scheduled(RateSchedule),
 }
 
-/// One scripted preemption wave: at `at_s`, `kills` replicas receive a
-/// `notice_s`-second warning (0 = instant kill, in-flight batches requeue).
-#[derive(Debug, Clone, Copy)]
-pub struct StormEvent {
-    /// Virtual time the wave lands, seconds.
-    pub at_s: f64,
-    /// Replicas reclaimed by this wave.
-    pub kills: usize,
-    /// Warning before the hard kill, seconds (0 = instant).
-    pub notice_s: f64,
-}
+pub use crate::cloud::StormEvent;
 
 /// Full serving-scenario configuration.
 #[derive(Debug, Clone)]

@@ -118,7 +118,10 @@ impl<'a> P<'a> {
                     let ind2 = l2.indent;
                     let no2 = l2.no;
                     self.pos += 1;
-                    map.insert(k2, self.entry_value(&v2, ind2 + 1, no2)?);
+                    let value = self.entry_value(&v2, ind2 + 1, no2)?;
+                    if map.insert(k2.clone(), value).is_some() {
+                        return Err(Error::Yaml(format!("line {no2}: duplicate key {k2:?}")));
+                    }
                 }
                 items.push(Json::Obj(map));
             } else {
@@ -140,7 +143,10 @@ impl<'a> P<'a> {
             let v = v.to_string();
             let no = line.no;
             self.pos += 1;
-            map.insert(k, self.entry_value(&v, indent + 1, no)?);
+            let value = self.entry_value(&v, indent + 1, no)?;
+            if map.insert(k.clone(), value).is_some() {
+                return Err(Error::Yaml(format!("line {no}: duplicate key {k:?}")));
+            }
         }
         Ok(Json::Obj(map))
     }
@@ -216,7 +222,9 @@ fn flow(s: &str) -> Result<(Json, usize)> {
                 i += ws(&s[i..]);
                 let (v, used) = flow_item(&s[i..])?;
                 i += used;
-                map.insert(key, v);
+                if map.insert(key.clone(), v).is_some() {
+                    return Err(Error::Yaml(format!("duplicate key {key:?} in flow map")));
+                }
                 i += ws(&s[i..]);
                 match bytes.get(i) {
                     Some(b',') => i += 1,
@@ -369,6 +377,21 @@ experiments:
     fn bad_yaml_errors() {
         assert!(parse("a: { unclosed").is_err());
         assert!(parse("key_without_colon_value\n  nested: 1").is_err());
+    }
+
+    #[test]
+    fn duplicate_keys_rejected_everywhere() {
+        // block map
+        let e = parse("a: 1\nb: 2\na: 3").unwrap_err();
+        assert!(e.to_string().contains("duplicate key \"a\""), "{e}");
+        // flow map
+        let e = parse("m: { x: 1, x: 2 }").unwrap_err();
+        assert!(e.to_string().contains("duplicate key \"x\""), "{e}");
+        // list-of-maps entry
+        let e = parse("xs:\n  - k: 1\n    v: 2\n    v: 3").unwrap_err();
+        assert!(e.to_string().contains("duplicate key \"v\""), "{e}");
+        // nested block maps keep their own namespaces
+        assert!(parse("a:\n  x: 1\nb:\n  x: 2").is_ok());
     }
 
     #[test]

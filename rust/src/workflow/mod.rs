@@ -11,6 +11,6 @@ pub mod recipe;
 pub mod task;
 
 pub use dag::Workflow;
-pub use params::{sample_assignments, Assignment, ParamSpec, ParamValue};
-pub use recipe::{ExperimentSpec, Recipe, WorkSpec};
+pub use params::{render_command, sample_assignments, Assignment, ParamSpec, ParamValue};
+pub use recipe::{ExperimentSpec, Recipe, SearchSpec, WorkSpec};
 pub use task::{Task, TaskId, TaskState};

@@ -296,6 +296,43 @@ mod tests {
     }
 
     #[test]
+    fn same_seed_same_assignments_on_mixed_space() {
+        // seeded determinism must hold across discrete + continuous
+        // together (trial resumes after preemption depend on it: the same
+        // seed must regenerate the exact same trial set)
+        let p = spec(vec![
+            ("bs", ParamSpec::Choice(vec![ParamValue::Int(32), ParamValue::Int(64)])),
+            ("depth", ParamSpec::Range([2, 5])),
+            ("lr", ParamSpec::LogUniform([1e-4, 1e-1])),
+            ("mom", ParamSpec::Uniform([0.5, 0.99])),
+        ]);
+        for n in [None, Some(3), Some(17), Some(40)] {
+            assert_eq!(sample_assignments(&p, n, 21), sample_assignments(&p, n, 21));
+        }
+        assert_ne!(sample_assignments(&p, Some(17), 21), sample_assignments(&p, Some(17), 22));
+    }
+
+    #[test]
+    fn no_duplicate_discrete_tuples_until_cartesian_exhausted() {
+        // card = 4 * 5 = 20; sampling n < 20 must yield n distinct
+        // (a, b) tuples even with continuous params mixed in
+        let p = spec(vec![
+            ("a", ParamSpec::Range([0, 3])),
+            ("b", ParamSpec::Range([10, 14])),
+            ("lr", ParamSpec::Uniform([0.0, 1.0])),
+        ]);
+        for n in [1usize, 7, 13, 19, 20] {
+            let out = sample_assignments(&p, Some(n), 4);
+            assert_eq!(out.len(), n);
+            let mut tuples: Vec<(ParamValue, ParamValue)> =
+                out.iter().map(|x| (x["a"].clone(), x["b"].clone())).collect();
+            tuples.sort_by(|x, y| format!("{x:?}").cmp(&format!("{y:?}")));
+            tuples.dedup();
+            assert_eq!(tuples.len(), n, "discrete tuples repeated before the grid was spent");
+        }
+    }
+
+    #[test]
     fn all_continuous_defaults_to_one() {
         let p = spec(vec![("x", ParamSpec::Uniform([0.0, 1.0]))]);
         assert_eq!(sample_assignments(&p, None, 0).len(), 1);

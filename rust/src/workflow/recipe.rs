@@ -23,6 +23,7 @@ use std::collections::{BTreeMap, BTreeSet};
 
 
 use crate::cloud::InstanceType;
+use crate::config::SearchAlgo;
 use crate::util::{yamlite, Json};
 use crate::{Error, Result};
 
@@ -37,6 +38,53 @@ pub struct WorkSpec {
     pub duration_s: Option<f64>,
     /// Input bytes each task reads through HFS.
     pub input_bytes: Option<u64>,
+}
+
+/// The `search:` stanza of an experiment: turns its parameter sweep into
+/// a trial-based hyperparameter search driven by [`crate::search`].
+///
+/// ```yaml
+///     search: { algo: asha, max_steps: 81, rung_steps: 3, eta: 3 }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpec {
+    /// Early-stopping policy (default `asha`).
+    pub algo: SearchAlgo,
+    /// Steps a trial runs to completion (`R`). Required.
+    pub max_steps: u64,
+    /// First rung milestone in steps (default 1).
+    pub rung_steps: u64,
+    /// Successive-halving reduction factor (default 3).
+    pub eta: u32,
+    /// Virtual seconds per training step (default 1.0).
+    pub step_time_s: f64,
+    /// Checkpoint cadence in steps; 0 = at rung milestones only
+    /// (default = `rung_steps`).
+    pub checkpoint_every_steps: u64,
+}
+
+impl SearchSpec {
+    fn from_json(v: &Json, exp: &str) -> Result<Self> {
+        let bad =
+            |field: &str| Error::Recipe(format!("experiment {exp:?}: invalid search.{field}"));
+        let algo = match v.get("algo") {
+            None | Some(Json::Null) => SearchAlgo::Asha,
+            Some(a) => a.as_str().ok_or_else(|| bad("algo"))?.parse()?,
+        };
+        let max_steps = v.req_u64("max_steps").map_err(|_| bad("max_steps"))?;
+        let rung_steps = v.get("rung_steps").and_then(Json::as_u64).unwrap_or(1);
+        Ok(SearchSpec {
+            algo,
+            max_steps,
+            rung_steps,
+            eta: v.get("eta").and_then(Json::as_u64).unwrap_or(3) as u32,
+            step_time_s: v.get("step_time_s").and_then(Json::as_f64).unwrap_or(1.0),
+            checkpoint_every_steps: v
+                .get("checkpoint_every_steps")
+                .and_then(Json::as_u64)
+                .unwrap_or(rung_steps),
+        })
+    }
 }
 
 /// One experiment block of the recipe.
@@ -58,6 +106,10 @@ pub struct ExperimentSpec {
     /// Max reschedules per task after node failures.
     pub max_retries: u32,
     pub work: WorkSpec,
+    /// Optional `search:` stanza — run this experiment's sweep as a
+    /// trial-based hyperparameter search (ASHA & friends) instead of a
+    /// fixed-duration task fan-out.
+    pub search: Option<SearchSpec>,
 }
 
 fn default_image() -> String {
@@ -106,6 +158,10 @@ impl ExperimentSpec {
                 input_bytes: w.get("input_bytes").and_then(Json::as_u64),
             },
         };
+        let search = match v.get("search") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(SearchSpec::from_json(s, &name)?),
+        };
         Ok(ExperimentSpec {
             image: v
                 .get("image")
@@ -125,6 +181,7 @@ impl ExperimentSpec {
             params,
             depends_on,
             work,
+            search,
             name,
         })
     }
@@ -146,8 +203,13 @@ pub struct Recipe {
 
 impl Recipe {
     /// Parse and validate a YAML recipe (via the crate's YAML subset).
+    /// Duplicate keys anywhere in the document — most commonly a parameter
+    /// name written twice under `params:` — surface as [`Error::Recipe`].
     pub fn from_yaml(text: &str) -> Result<Self> {
-        let doc = yamlite::parse(text)?;
+        let doc = yamlite::parse(text).map_err(|e| match e {
+            Error::Yaml(msg) if msg.contains("duplicate key") => Error::Recipe(msg),
+            other => other,
+        })?;
         let recipe = Self::from_json(&doc)?;
         recipe.validate()?;
         Ok(recipe)
@@ -187,6 +249,29 @@ impl Recipe {
             e.instance_type()?;
             if e.command.trim().is_empty() {
                 return Err(Error::Recipe(format!("{:?}: empty command", e.name)));
+            }
+            if let Some(s) = &e.search {
+                if s.rung_steps == 0 {
+                    return Err(Error::Recipe(format!(
+                        "{:?}: search.rung_steps must be > 0",
+                        e.name
+                    )));
+                }
+                if s.max_steps < s.rung_steps {
+                    return Err(Error::Recipe(format!(
+                        "{:?}: search.max_steps must be >= rung_steps",
+                        e.name
+                    )));
+                }
+                if s.eta < 2 {
+                    return Err(Error::Recipe(format!("{:?}: search.eta must be >= 2", e.name)));
+                }
+                if s.step_time_s <= 0.0 || s.step_time_s.is_nan() {
+                    return Err(Error::Recipe(format!(
+                        "{:?}: search.step_time_s must be > 0",
+                        e.name
+                    )));
+                }
             }
         }
         for e in &self.experiments {
@@ -283,5 +368,66 @@ experiments:
     #[test]
     fn rejects_empty() {
         assert!(Recipe::from_yaml("name: x\nexperiments: []").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_parameter_names() {
+        let bad = YAML.replace(
+            "      lr: { log_uniform: [1.0e-4, 1.0e-2] }",
+            "      lr: { log_uniform: [1.0e-4, 1.0e-2] }\n      lr: { uniform: [0.1, 0.9] }",
+        );
+        match Recipe::from_yaml(&bad) {
+            Err(Error::Recipe(msg)) => {
+                assert!(msg.contains("duplicate key \"lr\""), "{msg}")
+            }
+            other => panic!("expected Error::Recipe for a duplicated param, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_search_stanza_with_defaults() {
+        let yaml = YAML.replace(
+            "    depends_on: [prep]",
+            "    depends_on: [prep]\n    search: { max_steps: 81, rung_steps: 3 }",
+        );
+        let r = Recipe::from_yaml(&yaml).unwrap();
+        let s = r.experiment("train").unwrap().search.clone().unwrap();
+        assert_eq!(s.algo, SearchAlgo::Asha, "asha is the default algo");
+        assert_eq!(s.max_steps, 81);
+        assert_eq!(s.rung_steps, 3);
+        assert_eq!(s.eta, 3);
+        assert_eq!(s.step_time_s, 1.0);
+        assert_eq!(s.checkpoint_every_steps, 3, "defaults to rung_steps");
+        assert!(r.experiment("prep").unwrap().search.is_none());
+    }
+
+    #[test]
+    fn search_stanza_validation() {
+        let with = |stanza: &str| {
+            YAML.replace(
+                "    depends_on: [prep]",
+                &format!("    depends_on: [prep]\n    search: {stanza}"),
+            )
+        };
+        // required max_steps
+        assert!(Recipe::from_yaml(&with("{ algo: asha }")).is_err());
+        // unknown algo
+        assert!(Recipe::from_yaml(&with("{ algo: annealing, max_steps: 10 }")).is_err());
+        // eta < 2
+        assert!(Recipe::from_yaml(&with("{ max_steps: 10, eta: 1 }")).is_err());
+        // max_steps below the first rung
+        assert!(Recipe::from_yaml(&with("{ max_steps: 2, rung_steps: 4 }")).is_err());
+        // zero rung
+        assert!(Recipe::from_yaml(&with("{ max_steps: 10, rung_steps: 0 }")).is_err());
+        // explicit full form parses
+        let r = Recipe::from_yaml(&with(
+            "{ algo: median, max_steps: 27, rung_steps: 3, eta: 4, step_time_s: 0.5, \
+             checkpoint_every_steps: 9 }",
+        ))
+        .unwrap();
+        let s = r.experiment("train").unwrap().search.clone().unwrap();
+        assert_eq!(s.algo, SearchAlgo::Median);
+        assert_eq!(s.eta, 4);
+        assert_eq!(s.checkpoint_every_steps, 9);
     }
 }

@@ -95,6 +95,7 @@ mod tests {
             depends_on: vec![],
             max_retries: 2,
             work: WorkSpec { flops_per_task: Some(1e12), duration_s: None, input_bytes: None },
+            search: None,
         }
     }
 

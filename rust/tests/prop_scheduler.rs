@@ -25,6 +25,7 @@ fn mk_tasks(n: u32, max_retries: u32) -> Vec<Task> {
         depends_on: vec![],
         max_retries,
         work: WorkSpec::default(),
+        search: None,
     };
     (0..n).map(|i| Task::materialize(0, i, &spec, Default::default())).collect()
 }
