@@ -22,7 +22,7 @@ use hyper_dist::cloud::{ProvisionerConfig, StormEvent};
 use hyper_dist::config::{SearchAlgo, SearchConfig};
 use hyper_dist::search::{CurveConfig, SearchDriver, SearchDriverConfig, SearchReport};
 use hyper_dist::storage::{CountingStore, MemStore};
-use hyper_dist::util::bench::{header, row, section};
+use hyper_dist::util::bench::{emit_json, header, row, section};
 use hyper_dist::workflow::ParamSpec;
 
 /// 9 x 9 = 81 discrete configurations (the §IV.C grid, scaled to bench
@@ -146,5 +146,23 @@ fn main() {
     assert_eq!(meta_gets, r.resumes, "one checkpoint lookup per resume");
     assert_eq!(blob_gets, r.resumes, "one blob restore per resume, never from scratch");
 
+    emit_json(
+        "search_asha",
+        &[
+            ("grid_total_steps", grid.total_steps as f64),
+            ("asha_total_steps", asha.total_steps as f64),
+            ("asha_step_fraction", asha.total_steps as f64 / grid.total_steps as f64),
+            ("asha_best_loss", asha.best_loss),
+            ("grid_best_loss", grid.best_loss),
+            ("asha_makespan_s", asha.makespan_s),
+            ("grid_makespan_s", grid.makespan_s),
+            ("asha_cost_usd", asha.cost_usd),
+            ("storm_preemptions", r.preemptions as f64),
+            ("storm_resumes", r.resumes as f64),
+            ("storm_replayed_steps", r.replayed_steps as f64),
+            ("storm_lost_trials", r.lost as f64),
+            ("storm_makespan_s", r.makespan_s),
+        ],
+    );
     println!("\nsearch_asha OK");
 }

@@ -16,7 +16,7 @@ use hyper_dist::hfs::{HyperFs, Uploader};
 use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
 use hyper_dist::sim::SimRng;
 use hyper_dist::storage::{MemStore, StoreHandle};
-use hyper_dist::util::bench::{header, row, section};
+use hyper_dist::util::bench::{emit_json, header, row, section, smoke};
 
 fn measure_etl_mb_per_core_s() -> f64 {
     let store: StoreHandle = Arc::new(MemStore::new());
@@ -42,8 +42,19 @@ fn measure_etl_mb_per_core_s() -> f64 {
 }
 
 fn main() {
-    section("real anchor: rust ETL pipeline (tokenize/filter/split)");
-    let mb_core = measure_etl_mb_per_core_s();
+    // in smoke mode (BENCH_SMOKE=1, CI's bench_summary) the wallclock
+    // ETL measurement is replaced by a pinned reference anchor so every
+    // metric recorded in BENCH_fleet.json is deterministic — the virtual
+    // fleet run is a pure function of the anchor, the recipe, and the
+    // seed, never of the CI runner's load
+    let mb_core = if smoke() {
+        const SMOKE_ANCHOR_MB_PER_CORE_S: f64 = 10.0;
+        section("smoke mode: pinned ETL anchor (no wallclock measurement)");
+        SMOKE_ANCHOR_MB_PER_CORE_S
+    } else {
+        section("real anchor: rust ETL pipeline (tokenize/filter/split)");
+        measure_etl_mb_per_core_s()
+    };
     println!("  single-core ETL throughput: {mb_core:.0} MB/s");
 
     let total_tb = 10.0;
@@ -99,6 +110,16 @@ experiments:
         );
         if nodes == 110 {
             assert!(eff > 60.0, "near-linear scaling at 110 nodes, got {eff:.0}%");
+            emit_json(
+                "tab_preprocess",
+                &[
+                    ("makespan_110_min", t / 60.0),
+                    ("scaling_efficiency_110_pct", eff),
+                    ("cost_110_usd", r.total_cost_usd),
+                    ("preemptions_110", r.preemptions as f64),
+                    ("reschedules_110", r.reschedules as f64),
+                ],
+            );
         }
     }
     println!("\n(paper: 110 instances x 96 cores chew 10 TB with spot instances enabled)");

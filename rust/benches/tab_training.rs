@@ -16,7 +16,7 @@ use hyper_dist::cluster::Master;
 use hyper_dist::metrics::CostLedger;
 use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
 use hyper_dist::storage::S3Profile;
-use hyper_dist::util::bench::{header, row, section};
+use hyper_dist::util::bench::{emit_json, header, row, section};
 
 const JOB_FLOPS: f64 = 5.0e18; // a YoloV3-on-COCO-sized training job
 
@@ -94,6 +94,16 @@ experiments:
     println!("  ratio {:.1}x (paper: 'usually 2 or 3 times cheaper')",
              od.total_cost_usd / sp.total_cost_usd);
     assert!(od.total_cost_usd / sp.total_cost_usd > 2.0);
+    emit_json(
+        "tab_training",
+        &[
+            ("v100_vs_k80_speedup_x", speedup),
+            ("v100_vs_k80_efficiency_x", efficiency),
+            ("stable_makespan_h", stable.makespan_s / 3600.0),
+            ("stable_cost_usd", stable.total_cost_usd),
+            ("od_over_spot_cost_x", od.total_cost_usd / sp.total_cost_usd),
+        ],
+    );
 
     // --- data-parallel communication model --------------------------------
     section("data-parallel scaling (ring allreduce vs S3 param server, 50 MB grads)");

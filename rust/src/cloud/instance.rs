@@ -11,8 +11,11 @@
 /// What kind of accelerator (if any) an instance carries.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DeviceKind {
+    /// No accelerator: compute runs on the vCPUs.
     Cpu,
+    /// NVIDIA K80 (the paper's slow §IV.B baseline).
     K80,
+    /// NVIDIA V100 (the paper's main training device).
     V100,
 }
 
@@ -36,10 +39,15 @@ pub enum InstanceType {
 /// Static description of an instance type.
 #[derive(Debug, Clone)]
 pub struct InstanceSpec {
+    /// The type this spec describes.
     pub ty: InstanceType,
+    /// AWS API name (e.g. `"p3.2xlarge"`), the recipe-facing identifier.
     pub name: &'static str,
+    /// Virtual CPU count.
     pub vcpus: u32,
+    /// Accelerator count (0 for CPU types).
     pub gpus: u32,
+    /// Accelerator family.
     pub device: DeviceKind,
     /// Peak f32 throughput of the full instance (FLOP/s). For GPU types
     /// this is the tensor-workload effective figure, not the marketing peak.
@@ -133,10 +141,12 @@ pub const CATALOG: &[InstanceSpec] = &[
 ];
 
 impl InstanceType {
+    /// This type's catalog entry.
     pub fn spec(self) -> &'static InstanceSpec {
         CATALOG.iter().find(|s| s.ty == self).expect("catalog covers all types")
     }
 
+    /// Look a type up by its AWS API name (`"m5.xlarge"`, ...).
     pub fn by_name(name: &str) -> Option<&'static InstanceSpec> {
         CATALOG.iter().find(|s| s.name == name)
     }

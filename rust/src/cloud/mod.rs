@@ -3,7 +3,11 @@
 //! This is the DESIGN.md §2 substitution for AWS EC2: real 2019 instance
 //! specs and prices drive a deterministic discrete-event model of
 //! provisioning delays and spot preemptions, so the paper's fleet-scale
-//! experiments (110× m5.24xlarge, 300× p3) run in virtual time.
+//! experiments (110× m5.24xlarge, 300× p3) run in virtual time. The
+//! [`crate::fleet::FleetEngine`] consumes these models on behalf of
+//! every virtual-time driver.
+
+#![warn(missing_docs)]
 
 pub mod instance;
 pub mod network;
@@ -13,4 +17,4 @@ pub mod spot;
 pub use instance::{DeviceKind, InstanceSpec, InstanceType, CATALOG};
 pub use network::NetworkModel;
 pub use provisioner::{NodeHandle, NodeState, Provisioner, ProvisionerConfig};
-pub use spot::{SpotMarket, SpotMarketConfig, StormEvent};
+pub use spot::{PriceTrace, SpotMarket, SpotMarketConfig, StormEvent, FAR_FUTURE_S};

@@ -13,24 +13,37 @@ use super::instance::InstanceType;
 /// Lifecycle of a simulated node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NodeState {
+    /// Launch requested; the VM has not started booting yet.
     Requested,
+    /// VM booting from the prebaked image.
     Booting,
+    /// Pulling the client container (fast when cached in the image).
     PullingContainer,
+    /// Mounting HFS and fetching the namespace manifest.
     MountingFs,
+    /// Provisioned and serving.
     Ready,
-    /// Received the 2-minute spot notice.
+    /// Received the 2-minute spot notice (or a voluntary drain): finishes
+    /// in-flight work, takes no more.
     Draining,
+    /// Terminated (killed or released); terminal.
     Terminated,
 }
 
 /// A provisioned (simulated) node.
 #[derive(Debug, Clone)]
 pub struct NodeHandle {
+    /// Unique id, assigned in launch order.
     pub id: u32,
+    /// Instance type the node runs on.
     pub ty: InstanceType,
+    /// Provisioned on the spot market (vs on-demand)?
     pub spot: bool,
+    /// Current lifecycle state.
     pub state: NodeState,
+    /// Virtual time provisioning completes (sampled at request).
     pub ready_at: SimTime,
+    /// Virtual time the launch was requested.
     pub launched_at: SimTime,
 }
 
@@ -103,6 +116,7 @@ pub struct Provisioner {
 }
 
 impl Provisioner {
+    /// A sampler over `cfg`'s stage latencies, deterministic per seed.
     pub fn new(cfg: ProvisionerConfig, seed: u64) -> Self {
         Self { cfg, rng: SimRng::new(seed ^ 0x9E0F_11ED), next_id: 0 }
     }

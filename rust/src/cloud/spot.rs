@@ -2,11 +2,26 @@
 //!
 //! "Spot instances … are usually 2 or 3 times cheaper but can be
 //! terminated anytime depending on the demand and the price per hour bid"
-//! (§III.D). We model preemption as a Poisson process per node with a
-//! configurable mean time-to-preemption, plus a two-minute notice (AWS
-//! gives 2 min; the scheduler may use it to checkpoint).
+//! (§III.D). Two interchangeable models produce the same `(notice, kill)`
+//! event pairs the fleet engine consumes:
+//!
+//! * **Poisson** ([`SpotMarket::new`]) — preemption as a Poisson process
+//!   per node with a configurable mean time-to-preemption, plus a
+//!   two-minute notice (AWS gives 2 min; schedulers use it to checkpoint).
+//! * **Price trace** ([`SpotMarket::from_price_trace`]) — replay a
+//!   recorded `(t, price)` series against a bid: the notice fires the
+//!   moment the market price rises above the bid, the kill lands
+//!   `notice_s` later, and new capacity only provisions once the price
+//!   falls back to (or below) the bid. Fully deterministic — a recorded
+//!   price storm becomes a reproducible experiment.
 
 use crate::sim::{SimRng, SimTime};
+use crate::{Error, Result};
+
+/// Virtual-time horizon standing in for "never" (about 31 years). Far
+/// beyond any simulated scenario, yet safely below `SimTime` overflow
+/// even after adding a notice window.
+pub const FAR_FUTURE_S: f64 = 1e9;
 
 /// Parameters of the preemption process.
 #[derive(Debug, Clone)]
@@ -27,12 +42,13 @@ impl Default for SpotMarketConfig {
 /// `notice_s`-second warning (0 = instant kill).
 ///
 /// Storms turn "a preemption storm happened" into a reproducible
-/// experiment: the serving sim ([`crate::serve::ServeSim`]) and the
-/// hyperparameter-search driver ([`crate::search::SearchDriver`]) both
-/// script their §III.D fault-injection scenarios as lists of these.
+/// experiment. All virtual-time drivers share one timing semantic,
+/// pinned by [`crate::fleet::FleetEngine`]: `at_s` is measured from
+/// **engine start** (the instant the event loop begins, virtual t=0) —
+/// never from first dispatch, node readiness, or load start.
 #[derive(Debug, Clone, Copy)]
 pub struct StormEvent {
-    /// Virtual time the wave lands, seconds.
+    /// Virtual time the wave lands, in seconds **since engine start**.
     pub at_s: f64,
     /// Nodes reclaimed by this wave.
     pub kills: usize,
@@ -40,35 +56,211 @@ pub struct StormEvent {
     pub notice_s: f64,
 }
 
-/// Deterministic, seedable generator of preemption times.
+/// A recorded spot-price series: piecewise-constant `(t_s, usd_per_hour)`
+/// points sorted by time. The price before the first point equals the
+/// first point's price.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PriceTrace {
+    points: Vec<(f64, f64)>,
+}
+
+impl PriceTrace {
+    /// Build a trace from `(t_seconds, price)` points (sorted internally).
+    /// Errors on an empty series or non-finite values.
+    pub fn new(mut points: Vec<(f64, f64)>) -> Result<Self> {
+        if points.is_empty() {
+            return Err(Error::Cloud("price trace has no points".into()));
+        }
+        for &(t, p) in &points {
+            if !t.is_finite() || !p.is_finite() || t < 0.0 || p < 0.0 {
+                return Err(Error::Cloud(format!(
+                    "price trace point ({t}, {p}) must be finite and non-negative"
+                )));
+            }
+        }
+        points.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite times"));
+        Ok(Self { points })
+    }
+
+    /// Parse a trace from text: one `t_seconds price` pair per line —
+    /// exactly two fields, whitespace- or comma-separated; blank lines
+    /// and `#` comments are ignored. Extra fields are an error (a
+    /// multi-column export fed here would otherwise silently simulate
+    /// against wrong prices).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut points = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut fields = line.split(|c: char| c == ',' || c.is_whitespace());
+            let mut next = || -> Result<f64> {
+                fields
+                    .by_ref()
+                    .find(|f| !f.is_empty())
+                    .ok_or_else(|| {
+                        Error::Cloud(format!("price trace line {}: missing field", lineno + 1))
+                    })?
+                    .parse()
+                    .map_err(|e| {
+                        Error::Cloud(format!("price trace line {}: {e}", lineno + 1))
+                    })
+            };
+            let t = next()?;
+            let p = next()?;
+            if let Some(extra) = fields.find(|f| !f.is_empty()) {
+                return Err(Error::Cloud(format!(
+                    "price trace line {}: unexpected extra field {extra:?} \
+                     (expected exactly `t_seconds price`)",
+                    lineno + 1
+                )));
+            }
+            points.push((t, p));
+        }
+        Self::new(points)
+    }
+
+    /// Load and [`PriceTrace::parse`] a trace file.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Number of points in the series.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Always `false` — construction rejects empty traces.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The price in effect at `t_s` (step function; the first point's
+    /// price extends backwards to t=0).
+    pub fn price_at(&self, t_s: f64) -> f64 {
+        let mut price = self.points[0].1;
+        for &(t, p) in &self.points {
+            if t <= t_s {
+                price = p;
+            } else {
+                break;
+            }
+        }
+        price
+    }
+
+    /// Earliest `t >= from_s` where the price is strictly above `bid`
+    /// (`None` if the price never rises above the bid again).
+    pub fn next_above(&self, bid: f64, from_s: f64) -> Option<f64> {
+        if self.price_at(from_s) > bid {
+            return Some(from_s);
+        }
+        self.points.iter().find(|&&(t, p)| t > from_s && p > bid).map(|&(t, _)| t)
+    }
+
+    /// Earliest `t >= from_s` where the price is at or below `bid`
+    /// (`None` if the price stays above the bid for the rest of the trace).
+    pub fn next_at_or_below(&self, bid: f64, from_s: f64) -> Option<f64> {
+        if self.price_at(from_s) <= bid {
+            return Some(from_s);
+        }
+        self.points.iter().find(|&&(t, p)| t > from_s && p <= bid).map(|&(t, _)| t)
+    }
+}
+
+/// How preemption times are generated.
+#[derive(Debug)]
+enum Process {
+    /// Exponential time-to-preemption per node.
+    Poisson(SimRng),
+    /// Deterministic replay of a recorded price against a bid.
+    Trace { trace: PriceTrace, bid_usd: f64 },
+}
+
+/// Deterministic generator of per-node preemption times (seedable Poisson
+/// process, or a replayed price trace).
 #[derive(Debug)]
 pub struct SpotMarket {
     cfg: SpotMarketConfig,
-    rng: SimRng,
+    process: Process,
 }
 
 impl SpotMarket {
+    /// Poisson preemption process with the given config and seed.
     pub fn new(cfg: SpotMarketConfig, seed: u64) -> Self {
-        Self { cfg, rng: SimRng::new(seed ^ 0x5907_A3C1) }
+        Self { cfg, process: Process::Poisson(SimRng::new(seed ^ 0x5907_A3C1)) }
     }
 
+    /// Price-trace-driven market: a node bidding `bid_usd` per hour is
+    /// noticed the moment the traced price rises above the bid and killed
+    /// `notice_s` later; replacement capacity becomes available again
+    /// when the price returns to (or below) the bid. No randomness.
+    pub fn from_price_trace(trace: PriceTrace, bid_usd: f64, notice_s: f64) -> Self {
+        Self {
+            cfg: SpotMarketConfig { mean_ttp_s: f64::INFINITY, notice_s: notice_s.max(0.0) },
+            process: Process::Trace { trace, bid_usd },
+        }
+    }
+
+    /// The market's timing parameters.
     pub fn config(&self) -> &SpotMarketConfig {
         &self.cfg
     }
 
-    /// Sample the time (after `now`) at which a node launched now will be
-    /// preempted. Returns `(notice_at, kill_at)`.
+    /// Sample the preemption of a node launched at `now`. Returns
+    /// `(notice_at, kill_at)` with `notice_at <= kill_at`; both land in
+    /// the far future ([`FAR_FUTURE_S`]) when the node is never reclaimed.
     pub fn sample_preemption(&mut self, now: SimTime) -> (SimTime, SimTime) {
-        let ttp = self.rng.gen_exp(self.cfg.mean_ttp_s);
-        let kill = now + SimTime::from_secs_f64(ttp.max(self.cfg.notice_s));
-        let notice = kill.saturating_sub(SimTime::from_secs_f64(self.cfg.notice_s));
-        (notice, kill)
+        match &mut self.process {
+            Process::Poisson(rng) => {
+                let ttp = rng.gen_exp(self.cfg.mean_ttp_s);
+                let kill = now + SimTime::from_secs_f64(ttp.max(self.cfg.notice_s));
+                let notice = kill.saturating_sub(SimTime::from_secs_f64(self.cfg.notice_s));
+                (notice, kill)
+            }
+            Process::Trace { trace, bid_usd } => {
+                match trace.next_above(*bid_usd, now.as_secs_f64()) {
+                    Some(cross) => {
+                        let notice = now.max(SimTime::from_secs_f64(cross));
+                        (notice, notice + SimTime::from_secs_f64(self.cfg.notice_s))
+                    }
+                    None => {
+                        let never = SimTime::from_secs_f64(FAR_FUTURE_S);
+                        (never, never + SimTime::from_secs_f64(self.cfg.notice_s))
+                    }
+                }
+            }
+        }
     }
 
-    /// Probability that a node survives `horizon_s` seconds (for capacity
-    /// planning in the scheduler: exp(-t/mean)).
+    /// Earliest time at or after `now` when new spot capacity can be
+    /// provisioned. Always `now` for the Poisson model; under a price
+    /// trace, provisioning waits until the price is at or below the bid
+    /// (far future if it never returns).
+    pub fn capacity_at(&self, now: SimTime) -> SimTime {
+        match &self.process {
+            Process::Poisson(_) => now,
+            Process::Trace { trace, bid_usd } => {
+                match trace.next_at_or_below(*bid_usd, now.as_secs_f64()) {
+                    Some(t) => now.max(SimTime::from_secs_f64(t)),
+                    None => SimTime::from_secs_f64(FAR_FUTURE_S),
+                }
+            }
+        }
+    }
+
+    /// Probability that a node launched at t=0 survives `horizon_s`
+    /// seconds. Poisson: `exp(-t/mean)`; price trace: exact (1 if the
+    /// price never exceeds the bid before the horizon, else 0).
     pub fn survival(&self, horizon_s: f64) -> f64 {
-        (-horizon_s / self.cfg.mean_ttp_s).exp()
+        match &self.process {
+            Process::Poisson(_) => (-horizon_s / self.cfg.mean_ttp_s).exp(),
+            Process::Trace { trace, bid_usd } => match trace.next_above(*bid_usd, 0.0) {
+                Some(t) if t < horizon_s => 0.0,
+                _ => 1.0,
+            },
+        }
     }
 }
 
@@ -111,5 +303,103 @@ mod tests {
         let mut a = SpotMarket::new(SpotMarketConfig::default(), 5);
         let mut b = SpotMarket::new(SpotMarketConfig::default(), 5);
         assert_eq!(a.sample_preemption(SimTime::ZERO), b.sample_preemption(SimTime::ZERO));
+    }
+
+    // ------------------------------------------------------ price traces
+
+    fn trace() -> PriceTrace {
+        // price: 0.07 until 100, spikes to 0.30 over [100, 300), back to
+        // 0.08 from 300
+        PriceTrace::new(vec![(0.0, 0.07), (100.0, 0.30), (300.0, 0.08)]).unwrap()
+    }
+
+    #[test]
+    fn trace_parsing_and_lookup() {
+        let t = PriceTrace::parse(
+            "# header comment\n0 0.07\n100, 0.30   # spike\n\n300 0.08\n",
+        )
+        .unwrap();
+        assert_eq!(t, trace());
+        assert_eq!(t.len(), 3);
+        assert!(!t.is_empty());
+        assert_eq!(t.price_at(0.0), 0.07);
+        assert_eq!(t.price_at(99.9), 0.07);
+        assert_eq!(t.price_at(100.0), 0.30);
+        assert_eq!(t.price_at(1e6), 0.08);
+        // the first price extends backwards
+        assert_eq!(t.price_at(-5.0), 0.07);
+    }
+
+    #[test]
+    fn trace_rejects_garbage() {
+        assert!(PriceTrace::parse("").is_err(), "empty trace");
+        assert!(PriceTrace::parse("1.0").is_err(), "missing price");
+        assert!(PriceTrace::parse("x y").is_err(), "non-numeric");
+        assert!(
+            PriceTrace::parse("360 0.115 0.131").is_err(),
+            "a third column means this is not a `t price` file"
+        );
+        assert!(PriceTrace::parse("0 0.07, extra").is_err(), "trailing junk");
+        assert!(PriceTrace::new(vec![(0.0, f64::NAN)]).is_err(), "non-finite");
+        assert!(PriceTrace::new(vec![(-1.0, 0.5)]).is_err(), "negative time");
+    }
+
+    #[test]
+    fn trace_crossings() {
+        let t = trace();
+        assert_eq!(t.next_above(0.10, 0.0), Some(100.0));
+        assert_eq!(t.next_above(0.10, 150.0), Some(150.0), "already above");
+        assert_eq!(t.next_above(0.10, 300.0), None, "never spikes again");
+        assert_eq!(t.next_at_or_below(0.10, 0.0), Some(0.0), "already below");
+        assert_eq!(t.next_at_or_below(0.10, 150.0), Some(300.0));
+        assert_eq!(t.next_at_or_below(0.01, 0.0), None, "price never that low");
+    }
+
+    #[test]
+    fn trace_market_notice_at_crossing_kill_after_notice() {
+        let mut m = SpotMarket::from_price_trace(trace(), 0.10, 5.0);
+        // node launched before the spike: noticed exactly at the crossing
+        let (notice, kill) = m.sample_preemption(SimTime::from_secs(10));
+        assert_eq!(notice, SimTime::from_secs(100));
+        assert_eq!(kill, SimTime::from_secs(105));
+        // node launched inside the spike: noticed immediately
+        let (notice, kill) = m.sample_preemption(SimTime::from_secs(200));
+        assert_eq!(notice, SimTime::from_secs(200));
+        assert_eq!(kill, SimTime::from_secs(205));
+        // node launched after the spike: never reclaimed (far future)
+        let (notice, _) = m.sample_preemption(SimTime::from_secs(400));
+        assert!(notice >= SimTime::from_secs_f64(FAR_FUTURE_S));
+    }
+
+    #[test]
+    fn trace_market_capacity_waits_out_the_spike() {
+        let m = SpotMarket::from_price_trace(trace(), 0.10, 5.0);
+        assert_eq!(m.capacity_at(SimTime::from_secs(10)), SimTime::from_secs(10));
+        assert_eq!(
+            m.capacity_at(SimTime::from_secs(150)),
+            SimTime::from_secs(300),
+            "mid-spike requests defer to the price recovery"
+        );
+        assert_eq!(m.capacity_at(SimTime::from_secs(400)), SimTime::from_secs(400));
+        // a bid below the whole trace never gets capacity
+        let never = SpotMarket::from_price_trace(trace(), 0.01, 5.0);
+        assert!(never.capacity_at(SimTime::ZERO) >= SimTime::from_secs_f64(FAR_FUTURE_S));
+    }
+
+    #[test]
+    fn trace_market_survival_is_exact() {
+        let m = SpotMarket::from_price_trace(trace(), 0.10, 5.0);
+        assert_eq!(m.survival(50.0), 1.0);
+        assert_eq!(m.survival(150.0), 0.0);
+    }
+
+    #[test]
+    fn shipped_example_trace_parses() {
+        // the in-repo example file stays loadable (CLI --price-trace)
+        let t = PriceTrace::parse(include_str!("../../data/spot_price_trace.csv")).unwrap();
+        assert!(t.len() >= 4);
+        // it crosses a 0.10 bid somewhere and recovers afterwards
+        let up = t.next_above(0.10, 0.0).expect("trace has a spike");
+        assert!(t.next_at_or_below(0.10, up).is_some(), "and a recovery");
     }
 }

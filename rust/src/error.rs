@@ -13,6 +13,8 @@ pub enum Error {
     Workflow(String),
     Scheduler(String),
     Cloud(String),
+    /// Shared fleet-engine errors (event budget, misuse).
+    Fleet(String),
     Runtime(String),
     /// Serving-layer errors; `Shed` is the admission-control rejection.
     Serve(String),
@@ -37,6 +39,7 @@ impl fmt::Display for Error {
             Error::Workflow(s) => write!(f, "workflow error: {s}"),
             Error::Scheduler(s) => write!(f, "scheduler error: {s}"),
             Error::Cloud(s) => write!(f, "cloud error: {s}"),
+            Error::Fleet(s) => write!(f, "fleet error: {s}"),
             Error::Runtime(s) => write!(f, "runtime error: {s}"),
             Error::Serve(s) => write!(f, "serve error: {s}"),
             Error::Shed => write!(f, "request shed: queue at admission limit"),

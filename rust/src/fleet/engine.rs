@@ -1,0 +1,800 @@
+//! [`FleetEngine`]: the virtual-time event loop + node lifecycle shared by
+//! every fleet workload.
+//!
+//! See the [module docs](crate::fleet) for the layer diagram and the
+//! time-origin / invariant contracts.
+
+use std::collections::BTreeMap;
+
+use crate::cloud::{InstanceType, NodeHandle, NodeState, PriceTrace, Provisioner,
+                   ProvisionerConfig, SpotMarket, SpotMarketConfig, StormEvent, FAR_FUTURE_S};
+use crate::metrics::CostLedger;
+use crate::sim::{EventQueue, SimTime};
+use crate::{Error, Result};
+
+/// Node identifier (same space as [`crate::cloud::NodeHandle::id`]).
+pub type NodeId = u32;
+
+/// Price-trace market configuration: replay a recorded price series
+/// against a bid (see [`SpotMarket::from_price_trace`]).
+#[derive(Debug, Clone)]
+pub struct PriceTraceConfig {
+    /// The recorded `(t_seconds, usd_per_hour)` series.
+    pub trace: PriceTrace,
+    /// The per-hour bid; a price strictly above it preempts spot nodes.
+    pub bid_usd: f64,
+    /// Warning between the price crossing and the hard kill, seconds.
+    pub notice_s: f64,
+}
+
+/// Fleet-level configuration shared by all virtual-time drivers.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Node provisioning model (boot time, jitter, warm-cache odds).
+    pub provisioner: ProvisionerConfig,
+    /// Background Poisson preemptions of spot nodes; `None` = scripted
+    /// storms (and/or a price trace) only.
+    pub spot_market: Option<SpotMarketConfig>,
+    /// Price-trace-driven preemption; takes precedence over
+    /// `spot_market` when set.
+    pub price_trace: Option<PriceTraceConfig>,
+    /// Scripted preemption waves, timed from **engine start** (see the
+    /// module docs' time-origin contract).
+    pub storm: Vec<StormEvent>,
+    /// Seed for the provisioner and the Poisson market.
+    pub seed: u64,
+    /// Event budget before the run aborts (livelock guard).
+    pub max_events: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            provisioner: ProvisionerConfig::default(),
+            spot_market: None,
+            price_trace: None,
+            storm: Vec::new(),
+            seed: 0,
+            max_events: 50_000_000,
+        }
+    }
+}
+
+/// One node-launch request.
+#[derive(Debug, Clone, Copy)]
+pub struct LaunchSpec {
+    /// Instance type to provision.
+    pub ty: InstanceType,
+    /// Spot (preemptible) vs on-demand.
+    pub spot: bool,
+    /// Workload-defined grouping (e.g. experiment index); 0 if unused.
+    pub tag: u32,
+    /// Skip provisioning latency: the node is ready the instant it is
+    /// launched (pre-provisioned fleets at t=0).
+    pub warm: bool,
+}
+
+impl LaunchSpec {
+    /// A cold launch with tag 0.
+    pub fn new(ty: InstanceType, spot: bool) -> Self {
+        Self { ty, spot, tag: 0, warm: false }
+    }
+
+    /// Same launch under a workload-defined tag.
+    pub fn tagged(mut self, tag: u32) -> Self {
+        self.tag = tag;
+        self
+    }
+
+    /// Mark the launch warm (ready immediately).
+    pub fn warm(mut self) -> Self {
+        self.warm = true;
+        self
+    }
+}
+
+/// Engine-side state of one provisioned node.
+#[derive(Debug)]
+pub struct FleetNode {
+    handle: NodeHandle,
+    tag: u32,
+    ready: bool,
+    dead: bool,
+    draining: bool,
+    epoch: u64,
+    busy_s: f64,
+    preempted: bool,
+    noticed_at: Option<SimTime>,
+    died_at: Option<SimTime>,
+}
+
+impl FleetNode {
+    /// Workload-defined grouping tag from the [`LaunchSpec`].
+    pub fn tag(&self) -> u32 {
+        self.tag
+    }
+
+    /// Provisioned on the spot market (vs on-demand)?
+    pub fn spot(&self) -> bool {
+        self.handle.spot
+    }
+
+    /// The instance type this node runs on.
+    pub fn instance(&self) -> InstanceType {
+        self.handle.ty
+    }
+
+    /// Finished provisioning (may since have drained or died)?
+    pub fn is_ready(&self) -> bool {
+        self.ready
+    }
+
+    /// Terminated (billed, takes no events)?
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Under a preemption notice or a voluntary drain (no new work)?
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Ready, alive, and accepting work.
+    pub fn is_serving(&self) -> bool {
+        self.ready && !self.dead && !self.draining
+    }
+
+    /// Virtual time the node was requested.
+    pub fn launched_at(&self) -> SimTime {
+        self.handle.launched_at
+    }
+
+    /// Seconds of work attributed via [`FleetEngine::add_busy`].
+    pub fn busy_s(&self) -> f64 {
+        self.busy_s
+    }
+}
+
+/// Aggregate counters the engine maintains across a run.
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    /// Nodes that received a preemption signal (notice or hard kill)
+    /// while alive — counted once per node; voluntary drains/releases
+    /// never count.
+    pub preemptions: u64,
+    /// Nodes provisioned over the run (including replacements).
+    pub nodes_launched: usize,
+    /// Peak concurrently-serving nodes.
+    pub max_live: usize,
+    /// Virtual time each configured storm actually fired, in firing
+    /// (time) order (the time-origin regression test pins these).
+    pub storms_fired_at_s: Vec<f64>,
+    /// Spot launches deferred because the traced price was above the bid.
+    pub launches_deferred: u64,
+    /// Spot launches dropped because the traced price never returns to
+    /// the bid — that capacity is gone for good, not merely late.
+    pub launches_abandoned: u64,
+}
+
+#[derive(Debug)]
+enum Ev {
+    Ready(NodeId),
+    Notice(NodeId),
+    Kill(NodeId),
+    Storm(usize),
+    Launch(LaunchSpec),
+    Work { node: NodeId, epoch: u64, token: u64 },
+    Timer { token: u64 },
+}
+
+/// Workload policy plugged into the engine. Hooks receive the engine to
+/// query nodes, dispatch work, and launch replacements; the engine has
+/// already performed the lifecycle transition (drain flag, epoch bump,
+/// billing) before each hook runs.
+pub trait FleetWorkload {
+    /// The loop is starting (virtual t=0, storms already scheduled):
+    /// launch the initial fleet and seed timers/arrivals.
+    fn on_start(&mut self, fleet: &mut FleetEngine) -> Result<()>;
+
+    /// Checked before each event is processed; returning `true` ends the
+    /// run *without* advancing time to `next_at` (drain-complete cutoffs).
+    fn should_stop(&mut self, fleet: &FleetEngine, next_at: SimTime) -> bool {
+        let _ = (fleet, next_at);
+        false
+    }
+
+    /// A node finished provisioning and can take work.
+    fn on_node_ready(&mut self, fleet: &mut FleetEngine, node: NodeId) -> Result<()>;
+
+    /// The node received a preemption notice and is now draining:
+    /// checkpoint / requeue its work at the front. Fires at most once per
+    /// node, and never after a voluntary drain.
+    fn on_notice(&mut self, fleet: &mut FleetEngine, node: NodeId) -> Result<()>;
+
+    /// The node was hard-killed (already billed; its epoch is bumped so
+    /// in-flight completions are stale): requeue lost work at the front,
+    /// optionally launch a replacement.
+    fn on_kill(&mut self, fleet: &mut FleetEngine, node: NodeId) -> Result<()>;
+
+    /// A completion scheduled with [`FleetEngine::schedule_work`] fired
+    /// on a still-alive node with a matching epoch.
+    fn on_work_done(&mut self, fleet: &mut FleetEngine, node: NodeId, token: u64) -> Result<()>;
+
+    /// A timer scheduled with [`FleetEngine::schedule_timer`] fired.
+    fn on_timer(&mut self, fleet: &mut FleetEngine, token: u64) -> Result<()> {
+        let _ = (fleet, token);
+        Ok(())
+    }
+
+    /// Checked after each event: all work terminal? Returning `true`
+    /// ends the run at the current virtual time.
+    fn is_done(&self, fleet: &FleetEngine) -> bool;
+}
+
+/// The shared virtual-time executor. Construct with [`FleetEngine::new`],
+/// drive one workload with [`FleetEngine::run`], then bill stragglers
+/// with [`FleetEngine::shutdown`] and read [`FleetEngine::stats`] /
+/// [`FleetEngine::ledger`].
+pub struct FleetEngine {
+    cfg: FleetConfig,
+    provisioner: Provisioner,
+    market: Option<SpotMarket>,
+    events: EventQueue<Ev>,
+    nodes: BTreeMap<NodeId, FleetNode>,
+    ledger: CostLedger,
+    stats: FleetStats,
+    now: SimTime,
+    processed: u64,
+    deferred: usize,
+    ran: bool,
+}
+
+impl FleetEngine {
+    /// Build an engine; the market comes from `price_trace` when set,
+    /// else from `spot_market` (else no background preemptions).
+    pub fn new(cfg: FleetConfig) -> Self {
+        let market = match &cfg.price_trace {
+            Some(pt) => {
+                Some(SpotMarket::from_price_trace(pt.trace.clone(), pt.bid_usd, pt.notice_s))
+            }
+            None => cfg.spot_market.clone().map(|m| SpotMarket::new(m, cfg.seed)),
+        };
+        Self {
+            provisioner: Provisioner::new(cfg.provisioner.clone(), cfg.seed),
+            market,
+            cfg,
+            events: EventQueue::new(),
+            nodes: BTreeMap::new(),
+            ledger: CostLedger::new(),
+            stats: FleetStats::default(),
+            now: SimTime::ZERO,
+            processed: 0,
+            deferred: 0,
+            ran: false,
+        }
+    }
+
+    // -------------------------------------------------------- event loop
+
+    /// Run `w` to completion (or deadlock / stop condition). Single-use.
+    pub fn run<W: FleetWorkload>(&mut self, w: &mut W) -> Result<()> {
+        if std::mem::replace(&mut self.ran, true) {
+            return Err(Error::Fleet("FleetEngine::run is single-use".into()));
+        }
+        // storms are timed from engine start — scheduled before the
+        // workload launches anything, so `at_s` can never be skewed by
+        // fleet bring-up
+        for i in 0..self.cfg.storm.len() {
+            let at = SimTime::from_secs_f64(self.cfg.storm[i].at_s);
+            self.events.push(at, Ev::Storm(i));
+        }
+        w.on_start(self)?;
+        while let Some((t, ev)) = self.events.pop() {
+            if w.should_stop(self, t) {
+                break;
+            }
+            self.now = t;
+            self.processed += 1;
+            if self.processed > self.cfg.max_events {
+                return Err(Error::Fleet("fleet event budget exceeded (livelock?)".into()));
+            }
+            match ev {
+                Ev::Ready(nid) => {
+                    if self.mark_ready(nid) {
+                        w.on_node_ready(self, nid)?;
+                    }
+                }
+                Ev::Notice(nid) => {
+                    if self.begin_notice(nid) {
+                        w.on_notice(self, nid)?;
+                    }
+                }
+                Ev::Kill(nid) => {
+                    if self.begin_kill(nid) {
+                        w.on_kill(self, nid)?;
+                    }
+                }
+                Ev::Storm(i) => {
+                    let storm = self.cfg.storm[i];
+                    self.stats.storms_fired_at_s.push(self.now.as_secs_f64());
+                    let victims: Vec<NodeId> = self
+                        .nodes
+                        .iter()
+                        .filter(|(_, n)| !n.dead && !n.draining)
+                        .map(|(id, _)| *id)
+                        .take(storm.kills)
+                        .collect();
+                    for nid in victims {
+                        if storm.notice_s <= 0.0 {
+                            if self.begin_kill(nid) {
+                                w.on_kill(self, nid)?;
+                            }
+                        } else {
+                            if self.begin_notice(nid) {
+                                w.on_notice(self, nid)?;
+                            }
+                            let kill_at = self.now + SimTime::from_secs_f64(storm.notice_s);
+                            self.events.push(kill_at, Ev::Kill(nid));
+                        }
+                    }
+                }
+                Ev::Launch(spec) => {
+                    // deferred capacity: the traced price recovered
+                    self.deferred -= 1;
+                    self.launch(spec);
+                }
+                Ev::Work { node, epoch, token } => {
+                    let live = self
+                        .nodes
+                        .get(&node)
+                        .map(|n| !n.dead && n.epoch == epoch)
+                        .unwrap_or(false);
+                    if live {
+                        w.on_work_done(self, node, token)?;
+                    }
+                }
+                Ev::Timer { token } => w.on_timer(self, token)?,
+            }
+            if w.is_done(self) {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------- workload-facing API
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Launch a node. Returns its id, or `None` when the launch was
+    /// deferred (spot launch while the traced price is above the bid —
+    /// it provisions automatically once the price recovers, surfacing
+    /// later as an `on_node_ready`) or abandoned (the traced price never
+    /// returns to the bid, so the capacity will never exist; scheduling
+    /// it would livelock replace-on-kill workloads).
+    pub fn launch(&mut self, spec: LaunchSpec) -> Option<NodeId> {
+        if spec.spot {
+            if let Some(m) = &self.market {
+                let at = m.capacity_at(self.now);
+                if at >= SimTime::from_secs_f64(FAR_FUTURE_S) {
+                    self.stats.launches_abandoned += 1;
+                    return None;
+                }
+                if at > self.now {
+                    self.stats.launches_deferred += 1;
+                    self.deferred += 1;
+                    self.events.push(at, Ev::Launch(spec));
+                    return None;
+                }
+            }
+        }
+        Some(self.provision(spec))
+    }
+
+    /// Schedule a work completion on `node` at absolute time `at`. The
+    /// completion is delivered to [`FleetWorkload::on_work_done`] only if
+    /// the node is still alive and has not been preempted since (epoch
+    /// captured now).
+    pub fn schedule_work(&mut self, node: NodeId, at: SimTime, token: u64) {
+        let epoch = self.nodes.get(&node).map(|n| n.epoch).unwrap_or(0);
+        self.events.push(at, Ev::Work { node, epoch, token });
+    }
+
+    /// Schedule a workload timer at absolute time `at` (arrivals, control
+    /// ticks, batch deadlines); fires unconditionally via
+    /// [`FleetWorkload::on_timer`].
+    pub fn schedule_timer(&mut self, at: SimTime, token: u64) {
+        self.events.push(at, Ev::Timer { token });
+    }
+
+    /// Bump the node's epoch: any in-flight work completion scheduled on
+    /// it goes stale (used by workloads whose notice-drain recalls the
+    /// running unit instead of letting it finish).
+    pub fn invalidate(&mut self, node: NodeId) {
+        if let Some(n) = self.nodes.get_mut(&node) {
+            n.epoch += 1;
+        }
+    }
+
+    /// Attribute `secs` of busy time to `node` (feeds
+    /// [`FleetEngine::utilization`]).
+    pub fn add_busy(&mut self, node: NodeId, secs: f64) {
+        if let Some(n) = self.nodes.get_mut(&node) {
+            n.busy_s += secs;
+        }
+    }
+
+    /// Voluntary drain (scale-down): the node takes no new work and is
+    /// *not* counted as preempted. Returns `false` if it was already
+    /// draining or dead.
+    pub fn drain(&mut self, node: NodeId) -> bool {
+        let Some(n) = self.nodes.get_mut(&node) else { return false };
+        if n.dead || n.draining {
+            return false;
+        }
+        n.draining = true;
+        n.handle.begin_drain();
+        true
+    }
+
+    /// Voluntary termination (fleet release, idle drain completion): bill
+    /// the node up to now and mark it dead. Idempotent; never counts as a
+    /// preemption.
+    pub fn release(&mut self, node: NodeId) {
+        let now = self.now;
+        self.bill_at(node, now);
+    }
+
+    /// Bill every still-alive node at `max(now, end)` and terminate it.
+    /// Returns how many nodes were still alive (drivers report this as
+    /// the final fleet size). Call once after [`FleetEngine::run`].
+    pub fn shutdown(&mut self, end: SimTime) -> usize {
+        let end = end.max(self.now);
+        let open: Vec<NodeId> =
+            self.nodes.iter().filter(|(_, n)| !n.dead).map(|(id, _)| *id).collect();
+        let count = open.len();
+        for nid in open {
+            self.bill_at(nid, end);
+        }
+        count
+    }
+
+    // ---------------------------------------------------------- queries
+
+    /// The node with this id, if it was ever provisioned.
+    pub fn node(&self, id: NodeId) -> Option<&FleetNode> {
+        self.nodes.get(&id)
+    }
+
+    /// Ids of nodes currently ready, alive, and accepting work, ascending.
+    /// Allocation-free — this is the dispatch hot path (called per
+    /// arrival/completion by the driver workloads).
+    pub fn serving_ids(&self) -> impl DoubleEndedIterator<Item = NodeId> + '_ {
+        self.nodes.iter().filter(|(_, n)| n.is_serving()).map(|(id, _)| *id)
+    }
+
+    /// Every node ever provisioned with its engine-side state, ascending
+    /// by id (allocation-free; dead nodes included).
+    pub fn nodes_iter(&self) -> impl Iterator<Item = (NodeId, &FleetNode)> {
+        self.nodes.iter().map(|(id, n)| (*id, n))
+    }
+
+    /// Nodes currently able to serve.
+    pub fn live_count(&self) -> usize {
+        self.nodes.values().filter(|n| n.is_serving()).count()
+    }
+
+    /// Nodes requested but not yet ready (and not drained/dead).
+    pub fn provisioning_count(&self) -> usize {
+        self.nodes.values().filter(|n| !n.ready && !n.dead && !n.draining).count()
+    }
+
+    /// Spot launches accepted but waiting out a traced price spike (they
+    /// will provision at the next at-or-below-bid crossing). Control
+    /// loops should treat these as capacity already in flight.
+    pub fn deferred_count(&self) -> usize {
+        self.deferred
+    }
+
+    /// `true` when the market can never provision spot capacity again —
+    /// a price trace that stays above the bid for the rest of its
+    /// series. Control loops should stop waiting for repairs.
+    pub fn capacity_gone(&self) -> bool {
+        match &self.market {
+            Some(m) => m.capacity_at(self.now) >= SimTime::from_secs_f64(FAR_FUTURE_S),
+            None => false,
+        }
+    }
+
+    /// The cost ledger (instance-hours billed so far).
+    pub fn ledger(&self) -> &CostLedger {
+        &self.ledger
+    }
+
+    /// The engine's aggregate counters.
+    pub fn stats(&self) -> &FleetStats {
+        &self.stats
+    }
+
+    /// Aggregate busy seconds / alive seconds across all nodes ever
+    /// provisioned (alive measured to each node's termination, or now).
+    pub fn utilization(&self) -> f64 {
+        let (alive, busy) = self.nodes.values().fold((0.0, 0.0), |(a, b), n| {
+            let end = n.died_at.unwrap_or(self.now).min(self.now);
+            (a + end.saturating_sub(n.handle.launched_at).as_secs_f64(), b + n.busy_s)
+        });
+        if alive > 0.0 {
+            busy / alive
+        } else {
+            0.0
+        }
+    }
+
+    /// Assert the engine's lifecycle invariants (used by the conservation
+    /// property test; cheap enough to call from workload hooks).
+    pub fn check_invariants(&self) {
+        let mut live = 0usize;
+        let mut dead = 0usize;
+        let mut draining = 0usize;
+        let mut provisioning = 0usize;
+        for (id, n) in &self.nodes {
+            if n.dead {
+                assert!(n.died_at.is_some(), "node {id} dead but never billed");
+                assert_eq!(n.handle.state, NodeState::Terminated, "node {id} dead ≠ terminated");
+                dead += 1;
+            } else if n.draining {
+                assert!(!n.handle.is_alive(), "node {id} draining but handle alive");
+                draining += 1;
+            } else if n.ready {
+                live += 1;
+            } else {
+                provisioning += 1;
+            }
+            if let (Some(nt), Some(dt)) = (n.noticed_at, n.died_at) {
+                assert!(nt <= dt, "node {id}: notice at {nt} after kill at {dt}");
+            }
+        }
+        // the four lifecycle classes partition the fleet — the live count
+        // can never go negative or double-count a node
+        assert_eq!(live + dead + draining + provisioning, self.nodes.len());
+        assert_eq!(live, self.live_count());
+        assert!(self.stats.preemptions as usize <= self.stats.nodes_launched);
+    }
+
+    // --------------------------------------------------------- internals
+
+    fn provision(&mut self, spec: LaunchSpec) -> NodeId {
+        let now = self.now;
+        let mut handle = self.provisioner.request(spec.ty, spec.spot, now);
+        let id = handle.id;
+        let ready_at = if spec.warm {
+            handle.mark_ready();
+            handle.ready_at = now;
+            now
+        } else {
+            handle.ready_at
+        };
+        self.events.push(ready_at, Ev::Ready(id));
+        if spec.spot {
+            if let Some(m) = self.market.as_mut() {
+                let (notice, kill) = m.sample_preemption(now);
+                self.events.push(notice, Ev::Notice(id));
+                self.events.push(kill, Ev::Kill(id));
+            }
+        }
+        self.nodes.insert(
+            id,
+            FleetNode {
+                handle,
+                tag: spec.tag,
+                ready: false,
+                dead: false,
+                draining: false,
+                epoch: 0,
+                busy_s: 0.0,
+                preempted: false,
+                noticed_at: None,
+                died_at: None,
+            },
+        );
+        self.stats.nodes_launched += 1;
+        id
+    }
+
+    /// Flip a node to ready; `false` (no hook) when it is gone, dead, or
+    /// draining — a node preempted while provisioning never serves.
+    fn mark_ready(&mut self, nid: NodeId) -> bool {
+        let Some(n) = self.nodes.get_mut(&nid) else { return false };
+        if n.dead || n.draining {
+            return false;
+        }
+        n.ready = true;
+        n.handle.mark_ready();
+        let live = self.live_count();
+        if live > self.stats.max_live {
+            self.stats.max_live = live;
+        }
+        true
+    }
+
+    /// Market/storm notice: drain the node and count the preemption.
+    /// `false` (no hook) when already draining or dead.
+    fn begin_notice(&mut self, nid: NodeId) -> bool {
+        let now = self.now;
+        let Some(n) = self.nodes.get_mut(&nid) else { return false };
+        if n.dead || n.draining {
+            return false;
+        }
+        n.draining = true;
+        n.handle.begin_drain();
+        n.noticed_at = Some(now);
+        if !n.preempted {
+            n.preempted = true;
+            self.stats.preemptions += 1;
+        }
+        true
+    }
+
+    /// Hard kill: bump the epoch (in-flight work goes stale), count the
+    /// preemption, bill, and mark dead. `false` (no hook) when already
+    /// dead.
+    fn begin_kill(&mut self, nid: NodeId) -> bool {
+        {
+            let Some(n) = self.nodes.get_mut(&nid) else { return false };
+            if n.dead {
+                return false;
+            }
+            n.epoch += 1;
+            if !n.preempted {
+                n.preempted = true;
+                self.stats.preemptions += 1;
+            }
+        }
+        let now = self.now;
+        self.bill_at(nid, now);
+        true
+    }
+
+    fn bill_at(&mut self, nid: NodeId, t: SimTime) {
+        let Some(n) = self.nodes.get_mut(&nid) else { return };
+        if n.dead {
+            return;
+        }
+        n.dead = true;
+        n.handle.terminate();
+        n.died_at = Some(t);
+        let spec = n.handle.ty.spec();
+        let hours = t.saturating_sub(n.handle.launched_at).as_secs_f64() / 3600.0;
+        self.ledger.charge(spec.name, n.handle.spot, spec.price(n.handle.spot), hours);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::PriceTrace;
+    use crate::fleet::UnitsWorkload as Units;
+
+    fn exact_provisioner() -> ProvisionerConfig {
+        ProvisionerConfig { warm_cache_prob: 1.0, jitter: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn on_demand_run_completes_and_bills() {
+        let mut engine = FleetEngine::new(FleetConfig {
+            provisioner: exact_provisioner(),
+            ..Default::default()
+        });
+        let mut w = Units::new(8, 10.0, 2, false);
+        engine.run(&mut w).unwrap();
+        let end = engine.now();
+        assert_eq!(engine.shutdown(end), 2, "both nodes still alive");
+        assert_eq!(w.completed, 8);
+        assert_eq!(w.dispatched, 8);
+        assert_eq!(w.requeued, 0);
+        // 8 units x 10 s over 2 nodes ready at 55: done at 95
+        assert_eq!(engine.now(), SimTime::from_secs(95));
+        assert_eq!(engine.stats().preemptions, 0);
+        assert_eq!(engine.stats().max_live, 2);
+        assert!(engine.ledger().total_usd() > 0.0);
+        assert!(engine.utilization() > 0.0);
+        engine.check_invariants();
+    }
+
+    #[test]
+    fn storm_time_origin_is_engine_start() {
+        // nodes only become ready at t=55; the storm still fires at its
+        // scripted absolute time, not relative to readiness or dispatch
+        let mut engine = FleetEngine::new(FleetConfig {
+            provisioner: exact_provisioner(),
+            storm: vec![StormEvent { at_s: 60.0, kills: 1, notice_s: 0.0 }],
+            ..Default::default()
+        });
+        let mut w = Units::new(4, 30.0, 2, true);
+        engine.run(&mut w).unwrap();
+        assert_eq!(engine.stats().storms_fired_at_s, vec![60.0]);
+        assert_eq!(engine.stats().preemptions, 1);
+        assert_eq!(w.completed, 4, "replacement absorbed the kill");
+        assert_eq!(w.requeued, 1, "the in-flight unit came back");
+        assert_eq!(w.dispatched, 4 + 1, "requeued unit re-dispatched");
+        engine.check_invariants();
+    }
+
+    #[test]
+    fn notice_precedes_kill_and_counts_once() {
+        let mut engine = FleetEngine::new(FleetConfig {
+            provisioner: exact_provisioner(),
+            storm: vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 5.0 }],
+            ..Default::default()
+        });
+        let mut w = Units::new(6, 30.0, 2, true);
+        engine.run(&mut w).unwrap();
+        // 2 notices + their 2 kills = 2 preempted nodes, counted once each
+        assert_eq!(engine.stats().preemptions, 2);
+        assert_eq!(w.completed, 6);
+        engine.check_invariants();
+    }
+
+    #[test]
+    fn price_trace_kills_at_crossing_and_defers_replacements() {
+        // price above a 0.10 bid over [100, 300): the fleet is noticed at
+        // exactly 100, killed at 105, and replacements wait until 300
+        let trace =
+            PriceTrace::new(vec![(0.0, 0.07), (100.0, 0.30), (300.0, 0.08)]).unwrap();
+        let mut engine = FleetEngine::new(FleetConfig {
+            provisioner: exact_provisioner(),
+            price_trace: Some(PriceTraceConfig { trace, bid_usd: 0.10, notice_s: 5.0 }),
+            ..Default::default()
+        });
+        let mut w = Units::new(6, 40.0, 2, true);
+        engine.run(&mut w).unwrap();
+        assert_eq!(w.completed, 6, "price storm delayed, never lost work");
+        assert_eq!(engine.stats().preemptions, 2, "both nodes hit the crossing");
+        assert!(engine.stats().launches_deferred >= 1, "mid-spike launches deferred");
+        // replacements provision from t=300 (ready 355), so the run ends
+        // well after the recovery
+        assert!(engine.now() > SimTime::from_secs(300), "{}", engine.now());
+        engine.check_invariants();
+    }
+
+    #[test]
+    fn never_recovering_price_abandons_replacements_instead_of_livelocking() {
+        // the price rises above the bid at t=100 and never comes back:
+        // the fleet is reclaimed, every replacement launch is dropped
+        // (not scheduled at the far-future sentinel), and the run ends
+        // cleanly — with conservation intact — instead of spinning
+        // kill → relaunch at a frozen virtual instant until the event
+        // budget aborts
+        let trace = PriceTrace::new(vec![(0.0, 0.07), (100.0, 9.0)]).unwrap();
+        let mut engine = FleetEngine::new(FleetConfig {
+            provisioner: exact_provisioner(),
+            price_trace: Some(PriceTraceConfig { trace, bid_usd: 0.10, notice_s: 0.0 }),
+            ..Default::default()
+        });
+        let mut w = Units::new(50, 40.0, 2, true);
+        engine.run(&mut w).unwrap();
+        engine.shutdown(engine.now());
+        assert!(w.completed < w.total, "capacity never returned: {}", w.completed);
+        assert!(engine.stats().launches_abandoned >= 2, "{:?}", engine.stats());
+        assert_eq!(engine.stats().launches_deferred, 0, "nothing waits forever");
+        assert_eq!(
+            w.dispatched,
+            w.completed as u64 + w.requeued,
+            "conservation holds even on an aborted fleet"
+        );
+        assert!(engine.capacity_gone(), "the market is gone for good");
+        engine.check_invariants();
+    }
+
+    #[test]
+    fn engine_is_single_use() {
+        let mut engine = FleetEngine::new(FleetConfig::default());
+        let mut w = Units::new(0, 1.0, 0, false);
+        // zero units: is_done is immediately true once the (empty) loop runs
+        engine.run(&mut w).unwrap();
+        assert!(matches!(engine.run(&mut w), Err(Error::Fleet(_))));
+    }
+}

@@ -1,0 +1,60 @@
+//! The shared fleet substrate: one virtual-time engine for every workload.
+//!
+//! The paper's core claim (§III) is **one** failure-tolerant scheduler
+//! running every workload — ETL, training, hyperparameter search,
+//! inference — on the same unstable spot fleet. This module is that
+//! consolidation: [`FleetEngine`] owns the discrete-event loop, the node
+//! lifecycle, preemption (background market, recorded price traces, and
+//! scripted storms), and per-node cost/utilization accounting, while a
+//! [`FleetWorkload`] implementation supplies only the workload-specific
+//! policy (what to dispatch, what to requeue, when it is finished).
+//!
+//! The three virtual-time drivers are each one `FleetWorkload`:
+//!
+//! | driver | workload unit | requeued at the front on preemption |
+//! |---|---|---|
+//! | [`crate::scheduler::SimDriver`] | DAG tasks | the preempted task (checkpointed progress banked) |
+//! | [`crate::serve::ServeSim`] | request batches | every in-flight request (admission timestamps intact) |
+//! | [`crate::search::SearchDriver`] | checkpointable trials | the paused trial (resumes from its last checkpoint) |
+//!
+//! Node lifecycle through the engine (states live on
+//! [`crate::cloud::NodeHandle`], events on the engine's queue):
+//!
+//! ```text
+//!  launch(spec) ── request ──► provisioning ── Ready ──► serving
+//!      │ (price above bid:                        │
+//!      │  deferred to the                notice / drain
+//!      │  next crossing)                          ▼
+//!      └──────────◄── replacement ◄── Kill ── draining
+//!                      (workload policy)  (billed, epoch bumped,
+//!                                          in-flight work stale)
+//! ```
+//!
+//! ## Time origin
+//!
+//! Virtual t=0 is **engine start** — the instant [`FleetEngine::run`]
+//! begins, before any node is requested or any work dispatched. Every
+//! absolute time in the engine's configuration uses this origin:
+//! [`StormEvent::at_s`](crate::cloud::StormEvent), price-trace
+//! timestamps, and load horizons. A storm scripted at `t=60 s` therefore
+//! fires at the same virtual instant in all three drivers (pinned by
+//! `tests/prop_fleet.rs`); the seed repos' divergent copies disagreed on
+//! this, which made cross-scenario fault injection incomparable.
+//!
+//! ## Invariants
+//!
+//! * A notice always precedes its kill ([`FleetEngine::check_invariants`]).
+//! * Draining and dead nodes never become ready and never receive work
+//!   completions (stale-epoch filtering).
+//! * Every node is billed exactly once, at its termination time.
+//! * Preemption is counted once per node, at the first signal (notice or
+//!   hard kill); voluntary drains and releases never count.
+
+#![warn(missing_docs)]
+
+pub mod engine;
+pub mod units;
+
+pub use engine::{FleetConfig, FleetEngine, FleetNode, FleetStats, FleetWorkload, LaunchSpec,
+                 NodeId, PriceTraceConfig};
+pub use units::UnitsWorkload;

@@ -1,0 +1,127 @@
+//! [`UnitsWorkload`]: the minimal reference [`FleetWorkload`].
+//!
+//! `total` fixed-length work units over a small homogeneous fleet,
+//! requeued at the front on preemption and replaced on kill — the
+//! smallest faithful model of the §III.D loop. It doubles as the shared
+//! test harness: the engine's unit tests and the conservation property
+//! suite (`tests/prop_fleet.rs`) both drive it, asserting
+//! [`FleetEngine::check_invariants`] inside every hook.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cloud::InstanceType;
+use crate::sim::SimTime;
+use crate::Result;
+
+use super::engine::{FleetEngine, FleetWorkload, LaunchSpec, NodeId};
+
+/// Generic unit-queue workload: `total` units of `unit_s` seconds each
+/// over `workers` nodes; preempted units requeue at the front; killed
+/// nodes are replaced while work remains.
+pub struct UnitsWorkload {
+    /// Units to complete.
+    pub total: usize,
+    /// Seconds of work per unit.
+    pub unit_s: f64,
+    /// Initial fleet size.
+    pub workers: usize,
+    /// Launch the fleet on the spot market (vs on-demand).
+    pub spot: bool,
+    /// Units not yet dispatched (preempted units return to the front).
+    pub queue: VecDeque<usize>,
+    /// Unit currently running on each node.
+    pub running: BTreeMap<NodeId, usize>,
+    /// Units that finished.
+    pub completed: usize,
+    /// Dispatch count (every dispatched unit completes or is requeued).
+    pub dispatched: u64,
+    /// Units recalled from preempted nodes.
+    pub requeued: u64,
+}
+
+impl UnitsWorkload {
+    /// `total` units of `unit_s` seconds over `workers` nodes.
+    pub fn new(total: usize, unit_s: f64, workers: usize, spot: bool) -> Self {
+        Self {
+            total,
+            unit_s,
+            workers,
+            spot,
+            queue: (0..total).collect(),
+            running: BTreeMap::new(),
+            completed: 0,
+            dispatched: 0,
+            requeued: 0,
+        }
+    }
+
+    fn dispatch(&mut self, fleet: &mut FleetEngine) {
+        while !self.queue.is_empty() {
+            let Some(nid) = fleet.serving_ids().find(|id| !self.running.contains_key(id))
+            else {
+                return;
+            };
+            let unit = self.queue.pop_front().expect("non-empty");
+            self.running.insert(nid, unit);
+            self.dispatched += 1;
+            fleet.add_busy(nid, self.unit_s);
+            let at = fleet.now() + SimTime::from_secs_f64(self.unit_s);
+            fleet.schedule_work(nid, at, unit as u64);
+        }
+    }
+
+    fn recall(&mut self, fleet: &mut FleetEngine, nid: NodeId) {
+        if let Some(unit) = self.running.remove(&nid) {
+            fleet.invalidate(nid);
+            self.requeued += 1;
+            self.queue.push_front(unit);
+        }
+    }
+}
+
+impl FleetWorkload for UnitsWorkload {
+    fn on_start(&mut self, fleet: &mut FleetEngine) -> Result<()> {
+        for _ in 0..self.workers {
+            fleet.launch(LaunchSpec::new(InstanceType::M5Xlarge, self.spot));
+        }
+        fleet.check_invariants();
+        Ok(())
+    }
+
+    fn on_node_ready(&mut self, fleet: &mut FleetEngine, _node: NodeId) -> Result<()> {
+        self.dispatch(fleet);
+        fleet.check_invariants();
+        Ok(())
+    }
+
+    fn on_notice(&mut self, fleet: &mut FleetEngine, node: NodeId) -> Result<()> {
+        self.recall(fleet, node);
+        self.dispatch(fleet);
+        fleet.check_invariants();
+        Ok(())
+    }
+
+    fn on_kill(&mut self, fleet: &mut FleetEngine, node: NodeId) -> Result<()> {
+        self.recall(fleet, node);
+        if self.completed < self.total {
+            fleet.launch(LaunchSpec::new(InstanceType::M5Xlarge, self.spot));
+        }
+        self.dispatch(fleet);
+        fleet.check_invariants();
+        Ok(())
+    }
+
+    fn on_work_done(&mut self, fleet: &mut FleetEngine, node: NodeId, token: u64) -> Result<()> {
+        if self.running.get(&node) == Some(&(token as usize)) {
+            self.running.remove(&node);
+            self.completed += 1;
+            self.dispatch(fleet);
+        }
+        fleet.check_invariants();
+        Ok(())
+    }
+
+    fn is_done(&self, _fleet: &FleetEngine) -> bool {
+        self.completed == self.total
+    }
+}

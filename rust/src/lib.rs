@@ -10,6 +10,7 @@ pub mod config;
 pub mod dataloader;
 pub mod error;
 pub mod etl;
+pub mod fleet;
 pub mod hfs;
 pub mod metrics;
 pub mod runtime;

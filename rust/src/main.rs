@@ -4,11 +4,13 @@
 //! ```text
 //! hyper submit <recipe.yaml> [--seed N]   # compile + simulate a workflow
 //! hyper search [recipe.yaml] [--seed N] [--algo A] [--storm-kills K]
-//!                                          # ASHA hyperparameter search
+//!              [--price-trace F] [--bid X]  # ASHA hyperparameter search
 //! hyper train [--preset P] [--steps N] [--lr X]   # real PJRT training
 //! hyper infer [--preset P] [--batches N]          # batch inference demo
 //! hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]
 //!                                          # dynamic-batching serving demo
+//! hyper serve --price-trace F [--bid X] [--rps R] [--duration S] [--replicas N]
+//!                            # virtual-time fleet scenario on a price trace
 //! hyper status                                    # artifacts + catalog
 //! ```
 
@@ -83,7 +85,7 @@ fn main() -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "hyper — distributed cloud processing for large-scale DL (reproduction)\n\n\
-         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n  hyper train [--preset P] [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper status"
+         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n               [--price-trace FILE] [--bid USD_PER_H]\n  hyper train [--preset P] [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper serve --price-trace FILE [--bid USD_PER_H] [--rps R] [--duration S]\n              [--replicas N] [--instance TYPE] [--seed N]\n  hyper status"
     );
 }
 
@@ -154,6 +156,7 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
     use hyper_dist::workflow::Recipe;
 
     let seed: u64 = args.get("seed", 0)?;
+    let price_trace = load_price_trace(args)?;
     let storm_at: f64 = args.get("storm-at", 120.0)?;
     let storm_kills: usize = args.get("storm-kills", 0)?;
     let storm_notice: f64 = args.get("storm-notice", 5.0)?;
@@ -182,6 +185,15 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
             kills: storm_kills,
             notice_s: storm_notice,
         });
+    }
+    if let Some(trace) = price_trace {
+        let bid = bid_for(args, &cfg.search.instance)?;
+        println!(
+            "price trace: {} points, bid ${bid:.3}/h, 120 s notice at each crossing",
+            trace.len()
+        );
+        cfg.price_trace =
+            Some(hyper_dist::fleet::PriceTraceConfig { trace, bid_usd: bid, notice_s: 120.0 });
     }
 
     let run = |cfg| -> anyhow::Result<SearchReport> {
@@ -292,12 +304,105 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse `--price-trace FILE` if given.
+fn load_price_trace(args: &Args) -> anyhow::Result<Option<hyper_dist::cloud::PriceTrace>> {
+    match args.flags.get("price-trace") {
+        None => Ok(None),
+        Some(path) => {
+            let trace = hyper_dist::cloud::PriceTrace::from_file(std::path::Path::new(path))
+                .with_context(|| format!("loading price trace {path}"))?;
+            Ok(Some(trace))
+        }
+    }
+}
+
+/// The per-hour bid: `--bid`, defaulting to 1.5x the instance's typical
+/// spot price (a common bidding strategy — comfortably above the calm
+/// market, reclaimed by real spikes).
+fn bid_for(args: &Args, instance: &str) -> anyhow::Result<f64> {
+    let spec = hyper_dist::cloud::InstanceType::by_name(instance)
+        .with_context(|| format!("unknown instance type {instance:?}"))?;
+    args.get("bid", 1.5 * spec.spot_usd_per_hour)
+}
+
+/// Virtual-time serving scenario on a recorded spot-price trace: the
+/// fleet is preempted at every above-bid crossing and replacement
+/// launches defer until the price recovers — yet no admitted request is
+/// ever dropped.
+fn cmd_serve_trace(args: &Args) -> anyhow::Result<()> {
+    use hyper_dist::fleet::PriceTraceConfig;
+    use hyper_dist::serve::{AutoscalerConfig, Load, ServeSim, ServeSimConfig};
+    use hyper_dist::sim::OpenLoop;
+
+    let trace = load_price_trace(args)?.expect("checked by cmd_serve");
+    let instance: String = args.get("instance", "m5.xlarge".to_string())?;
+    let bid = bid_for(args, &instance)?;
+    let rps: f64 = args.get("rps", 400.0)?;
+    let duration: f64 = args.get("duration", 1500.0)?;
+    let replicas: usize = args.get("replicas", 4)?;
+    let seed: u64 = args.get("seed", 0)?;
+    let ty = hyper_dist::cloud::InstanceType::by_name(&instance)
+        .with_context(|| format!("unknown instance type {instance:?}"))?
+        .ty;
+
+    println!(
+        "serve on a price trace: {} points, bid ${bid:.3}/h, {replicas} {instance} spot \
+         replicas, {rps:.0} req/s for {duration:.0}s",
+        trace.len()
+    );
+    let cfg = ServeSimConfig {
+        instance: ty,
+        spot_replicas: true,
+        initial_replicas: replicas,
+        warm_start: true,
+        autoscaler: AutoscalerConfig {
+            min_replicas: replicas.min(2),
+            ..AutoscalerConfig::default()
+        },
+        price_trace: Some(PriceTraceConfig { trace, bid_usd: bid, notice_s: 120.0 }),
+        seed,
+        ..ServeSimConfig::default()
+    };
+    let mut sim = ServeSim::new(cfg);
+    let r = sim.run(Load::Open(OpenLoop::poisson(rps)), duration)?;
+    let fs = sim.fleet_stats();
+    println!(
+        "offered {}  admitted {}  completed {}  shed {}  requeued {}",
+        r.offered, r.admitted, r.completed, r.shed, r.requeued
+    );
+    println!(
+        "preemptions {}  launches deferred past spikes {}  replicas launched {}  \
+         final live {}",
+        r.preemptions, fs.launches_deferred, r.replicas_launched, r.final_live
+    );
+    println!(
+        "p50 {:.1} ms  p99 {:.1} ms  max {:.2} s  cost ${:.2}  makespan {:.0}s",
+        r.latency.p50 * 1e3,
+        r.latency.p99 * 1e3,
+        r.latency.max,
+        r.cost_usd,
+        r.makespan_s
+    );
+    if r.completed == r.admitted {
+        println!("zero admitted requests dropped through every price crossing");
+    } else {
+        println!("WARNING: {} admitted requests unanswered", r.admitted - r.completed);
+    }
+    Ok(())
+}
+
 /// Serving demo: the threaded ServeStack under closed-loop clients, with
 /// dynamic batching on vs. off at equal worker count. Uses a real PJRT
 /// replica when artifacts are present, the synthetic cost model otherwise.
+/// With `--price-trace` it instead runs the virtual-time fleet scenario
+/// ([`cmd_serve_trace`]).
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use hyper_dist::serve::{BatchBackend, PjrtBackend, ServeStack, ServerConfig,
                             SyntheticBackend};
+
+    if args.flags.contains_key("price-trace") {
+        return cmd_serve_trace(args);
+    }
 
     let requests: usize = args.get("requests", 2000)?;
     let workers: usize = args.get("workers", 2)?;

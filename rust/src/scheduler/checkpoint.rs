@@ -14,10 +14,13 @@ use crate::{Error, Result};
 /// Metadata of one saved checkpoint.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainCheckpoint {
+    /// The task this checkpoint belongs to.
     pub task: TaskId,
+    /// Training step the state was captured at.
     pub step: u64,
     /// Object key holding the serialized state blob.
     pub blob_key: String,
+    /// Loss observed at `step`.
     pub loss: f32,
 }
 
@@ -55,6 +58,8 @@ pub struct CheckpointStore {
 }
 
 impl CheckpointStore {
+    /// A checkpoint namespace under `prefix/ckpt/…` with unbounded blob
+    /// retention.
     pub fn new(store: StoreHandle, prefix: &str) -> Self {
         Self { store, prefix: prefix.to_string(), keep_last: None }
     }

@@ -4,13 +4,16 @@
 //! task/node bookkeeping — independently testable, proptest-able — and
 //! drivers that feed it events:
 //!
-//! * [`SimDriver`] — virtual-time fleet execution with provisioning,
-//!   spot preemptions and HFS input accounting (powers the §IV benches).
+//! * [`SimDriver`] — the DAG-task workload on the shared
+//!   [`crate::fleet::FleetEngine`]: provisioning, spot preemptions and
+//!   HFS input accounting (powers the §IV benches).
 //! * The real executor in [`crate::cluster::node`] for local tasks.
 //!
 //! §III.D: "When a node fails, the task with exact command arguments gets
 //! rescheduled on a different node … training can be continued [from the
 //! last checkpoint] without any additional code modifications."
+
+#![warn(missing_docs)]
 
 pub mod checkpoint;
 pub mod sim_driver;

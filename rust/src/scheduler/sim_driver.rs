@@ -1,20 +1,24 @@
-//! Virtual-time workflow execution over a simulated cloud fleet.
+//! Virtual-time workflow execution over the shared simulated fleet.
 //!
-//! Drives [`SchedulerState`] with events from the provisioner and the spot
-//! market; models per-task duration as `max(compute, pipelined-IO)` — the
-//! asynchronous-loader overlap of Figs 3–4 — and reproduces the §III.D
-//! fault story: preemption notice → checkpoint/drain → requeue →
+//! [`SimDriver`] is the DAG-task [`FleetWorkload`]: the
+//! [`crate::fleet::FleetEngine`] owns the event loop, node lifecycle,
+//! storms/market/price-trace preemption and cost accounting, while this
+//! driver supplies the workload policy — [`SchedulerState`] bookkeeping
+//! per experiment, per-task duration as `max(compute, pipelined-IO)`
+//! (the asynchronous-loader overlap of Figs 3–4), and the §III.D fault
+//! story: preemption notice → checkpoint/drain → requeue-at-front →
 //! replacement node.
 
 use std::collections::BTreeMap;
 
-use crate::cloud::{InstanceType, NodeHandle, Provisioner, ProvisionerConfig, SpotMarket,
-                   SpotMarketConfig};
+use crate::cloud::{InstanceType, SpotMarketConfig, StormEvent};
+use crate::fleet::{FleetConfig, FleetEngine, FleetStats, FleetWorkload, LaunchSpec,
+                   PriceTraceConfig};
 use crate::metrics::CostLedger;
-use crate::sim::{EventQueue, SimTime};
+use crate::sim::SimTime;
 use crate::storage::S3Profile;
-use crate::workflow::{TaskId, Workflow};
-use crate::{Error, Result};
+use crate::workflow::{Task, TaskId, Workflow};
+use crate::Result;
 
 use super::state::{NodeId, SchedulerState};
 
@@ -24,8 +28,15 @@ pub struct SimDriverConfig {
     /// Parallel task slots per node (ETL nodes run one task per core
     /// group; GPU nodes one per GPU).
     pub slots_per_node: u32,
-    pub provisioner: ProvisionerConfig,
+    /// Node provisioning model (boot time, jitter, warm-cache odds).
+    pub provisioner: crate::cloud::ProvisionerConfig,
+    /// Background Poisson preemption process for spot nodes.
     pub spot_market: SpotMarketConfig,
+    /// Price-trace-driven preemption; overrides `spot_market` when set.
+    pub price_trace: Option<PriceTraceConfig>,
+    /// Scripted preemption waves (timed from engine start; see
+    /// [`crate::fleet`]).
+    pub storm: Vec<StormEvent>,
     /// S3 model for task input streaming.
     pub s3: S3Profile,
     /// Training checkpoint cadence; on a hard kill, work since the last
@@ -36,6 +47,7 @@ pub struct SimDriverConfig {
     /// Record every task-to-node assignment into
     /// [`SimDriver::assignments`] (tests pin the §III.D story with it).
     pub record_assignments: bool,
+    /// Seed for the provisioner and spot-market models.
     pub seed: u64,
 }
 
@@ -43,8 +55,10 @@ impl Default for SimDriverConfig {
     fn default() -> Self {
         Self {
             slots_per_node: 1,
-            provisioner: ProvisionerConfig::default(),
+            provisioner: crate::cloud::ProvisionerConfig::default(),
             spot_market: SpotMarketConfig::default(),
+            price_trace: None,
+            storm: Vec::new(),
             s3: S3Profile::default(),
             checkpoint_interval_s: Some(300.0),
             replace_preempted: true,
@@ -61,7 +75,9 @@ impl Default for SimDriverConfig {
 /// the checkpointed progress forward.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AssignmentRecord {
+    /// The assigned task.
     pub task: TaskId,
+    /// The node it landed on.
     pub node: NodeId,
     /// Attempt number at assignment (1 = first run).
     pub attempt: u32,
@@ -76,33 +92,24 @@ pub struct AssignmentRecord {
 /// Outcome of one simulated workflow run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
+    /// Virtual time until the last processed event, seconds.
     pub makespan_s: f64,
+    /// Instance-hours billed, USD.
     pub total_cost_usd: f64,
+    /// Tasks that completed.
     pub tasks_succeeded: usize,
+    /// Tasks that exhausted their retry budget.
     pub tasks_failed: usize,
+    /// Nodes that received a preemption signal while alive.
     pub preemptions: u64,
+    /// Task reschedules caused by node failures.
     pub reschedules: u64,
+    /// Nodes provisioned over the run (including replacements).
     pub nodes_launched: usize,
     /// Aggregate node-busy seconds / node-alive seconds.
     pub utilization: f64,
+    /// Every experiment reached completion.
     pub workflow_complete: bool,
-}
-
-#[derive(Debug)]
-enum Event {
-    NodeReady(NodeId),
-    /// (task, node, attempt-at-assign) — stale if the attempt moved on.
-    TaskDone(TaskId, NodeId, u32),
-    SpotNotice(NodeId),
-    NodeKill(NodeId),
-}
-
-struct NodeMeta {
-    handle: NodeHandle,
-    experiment: usize,
-    kill_at: Option<SimTime>,
-    busy_s: f64,
-    dead: bool,
 }
 
 struct ExpRun {
@@ -115,44 +122,102 @@ struct ExpRun {
 /// The virtual-time executor.
 pub struct SimDriver {
     cfg: SimDriverConfig,
-    provisioner: Provisioner,
-    spot: SpotMarket,
-    events: EventQueue<Event>,
-    nodes: BTreeMap<NodeId, NodeMeta>,
+    /// Instance-hours billed by the last run.
+    pub ledger: CostLedger,
+    /// Assignment log (empty unless `record_assignments` is configured).
+    pub assignments: Vec<AssignmentRecord>,
+    stats: FleetStats,
+}
+
+impl SimDriver {
+    /// Build a driver; call [`SimDriver::run`] with a compiled workflow.
+    pub fn new(cfg: SimDriverConfig) -> Self {
+        Self {
+            cfg,
+            ledger: CostLedger::new(),
+            assignments: Vec::new(),
+            stats: FleetStats::default(),
+        }
+    }
+
+    /// Fleet-level counters of the last run (preemptions, storm firing
+    /// times, deferred launches).
+    pub fn fleet_stats(&self) -> &FleetStats {
+        &self.stats
+    }
+
+    /// Run a workflow to completion (or deadlock) and report.
+    pub fn run(&mut self, wf: &mut Workflow) -> Result<RunReport> {
+        let mut engine = FleetEngine::new(FleetConfig {
+            provisioner: self.cfg.provisioner.clone(),
+            spot_market: Some(self.cfg.spot_market.clone()),
+            price_trace: self.cfg.price_trace.clone(),
+            storm: self.cfg.storm.clone(),
+            seed: self.cfg.seed,
+            ..FleetConfig::default()
+        });
+        let runs: Vec<ExpRun> = (0..wf.n_experiments())
+            .map(|ei| ExpRun {
+                state: SchedulerState::new(),
+                done: 0,
+                total: wf.tasks[ei].len(),
+                finished: wf.tasks[ei].is_empty(),
+            })
+            .collect();
+        let mut w = DagWorkload {
+            cfg: &self.cfg,
+            wf,
+            runs,
+            progress: BTreeMap::new(),
+            started: BTreeMap::new(),
+            assignments: Vec::new(),
+            tokens: Vec::new(),
+        };
+        engine.run(&mut w)?;
+        let end = engine.now();
+        engine.shutdown(end);
+
+        let succeeded: usize = w.runs.iter().map(|r| r.state.succeeded.len()).sum();
+        let failed: usize = w.runs.iter().map(|r| r.state.failed.len()).sum();
+        let reschedules = w.runs.iter().map(|r| r.state.reschedules).sum();
+        self.assignments = std::mem::take(&mut w.assignments);
+        let complete = w.wf.is_complete();
+        self.ledger = engine.ledger().clone();
+        self.stats = engine.stats().clone();
+        Ok(RunReport {
+            makespan_s: engine.now().as_secs_f64(),
+            total_cost_usd: self.ledger.total_usd(),
+            tasks_succeeded: succeeded,
+            tasks_failed: failed,
+            preemptions: self.stats.preemptions,
+            reschedules,
+            nodes_launched: self.stats.nodes_launched,
+            utilization: engine.utilization(),
+            workflow_complete: complete,
+        })
+    }
+}
+
+/// The DAG-task workload behind [`SimDriver`].
+struct DagWorkload<'a> {
+    cfg: &'a SimDriverConfig,
+    wf: &'a mut Workflow,
+    runs: Vec<ExpRun>,
     /// per-task work already completed and checkpointed (seconds)
     progress: BTreeMap<TaskId, f64>,
     /// start time of the current attempt
     started: BTreeMap<TaskId, SimTime>,
-    pub ledger: CostLedger,
-    /// Assignment log (empty unless `record_assignments` is configured).
-    pub assignments: Vec<AssignmentRecord>,
-    preemptions: u64,
-    nodes_launched: usize,
+    assignments: Vec<AssignmentRecord>,
+    /// Work-token registry: token = index into this list.
+    tokens: Vec<(TaskId, u32)>,
 }
 
-impl SimDriver {
-    pub fn new(cfg: SimDriverConfig) -> Self {
-        let seed = cfg.seed;
-        Self {
-            provisioner: Provisioner::new(cfg.provisioner.clone(), seed),
-            spot: SpotMarket::new(cfg.spot_market.clone(), seed),
-            cfg,
-            events: EventQueue::new(),
-            nodes: BTreeMap::new(),
-            progress: BTreeMap::new(),
-            started: BTreeMap::new(),
-            ledger: CostLedger::new(),
-            assignments: Vec::new(),
-            preemptions: 0,
-            nodes_launched: 0,
-        }
-    }
-
+impl DagWorkload<'_> {
     /// Total work time of a task on an instance: max of compute and
     /// pipelined input streaming (asynchronous loader overlap), plus one
     /// first-byte latency for the initial fetch that cannot be hidden.
-    fn task_work_s(&self, wf: &Workflow, id: TaskId, ty: InstanceType) -> f64 {
-        let task = wf.task(id);
+    fn task_work_s(&self, id: TaskId, ty: InstanceType) -> f64 {
+        let task = self.wf.task(id);
         let compute = task
             .duration_s
             .or_else(|| task.flops.map(|f| f / ty.spec().flops))
@@ -164,206 +229,35 @@ impl SimDriver {
         compute.max(io) + if io > 0.0 { self.cfg.s3.first_byte_latency_s } else { 0.0 }
     }
 
-    fn launch_node(&mut self, experiment: usize, ty: InstanceType, spot: bool, now: SimTime) {
-        let handle = self.provisioner.request(ty, spot, now);
-        let id = handle.id;
-        self.events.push(handle.ready_at, Event::NodeReady(id));
-        let mut kill_at = None;
-        if spot {
-            let (notice, kill) = self.spot.sample_preemption(now);
-            self.events.push(notice, Event::SpotNotice(id));
-            self.events.push(kill, Event::NodeKill(id));
-            kill_at = Some(kill);
-        }
-        self.nodes.insert(
-            id,
-            NodeMeta { handle, experiment, kill_at, busy_s: 0.0, dead: false },
-        );
-        self.nodes_launched += 1;
-    }
-
-    /// Run a workflow to completion (or deadlock) and report.
-    pub fn run(&mut self, wf: &mut Workflow) -> Result<RunReport> {
-        let mut runs: Vec<ExpRun> = (0..wf.n_experiments())
-            .map(|ei| ExpRun {
-                state: SchedulerState::new(),
-                done: 0,
-                total: wf.tasks[ei].len(),
-                finished: wf.tasks[ei].is_empty(),
-            })
-            .collect();
-
-        let mut now = SimTime::ZERO;
-        // provision fleets for initially-runnable experiments
-        for ei in wf.runnable() {
-            self.start_experiment(wf, &mut runs[ei], ei, now)?;
-        }
-
-        let max_events = 50_000_000u64;
-        let mut processed = 0u64;
-        while let Some((t, ev)) = self.events.pop() {
-            // stop at completion: later events are only the spot market
-            // reclaiming already-released nodes
-            if runs.iter().all(|r| r.finished) {
-                break;
-            }
-            now = t;
-            processed += 1;
-            if processed > max_events {
-                return Err(Error::Scheduler("event budget exceeded (livelock?)".into()));
-            }
-            match ev {
-                Event::NodeReady(nid) => {
-                    let Some(meta) = self.nodes.get(&nid) else { continue };
-                    if meta.dead {
-                        continue;
-                    }
-                    let ei = meta.experiment;
-                    if runs[ei].finished {
-                        self.terminate_node(nid, now);
-                        continue;
-                    }
-                    runs[ei].state.add_node(nid, self.cfg.slots_per_node);
-                    self.dispatch(wf, &mut runs[ei], ei, now);
-                }
-                Event::TaskDone(tid, nid, attempt) => {
-                    let ei = tid.experiment as usize;
-                    let run = &mut runs[ei];
-                    // stale if the task moved (preempted) since assignment
-                    let live = run.state.node_of(tid) == Some(nid)
-                        && run.state.task(tid).map(|t| t.attempts) == Some(attempt);
-                    if !live {
-                        continue;
-                    }
-                    self.started.remove(&tid);
-                    run.state.on_task_success(tid);
-                    run.done += 1;
-                    if run.done == run.total {
-                        self.finish_experiment(wf, &mut runs, ei, now)?;
-                    } else {
-                        self.dispatch(wf, &mut runs[ei], ei, now);
-                    }
-                    self.maybe_fail_experiment(wf, &mut runs, ei, now);
-                }
-                Event::SpotNotice(nid) => {
-                    let Some(meta) = self.nodes.get(&nid) else { continue };
-                    if meta.dead {
-                        continue;
-                    }
-                    let ei = meta.experiment;
-                    // graceful drain: checkpoint progress of running tasks
-                    let drained: Vec<TaskId> = runs[ei].state.drain_node(nid);
-                    for tid in drained {
-                        if let Some(start) = self.started.remove(&tid) {
-                            let done = now.saturating_sub(start).as_secs_f64();
-                            *self.progress.entry(tid).or_insert(0.0) += done;
-                        }
-                    }
-                    // requeued tasks may start on other nodes immediately
-                    self.dispatch(wf, &mut runs[ei], ei, now);
-                }
-                Event::NodeKill(nid) => {
-                    let Some(meta) = self.nodes.get(&nid) else { continue };
-                    if meta.dead {
-                        continue;
-                    }
-                    let ei = meta.experiment;
-                    self.preemptions += 1;
-                    // anything still running dies; keep checkpointed part
-                    let lost: Vec<TaskId> = runs[ei].state.remove_node(nid);
-                    for tid in &lost {
-                        if let Some(start) = self.started.remove(tid) {
-                            let ran = now.saturating_sub(start).as_secs_f64();
-                            let kept = match self.cfg.checkpoint_interval_s {
-                                Some(int) => (ran / int).floor() * int,
-                                None => 0.0,
-                            };
-                            *self.progress.entry(*tid).or_insert(0.0) += kept;
-                        }
-                    }
-                    let spot = {
-                        let meta = self.nodes.get(&nid).expect("checked above");
-                        meta.handle.spot
-                    };
-                    self.terminate_node(nid, now);
-                    self.maybe_fail_experiment(wf, &mut runs, ei, now);
-                    let achievable = runs[ei].done + runs[ei].state.failed.len() < runs[ei].total;
-                    if self.cfg.replace_preempted && !runs[ei].finished && achievable {
-                        let ty = wf.recipe.experiments[ei].instance_type()?;
-                        self.launch_node(ei, ty, spot, now);
-                    }
-                    self.dispatch(wf, &mut runs[ei], ei, now);
-                }
-            }
-        }
-
-        // final cost: bill any still-alive nodes to `now`
-        let alive: Vec<NodeId> =
-            self.nodes.iter().filter(|(_, m)| !m.dead).map(|(id, _)| *id).collect();
-        for nid in alive {
-            self.terminate_node(nid, now);
-        }
-
-        let (alive_s, busy_s) = self
-            .nodes
-            .values()
-            .fold((0.0, 0.0), |(a, b), m| (a + self.node_alive_s(m, now), b + m.busy_s));
-        let succeeded: usize = runs.iter().map(|r| r.state.succeeded.len()).sum();
-        let failed: usize = runs.iter().map(|r| r.state.failed.len()).sum();
-        Ok(RunReport {
-            makespan_s: now.as_secs_f64(),
-            total_cost_usd: self.ledger.total_usd(),
-            tasks_succeeded: succeeded,
-            tasks_failed: failed,
-            preemptions: self.preemptions,
-            reschedules: runs.iter().map(|r| r.state.reschedules).sum(),
-            nodes_launched: self.nodes_launched,
-            utilization: if alive_s > 0.0 { busy_s / alive_s } else { 0.0 },
-            workflow_complete: wf.is_complete(),
-        })
-    }
-
-    fn node_alive_s(&self, m: &NodeMeta, now: SimTime) -> f64 {
-        let end = m.kill_at.filter(|_| m.dead).unwrap_or(now).min(now);
-        end.saturating_sub(m.handle.launched_at).as_secs_f64()
-    }
-
-    fn start_experiment(
-        &mut self,
-        wf: &Workflow,
-        run: &mut ExpRun,
-        ei: usize,
-        now: SimTime,
-    ) -> Result<()> {
-        let spec = &wf.recipe.experiments[ei];
+    fn start_experiment(&mut self, fleet: &mut FleetEngine, ei: usize) -> Result<()> {
+        let spec = &self.wf.recipe.experiments[ei];
         let ty = spec.instance_type()?;
-        run.state.enqueue(wf.tasks[ei].iter().cloned());
-        for _ in 0..spec.workers {
-            self.launch_node(ei, ty, spec.spot, now);
+        let workers = spec.workers;
+        let spot = spec.spot;
+        let tasks: Vec<Task> = self.wf.tasks[ei].to_vec();
+        self.runs[ei].state.enqueue(tasks);
+        for _ in 0..workers {
+            fleet.launch(LaunchSpec::new(ty, spot).tagged(ei as u32));
         }
         Ok(())
     }
 
-    fn finish_experiment(
-        &mut self,
-        wf: &mut Workflow,
-        runs: &mut [ExpRun],
-        ei: usize,
-        now: SimTime,
-    ) -> Result<()> {
-        runs[ei].finished = true;
-        // release the fleet
-        let fleet: Vec<NodeId> = self
-            .nodes
-            .iter()
-            .filter(|(_, m)| m.experiment == ei && !m.dead)
-            .map(|(id, _)| *id)
+    fn release_fleet(&self, fleet: &mut FleetEngine, ei: usize) {
+        let mine: Vec<NodeId> = fleet
+            .nodes_iter()
+            .filter(|(_, n)| n.tag() as usize == ei && !n.is_dead())
+            .map(|(id, _)| id)
             .collect();
-        for nid in fleet {
-            self.terminate_node(nid, now);
+        for nid in mine {
+            fleet.release(nid);
         }
-        for newly in wf.mark_complete(ei) {
-            self.start_experiment(wf, &mut runs[newly], newly, now)?;
+    }
+
+    fn finish_experiment(&mut self, fleet: &mut FleetEngine, ei: usize) -> Result<()> {
+        self.runs[ei].finished = true;
+        self.release_fleet(fleet, ei);
+        for newly in self.wf.mark_complete(ei) {
+            self.start_experiment(fleet, newly)?;
         }
         Ok(())
     }
@@ -371,8 +265,8 @@ impl SimDriver {
     /// If an experiment has permanently-failed tasks and no more runnable
     /// work, mark it failed, release its fleet and doom dependents
     /// (their tasks never start).
-    fn maybe_fail_experiment(&mut self, wf: &mut Workflow, runs: &mut [ExpRun], ei: usize, now: SimTime) {
-        let run = &runs[ei];
+    fn maybe_fail_experiment(&mut self, fleet: &mut FleetEngine, ei: usize) {
+        let run = &self.runs[ei];
         if run.finished
             || run.state.failed.is_empty()
             || run.done + run.state.failed.len() < run.total
@@ -380,47 +274,26 @@ impl SimDriver {
         {
             return;
         }
-        runs[ei].finished = true;
-        let fleet: Vec<NodeId> = self
-            .nodes
-            .iter()
-            .filter(|(_, m)| m.experiment == ei && !m.dead)
-            .map(|(id, _)| *id)
-            .collect();
-        for nid in fleet {
-            self.terminate_node(nid, now);
-        }
-        for doomed in wf.mark_failed(ei) {
-            runs[doomed].finished = true;
+        self.runs[ei].finished = true;
+        self.release_fleet(fleet, ei);
+        for doomed in self.wf.mark_failed(ei) {
+            self.runs[doomed].finished = true;
         }
     }
 
-    fn terminate_node(&mut self, nid: NodeId, now: SimTime) {
-        let Some(meta) = self.nodes.get_mut(&nid) else { return };
-        if meta.dead {
-            return;
-        }
-        meta.dead = true;
-        meta.kill_at = Some(now);
-        let spec = meta.handle.ty.spec();
-        let hours = now.saturating_sub(meta.handle.launched_at).as_secs_f64() / 3600.0;
-        self.ledger.charge(spec.name, meta.handle.spot, spec.price(meta.handle.spot), hours);
-    }
-
-    fn dispatch(&mut self, wf: &Workflow, run: &mut ExpRun, ei: usize, now: SimTime) {
-        let ty = match wf.recipe.experiments[ei].instance_type() {
+    fn dispatch(&mut self, fleet: &mut FleetEngine, ei: usize) {
+        let ty = match self.wf.recipe.experiments[ei].instance_type() {
             Ok(t) => t,
             Err(_) => return,
         };
-        for (tid, nid) in run.state.assign() {
-            let total = self.task_work_s(wf, tid, ty);
+        let now = fleet.now();
+        for (tid, nid) in self.runs[ei].state.assign() {
+            let total = self.task_work_s(tid, ty);
             let done = self.progress.get(&tid).copied().unwrap_or(0.0);
             let remaining = (total - done).max(0.01);
             self.started.insert(tid, now);
-            if let Some(meta) = self.nodes.get_mut(&nid) {
-                meta.busy_s += remaining;
-            }
-            let attempt = run.state.task(tid).map(|t| t.attempts).unwrap_or(0);
+            fleet.add_busy(nid, remaining);
+            let attempt = self.runs[ei].state.task(tid).map(|t| t.attempts).unwrap_or(0);
             if self.cfg.record_assignments {
                 self.assignments.push(AssignmentRecord {
                     task: tid,
@@ -428,18 +301,113 @@ impl SimDriver {
                     attempt,
                     at_s: now.as_secs_f64(),
                     resumed_from_s: done,
-                    command: wf.task(tid).command.clone(),
+                    command: self.wf.task(tid).command.clone(),
                 });
             }
-            self.events
-                .push(now + SimTime::from_secs_f64(remaining), Event::TaskDone(tid, nid, attempt));
+            let token = self.tokens.len() as u64;
+            self.tokens.push((tid, attempt));
+            fleet.schedule_work(nid, now + SimTime::from_secs_f64(remaining), token);
         }
+    }
+}
+
+impl FleetWorkload for DagWorkload<'_> {
+    fn on_start(&mut self, fleet: &mut FleetEngine) -> Result<()> {
+        for ei in self.wf.runnable() {
+            self.start_experiment(fleet, ei)?;
+        }
+        Ok(())
+    }
+
+    fn on_node_ready(&mut self, fleet: &mut FleetEngine, nid: NodeId) -> Result<()> {
+        let ei = fleet.node(nid).expect("ready node exists").tag() as usize;
+        if self.runs[ei].finished {
+            fleet.release(nid);
+            return Ok(());
+        }
+        self.runs[ei].state.add_node(nid, self.cfg.slots_per_node);
+        self.dispatch(fleet, ei);
+        Ok(())
+    }
+
+    fn on_work_done(&mut self, fleet: &mut FleetEngine, nid: NodeId, token: u64) -> Result<()> {
+        let (tid, attempt) = self.tokens[token as usize];
+        let ei = tid.experiment as usize;
+        let run = &mut self.runs[ei];
+        // stale if the task moved (preempted) since assignment
+        let live = run.state.node_of(tid) == Some(nid)
+            && run.state.task(tid).map(|t| t.attempts) == Some(attempt);
+        if !live {
+            return Ok(());
+        }
+        self.started.remove(&tid);
+        run.state.on_task_success(tid);
+        run.done += 1;
+        if run.done == run.total {
+            self.finish_experiment(fleet, ei)?;
+        } else {
+            self.dispatch(fleet, ei);
+        }
+        self.maybe_fail_experiment(fleet, ei);
+        Ok(())
+    }
+
+    /// Graceful drain: checkpoint the progress of running tasks and
+    /// requeue them at the front (no retry burned).
+    fn on_notice(&mut self, fleet: &mut FleetEngine, nid: NodeId) -> Result<()> {
+        let ei = fleet.node(nid).expect("noticed node exists").tag() as usize;
+        let now = fleet.now();
+        let drained: Vec<TaskId> = self.runs[ei].state.drain_node(nid);
+        for tid in drained {
+            if let Some(start) = self.started.remove(&tid) {
+                let done = now.saturating_sub(start).as_secs_f64();
+                *self.progress.entry(tid).or_insert(0.0) += done;
+            }
+        }
+        // requeued tasks may start on other nodes immediately
+        self.dispatch(fleet, ei);
+        Ok(())
+    }
+
+    /// Hard kill: anything still running dies; only checkpointed progress
+    /// survives, and a replacement node is launched if the experiment can
+    /// still finish.
+    fn on_kill(&mut self, fleet: &mut FleetEngine, nid: NodeId) -> Result<()> {
+        let node = fleet.node(nid).expect("killed node exists");
+        let ei = node.tag() as usize;
+        let spot = node.spot();
+        let now = fleet.now();
+        let lost: Vec<TaskId> = self.runs[ei].state.remove_node(nid);
+        for tid in &lost {
+            if let Some(start) = self.started.remove(tid) {
+                let ran = now.saturating_sub(start).as_secs_f64();
+                let kept = match self.cfg.checkpoint_interval_s {
+                    Some(int) => (ran / int).floor() * int,
+                    None => 0.0,
+                };
+                *self.progress.entry(*tid).or_insert(0.0) += kept;
+            }
+        }
+        self.maybe_fail_experiment(fleet, ei);
+        let run = &self.runs[ei];
+        let achievable = run.done + run.state.failed.len() < run.total;
+        if self.cfg.replace_preempted && !run.finished && achievable {
+            let ty = self.wf.recipe.experiments[ei].instance_type()?;
+            fleet.launch(LaunchSpec::new(ty, spot).tagged(ei as u32));
+        }
+        self.dispatch(fleet, ei);
+        Ok(())
+    }
+
+    fn is_done(&self, _fleet: &FleetEngine) -> bool {
+        self.runs.iter().all(|r| r.finished)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::PriceTrace;
     use crate::workflow::Recipe;
 
     fn wf(yaml: &str) -> Workflow {
@@ -512,14 +480,14 @@ experiments:
 
     #[test]
     fn preemption_notice_drain_checkpoints_and_loses_no_work() {
-        // ISSUE 2 satellite: end-to-end exercise of SpotMarket::notice_s.
-        // One 3000-second task on one spot node with mean time-to-preempt
-        // of 400 s, and NO periodic checkpointing: a hard kill banks
-        // nothing, so the run can only finish in bounded time if the
-        // 2-minute-notice drain path checkpoints progress at every notice
-        // (≈245 useful seconds per ~495 s node lifetime ⇒ makespan in the
-        // low thousands). Without the drain, completion would need one
-        // node to survive the whole 3175 s (p ≈ e^-7.9 per node), i.e. a
+        // End-to-end exercise of SpotMarket::notice_s. One 3000-second
+        // task on one spot node with mean time-to-preempt of 400 s, and
+        // NO periodic checkpointing: a hard kill banks nothing, so the
+        // run can only finish in bounded time if the 2-minute-notice
+        // drain path checkpoints progress at every notice (≈245 useful
+        // seconds per ~495 s node lifetime ⇒ makespan in the low
+        // thousands). Without the drain, completion would need one node
+        // to survive the whole 3175 s (p ≈ e^-7.9 per node), i.e. a
         // makespan in the hundreds of thousands of seconds.
         let yaml = r#"
 name: drain
@@ -664,5 +632,53 @@ experiments:
 "#;
         let r = SimDriver::new(SimDriverConfig::default()).run(&mut wf(yaml)).unwrap();
         assert!(r.makespan_s > 100.0, "IO must dominate: {}", r.makespan_s);
+    }
+
+    #[test]
+    fn scripted_storm_fires_at_engine_time_and_work_survives() {
+        // storms are new to the ETL driver on the unified engine: a
+        // t=60 s wave (engine-start origin) reclaims 2 of 4 spot nodes
+        // mid-run; replacements absorb the loss and nothing fails
+        let yaml = ETL.replace("workers: 4", "workers: 4\n    spot: true");
+        let mut w = wf(&yaml);
+        let cfg = SimDriverConfig {
+            spot_market: SpotMarketConfig { mean_ttp_s: 1e9, notice_s: 120.0 },
+            storm: vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 0.0 }],
+            seed: 5,
+            ..Default::default()
+        };
+        let mut d = SimDriver::new(cfg);
+        let r = d.run(&mut w).unwrap();
+        assert!(r.workflow_complete, "{r:?}");
+        assert_eq!(r.tasks_succeeded, 64);
+        assert_eq!(r.tasks_failed, 0);
+        assert_eq!(r.preemptions, 2, "exactly the storm victims");
+        assert_eq!(d.fleet_stats().storms_fired_at_s, vec![60.0], "engine-start origin");
+        assert!(r.nodes_launched >= 6, "2 replacements: {r:?}");
+    }
+
+    #[test]
+    fn price_trace_preempts_and_defers_replacements() {
+        // traced price spikes above the bid over [100, 400): every spot
+        // node is reclaimed at the crossing and replacements wait for
+        // the recovery — the run completes with zero failed tasks
+        let yaml = ETL
+            .replace("workers: 4", "workers: 2\n    spot: true")
+            .replace("range: [0, 63]", "range: [0, 7]");
+        let mut w = wf(&yaml);
+        let trace =
+            PriceTrace::new(vec![(0.0, 1.0), (100.0, 9.0), (400.0, 1.2)]).unwrap();
+        let cfg = SimDriverConfig {
+            price_trace: Some(PriceTraceConfig { trace, bid_usd: 2.0, notice_s: 5.0 }),
+            seed: 2,
+            ..Default::default()
+        };
+        let mut d = SimDriver::new(cfg);
+        let r = d.run(&mut w).unwrap();
+        assert!(r.workflow_complete, "{r:?}");
+        assert_eq!(r.tasks_succeeded, 8);
+        assert_eq!(r.preemptions, 2, "both nodes hit the price crossing");
+        assert!(d.fleet_stats().launches_deferred >= 1, "mid-spike launches deferred");
+        assert!(r.makespan_s > 400.0, "completion waited out the spike: {}", r.makespan_s);
     }
 }

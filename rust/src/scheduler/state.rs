@@ -30,13 +30,16 @@ pub struct SchedulerState {
     tasks: BTreeMap<TaskId, Task>,
     /// where each running task lives
     placement: BTreeMap<TaskId, NodeId>,
+    /// Tasks that completed successfully.
     pub succeeded: BTreeSet<TaskId>,
+    /// Tasks that exhausted their retry budget.
     pub failed: BTreeSet<TaskId>,
-    /// total reschedules caused by node failures
+    /// Total reschedules caused by node failures.
     pub reschedules: u64,
 }
 
 impl SchedulerState {
+    /// Empty state: no nodes, no tasks.
     pub fn new() -> Self {
         Self::default()
     }
@@ -93,6 +96,7 @@ impl SchedulerState {
         running
     }
 
+    /// Nodes currently registered (draining ones included).
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
@@ -171,18 +175,22 @@ impl SchedulerState {
 
     // ------------------------------------------------------- queries
 
+    /// Tasks waiting in the queue.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
+    /// Tasks currently placed on a node.
     pub fn running(&self) -> usize {
         self.placement.len()
     }
 
+    /// The node a task is running on, if any.
     pub fn node_of(&self, id: TaskId) -> Option<NodeId> {
         self.placement.get(&id).copied()
     }
 
+    /// The task with this id, if known.
     pub fn task(&self, id: TaskId) -> Option<&Task> {
         self.tasks.get(&id)
     }

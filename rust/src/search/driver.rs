@@ -1,12 +1,15 @@
 //! [`SearchDriver`]: checkpointable trials on the preemptible virtual fleet.
 //!
-//! The third end-to-end scenario over the cloud/sim stack (after the ETL
-//! fan-out and the serving layer): hundreds-to-thousands of trials
-//! multiplexed onto provisioned nodes, early-stopped by a
-//! [`TrialScheduler`], checkpointed through [`CheckpointStore`], and
-//! carried through spot preemptions the §III.D way — a preempted trial
-//! pauses, re-queues at the front, and resumes *from its last checkpoint
-//! on a different node with byte-identical arguments*.
+//! The third end-to-end scenario over the shared
+//! [`crate::fleet::FleetEngine`] (after the ETL fan-out and the serving
+//! layer): hundreds-to-thousands of trials multiplexed onto provisioned
+//! nodes, early-stopped by a [`TrialScheduler`], checkpointed through
+//! [`CheckpointStore`], and carried through spot preemptions the §III.D
+//! way — a preempted trial pauses, re-queues at the front, and resumes
+//! *from its last checkpoint on a different node with byte-identical
+//! arguments*. The engine owns the event loop, node lifecycle, storms /
+//! market / price-trace preemption, and billing; this driver supplies
+//! only the trial policy.
 //!
 //! Invariants the tests pin down:
 //!
@@ -20,17 +23,19 @@
 //!   continues from its step; [`SearchReport::full_restarts`] counts the
 //!   only legitimate exception — a kill before the first checkpoint.
 //! * **Determinism.** Same config + store ⇒ bit-identical
-//!   [`SearchReport`]. Storms are scripted [`StormEvent`]s; the optional
-//!   background [`SpotMarket`] is seeded.
+//!   [`SearchReport`]. Storms are scripted [`StormEvent`]s timed from
+//!   engine start; the optional background [`crate::cloud::SpotMarket`]
+//!   is seeded; a price trace is exactly reproducible.
 
 use std::collections::{BTreeMap, VecDeque};
 
-use crate::cloud::{InstanceType, NodeHandle, Provisioner, ProvisionerConfig, SpotMarket,
-                   SpotMarketConfig, StormEvent};
+use crate::cloud::{InstanceType, ProvisionerConfig, SpotMarketConfig, StormEvent};
 use crate::config::SearchConfig;
-use crate::metrics::{CostLedger, MetricsRegistry};
+use crate::fleet::{FleetConfig, FleetEngine, FleetStats, FleetWorkload, LaunchSpec, NodeId,
+                   PriceTraceConfig};
+use crate::metrics::MetricsRegistry;
 use crate::scheduler::CheckpointStore;
-use crate::sim::{EventQueue, SimTime};
+use crate::sim::SimTime;
 use crate::storage::StoreHandle;
 use crate::workflow::{sample_assignments, Assignment, ExperimentSpec, ParamSpec};
 use crate::{Error, Result};
@@ -52,7 +57,10 @@ pub struct SearchDriverConfig {
     /// Background random preemptions of spot nodes; `None` = scripted
     /// storms only (deterministic fault timing).
     pub spot_market: Option<SpotMarketConfig>,
-    /// Scripted preemption waves.
+    /// Price-trace-driven preemption (replayed `(t, price)` series vs a
+    /// bid); overrides `spot_market` when set.
+    pub price_trace: Option<PriceTraceConfig>,
+    /// Scripted preemption waves (timed from engine start).
     pub storm: Vec<StormEvent>,
     /// Launch a replacement when a node is reclaimed.
     pub replace_preempted: bool,
@@ -65,6 +73,7 @@ impl Default for SearchDriverConfig {
             curve: CurveConfig::default(),
             provisioner: ProvisionerConfig::default(),
             spot_market: None,
+            price_trace: None,
             storm: Vec::new(),
             replace_preempted: true,
         }
@@ -93,7 +102,7 @@ pub struct SearchReport {
     /// Steps re-executed because a hard kill lost them (0 when every
     /// preemption came with a notice-drain checkpoint).
     pub replayed_steps: u64,
-    /// Nodes reclaimed (storms + background spot market).
+    /// Nodes reclaimed (storms, price trace, background spot market).
     pub preemptions: u64,
     /// Trial pauses caused by preemptions.
     pub pauses: u64,
@@ -120,26 +129,6 @@ pub struct SearchReport {
     pub best_observed_loss: f64,
 }
 
-#[derive(Debug)]
-enum Ev {
-    NodeReady(u32),
-    SegmentDone { trial: usize, node: u32, epoch: u64 },
-    SpotNotice(u32),
-    NodeKill(u32),
-    Storm(usize),
-}
-
-#[derive(Debug)]
-struct Node {
-    handle: NodeHandle,
-    ready: bool,
-    dead: bool,
-    draining: bool,
-    running: Option<usize>,
-    /// Bumped on preemption so in-flight [`Ev::SegmentDone`]s go stale.
-    epoch: u64,
-}
-
 /// The virtual-time search executor. Construct, then [`SearchDriver::run`]
 /// once.
 pub struct SearchDriver {
@@ -149,16 +138,13 @@ pub struct SearchDriver {
     curves: Vec<LearningCurve>,
     sched: Box<dyn TrialScheduler>,
     ckpts: CheckpointStore,
-    provisioner: Provisioner,
-    spot: Option<SpotMarket>,
-    events: EventQueue<Ev>,
-    nodes: BTreeMap<u32, Node>,
     queue: VecDeque<usize>,
-    ledger: CostLedger,
+    /// Trial currently running on each node.
+    running: BTreeMap<NodeId, usize>,
     /// Counters + best-loss gauge (`search.*` names).
     pub metrics: MetricsRegistry,
+    stats: FleetStats,
     terminal: usize,
-    preemptions: u64,
     pauses: u64,
     resumes: u64,
     full_restarts: u64,
@@ -167,7 +153,6 @@ pub struct SearchDriver {
     replayed_steps: u64,
     checkpoints: u64,
     promotions: u64,
-    nodes_launched: usize,
     best_loss: f64,
     best_idx: Option<usize>,
     best_observed: f64,
@@ -213,23 +198,18 @@ impl SearchDriver {
         } else {
             CheckpointStore::with_keep_last(store, "search", sc.keep_last_k)
         };
-        let seed = sc.seed;
         Ok(Self {
-            provisioner: Provisioner::new(cfg.provisioner.clone(), seed),
-            spot: cfg.spot_market.clone().map(|m| SpotMarket::new(m, seed)),
             instance,
             trials,
             curves,
             sched,
             ckpts,
             cfg,
-            events: EventQueue::new(),
-            nodes: BTreeMap::new(),
             queue: VecDeque::new(),
-            ledger: CostLedger::new(),
+            running: BTreeMap::new(),
             metrics: MetricsRegistry::new(),
+            stats: FleetStats::default(),
             terminal: 0,
-            preemptions: 0,
             pauses: 0,
             resumes: 0,
             full_restarts: 0,
@@ -238,7 +218,6 @@ impl SearchDriver {
             replayed_steps: 0,
             checkpoints: 0,
             promotions: 0,
-            nodes_launched: 0,
             best_loss: f64::INFINITY,
             best_idx: None,
             best_observed: f64::INFINITY,
@@ -284,49 +263,30 @@ impl SearchDriver {
         &self.trials
     }
 
+    /// Fleet-level counters of the last run (preemptions, storm firing
+    /// times, deferred launches).
+    pub fn fleet_stats(&self) -> &FleetStats {
+        &self.stats
+    }
+
     /// Run the search to completion and report. Single-use.
     pub fn run(&mut self) -> Result<SearchReport> {
         if std::mem::replace(&mut self.ran, true) {
             return Err(Error::Search("SearchDriver::run is single-use".into()));
         }
-        let mut now = SimTime::ZERO;
-        self.queue = (0..self.trials.len()).collect();
-        for _ in 0..self.cfg.search.workers.max(1) {
-            self.launch_node(now);
-        }
-        for i in 0..self.cfg.storm.len() {
-            let at = SimTime::from_secs_f64(self.cfg.storm[i].at_s);
-            self.events.push(at, Ev::Storm(i));
-        }
-
-        let max_events = 50_000_000u64;
-        let mut processed = 0u64;
-        while let Some((t, ev)) = self.events.pop() {
-            now = t;
-            processed += 1;
-            if processed > max_events {
-                return Err(Error::Search("event budget exceeded (livelock?)".into()));
-            }
-            match ev {
-                Ev::NodeReady(nid) => self.on_ready(now, nid)?,
-                Ev::SegmentDone { trial, node, epoch } => {
-                    self.on_segment_done(now, trial, node, epoch)?
-                }
-                Ev::SpotNotice(nid) => self.on_notice(now, nid)?,
-                Ev::NodeKill(nid) => self.on_kill(now, nid)?,
-                Ev::Storm(i) => self.on_storm(now, i)?,
-            }
-            if self.terminal == self.trials.len() {
-                break;
-            }
-        }
-
-        // bill whatever is still alive
-        let alive: Vec<u32> =
-            self.nodes.iter().filter(|(_, n)| !n.dead).map(|(id, _)| *id).collect();
-        for nid in alive {
-            self.bill_and_mark_dead(nid, now);
-        }
+        let mut engine = FleetEngine::new(FleetConfig {
+            provisioner: self.cfg.provisioner.clone(),
+            spot_market: self.cfg.spot_market.clone(),
+            price_trace: self.cfg.price_trace.clone(),
+            storm: self.cfg.storm.clone(),
+            seed: self.cfg.search.seed,
+            ..FleetConfig::default()
+        });
+        engine.run(&mut TrialWorkload { d: self })?;
+        // bill whatever is still alive at the last processed event
+        let end = engine.now();
+        engine.shutdown(end);
+        self.stats = engine.stats().clone();
 
         let completed = self.trials.iter().filter(|t| t.state == TrialState::Completed).count();
         let stopped = self.trials.iter().filter(|t| t.state == TrialState::Stopped).count();
@@ -336,217 +296,45 @@ impl SearchDriver {
             completed,
             stopped,
             lost: self.trials.len() - completed - stopped,
-            makespan_s: now.as_secs_f64(),
-            cost_usd: self.ledger.total_usd(),
+            makespan_s: end.as_secs_f64(),
+            cost_usd: engine.ledger().total_usd(),
             total_steps: self.total_steps,
             replayed_steps: self.replayed_steps,
-            preemptions: self.preemptions,
+            preemptions: self.stats.preemptions,
             pauses: self.pauses,
             resumes: self.resumes,
             full_restarts: self.full_restarts,
             resumed_same_node: self.resumed_same_node,
             checkpoints: self.checkpoints,
             promotions: self.promotions,
-            nodes_launched: self.nodes_launched,
+            nodes_launched: self.stats.nodes_launched,
             best_loss: self.best_loss,
             best_assignment: self.best_idx.map(|i| self.trials[i].assignment.clone()),
             best_observed_loss: self.best_observed,
         })
     }
 
-    // ------------------------------------------------------------ events
-
-    fn on_ready(&mut self, now: SimTime, nid: u32) -> Result<()> {
-        let Some(n) = self.nodes.get_mut(&nid) else { return Ok(()) };
-        if n.dead || n.draining {
-            return Ok(());
-        }
-        n.ready = true;
-        n.handle.mark_ready();
-        self.dispatch(now)
-    }
-
-    fn on_segment_done(&mut self, now: SimTime, ti: usize, nid: u32, epoch: u64) -> Result<()> {
-        let stale = match self.nodes.get(&nid) {
-            None => true,
-            Some(n) => n.dead || n.epoch != epoch || n.running != Some(ti),
-        };
-        if stale {
-            return Ok(());
-        }
-        let (step, executed) = {
-            let t = &mut self.trials[ti];
-            let executed = t.seg_target - t.seg_start_step;
-            t.step = t.seg_target;
-            t.lifetime_steps += executed;
-            (t.step, executed)
-        };
-        self.total_steps += executed;
-        let loss = self.curves[ti].loss_at(step);
-        self.save_checkpoint(ti, step, loss)?;
-        self.trials[ti].last_loss = loss;
-        if loss < self.best_observed {
-            self.best_observed = loss;
-        }
-
-        let max_steps = self.cfg.search.max_steps;
-        if step >= max_steps {
-            // trial done: the top rung is completion
-            self.trials[ti].state = TrialState::Completed;
-            self.terminal += 1;
-            self.metrics.counter("search.trials_completed").inc();
-            if loss < self.best_loss {
-                self.best_loss = loss;
-                self.best_idx = Some(ti);
-                self.metrics.float_gauge("search.best_loss").set(loss);
-            }
-            if let Some(n) = self.nodes.get_mut(&nid) {
-                n.running = None;
-            }
-            return self.dispatch(now);
-        }
-        if step >= self.trials[ti].next_milestone {
-            match self.sched.on_report(ti, step, loss) {
-                Decision::Continue(next) => {
-                    self.promotions += 1;
-                    self.metrics.counter("search.promotions").inc();
-                    self.trials[ti].next_milestone = next.clamp(step + 1, max_steps);
-                    self.start_segment(now, ti, nid);
-                }
-                Decision::Stop => {
-                    self.trials[ti].state = TrialState::Stopped;
-                    self.terminal += 1;
-                    self.metrics.counter("search.early_stops").inc();
-                    if let Some(n) = self.nodes.get_mut(&nid) {
-                        n.running = None;
-                    }
-                    return self.dispatch(now);
-                }
-            }
-        } else {
-            // mid-rung periodic checkpoint: keep going on the same node
-            self.start_segment(now, ti, nid);
-        }
-        Ok(())
-    }
-
-    /// Spot notice / storm warning: drain the node gracefully — bank the
-    /// running trial's partial progress in a checkpoint and re-queue it
-    /// at the front. The node takes no further work.
-    fn on_notice(&mut self, now: SimTime, nid: u32) -> Result<()> {
-        let running = {
-            let Some(n) = self.nodes.get_mut(&nid) else { return Ok(()) };
-            if n.dead || n.draining {
-                return Ok(());
-            }
-            n.draining = true;
-            n.handle.begin_drain();
-            n.epoch += 1;
-            n.running.take()
-        };
-        if let Some(ti) = running {
-            let done = self.partial_steps(now, ti);
-            let step = {
-                let t = &mut self.trials[ti];
-                t.step = t.seg_start_step + done;
-                t.lifetime_steps += done;
-                t.step
-            };
-            self.total_steps += done;
-            let loss = self.curves[ti].loss_at(step);
-            self.save_checkpoint(ti, step, loss)?;
-            let t = &mut self.trials[ti];
-            t.last_loss = loss;
-            t.state = TrialState::Paused;
-            t.pauses += 1;
-            self.pauses += 1;
-            self.metrics.counter("search.pauses").inc();
-            self.queue.push_front(ti);
-        }
-        self.dispatch(now)
-    }
-
-    /// Hard kill: work since the last checkpoint is lost; the trial will
-    /// resume from that checkpoint (step 0 if none existed yet).
-    fn on_kill(&mut self, now: SimTime, nid: u32) -> Result<()> {
-        let running = {
-            let Some(n) = self.nodes.get_mut(&nid) else { return Ok(()) };
-            if n.dead {
-                return Ok(());
-            }
-            n.epoch += 1;
-            n.running.take()
-        };
-        self.preemptions += 1;
-        if let Some(ti) = running {
-            let done = self.partial_steps(now, ti);
-            let t = &mut self.trials[ti];
-            let reached = t.seg_start_step + done;
-            t.lifetime_steps += done;
-            self.total_steps += done;
-            let resume_from = t.ckpt_step.unwrap_or(0);
-            self.replayed_steps += reached - resume_from;
-            t.step = resume_from;
-            t.state = TrialState::Paused;
-            t.pauses += 1;
-            self.pauses += 1;
-            self.metrics.counter("search.pauses").inc();
-            self.queue.push_front(ti);
-        }
-        self.bill_and_mark_dead(nid, now);
-        if self.cfg.replace_preempted && self.terminal < self.trials.len() {
-            self.launch_node(now);
-        }
-        self.dispatch(now)
-    }
-
-    fn on_storm(&mut self, now: SimTime, idx: usize) -> Result<()> {
-        let storm = self.cfg.storm[idx];
-        let victims: Vec<u32> = self
-            .nodes
-            .iter()
-            .filter(|(_, n)| !n.dead && !n.draining)
-            .map(|(id, _)| *id)
-            .take(storm.kills)
-            .collect();
-        for nid in victims {
-            if storm.notice_s <= 0.0 {
-                self.on_kill(now, nid)?;
-            } else {
-                self.on_notice(now, nid)?;
-                self.events
-                    .push(now + SimTime::from_secs_f64(storm.notice_s), Ev::NodeKill(nid));
-            }
-        }
-        Ok(())
-    }
-
     // ------------------------------------------------------- dispatching
 
     /// Fill idle nodes from the queue (paused trials sit at the front,
     /// §III.D: preempted work resumes first).
-    fn dispatch(&mut self, now: SimTime) -> Result<()> {
+    fn dispatch(&mut self, fleet: &mut FleetEngine) -> Result<()> {
         loop {
             if self.queue.is_empty() {
                 return Ok(());
             }
-            let Some(nid) = self
-                .nodes
-                .iter()
-                .find(|(_, n)| n.ready && !n.dead && !n.draining && n.running.is_none())
-                .map(|(id, _)| *id)
-            else {
+            let Some(nid) = fleet.serving_ids().find(|id| !self.running.contains_key(id)) else {
                 return Ok(());
             };
             let ti = self.queue.pop_front().expect("non-empty");
-            self.start_attempt(now, ti, nid)?;
+            self.start_attempt(fleet, ti, nid)?;
         }
     }
 
     /// Start (or resume) a trial on a node. A resume reads the latest
     /// checkpoint from the store — exactly one metadata GET and one blob
     /// GET — and verifies it belongs to the same byte-identical command.
-    fn start_attempt(&mut self, now: SimTime, ti: usize, nid: u32) -> Result<()> {
+    fn start_attempt(&mut self, fleet: &mut FleetEngine, ti: usize, nid: NodeId) -> Result<()> {
         let resuming = self.trials[ti].pauses > 0;
         if resuming {
             self.resumes += 1;
@@ -573,13 +361,14 @@ impl SearchDriver {
             self.metrics.counter("search.trials_started").inc();
         }
         self.trials[ti].last_node = Some(nid);
-        self.start_segment(now, ti, nid);
+        self.start_segment(fleet, ti, nid);
         Ok(())
     }
 
     /// Schedule the next run segment: up to the next periodic checkpoint
     /// or the next scheduler milestone, whichever is nearer.
-    fn start_segment(&mut self, now: SimTime, ti: usize, nid: u32) {
+    fn start_segment(&mut self, fleet: &mut FleetEngine, ti: usize, nid: NodeId) {
+        let now = fleet.now();
         let target = self.segment_target(ti);
         let dur_steps = {
             let t = &mut self.trials[ti];
@@ -589,11 +378,10 @@ impl SearchDriver {
             t.seg_target = target;
             target - t.step
         };
-        let epoch = self.nodes[&nid].epoch;
-        self.nodes.get_mut(&nid).expect("live node").running = Some(ti);
+        self.running.insert(nid, ti);
         let dur = dur_steps as f64 * self.cfg.search.step_time_s;
-        let done = Ev::SegmentDone { trial: ti, node: nid, epoch };
-        self.events.push(now + SimTime::from_secs_f64(dur), done);
+        fleet.add_busy(nid, dur);
+        fleet.schedule_work(nid, now + SimTime::from_secs_f64(dur), ti as u64);
     }
 
     fn segment_target(&self, ti: usize) -> u64 {
@@ -623,38 +411,145 @@ impl SearchDriver {
         self.metrics.counter("search.checkpoints").inc();
         Ok(())
     }
+}
 
-    // ---------------------------------------------------------- fleet
+/// The checkpointable-trial workload behind [`SearchDriver`].
+struct TrialWorkload<'a> {
+    d: &'a mut SearchDriver,
+}
 
-    fn launch_node(&mut self, now: SimTime) {
-        let spot = self.cfg.search.spot;
-        let handle = self.provisioner.request(self.instance, spot, now);
-        let nid = handle.id;
-        self.events.push(handle.ready_at, Ev::NodeReady(nid));
-        if spot {
-            if let Some(market) = self.spot.as_mut() {
-                let (notice, kill) = market.sample_preemption(now);
-                self.events.push(notice, Ev::SpotNotice(nid));
-                self.events.push(kill, Ev::NodeKill(nid));
-            }
+impl FleetWorkload for TrialWorkload<'_> {
+    fn on_start(&mut self, fleet: &mut FleetEngine) -> Result<()> {
+        let d = &mut *self.d;
+        d.queue = (0..d.trials.len()).collect();
+        for _ in 0..d.cfg.search.workers.max(1) {
+            fleet.launch(LaunchSpec::new(d.instance, d.cfg.search.spot));
         }
-        self.nodes.insert(
-            nid,
-            Node { handle, ready: false, dead: false, draining: false, running: None, epoch: 0 },
-        );
-        self.nodes_launched += 1;
+        Ok(())
     }
 
-    fn bill_and_mark_dead(&mut self, nid: u32, now: SimTime) {
-        let Some(n) = self.nodes.get_mut(&nid) else { return };
-        if n.dead {
-            return;
+    fn on_node_ready(&mut self, fleet: &mut FleetEngine, _node: NodeId) -> Result<()> {
+        self.d.dispatch(fleet)
+    }
+
+    fn on_work_done(&mut self, fleet: &mut FleetEngine, nid: NodeId, token: u64) -> Result<()> {
+        let d = &mut *self.d;
+        let ti = token as usize;
+        // stale if the node has since been handed a different trial
+        if d.running.get(&nid) != Some(&ti) {
+            return Ok(());
         }
-        n.dead = true;
-        n.handle.terminate();
-        let spec = n.handle.ty.spec();
-        let hours = now.saturating_sub(n.handle.launched_at).as_secs_f64() / 3600.0;
-        self.ledger.charge(spec.name, n.handle.spot, spec.price(n.handle.spot), hours);
+        let (step, executed) = {
+            let t = &mut d.trials[ti];
+            let executed = t.seg_target - t.seg_start_step;
+            t.step = t.seg_target;
+            t.lifetime_steps += executed;
+            (t.step, executed)
+        };
+        d.total_steps += executed;
+        let loss = d.curves[ti].loss_at(step);
+        d.save_checkpoint(ti, step, loss)?;
+        d.trials[ti].last_loss = loss;
+        if loss < d.best_observed {
+            d.best_observed = loss;
+        }
+
+        let max_steps = d.cfg.search.max_steps;
+        if step >= max_steps {
+            // trial done: the top rung is completion
+            d.trials[ti].state = TrialState::Completed;
+            d.terminal += 1;
+            d.metrics.counter("search.trials_completed").inc();
+            if loss < d.best_loss {
+                d.best_loss = loss;
+                d.best_idx = Some(ti);
+                d.metrics.float_gauge("search.best_loss").set(loss);
+            }
+            d.running.remove(&nid);
+            return d.dispatch(fleet);
+        }
+        if step >= d.trials[ti].next_milestone {
+            match d.sched.on_report(ti, step, loss) {
+                Decision::Continue(next) => {
+                    d.promotions += 1;
+                    d.metrics.counter("search.promotions").inc();
+                    d.trials[ti].next_milestone = next.clamp(step + 1, max_steps);
+                    d.start_segment(fleet, ti, nid);
+                }
+                Decision::Stop => {
+                    d.trials[ti].state = TrialState::Stopped;
+                    d.terminal += 1;
+                    d.metrics.counter("search.early_stops").inc();
+                    d.running.remove(&nid);
+                    return d.dispatch(fleet);
+                }
+            }
+        } else {
+            // mid-rung periodic checkpoint: keep going on the same node
+            d.start_segment(fleet, ti, nid);
+        }
+        Ok(())
+    }
+
+    /// Spot notice / storm warning: the engine has drained the node (it
+    /// takes no further work). Bank the running trial's partial progress
+    /// in a checkpoint and re-queue it at the front.
+    fn on_notice(&mut self, fleet: &mut FleetEngine, nid: NodeId) -> Result<()> {
+        let d = &mut *self.d;
+        // the recalled segment's in-flight completion must go stale
+        fleet.invalidate(nid);
+        if let Some(ti) = d.running.remove(&nid) {
+            let now = fleet.now();
+            let done = d.partial_steps(now, ti);
+            let step = {
+                let t = &mut d.trials[ti];
+                t.step = t.seg_start_step + done;
+                t.lifetime_steps += done;
+                t.step
+            };
+            d.total_steps += done;
+            let loss = d.curves[ti].loss_at(step);
+            d.save_checkpoint(ti, step, loss)?;
+            let t = &mut d.trials[ti];
+            t.last_loss = loss;
+            t.state = TrialState::Paused;
+            t.pauses += 1;
+            d.pauses += 1;
+            d.metrics.counter("search.pauses").inc();
+            d.queue.push_front(ti);
+        }
+        d.dispatch(fleet)
+    }
+
+    /// Hard kill (the engine has already billed the node and staled its
+    /// in-flight completion): work since the last checkpoint is lost; the
+    /// trial will resume from that checkpoint (step 0 if none existed yet).
+    fn on_kill(&mut self, fleet: &mut FleetEngine, nid: NodeId) -> Result<()> {
+        let d = &mut *self.d;
+        if let Some(ti) = d.running.remove(&nid) {
+            let now = fleet.now();
+            let done = d.partial_steps(now, ti);
+            let t = &mut d.trials[ti];
+            let reached = t.seg_start_step + done;
+            t.lifetime_steps += done;
+            d.total_steps += done;
+            let resume_from = t.ckpt_step.unwrap_or(0);
+            d.replayed_steps += reached - resume_from;
+            t.step = resume_from;
+            t.state = TrialState::Paused;
+            t.pauses += 1;
+            d.pauses += 1;
+            d.metrics.counter("search.pauses").inc();
+            d.queue.push_front(ti);
+        }
+        if d.cfg.replace_preempted && d.terminal < d.trials.len() {
+            fleet.launch(LaunchSpec::new(d.instance, d.cfg.search.spot));
+        }
+        d.dispatch(fleet)
+    }
+
+    fn is_done(&self, _fleet: &FleetEngine) -> bool {
+        self.d.terminal == self.d.trials.len()
     }
 }
 
@@ -663,6 +558,7 @@ mod tests {
     use std::sync::Arc;
 
     use super::*;
+    use crate::cloud::PriceTrace;
     use crate::config::SearchAlgo;
     use crate::storage::MemStore;
     use crate::workflow::Recipe;
@@ -794,6 +690,8 @@ mod tests {
         assert_eq!(r.replayed_steps, 0, "graceful drain banks every step");
         assert_eq!(r.total_steps, 8 * 40, "exactly the nominal work was executed");
         assert!(r.nodes_launched > 4, "replacements for the killed nodes");
+        // the storm fired at its scripted engine-start time
+        assert_eq!(d.fleet_stats().storms_fired_at_s, vec![70.0]);
         // keep-last-k pruning held during the run
         for t in d.trials() {
             let blobs = s.list(&format!("search/ckpt/{}/step", t.task)).unwrap();
@@ -824,6 +722,38 @@ mod tests {
         let t = &d.trials()[0];
         assert_eq!(t.pauses, 1);
         assert_eq!(t.lifetime_steps, 45);
+    }
+
+    #[test]
+    fn price_trace_pauses_the_search_and_resumes_after_recovery() {
+        // one long trial on one spot node bidding 0.10 against a trace
+        // that spikes over [70, 400): noticed at exactly 70 (a drain
+        // checkpoint banks step 15), killed at 75, and the replacement
+        // launch waits out the spike — the trial still completes with
+        // zero lost steps (graceful drain) after the recovery.
+        let mut cfg = exact_cfg(SearchAlgo::Grid);
+        cfg.search.trials = 1;
+        cfg.search.max_steps = 40;
+        cfg.search.workers = 1;
+        cfg.search.spot = true;
+        let trace =
+            PriceTrace::new(vec![(0.0, 0.05), (70.0, 0.90), (400.0, 0.06)]).unwrap();
+        cfg.price_trace = Some(PriceTraceConfig { trace, bid_usd: 0.10, notice_s: 5.0 });
+        let mut d = SearchDriver::new(cfg, store(), &lr_space(), "train --lr {lr}").unwrap();
+        let r = d.run().unwrap();
+        assert_eq!((r.completed, r.lost), (1, 0), "{r:?}");
+        assert_eq!(r.preemptions, 1, "the node hit the price crossing");
+        assert_eq!(r.pauses, 1);
+        assert_eq!(r.resumes, 1);
+        assert_eq!(r.replayed_steps, 0, "the 5 s notice banked the segment");
+        assert!(
+            d.fleet_stats().launches_deferred >= 1,
+            "the replacement waited out the spike: {:?}",
+            d.fleet_stats()
+        );
+        // replacement provisions from t=400 (ready 455) and runs the
+        // remaining 25 steps: done at 480
+        assert!((r.makespan_s - 480.0).abs() < 1e-6, "{}", r.makespan_s);
     }
 
     #[test]

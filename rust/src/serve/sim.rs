@@ -2,11 +2,12 @@
 //!
 //! This is where the serving layer meets the paper's §III.D claim — heavy
 //! traffic on "unstable cheap resources" — at a scale the threaded
-//! [`super::ServeStack`] cannot reach on one host. Replicas are simulated
-//! cloud nodes (provisioned through [`Provisioner`], optionally preempted
-//! by the [`SpotMarket`] or by *scripted storms*), requests arrive from an
-//! open- or closed-loop generator ([`crate::sim`]), the dynamic batcher is
-//! the shared [`BatchPolicy`], and the [`Autoscaler`] runs as a periodic
+//! [`super::ServeStack`] cannot reach on one host. Replicas are nodes of
+//! the shared [`crate::fleet::FleetEngine`] (provisioned, preempted by
+//! the background market, a recorded price trace, or *scripted storms*,
+//! and billed by the engine), requests arrive from an open- or
+//! closed-loop generator ([`crate::sim`]), the dynamic batcher is the
+//! shared [`BatchPolicy`], and the [`Autoscaler`] runs as a periodic
 //! control tick over windowed p99 / queue-depth signals.
 //!
 //! Invariants the tests pin down:
@@ -16,16 +17,18 @@
 //!   timestamps preserved, admission limit bypassed); the only way out of
 //!   the system is a response or an admission-time shed.
 //! * **Determinism.** Same config + seed ⇒ bit-identical [`ServeReport`].
-//!   Storms are scripted `(time, kills, notice)` triples, so a preemption
-//!   storm is a reproducible experiment rather than an anecdote.
+//!   Storms are scripted `(time, kills, notice)` triples timed from
+//!   **engine start** (see [`crate::fleet`]), so a preemption storm is a
+//!   reproducible experiment rather than an anecdote.
 
 use std::collections::{BTreeMap, VecDeque};
 
-use crate::cloud::{InstanceType, NodeHandle, Provisioner, ProvisionerConfig, SpotMarket,
-                   SpotMarketConfig};
-use crate::metrics::{CostLedger, Histogram, HistogramSnapshot};
-use crate::sim::{ClosedLoop, EventQueue, OpenLoop, RateSchedule, SimRng, SimTime};
-use crate::{Error, Result};
+use crate::cloud::InstanceType;
+use crate::fleet::{FleetConfig, FleetEngine, FleetStats, FleetWorkload, LaunchSpec, NodeId,
+                   PriceTraceConfig};
+use crate::metrics::{Histogram, HistogramSnapshot};
+use crate::sim::{ClosedLoop, OpenLoop, RateSchedule, SimRng, SimTime};
+use crate::Result;
 
 use super::autoscaler::{Autoscaler, AutoscalerConfig, ScaleDecision, ScaleSignal};
 use super::batcher::BatchPolicy;
@@ -45,7 +48,7 @@ pub enum Load {
     Scheduled(RateSchedule),
 }
 
-pub use crate::cloud::StormEvent;
+pub use crate::cloud::{ProvisionerConfig, SpotMarketConfig, StormEvent};
 
 /// Full serving-scenario configuration.
 #[derive(Debug, Clone)]
@@ -75,7 +78,10 @@ pub struct ServeSimConfig {
     pub provisioner: ProvisionerConfig,
     /// Background random preemptions; `None` = scripted storms only.
     pub spot_market: Option<SpotMarketConfig>,
-    /// Scripted preemption waves.
+    /// Price-trace-driven preemption (replayed `(t, price)` series vs a
+    /// bid); overrides `spot_market` when set.
+    pub price_trace: Option<PriceTraceConfig>,
+    /// Scripted preemption waves (timed from engine start).
     pub storm: Vec<StormEvent>,
     /// RNG seed (same seed ⇒ bit-identical report).
     pub seed: u64,
@@ -98,6 +104,7 @@ impl Default for ServeSimConfig {
             scale_interval_s: 5.0,
             provisioner: ProvisionerConfig::default(),
             spot_market: None,
+            price_trace: None,
             storm: Vec::new(),
             seed: 0,
             trace: false,
@@ -141,7 +148,7 @@ pub struct ServeReport {
     pub completed: u64,
     /// Requests re-queued out of preempted in-flight batches.
     pub requeued: u64,
-    /// Replicas lost to storms or the background spot market.
+    /// Replicas lost to storms, the price trace, or the background market.
     pub preemptions: u64,
     /// Replicas provisioned beyond the initial fleet.
     pub scale_ups: u64,
@@ -172,63 +179,125 @@ struct Req {
     user: Option<u64>,
 }
 
-struct Replica {
-    handle: NodeHandle,
-    ready: bool,
-    dead: bool,
-    /// In-flight batch; invalidated by bumping `epoch`.
-    busy: Option<Vec<Req>>,
-    epoch: u64,
-    preempted: bool,
-}
-
-impl Replica {
-    fn draining(&self) -> bool {
-        !self.handle.is_alive() && !self.dead
-    }
-
-    fn idle_and_serving(&self) -> bool {
-        self.ready && !self.dead && self.handle.is_alive() && self.busy.is_none()
-    }
-}
-
-#[derive(Debug)]
-enum Ev {
-    Arrive { user: Option<u64> },
-    ReplicaReady(u32),
-    BatchDone { rid: u32, epoch: u64 },
-    BatchDeadline,
-    ScaleTick,
-    Storm(usize),
-    ReplicaNotice(u32),
-    ReplicaKill(u32),
-}
+// Timer-token space: the engine's `schedule_timer` carries one u64.
+const TOK_TICK: u64 = 0;
+const TOK_DEADLINE: u64 = 1;
+const TOK_ARRIVE: u64 = 2;
+/// Closed-loop user `u` arrives as token `TOK_USER0 + u`.
+const TOK_USER0: u64 = 3;
 
 /// The simulator. Construct, then [`ServeSim::run`] one scenario.
 pub struct ServeSim {
     cfg: ServeSimConfig,
-    provisioner: Provisioner,
-    spot: Option<SpotMarket>,
+    stats: FleetStats,
+}
+
+impl ServeSim {
+    /// Build a simulator for one scenario configuration.
+    pub fn new(cfg: ServeSimConfig) -> Self {
+        Self { cfg, stats: FleetStats::default() }
+    }
+
+    /// Fleet-level counters of the last run (preemptions, storm firing
+    /// times, deferred launches).
+    pub fn fleet_stats(&self) -> &FleetStats {
+        &self.stats
+    }
+
+    /// Run `load` for `duration_s` of virtual time (plus drain) and report.
+    pub fn run(&mut self, load: Load, duration_s: f64) -> Result<ServeReport> {
+        let mut engine = FleetEngine::new(FleetConfig {
+            provisioner: self.cfg.provisioner.clone(),
+            spot_market: self.cfg.spot_market.clone(),
+            price_trace: self.cfg.price_trace.clone(),
+            storm: self.cfg.storm.clone(),
+            seed: self.cfg.seed,
+            ..FleetConfig::default()
+        });
+        let mut w = ServeWorkload {
+            cfg: &self.cfg,
+            rng: SimRng::new(self.cfg.seed ^ 0x5EE7_BA7C),
+            load: Some(load),
+            queue: VecDeque::new(),
+            busy: BTreeMap::new(),
+            deadline_at: None,
+            latency: Histogram::new(),
+            window: Histogram::new(),
+            scaler: Autoscaler::new(self.cfg.autoscaler.clone()),
+            offered: 0,
+            admitted: 0,
+            shed: 0,
+            completed: 0,
+            requeued: 0,
+            scale_ups: 0,
+            scale_downs: 0,
+            batches: 0,
+            batched_reqs: 0,
+            tick_armed: false,
+            load_end: SimTime::from_secs_f64(duration_s),
+            think: None,
+            open: None,
+            sched: None,
+            last_completion: SimTime::ZERO,
+            trace: Vec::new(),
+        };
+        engine.run(&mut w)?;
+        let end = engine.now().max(w.load_end);
+        let final_live = engine.shutdown(end);
+        self.stats = engine.stats().clone();
+
+        Ok(ServeReport {
+            duration_s,
+            makespan_s: w.last_completion.as_secs_f64(),
+            offered: w.offered,
+            admitted: w.admitted,
+            shed: w.shed,
+            completed: w.completed,
+            requeued: w.requeued,
+            preemptions: self.stats.preemptions,
+            scale_ups: w.scale_ups,
+            scale_downs: w.scale_downs,
+            replicas_launched: self.stats.nodes_launched,
+            max_live: self.stats.max_live,
+            final_live,
+            latency: w.latency.snapshot(),
+            mean_batch_fill: if w.batches == 0 {
+                0.0
+            } else {
+                w.batched_reqs as f64 / w.batches as f64
+            },
+            throughput_rps: if duration_s > 0.0 {
+                w.completed as f64 / duration_s
+            } else {
+                0.0
+            },
+            cost_usd: engine.ledger().total_usd(),
+            trace: std::mem::take(&mut w.trace),
+        })
+    }
+}
+
+/// The batching-replica workload behind [`ServeSim`].
+struct ServeWorkload<'a> {
+    cfg: &'a ServeSimConfig,
     rng: SimRng,
-    events: EventQueue<Ev>,
-    replicas: BTreeMap<u32, Replica>,
+    /// Taken at `on_start` to bootstrap the generator.
+    load: Option<Load>,
     queue: VecDeque<Req>,
+    /// In-flight batch per replica; a kill requeues it at the front.
+    busy: BTreeMap<NodeId, Vec<Req>>,
     deadline_at: Option<SimTime>,
     latency: Histogram,
     window: Histogram,
     scaler: Autoscaler,
-    ledger: CostLedger,
     // counters
     offered: u64,
     admitted: u64,
     shed: u64,
     completed: u64,
     requeued: u64,
-    preemptions: u64,
     scale_ups: u64,
     scale_downs: u64,
-    launched: usize,
-    max_live: usize,
     batches: u64,
     batched_reqs: u64,
     /// A ScaleTick is in the event queue. The control loop must stay
@@ -243,185 +312,32 @@ pub struct ServeSim {
     trace: Vec<TickTrace>,
 }
 
-impl ServeSim {
-    /// Build a simulator for one scenario configuration.
-    pub fn new(cfg: ServeSimConfig) -> Self {
-        let seed = cfg.seed;
-        Self {
-            provisioner: Provisioner::new(cfg.provisioner.clone(), seed),
-            spot: cfg.spot_market.clone().map(|c| SpotMarket::new(c, seed)),
-            rng: SimRng::new(seed ^ 0x5EE7_BA7C),
-            scaler: Autoscaler::new(cfg.autoscaler.clone()),
-            cfg,
-            events: EventQueue::new(),
-            replicas: BTreeMap::new(),
-            queue: VecDeque::new(),
-            deadline_at: None,
-            latency: Histogram::new(),
-            window: Histogram::new(),
-            ledger: CostLedger::new(),
-            offered: 0,
-            admitted: 0,
-            shed: 0,
-            completed: 0,
-            requeued: 0,
-            preemptions: 0,
-            scale_ups: 0,
-            scale_downs: 0,
-            launched: 0,
-            max_live: 0,
-            batches: 0,
-            batched_reqs: 0,
-            tick_armed: false,
-            load_end: SimTime::ZERO,
-            think: None,
-            open: None,
-            sched: None,
-            last_completion: SimTime::ZERO,
-            trace: Vec::new(),
-        }
-    }
-
-    /// Run `load` for `duration_s` of virtual time (plus drain) and report.
-    pub fn run(&mut self, load: Load, duration_s: f64) -> Result<ServeReport> {
-        self.load_end = SimTime::from_secs_f64(duration_s);
-
-        // initial fleet
-        for _ in 0..self.cfg.initial_replicas {
-            self.launch_replica(SimTime::ZERO, self.cfg.warm_start);
-        }
-
-        // load generator bootstrap
-        match load {
-            Load::Open(gen) => {
-                self.open = Some(gen);
-                let first = SimTime::from_secs_f64(gen.gap_s(&mut self.rng));
-                if first <= self.load_end {
-                    self.events.push(first, Ev::Arrive { user: None });
-                }
-            }
-            Load::Closed(cl) => {
-                self.think = Some(cl);
-                for u in 0..cl.users as u64 {
-                    // stagger first issues across one think time
-                    let at = SimTime::from_secs_f64(self.rng.next_f64() * cl.think_s.max(1e-6));
-                    if at <= self.load_end {
-                        self.events.push(at, Ev::Arrive { user: Some(u) });
-                    }
-                }
-            }
-            Load::Scheduled(sched) => {
-                if let Some(first) =
-                    Self::sched_next(&sched, SimTime::ZERO, &mut self.rng, self.load_end)
-                {
-                    self.events.push(first, Ev::Arrive { user: None });
-                }
-                self.sched = Some(sched);
-            }
-        }
-
-        // storms + first control tick
-        for (i, storm) in self.cfg.storm.iter().enumerate() {
-            self.events.push(SimTime::from_secs_f64(storm.at_s), Ev::Storm(i));
-        }
-        self.arm_tick(SimTime::ZERO);
-
-        let max_events = 50_000_000u64;
-        let mut processed = 0u64;
-        let mut now = SimTime::ZERO;
-        while let Some((t, ev)) = self.events.pop() {
-            // the scenario is over once the load horizon has passed and
-            // every admitted request has been answered: remaining events
-            // are pre-sampled tails (spot kills hours out, idle
-            // provisioning) that would otherwise bill and count activity
-            // the scenario never observed
-            if t > self.load_end
-                && self.queue.is_empty()
-                && !self.replicas.values().any(|r| r.busy.is_some())
-            {
-                break;
-            }
-            now = t;
-            processed += 1;
-            if processed > max_events {
-                return Err(Error::Serve("serve sim event budget exceeded".into()));
-            }
-            match ev {
-                Ev::Arrive { user } => self.on_arrive(now, user),
-                Ev::ReplicaReady(rid) => self.on_ready(now, rid),
-                Ev::BatchDone { rid, epoch } => self.on_batch_done(now, rid, epoch),
-                Ev::BatchDeadline => {
-                    if self.deadline_at == Some(now) {
-                        self.deadline_at = None;
-                        self.try_dispatch(now);
-                    }
-                }
-                Ev::ScaleTick => self.on_scale_tick(now),
-                Ev::Storm(i) => self.on_storm(now, i),
-                Ev::ReplicaNotice(rid) => self.on_notice(now, rid),
-                Ev::ReplicaKill(rid) => self.on_kill(now, rid),
-            }
-        }
-
-        // bill whatever is still alive
-        let open_ids: Vec<u32> =
-            self.replicas.iter().filter(|(_, r)| !r.dead).map(|(id, _)| *id).collect();
-        let final_live = open_ids.len();
-        let end = now.max(self.load_end);
-        for rid in open_ids {
-            self.bill_and_mark_dead(rid, end);
-        }
-
-        Ok(ServeReport {
-            duration_s,
-            makespan_s: self.last_completion.as_secs_f64(),
-            offered: self.offered,
-            admitted: self.admitted,
-            shed: self.shed,
-            completed: self.completed,
-            requeued: self.requeued,
-            preemptions: self.preemptions,
-            scale_ups: self.scale_ups,
-            scale_downs: self.scale_downs,
-            replicas_launched: self.launched,
-            max_live: self.max_live,
-            final_live,
-            latency: self.latency.snapshot(),
-            mean_batch_fill: if self.batches == 0 {
-                0.0
-            } else {
-                self.batched_reqs as f64 / self.batches as f64
-            },
-            throughput_rps: if duration_s > 0.0 {
-                self.completed as f64 / duration_s
-            } else {
-                0.0
-            },
-            cost_usd: self.ledger.total_usd(),
-            trace: std::mem::take(&mut self.trace),
-        })
-    }
-
-    // ------------------------------------------------------------ events
-
+impl ServeWorkload<'_> {
     /// Schedule the next control tick if none is pending.
-    fn arm_tick(&mut self, now: SimTime) {
+    fn arm_tick(&mut self, fleet: &mut FleetEngine) {
         if !self.tick_armed {
             self.tick_armed = true;
-            self.events.push(
-                now + SimTime::from_secs_f64(self.cfg.scale_interval_s),
-                Ev::ScaleTick,
-            );
+            let at = fleet.now() + SimTime::from_secs_f64(self.cfg.scale_interval_s);
+            fleet.schedule_timer(at, TOK_TICK);
         }
     }
 
-    fn on_arrive(&mut self, now: SimTime, user: Option<u64>) {
+    fn launch_replica(&mut self, fleet: &mut FleetEngine, warm: bool) {
+        let mut spec = LaunchSpec::new(self.cfg.instance, self.cfg.spot_replicas);
+        if warm {
+            spec = spec.warm();
+        }
+        fleet.launch(spec);
+    }
+
+    fn on_arrive(&mut self, fleet: &mut FleetEngine, user: Option<u64>) {
+        let now = fleet.now();
         self.offered += 1;
         if self.queue.len() >= self.cfg.queue_depth {
             self.shed += 1;
             // a shed closed-loop user retries after thinking
             if let (Some(cl), Some(u)) = (self.think, user) {
-                self.schedule_user(now, cl, u);
+                self.schedule_user(fleet, cl, u);
             }
         } else {
             self.admitted += 1;
@@ -429,17 +345,17 @@ impl ServeSim {
             // admitted work must keep the control loop alive: a late
             // arrival after the tick chain wound down still deserves
             // floor repair if a kill then strands it
-            self.arm_tick(now);
-            self.try_dispatch(now);
+            self.arm_tick(fleet);
+            self.try_dispatch(fleet);
         }
         if let Some(gen) = self.open {
             let next = now + SimTime::from_secs_f64(gen.gap_s(&mut self.rng));
             if next <= self.load_end {
-                self.events.push(next, Ev::Arrive { user: None });
+                fleet.schedule_timer(next, TOK_ARRIVE);
             }
         } else if let Some(sched) = self.sched.as_ref() {
             if let Some(next) = Self::sched_next(sched, now, &mut self.rng, self.load_end) {
-                self.events.push(next, Ev::Arrive { user: None });
+                fleet.schedule_timer(next, TOK_ARRIVE);
             }
         }
     }
@@ -468,62 +384,22 @@ impl ServeSim {
         }
     }
 
-    fn schedule_user(&mut self, now: SimTime, cl: ClosedLoop, user: u64) {
-        let at = now + SimTime::from_secs_f64(cl.think_s);
+    fn schedule_user(&mut self, fleet: &mut FleetEngine, cl: ClosedLoop, user: u64) {
+        let at = fleet.now() + SimTime::from_secs_f64(cl.think_s);
         if at <= self.load_end {
-            self.events.push(at, Ev::Arrive { user: Some(user) });
+            fleet.schedule_timer(at, TOK_USER0 + user);
         }
     }
 
-    fn on_ready(&mut self, now: SimTime, rid: u32) {
-        let Some(r) = self.replicas.get_mut(&rid) else { return };
-        if r.dead || !r.handle.is_alive() {
-            return; // preempted or drained while provisioning
-        }
-        r.ready = true;
-        r.handle.mark_ready();
-        let live = self.live_count();
-        self.max_live = self.max_live.max(live);
-        self.try_dispatch(now);
-    }
-
-    fn on_batch_done(&mut self, now: SimTime, rid: u32, epoch: u64) {
-        let finished = {
-            let Some(r) = self.replicas.get_mut(&rid) else { return };
-            if r.dead || r.epoch != epoch {
-                return; // stale completion from a preempted assignment
-            }
-            r.busy.take()
-        };
-        let Some(batch) = finished else { return };
-        for req in &batch {
-            let lat = now.saturating_sub(req.admitted_at).as_secs_f64();
-            self.latency.record(lat);
-            self.window.record(lat);
-            self.completed += 1;
-            self.last_completion = now;
-            if let (Some(cl), Some(u)) = (self.think, req.user) {
-                self.schedule_user(now, cl, u);
-            }
-        }
-        // a draining replica (spot notice / scale-down) exits after its
-        // final batch
-        let drained = self.replicas.get(&rid).map(|r| r.draining()).unwrap_or(false);
-        if drained {
-            self.bill_and_mark_dead(rid, now);
-        }
-        self.try_dispatch(now);
-    }
-
-    fn on_scale_tick(&mut self, now: SimTime) {
+    fn on_scale_tick(&mut self, fleet: &mut FleetEngine) {
+        let now = fleet.now();
         self.tick_armed = false;
         let snap = self.window.snapshot_and_reset();
-        let live = self.live_count();
-        let provisioning = self
-            .replicas
-            .values()
-            .filter(|r| !r.ready && !r.dead && r.handle.is_alive())
-            .count();
+        let live = fleet.live_count();
+        // deferred spot launches (price above the bid) are capacity
+        // already committed — counting them stops the controller from
+        // re-ordering the same repair every tick of a long spike
+        let provisioning = fleet.provisioning_count() + fleet.deferred_count();
         let sig = ScaleSignal {
             now_s: now.as_secs_f64(),
             queue_depth: self.queue.len(),
@@ -535,30 +411,19 @@ impl ServeSim {
             ScaleDecision::Hold => {}
             ScaleDecision::Up(n) => {
                 for _ in 0..n {
-                    self.launch_replica(now, false);
+                    self.launch_replica(fleet, false);
                     self.scale_ups += 1;
                 }
             }
             ScaleDecision::Down(n) => {
                 // drain the newest live replicas first (LIFO release)
-                let victims: Vec<u32> = self
-                    .replicas
-                    .iter()
-                    .rev()
-                    .filter(|(_, r)| r.ready && !r.dead && r.handle.is_alive())
-                    .map(|(id, _)| *id)
-                    .take(n)
-                    .collect();
+                let victims: Vec<NodeId> = fleet.serving_ids().rev().take(n).collect();
                 for rid in victims {
                     self.scale_downs += 1;
-                    let idle = {
-                        let r = self.replicas.get_mut(&rid).expect("victim exists");
-                        r.handle.begin_drain();
-                        r.busy.is_none()
-                    };
-                    if idle {
-                        self.bill_and_mark_dead(rid, now);
-                    } // else: exits at its BatchDone
+                    fleet.drain(rid);
+                    if !self.busy.contains_key(&rid) {
+                        fleet.release(rid);
+                    } // else: exits at its batch completion
                 }
             }
         }
@@ -574,105 +439,32 @@ impl ServeSim {
             });
         }
         // keep ticking while load is running or admitted work remains —
-        // floor repair must be reachable until the system drains (on_arrive
-        // and on_kill re-arm if work appears after the chain winds down)
+        // floor repair must be reachable until the system drains (arrive
+        // and kill hooks re-arm if work appears after the chain winds
+        // down). Exception: a price trace that never returns to the bid
+        // can leave queued work with no present or future capacity — no
+        // tick can repair that fleet, so ticking on would spin forever.
         let next = now + SimTime::from_secs_f64(self.cfg.scale_interval_s);
-        let work_pending =
-            !self.queue.is_empty() || self.replicas.values().any(|r| r.busy.is_some());
-        if next <= self.load_end || work_pending {
+        let work_pending = !self.queue.is_empty() || !self.busy.is_empty();
+        let repairable = !self.busy.is_empty()
+            || fleet.live_count() + fleet.provisioning_count() + fleet.deferred_count() > 0
+            || !(self.cfg.spot_replicas && fleet.capacity_gone());
+        if next <= self.load_end || (work_pending && repairable) {
             self.tick_armed = true;
-            self.events.push(next, Ev::ScaleTick);
+            fleet.schedule_timer(next, TOK_TICK);
         }
     }
-
-    fn on_storm(&mut self, now: SimTime, idx: usize) {
-        let storm = self.cfg.storm[idx];
-        let victims: Vec<u32> = self
-            .replicas
-            .iter()
-            .filter(|(_, r)| !r.dead && r.handle.is_alive())
-            .map(|(id, _)| *id)
-            .take(storm.kills)
-            .collect();
-        for rid in victims {
-            if storm.notice_s <= 0.0 {
-                self.on_kill(now, rid);
-            } else {
-                self.on_notice(now, rid);
-                self.events.push(
-                    now + SimTime::from_secs_f64(storm.notice_s),
-                    Ev::ReplicaKill(rid),
-                );
-            }
-        }
-    }
-
-    /// Two-minute-notice path: stop feeding the replica, let the in-flight
-    /// batch finish (it requeues at the hard kill if it overruns).
-    fn on_notice(&mut self, now: SimTime, rid: u32) {
-        let Some(r) = self.replicas.get_mut(&rid) else { return };
-        if r.dead || !r.handle.begin_drain() {
-            return;
-        }
-        self.note_preemption(rid);
-        let idle = self.replicas.get(&rid).map(|r| r.busy.is_none()).unwrap_or(false);
-        if idle {
-            self.bill_and_mark_dead(rid, now);
-        }
-    }
-
-    fn on_kill(&mut self, now: SimTime, rid: u32) {
-        let requeue = {
-            let Some(r) = self.replicas.get_mut(&rid) else { return };
-            if r.dead {
-                return;
-            }
-            r.epoch += 1; // any scheduled BatchDone is now stale
-            r.busy.take()
-        };
-        self.note_preemption(rid);
-        if let Some(batch) = requeue {
-            // in-flight work returns to the FRONT in original order,
-            // admission timestamps intact, admission limit bypassed:
-            // admitted requests are never dropped
-            self.requeued += batch.len() as u64;
-            for req in batch.into_iter().rev() {
-                self.queue.push_front(req);
-            }
-        }
-        self.bill_and_mark_dead(rid, now);
-        if !self.queue.is_empty() {
-            // stranded work needs the control loop for floor repair
-            self.arm_tick(now);
-        }
-        self.try_dispatch(now);
-    }
-
-    fn note_preemption(&mut self, rid: u32) {
-        if let Some(r) = self.replicas.get_mut(&rid) {
-            if !r.preempted {
-                r.preempted = true;
-                self.preemptions += 1;
-            }
-        }
-    }
-
-    // ------------------------------------------------------- dispatching
 
     /// Assign closed batches to idle replicas until neither the size nor
     /// the deadline rule can close one; schedule the deadline wake-up for
     /// a partial batch.
-    fn try_dispatch(&mut self, now: SimTime) {
+    fn try_dispatch(&mut self, fleet: &mut FleetEngine) {
+        let now = fleet.now();
         loop {
             if self.queue.is_empty() {
                 return;
             }
-            let Some(rid) = self
-                .replicas
-                .iter()
-                .find(|(_, r)| r.idle_and_serving())
-                .map(|(id, _)| *id)
-            else {
+            let Some(rid) = fleet.serving_ids().find(|id| !self.busy.contains_key(id)) else {
                 return;
             };
             let oldest = self.queue.front().expect("non-empty").admitted_at;
@@ -686,7 +478,7 @@ impl ServeSim {
                 };
                 if rearm {
                     self.deadline_at = Some(deadline);
-                    self.events.push(deadline, Ev::BatchDeadline);
+                    fleet.schedule_timer(deadline, TOK_DEADLINE);
                 }
                 return;
             }
@@ -696,69 +488,138 @@ impl ServeSim {
             self.batched_reqs += batch.len() as u64;
             let service = self.cfg.service_base_s
                 + self.cfg.service_per_item_s * batch.len() as f64;
-            let r = self.replicas.get_mut(&rid).expect("found above");
-            r.busy = Some(batch);
-            let epoch = r.epoch;
-            self.events
-                .push(now + SimTime::from_secs_f64(service), Ev::BatchDone { rid, epoch });
+            self.busy.insert(rid, batch);
+            fleet.add_busy(rid, service);
+            fleet.schedule_work(rid, now + SimTime::from_secs_f64(service), 0);
         }
     }
+}
 
-    // ---------------------------------------------------------- replicas
-
-    fn launch_replica(&mut self, now: SimTime, warm: bool) {
-        let mut handle = self.provisioner.request(self.cfg.instance, self.cfg.spot_replicas, now);
-        let rid = handle.id;
-        let ready_at = if warm { now } else { handle.ready_at };
-        if warm {
-            handle.mark_ready();
-            handle.ready_at = now;
+impl FleetWorkload for ServeWorkload<'_> {
+    fn on_start(&mut self, fleet: &mut FleetEngine) -> Result<()> {
+        for _ in 0..self.cfg.initial_replicas {
+            self.launch_replica(fleet, self.cfg.warm_start);
         }
-        self.events.push(ready_at, Ev::ReplicaReady(rid));
-        if self.cfg.spot_replicas {
-            if let Some(spot) = self.spot.as_mut() {
-                let (notice, kill) = spot.sample_preemption(now);
-                self.events.push(notice, Ev::ReplicaNotice(rid));
-                self.events.push(kill, Ev::ReplicaKill(rid));
+        match self.load.take().expect("load set before run") {
+            Load::Open(gen) => {
+                self.open = Some(gen);
+                let first = SimTime::from_secs_f64(gen.gap_s(&mut self.rng));
+                if first <= self.load_end {
+                    fleet.schedule_timer(first, TOK_ARRIVE);
+                }
+            }
+            Load::Closed(cl) => {
+                self.think = Some(cl);
+                for u in 0..cl.users as u64 {
+                    // stagger first issues across one think time
+                    let at = SimTime::from_secs_f64(self.rng.next_f64() * cl.think_s.max(1e-6));
+                    if at <= self.load_end {
+                        fleet.schedule_timer(at, TOK_USER0 + u);
+                    }
+                }
+            }
+            Load::Scheduled(sched) => {
+                if let Some(first) =
+                    Self::sched_next(&sched, SimTime::ZERO, &mut self.rng, self.load_end)
+                {
+                    fleet.schedule_timer(first, TOK_ARRIVE);
+                }
+                self.sched = Some(sched);
             }
         }
-        self.replicas.insert(
-            rid,
-            Replica {
-                handle,
-                ready: false,
-                dead: false,
-                busy: None,
-                epoch: 0,
-                preempted: false,
-            },
-        );
-        self.launched += 1;
+        self.arm_tick(fleet);
+        Ok(())
     }
 
-    fn live_count(&self) -> usize {
-        self.replicas
-            .values()
-            .filter(|r| r.ready && !r.dead && r.handle.is_alive())
-            .count()
+    /// The scenario is over once the load horizon has passed and every
+    /// admitted request has been answered: remaining events are
+    /// pre-sampled tails (spot kills hours out, idle provisioning) that
+    /// would otherwise bill and count activity the scenario never
+    /// observed.
+    fn should_stop(&mut self, _fleet: &FleetEngine, next_at: SimTime) -> bool {
+        next_at > self.load_end && self.queue.is_empty() && self.busy.is_empty()
     }
 
-    fn bill_and_mark_dead(&mut self, rid: u32, now: SimTime) {
-        let Some(r) = self.replicas.get_mut(&rid) else { return };
-        if r.dead {
-            return;
+    fn on_node_ready(&mut self, fleet: &mut FleetEngine, _node: NodeId) -> Result<()> {
+        self.try_dispatch(fleet);
+        Ok(())
+    }
+
+    /// Two-minute-notice path: stop feeding the replica, let the in-flight
+    /// batch finish (it requeues at the hard kill if it overruns). The
+    /// engine has already drained the node and counted the preemption.
+    fn on_notice(&mut self, fleet: &mut FleetEngine, node: NodeId) -> Result<()> {
+        if !self.busy.contains_key(&node) {
+            fleet.release(node);
         }
-        r.dead = true;
-        r.handle.terminate();
-        let spec = r.handle.ty.spec();
-        let hours = now.saturating_sub(r.handle.launched_at).as_secs_f64() / 3600.0;
-        self.ledger.charge(spec.name, r.handle.spot, spec.price(r.handle.spot), hours);
+        Ok(())
+    }
+
+    fn on_kill(&mut self, fleet: &mut FleetEngine, node: NodeId) -> Result<()> {
+        if let Some(batch) = self.busy.remove(&node) {
+            // in-flight work returns to the FRONT in original order,
+            // admission timestamps intact, admission limit bypassed:
+            // admitted requests are never dropped
+            self.requeued += batch.len() as u64;
+            for req in batch.into_iter().rev() {
+                self.queue.push_front(req);
+            }
+        }
+        if !self.queue.is_empty() {
+            // stranded work needs the control loop for floor repair
+            self.arm_tick(fleet);
+        }
+        self.try_dispatch(fleet);
+        Ok(())
+    }
+
+    fn on_work_done(&mut self, fleet: &mut FleetEngine, node: NodeId, _token: u64) -> Result<()> {
+        let Some(batch) = self.busy.remove(&node) else { return Ok(()) };
+        let now = fleet.now();
+        for req in &batch {
+            let lat = now.saturating_sub(req.admitted_at).as_secs_f64();
+            self.latency.record(lat);
+            self.window.record(lat);
+            self.completed += 1;
+            self.last_completion = now;
+            if let (Some(cl), Some(u)) = (self.think, req.user) {
+                self.schedule_user(fleet, cl, u);
+            }
+        }
+        // a draining replica (spot notice / scale-down) exits after its
+        // final batch
+        let drained = fleet.node(node).map(|n| n.is_draining()).unwrap_or(false);
+        if drained {
+            fleet.release(node);
+        }
+        self.try_dispatch(fleet);
+        Ok(())
+    }
+
+    fn on_timer(&mut self, fleet: &mut FleetEngine, token: u64) -> Result<()> {
+        match token {
+            TOK_TICK => self.on_scale_tick(fleet),
+            TOK_DEADLINE => {
+                if self.deadline_at == Some(fleet.now()) {
+                    self.deadline_at = None;
+                    self.try_dispatch(fleet);
+                }
+            }
+            TOK_ARRIVE => self.on_arrive(fleet, None),
+            user => self.on_arrive(fleet, Some(user - TOK_USER0)),
+        }
+        Ok(())
+    }
+
+    fn is_done(&self, _fleet: &FleetEngine) -> bool {
+        false // the run ends via `should_stop` or queue exhaustion
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::PriceTrace;
 
     /// Hand-calculable scenario: jitter-free provisioning, metronome
     /// arrivals, 10-second batches, one scripted instant kill mid-batch.
@@ -880,6 +741,8 @@ mod tests {
         );
         // batching actually happened under load
         assert!(r.mean_batch_fill > 1.5, "mean fill {}", r.mean_batch_fill);
+        // the storm fired at its scripted engine-start time
+        assert_eq!(sim.fleet_stats().storms_fired_at_s, vec![60.0]);
     }
 
     #[test]
@@ -959,5 +822,32 @@ mod tests {
         assert!(r.preemptions > 0, "market this hostile must preempt: {r:?}");
         assert_eq!(r.completed, r.admitted, "churn never drops admitted work");
         assert!(r.replicas_launched > 4, "floor repair replaced lost replicas");
+    }
+
+    #[test]
+    fn price_spike_reclaims_the_fleet_and_recovery_restores_it() {
+        // traced price above a 0.10 bid over [30, 90): the whole fleet is
+        // noticed at the crossing and killed 5 s later; floor repair's
+        // replacement launches defer to t=90 — yet every admitted request
+        // is still answered after the recovery
+        let mut cfg = storm_cfg();
+        cfg.storm = vec![];
+        cfg.initial_replicas = 4;
+        cfg.autoscaler.min_replicas = 2;
+        let trace =
+            PriceTrace::new(vec![(0.0, 0.05), (30.0, 0.90), (90.0, 0.06)]).unwrap();
+        cfg.price_trace =
+            Some(PriceTraceConfig { trace, bid_usd: 0.10, notice_s: 5.0 });
+        let mut sim = ServeSim::new(cfg);
+        let r = sim.run(Load::Open(OpenLoop::poisson(300.0)), 150.0).unwrap();
+        assert_eq!(r.preemptions, 4, "every replica hit the price crossing: {r:?}");
+        assert_eq!(r.completed, r.admitted, "zero dropped through the spike");
+        assert!(
+            sim.fleet_stats().launches_deferred >= 1,
+            "mid-spike repairs deferred to the recovery: {:?}",
+            sim.fleet_stats()
+        );
+        assert!(r.replicas_launched > 4, "the fleet was rebuilt after the spike");
+        assert!(r.makespan_s > 90.0, "completions resumed after the recovery");
     }
 }

@@ -8,36 +8,48 @@ use std::sync::Arc;
 /// `SimTime` is ordered, copyable and cheap; arithmetic helpers keep the
 /// call sites readable (`t + SimTime::from_secs_f64(0.5)`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
-pub struct SimTime(pub u64);
+pub struct SimTime(
+    /// Nanoseconds since simulation start.
+    pub u64,
+);
 
 impl SimTime {
+    /// Simulation start.
     pub const ZERO: SimTime = SimTime(0);
 
+    /// A point `n` nanoseconds after simulation start.
     pub fn from_nanos(n: u64) -> Self {
         SimTime(n)
     }
 
+    /// A point `us` microseconds after simulation start.
     pub fn from_micros(us: u64) -> Self {
         SimTime(us * 1_000)
     }
 
+    /// A point `ms` milliseconds after simulation start.
     pub fn from_millis(ms: u64) -> Self {
         SimTime(ms * 1_000_000)
     }
 
+    /// A point `s` whole seconds after simulation start.
     pub fn from_secs(s: u64) -> Self {
         SimTime(s * 1_000_000_000)
     }
 
+    /// A point `s` (fractional) seconds after simulation start, rounded
+    /// to the nearest nanosecond.
     pub fn from_secs_f64(s: f64) -> Self {
         debug_assert!(s >= 0.0, "negative sim duration: {s}");
         SimTime((s.max(0.0) * 1e9).round() as u64)
     }
 
+    /// Nanoseconds since simulation start.
     pub fn as_nanos(self) -> u64 {
         self.0
     }
 
+    /// Seconds since simulation start.
     pub fn as_secs_f64(self) -> f64 {
         self.0 as f64 / 1e9
     }
@@ -85,10 +97,12 @@ pub struct SimClock {
 }
 
 impl SimClock {
+    /// A clock at t=0.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// The current virtual time.
     pub fn now(&self) -> SimTime {
         SimTime(self.now_ns.load(Ordering::Acquire))
     }

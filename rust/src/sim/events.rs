@@ -47,6 +47,7 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue.
     pub fn new() -> Self {
         Self::default()
     }
@@ -68,10 +69,12 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|Reverse(e)| e.at)
     }
 
+    /// Pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// No events pending?
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

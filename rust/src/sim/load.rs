@@ -28,10 +28,12 @@ pub struct OpenLoop {
 }
 
 impl OpenLoop {
+    /// Poisson arrivals at `rate_rps` (exponential gaps).
     pub fn poisson(rate_rps: f64) -> Self {
         Self { rate_rps, poisson: true }
     }
 
+    /// Fixed-gap arrivals at `rate_rps` (hand-calculable timelines).
     pub fn metronome(rate_rps: f64) -> Self {
         Self { rate_rps, poisson: false }
     }
@@ -52,7 +54,9 @@ impl OpenLoop {
 /// re-issuing `think_s` after the previous response (or shed decision).
 #[derive(Debug, Clone, Copy)]
 pub struct ClosedLoop {
+    /// Client population size.
     pub users: usize,
+    /// Seconds a user waits between a response and the next request.
     pub think_s: f64,
 }
 

@@ -8,6 +8,8 @@
 //! [`RateSchedule`] supply the canonical client models for the serving
 //! scenarios.
 
+#![warn(missing_docs)]
+
 mod clock;
 mod events;
 mod load;

@@ -22,6 +22,7 @@ impl SimRng {
         Self { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

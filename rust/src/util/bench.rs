@@ -79,6 +79,41 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// `true` when the benches should skip their slow wallclock sections
+/// (`BENCH_SMOKE=1`; CI's `scripts/bench_summary --smoke` sets it so the
+/// deterministic virtual-time metrics still land in `BENCH_fleet.json`).
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Append one machine-readable metrics record for `bench` to the
+/// JSON-lines file named by the `BENCH_JSON` env var (no-op when unset).
+/// `scripts/bench_summary` runs the virtual-time benches with it set and
+/// assembles the lines into `BENCH_fleet.json`, so the perf trajectory
+/// is tracked in-repo per bench.
+pub fn emit_json(bench: &str, metrics: &[(&str, f64)]) {
+    let Ok(path) = std::env::var("BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    let line = crate::util::Json::obj(vec![
+        ("bench", crate::util::Json::str(bench)),
+        (
+            "metrics",
+            crate::util::Json::Obj(
+                metrics.iter().map(|&(k, v)| (k.to_string(), crate::util::Json::Num(v))).collect(),
+            ),
+        ),
+    ]);
+    use std::io::Write;
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{}", line.to_string());
+        }
+        Err(e) => eprintln!("BENCH_JSON: cannot open {path}: {e}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

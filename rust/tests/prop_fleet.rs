@@ -1,0 +1,219 @@
+//! Property tests on the shared [`FleetEngine`] (via the crate's own
+//! `util::prop` harness — this image has no proptest), plus the
+//! cross-driver storm-timing regression test.
+//!
+//! The conservation property is workload-agnostic: under any mix of
+//! storms, Poisson markets, and price traces, every dispatched work unit
+//! either completes or is explicitly requeued (never silently lost), the
+//! lifecycle classes partition the fleet (the live count can never go
+//! negative), and a preemption notice always precedes its kill — all
+//! checked by [`FleetEngine::check_invariants`] inside every hook.
+
+use std::collections::BTreeMap;
+
+use hyper_dist::cloud::{PriceTrace, ProvisionerConfig, SpotMarketConfig, StormEvent};
+use hyper_dist::fleet::{FleetConfig, FleetEngine, PriceTraceConfig, UnitsWorkload as Units};
+use hyper_dist::sim::SimRng;
+use hyper_dist::util::prop::run_prop;
+
+/// After any run: nothing was silently lost.
+fn assert_conserved(engine: &FleetEngine, w: &Units) {
+    engine.check_invariants();
+    assert_eq!(w.completed, w.total, "every unit completed");
+    assert!(w.queue.is_empty(), "no unit left queued after completion");
+    assert_eq!(
+        w.dispatched,
+        w.completed as u64 + w.requeued as u64,
+        "every dispatched unit completed or was explicitly requeued"
+    );
+    assert!(
+        engine.stats().preemptions as usize <= engine.stats().nodes_launched,
+        "preemptions counted at most once per node"
+    );
+}
+
+/// Storms + an optional background Poisson market, random shapes.
+#[test]
+fn prop_fleet_conservation_under_storms_and_market() {
+    run_prop(
+        "fleet conservation (storms + market)",
+        60,
+        |rng: &mut SimRng| {
+            let total = 1 + rng.gen_range(30) as usize;
+            let unit_s = 1.0 + rng.gen_range(25) as f64;
+            let workers = 1 + rng.gen_range(5) as usize;
+            let market = rng.gen_bool(0.5);
+            let mean_ttp = 120.0 + rng.gen_range(2000) as f64;
+            let n_storms = rng.gen_range(3) as usize;
+            let storms: Vec<(f64, usize, f64)> = (0..n_storms)
+                .map(|_| {
+                    (
+                        rng.gen_range(300) as f64,
+                        rng.gen_range(6) as usize,
+                        if rng.gen_bool(0.5) { 0.0 } else { 2.0 + rng.gen_range(20) as f64 },
+                    )
+                })
+                .collect();
+            (total, unit_s, workers, market, mean_ttp, storms, rng.next_u64())
+        },
+        |(total, unit_s, workers, market, mean_ttp, storms, seed)| {
+            let mut engine = FleetEngine::new(FleetConfig {
+                spot_market: market.then(|| SpotMarketConfig {
+                    mean_ttp_s: mean_ttp,
+                    notice_s: 30.0,
+                }),
+                storm: storms
+                    .iter()
+                    .map(|&(at_s, kills, notice_s)| StormEvent { at_s, kills, notice_s })
+                    .collect(),
+                seed,
+                ..FleetConfig::default()
+            });
+            let mut w = Units::new(total, unit_s, workers, true);
+            engine.run(&mut w).unwrap();
+            let end = engine.now().as_secs_f64();
+            engine.shutdown(engine.now());
+            assert_conserved(&engine, &w);
+            // storms fire in time order, each at exactly its scripted
+            // engine-start time; every storm due before the run ended fired
+            let fired = engine.stats().storms_fired_at_s.clone();
+            assert!(fired.windows(2).all(|p| p[0] <= p[1]), "{fired:?}");
+            let mut cfg_times: Vec<f64> = storms.iter().map(|&(t, _, _)| t).collect();
+            cfg_times.sort_by(f64::total_cmp);
+            for at in &fired {
+                assert!(cfg_times.contains(at), "storm fired off-schedule: {at}");
+            }
+            let due = cfg_times.iter().filter(|t| **t < end).count();
+            assert!(fired.len() >= due, "a due storm never fired: {fired:?} vs {cfg_times:?}");
+        },
+    );
+}
+
+/// Price-trace preemption with random spikes and a bid the trace always
+/// eventually recovers below (so deferred capacity can provision).
+#[test]
+fn prop_fleet_conservation_under_price_traces() {
+    run_prop(
+        "fleet conservation (price trace)",
+        60,
+        |rng: &mut SimRng| {
+            let total = 1 + rng.gen_range(20) as usize;
+            let unit_s = 1.0 + rng.gen_range(20) as f64;
+            let workers = 1 + rng.gen_range(4) as usize;
+            // random step series ending low, so the market always recovers
+            let n = 2 + rng.gen_range(5) as usize;
+            let mut points: Vec<(f64, f64)> = Vec::with_capacity(n + 1);
+            let mut t = 0.0;
+            for _ in 0..n {
+                points.push((t, rng.gen_range(100) as f64 / 100.0));
+                t += 20.0 + rng.gen_range(200) as f64;
+            }
+            points.push((t, 0.01));
+            let bid = 0.02 + rng.gen_range(80) as f64 / 100.0;
+            let notice_s = if rng.gen_bool(0.5) { 0.0 } else { rng.gen_range(30) as f64 };
+            (total, unit_s, workers, points, bid, notice_s, rng.next_u64())
+        },
+        |(total, unit_s, workers, points, bid, notice_s, seed)| {
+            let trace = PriceTrace::new(points).unwrap();
+            let mut engine = FleetEngine::new(FleetConfig {
+                price_trace: Some(PriceTraceConfig { trace, bid_usd: bid, notice_s }),
+                seed,
+                ..FleetConfig::default()
+            });
+            let mut w = Units::new(total, unit_s, workers, true);
+            engine.run(&mut w).unwrap();
+            engine.shutdown(engine.now());
+            assert_conserved(&engine, &w);
+        },
+    );
+}
+
+/// The storm-timing bugfix pinned end to end: all three virtual-time
+/// drivers schedule a `t=60 s` storm against the SAME origin — engine
+/// start — so the wave lands at the identical virtual instant in every
+/// scenario, regardless of provisioning latency or first dispatch.
+#[test]
+fn storm_at_60s_fires_at_the_same_instant_in_all_three_drivers() {
+    use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
+    use hyper_dist::search::{CurveConfig, SearchDriver, SearchDriverConfig};
+    use hyper_dist::serve::{Load, ServeSim, ServeSimConfig};
+    use hyper_dist::sim::OpenLoop;
+    use hyper_dist::workflow::{Recipe, Workflow};
+
+    let storm = vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 0.0 }];
+    // deliberately slow, exact provisioning: nodes are only ready at
+    // t=55 and first dispatch follows — a "time since dispatch" or
+    // "time since ready" origin would skew the firing time
+    let exact = ProvisionerConfig { warm_cache_prob: 1.0, jitter: 0.0, ..Default::default() };
+
+    // 1. SimDriver (DAG tasks)
+    let yaml = r#"
+name: storm-origin
+experiments:
+  - name: etl
+    instance: m5.xlarge
+    workers: 4
+    spot: true
+    command: "p {i}"
+    params: { i: { range: [0, 15] } }
+    work: { duration_s: 20.0 }
+"#;
+    let mut wf = Workflow::compile(Recipe::from_yaml(yaml).unwrap(), 1).unwrap();
+    let mut dag = SimDriver::new(SimDriverConfig {
+        provisioner: exact.clone(),
+        spot_market: SpotMarketConfig { mean_ttp_s: 1e9, notice_s: 120.0 },
+        storm: storm.clone(),
+        ..Default::default()
+    });
+    let r = dag.run(&mut wf).unwrap();
+    assert!(r.workflow_complete);
+
+    // 2. ServeSim (batching replicas), cold start: replicas ready at 55
+    let mut serve = ServeSim::new(ServeSimConfig {
+        initial_replicas: 4,
+        warm_start: false,
+        provisioner: exact.clone(),
+        storm: storm.clone(),
+        ..Default::default()
+    });
+    let sr = serve.run(Load::Open(OpenLoop::poisson(50.0)), 90.0).unwrap();
+    assert_eq!(sr.completed, sr.admitted);
+
+    // 3. SearchDriver (checkpointable trials)
+    let mut scfg = SearchDriverConfig {
+        curve: CurveConfig { noise: 0.0, ..Default::default() },
+        provisioner: exact,
+        storm,
+        ..Default::default()
+    };
+    scfg.search.trials = 8;
+    scfg.search.max_steps = 30;
+    scfg.search.step_time_s = 1.0;
+    scfg.search.workers = 4;
+    let mut search = SearchDriver::new(
+        scfg,
+        std::sync::Arc::new(hyper_dist::storage::MemStore::new()),
+        &{
+            let mut m = BTreeMap::new();
+            m.insert("p".to_string(), hyper_dist::workflow::ParamSpec::Range([0, 7]));
+            m
+        },
+        "t {p}",
+    )
+    .unwrap();
+    let xr = search.run().unwrap();
+    assert_eq!(xr.lost, 0);
+
+    let fired = [
+        dag.fleet_stats().storms_fired_at_s.clone(),
+        serve.fleet_stats().storms_fired_at_s.clone(),
+        search.fleet_stats().storms_fired_at_s.clone(),
+    ];
+    for (i, f) in fired.iter().enumerate() {
+        assert_eq!(f, &vec![60.0], "driver {i} fired its storm off the shared origin");
+    }
+    assert!(
+        fired[0] == fired[1] && fired[1] == fired[2],
+        "all three scenarios see the wave at the same virtual instant: {fired:?}"
+    );
+}
