@@ -119,7 +119,7 @@ experiments:
 
     let mut losses: Vec<(u64, f32)> = Vec::new();
     let t0 = Instant::now();
-    let mut paths: Vec<String> = fs.list("train/");
+    let mut paths: Vec<String> = fs.list("train/")?;
     let mut epoch_rng = SimRng::new(99);
 
     'outer: loop {

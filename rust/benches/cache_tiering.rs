@@ -68,6 +68,7 @@ fn main() {
         cache_bytes: RAM_BYTES,
         spill_dir: Some(spill_root.subdir("spill").unwrap()),
         spill_bytes: 256 << 20,
+        spill_mmap: true,
         prefetch_max_depth: 0, // isolate tiering from readahead
         background_prefetch: false, // inline I/O: deterministic counters
     };

@@ -1,0 +1,184 @@
+//! Metadata-plane bench: sharded lazy manifests, path-index lookups,
+//! content-addressed dedup.
+//!
+//! The seed mounted a namespace by downloading and parsing one monolithic
+//! manifest — O(files) bytes and JSON work before the first read — and
+//! resolved every path with a linear scan of the file table. At a billion
+//! files neither survives. This bench pins the rebuilt plane's scaling
+//! claims on deterministic `CountingStore` byte counters (wallclock
+//! sections are skipped under `BENCH_SMOKE=1`):
+//!
+//! 1. Mount is sublinear in file count: 10x the files costs < 2x the
+//!    mount bytes (one root-manifest GET either way; file-table shards
+//!    page in lazily on first touch).
+//! 2. Path lookup is indexed: warm `stat` issues zero store traffic, and
+//!    per-lookup wallclock stays flat as the namespace grows 10x.
+//! 3. Warm reads are flat vs file count: zero store GETs per epoch at
+//!    both sizes.
+//! 4. Content-addressed dedup collapses transfer both ways: 256 files
+//!    with 8 distinct contents cost 8 chunk PUTs on upload and 8 chunk
+//!    GETs on a cold read-through.
+
+use std::sync::Arc;
+
+use hyper_dist::hfs::{synthesize_namespace, HyperFs, UploadConfig};
+use hyper_dist::storage::{CountingStore, MemStore, StoreHandle};
+use hyper_dist::util::bench::{emit_json, header, row, section, smoke};
+
+const SMALL: usize = 512;
+const BIG: usize = 5120; // 10x SMALL
+const FILE_BYTES: usize = 2048;
+const CHUNK_BYTES: u64 = 64 << 10; // 32 files per chunk
+
+/// Synthesize an `n`-file namespace, then wrap the store in a fresh
+/// `CountingStore` so upload traffic never pollutes mount/read counters.
+fn synth(n: usize) -> (Arc<CountingStore>, StoreHandle, Vec<String>) {
+    let inner: StoreHandle = Arc::new(MemStore::new());
+    let cfg = UploadConfig { chunk_size: CHUNK_BYTES, ..Default::default() };
+    let (paths, _) = synthesize_namespace(&inner, "meta", n, FILE_BYTES, 0, cfg).unwrap();
+    let counting = Arc::new(CountingStore::new(inner));
+    let store: StoreHandle = counting.clone();
+    (counting, store, paths)
+}
+
+/// Mount cost in store bytes + GETs (the deterministic stand-in for
+/// mount latency against object storage).
+fn mount_cost(n: usize) -> (Arc<HyperFs>, Arc<CountingStore>, Vec<String>, u64, u64) {
+    let (counting, store, paths) = synth(n);
+    let fs = Arc::new(HyperFs::mount(store, "meta", 1 << 30).unwrap());
+    (fs, counting.clone(), paths, counting.total_get_bytes(), counting.total_gets())
+}
+
+fn main() {
+    // ---- mount: sublinear in file count --------------------------------
+    section("mount cost vs file count (sharded root manifest, lazy shards)");
+    header("files", &["mount bytes", "mount GETs"]);
+    let (fs_s, count_s, paths_s, bytes_s, gets_s) = mount_cost(SMALL);
+    let (fs_b, count_b, paths_b, bytes_b, gets_b) = mount_cost(BIG);
+    row(&format!("{SMALL}"), &[format!("{bytes_s} B"), format!("{gets_s}")]);
+    row(&format!("{BIG}"), &[format!("{bytes_b} B"), format!("{gets_b}")]);
+    assert_eq!(gets_s, 1, "mount reads only the root manifest");
+    assert_eq!(gets_b, 1, "mount reads only the root manifest");
+    assert!(
+        bytes_b < 2 * bytes_s,
+        "10x files must cost < 2x mount bytes ({bytes_b} vs {bytes_s})"
+    );
+
+    // ---- path lookup: indexed, no store traffic once warm --------------
+    // touch one path per mount so the shard + chunk table are resident
+    fs_s.stat(&paths_s[0]).unwrap();
+    fs_s.chunk_object_key(0).unwrap();
+    fs_b.stat(&paths_b[0]).unwrap();
+    fs_b.chunk_object_key(0).unwrap();
+    count_s.reset();
+    count_b.reset();
+    for p in &paths_b {
+        assert_eq!(fs_b.stat(p).unwrap(), FILE_BYTES as u64);
+    }
+    assert!(
+        count_b.total_gets() <= 1,
+        "warm stat sweep may page in at most the one remaining shard"
+    );
+    assert!(fs_b.stat("train/does-not-exist").is_err());
+
+    section("path lookup: hash index vs namespace size (wallclock)");
+    if smoke() {
+        println!("  (skipped: BENCH_SMOKE=1)");
+    } else {
+        let lookups = 200_000usize;
+        let time_stats = |fs: &HyperFs, paths: &[String]| {
+            let t0 = std::time::Instant::now();
+            for i in 0..lookups {
+                std::hint::black_box(fs.stat(&paths[(i * 31) % paths.len()]).unwrap());
+            }
+            t0.elapsed().as_secs_f64() / lookups as f64
+        };
+        let per_s = time_stats(&fs_s, &paths_s);
+        let per_b = time_stats(&fs_b, &paths_b);
+        header("files", &["ns/lookup"]);
+        row(&format!("{SMALL}"), &[format!("{:.0}", per_s * 1e9)]);
+        row(&format!("{BIG}"), &[format!("{:.0}", per_b * 1e9)]);
+        assert!(
+            per_b < per_s * 5.0,
+            "indexed lookup must not scale with file count ({per_b} vs {per_s})"
+        );
+    }
+
+    // ---- warm reads: flat vs file count --------------------------------
+    section("warm-read epoch vs file count (store GETs must be zero)");
+    let warm = |fs: &Arc<HyperFs>, paths: &[String], counting: &CountingStore| -> (u64, f64) {
+        for p in paths {
+            fs.read_file(p).unwrap(); // cold pass fills the cache
+        }
+        counting.reset();
+        let t0 = std::time::Instant::now();
+        let mut bytes = 0u64;
+        for p in paths {
+            bytes += fs.read_file(p).unwrap().len() as u64;
+        }
+        (counting.total_gets(), bytes as f64 / t0.elapsed().as_secs_f64() / 1e6)
+    };
+    let (warm_gets_s, mbs_s) = warm(&fs_s, &paths_s, &count_s);
+    let (warm_gets_b, mbs_b) = warm(&fs_b, &paths_b, &count_b);
+    header("files", &["store GETs", "MB/s"]);
+    row(&format!("{SMALL}"), &[format!("{warm_gets_s}"), format!("{mbs_s:.0}")]);
+    row(&format!("{BIG}"), &[format!("{warm_gets_b}"), format!("{mbs_b:.0}")]);
+    assert_eq!(warm_gets_s, 0, "warm epoch must not touch the store");
+    assert_eq!(warm_gets_b, 0, "warm epoch must not touch the store");
+    if !smoke() {
+        assert!(
+            mbs_b > mbs_s * 0.33,
+            "warm-read throughput must stay flat vs file count ({mbs_b:.0} vs {mbs_s:.0} MB/s)"
+        );
+    }
+
+    // ---- content-addressed dedup: PUTs and GETs ------------------------
+    section("content-addressed dedup (256 files, 8 distinct contents, 1 file/chunk)");
+    let inner: StoreHandle = Arc::new(MemStore::new());
+    let counting = Arc::new(CountingStore::new(inner));
+    let store: StoreHandle = counting.clone();
+    let cfg = UploadConfig { chunk_size: 8192, ..Default::default() };
+    let (paths, ustats) = synthesize_namespace(&store, "dup", 256, 8192, 8, cfg).unwrap();
+    assert_eq!(ustats.chunks_written, 8, "8 distinct contents -> 8 chunk PUTs");
+    assert_eq!(ustats.chunks_deduped, 248);
+    let put_bytes = counting.total_put_bytes();
+    let logical = 256u64 * 8192;
+    assert!(
+        put_bytes < logical / 4,
+        "upload transfer must collapse: {put_bytes} B put for {logical} B logical"
+    );
+    let fs = HyperFs::mount(store, "dup", 1 << 30).unwrap();
+    fs.stat(&paths[0]).unwrap();
+    fs.chunk_object_key(0).unwrap();
+    counting.reset();
+    for p in &paths {
+        fs.read_file(p).unwrap();
+    }
+    header("direction", &["logical bytes", "store bytes", "store ops"]);
+    row("upload (PUT)", &[format!("{logical}"), format!("{put_bytes}"), "8+meta".into()]);
+    row(
+        "cold read (GET)",
+        &[
+            format!("{logical}"),
+            format!("{}", counting.total_get_bytes()),
+            format!("{}", counting.total_gets()),
+        ],
+    );
+    assert_eq!(fs.stats.backend_gets.get(), 8, "one GET per distinct content");
+    assert_eq!(fs.stats.dedup_hits.get(), 248, "248 chunks served by a cached twin");
+    assert_eq!(counting.total_get_bytes(), 8 * 8192);
+
+    emit_json(
+        "hfs_metadata",
+        &[
+            ("mount_bytes_small", bytes_s as f64),
+            ("mount_bytes_big", bytes_b as f64),
+            ("mount_gets", gets_b as f64),
+            ("warm_epoch_gets", warm_gets_b as f64),
+            ("dedup_backend_gets", 8.0),
+            ("dedup_hits", 248.0),
+            ("dedup_put_bytes", put_bytes as f64),
+        ],
+    );
+    println!("\nhfs_metadata OK");
+}

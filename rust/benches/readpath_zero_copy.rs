@@ -15,7 +15,7 @@
 
 use std::sync::Arc;
 
-use hyper_dist::hfs::{ChunkCache, HyperFs, Uploader};
+use hyper_dist::hfs::{ChunkBytes, ChunkCache, HyperFs, Uploader};
 use hyper_dist::storage::{MemStore, StoreHandle};
 use hyper_dist::util::bench::{header, row, section};
 
@@ -74,8 +74,8 @@ fn scan_throughput(fs: &Arc<HyperFs>, paths: &[String], threads: usize, copy: bo
 
 fn cache_contention(shards: usize, threads: usize) -> f64 {
     let cache = ChunkCache::with_shards(1 << 30, shards);
-    for id in 0..64u32 {
-        cache.insert(id, Arc::new(vec![0u8; 1 << 20]));
+    for id in 0..64u64 {
+        cache.insert(id, Arc::new(ChunkBytes::ram(vec![0u8; 1 << 20])));
     }
     let gets_per_thread = 200_000usize;
     let t0 = std::time::Instant::now();
@@ -84,7 +84,7 @@ fn cache_contention(shards: usize, threads: usize) -> f64 {
             let cache = cache.clone();
             s.spawn(move || {
                 for i in 0..gets_per_thread {
-                    let id = ((i * 7 + t * 13) % 64) as u32;
+                    let id = ((i * 7 + t * 13) % 64) as u64;
                     std::hint::black_box(cache.get(id));
                 }
             });
@@ -99,7 +99,7 @@ fn main() {
     // count (readahead may have absorbed some of them) plus the <=2
     // probing reads the range-GET fast path serves before the sequential
     // detector engages
-    assert!(fs.stats.cache_misses.get() as usize <= fs.manifest().chunks.len() + 2);
+    assert!(fs.stats.cache_misses.get() as usize <= fs.chunk_count() + 2);
 
     section("read path: seed-style copying vs zero-copy ByteView (cache-hit MB/s)");
     header("readers", &["copying", "zero-copy", "speedup"]);

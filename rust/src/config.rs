@@ -47,6 +47,11 @@ pub struct HfsConfig {
     /// readahead). The working depth moves within `[0, cap]` with the
     /// observed access pattern; this is the ceiling, not a fixed depth.
     pub prefetch_max_depth: u32,
+    /// Serve spill-tier hits as mmap-backed views instead of copying the
+    /// chunk through a heap buffer (only read when `spill_dir` is set;
+    /// no-op on non-unix targets). The digest is verified over the mapped
+    /// pages on first map, so corruption detection is unchanged.
+    pub spill_mmap: bool,
     /// Run readahead and spill writes on background fetch lanes. Turn off
     /// for deterministic tests/benches (all I/O inline) and virtual-time
     /// sims (no threads at all).
@@ -59,8 +64,41 @@ impl Default for HfsConfig {
             cache_bytes: 1 << 30,
             spill_dir: None,
             spill_bytes: 8 << 30,
+            spill_mmap: true,
             prefetch_max_depth: 8,
             background_prefetch: true,
+        }
+    }
+}
+
+/// Tunables of one HFS namespace upload: chunk geometry, manifest
+/// sharding, and small-file packing.
+///
+/// Read by [`crate::hfs::Uploader`]. Defaults produce the sharded
+/// (format-2) content-addressed layout; `legacy_layout` writes the
+/// pre-shard monolithic manifest for back-compat tests and old readers.
+#[derive(Debug, Clone)]
+pub struct UploadConfig {
+    /// Target chunk size in bytes; files are packed/split against this.
+    pub chunk_size: u64,
+    /// File entries per manifest shard. Mount cost is O(files/shard_files)
+    /// root entries; readers page shards in lazily on first path touch.
+    pub shard_files: usize,
+    /// Files at or below this many bytes are packed into shared archive
+    /// chunks instead of occupying chunk space alone (0 disables packing).
+    pub pack_threshold: u64,
+    /// Write the pre-shard monolithic `manifest.json` and `(ns, id)` chunk
+    /// keys instead of the sharded content-addressed layout.
+    pub legacy_layout: bool,
+}
+
+impl Default for UploadConfig {
+    fn default() -> Self {
+        Self {
+            chunk_size: crate::hfs::DEFAULT_CHUNK_SIZE,
+            shard_files: 4096,
+            pack_threshold: 0,
+            legacy_layout: false,
         }
     }
 }
@@ -205,8 +243,18 @@ mod tests {
     fn default_hfs_config_spills_nowhere() {
         let c = HfsConfig::default();
         assert!(c.spill_dir.is_none());
+        assert!(c.spill_mmap, "mmap spill reads are the default");
         assert!(c.prefetch_max_depth > 0);
         assert!(c.background_prefetch);
+    }
+
+    #[test]
+    fn default_upload_config_is_sharded_cas() {
+        let c = UploadConfig::default();
+        assert!(!c.legacy_layout, "new namespaces get the sharded layout");
+        assert_eq!(c.pack_threshold, 0, "packing is opt-in");
+        assert!(c.shard_files >= 1);
+        assert_eq!(c.chunk_size, crate::hfs::DEFAULT_CHUNK_SIZE);
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub struct EtlReport {
 pub fn preprocess_shard(fs: &HyperFs, prefix: &str, min_tokens: usize) -> Result<(Vec<u8>, EtlReport)> {
     let mut report = EtlReport::default();
     let mut writer = RecordWriter::new();
-    for path in fs.list(prefix) {
+    for path in fs.list(prefix)? {
         let data = fs.read_file(&path)?;
         report.files_in += 1;
         report.bytes_in += data.len() as u64;

@@ -19,7 +19,7 @@ use std::sync::Mutex;
 
 use crate::metrics::Counter;
 
-use super::view::ChunkData;
+use super::view::{ChunkBytes, ChunkData};
 
 /// Shards stop multiplying once each would hold less than this budget.
 const MIN_SHARD_BYTES: u64 = 1 << 20;
@@ -30,7 +30,11 @@ const MAX_SHARDS: usize = 16;
 /// Sentinel slab index for "no slot".
 const NIL: usize = usize::MAX;
 
-/// Thread-safe sharded LRU of chunk id -> bytes.
+/// Thread-safe sharded LRU of chunk key -> bytes.
+///
+/// Keys are `u64` content digests (or a `(ns, id)` hash for digest-less
+/// legacy chunks — see `HyperFs`), so identical chunks reached through
+/// different namespaces or chunk ids share one cache entry.
 #[derive(Clone)]
 pub struct ChunkCache {
     shards: Arc<Vec<Mutex<Shard>>>,
@@ -39,7 +43,7 @@ pub struct ChunkCache {
 }
 
 struct Slot {
-    id: u32,
+    id: u64,
     data: ChunkData,
     prev: usize,
     next: usize,
@@ -48,7 +52,7 @@ struct Slot {
 struct Shard {
     capacity_bytes: u64,
     used_bytes: u64,
-    map: HashMap<u32, usize>,
+    map: HashMap<u64, usize>,
     slots: Vec<Slot>,
     free: Vec<usize>,
     /// Most-recently-used slot, or NIL.
@@ -109,12 +113,15 @@ impl Shard {
         self.map.remove(&id);
         self.used_bytes -= size;
         // hand the payload out now; the slab slot is recycled
-        let data = std::mem::replace(&mut self.slots[slot].data, Arc::new(Vec::new()));
+        let data = std::mem::replace(
+            &mut self.slots[slot].data,
+            Arc::new(ChunkBytes::ram(Vec::new())),
+        );
         self.free.push(slot);
         data
     }
 
-    fn alloc_slot(&mut self, id: u32, data: ChunkData) -> usize {
+    fn alloc_slot(&mut self, id: u64, data: ChunkData) -> usize {
         match self.free.pop() {
             Some(slot) => {
                 self.slots[slot] = Slot { id, data, prev: NIL, next: NIL };
@@ -165,7 +172,7 @@ impl ChunkCache {
         }
     }
 
-    fn shard(&self, id: u32) -> &Mutex<Shard> {
+    fn shard(&self, id: u64) -> &Mutex<Shard> {
         &self.shards[id as usize % self.shards.len()]
     }
 
@@ -180,7 +187,7 @@ impl ChunkCache {
     }
 
     /// Look up a chunk, refreshing its recency. O(1).
-    pub fn get(&self, id: u32) -> Option<ChunkData> {
+    pub fn get(&self, id: u64) -> Option<ChunkData> {
         let mut s = self.shard(id).lock().unwrap();
         let slot = *s.map.get(&id)?;
         s.detach(slot);
@@ -190,7 +197,7 @@ impl ChunkCache {
 
     /// Insert a chunk, evicting LRU entries of its shard to fit. O(1) per
     /// evicted entry. Chunks bigger than the shard budget are not cached.
-    pub fn insert(&self, id: u32, data: ChunkData) {
+    pub fn insert(&self, id: u64, data: ChunkData) {
         self.insert_evicting(id, data);
     }
 
@@ -198,7 +205,7 @@ impl ChunkCache {
     /// evicted to make room, so the caller can demote them to a lower tier
     /// (the disk spill tier) instead of dropping them. Replacing an
     /// existing entry for `id` is not an eviction and is not reported.
-    pub fn insert_evicting(&self, id: u32, data: ChunkData) -> Vec<(u32, ChunkData)> {
+    pub fn insert_evicting(&self, id: u64, data: ChunkData) -> Vec<(u64, ChunkData)> {
         let size = data.len() as u64;
         let mut evicted = Vec::new();
         let mut s = self.shard(id).lock().unwrap();
@@ -226,7 +233,7 @@ impl ChunkCache {
     }
 
     /// Is `id` currently cached? Does not refresh recency.
-    pub fn contains(&self, id: u32) -> bool {
+    pub fn contains(&self, id: u64) -> bool {
         self.shard(id).lock().unwrap().map.contains_key(&id)
     }
 
@@ -264,7 +271,7 @@ mod tests {
     use super::*;
 
     fn chunk(n: usize) -> ChunkData {
-        Arc::new(vec![0u8; n])
+        Arc::new(ChunkBytes::ram(vec![0u8; n]))
     }
 
     // ---- strict-LRU semantics on a single shard (seed behavior) --------
@@ -316,7 +323,7 @@ mod tests {
         c.insert(1, chunk(40));
         c.insert(2, chunk(40));
         let evicted = c.insert_evicting(3, chunk(90));
-        let ids: Vec<u32> = evicted.iter().map(|(id, _)| *id).collect();
+        let ids: Vec<u64> = evicted.iter().map(|(id, _)| *id).collect();
         assert_eq!(ids, vec![1, 2], "oldest first");
         assert_eq!(evicted[0].1.len(), 40, "payload travels with the id");
         // replacing an entry is not an eviction
@@ -375,7 +382,7 @@ mod tests {
     #[test]
     fn slab_recycles_slots() {
         let c = ChunkCache::with_shards(100, 1);
-        for round in 0..1000u32 {
+        for round in 0..1000u64 {
             c.insert(round % 7, chunk(60)); // each insert evicts the last
         }
         // one live entry, slab did not grow without bound
@@ -391,7 +398,7 @@ mod tests {
             c.insert(id, chunk(100));
         }
         // refresh in a scrambled order, then insert to evict exactly the LRU
-        for &id in &[3u32, 1, 4, 1, 5, 9, 2, 6] {
+        for &id in &[3u64, 1, 4, 1, 5, 9, 2, 6] {
             c.get(id);
         }
         // LRU order now: 0, 7, 8, 3, 4, 1, 5, 9, 2, 6 (0 least recent)
@@ -407,10 +414,10 @@ mod tests {
     fn concurrent_hammering_is_consistent() {
         let c = ChunkCache::with_shards(8 << 20, 8);
         std::thread::scope(|s| {
-            for t in 0..8u32 {
+            for t in 0..8u64 {
                 let c = c.clone();
                 s.spawn(move || {
-                    for i in 0..2000u32 {
+                    for i in 0..2000u64 {
                         let id = (t * 31 + i) % 64;
                         if c.get(id).is_none() {
                             c.insert(id, chunk(4096));

@@ -1,6 +1,21 @@
 //! On-store layout of an HFS namespace.
 //!
-//! A namespace `ns` occupies:
+//! A namespace `ns` written by the current uploader (format 2) occupies:
+//!
+//! ```text
+//! <ns>/manifest.json                — RootManifest: counts + shard map (small)
+//! <ns>/manifest/shard-<i>.json      — one file-table shard (lazy-loaded)
+//! <ns>/manifest/chunks.json         — the chunk table (lazy-loaded)
+//! cas/chunks/<digest>               — content-addressed chunk objects
+//! ```
+//!
+//! Mounting parses only the root, so mount cost is O(shards touched), not
+//! O(files); the file-table shards and the chunk table load on first
+//! touch. Chunk objects are keyed by their FNV-1a content digest, so
+//! identical chunks across files and namespaces are stored once.
+//!
+//! A *legacy* (format 1) namespace is one monolithic manifest plus
+//! namespace-keyed chunks, still fully supported for reading:
 //!
 //! ```text
 //! <ns>/manifest.json      — FsManifest: file table + chunk table
@@ -9,11 +24,21 @@
 //!
 //! Files are packed *in upload order*, which for deep-learning datasets is
 //! the order loaders will read them — that locality is what makes the
-//! next-file-in-same-chunk lookahead (§III.A) effective.
+//! next-file-in-same-chunk lookahead (§III.A) effective. Files below the
+//! configured packing threshold can additionally be packed into tar-like
+//! archive chunks (see [`iter_archive`]); their [`FileEntry`] offsets
+//! point directly at the payload inside the archive, so reads need no
+//! archive parsing.
 
+use std::collections::HashMap;
 
 use crate::util::Json;
 use crate::{Error, Result};
+
+/// Manifest format written by the sharded uploader. A root manifest
+/// carries `"format": 2`; the field's *presence* (with value >= 2) is
+/// what legacy readers trip over, loudly.
+pub const SHARDED_FORMAT: u64 = 2;
 
 /// A file inside the namespace: where it lives in which chunk.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -22,7 +47,9 @@ pub struct FileEntry {
     pub path: String,
     /// Id of the chunk holding this file's bytes.
     pub chunk: u32,
-    /// Byte offset of the file within its chunk.
+    /// Byte offset of the file within its chunk. For a file packed into
+    /// an archive chunk this points directly at the payload, past the
+    /// in-archive header.
     pub offset: u64,
     /// File length in bytes.
     pub len: u64,
@@ -41,10 +68,15 @@ pub struct ChunkRef {
     /// `0` = unknown (manifest written before digests existed): length
     /// checks still apply, digest checks are skipped.
     pub hash: u64,
+    /// True for an archive chunk holding many small packed files. Packed
+    /// chunks are always fetched whole (the archive is the locality
+    /// unit), never via byte-range GETs.
+    pub packed: bool,
 }
 
 /// 64-bit FNV-1a — the chunk content digest recorded in manifests at
-/// upload time and re-verified by the spill tier before serving.
+/// upload time and re-verified by the spill tier before serving. Also
+/// the hash behind [`PathIndex`] and the content-addressed chunk keys.
 pub(crate) fn fnv1a64(data: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in data {
@@ -54,7 +86,17 @@ pub(crate) fn fnv1a64(data: &[u8]) -> u64 {
     h
 }
 
+/// Key of a content-addressed chunk object. All namespaces share the
+/// `cas/` tree, so identical chunks uploaded through different
+/// namespaces land on one stored object.
+pub fn cas_chunk_key(digest: u64) -> String {
+    format!("cas/chunks/{digest:016x}")
+}
+
 /// The namespace manifest: ordered file table plus chunk table.
+///
+/// This is the in-RAM form; on-store it is either one monolithic legacy
+/// JSON object or a [`RootManifest`] plus shard files.
 #[derive(Debug, Clone, Default)]
 pub struct FsManifest {
     /// Target chunk size the namespace was packed with.
@@ -98,12 +140,12 @@ impl FsManifest {
         self.files.len()
     }
 
-    /// Key of a chunk object within the namespace.
+    /// Key of a legacy namespace-scoped chunk object.
     pub fn chunk_key(ns: &str, id: u32) -> String {
         format!("{ns}/chunks/{id:08}")
     }
 
-    /// Key of the namespace's manifest object.
+    /// Key of the namespace's manifest object (root or legacy).
     pub fn manifest_key(ns: &str) -> String {
         format!("{ns}/manifest.json")
     }
@@ -125,33 +167,10 @@ impl FsManifest {
         upload_to_sorted
     }
 
-    /// Serialize to the on-store JSON form.
+    /// Serialize to the monolithic (legacy, format 1) on-store JSON form.
     pub fn to_json(&self) -> Result<Vec<u8>> {
-        let files: Vec<Json> = self
-            .files
-            .iter()
-            .map(|f| {
-                Json::obj(vec![
-                    ("path", Json::str(f.path.clone())),
-                    ("chunk", Json::num(f.chunk as f64)),
-                    ("offset", Json::num(f.offset as f64)),
-                    ("len", Json::num(f.len as f64)),
-                ])
-            })
-            .collect();
-        let chunks: Vec<Json> = self
-            .chunks
-            .iter()
-            .map(|c| {
-                Json::obj(vec![
-                    ("id", Json::num(c.id as f64)),
-                    ("len", Json::num(c.len as f64)),
-                    // hex string: a u64 digest does not survive the f64
-                    // round-trip JSON numbers take
-                    ("hash", Json::str(format!("{:016x}", c.hash))),
-                ])
-            })
-            .collect();
+        let files: Vec<Json> = self.files.iter().map(file_to_json).collect();
+        let chunks: Vec<Json> = self.chunks.iter().map(chunk_to_json).collect();
         Ok(Json::obj(vec![
             ("chunk_size", Json::num(self.chunk_size as f64)),
             ("files", Json::Arr(files)),
@@ -160,36 +179,301 @@ impl FsManifest {
         .to_bytes())
     }
 
-    /// Parse the on-store JSON form back into a manifest.
+    /// Parse the monolithic on-store JSON form back into a manifest.
+    ///
+    /// A sharded (format 2) root manifest is rejected with an explicit
+    /// error, never silently parsed as an empty namespace.
     pub fn from_json(data: &[u8]) -> Result<Self> {
         let v = Json::parse_bytes(data)?;
+        if let Some(format) = v.get("format").and_then(Json::as_u64) {
+            if format >= SHARDED_FORMAT {
+                return Err(Error::Json(format!(
+                    "manifest format {format} is sharded; a legacy monolithic reader cannot \
+                     mount it — use a sharded-manifest-capable reader (HyperFs::mount)"
+                )));
+            }
+        }
         let files = v
             .req_arr("files")?
             .iter()
-            .map(|f| {
-                Ok(FileEntry {
-                    path: f.req_str("path")?.to_string(),
-                    chunk: f.req_u64("chunk")? as u32,
-                    offset: f.req_u64("offset")?,
-                    len: f.req_u64("len")?,
-                })
-            })
+            .map(file_from_json)
             .collect::<Result<Vec<_>>>()?;
         let chunks = v
             .req_arr("chunks")?
             .iter()
-            .map(|c| {
-                // digest is optional: manifests written before it existed
-                // (or by other tools) parse with hash 0 = "unknown"
-                let hash = c
-                    .get("hash")
-                    .and_then(|h| h.as_str())
-                    .and_then(|h| u64::from_str_radix(h, 16).ok())
-                    .unwrap_or(0);
-                Ok(ChunkRef { id: c.req_u64("id")? as u32, len: c.req_u64("len")?, hash })
-            })
+            .map(chunk_from_json)
             .collect::<Result<Vec<_>>>()?;
         Ok(FsManifest { chunk_size: v.req_u64("chunk_size")?, files, chunks })
+    }
+}
+
+fn file_to_json(f: &FileEntry) -> Json {
+    Json::obj(vec![
+        ("path", Json::str(f.path.clone())),
+        ("chunk", Json::num(f.chunk as f64)),
+        ("offset", Json::num(f.offset as f64)),
+        ("len", Json::num(f.len as f64)),
+    ])
+}
+
+fn file_from_json(f: &Json) -> Result<FileEntry> {
+    Ok(FileEntry {
+        path: f.req_str("path")?.to_string(),
+        chunk: f.req_u64("chunk")? as u32,
+        offset: f.req_u64("offset")?,
+        len: f.req_u64("len")?,
+    })
+}
+
+fn chunk_to_json(c: &ChunkRef) -> Json {
+    let mut pairs = vec![
+        ("id", Json::num(c.id as f64)),
+        ("len", Json::num(c.len as f64)),
+        // hex string: a u64 digest does not survive the f64 round-trip
+        // JSON numbers take
+        ("hash", Json::str(format!("{:016x}", c.hash))),
+    ];
+    if c.packed {
+        // only archive chunks carry the flag, keeping plain manifests
+        // byte-identical to what pre-packing writers produced
+        pairs.push(("packed", Json::Bool(true)));
+    }
+    Json::obj(pairs)
+}
+
+fn chunk_from_json(c: &Json) -> Result<ChunkRef> {
+    // digest is optional: manifests written before it existed (or by
+    // other tools) parse with hash 0 = "unknown"
+    let hash = c
+        .get("hash")
+        .and_then(|h| h.as_str())
+        .and_then(|h| u64::from_str_radix(h, 16).ok())
+        .unwrap_or(0);
+    let packed = c.get("packed").and_then(Json::as_bool).unwrap_or(false);
+    Ok(ChunkRef { id: c.req_u64("id")? as u32, len: c.req_u64("len")?, hash, packed })
+}
+
+/// Serialize one file-table shard (`<ns>/manifest/shard-<i>.json`).
+pub(crate) fn shard_to_json(files: &[FileEntry]) -> Vec<u8> {
+    Json::obj(vec![("files", Json::Arr(files.iter().map(file_to_json).collect()))]).to_bytes()
+}
+
+/// Parse one file-table shard.
+pub(crate) fn shard_from_json(data: &[u8]) -> Result<Vec<FileEntry>> {
+    Json::parse_bytes(data)?.req_arr("files")?.iter().map(file_from_json).collect()
+}
+
+/// Serialize the chunk table (`<ns>/manifest/chunks.json`).
+pub(crate) fn chunk_table_to_json(chunks: &[ChunkRef]) -> Vec<u8> {
+    Json::obj(vec![("chunks", Json::Arr(chunks.iter().map(chunk_to_json).collect()))]).to_bytes()
+}
+
+/// Parse the chunk table.
+pub(crate) fn chunk_table_from_json(data: &[u8]) -> Result<Vec<ChunkRef>> {
+    Json::parse_bytes(data)?.req_arr("chunks")?.iter().map(chunk_from_json).collect()
+}
+
+/// One file-table shard in the root manifest's shard map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardRef {
+    /// First (lexicographically smallest) path in the shard. Shards
+    /// partition the sorted file table, so shard `i` covers paths in
+    /// `[start_i, start_{i+1})`.
+    pub start: String,
+    /// Number of files in the shard.
+    pub files: u64,
+}
+
+/// The small root manifest of a sharded (format 2) namespace: aggregate
+/// counts plus the shard map. Parsing it is all a mount pays up front.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RootManifest {
+    /// Target chunk size the namespace was packed with.
+    pub chunk_size: u64,
+    /// Files across all shards.
+    pub file_count: u64,
+    /// Payload bytes across all files.
+    pub total_bytes: u64,
+    /// Entries in the (lazily loaded) chunk table.
+    pub chunk_count: u64,
+    /// Largest chunk object length — the mount-time cache sizing hint,
+    /// available without loading the chunk table.
+    pub max_chunk_len: u64,
+    /// True when chunk objects live under content-addressed
+    /// [`cas_chunk_key`] keys rather than legacy `<ns>/chunks/` keys.
+    pub content_addressed: bool,
+    /// The shard map, ordered by `start`.
+    pub shards: Vec<ShardRef>,
+}
+
+impl RootManifest {
+    /// Key of file-table shard `i` within the namespace.
+    pub fn shard_key(ns: &str, i: usize) -> String {
+        format!("{ns}/manifest/shard-{i:05}.json")
+    }
+
+    /// Key of the namespace's chunk table.
+    pub fn chunk_table_key(ns: &str) -> String {
+        format!("{ns}/manifest/chunks.json")
+    }
+
+    /// Index of the shard that would contain `path`, or `None` when
+    /// `path` sorts before every shard (and thus cannot exist).
+    pub fn shard_for(&self, path: &str) -> Option<usize> {
+        self.shards.partition_point(|s| s.start.as_str() <= path).checked_sub(1)
+    }
+
+    /// Serialize to the on-store root JSON. Deliberately carries no
+    /// `"files"` key: a legacy reader fed this object must fail its
+    /// required-field check rather than mount an empty namespace.
+    pub fn to_json(&self) -> Vec<u8> {
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("start", Json::str(s.start.clone())),
+                    ("files", Json::num(s.files as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::num(SHARDED_FORMAT as f64)),
+            ("chunk_size", Json::num(self.chunk_size as f64)),
+            ("file_count", Json::num(self.file_count as f64)),
+            ("total_bytes", Json::num(self.total_bytes as f64)),
+            ("chunk_count", Json::num(self.chunk_count as f64)),
+            ("max_chunk_len", Json::num(self.max_chunk_len as f64)),
+            ("content_addressed", Json::Bool(self.content_addressed)),
+            ("shards", Json::Arr(shards)),
+        ])
+        .to_bytes()
+    }
+
+    /// Parse the on-store root JSON (requires `"format" >= 2`).
+    pub fn from_json(data: &[u8]) -> Result<Self> {
+        let v = Json::parse_bytes(data)?;
+        let format = v.req_u64("format")?;
+        if format < SHARDED_FORMAT {
+            return Err(Error::Json(format!("not a sharded root manifest (format {format})")));
+        }
+        let shards = v
+            .req_arr("shards")?
+            .iter()
+            .map(|s| {
+                Ok(ShardRef { start: s.req_str("start")?.to_string(), files: s.req_u64("files")? })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RootManifest {
+            chunk_size: v.req_u64("chunk_size")?,
+            file_count: v.req_u64("file_count")?,
+            total_bytes: v.req_u64("total_bytes")?,
+            chunk_count: v.req_u64("chunk_count")?,
+            max_chunk_len: v.req_u64("max_chunk_len")?,
+            content_addressed: v.get("content_addressed").and_then(Json::as_bool).unwrap_or(false),
+            shards,
+        })
+    }
+}
+
+/// O(1) expected-time path lookup over a sorted file table — built once
+/// at parse time per shard (and for whole legacy manifests), replacing
+/// per-read binary searches with one hash probe.
+///
+/// Collisions (two paths sharing an FNV-1a hash) are handled by an
+/// overflow list verified by full path comparison, so a lookup can never
+/// return the wrong file.
+#[derive(Debug, Default)]
+pub struct PathIndex {
+    map: HashMap<u64, u32>,
+    /// Indices whose path hash collided with an earlier entry.
+    overflow: Vec<u32>,
+}
+
+impl PathIndex {
+    /// Build the index over `files`.
+    pub fn build(files: &[FileEntry]) -> Self {
+        let mut map = HashMap::with_capacity(files.len());
+        let mut overflow = Vec::new();
+        for (i, f) in files.iter().enumerate() {
+            match map.entry(fnv1a64(f.path.as_bytes())) {
+                std::collections::hash_map::Entry::Vacant(slot) => {
+                    slot.insert(i as u32);
+                }
+                std::collections::hash_map::Entry::Occupied(_) => overflow.push(i as u32),
+            }
+        }
+        Self { map, overflow }
+    }
+
+    /// Index of `path` in the `files` slice the index was built over.
+    pub fn find(&self, files: &[FileEntry], path: &str) -> Option<usize> {
+        let i = *self.map.get(&fnv1a64(path.as_bytes()))? as usize;
+        if files[i].path == path {
+            return Some(i);
+        }
+        // hash collision: fall back to the (near-empty) overflow list
+        self.overflow
+            .iter()
+            .map(|&j| j as usize)
+            .find(|&j| files[j].path == path)
+    }
+}
+
+// ---------------------------------------------------------------- packing
+
+/// Fixed bytes of one in-archive header: `[u32 LE payload len]`
+/// `[u16 LE path len]`, followed by the path bytes, then the payload.
+pub(crate) const PACK_HEADER_FIXED: usize = 6;
+
+/// Append one small file to an archive chunk buffer, returning the byte
+/// offset *of the payload* within the archive — the offset recorded in
+/// the file's [`FileEntry`], so reads index straight into the payload
+/// with no archive parsing. The interleaved headers make the archive
+/// self-describing for recovery tooling (see [`iter_archive`]).
+pub(crate) fn pack_append(buf: &mut Vec<u8>, path: &str, data: &[u8]) -> u64 {
+    debug_assert!(path.len() <= u16::MAX as usize, "pack path too long");
+    buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&(path.len() as u16).to_le_bytes());
+    buf.extend_from_slice(path.as_bytes());
+    let payload_offset = buf.len() as u64;
+    buf.extend_from_slice(data);
+    payload_offset
+}
+
+/// Iterate `(path, payload offset, payload)` entries of an archive chunk
+/// written by the uploader's packer. Iteration stops at the first malformed
+/// header (truncated archive). Used by tests and recovery tooling — the
+/// read path never parses archives, it indexes via [`FileEntry`].
+pub fn iter_archive(chunk: &[u8]) -> ArchiveIter<'_> {
+    ArchiveIter { chunk, pos: 0 }
+}
+
+/// Iterator over the packed entries of an archive chunk.
+pub struct ArchiveIter<'a> {
+    chunk: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Iterator for ArchiveIter<'a> {
+    type Item = (String, u64, &'a [u8]);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let rest = &self.chunk[self.pos..];
+        if rest.len() < PACK_HEADER_FIXED {
+            return None;
+        }
+        let data_len = u32::from_le_bytes(rest[0..4].try_into().ok()?) as usize;
+        let path_len = u16::from_le_bytes(rest[4..6].try_into().ok()?) as usize;
+        let header = PACK_HEADER_FIXED;
+        if rest.len() < header + path_len + data_len {
+            return None;
+        }
+        let path = std::str::from_utf8(&rest[header..header + path_len]).ok()?.to_string();
+        let payload_offset = (self.pos + header + path_len) as u64;
+        let payload = &rest[header + path_len..header + path_len + data_len];
+        self.pos += header + path_len + data_len;
+        Some((path, payload_offset, payload))
     }
 }
 
@@ -226,12 +510,28 @@ mod tests {
     fn json_roundtrip() {
         let mut m = FsManifest::new(4096);
         m.files = vec![entry("x", 0)];
-        m.chunks = vec![ChunkRef { id: 0, len: 1, hash: 0xdead_beef_dead_beef }];
+        m.chunks =
+            vec![ChunkRef { id: 0, len: 1, hash: 0xdead_beef_dead_beef, packed: false }];
         let j = m.to_json().unwrap();
         let back = FsManifest::from_json(&j).unwrap();
         assert_eq!(back.files, m.files);
         assert_eq!(back.chunks, m.chunks, "digest survives the JSON round-trip");
         assert_eq!(back.chunk_size, 4096);
+    }
+
+    #[test]
+    fn packed_flag_roundtrips_and_defaults_off() {
+        let mut m = FsManifest::new(4096);
+        m.chunks = vec![
+            ChunkRef { id: 0, len: 1, hash: 1, packed: true },
+            ChunkRef { id: 1, len: 1, hash: 2, packed: false },
+        ];
+        let back = FsManifest::from_json(&m.to_json().unwrap()).unwrap();
+        assert!(back.chunks[0].packed);
+        assert!(!back.chunks[1].packed);
+        // pre-packing manifests (no "packed" key at all) parse as unpacked
+        let j = br#"{"chunk_size": 64, "files": [], "chunks": [{"id": 0, "len": 10}]}"#;
+        assert!(!FsManifest::from_json(j).unwrap().chunks[0].packed);
     }
 
     #[test]
@@ -253,5 +553,91 @@ mod tests {
     fn keys() {
         assert_eq!(FsManifest::chunk_key("ns", 3), "ns/chunks/00000003");
         assert_eq!(FsManifest::manifest_key("ns"), "ns/manifest.json");
+        assert_eq!(RootManifest::shard_key("ns", 3), "ns/manifest/shard-00003.json");
+        assert_eq!(RootManifest::chunk_table_key("ns"), "ns/manifest/chunks.json");
+        assert_eq!(cas_chunk_key(0xdead_beef), "cas/chunks/00000000deadbeef");
+    }
+
+    fn sample_root() -> RootManifest {
+        RootManifest {
+            chunk_size: 1024,
+            file_count: 5,
+            total_bytes: 999,
+            chunk_count: 2,
+            max_chunk_len: 700,
+            content_addressed: true,
+            shards: vec![
+                ShardRef { start: "a/0".into(), files: 3 },
+                ShardRef { start: "m/0".into(), files: 2 },
+            ],
+        }
+    }
+
+    #[test]
+    fn root_manifest_roundtrip() {
+        let root = sample_root();
+        let back = RootManifest::from_json(&root.to_json()).unwrap();
+        assert_eq!(back, root);
+    }
+
+    #[test]
+    fn legacy_reader_rejects_sharded_root_loudly() {
+        let err = FsManifest::from_json(&sample_root().to_json()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("sharded"), "error must name the format problem: {msg}");
+    }
+
+    #[test]
+    fn sharded_reader_rejects_legacy_manifest() {
+        let legacy = FsManifest::new(64).to_json().unwrap();
+        assert!(RootManifest::from_json(&legacy).is_err());
+    }
+
+    #[test]
+    fn shard_routing() {
+        let root = sample_root();
+        assert_eq!(root.shard_for("a/0"), Some(0));
+        assert_eq!(root.shard_for("c/9"), Some(0));
+        assert_eq!(root.shard_for("m/0"), Some(1));
+        assert_eq!(root.shard_for("z/z"), Some(1));
+        assert_eq!(root.shard_for("A-sorts-first"), None);
+    }
+
+    #[test]
+    fn shard_and_chunk_table_roundtrip() {
+        let files = vec![entry("a", 0), entry("b", 1)];
+        assert_eq!(shard_from_json(&shard_to_json(&files)).unwrap(), files);
+        let chunks = vec![ChunkRef { id: 0, len: 9, hash: 42, packed: true }];
+        assert_eq!(chunk_table_from_json(&chunk_table_to_json(&chunks)).unwrap(), chunks);
+    }
+
+    #[test]
+    fn path_index_finds_exactly_the_right_file() {
+        let files: Vec<FileEntry> =
+            (0..100).map(|i| entry(&format!("train/{i:06}.bin"), 0)).collect();
+        let idx = PathIndex::build(&files);
+        for (i, f) in files.iter().enumerate() {
+            assert_eq!(idx.find(&files, &f.path), Some(i));
+        }
+        assert_eq!(idx.find(&files, "train/000100.bin"), None);
+        assert_eq!(idx.find(&files, ""), None);
+    }
+
+    #[test]
+    fn archive_roundtrip() {
+        let mut buf = Vec::new();
+        let off_a = pack_append(&mut buf, "small/a", b"aaaa");
+        let off_b = pack_append(&mut buf, "small/b", b"bb");
+        // FileEntry-style direct indexing hits the payloads
+        assert_eq!(&buf[off_a as usize..off_a as usize + 4], b"aaaa");
+        assert_eq!(&buf[off_b as usize..off_b as usize + 2], b"bb");
+        // the self-describing walk recovers paths and payloads
+        let entries: Vec<_> = iter_archive(&buf).collect();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0], ("small/a".to_string(), off_a, &b"aaaa"[..]));
+        assert_eq!(entries[1], ("small/b".to_string(), off_b, &b"bb"[..]));
+        // a truncated archive stops cleanly instead of panicking
+        let cut = &buf[..buf.len() - 1];
+        assert_eq!(iter_archive(cut).count(), 1);
     }
 }

@@ -7,16 +7,30 @@
 //!
 //! * **Zero-copy** — reads return a [`ByteView`] into the cached chunk:
 //!   a cache hit does no allocation and no memcpy.
-//! * **Sharded cache** — the RAM LRU is sharded by chunk id with O(1)
+//! * **Lazy sharded metadata** — a format-2 namespace mounts by parsing
+//!   only the small root manifest; per-range file-table shards and the
+//!   chunk table load on first touch (single-flighted behind an
+//!   `RwLock`, then cached for the life of the mount), so mount cost
+//!   scales with the shards a workload actually touches, not with the
+//!   file count. Legacy monolithic manifests still mount, with an O(1)
+//!   path index built at parse time.
+//! * **Content-addressed tiers** — the RAM cache, spill tier, and
+//!   single-flight table key chunks by content digest, so chunks with
+//!   identical bytes share one cached copy and one fetch regardless of
+//!   chunk id; on CAS-layout namespaces the backend object key is the
+//!   digest too (`cas/chunks/…`). Manifests that predate digests fall
+//!   back to `(ns, id)` keying.
+//! * **Sharded cache** — the RAM LRU is sharded by content key with O(1)
 //!   get/insert/evict, so readers of different chunks never contend on
 //!   one mutex.
 //! * **Disk spill tier** — RAM evictions flow down into a bounded
 //!   on-disk [`SpillTier`] (when mounted with a spill directory) instead
 //!   of being dropped; a later miss promotes the chunk back into RAM
 //!   without touching the object store. Spill writes run on the fetch
-//!   lanes so they never block readers.
+//!   lanes so they never block readers, and spill hits can be served as
+//!   digest-verified mmap views instead of read copies.
 //! * **Single-flight** — concurrent misses (and prefetches) of the same
-//!   chunk coalesce into exactly one load, whether it comes from the
+//!   content coalesce into exactly one load, whether it comes from the
 //!   spill tier or the backend.
 //! * **Adaptive, bounded readahead** — prefetch depth follows the
 //!   observed access pattern (deep on scans, zero under shuffle; the
@@ -26,22 +40,30 @@
 //! * **Range-GET fast path** — a cold, non-sequential read of a file much
 //!   smaller than its chunk (`len * 4 < chunk_len`) fetches only the
 //!   file's byte range; whole-chunk fetching (and its cache/prefetch
-//!   locality) is reserved for scans, where it pays.
+//!   locality) is reserved for scans — and for packed archive chunks,
+//!   whose many tiny members make the whole archive the right transfer
+//!   unit.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::config::HfsConfig;
-use crate::metrics::Counter;
+use crate::metrics::{Counter, MetricsRegistry};
 use crate::storage::StoreHandle;
+use crate::util::Json;
 use crate::{Error, Result};
 
 use super::cache::ChunkCache;
-use super::chunk::FsManifest;
+use super::chunk::{
+    cas_chunk_key, chunk_table_from_json, fnv1a64, shard_from_json, ChunkRef, FileEntry,
+    FsManifest, PathIndex, RootManifest, SHARDED_FORMAT,
+};
 use super::fetch::FetchPool;
 use super::prefetch::{PrefetchPolicy, Prefetcher};
 use super::singleflight::{FetchError, SingleFlight};
 use super::spill::SpillTier;
-use super::view::{ByteView, ChunkData};
+use super::view::{ByteView, ChunkBytes, ChunkData};
 
 /// Preserve the not-found / storage distinction across the cloneable
 /// single-flight boundary.
@@ -71,18 +93,30 @@ fn from_fetch_error(e: FetchError) -> Error {
 fn admit_two_tier(
     cache: &ChunkCache,
     spill: Option<&Arc<SpillTier>>,
-    id: u32,
+    key: u64,
     data: &ChunkData,
     respill_self: bool,
-    mut spill_write: impl FnMut(&Arc<SpillTier>, u32, ChunkData),
+    mut spill_write: impl FnMut(&Arc<SpillTier>, u64, ChunkData),
 ) {
-    let evicted = cache.insert_evicting(id, data.clone());
+    let evicted = cache.insert_evicting(key, data.clone());
     let Some(spill) = spill else { return };
-    for (eid, edata) in evicted {
-        spill_write(spill, eid, edata);
+    for (ekey, edata) in evicted {
+        spill_write(spill, ekey, edata);
     }
-    if respill_self && !cache.contains(id) {
-        spill_write(spill, id, data.clone());
+    if respill_self && !cache.contains(key) {
+        spill_write(spill, key, data.clone());
+    }
+}
+
+/// Content key used by the RAM cache, spill tier, and single-flight
+/// table: the chunk's content digest when the manifest records one
+/// (identical bytes then share one entry across chunk ids), else a hash
+/// of `(ns, id)` so pre-digest manifests still key uniquely.
+fn tier_key(ns: &str, id: u32, hash: u64) -> u64 {
+    if hash != 0 {
+        hash
+    } else {
+        fnv1a64(format!("{ns}/{id}").as_bytes())
     }
 }
 
@@ -103,6 +137,40 @@ const RANGE_GET_RATIO: u64 = 4;
 /// cache hits, not re-transfer the dataset per epoch. Promotion only
 /// happens when the cache could plausibly retain the chunk.
 const RANGE_PROMOTE_AFTER: u32 = 2;
+
+/// One lazily-loaded slice of the sharded file table, with its O(1)
+/// path index (built once, at load).
+struct ShardTable {
+    files: Vec<FileEntry>,
+    index: PathIndex,
+}
+
+/// The mount's metadata plane: either the whole legacy manifest held in
+/// RAM, or a sharded root whose file shards and chunk table fill in on
+/// demand.
+enum Table {
+    Legacy {
+        manifest: Arc<FsManifest>,
+        index: PathIndex,
+    },
+    Sharded {
+        root: RootManifest,
+        shards: Vec<RwLock<Option<Arc<ShardTable>>>>,
+        chunk_table: RwLock<Option<Arc<Vec<ChunkRef>>>>,
+    },
+}
+
+/// A path resolved against the metadata plane — everything `read_file`
+/// needs, copied out so no shard lock is held across data I/O.
+#[derive(Clone, Copy)]
+struct ResolvedFile {
+    chunk: u32,
+    offset: u64,
+    len: u64,
+    /// Distinguishes files for the range-GET single-flight table: the
+    /// global file index (legacy) or `(shard << 32) | index-in-shard`.
+    file_key: u64,
+}
 
 /// Counters exposed for tests / benches / the CLI `status` view.
 #[derive(Debug, Clone, Default)]
@@ -141,6 +209,16 @@ pub struct HyperFsStats {
     /// Eviction writes dropped because the fetch lanes were saturated
     /// (the chunk is simply not spilled; a future miss refetches).
     pub spill_drops: Counter,
+    /// Lazy metadata loads on a sharded mount — file-table shards plus
+    /// the chunk table, each counted once when first fetched and parsed.
+    /// A legacy mount never increments this.
+    pub shard_loads: Counter,
+    /// First-touch reads of a chunk served from RAM because a chunk with
+    /// identical bytes (same content digest) was already cached — backend
+    /// GETs that content-addressed dedup made unnecessary.
+    pub dedup_hits: Counter,
+    /// Reads of files stored inside packed archive chunks.
+    pub packed_reads: Counter,
 }
 
 impl HyperFsStats {
@@ -160,7 +238,12 @@ impl HyperFsStats {
 pub struct HyperFs {
     store: StoreHandle,
     ns: String,
-    manifest: Arc<FsManifest>,
+    table: Table,
+    /// One flag per chunk id: set on the chunk's first demand access (or
+    /// successful prefetch). A *first* touch that is already a RAM hit
+    /// means another chunk with identical bytes paid the fetch — that is
+    /// what [`HyperFsStats::dedup_hits`] counts.
+    touched: Arc<Vec<AtomicBool>>,
     cache: ChunkCache,
     cache_bytes: u64,
     /// Local-disk second tier; `None` on diskless mounts.
@@ -172,12 +255,12 @@ pub struct HyperFs {
     fetch_pool: Option<Arc<FetchPool>>,
     inflight: Arc<SingleFlight>,
     /// Single-flight table for the range-GET fast path, keyed by *file*
-    /// index (different files of one chunk fetch independently; identical
+    /// (different files of one chunk fetch independently; identical
     /// files coalesce).
     range_inflight: Arc<SingleFlight>,
     /// Range-GET serves per chunk since its last whole fetch (promotion
     /// counter for the fast path).
-    range_served: std::sync::Mutex<std::collections::HashMap<u32, u32>>,
+    range_served: Mutex<HashMap<u32, u32>>,
     /// Read-path counters (cheap to clone; shared with fetch workers).
     pub stats: HyperFsStats,
 }
@@ -203,10 +286,13 @@ impl HyperFs {
     }
 
     /// Mount with the full [`HfsConfig`] surface, including the
-    /// local-disk spill tier and the adaptive-prefetch cap.
+    /// local-disk spill tier (with optional mmap reads) and the
+    /// adaptive-prefetch cap.
     pub fn mount_cfg(store: StoreHandle, ns: &str, cfg: &HfsConfig) -> Result<Self> {
         let spill = match &cfg.spill_dir {
-            Some(dir) => Some(Arc::new(SpillTier::open(dir, ns, cfg.spill_bytes)?)),
+            Some(dir) => {
+                Some(Arc::new(SpillTier::open_with(dir, ns, cfg.spill_bytes, cfg.spill_mmap)?))
+            }
             None => None,
         };
         Self::mount_inner(
@@ -230,22 +316,49 @@ impl HyperFs {
         let manifest_bytes = store
             .get(&FsManifest::manifest_key(ns))
             .map_err(|_| Error::Storage(format!("namespace {ns:?} has no manifest")))?;
-        let manifest = Arc::new(FsManifest::from_json(&manifest_bytes)?);
-        // size shards to the namespace's actual chunks so the largest
-        // chunk always fits one shard's slice of the budget
-        let max_chunk = manifest
-            .chunks
-            .iter()
-            .map(|c| c.len)
-            .max()
-            .unwrap_or(manifest.chunk_size)
-            .max(1);
-        let fetch_pool = background_prefetch
-            .then(|| Arc::new(FetchPool::new(store.clone(), PREFETCH_LANES)));
+        // format >= 2 -> sharded root manifest; anything else (including
+        // format-less pre-sharding manifests) -> legacy monolithic
+        let sharded = Json::parse_bytes(&manifest_bytes)
+            .ok()
+            .and_then(|v| v.get("format").and_then(Json::as_u64))
+            .is_some_and(|f| f >= SHARDED_FORMAT);
+        let table = if sharded {
+            let root = RootManifest::from_json(&manifest_bytes)?;
+            let shards = (0..root.shards.len()).map(|_| RwLock::new(None)).collect();
+            Table::Sharded { root, shards, chunk_table: RwLock::new(None) }
+        } else {
+            let manifest = Arc::new(FsManifest::from_json(&manifest_bytes)?);
+            let index = PathIndex::build(&manifest.files);
+            Table::Legacy { manifest, index }
+        };
+        // size cache shards so the largest chunk always fits one shard's
+        // slice of the budget; the sharded root records the max up front
+        // precisely so this works without loading the chunk table
+        let max_chunk = match &table {
+            Table::Legacy { manifest, .. } => {
+                manifest.chunks.iter().map(|c| c.len).max().unwrap_or(manifest.chunk_size)
+            }
+            Table::Sharded { root, .. } => {
+                if root.max_chunk_len > 0 {
+                    root.max_chunk_len
+                } else {
+                    root.chunk_size
+                }
+            }
+        }
+        .max(1);
+        let chunk_count = match &table {
+            Table::Legacy { manifest, .. } => manifest.chunks.len(),
+            Table::Sharded { root, .. } => root.chunk_count as usize,
+        };
+        let touched = Arc::new((0..chunk_count).map(|_| AtomicBool::new(false)).collect());
+        let fetch_pool =
+            background_prefetch.then(|| Arc::new(FetchPool::new(store.clone(), PREFETCH_LANES)));
         Ok(Self {
             store,
             ns: ns.to_string(),
-            manifest,
+            table,
+            touched,
             cache: ChunkCache::with_chunk_hint(cache_bytes, max_chunk),
             cache_bytes,
             spill,
@@ -253,14 +366,18 @@ impl HyperFs {
             fetch_pool,
             inflight: Arc::new(SingleFlight::new()),
             range_inflight: Arc::new(SingleFlight::new()),
-            range_served: std::sync::Mutex::new(std::collections::HashMap::new()),
+            range_served: Mutex::new(HashMap::new()),
             stats: HyperFsStats::default(),
         })
     }
 
-    /// The sealed manifest this mount serves.
-    pub fn manifest(&self) -> &FsManifest {
-        &self.manifest
+    /// The monolithic manifest behind a legacy mount. `None` on sharded
+    /// mounts, whose file table lives in lazily-loaded shards instead.
+    pub fn manifest(&self) -> Option<&FsManifest> {
+        match &self.table {
+            Table::Legacy { manifest, .. } => Some(manifest),
+            Table::Sharded { .. } => None,
+        }
     }
 
     /// The namespace name this mount serves.
@@ -268,25 +385,179 @@ impl HyperFs {
         &self.ns
     }
 
-    /// Manifest-recorded length of chunk `id` (falls back to the
-    /// namespace chunk size for ids the manifest does not know).
-    fn chunk_len(&self, id: u32) -> u64 {
-        self.manifest
-            .chunks
+    /// Whether this mount serves a sharded (format 2) namespace.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.table, Table::Sharded { .. })
+    }
+
+    /// Chunks in the namespace (root-recorded on sharded mounts, so no
+    /// chunk-table load is needed to answer).
+    pub fn chunk_count(&self) -> usize {
+        match &self.table {
+            Table::Legacy { manifest, .. } => manifest.chunks.len(),
+            Table::Sharded { root, .. } => root.chunk_count as usize,
+        }
+    }
+
+    /// Files in the namespace.
+    pub fn file_count(&self) -> u64 {
+        match &self.table {
+            Table::Legacy { manifest, .. } => manifest.file_count() as u64,
+            Table::Sharded { root, .. } => root.file_count,
+        }
+    }
+
+    /// Total payload bytes across all files.
+    pub fn total_bytes(&self) -> u64 {
+        match &self.table {
+            Table::Legacy { manifest, .. } => manifest.total_bytes(),
+            Table::Sharded { root, .. } => root.total_bytes,
+        }
+    }
+
+    /// Does this mount's layout store chunks under content-addressed
+    /// keys? (Sharded namespaces written by the current uploader do;
+    /// legacy namespaces keep `<ns>/chunks/<id>` objects.)
+    fn content_addressed(&self) -> bool {
+        match &self.table {
+            Table::Legacy { .. } => false,
+            Table::Sharded { root, .. } => root.content_addressed,
+        }
+    }
+
+    /// Target chunk size the namespace was packed with.
+    fn chunk_size(&self) -> u64 {
+        match &self.table {
+            Table::Legacy { manifest, .. } => manifest.chunk_size,
+            Table::Sharded { root, .. } => root.chunk_size,
+        }
+    }
+
+    /// Backend object key of chunk `id`: content-addressed on CAS-layout
+    /// namespaces, namespace-scoped otherwise. On sharded mounts this
+    /// loads the chunk table if it is not resident yet.
+    pub fn chunk_object_key(&self, id: u32) -> Result<String> {
+        let (_, hash, _) = self.chunk_meta(id)?;
+        Ok(self.object_key(id, hash))
+    }
+
+    fn object_key(&self, id: u32, hash: u64) -> String {
+        if self.content_addressed() && hash != 0 {
+            cas_chunk_key(hash)
+        } else {
+            FsManifest::chunk_key(&self.ns, id)
+        }
+    }
+
+    /// Load (or fetch from the resident copy) file-table shard `i`.
+    /// Holding the slot's write lock across the store GET single-flights
+    /// concurrent loads of the same shard.
+    fn load_shard(&self, i: usize) -> Result<Arc<ShardTable>> {
+        let Table::Sharded { shards, .. } = &self.table else {
+            return Err(Error::Storage("legacy mounts have no file-table shards".into()));
+        };
+        if let Some(t) = shards[i].read().unwrap().as_ref() {
+            return Ok(t.clone());
+        }
+        let mut slot = shards[i].write().unwrap();
+        if let Some(t) = slot.as_ref() {
+            return Ok(t.clone());
+        }
+        let bytes = self.store.get(&RootManifest::shard_key(&self.ns, i))?;
+        let files = shard_from_json(&bytes)?;
+        let index = PathIndex::build(&files);
+        let table = Arc::new(ShardTable { files, index });
+        self.stats.shard_loads.inc();
+        *slot = Some(table.clone());
+        Ok(table)
+    }
+
+    /// The chunk table of a sharded mount, loaded on first use (same
+    /// write-lock single-flighting as [`HyperFs::load_shard`]).
+    fn chunk_table(&self) -> Result<Arc<Vec<ChunkRef>>> {
+        let Table::Sharded { chunk_table, .. } = &self.table else {
+            return Err(Error::Storage("legacy mounts have no separate chunk table".into()));
+        };
+        if let Some(t) = chunk_table.read().unwrap().as_ref() {
+            return Ok(t.clone());
+        }
+        let mut slot = chunk_table.write().unwrap();
+        if let Some(t) = slot.as_ref() {
+            return Ok(t.clone());
+        }
+        let bytes = self.store.get(&RootManifest::chunk_table_key(&self.ns))?;
+        let table = Arc::new(chunk_table_from_json(&bytes)?);
+        self.stats.shard_loads.inc();
+        *slot = Some(table.clone());
+        Ok(table)
+    }
+
+    /// Manifest-recorded `(len, digest, packed)` of chunk `id` (ids the
+    /// manifest does not know fall back to the namespace chunk size and
+    /// an unknown digest, so spill reads skip the digest check).
+    fn chunk_meta(&self, id: u32) -> Result<(u64, u64, bool)> {
+        match &self.table {
+            Table::Legacy { manifest, .. } => Ok(manifest
+                .chunks
+                .get(id as usize)
+                .map_or((manifest.chunk_size, 0, false), |c| (c.len, c.hash, c.packed))),
+            Table::Sharded { .. } => {
+                let table = self.chunk_table()?;
+                Ok(table
+                    .get(id as usize)
+                    .map_or((self.chunk_size(), 0, false), |c| (c.len, c.hash, c.packed)))
+            }
+        }
+    }
+
+    /// Resolve a path to its chunk coordinates through the metadata
+    /// plane, loading at most one file-table shard.
+    fn resolve(&self, path: &str) -> Result<ResolvedFile> {
+        match &self.table {
+            Table::Legacy { manifest, index } => {
+                let idx = index
+                    .find(&manifest.files, path)
+                    .ok_or_else(|| Error::FileNotFound(path.to_string()))?;
+                let e = &manifest.files[idx];
+                Ok(ResolvedFile {
+                    chunk: e.chunk,
+                    offset: e.offset,
+                    len: e.len,
+                    file_key: idx as u64,
+                })
+            }
+            Table::Sharded { root, .. } => {
+                let si = root
+                    .shard_for(path)
+                    .ok_or_else(|| Error::FileNotFound(path.to_string()))?;
+                let shard = self.load_shard(si)?;
+                let idx = shard
+                    .index
+                    .find(&shard.files, path)
+                    .ok_or_else(|| Error::FileNotFound(path.to_string()))?;
+                let e = &shard.files[idx];
+                Ok(ResolvedFile {
+                    chunk: e.chunk,
+                    offset: e.offset,
+                    len: e.len,
+                    file_key: ((si as u64) << 32) | idx as u64,
+                })
+            }
+        }
+    }
+
+    /// Mark chunk `id` as accessed; returns whether this was the first
+    /// touch since mount. Unknown ids never count as first touches.
+    fn mark_touched(&self, id: u32) -> bool {
+        self.touched
             .get(id as usize)
-            .map(|c| c.len)
-            .unwrap_or(self.manifest.chunk_size)
+            .map(|t| !t.swap(true, Ordering::Relaxed))
+            .unwrap_or(false)
     }
 
-    /// Manifest-recorded content digest of chunk `id` (0 = unknown: the
-    /// manifest predates digests, so spill reads skip the digest check).
-    fn chunk_hash(&self, id: u32) -> u64 {
-        self.manifest.chunks.get(id as usize).map(|c| c.hash).unwrap_or(0)
-    }
-
-    /// Does the spill tier hold a (possibly unverified) copy of `id`?
-    fn spill_contains(&self, id: u32) -> bool {
-        self.spill.as_ref().is_some_and(|s| s.contains(id))
+    /// Does the spill tier hold a (possibly unverified) copy of `key`?
+    fn spill_contains(&self, key: u64) -> bool {
+        self.spill.as_ref().is_some_and(|s| s.contains(key))
     }
 
     /// Read a whole file by path (the POSIX open+read+close analogue).
@@ -295,10 +566,14 @@ impl HyperFs {
     /// hit this is one shard lock and one `Arc` clone — no allocation, no
     /// memcpy. Call `.to_vec()` on the view if owned bytes are needed.
     pub fn read_file(&self, path: &str) -> Result<ByteView> {
-        let idx = self.manifest.find(path)?;
-        let entry = &self.manifest.files[idx];
+        let f = self.resolve(path)?;
         self.stats.reads.inc();
-        self.stats.bytes_read.add(entry.len);
+        self.stats.bytes_read.add(f.len);
+        let (chunk_len, chunk_hash, packed) = self.chunk_meta(f.chunk)?;
+        if packed {
+            self.stats.packed_reads.inc();
+        }
+        let key = tier_key(&self.ns, f.chunk, chunk_hash);
 
         // Range-GET fast path: a cold read of a small file during a
         // non-sequential access pattern fetches just the file's bytes.
@@ -310,24 +585,26 @@ impl HyperFs {
         // Promotion is skipped when the cache could not plausibly retain
         // the chunk anyway (thrashing budgets keep ranging: strictly
         // fewer bytes). Concurrent readers of the SAME file coalesce
-        // through their own single-flight table.
-        let chunk_len = self.chunk_len(entry.chunk);
-        // guard order matters: the sharded cache probe short-circuits the
+        // through their own single-flight table. Packed archive chunks
+        // never range: every member is tiny, so the archive itself is
+        // the right transfer + cache unit.
+        // Guard order matters: the sharded cache probe short-circuits the
         // global prefetcher mutex away from every cache-hit read. A chunk
         // already sitting in the local-disk spill tier is never "cold"
         // enough to range-GET: the whole-chunk path below serves it from
         // disk for free instead of paying an object-store round trip.
-        if entry.len.saturating_mul(RANGE_GET_RATIO) < chunk_len
-            && !self.cache.contains(entry.chunk)
-            && !self.spill_contains(entry.chunk)
+        if !packed
+            && f.len.saturating_mul(RANGE_GET_RATIO) < chunk_len
+            && !self.cache.contains(key)
+            && !self.spill_contains(key)
             && !self.prefetcher.is_sequential()
         {
             let retainable = chunk_len.saturating_mul(4) <= self.cache_bytes;
             let promote = retainable && {
                 let mut served = self.range_served.lock().unwrap();
-                let n = served.entry(entry.chunk).or_insert(0);
+                let n = served.entry(f.chunk).or_insert(0);
                 if *n >= RANGE_PROMOTE_AFTER {
-                    served.remove(&entry.chunk);
+                    served.remove(&f.chunk);
                     true // invest: whole-chunk fetch + cache below
                 } else {
                     *n += 1;
@@ -335,18 +612,18 @@ impl HyperFs {
                 }
             };
             if !promote {
-                let key = FsManifest::chunk_key(&self.ns, entry.chunk);
-                let (offset, len) = (entry.offset, entry.len);
-                let (outcome, leader) = self.range_inflight.run(idx as u32, || {
+                let obj_key = self.object_key(f.chunk, chunk_hash);
+                let (offset, len) = (f.offset, f.len);
+                let (outcome, leader) = self.range_inflight.run(f.file_key, || {
                     let data =
-                        self.store.get_range(&key, offset, len).map_err(to_fetch_error)?;
+                        self.store.get_range(&obj_key, offset, len).map_err(to_fetch_error)?;
                     if data.len() as u64 != len {
                         return Err(FetchError::Storage(format!(
-                            "range GET for {key:?} returned {} bytes, expected {len}",
+                            "range GET for {obj_key:?} returned {} bytes, expected {len}",
                             data.len()
                         )));
                     }
-                    Ok(Arc::new(data))
+                    Ok(Arc::new(ChunkBytes::ram(data)))
                 });
                 if leader {
                     self.stats.range_gets.inc();
@@ -357,73 +634,119 @@ impl HyperFs {
                 self.stats.cache_misses.inc();
                 // still feed the predictor: if this turns into a scan,
                 // the next reads go back to whole chunks + readahead
-                for target in self.prefetcher.on_access(
-                    entry.chunk,
-                    self.manifest.chunks.len() as u32,
-                    false,
-                ) {
+                for target in
+                    self.prefetcher.on_access(f.chunk, self.chunk_count() as u32, false)
+                {
                     self.issue_prefetch(target);
                 }
                 return Ok(ByteView::full(outcome.map_err(from_fetch_error)?));
             }
         }
 
-        let (chunk, ram_hit) = self.chunk_data(entry.chunk)?;
+        let (chunk, ram_hit) = self.chunk_data(f.chunk, key, chunk_len, chunk_hash)?;
         // feed the adaptive predictor and fire readahead for the
         // predicted next chunks
-        for target in
-            self.prefetcher
-                .on_access(entry.chunk, self.manifest.chunks.len() as u32, ram_hit)
-        {
+        for target in self.prefetcher.on_access(f.chunk, self.chunk_count() as u32, ram_hit) {
             self.issue_prefetch(target);
         }
-        Ok(ByteView::new(chunk, entry.offset as usize, entry.len as usize))
+        Ok(ByteView::new(chunk, f.offset as usize, f.len as usize))
     }
 
     /// File size without fetching data.
     pub fn stat(&self, path: &str) -> Result<u64> {
-        Ok(self.manifest.files[self.manifest.find(path)?].len)
+        Ok(self.resolve(path)?.len)
     }
 
-    /// Paths under a prefix.
-    pub fn list(&self, prefix: &str) -> Vec<String> {
-        self.manifest.list(prefix).into_iter().map(|f| f.path.clone()).collect()
+    /// Paths under a prefix. On sharded mounts this loads exactly the
+    /// shards whose path range can intersect the prefix.
+    pub fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        match &self.table {
+            Table::Legacy { manifest, .. } => {
+                Ok(manifest.list(prefix).into_iter().map(|f| f.path.clone()).collect())
+            }
+            Table::Sharded { root, shards, .. } => {
+                let mut out = Vec::new();
+                let s0 = root.shard_for(prefix).unwrap_or(0);
+                for i in s0..shards.len() {
+                    // shards partition the sorted path space: once a
+                    // shard *starts* past the prefix interval, no later
+                    // shard can re-enter it
+                    if i > s0 && !root.shards[i].start.starts_with(prefix) {
+                        break;
+                    }
+                    let shard = self.load_shard(i)?;
+                    let lo = shard.files.partition_point(|f| f.path.as_str() < prefix);
+                    for f in shard.files[lo..].iter().take_while(|f| f.path.starts_with(prefix))
+                    {
+                        out.push(f.path.clone());
+                    }
+                }
+                Ok(out)
+            }
+        }
     }
 
     /// Chunk bytes via the cache tiers, coalescing concurrent misses of
-    /// the same chunk into exactly one load. Returns the payload and
+    /// the same content into exactly one load. Returns the payload and
     /// whether it was a RAM-tier hit.
-    fn chunk_data(&self, id: u32) -> Result<(ChunkData, bool)> {
-        if let Some(hit) = self.cache.get(id) {
+    fn chunk_data(
+        &self,
+        id: u32,
+        key: u64,
+        expected_len: u64,
+        expected_hash: u64,
+    ) -> Result<(ChunkData, bool)> {
+        let first_touch = self.mark_touched(id);
+        if let Some(hit) = self.cache.get(key) {
             self.stats.cache_hits.inc();
+            if first_touch {
+                // never fetched this chunk, yet its bytes are resident:
+                // an identical-content twin paid the transfer
+                self.stats.dedup_hits.inc();
+            }
             return Ok((hit, true));
         }
         self.stats.cache_misses.inc();
-        let (outcome, leader) = self.inflight.run(id, || self.fetch_into_cache(id));
+        let (outcome, leader) = self
+            .inflight
+            .run(key, || self.fetch_into_cache(id, key, expected_len, expected_hash, first_touch));
         if !leader {
             self.stats.coalesced_reads.inc();
+            if first_touch {
+                self.stats.dedup_hits.inc();
+            }
         }
         Ok((outcome.map_err(from_fetch_error)?, false))
     }
 
     /// Leader path of a single-flight fetch: re-check the RAM cache (the
-    /// chunk may have landed between our miss and winning leadership),
+    /// content may have landed between our miss and winning leadership),
     /// probe the spill tier, then GET — and admit *before* the flight
     /// retires, so "no cache entry and no flight" always implies "no
     /// fetch outstanding". The single-flight key covers the disk tier
     /// too: concurrent misses issue at most one spill load.
-    fn fetch_into_cache(&self, id: u32) -> std::result::Result<ChunkData, FetchError> {
-        if let Some(hit) = self.cache.get(id) {
+    fn fetch_into_cache(
+        &self,
+        id: u32,
+        key: u64,
+        expected_len: u64,
+        expected_hash: u64,
+        first_touch: bool,
+    ) -> std::result::Result<ChunkData, FetchError> {
+        if let Some(hit) = self.cache.get(key) {
             // raced with a completed fetch: served without our own GET
             self.stats.coalesced_reads.inc();
+            if first_touch {
+                self.stats.dedup_hits.inc();
+            }
             return Ok(hit);
         }
         if let Some(spill) = &self.spill {
-            if let Some(data) = spill.get(id, self.chunk_len(id), self.chunk_hash(id)) {
+            if let Some(data) = spill.get(key, expected_len, expected_hash) {
                 // promoted back into RAM without touching the object
                 // store; no respill — the bytes are already on disk
                 self.stats.spill_hits.inc();
-                self.admit(id, &data, false);
+                self.admit(key, &data, false);
                 return Ok(data);
             }
             self.stats.spill_misses.inc();
@@ -431,10 +754,10 @@ impl HyperFs {
         self.stats.backend_gets.inc();
         let data = self
             .store
-            .get(&FsManifest::chunk_key(&self.ns, id))
-            .map(Arc::new)
+            .get(&self.object_key(id, expected_hash))
+            .map(|v| Arc::new(ChunkBytes::ram(v)))
             .map_err(to_fetch_error)?;
-        self.admit(id, &data, true);
+        self.admit(key, &data, true);
         Ok(data)
     }
 
@@ -444,14 +767,14 @@ impl HyperFs {
     /// chunk the RAM tier cannot hold at all is spilled directly, so
     /// repeated reads of an oversized chunk converge to disk speed
     /// instead of network speed.
-    fn admit(&self, id: u32, data: &ChunkData, respill_self: bool) {
+    fn admit(&self, key: u64, data: &ChunkData, respill_self: bool) {
         admit_two_tier(
             &self.cache,
             self.spill.as_ref(),
-            id,
+            key,
             data,
             respill_self,
-            |spill, eid, edata| self.spill_out(spill, eid, edata),
+            |spill, ekey, edata| self.spill_out(spill, ekey, edata),
         );
     }
 
@@ -459,12 +782,12 @@ impl HyperFs {
     /// job on the fetch lanes in threaded mode, inline in sync mode.
     /// When the lanes are saturated the write is dropped — spilling is
     /// best-effort and must never apply backpressure to readers.
-    fn spill_out(&self, spill: &Arc<SpillTier>, id: u32, data: ChunkData) {
+    fn spill_out(&self, spill: &Arc<SpillTier>, key: u64, data: ChunkData) {
         let spill = spill.clone();
         let writes = self.stats.spill_writes.clone();
         let work = move || {
             writes.inc();
-            spill.put(id, &data);
+            spill.put(key, &data);
         };
         match &self.fetch_pool {
             Some(pool) => {
@@ -477,7 +800,12 @@ impl HyperFs {
     }
 
     fn issue_prefetch(&self, id: u32) {
-        if self.cache.contains(id) {
+        let Ok((expected_len, expected_hash, _)) = self.chunk_meta(id) else {
+            self.prefetcher.complete(id);
+            return;
+        };
+        let key = tier_key(&self.ns, id, expected_hash);
+        if self.cache.contains(key) {
             self.prefetcher.complete(id);
             return;
         }
@@ -487,9 +815,8 @@ impl HyperFs {
         let inflight = self.inflight.clone();
         let prefetcher = self.prefetcher.clone();
         let spill = self.spill.clone();
-        let expected_len = self.chunk_len(id);
-        let expected_hash = self.chunk_hash(id);
-        let key = FsManifest::chunk_key(&self.ns, id);
+        let obj_key = self.object_key(id, expected_hash);
+        let touched = self.touched.clone();
         let hits = self.stats.prefetch_hits.clone();
         let gets = self.stats.backend_gets.clone();
         let spill_hits = self.stats.spill_hits.clone();
@@ -500,24 +827,24 @@ impl HyperFs {
             // fetch lane itself: we are already on background I/O
             // threads, so victim spills happen inline, not re-queued
             let admit = |data: &ChunkData, respill_self: bool| {
-                admit_two_tier(&cache, spill.as_ref(), id, data, respill_self, |s, eid, edata| {
+                admit_two_tier(&cache, spill.as_ref(), key, data, respill_self, |s, ek, ed| {
                     spill_writes.inc();
-                    s.put(eid, &edata);
+                    s.put(ek, &ed);
                 });
             };
             // skip without waiting if a reader is already fetching it
-            if !cache.contains(id) {
-                let _ = inflight.run_if_absent(id, || {
+            if !cache.contains(key) {
+                let outcome = inflight.run_if_absent(key, || {
                     // re-check under flight ownership: a reader may have
                     // cached it between our contains() and leading. The
                     // admission also happens inside the flight, upholding
                     // the "no cache entry + no flight => no fetch
                     // outstanding" invariant for prefetched chunks too.
-                    if let Some(hit) = cache.get(id) {
+                    if let Some(hit) = cache.get(key) {
                         return Ok(hit);
                     }
                     if let Some(s) = &spill {
-                        if let Some(data) = s.get(id, expected_len, expected_hash) {
+                        if let Some(data) = s.get(key, expected_len, expected_hash) {
                             spill_hits.inc();
                             admit(&data, false);
                             hits.inc();
@@ -526,11 +853,21 @@ impl HyperFs {
                         spill_misses.inc();
                     }
                     gets.inc();
-                    let data = store.get(&key).map(Arc::new).map_err(to_fetch_error)?;
+                    let data = store
+                        .get(&obj_key)
+                        .map(|v| Arc::new(ChunkBytes::ram(v)))
+                        .map_err(to_fetch_error)?;
                     admit(&data, true);
                     hits.inc();
                     Ok(data)
                 });
+                // a prefetched chunk counts as touched: its later demand
+                // hit is readahead paying off, not a content-dedup win
+                if let Some(Ok(_)) = outcome {
+                    if let Some(t) = touched.get(id as usize) {
+                        t.store(true, Ordering::Relaxed);
+                    }
+                }
             }
             // queued-or-in-flight marker is now stale either way
             prefetcher.complete(id);
@@ -566,10 +903,36 @@ impl HyperFs {
         self.inflight.in_flight()
     }
 
+    /// Register this mount's read-path counters under `hfs.<ns>.*` so
+    /// they appear in [`MetricsRegistry::report`] next to the
+    /// coordinator's metrics. Counters are shared, not copied: the
+    /// report always renders live values.
+    pub fn register_metrics(&self, reg: &MetricsRegistry) {
+        let s = &self.stats;
+        let named: [(&str, &Counter); 9] = [
+            ("reads", &s.reads),
+            ("bytes_read", &s.bytes_read),
+            ("cache_hits", &s.cache_hits),
+            ("cache_misses", &s.cache_misses),
+            ("backend_gets", &s.backend_gets),
+            ("spill_hits", &s.spill_hits),
+            ("shard_loads", &s.shard_loads),
+            ("dedup_hits", &s.dedup_hits),
+            ("packed_reads", &s.packed_reads),
+        ];
+        for (name, c) in named {
+            reg.register_counter(&format!("hfs.{}.{name}", self.ns), c.clone());
+        }
+    }
+
     /// Drop every cached chunk from *both* tiers (RAM and disk spill) and
     /// reset prefetch state — the sequential run, the adaptive depth, and
     /// the hit/miss window — so the predictor cannot suppress re-prefetch
     /// of dropped chunks and stale spill files cannot outlive the clear.
+    /// Resident metadata (file-table shards, the chunk table) and the
+    /// first-touch bitmap stay: they describe the immutable sealed
+    /// namespace, not cached payload, and the dedup counter is
+    /// documented as "since mount".
     ///
     /// Queued background work (readahead, spill writes) is drained
     /// *before* the tiers are cleared, so nothing enqueued by earlier
@@ -607,6 +970,13 @@ mod tests {
         (store, paths)
     }
 
+    /// Pre-load the path shard and chunk table so the byte/GET accounting
+    /// below sees only data traffic, not lazy metadata loads.
+    fn warm_meta(fs: &HyperFs, path: &str) {
+        fs.stat(path).unwrap();
+        fs.chunk_object_key(0).unwrap();
+    }
+
     #[test]
     fn read_roundtrip() {
         let (store, paths) = setup(10, 100, 350);
@@ -635,6 +1005,7 @@ mod tests {
         assert_eq!(fs.stats.cache_misses.get(), 10); // one per chunk
         assert_eq!(fs.stats.cache_hits.get(), 20);
         assert_eq!(fs.stats.backend_gets.get(), 10);
+        assert_eq!(fs.stats.dedup_hits.get(), 0, "all chunks are distinct content");
     }
 
     #[test]
@@ -654,6 +1025,7 @@ mod tests {
         // after the run is sequential, every later chunk came from readahead
         assert!(fs.stats.prefetch_issued.get() >= 7, "{:?}", fs.stats);
         assert!(fs.stats.cache_misses.get() <= 3, "{:?}", fs.stats);
+        assert_eq!(fs.stats.dedup_hits.get(), 0, "prefetched hits are not dedup wins");
     }
 
     #[test]
@@ -661,8 +1033,8 @@ mod tests {
         let (store, _) = setup(5, 42, 1000);
         let fs = HyperFs::mount(store, "ds", 1 << 20).unwrap();
         assert_eq!(fs.stat("data/00003.bin").unwrap(), 42);
-        assert_eq!(fs.list("data/").len(), 5);
-        assert_eq!(fs.list("nope/").len(), 0);
+        assert_eq!(fs.list("data/").unwrap().len(), 5);
+        assert_eq!(fs.list("nope/").unwrap().len(), 0);
         assert!(fs.stat("missing").is_err());
     }
 
@@ -763,7 +1135,7 @@ mod tests {
             }
         });
         assert_eq!(
-            counting.gets_for(&FsManifest::chunk_key("ds", 0)),
+            counting.gets_for(&fs.chunk_object_key(0).unwrap()),
             1,
             "thundering herd must coalesce to one backend GET"
         );
@@ -795,7 +1167,8 @@ mod tests {
         let (counting, store) = small_file_setup();
         let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
-        counting.reset(); // ignore the manifest GET from mount
+        warm_meta(&fs, "tiny.bin");
+        counting.reset(); // ignore mount + metadata GETs
         let view = fs.read_file("tiny.bin").unwrap();
         assert_eq!(view, vec![42u8; 100], "byte-for-byte equality");
         assert_eq!(counting.total_range_gets(), 1, "served by get_range");
@@ -815,6 +1188,7 @@ mod tests {
         let (counting, store) = small_file_setup();
         let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
+        warm_meta(&fs, "tiny.bin");
         counting.reset();
         // 3000 * 4 >= 6100: not "much smaller" than its chunk
         assert_eq!(fs.read_file("big1.bin").unwrap(), vec![1u8; 3000]);
@@ -836,6 +1210,7 @@ mod tests {
         let store: StoreHandle = counting.clone();
         let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
+        warm_meta(&fs, &paths[0]);
         counting.reset();
         for (i, p) in paths.iter().enumerate() {
             assert_eq!(fs.read_file(p).unwrap(), vec![(i % 251) as u8; 100]);
@@ -861,6 +1236,7 @@ mod tests {
         let store: StoreHandle = counting.clone();
         let fs = HyperFs::mount_with(store, "ds", 1 << 20, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
+        warm_meta(&fs, &paths[0]);
         counting.reset();
         let n = paths.len();
         let order: Vec<String> = (0..n).map(|i| paths[(i * 17) % n].clone()).collect();
@@ -931,6 +1307,7 @@ mod tests {
             HyperFs::mount_with(slow, "ds", 2048, PrefetchPolicy { max_depth: 0 }, false)
                 .unwrap(),
         );
+        warm_meta(&fs, "tiny.bin");
         counting.reset();
         let barrier = Arc::new(std::sync::Barrier::new(16));
         std::thread::scope(|s| {
@@ -966,6 +1343,7 @@ mod tests {
         let store: StoreHandle = counting.clone();
         let fs = HyperFs::mount_with(store, "ds", 1000, PrefetchPolicy { max_depth: 0 }, false)
             .unwrap();
+        warm_meta(&fs, &paths[0]);
         counting.reset();
         // deterministic stride-17 shuffle: chunk order rarely steps +1,
         // so the scan detector stays off for almost every read
@@ -988,12 +1366,14 @@ mod tests {
     // ------------------------------------------- two-tier spill cache
 
     /// Spill-enabled mount config: sync mode so every spill read/write
-    /// happens inline (deterministic), prefetch off unless a test arms it.
+    /// happens inline (deterministic), prefetch off unless a test arms
+    /// it, mmap reads on so spill hits exercise the mapped path.
     fn spill_cfg(dir: &std::path::Path, cache_bytes: u64) -> HfsConfig {
         HfsConfig {
             cache_bytes,
             spill_dir: Some(dir.to_path_buf()),
             spill_bytes: 64 << 20,
+            spill_mmap: true,
             prefetch_max_depth: 0,
             background_prefetch: false,
         }
@@ -1056,7 +1436,7 @@ mod tests {
             gets_before + 8,
             "a cleared cache must re-fetch every chunk from the backend"
         );
-        assert_eq!(counting.gets_for(&FsManifest::chunk_key("ds", 0)), 2);
+        assert_eq!(counting.gets_for(&fs.chunk_object_key(0).unwrap()), 2);
     }
 
     #[test]
@@ -1109,6 +1489,11 @@ mod tests {
         );
         assert_eq!(fs.stats.spill_hits.get(), 6, "the rest restart from disk");
         assert_eq!(fs.spill().unwrap().rejected(), 0);
+        assert_eq!(
+            fs.stats.dedup_hits.get(),
+            0,
+            "cross-mount spill reuse is not a content-dedup win"
+        );
     }
 
     #[test]
@@ -1133,6 +1518,8 @@ mod tests {
             corrupted += 1;
         }
         assert!(corrupted >= 6);
+        // spill_mmap is on in spill_cfg: the digest check runs over the
+        // mapped pages, and must reject every corrupt file
         let fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 800)).unwrap();
         counting.reset();
         for (i, p) in paths.iter().enumerate() {
@@ -1149,10 +1536,12 @@ mod tests {
 
     #[test]
     fn rebuilt_namespace_with_same_sizes_never_serves_stale_spill() {
-        // the nasty case for name-only content addressing: the namespace
-        // is re-uploaded with byte-identical LAYOUT (same paths, sizes,
-        // chunk lengths) but different content — only the
-        // manifest-recorded chunk digest can tell the spill data is stale
+        // the nasty case for name-keyed caching: the namespace is
+        // re-uploaded with byte-identical LAYOUT (same paths, sizes,
+        // chunk lengths) but different content. Under content-addressed
+        // keying the rebuilt chunks get brand-new digests, so v1 spill
+        // files are simply unreachable — and the identical chunks
+        // *within* each upload collapse to a single fetched object.
         let dir = crate::util::TempDir::new().unwrap();
         let store: StoreHandle = Arc::new(MemStore::new());
         let upload = |byte: u8| {
@@ -1169,7 +1558,8 @@ mod tests {
             for i in 0..32 {
                 fs.read_file(&format!("data/{i:05}.bin")).unwrap();
             }
-            assert!(!fs.spill().unwrap().is_empty());
+            assert_eq!(fs.stats.backend_gets.get(), 1, "8 identical chunks, 1 GET");
+            assert_eq!(fs.stats.dedup_hits.get(), 7, "the other 7 were twins");
         }
         upload(2); // rebuild: same sizes, different bytes
         let fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 800)).unwrap();
@@ -1180,9 +1570,10 @@ mod tests {
                 "v1 bytes must never be served for the rebuilt namespace"
             );
         }
-        assert_eq!(fs.stats.backend_gets.get(), 8, "every chunk re-fetched");
-        assert_eq!(fs.stats.spill_hits.get(), 0);
-        assert!(fs.spill().unwrap().rejected() >= 6, "stale spill files purged");
+        assert_eq!(fs.stats.backend_gets.get(), 1, "v2 content fetched fresh, once");
+        assert_eq!(fs.stats.spill_hits.get(), 0, "no stale v1 spill data served");
+        assert_eq!(fs.spill().unwrap().rejected(), 0, "stale files unreachable, not re-keyed");
+        assert_eq!(fs.stats.dedup_hits.get(), 7);
     }
 
     #[test]
@@ -1221,6 +1612,7 @@ mod tests {
         let store: StoreHandle = counting.clone();
         // RAM too small for the chunk: it spills directly on first fetch
         let fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 2048)).unwrap();
+        warm_meta(&fs, "tiny.bin");
         counting.reset();
         assert_eq!(fs.read_file("big1.bin").unwrap(), vec![1u8; 3000]);
         assert_eq!(fs.stats.backend_gets.get(), 1);
@@ -1261,5 +1653,164 @@ mod tests {
             "shuffled access must collapse readahead: {}",
             fs.prefetch_depth()
         );
+    }
+
+    // ------------------------------------------- sharded metadata plane
+
+    #[test]
+    fn legacy_and_sharded_mounts_read_byte_identical() {
+        let legacy_store: StoreHandle = Arc::new(MemStore::new());
+        let sharded_store: StoreHandle = Arc::new(MemStore::new());
+        let mut a = Uploader::legacy(legacy_store.clone(), "ds", 300);
+        let mut b = Uploader::new(sharded_store.clone(), "ds", 300);
+        let mut paths = Vec::new();
+        for i in 0..12 {
+            let path = format!("data/{i:05}.bin");
+            let body = vec![(i % 251) as u8; 100];
+            a.add_file(&path, &body).unwrap();
+            b.add_file(&path, &body).unwrap();
+            paths.push(path);
+        }
+        a.seal().unwrap();
+        b.seal().unwrap();
+        let old = HyperFs::mount(legacy_store, "ds", 1 << 20).unwrap();
+        let new = HyperFs::mount(sharded_store, "ds", 1 << 20).unwrap();
+        assert!(!old.is_sharded() && old.manifest().is_some());
+        assert!(new.is_sharded() && new.manifest().is_none());
+        for p in &paths {
+            assert_eq!(&old.read_file(p).unwrap()[..], &new.read_file(p).unwrap()[..]);
+        }
+        assert_eq!(old.file_count(), 12);
+        assert_eq!(new.file_count(), 12);
+        assert_eq!(new.total_bytes(), 1200);
+        assert_eq!(new.chunk_count(), old.chunk_count());
+        assert!(new.stats.shard_loads.get() > 0, "sharded metadata loaded lazily");
+        assert_eq!(old.stats.shard_loads.get(), 0, "legacy mounts load nothing lazily");
+        assert_eq!(old.list("data/").unwrap(), new.list("data/").unwrap());
+    }
+
+    #[test]
+    fn sharded_mount_parses_root_only_and_loads_shards_on_demand() {
+        let inner: StoreHandle = Arc::new(MemStore::new());
+        let cfg = crate::config::UploadConfig {
+            chunk_size: 400,
+            shard_files: 16,
+            ..Default::default()
+        };
+        let mut up = Uploader::with_config(inner.clone(), "ds", cfg);
+        for i in 0..64 {
+            up.add_file(&format!("data/{i:05}.bin"), &vec![(i % 251) as u8; 100]).unwrap();
+        }
+        up.seal().unwrap(); // 4 shards of 16 files
+        let counting = Arc::new(CountingStore::new(inner));
+        let store: StoreHandle = counting.clone();
+        let fs = HyperFs::mount(store, "ds", 1 << 20).unwrap();
+        assert_eq!(counting.total_gets(), 1, "mount reads only the root manifest");
+        assert_eq!(fs.stats.shard_loads.get(), 0);
+        fs.read_file("data/00000.bin").unwrap();
+        assert_eq!(
+            fs.stats.shard_loads.get(),
+            2,
+            "first read pulls its path shard + the chunk table"
+        );
+        fs.read_file("data/00001.bin").unwrap();
+        assert_eq!(fs.stats.shard_loads.get(), 2, "same shard: no more metadata traffic");
+        fs.read_file("data/00063.bin").unwrap();
+        assert_eq!(fs.stats.shard_loads.get(), 3, "a far file pulls exactly its own shard");
+        assert_eq!(fs.list("data/0006").unwrap().len(), 4, "00060..00063");
+    }
+
+    #[test]
+    fn content_dedup_collapses_backend_traffic() {
+        let inner: StoreHandle = Arc::new(MemStore::new());
+        let counting = Arc::new(CountingStore::new(inner));
+        let store: StoreHandle = counting.clone();
+        // 64 single-chunk files but only 8 distinct contents
+        let mut up = Uploader::new(store.clone(), "ds", 64);
+        for i in 0..64 {
+            up.add_file(&format!("data/{i:05}.bin"), &vec![(i % 8) as u8; 64]).unwrap();
+        }
+        let (_, ustats) = up.seal_with_stats().unwrap();
+        assert_eq!(ustats.chunks_written, 8, "8 distinct contents -> 8 chunk PUTs");
+        assert_eq!(ustats.chunks_deduped, 56);
+        assert_eq!(counting.total_puts(), 8 + 3, "8 chunks + root/shard/chunk-table");
+        let fs = HyperFs::mount(store, "ds", 1 << 20).unwrap();
+        warm_meta(&fs, "data/00000.bin");
+        counting.reset();
+        for i in 0..64 {
+            assert_eq!(
+                fs.read_file(&format!("data/{i:05}.bin")).unwrap(),
+                vec![(i % 8) as u8; 64]
+            );
+        }
+        assert_eq!(fs.stats.backend_gets.get(), 8, "one GET per distinct content");
+        assert_eq!(fs.stats.dedup_hits.get(), 56, "56 chunks served by a cached twin");
+        assert_eq!(counting.total_gets(), 8);
+        assert_eq!(counting.total_get_bytes(), 8 * 64, "transfer scales with unique bytes");
+    }
+
+    #[test]
+    fn packed_small_files_read_back_without_range_gets() {
+        let inner: StoreHandle = Arc::new(MemStore::new());
+        let counting = Arc::new(CountingStore::new(inner));
+        let store: StoreHandle = counting.clone();
+        let cfg = crate::config::UploadConfig {
+            chunk_size: 256,
+            pack_threshold: 32,
+            ..Default::default()
+        };
+        let mut up = Uploader::with_config(store.clone(), "ds", cfg);
+        for i in 0..10 {
+            up.add_file(&format!("f/{i}.bin"), &vec![i as u8; 16]).unwrap();
+        }
+        let (m, ustats) = up.seal_with_stats().unwrap();
+        assert_eq!(ustats.files_packed, 10);
+        assert!(m.chunks.iter().all(|c| c.packed), "every chunk is an archive");
+        let fs = HyperFs::mount(store, "ds", 1 << 20).unwrap();
+        counting.reset();
+        for i in 0..10 {
+            assert_eq!(fs.read_file(&format!("f/{i}.bin")).unwrap(), vec![i as u8; 16]);
+        }
+        assert_eq!(fs.stats.packed_reads.get(), 10);
+        // 29-byte archive entries, 8 per 256-byte chunk -> 2 archive chunks
+        assert_eq!(fs.stats.backend_gets.get(), 2, "archive chunks amortize the fetches");
+        assert_eq!(counting.total_range_gets(), 0, "tiny packed members never range-GET");
+    }
+
+    #[test]
+    fn pre_digest_legacy_manifest_mounts_and_reads() {
+        // hand-written v1 manifest with no hash fields at all — the shape
+        // a pre-digest writer produced; tier keys fall back to (ns, id)
+        let store: StoreHandle = Arc::new(MemStore::new());
+        let manifest = concat!(
+            r#"{"chunk_size":8,"files":["#,
+            r#"{"path":"a.bin","chunk":0,"offset":0,"len":3},"#,
+            r#"{"path":"b.bin","chunk":0,"offset":3,"len":2}],"#,
+            r#""chunks":[{"id":0,"len":5}]}"#
+        );
+        store.put(&FsManifest::manifest_key("old"), manifest.as_bytes()).unwrap();
+        store.put(&FsManifest::chunk_key("old", 0), b"hello").unwrap();
+        let fs = HyperFs::mount(store, "old", 1 << 20).unwrap();
+        assert!(!fs.is_sharded());
+        assert_eq!(fs.read_file("a.bin").unwrap(), b"hel".to_vec());
+        assert_eq!(fs.read_file("b.bin").unwrap(), b"lo".to_vec());
+        assert_eq!(fs.stats.backend_gets.get(), 1);
+        assert_eq!(fs.chunk_object_key(0).unwrap(), "old/chunks/00000000");
+        assert_eq!(fs.list("").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn stats_register_into_metrics_registry() {
+        let (store, paths) = setup(4, 100, 200);
+        let fs = HyperFs::mount(store, "ds", 1 << 20).unwrap();
+        fs.read_file(&paths[0]).unwrap();
+        let reg = MetricsRegistry::new();
+        fs.register_metrics(&reg);
+        let report = reg.report();
+        assert!(report.contains("hfs.ds.reads 1"), "{report}");
+        assert!(report.contains("hfs.ds.shard_loads"), "{report}");
+        assert!(report.contains("hfs.ds.dedup_hits 0"), "{report}");
+        fs.read_file(&paths[1]).unwrap();
+        assert!(reg.report().contains("hfs.ds.reads 2"), "registered counters are live");
     }
 }

@@ -15,6 +15,11 @@
 //! ```text
 //!             read_file(path)
 //!                   │
+//!        ┌──────────▼──────────┐  lazy metadata plane: root manifest
+//!        │  RootManifest +     │  parsed at mount; file-table shards +
+//!        │  lazy shard tables  │  chunk table page in on first touch
+//!        └──────────┬──────────┘
+//!                   │ (chunk, offset, len) — by digest when available
 //!        ┌──────────▼──────────┐  hit: zero-copy ByteView
 //!        │  ChunkCache (RAM,   ├────────────────────────────► reader
 //!        │  sharded LRU)       │
@@ -24,17 +29,31 @@
 //!        │    SingleFlight     │◄────┤ (scan detector,│ (0..=cap)
 //!        │  (1 load per chunk) │     │  hit window)   │
 //!        └──────────┬──────────┘     └────────────────┘
-//!             miss  │      ▲ promote
+//!             miss  │      ▲ promote (mmap-backed views)
 //!        ┌──────────▼──────┴──┐   RAM eviction   ┌───────────────┐
 //!        │  SpillTier (local  │◄─────────────────┤  FetchPool    │
 //!        │  disk LRU, bounded)│   (spill writes) │ (bounded lanes│
 //!        └──────────┬─────────┘                  │  readahead +  │
 //!             miss  │                            │  spill I/O)   │
 //!        ┌──────────▼──────────┐                 └───────────────┘
-//!        │ ObjectStore (S3-ish │  GET / range GET
-//!        │  chunks + manifest) │
+//!        │ ObjectStore: CAS    │  GET / range GET
+//!        │ chunks + sharded    │
+//!        │ manifest (or legacy)│
 //!        └─────────────────────┘
 //! ```
+//!
+//! The metadata plane scales past the monolithic manifest: the uploader
+//! writes a small root manifest plus per-range file-table shards and a
+//! chunk table ([`RootManifest`], format 2), so mount cost is O(shards)
+//! root entries rather than O(files), and a mounted namespace pages in
+//! only the shards its reads actually touch (single-flighted, counted in
+//! `HyperFsStats::shard_loads`). Chunk objects are content-addressed by
+//! their FNV-1a digest ([`cas_chunk_key`]) — identical chunks share one
+//! object and one cache/spill slot, the uploader skips duplicate PUTs,
+//! and pre-digest legacy namespaces fall back to `(ns, id)` keys. Files
+//! at or below the configured pack threshold are packed into shared
+//! archive chunks ([`iter_archive`]) so a billion tiny files don't mean
+//! a billion tiny objects. Legacy monolithic manifests still mount.
 //!
 //! The read path is built around four ideas:
 //!
@@ -67,9 +86,12 @@
 //! Components:
 //!
 //! * [`chunk`] — on-store layout: files packed into fixed-size chunks plus
-//!   a JSON manifest (`FsManifest`).
-//! * [`writer`] — the upload path: chunker that packs files and writes the
-//!   manifest ([`Uploader`]).
+//!   the manifest formats (legacy monolithic [`FsManifest`], sharded
+//!   [`RootManifest`]), the [`PathIndex`] hash lookup, content-addressed
+//!   chunk keys, and the small-file archive format.
+//! * [`writer`] — the upload path: chunker that packs files, dedups
+//!   chunks by digest, and writes the sharded (or legacy) manifest
+//!   ([`Uploader`], [`UploadStats`], [`synthesize_namespace`]).
 //! * [`view`] — [`ByteView`], the zero-copy chunk window every read returns.
 //! * [`cache`] — [`ChunkCache`], the sharded RAM LRU with a byte budget.
 //! * [`spill`] — [`SpillTier`], the bounded, content-checked local-disk
@@ -97,14 +119,19 @@ pub mod view;
 pub mod writer;
 
 pub use cache::ChunkCache;
-pub use chunk::{ChunkRef, FileEntry, FsManifest};
+pub use chunk::{
+    cas_chunk_key, iter_archive, ArchiveIter, ChunkRef, FileEntry, FsManifest, PathIndex,
+    RootManifest, ShardRef, SHARDED_FORMAT,
+};
 pub use fetch::FetchPool;
 pub use fs::{HyperFs, HyperFsStats};
 pub use prefetch::{PrefetchPolicy, Prefetcher};
 pub use singleflight::{FetchError, SingleFlight};
 pub use spill::SpillTier;
-pub use view::{ByteView, ChunkData};
-pub use writer::Uploader;
+pub use view::{ByteView, ChunkBytes, ChunkData};
+pub use writer::{synthesize_namespace, UploadStats, Uploader};
+
+pub use crate::config::UploadConfig;
 
 /// Default chunk size (64 MB — middle of the paper's 12–100 MB sweet spot).
 pub const DEFAULT_CHUNK_SIZE: u64 = 64 << 20;

@@ -65,9 +65,12 @@ impl Flight {
 }
 
 /// In-flight fetch table; one per mounted [`super::HyperFs`].
+///
+/// Keys are the same `u64` content keys the chunk cache uses, so two
+/// chunks that dedup to the same bytes also coalesce to one fetch.
 #[derive(Default)]
 pub struct SingleFlight {
-    inflight: Mutex<HashMap<u32, Arc<Flight>>>,
+    inflight: Mutex<HashMap<u64, Arc<Flight>>>,
     /// Number of fetches currently in flight (exposed for status views).
     gauge: Gauge,
 }
@@ -91,7 +94,7 @@ impl SingleFlight {
     /// insertion done inside it) *before* the flight is retired, so a
     /// caller that finds neither cache entry nor flight is guaranteed the
     /// previous fetch fully finished.
-    pub fn run<F: FnOnce() -> FetchOutcome>(&self, id: u32, fetch: F) -> (FetchOutcome, bool) {
+    pub fn run<F: FnOnce() -> FetchOutcome>(&self, id: u64, fetch: F) -> (FetchOutcome, bool) {
         let (flight, leader) = self.join_or_lead(id);
         if leader {
             (self.lead(id, &flight, fetch), true)
@@ -105,7 +108,7 @@ impl SingleFlight {
     /// non-blocking flavor prefetch workers use.
     pub fn run_if_absent<F: FnOnce() -> FetchOutcome>(
         &self,
-        id: u32,
+        id: u64,
         fetch: F,
     ) -> Option<FetchOutcome> {
         let (flight, leader) = self.join_or_lead(id);
@@ -116,7 +119,7 @@ impl SingleFlight {
         }
     }
 
-    fn join_or_lead(&self, id: u32) -> (Arc<Flight>, bool) {
+    fn join_or_lead(&self, id: u64) -> (Arc<Flight>, bool) {
         let mut m = self.inflight.lock().unwrap();
         match m.get(&id) {
             Some(f) => (f.clone(), false),
@@ -131,7 +134,7 @@ impl SingleFlight {
 
     fn lead<F: FnOnce() -> FetchOutcome>(
         &self,
-        id: u32,
+        id: u64,
         flight: &Arc<Flight>,
         fetch: F,
     ) -> FetchOutcome {
@@ -141,7 +144,7 @@ impl SingleFlight {
         // removes the map entry.
         struct Retire<'a> {
             sf: &'a SingleFlight,
-            id: u32,
+            id: u64,
             flight: &'a Arc<Flight>,
             published: bool,
         }
@@ -172,12 +175,17 @@ impl SingleFlight {
 mod tests {
     use std::sync::atomic::{AtomicU64, Ordering};
 
+    use super::super::view::ChunkBytes;
     use super::*;
+
+    fn data(v: Vec<u8>) -> ChunkData {
+        Arc::new(ChunkBytes::ram(v))
+    }
 
     #[test]
     fn single_caller_leads() {
         let sf = SingleFlight::new();
-        let (out, leader) = sf.run(1, || Ok(Arc::new(vec![1, 2, 3])));
+        let (out, leader) = sf.run(1, || Ok(data(vec![1, 2, 3])));
         assert!(leader);
         assert_eq!(*out.unwrap(), vec![1, 2, 3]);
         assert_eq!(sf.in_flight(), 0);
@@ -189,7 +197,7 @@ mod tests {
         let (out, _) = sf.run(2, || Err(FetchError::Storage("backend down".into())));
         assert_eq!(out.unwrap_err(), FetchError::Storage("backend down".into()));
         // flight retired: next call leads again
-        let (out, leader) = sf.run(2, || Ok(Arc::new(vec![9])));
+        let (out, leader) = sf.run(2, || Ok(data(vec![9])));
         assert!(leader && out.is_ok());
     }
 
@@ -202,7 +210,7 @@ mod tests {
         assert!(caught.is_err());
         assert_eq!(sf.in_flight(), 0, "panicked flight must be retired");
         // the id is fetchable again, not wedged forever
-        let (out, leader) = sf.run(9, || Ok(Arc::new(vec![1])));
+        let (out, leader) = sf.run(9, || Ok(data(vec![1])));
         assert!(leader);
         assert_eq!(*out.unwrap(), vec![1]);
     }
@@ -223,7 +231,7 @@ mod tests {
                         fetches.fetch_add(1, Ordering::SeqCst);
                         // widen the race window so followers really pile up
                         std::thread::sleep(std::time::Duration::from_millis(20));
-                        Ok(Arc::new(vec![7u8; 8]))
+                        Ok(data(vec![7u8; 8]))
                     });
                     assert_eq!(*out.unwrap(), vec![7u8; 8]);
                 });
@@ -246,18 +254,18 @@ mod tests {
                 sf2.run(3, || {
                     entered2.wait(); // leader is now mid-fetch
                     release2.wait();
-                    Ok(Arc::new(vec![3]))
+                    Ok(data(vec![3]))
                 })
                 .0
                 .unwrap();
             });
             entered.wait();
             assert_eq!(sf.in_flight(), 1);
-            assert!(sf.run_if_absent(3, || Ok(Arc::new(vec![0]))).is_none());
+            assert!(sf.run_if_absent(3, || Ok(data(vec![0]))).is_none());
             release.wait();
         });
         // retired: absent now leads
-        assert!(sf.run_if_absent(3, || Ok(Arc::new(vec![1]))).is_some());
+        assert!(sf.run_if_absent(3, || Ok(data(vec![1]))).is_some());
     }
 
     #[test]
@@ -267,7 +275,7 @@ mod tests {
         for id in 0..4 {
             sf.run(id, || {
                 fetches.fetch_add(1, Ordering::SeqCst);
-                Ok(Arc::new(vec![id as u8]))
+                Ok(data(vec![id as u8]))
             })
             .0
             .unwrap();

@@ -53,7 +53,7 @@ use crate::storage::{DiskStore, ObjectStore};
 use crate::Result;
 
 use super::chunk::fnv1a64;
-use super::view::ChunkData;
+use super::view::{ChunkBytes, ChunkData};
 
 /// Index entry for one spilled chunk (the bytes live on disk).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,9 +69,9 @@ struct Entry {
 /// instead of a full-table scan under the mutex.
 #[derive(Default)]
 struct Index {
-    entries: HashMap<u32, Entry>,
+    entries: HashMap<u64, Entry>,
     /// stamp -> id; the first key is the LRU victim.
-    by_stamp: BTreeMap<u64, u32>,
+    by_stamp: BTreeMap<u64, u64>,
     used_bytes: u64,
     clock: u64,
 }
@@ -83,7 +83,7 @@ impl Index {
     }
 
     /// Insert or replace `id`, returning the displaced entry, if any.
-    fn insert(&mut self, id: u32, len: u64, hash: u64) -> Option<Entry> {
+    fn insert(&mut self, id: u64, len: u64, hash: u64) -> Option<Entry> {
         let stamp = self.next_stamp();
         let old = self.entries.insert(id, Entry { len, hash, stamp });
         if let Some(o) = &old {
@@ -95,7 +95,7 @@ impl Index {
         old
     }
 
-    fn touch(&mut self, id: u32) {
+    fn touch(&mut self, id: u64) {
         let stamp = self.next_stamp();
         if let Some(e) = self.entries.get_mut(&id) {
             self.by_stamp.remove(&e.stamp);
@@ -104,7 +104,7 @@ impl Index {
         }
     }
 
-    fn remove(&mut self, id: u32) -> Option<Entry> {
+    fn remove(&mut self, id: u64) -> Option<Entry> {
         let e = self.entries.remove(&id)?;
         self.by_stamp.remove(&e.stamp);
         self.used_bytes -= e.len;
@@ -112,16 +112,30 @@ impl Index {
     }
 
     /// Least-recently-used id, O(log n).
-    fn lru(&self) -> Option<u32> {
+    fn lru(&self) -> Option<u64> {
         self.by_stamp.first_key_value().map(|(_, id)| *id)
     }
 }
 
-/// Bounded on-disk LRU of chunks, keyed by `(namespace, chunk id)`.
+/// Outcome of loading and verifying one spill file.
+enum Load {
+    /// Bytes verified against the index entry; safe to serve.
+    Ok(ChunkData),
+    /// The file disappeared (external cleanup); not a corruption event.
+    Vanished,
+    /// Length or digest mismatch; the entry must be purged.
+    Corrupt,
+}
+
+/// Bounded on-disk LRU of chunks, keyed by the same `u64` content key as
+/// the RAM cache (chunk digest, or a `(ns, id)` hash for legacy chunks).
 pub struct SpillTier {
     store: DiskStore,
     ns: String,
     capacity_bytes: u64,
+    /// Serve hits as mmap-backed views instead of read-copies (unix).
+    #[cfg_attr(not(unix), allow(dead_code))]
+    use_mmap: bool,
     index: Mutex<Index>,
     hits: Counter,
     writes: Counter,
@@ -131,7 +145,8 @@ pub struct SpillTier {
 }
 
 impl SpillTier {
-    /// Open (or create) the spill tier for namespace `ns` under `dir`.
+    /// Open (or create) the spill tier for namespace `ns` under `dir`,
+    /// serving hits through the plain read-copy path.
     ///
     /// An existing directory is scanned: files whose names parse and whose
     /// ids are unique are adopted into the index (their integrity is
@@ -140,10 +155,20 @@ impl SpillTier {
     /// then enforces the byte budget, so shrinking `capacity_bytes`
     /// across a restart trims the directory immediately.
     pub fn open(dir: &Path, ns: &str, capacity_bytes: u64) -> Result<Self> {
+        Self::open_with(dir, ns, capacity_bytes, false)
+    }
+
+    /// [`SpillTier::open`] with an explicit serving mode: `use_mmap`
+    /// serves hits as mmap-backed [`ChunkBytes`] straight from page cache
+    /// (digest-verified over the mapped bytes before a single byte is
+    /// handed out; ignored on non-unix targets, and any mapping failure
+    /// falls back to the read-copy path).
+    pub fn open_with(dir: &Path, ns: &str, capacity_bytes: u64, use_mmap: bool) -> Result<Self> {
         let tier = Self {
             store: DiskStore::new(dir)?,
             ns: ns.to_string(),
             capacity_bytes,
+            use_mmap,
             index: Mutex::new(Index::default()),
             hits: Counter::default(),
             writes: Counter::default(),
@@ -175,15 +200,15 @@ impl SpillTier {
     }
 
     /// On-store key of one spilled chunk. The name is the whole identity:
-    /// `spill/<ns>/<id>_<len>_<fnv1a64 hex>`.
-    fn key(&self, id: u32, len: u64, hash: u64) -> String {
-        format!("spill/{}/{id:08}_{len}_{hash:016x}", self.ns)
+    /// `spill/<ns>/<key hex>_<len>_<fnv1a64 hex>`.
+    fn key(&self, id: u64, len: u64, hash: u64) -> String {
+        format!("spill/{}/{id:016x}_{len}_{hash:016x}", self.ns)
     }
 
-    /// Parse `<id>_<len>_<hash>` back out of a file name.
-    fn parse_name(name: &str) -> Option<(u32, u64, u64)> {
+    /// Parse `<key hex>_<len>_<hash hex>` back out of a file name.
+    fn parse_name(name: &str) -> Option<(u64, u64, u64)> {
         let mut parts = name.split('_');
-        let id = parts.next()?.parse::<u32>().ok()?;
+        let id = u64::from_str_radix(parts.next()?, 16).ok()?;
         let len = parts.next()?.parse::<u64>().ok()?;
         let hash = u64::from_str_radix(parts.next()?, 16).ok()?;
         parts.next().is_none().then_some((id, len, hash))
@@ -199,7 +224,7 @@ impl SpillTier {
     /// the file's own name (truncation, corruption), or the entry is
     /// purged and `None` returned. Stale or corrupt spill files are
     /// never served.
-    pub fn get(&self, id: u32, expected_len: u64, expected_hash: u64) -> Option<ChunkData> {
+    pub fn get(&self, id: u64, expected_len: u64, expected_hash: u64) -> Option<ChunkData> {
         let entry = {
             let mut idx = self.index.lock().unwrap();
             let e = *idx.entries.get(&id)?;
@@ -214,36 +239,68 @@ impl SpillTier {
             e
         };
         let key = self.key(id, entry.len, entry.hash);
-        let bytes = match self.store.get(&key) {
-            Ok(b) => b,
-            Err(_) => {
+        let data = match self.load_verified(&key, &entry) {
+            Load::Ok(data) => data,
+            Load::Vanished => {
                 // file vanished underneath us (external cleanup)
                 self.forget_if_current(id, &entry);
                 return None;
             }
+            Load::Corrupt => {
+                self.rejected.inc();
+                // drop only OUR entry: a concurrent put may have replaced
+                // it with a fresh one that must survive (its file has a
+                // different name, so the delete below cannot touch it)
+                self.forget_if_current(id, &entry);
+                let _ = self.store.delete(&key);
+                return None;
+            }
         };
-        if bytes.len() as u64 != entry.len || fnv1a64(&bytes) != entry.hash {
-            self.rejected.inc();
-            // drop only OUR entry: a concurrent put may have replaced it
-            // with a fresh one that must survive (its file has a
-            // different name, so the delete below cannot touch it)
-            self.forget_if_current(id, &entry);
-            let _ = self.store.delete(&key);
-            return None;
-        }
         // a clear() may have raced the disk read; do not resurrect
         match self.index.lock().unwrap().entries.get(&id) {
             Some(e) if e.len == entry.len && e.hash == entry.hash => {}
             _ => return None,
         }
         self.hits.inc();
-        Some(Arc::new(bytes))
+        Some(data)
+    }
+
+    /// Load the payload behind `key` and verify length + digest against
+    /// the index entry before anything is served. On unix with
+    /// `use_mmap`, the bytes come back as an mmap-backed [`ChunkBytes`]
+    /// (the digest is computed over the mapped pages — same guarantee,
+    /// no heap copy); otherwise, or when mapping fails, a read-copy.
+    fn load_verified(&self, key: &str, entry: &Entry) -> Load {
+        #[cfg(unix)]
+        if self.use_mmap {
+            if let Ok(path) = self.store.path_of(key) {
+                match ChunkBytes::map_file(&path) {
+                    Ok(mapped) => {
+                        if mapped.len() as u64 == entry.len && fnv1a64(&mapped) == entry.hash {
+                            return Load::Ok(Arc::new(mapped));
+                        }
+                        return Load::Corrupt;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Load::Vanished,
+                    // zero-length file, mmap exhaustion, …: read-copy below
+                    Err(_) => {}
+                }
+            }
+        }
+        let bytes = match self.store.get(key) {
+            Ok(b) => b,
+            Err(_) => return Load::Vanished,
+        };
+        if bytes.len() as u64 != entry.len || fnv1a64(&bytes) != entry.hash {
+            return Load::Corrupt;
+        }
+        Load::Ok(Arc::new(ChunkBytes::ram(bytes)))
     }
 
     /// Remove `id` from the index only if it still refers to the same
     /// payload as `entry` — failure paths must not clobber an entry a
     /// concurrent `put` just replaced.
-    fn forget_if_current(&self, id: u32, entry: &Entry) {
+    fn forget_if_current(&self, id: u64, entry: &Entry) {
         let mut idx = self.index.lock().unwrap();
         let current = idx
             .entries
@@ -260,7 +317,7 @@ impl SpillTier {
     /// a chunk that round-tripped through RAM costs no I/O. A different
     /// payload for the same id (the namespace was rebuilt) replaces the
     /// old file.
-    pub fn put(&self, id: u32, data: &ChunkData) {
+    pub fn put(&self, id: u64, data: &ChunkData) {
         let len = data.len() as u64;
         if len == 0 || len > self.capacity_bytes {
             return;
@@ -313,7 +370,7 @@ impl SpillTier {
 
     /// Drop every spilled chunk and delete its file.
     pub fn clear(&self) {
-        let victims: Vec<(u32, Entry)> = {
+        let victims: Vec<(u64, Entry)> = {
             let mut idx = self.index.lock().unwrap();
             idx.used_bytes = 0;
             idx.by_stamp.clear();
@@ -325,7 +382,7 @@ impl SpillTier {
     }
 
     /// Is a (possibly unverified) entry for `id` present?
-    pub fn contains(&self, id: u32) -> bool {
+    pub fn contains(&self, id: u64) -> bool {
         self.index.lock().unwrap().entries.contains_key(&id)
     }
 
@@ -376,7 +433,7 @@ mod tests {
     use crate::util::TempDir;
 
     fn chunk(byte: u8, n: usize) -> ChunkData {
-        Arc::new(vec![byte; n])
+        Arc::new(ChunkBytes::ram(vec![byte; n]))
     }
 
     #[test]
@@ -412,7 +469,7 @@ mod tests {
         let t = SpillTier::open(dir.path(), "ds", 50).unwrap();
         t.put(1, &chunk(1, 100));
         assert!(t.is_empty());
-        t.put(2, &Arc::new(Vec::new()));
+        t.put(2, &Arc::new(ChunkBytes::ram(Vec::new())));
         assert!(t.is_empty(), "empty payloads are not spilled");
     }
 
@@ -458,7 +515,7 @@ mod tests {
         // file stranded by a writer killed between write and rename
         let junk = dir.path().join("spill/ds/not_a_chunk");
         std::fs::write(&junk, b"garbage").unwrap();
-        let stranded = dir.path().join("spill/ds/00000009_300_0badc0de.tmp~1-2");
+        let stranded = dir.path().join("spill/ds/0000000000000009_300_0badc0de.tmp~1-2");
         std::fs::write(&stranded, vec![9u8; 300]).unwrap();
         let t2 = SpillTier::open(dir.path(), "ds", 350).unwrap();
         assert!(!junk.exists(), "unparseable files are removed at open");
@@ -562,11 +619,61 @@ mod tests {
     #[test]
     fn name_parsing() {
         assert_eq!(
-            SpillTier::parse_name("00000042_100_00000000deadbeef"),
-            Some((42, 100, 0xdead_beef))
+            SpillTier::parse_name("00000000000000a7_100_00000000deadbeef"),
+            Some((0xa7, 100, 0xdead_beef))
         );
         assert_eq!(SpillTier::parse_name("junk"), None);
         assert_eq!(SpillTier::parse_name("1_2_3_4"), None);
         assert_eq!(SpillTier::parse_name("x_2_3"), None);
+    }
+
+    #[cfg(unix)]
+    mod mmap_mode {
+        use super::*;
+
+        #[test]
+        fn hits_are_served_from_mapped_pages() {
+            let dir = TempDir::new().unwrap();
+            let t = SpillTier::open_with(dir.path(), "ds", 1 << 20, true).unwrap();
+            t.put(1, &chunk(7, 300));
+            let data = t.get(1, 300, 0).unwrap();
+            assert!(data.is_mapped(), "mmap mode must serve mapped bytes");
+            assert_eq!(*data, vec![7u8; 300]);
+            assert_eq!(t.hits(), 1);
+        }
+
+        #[test]
+        fn mapped_reads_are_still_digest_verified() {
+            let dir = TempDir::new().unwrap();
+            {
+                let t = SpillTier::open(dir.path(), "ds", 1 << 20).unwrap();
+                t.put(1, &chunk(1, 300));
+            }
+            // flip bytes in place (same length: only the digest can tell)
+            let file = std::fs::read_dir(dir.path().join("spill/ds"))
+                .unwrap()
+                .next()
+                .unwrap()
+                .unwrap()
+                .path();
+            std::fs::write(&file, vec![2u8; 300]).unwrap();
+            let t2 = SpillTier::open_with(dir.path(), "ds", 1 << 20, true).unwrap();
+            assert!(t2.get(1, 300, 0).is_none(), "corrupt mapped bytes must not serve");
+            assert_eq!(t2.rejected(), 1);
+            assert!(!file.exists(), "the corrupt file is deleted");
+        }
+
+        #[test]
+        fn mapped_hit_survives_eviction_of_its_file() {
+            // a reader holding a view while capacity eviction deletes the
+            // file must keep seeing valid bytes (unlink semantics)
+            let dir = TempDir::new().unwrap();
+            let t = SpillTier::open_with(dir.path(), "ds", 250, true).unwrap();
+            t.put(1, &chunk(1, 200));
+            let held = t.get(1, 200, 0).unwrap();
+            t.put(2, &chunk(2, 200)); // evicts id 1, deleting its file
+            assert!(!t.contains(1));
+            assert_eq!(*held, vec![1u8; 200], "mapped pages outlive the unlink");
+        }
     }
 }

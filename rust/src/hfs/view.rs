@@ -1,10 +1,19 @@
-//! [`ByteView`]: a zero-copy window into a cached chunk.
+//! [`ByteView`]: a zero-copy window into a cached chunk, and
+//! [`ChunkBytes`]: the chunk payload ownership enum behind it.
 //!
 //! The seed read path returned `Vec<u8>`, paying one full memcpy per file
 //! read even on a cache hit. A `ByteView` instead keeps the whole chunk
 //! alive via its `Arc` and exposes the file's `[offset, offset+len)` range
 //! through `Deref<Target = [u8]>`, so a cache-hit `read_file` is one shard
 //! lock, one `Arc` clone and two integer stores — no allocation, no copy.
+//!
+//! [`ChunkBytes`] owns the payload one of two ways:
+//!
+//! * **Ram** — a `Vec<u8>` copied out of the backend (the common case).
+//! * **Mapped** (unix only) — an `mmap(2)` region over a spill-tier file,
+//!   so a disk-tier hit serves straight from page cache with no read
+//!   syscall and no heap copy. The region is unmapped when the last view
+//!   drops.
 //!
 //! Consumers that really need owned bytes call `to_vec()` (a slice method,
 //! available through deref) and pay the copy explicitly.
@@ -13,9 +22,200 @@ use std::fmt;
 use std::ops::Deref;
 use std::sync::Arc;
 
-/// Shared chunk payload. Chunks come out of the backend as `Vec<u8>` and
-/// are never mutated afterwards, so one allocation serves every reader.
-pub type ChunkData = Arc<Vec<u8>>;
+/// Shared chunk payload. Chunks are never mutated after creation, so one
+/// allocation (or one mapping) serves every reader.
+pub type ChunkData = Arc<ChunkBytes>;
+
+/// Immutable chunk payload: heap bytes or an mmap-backed region.
+pub struct ChunkBytes {
+    repr: Repr,
+}
+
+enum Repr {
+    Ram(Vec<u8>),
+    #[cfg(unix)]
+    Mapped(mmap::MmapRegion),
+}
+
+impl ChunkBytes {
+    /// Heap-owned payload.
+    pub fn ram(bytes: Vec<u8>) -> Self {
+        Self { repr: Repr::Ram(bytes) }
+    }
+
+    /// Map a whole file read-only. Fails on empty files (zero-length
+    /// `mmap` is an error; callers fall back to a read-copy) and on any
+    /// OS-level mapping failure.
+    ///
+    /// The spill tier never truncates files in place (writes are
+    /// tmp-then-rename, deletes are unlink), so a mapping stays valid for
+    /// its whole lifetime even if the file is later replaced or removed.
+    #[cfg(unix)]
+    pub(crate) fn map_file(path: &std::path::Path) -> std::io::Result<Self> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        let region = mmap::MmapRegion::map(&file, len as usize)?;
+        Ok(Self { repr: Repr::Mapped(region) })
+    }
+
+    /// The payload bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.repr {
+            Repr::Ram(v) => v.as_slice(),
+            #[cfg(unix)]
+            Repr::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Payload length in bytes.
+    pub fn len(&self) -> usize {
+        match &self.repr {
+            Repr::Ram(v) => v.len(),
+            #[cfg(unix)]
+            Repr::Mapped(m) => m.len(),
+        }
+    }
+
+    /// True for an empty payload.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the payload is served from an mmap'd spill file rather
+    /// than heap memory (tests and stats use this).
+    pub fn is_mapped(&self) -> bool {
+        match &self.repr {
+            Repr::Ram(_) => false,
+            #[cfg(unix)]
+            Repr::Mapped(_) => true,
+        }
+    }
+}
+
+impl From<Vec<u8>> for ChunkBytes {
+    fn from(v: Vec<u8>) -> Self {
+        Self::ram(v)
+    }
+}
+
+impl Deref for ChunkBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for ChunkBytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl fmt::Debug for ChunkBytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ChunkBytes {{ len: {}, mapped: {} }}", self.len(), self.is_mapped())
+    }
+}
+
+impl PartialEq for ChunkBytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for ChunkBytes {}
+
+impl PartialEq<[u8]> for ChunkBytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Vec<u8>> for ChunkBytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(unix)]
+mod mmap {
+    //! Hand-rolled `mmap(2)` binding: the crate takes no external deps,
+    //! and std already links libc on unix, so the raw symbols resolve.
+
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    /// An owned read-only private mapping, unmapped on drop.
+    pub(super) struct MmapRegion {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // Safety: the mapping is PROT_READ/MAP_PRIVATE and never written or
+    // remapped after creation, so shared references across threads only
+    // ever read immutable pages.
+    unsafe impl Send for MmapRegion {}
+    unsafe impl Sync for MmapRegion {}
+
+    impl MmapRegion {
+        /// Map `[0, len)` of `file` read-only.
+        pub(super) fn map(file: &File, len: usize) -> std::io::Result<Self> {
+            if len == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    "cannot mmap an empty file",
+                ));
+            }
+            // Safety: fd is a live open file for the duration of the call;
+            // a MAP_FAILED return is checked before the pointer is used.
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Self { ptr, len })
+        }
+
+        pub(super) fn as_slice(&self) -> &[u8] {
+            // Safety: `ptr` is a live PROT_READ mapping of exactly `len`
+            // bytes, held for as long as `self` (and thus the slice
+            // borrow) lives.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+
+        pub(super) fn len(&self) -> usize {
+            self.len
+        }
+    }
+
+    impl Drop for MmapRegion {
+        fn drop(&mut self) {
+            // Safety: `ptr`/`len` describe a mapping we own and unmapped
+            // exactly once, here.
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
 
 /// A cheap, clonable, read-only view of a byte range inside a chunk.
 #[derive(Clone)]
@@ -95,7 +295,7 @@ impl AsRef<[u8]> for ByteView {
 
 impl From<Vec<u8>> for ByteView {
     fn from(v: Vec<u8>) -> Self {
-        Self::full(Arc::new(v))
+        Self::full(Arc::new(ChunkBytes::ram(v)))
     }
 }
 
@@ -135,9 +335,13 @@ impl PartialEq<&[u8]> for ByteView {
 mod tests {
     use super::*;
 
+    fn data(v: Vec<u8>) -> ChunkData {
+        Arc::new(ChunkBytes::ram(v))
+    }
+
     #[test]
     fn window_and_deref() {
-        let chunk = Arc::new((0u8..100).collect::<Vec<u8>>());
+        let chunk = data((0u8..100).collect());
         let v = ByteView::new(chunk.clone(), 10, 5);
         assert_eq!(v.len(), 5);
         assert_eq!(&v[..], &[10, 11, 12, 13, 14]);
@@ -149,7 +353,7 @@ mod tests {
 
     #[test]
     fn clone_shares_the_chunk() {
-        let chunk = Arc::new(vec![7u8; 64]);
+        let chunk = data(vec![7u8; 64]);
         let a = ByteView::new(chunk, 0, 32);
         let b = a.clone();
         assert!(Arc::ptr_eq(a.chunk(), b.chunk()));
@@ -167,13 +371,55 @@ mod tests {
     #[test]
     #[should_panic(expected = "out of bounds")]
     fn out_of_bounds_panics() {
-        ByteView::new(Arc::new(vec![0u8; 4]), 2, 4);
+        ByteView::new(data(vec![0u8; 4]), 2, 4);
     }
 
     #[test]
     fn empty_view() {
-        let v = ByteView::new(Arc::new(Vec::new()), 0, 0);
+        let v = ByteView::new(data(Vec::new()), 0, 0);
         assert!(v.is_empty());
         assert_eq!(v.into_vec(), Vec::<u8>::new());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_chunk_reads_file_bytes() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("payload");
+        let bytes: Vec<u8> = (0u8..=255).cycle().take(9000).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let mapped = ChunkBytes::map_file(&path).unwrap();
+        assert!(mapped.is_mapped());
+        assert_eq!(mapped.len(), bytes.len());
+        assert_eq!(mapped, bytes);
+        // a view over a mapped chunk behaves exactly like a RAM one
+        let v = ByteView::new(Arc::new(mapped), 100, 16);
+        assert_eq!(&v[..], &bytes[100..116]);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapping_survives_unlink_and_rename() {
+        // the spill tier's safety contract: replace-by-rename and unlink
+        // must not invalidate a live mapping
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("payload");
+        std::fs::write(&path, vec![0xabu8; 4096]).unwrap();
+        let mapped = ChunkBytes::map_file(&path).unwrap();
+        let tmp = dir.path().join("tmp");
+        std::fs::write(&tmp, vec![0xcdu8; 4096]).unwrap();
+        std::fs::rename(&tmp, &path).unwrap();
+        assert_eq!(mapped.as_slice()[0], 0xab, "old inode stays mapped");
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(mapped.as_slice()[4095], 0xab, "unlink keeps pages valid");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn empty_file_refuses_to_map() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("empty");
+        std::fs::write(&path, b"").unwrap();
+        assert!(ChunkBytes::map_file(&path).is_err());
     }
 }

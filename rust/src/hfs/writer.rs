@@ -2,13 +2,42 @@
 //!
 //! Mirrors the paper's interface flow: "Interface uploads the training
 //! data … Source files are chunked and uploaded to Object Storage."
+//!
+//! The default layout is the sharded, content-addressed format 2 (see
+//! [`super::chunk`]): the file table is split into shard objects under a
+//! small root manifest, chunk objects are keyed by content digest (a
+//! digest the store already holds is **not** re-uploaded), and files
+//! below [`crate::config::UploadConfig::pack_threshold`] can be packed
+//! into tar-like archive chunks. [`Uploader::legacy`] writes the old
+//! monolithic format 1 for compatibility with pre-shard readers.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashSet};
 
+use crate::config::UploadConfig;
 use crate::storage::StoreHandle;
 use crate::{Error, Result};
 
-use super::chunk::{ChunkRef, FileEntry, FsManifest};
+use super::chunk::{
+    cas_chunk_key, chunk_table_to_json, fnv1a64, pack_append, shard_to_json, ChunkRef, FileEntry,
+    FsManifest, RootManifest, ShardRef, PACK_HEADER_FIXED,
+};
+
+/// What one upload session actually moved, for dedup/packing accounting.
+#[derive(Debug, Clone, Default)]
+pub struct UploadStats {
+    /// Chunk objects PUT to the store.
+    pub chunks_written: u64,
+    /// Chunk PUTs skipped because the store already held the digest.
+    pub chunks_deduped: u64,
+    /// Payload bytes actually transferred in chunk PUTs.
+    pub bytes_written: u64,
+    /// Payload bytes saved by dedup-skipped PUTs.
+    pub bytes_deduped: u64,
+    /// Files routed into packed archive chunks.
+    pub files_packed: u64,
+    /// File-table shard objects written at seal.
+    pub shards_written: u64,
+}
 
 /// Streaming chunker: add files, then `seal()` to flush the tail chunk and
 /// write the manifest. Files larger than the chunk size span a dedicated
@@ -16,10 +45,20 @@ use super::chunk::{ChunkRef, FileEntry, FsManifest};
 pub struct Uploader {
     store: StoreHandle,
     ns: String,
+    cfg: UploadConfig,
     manifest: FsManifest,
     buf: Vec<u8>,
+    /// Open archive chunk for files below the packing threshold.
+    pack_buf: Vec<u8>,
+    /// Indices into `manifest.files` whose entries live in `pack_buf`
+    /// and still need their chunk id assigned at pack flush.
+    pack_pending: Vec<usize>,
     next_chunk: u32,
     sealed: bool,
+    /// Digests this session already PUT (or probed present), so repeated
+    /// identical chunks skip both the PUT and the exists() round-trip.
+    written_digests: HashSet<u64>,
+    stats: UploadStats,
     /// Paths seen so far: duplicates must error, not silently shadow
     /// (the sealed file table is binary-searched by path, so a duplicate
     /// would make one copy unreachable forever).
@@ -28,19 +67,48 @@ pub struct Uploader {
 
 impl Uploader {
     /// Start uploading `namespace` to `store` with `chunk_size`-byte
-    /// chunks.
+    /// chunks, in the default sharded content-addressed layout (no
+    /// small-file packing).
     ///
     /// # Panics
     /// If `chunk_size` is zero.
     pub fn new(store: StoreHandle, namespace: &str, chunk_size: u64) -> Self {
-        assert!(chunk_size > 0, "chunk_size must be positive");
+        Self::with_config(store, namespace, UploadConfig { chunk_size, ..UploadConfig::default() })
+    }
+
+    /// Start uploading `namespace` in the legacy monolithic layout
+    /// (format 1: one manifest object, `<ns>/chunks/` keys, no dedup) —
+    /// for namespaces that must stay readable by pre-shard tooling.
+    ///
+    /// # Panics
+    /// If `chunk_size` is zero.
+    pub fn legacy(store: StoreHandle, namespace: &str, chunk_size: u64) -> Self {
+        Self::with_config(
+            store,
+            namespace,
+            UploadConfig { chunk_size, legacy_layout: true, ..UploadConfig::default() },
+        )
+    }
+
+    /// Start uploading `namespace` with full layout control.
+    ///
+    /// # Panics
+    /// If `cfg.chunk_size` is zero.
+    pub fn with_config(store: StoreHandle, namespace: &str, cfg: UploadConfig) -> Self {
+        assert!(cfg.chunk_size > 0, "chunk_size must be positive");
+        let chunk_size = cfg.chunk_size;
         Self {
             store,
             ns: namespace.to_string(),
+            cfg,
             manifest: FsManifest::new(chunk_size),
             buf: Vec::with_capacity(chunk_size as usize),
+            pack_buf: Vec::new(),
+            pack_pending: Vec::new(),
             next_chunk: 0,
             sealed: false,
+            written_digests: HashSet::new(),
+            stats: UploadStats::default(),
             seen_paths: BTreeSet::new(),
         }
     }
@@ -58,6 +126,9 @@ impl Uploader {
                 "duplicate path {path:?} in namespace {:?}",
                 self.ns
             )));
+        }
+        if self.packable(path, data) {
+            return self.add_packed(path, data);
         }
         // would overflow current chunk -> flush first (keeps files whole)
         if !self.buf.is_empty()
@@ -79,32 +150,167 @@ impl Uploader {
         Ok(())
     }
 
+    /// Should this file go into a packed archive chunk?
+    fn packable(&self, path: &str, data: &[u8]) -> bool {
+        self.cfg.pack_threshold > 0
+            && (data.len() as u64) < self.cfg.pack_threshold
+            && path.len() <= u16::MAX as usize
+    }
+
+    /// Route a small file into the open archive chunk.
+    fn add_packed(&mut self, path: &str, data: &[u8]) -> Result<()> {
+        let entry_bytes = (PACK_HEADER_FIXED + path.len() + data.len()) as u64;
+        if !self.pack_buf.is_empty()
+            && self.pack_buf.len() as u64 + entry_bytes > self.manifest.chunk_size
+        {
+            self.flush_pack()?;
+        }
+        let offset = pack_append(&mut self.pack_buf, path, data);
+        self.manifest.files.push(FileEntry {
+            // real id assigned when the archive flushes
+            path: path.to_string(),
+            chunk: u32::MAX,
+            offset,
+            len: data.len() as u64,
+        });
+        self.pack_pending.push(self.manifest.files.len() - 1);
+        self.stats.files_packed += 1;
+        if self.pack_buf.len() as u64 >= self.manifest.chunk_size {
+            self.flush_pack()?;
+        }
+        Ok(())
+    }
+
+    /// Upload one chunk object, dedup-skipping the PUT in
+    /// content-addressed mode, and append its [`ChunkRef`].
+    fn put_chunk(&mut self, bytes: &[u8], packed: bool) -> Result<()> {
+        let len = bytes.len() as u64;
+        let hash = fnv1a64(bytes);
+        let id = self.next_chunk;
+        self.next_chunk += 1;
+        if self.cfg.legacy_layout {
+            self.store.put(&FsManifest::chunk_key(&self.ns, id), bytes)?;
+            self.stats.chunks_written += 1;
+            self.stats.bytes_written += len;
+        } else {
+            let key = cas_chunk_key(hash);
+            let already = self.written_digests.contains(&hash) || self.store.exists(&key);
+            if already {
+                self.stats.chunks_deduped += 1;
+                self.stats.bytes_deduped += len;
+            } else {
+                self.store.put(&key, bytes)?;
+                self.stats.chunks_written += 1;
+                self.stats.bytes_written += len;
+            }
+            self.written_digests.insert(hash);
+        }
+        self.manifest.chunks.push(ChunkRef { id, len, hash, packed });
+        Ok(())
+    }
+
     fn flush_chunk(&mut self) -> Result<()> {
         if self.buf.is_empty() {
             return Ok(());
         }
-        let key = FsManifest::chunk_key(&self.ns, self.next_chunk);
-        self.store.put(&key, &self.buf)?;
-        self.manifest.chunks.push(ChunkRef {
-            id: self.next_chunk,
-            len: self.buf.len() as u64,
-            hash: super::chunk::fnv1a64(&self.buf),
-        });
-        self.next_chunk += 1;
-        self.buf.clear();
+        let buf = std::mem::take(&mut self.buf);
+        self.put_chunk(&buf, false)?;
         Ok(())
     }
 
-    /// Flush the tail chunk, sort the file table, write the manifest.
-    /// Returns the sealed manifest.
-    pub fn seal(mut self) -> Result<FsManifest> {
-        self.flush_chunk()?;
-        self.manifest.seal();
-        let key = FsManifest::manifest_key(&self.ns);
-        self.store.put(&key, &self.manifest.to_json()?)?;
-        self.sealed = true;
-        Ok(self.manifest)
+    fn flush_pack(&mut self) -> Result<()> {
+        if self.pack_buf.is_empty() {
+            return Ok(());
+        }
+        let buf = std::mem::take(&mut self.pack_buf);
+        self.put_chunk(&buf, true)?;
+        let id = self.next_chunk - 1;
+        for &fi in &self.pack_pending {
+            self.manifest.files[fi].chunk = id;
+        }
+        self.pack_pending.clear();
+        Ok(())
     }
+
+    /// Flush open chunks, sort the file table, write the manifest
+    /// (root + shards + chunk table, or one legacy object). Returns the
+    /// sealed manifest.
+    pub fn seal(self) -> Result<FsManifest> {
+        Ok(self.seal_with_stats()?.0)
+    }
+
+    /// [`Uploader::seal`], also returning the session's transfer
+    /// accounting (dedup and packing savings).
+    pub fn seal_with_stats(mut self) -> Result<(FsManifest, UploadStats)> {
+        self.flush_chunk()?;
+        self.flush_pack()?;
+        self.manifest.seal();
+        if self.cfg.legacy_layout {
+            let key = FsManifest::manifest_key(&self.ns);
+            self.store.put(&key, &self.manifest.to_json()?)?;
+        } else {
+            self.write_sharded_manifest()?;
+        }
+        self.sealed = true;
+        Ok((self.manifest, self.stats))
+    }
+
+    /// Write the format-2 metadata plane: file-table shards, the chunk
+    /// table, then the root (root last, so a mountable root implies its
+    /// shards exist).
+    fn write_sharded_manifest(&mut self) -> Result<()> {
+        let shard_files = self.cfg.shard_files.max(1);
+        let mut shards = Vec::new();
+        for (i, window) in self.manifest.files.chunks(shard_files).enumerate() {
+            self.store.put(&RootManifest::shard_key(&self.ns, i), &shard_to_json(window))?;
+            shards.push(ShardRef { start: window[0].path.clone(), files: window.len() as u64 });
+            self.stats.shards_written += 1;
+        }
+        let table = chunk_table_to_json(&self.manifest.chunks);
+        self.store.put(&RootManifest::chunk_table_key(&self.ns), &table)?;
+        let root = RootManifest {
+            chunk_size: self.manifest.chunk_size,
+            file_count: self.manifest.files.len() as u64,
+            total_bytes: self.manifest.total_bytes(),
+            chunk_count: self.manifest.chunks.len() as u64,
+            max_chunk_len: self.manifest.chunks.iter().map(|c| c.len).max().unwrap_or(0),
+            content_addressed: true,
+            shards,
+        };
+        self.store.put(&FsManifest::manifest_key(&self.ns), &root.to_json())
+    }
+}
+
+/// Synthesize a deterministic `n_files`-file namespace into `store` —
+/// the shared generator behind the `hfs_metadata` bench, the `hfs_synth`
+/// example, and `scripts/hfs_synth`. Returns the uploaded paths (in
+/// upload order) and the session stats.
+///
+/// `distinct_contents` controls dedup pressure: file `i` carries content
+/// variant `i % distinct_contents`, so `distinct_contents < n_files`
+/// yields duplicate chunks a content-addressed upload stores only once.
+/// Pass `distinct_contents >= n_files` (or 0) for all-distinct files.
+pub fn synthesize_namespace(
+    store: &StoreHandle,
+    ns: &str,
+    n_files: usize,
+    file_bytes: usize,
+    distinct_contents: usize,
+    cfg: UploadConfig,
+) -> Result<(Vec<String>, UploadStats)> {
+    let mut up = Uploader::with_config(store.clone(), ns, cfg);
+    let mut paths = Vec::with_capacity(n_files);
+    let variants = if distinct_contents == 0 { n_files.max(1) } else { distinct_contents };
+    for i in 0..n_files {
+        let variant = i % variants;
+        let body: Vec<u8> =
+            (0..file_bytes).map(|k| ((variant * 131 + k * 7) & 0xff) as u8).collect();
+        let path = format!("train/{i:06}.bin");
+        up.add_file(&path, &body)?;
+        paths.push(path);
+    }
+    let (_, stats) = up.seal_with_stats()?;
+    Ok((paths, stats))
 }
 
 #[cfg(test)]
@@ -112,7 +318,7 @@ mod tests {
     use std::sync::Arc;
 
     use super::*;
-    use crate::storage::MemStore;
+    use crate::storage::{CountingStore, MemStore};
 
     fn store() -> StoreHandle {
         Arc::new(MemStore::new())
@@ -130,7 +336,22 @@ mod tests {
         assert_eq!(m.files.len(), 3);
         let f3 = &m.files[m.find("f3").unwrap()];
         assert_eq!(f3.chunk, 1);
+        // chunk objects live under content-addressed keys
+        assert_eq!(s.get(&cas_chunk_key(m.chunks[0].hash)).unwrap().len(), 80);
+    }
+
+    #[test]
+    fn legacy_layout_writes_namespace_keys() {
+        let s = store();
+        let mut up = Uploader::legacy(s.clone(), "ds", 100);
+        up.add_file("f1", &[1u8; 40]).unwrap();
+        up.add_file("f2", &[2u8; 40]).unwrap();
+        let m = up.seal().unwrap();
         assert_eq!(s.get(&FsManifest::chunk_key("ds", 0)).unwrap().len(), 80);
+        // and a monolithic manifest the old reader parses
+        let back = FsManifest::from_json(&s.get("ds/manifest.json").unwrap()).unwrap();
+        assert_eq!(back.file_count(), 2);
+        assert_eq!(back.chunks, m.chunks);
     }
 
     #[test]
@@ -153,8 +374,13 @@ mod tests {
         let mut up = Uploader::new(s.clone(), "ds", 64);
         up.add_file("a", b"data").unwrap();
         up.seal().unwrap();
-        let m = FsManifest::from_json(&s.get("ds/manifest.json").unwrap()).unwrap();
-        assert_eq!(m.file_count(), 1);
+        let root = RootManifest::from_json(&s.get("ds/manifest.json").unwrap()).unwrap();
+        assert_eq!(root.file_count, 1);
+        assert_eq!(root.shards.len(), 1);
+        assert!(root.content_addressed);
+        // the root is NOT parseable as a legacy manifest — old readers
+        // must fail loudly, not mount an empty namespace
+        assert!(FsManifest::from_json(&s.get("ds/manifest.json").unwrap()).is_err());
     }
 
     #[test]
@@ -170,11 +396,11 @@ mod tests {
         // to mount: list is empty, reads fail cleanly, nothing panics
         let s = store();
         Uploader::new(s.clone(), "empty", 64).seal().unwrap();
-        let m = FsManifest::from_json(&s.get("empty/manifest.json").unwrap()).unwrap();
-        assert_eq!(m.file_count(), 0);
-        assert_eq!(m.chunk_size, 64);
+        let root = RootManifest::from_json(&s.get("empty/manifest.json").unwrap()).unwrap();
+        assert_eq!(root.file_count, 0);
+        assert_eq!(root.chunk_size, 64);
         let fs = crate::hfs::HyperFs::mount(s, "empty", 1 << 20).unwrap();
-        assert!(fs.list("").is_empty());
+        assert!(fs.list("").unwrap().is_empty());
         assert!(matches!(fs.read_file("anything"), Err(Error::FileNotFound(_))));
         assert!(fs.stat("anything").is_err());
     }
@@ -209,5 +435,102 @@ mod tests {
         let s = store();
         let mut up = Uploader::new(s, "ds", 64);
         up.add_file("", b"x").unwrap_err();
+    }
+
+    #[test]
+    fn shard_split_respects_shard_files() {
+        let s = store();
+        let cfg = UploadConfig { chunk_size: 1 << 20, shard_files: 4, ..UploadConfig::default() };
+        let mut up = Uploader::with_config(s.clone(), "ds", cfg);
+        for i in 0..10 {
+            up.add_file(&format!("f/{i:02}"), &[i as u8; 8]).unwrap();
+        }
+        let (_, stats) = up.seal_with_stats().unwrap();
+        assert_eq!(stats.shards_written, 3, "10 files / 4 per shard");
+        let root = RootManifest::from_json(&s.get("ds/manifest.json").unwrap()).unwrap();
+        assert_eq!(root.shards.iter().map(|sh| sh.files).collect::<Vec<_>>(), vec![4, 4, 2]);
+        assert_eq!(root.shards[0].start, "f/00");
+        assert_eq!(root.shards[1].start, "f/04");
+        // every shard object exists and parses
+        for i in 0..3 {
+            let bytes = s.get(&RootManifest::shard_key("ds", i)).unwrap();
+            let files = super::super::chunk::shard_from_json(&bytes).unwrap();
+            assert_eq!(files.len(), root.shards[i].files as usize);
+        }
+    }
+
+    #[test]
+    fn duplicate_chunks_are_uploaded_once() {
+        let counting = Arc::new(CountingStore::new(Arc::new(MemStore::new())));
+        let s: StoreHandle = counting.clone();
+        let mut up = Uploader::new(s.clone(), "ds", 64);
+        // 8 files x 64 B = 8 chunks, but only 2 distinct contents
+        for i in 0..8 {
+            up.add_file(&format!("f{i}"), &[(i % 2) as u8; 64]).unwrap();
+        }
+        let (m, stats) = up.seal_with_stats().unwrap();
+        assert_eq!(m.chunks.len(), 8, "logical chunk table keeps all ids");
+        assert_eq!(stats.chunks_written, 2, "only distinct contents are PUT");
+        assert_eq!(stats.chunks_deduped, 6);
+        assert_eq!(stats.bytes_written, 2 * 64);
+        assert_eq!(stats.bytes_deduped, 6 * 64);
+        assert_eq!(s.list("cas/chunks/").unwrap().len(), 2, "one object per digest");
+    }
+
+    #[test]
+    fn dedup_skips_puts_across_sessions_via_exists_probe() {
+        let s = store();
+        let mut up = Uploader::new(s.clone(), "a", 64);
+        up.add_file("x", &[7u8; 64]).unwrap();
+        up.seal().unwrap();
+        // same content uploaded under another namespace: no new PUT
+        let mut up2 = Uploader::new(s.clone(), "b", 64);
+        up2.add_file("y", &[7u8; 64]).unwrap();
+        let (_, stats) = up2.seal_with_stats().unwrap();
+        assert_eq!(stats.chunks_written, 0);
+        assert_eq!(stats.chunks_deduped, 1);
+        assert_eq!(s.list("cas/chunks/").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn small_files_pack_into_archive_chunks() {
+        let s = store();
+        let cfg = UploadConfig {
+            chunk_size: 100,
+            pack_threshold: 32,
+            ..UploadConfig::default()
+        };
+        let mut up = Uploader::with_config(s.clone(), "ds", cfg);
+        for i in 0..6 {
+            up.add_file(&format!("small/{i}"), &[i as u8; 16]).unwrap();
+        }
+        up.add_file("big", &[9u8; 64]).unwrap(); // above threshold: regular
+        let (m, stats) = up.seal_with_stats().unwrap();
+        assert_eq!(stats.files_packed, 6);
+        // archive chunks are flagged; the big file's chunk is not
+        let big = &m.files[m.find("big").unwrap()];
+        assert!(!m.chunks[big.chunk as usize].packed);
+        let packed_chunks: Vec<_> = m.chunks.iter().filter(|c| c.packed).collect();
+        assert!(!packed_chunks.is_empty());
+        // each entry is 6 B fixed header + 7 B path + 16 B payload =
+        // 29 B; only three fit a 100 B chunk, so the archive split
+        assert_eq!(packed_chunks.len(), 2);
+        // every packed file's (offset, len) indexes straight into its
+        // archive chunk bytes
+        for i in 0..6 {
+            let f = &m.files[m.find(&format!("small/{i}")).unwrap()];
+            let chunk_ref = &m.chunks[f.chunk as usize];
+            assert!(chunk_ref.packed);
+            let bytes = s.get(&cas_chunk_key(chunk_ref.hash)).unwrap();
+            let got = &bytes[f.offset as usize..(f.offset + f.len) as usize];
+            assert_eq!(got, &[i as u8; 16]);
+        }
+        // the archive is self-describing for recovery
+        let first_packed = packed_chunks[0];
+        let bytes = s.get(&cas_chunk_key(first_packed.hash)).unwrap();
+        let walked: Vec<String> =
+            super::super::chunk::iter_archive(&bytes).map(|(p, _, _)| p).collect();
+        assert!(!walked.is_empty());
+        assert!(walked.iter().all(|p| p.starts_with("small/")));
     }
 }

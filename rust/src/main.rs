@@ -518,5 +518,11 @@ fn cmd_status() -> anyhow::Result<()> {
     up.seal()?;
     let fs = hyper_dist::hfs::HyperFs::mount(store, "smoke", 1 << 20)?;
     println!("hfs smoke: {}", String::from_utf8_lossy(&fs.read_file("hello.txt")?));
+    let reg = hyper_dist::metrics::MetricsRegistry::new();
+    fs.register_metrics(&reg);
+    println!("hfs metrics:");
+    for line in reg.report().lines() {
+        println!("  {line}");
+    }
     Ok(())
 }

@@ -300,6 +300,12 @@ impl MetricsRegistry {
         self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
+    /// Register an externally-owned counter under `name` (e.g. the HFS
+    /// read-path counters), replacing any counter previously there.
+    pub fn register_counter(&self, name: &str, counter: Counter) {
+        self.counters.lock().unwrap().insert(name.to_string(), counter);
+    }
+
     /// The gauge registered under `name` (created on first use).
     pub fn gauge(&self, name: &str) -> Gauge {
         self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
@@ -404,6 +410,17 @@ mod tests {
         r.counter("tasks").add(5);
         r.counter("tasks").inc();
         assert_eq!(r.counter("tasks").get(), 6);
+    }
+
+    #[test]
+    fn register_counter_shares_external_state() {
+        let r = MetricsRegistry::new();
+        let owned = Counter::default();
+        owned.add(3);
+        r.register_counter("hfs.ds.reads", owned.clone());
+        assert_eq!(r.counter("hfs.ds.reads").get(), 3, "registry sees owner's count");
+        owned.inc();
+        assert!(r.report().contains("hfs.ds.reads 4"), "live view, not a copy");
     }
 
     #[test]

@@ -22,6 +22,9 @@ pub struct CountingStore {
     total_range_gets: AtomicU64,
     /// Bytes actually returned by get/get_range (transfer accounting).
     total_get_bytes: AtomicU64,
+    /// Bytes handed to `put` (upload-transfer accounting; counted even if
+    /// the inner store then fails the write).
+    total_put_bytes: AtomicU64,
     gets_by_key: Mutex<BTreeMap<String, u64>>,
 }
 
@@ -33,6 +36,7 @@ impl CountingStore {
             total_puts: AtomicU64::new(0),
             total_range_gets: AtomicU64::new(0),
             total_get_bytes: AtomicU64::new(0),
+            total_put_bytes: AtomicU64::new(0),
             gets_by_key: Mutex::new(BTreeMap::new()),
         }
     }
@@ -61,6 +65,11 @@ impl CountingStore {
         self.total_puts.load(Ordering::SeqCst)
     }
 
+    /// Bytes pushed into the store by `put` calls.
+    pub fn total_put_bytes(&self) -> u64 {
+        self.total_put_bytes.load(Ordering::SeqCst)
+    }
+
     /// GETs issued for one exact key.
     pub fn gets_for(&self, key: &str) -> u64 {
         self.gets_by_key.lock().unwrap().get(key).copied().unwrap_or(0)
@@ -76,6 +85,7 @@ impl CountingStore {
         self.total_puts.store(0, Ordering::SeqCst);
         self.total_range_gets.store(0, Ordering::SeqCst);
         self.total_get_bytes.store(0, Ordering::SeqCst);
+        self.total_put_bytes.store(0, Ordering::SeqCst);
         self.gets_by_key.lock().unwrap().clear();
     }
 }
@@ -83,6 +93,7 @@ impl CountingStore {
 impl ObjectStore for CountingStore {
     fn put(&self, key: &str, data: &[u8]) -> Result<()> {
         self.total_puts.fetch_add(1, Ordering::SeqCst);
+        self.total_put_bytes.fetch_add(data.len() as u64, Ordering::SeqCst);
         self.inner.put(key, data)
     }
 
@@ -130,6 +141,7 @@ mod tests {
         assert_eq!(s.get("k1").unwrap(), b"abc");
         assert_eq!(s.get_range("k2", 1, 2).unwrap(), b"ef");
         assert_eq!(s.total_puts(), 2);
+        assert_eq!(s.total_put_bytes(), 3 + 4, "k1 + k2 payloads");
         assert_eq!(s.total_gets(), 3);
         assert_eq!(s.total_range_gets(), 1);
         assert_eq!(s.total_get_bytes(), 3 + 3 + 2, "two full k1 gets + 2-byte range");
@@ -143,6 +155,7 @@ mod tests {
         s.reset();
         assert_eq!(s.total_gets(), 0);
         assert_eq!(s.total_get_bytes(), 0);
+        assert_eq!(s.total_put_bytes(), 0);
         assert!(s.gets_by_key().is_empty());
     }
 

@@ -43,6 +43,16 @@ impl DiskStore {
         Ok(self.root.join(key))
     }
 
+    /// Filesystem path behind `key` (validated, not checked for
+    /// existence). Lets zero-copy consumers — the HFS spill tier's mmap
+    /// read path — open the backing file directly; `put` is
+    /// write-then-rename and `delete` is unlink, so a file opened through
+    /// this path stays byte-stable even if the key is later overwritten
+    /// or removed.
+    pub fn path_of(&self, key: &str) -> Result<PathBuf> {
+        self.path_for(key)
+    }
+
     /// Delete stranded temp files under `prefix` — litter from writers
     /// that crashed between write and rename. `list()` hides temp files,
     /// so without this sweep they would accumulate invisibly and escape

@@ -1,0 +1,155 @@
+//! Property tests for the HFS metadata plane: randomized upload ->
+//! mount -> read-back across manifest formats (legacy monolithic vs
+//! sharded), shard geometries, small-file packing, and dedup pressure.
+//!
+//! Each case generates a namespace from a seeded RNG, uploads it, mounts
+//! it cold, and demands byte-identical read-back plus consistent
+//! stat/list/accounting — the invariants every layout must share. On
+//! failure `run_prop` prints the generating seed for deterministic
+//! replay.
+
+use std::sync::Arc;
+
+use hyper_dist::hfs::{FsManifest, HyperFs, UploadConfig, Uploader};
+use hyper_dist::sim::SimRng;
+use hyper_dist::storage::{MemStore, StoreHandle};
+use hyper_dist::util::prop::run_prop;
+
+#[derive(Debug)]
+struct Case {
+    legacy: bool,
+    chunk_size: u64,
+    shard_files: usize,
+    pack_threshold: u64,
+    /// `(path, content)` pairs, unique paths, possibly duplicate contents.
+    files: Vec<(String, Vec<u8>)>,
+    cache_bytes: u64,
+}
+
+fn gen_case(rng: &mut SimRng) -> Case {
+    let chunk_size = 64 + rng.gen_range(1985); // 64..=2048
+    let n_files = 1 + rng.gen_range(48) as usize;
+    let distinct = 1 + rng.gen_range(n_files as u64) as usize;
+    let mut files = Vec::with_capacity(n_files);
+    for i in 0..n_files {
+        let variant = i % distinct;
+        // same variant -> same length and bytes, so duplicate contents
+        // really are duplicates (dedup pressure on the CAS layout)
+        let len = 1 + (variant * 211 + 37) % (chunk_size as usize + chunk_size as usize / 2);
+        let body: Vec<u8> = (0..len).map(|k| ((variant * 131 + k * 7) & 0xff) as u8).collect();
+        files.push((format!("d{:02}/f{i:04}.bin", i % 7), body));
+    }
+    Case {
+        legacy: rng.gen_bool(0.3),
+        chunk_size,
+        shard_files: 1 + rng.gen_range(16) as usize,
+        pack_threshold: if rng.gen_bool(0.5) { rng.gen_range(chunk_size / 2) } else { 0 },
+        files,
+        cache_bytes: if rng.gen_bool(0.3) {
+            // tiny cache: thrash eviction on the read-back pass
+            chunk_size * 2
+        } else {
+            1 << 20
+        },
+    }
+}
+
+fn upload(case: &Case) -> StoreHandle {
+    let store: StoreHandle = Arc::new(MemStore::new());
+    let cfg = UploadConfig {
+        chunk_size: case.chunk_size,
+        shard_files: case.shard_files,
+        pack_threshold: case.pack_threshold,
+        legacy_layout: case.legacy,
+    };
+    let mut up = Uploader::with_config(store.clone(), "prop", cfg);
+    for (path, body) in &case.files {
+        up.add_file(path, body).unwrap();
+    }
+    up.seal().unwrap();
+    store
+}
+
+fn check_mount(case: &Case, fs: &HyperFs) {
+    assert_eq!(fs.is_sharded(), !case.legacy);
+    assert_eq!(fs.file_count(), case.files.len() as u64);
+    let logical: u64 = case.files.iter().map(|(_, b)| b.len() as u64).sum();
+    assert_eq!(fs.total_bytes(), logical);
+    for (path, body) in &case.files {
+        assert_eq!(fs.stat(path).unwrap(), body.len() as u64, "stat {path}");
+        let got = fs.read_file(path).unwrap();
+        assert_eq!(&got[..], &body[..], "read {path}");
+    }
+    // a second pass re-reads through whatever the cache kept or evicted
+    for (path, body) in case.files.iter().rev() {
+        assert_eq!(&fs.read_file(path).unwrap()[..], &body[..], "re-read {path}");
+    }
+    let mut expect: Vec<String> = case.files.iter().map(|(p, _)| p.clone()).collect();
+    expect.sort();
+    assert_eq!(fs.list("").unwrap(), expect, "full listing");
+    let prefix = "d03/";
+    let narrowed: Vec<String> =
+        expect.iter().filter(|p| p.starts_with(prefix)).cloned().collect();
+    assert_eq!(fs.list(prefix).unwrap(), narrowed, "prefix listing");
+    assert!(fs.read_file("no/such/file").is_err());
+    assert!(fs.stat("no/such/file").is_err());
+}
+
+#[test]
+fn prop_upload_mount_readback_across_layouts() {
+    run_prop("hfs upload/mount/read round-trip", 40, gen_case, |case| {
+        let store = upload(&case);
+        let fs = HyperFs::mount(store, "prop", case.cache_bytes).unwrap();
+        check_mount(&case, &fs);
+    });
+}
+
+#[test]
+fn prop_legacy_and_sharded_layouts_read_identical() {
+    run_prop("legacy vs sharded byte-identical", 25, gen_case, |mut case| {
+        case.legacy = false;
+        let sharded = HyperFs::mount(upload(&case), "prop", case.cache_bytes).unwrap();
+        case.legacy = true;
+        let legacy = HyperFs::mount(upload(&case), "prop", case.cache_bytes).unwrap();
+        for (path, _) in &case.files {
+            assert_eq!(
+                &sharded.read_file(path).unwrap()[..],
+                &legacy.read_file(path).unwrap()[..],
+                "layouts must serve identical bytes for {path}"
+            );
+        }
+        assert_eq!(sharded.list("").unwrap(), legacy.list("").unwrap());
+        assert_eq!(sharded.total_bytes(), legacy.total_bytes());
+    });
+}
+
+#[test]
+fn prop_legacy_manifest_json_roundtrips() {
+    run_prop("legacy manifest to_json/from_json", 25, gen_case, |mut case| {
+        case.legacy = true;
+        let store = upload(&case);
+        let raw = store.get(&FsManifest::manifest_key("prop")).unwrap();
+        let m = FsManifest::from_json(&raw).unwrap();
+        let back = FsManifest::from_json(&m.to_json().unwrap()).unwrap();
+        assert_eq!(m.files, back.files);
+        assert_eq!(m.chunks, back.chunks);
+        assert_eq!(m.chunk_size, back.chunk_size);
+    });
+}
+
+/// A sharded namespace's root manifest must never parse as a legacy
+/// monolithic manifest: an old reader pointed at a new namespace has to
+/// fail loudly instead of mounting an empty or garbled file table.
+#[test]
+fn sharded_root_rejected_by_legacy_parser() {
+    let store: StoreHandle = Arc::new(MemStore::new());
+    let mut up = Uploader::new(store.clone(), "prop", 256);
+    up.add_file("a.bin", &[7u8; 100]).unwrap();
+    up.add_file("b.bin", &[9u8; 300]).unwrap();
+    up.seal().unwrap();
+    let raw = store.get(&FsManifest::manifest_key("prop")).unwrap();
+    let err = FsManifest::from_json(&raw);
+    assert!(err.is_err(), "format-2 root must not parse as a legacy manifest");
+    let msg = format!("{}", err.unwrap_err());
+    assert!(msg.contains("format"), "error should name the format mismatch: {msg}");
+}
