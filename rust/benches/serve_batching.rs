@@ -17,9 +17,10 @@
 
 use std::time::Duration;
 
+use hyper_dist::obs::{chrome, FlightRecorder};
 use hyper_dist::serve::{AutoscalerConfig, BatchBackend, BatchPolicy, Load, ServeSim,
                         ServeSimConfig, ServeStack, ServerConfig, StormEvent, SyntheticBackend};
-use hyper_dist::sim::OpenLoop;
+use hyper_dist::sim::{OpenLoop, SimClock};
 use hyper_dist::util::bench::{emit_json, header, row, section, smoke};
 
 const WORKERS: usize = 2;
@@ -29,8 +30,10 @@ const BASE_S: f64 = 0.002;
 const PER_ITEM_S: f64 = 0.00005;
 
 /// Closed-loop throughput (req/s) of a stack with the given batch limit.
-fn closed_loop_rps(max_batch: usize) -> f64 {
-    let stack = ServeStack::start(
+/// Pass a live `obs` recorder to measure tracing overhead, or
+/// `FlightRecorder::disabled()` for the baseline.
+fn closed_loop_rps(max_batch: usize, obs: FlightRecorder) -> f64 {
+    let stack = ServeStack::start_with_obs(
         ServerConfig {
             queue_depth: 4096,
             max_batch,
@@ -40,6 +43,7 @@ fn closed_loop_rps(max_batch: usize) -> f64 {
         move |_| -> Box<dyn BatchBackend> {
             Box::new(SyntheticBackend::new(BASE_S, PER_ITEM_S, max_batch, true))
         },
+        obs,
     );
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
@@ -69,17 +73,33 @@ fn main() {
     } else {
         section("dynamic batching vs batch-size-1 (2 workers, 16 closed-loop clients)");
         header("config", &["throughput"]);
-        let single = closed_loop_rps(1);
+        let single = closed_loop_rps(1, FlightRecorder::disabled());
         row("batch = 1 (seed-style)", &[format!("{single:.0} req/s")]);
-        let batched = closed_loop_rps(16);
+        let batched = closed_loop_rps(16, FlightRecorder::disabled());
         row("batch <= 16, 2 ms window", &[format!("{batched:.0} req/s")]);
+        let rec = FlightRecorder::wallclock(1 << 16);
+        let traced = closed_loop_rps(16, rec.clone());
+        row(
+            "batch <= 16, flight recorder on",
+            &[format!("{traced:.0} req/s ({} records)", rec.recorded())],
+        );
         let speedup = batched / single;
         println!("\ndynamic batching speedup at equal workers: {speedup:.1}x");
         assert!(
             speedup >= 3.0,
             "dynamic batching must sustain >= 3x batch-size-1 throughput (got {speedup:.2}x)"
         );
-        emit_json("serve_batching", &[("batching_speedup_x", speedup)]);
+        let overhead_ratio = traced / batched;
+        println!("tracing-on throughput ratio: {overhead_ratio:.3} (>= 0.95 required)");
+        assert!(
+            overhead_ratio >= 0.95,
+            "flight-recorder overhead must stay within 5% of untraced throughput \
+             (traced {traced:.0} vs {batched:.0} req/s)"
+        );
+        emit_json(
+            "serve_batching",
+            &[("batching_speedup_x", speedup), ("tracing_throughput_ratio", overhead_ratio)],
+        );
     }
 
     section("virtual time: preemption storm under an autoscaled spot fleet");
@@ -104,7 +124,13 @@ fn main() {
         trace: true,
         ..Default::default()
     };
-    let report = ServeSim::new(cfg)
+    let mut sim = ServeSim::new(cfg);
+    // default ObsConfig capacity: drops are expected and recorded — the ring
+    // keeps the newest window (post-storm recovery), which is the part the
+    // exported trace is for
+    let rec = FlightRecorder::sim(1 << 16, SimClock::new());
+    sim.set_obs(rec.clone());
+    let report = sim
         .run(Load::Open(OpenLoop::poisson(1200.0)), 180.0)
         .expect("sim within event budget");
     header("t", &["live", "prov", "queue", "win p99 ms", "shed"]);
@@ -136,6 +162,18 @@ fn main() {
     assert_eq!(report.completed, report.admitted, "no admitted request dropped");
     assert!(report.latency.p99 <= 0.25, "p99 {} blew the SLO", report.latency.p99);
 
+    let records = rec.snapshot();
+    let trace_path = std::env::temp_dir().join("serve_batching_trace.json");
+    chrome::write_chrome_trace(&trace_path, &records).expect("trace export");
+    println!(
+        "\nflight recorder: {} recorded, {} dropped (oldest evicted); newest {} exported \
+         to {} (load in Perfetto / chrome://tracing)",
+        rec.recorded(),
+        rec.dropped(),
+        records.len(),
+        trace_path.display()
+    );
+
     emit_json(
         "serve_batching",
         &[
@@ -147,6 +185,8 @@ fn main() {
             ("storm_p99_s", report.latency.p99),
             ("storm_mean_batch_fill", report.mean_batch_fill),
             ("storm_cost_usd", report.cost_usd),
+            ("obs.events_recorded", rec.recorded() as f64),
+            ("obs.events_dropped", rec.dropped() as f64),
         ],
     );
     println!("\nserve_batching OK");

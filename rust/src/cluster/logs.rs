@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use std::sync::Mutex;
 
+use crate::obs::Ring;
 use crate::sim::SimTime;
 
 /// Which of the paper's three streams a record belongs to.
@@ -25,55 +26,45 @@ pub struct LogRecord {
     pub message: String,
 }
 
-/// Bounded in-memory collector (the Logstash stand-in).
+/// Bounded in-memory collector (the Logstash stand-in), backed by the
+/// [`crate::obs`] flight-recorder ring: when full, the *oldest* record is
+/// evicted so the newest `capacity` records — the end of the run, the
+/// part you debug — always survive. Evictions are counted in `dropped`.
+///
+/// (Earlier versions had the inverse policy — keep the oldest, drop new
+/// arrivals — which preserved exactly the part of a long run nobody asks
+/// about.)
 #[derive(Clone)]
 pub struct LogCollector {
-    inner: Arc<Mutex<Inner>>,
-}
-
-struct Inner {
-    records: Vec<LogRecord>,
-    capacity: usize,
-    dropped: u64,
+    inner: Arc<Mutex<Ring<LogRecord>>>,
 }
 
 impl LogCollector {
     pub fn new(capacity: usize) -> Self {
-        Self {
-            inner: Arc::new(Mutex::new(Inner {
-                records: Vec::new(),
-                capacity: capacity.max(1),
-                dropped: 0,
-            })),
-        }
+        Self { inner: Arc::new(Mutex::new(Ring::new(capacity))) }
     }
 
     pub fn log(&self, at: SimTime, node: u32, kind: LogKind, message: impl Into<String>) {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.records.len() >= inner.capacity {
-            inner.dropped += 1;
-            return;
-        }
-        inner.records.push(LogRecord { at, node, kind, message: message.into() });
+        self.inner.lock().unwrap().push(LogRecord { at, node, kind, message: message.into() });
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().records.len()
+        self.inner.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Records evicted to stay within capacity.
     pub fn dropped(&self) -> u64 {
-        self.inner.lock().unwrap().dropped
+        self.inner.lock().unwrap().dropped()
     }
 
-    /// Records matching a filter (node and/or kind).
+    /// Records matching a filter (node and/or kind), oldest first.
     pub fn query(&self, node: Option<u32>, kind: Option<LogKind>) -> Vec<LogRecord> {
         self.inner
             .lock().unwrap()
-            .records
             .iter()
             .filter(|r| node.is_none_or(|n| r.node == n) && kind.is_none_or(|k| r.kind == k))
             .cloned()
@@ -105,5 +96,19 @@ mod tests {
         }
         assert_eq!(c.len(), 2);
         assert_eq!(c.dropped(), 3);
+    }
+
+    #[test]
+    fn overflow_keeps_the_newest_records() {
+        // flight-recorder semantics: the survivors are the most recent
+        // messages, not the first ones ever logged
+        let c = LogCollector::new(3);
+        for i in 0..10 {
+            c.log(SimTime::from_secs(i), 0, LogKind::Application, format!("m{i}"));
+        }
+        let kept: Vec<String> =
+            c.query(None, None).into_iter().map(|r| r.message).collect();
+        assert_eq!(kept, vec!["m7", "m8", "m9"]);
+        assert_eq!(c.dropped(), 7);
     }
 }

@@ -205,6 +205,33 @@ impl Default for SearchConfig {
     }
 }
 
+/// Tunables of the observability layer: the [`crate::obs`] flight
+/// recorder's bound, the master switch, and where `hyper trace` (and the
+/// instrumented benches) write Chrome-trace exports.
+///
+/// Read by [`crate::obs::FlightRecorder::from_config`] and the CLI entry
+/// points. Every knob is documented in `docs/CONFIG.md`; the sizing
+/// discussion ("how many records is a storm?") lives in
+/// `docs/OBSERVABILITY.md`.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Record spans/events at all. Off means every instrumentation point
+    /// short-circuits before building a record (zero retained entries).
+    pub enabled: bool,
+    /// Flight-recorder bound: the newest `capacity` records are retained,
+    /// older ones are evicted and counted as dropped.
+    pub capacity: usize,
+    /// Where to write the Chrome trace-event JSON export; `None` means
+    /// export only when a caller (CLI `--out`) asks.
+    pub export_path: Option<PathBuf>,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self { enabled: true, capacity: 65_536, export_path: None }
+    }
+}
+
 /// `artifacts/` next to the workspace root (env `HYPER_ARTIFACTS` wins).
 pub fn default_artifacts_dir() -> PathBuf {
     if let Ok(dir) = std::env::var("HYPER_ARTIFACTS") {
@@ -279,6 +306,14 @@ mod tests {
         assert!(c.max_steps >= c.rung_first_steps);
         assert!(c.step_time_s > 0.0);
         assert_eq!(c.algo, SearchAlgo::Asha);
+    }
+
+    #[test]
+    fn default_obs_config_is_on_and_bounded() {
+        let c = ObsConfig::default();
+        assert!(c.enabled, "tracing is cheap enough to leave on");
+        assert!(c.capacity >= 1024);
+        assert!(c.export_path.is_none());
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use crate::cloud::{InstanceType, NodeHandle, NodeState, PriceTrace, Provisioner,
                    ProvisionerConfig, SpotMarket, SpotMarketConfig, StormEvent, FAR_FUTURE_S};
 use crate::metrics::CostLedger;
+use crate::obs::FlightRecorder;
 use crate::sim::{EventQueue, SimTime};
 use crate::{Error, Result};
 
@@ -243,6 +244,7 @@ pub struct FleetEngine {
     nodes: BTreeMap<NodeId, FleetNode>,
     ledger: CostLedger,
     stats: FleetStats,
+    obs: FlightRecorder,
     now: SimTime,
     processed: u64,
     deferred: usize,
@@ -267,6 +269,7 @@ impl FleetEngine {
             nodes: BTreeMap::new(),
             ledger: CostLedger::new(),
             stats: FleetStats::default(),
+            obs: FlightRecorder::disabled(),
             now: SimTime::ZERO,
             processed: 0,
             deferred: 0,
@@ -317,6 +320,12 @@ impl FleetEngine {
                 Ev::Storm(i) => {
                     let storm = self.cfg.storm[i];
                     self.stats.storms_fired_at_s.push(self.now.as_secs_f64());
+                    if self.obs.is_enabled() {
+                        self.obs.event_at("fleet.storm", self.now.as_nanos(), 0, 0, vec![
+                            ("kills", storm.kills.into()),
+                            ("notice_s", storm.notice_s.into()),
+                        ]);
+                    }
                     let victims: Vec<NodeId> = self
                         .nodes
                         .iter()
@@ -350,7 +359,18 @@ impl FleetEngine {
                         .map(|n| !n.dead && n.epoch == epoch)
                         .unwrap_or(false);
                     if live {
+                        if self.obs.is_enabled() {
+                            self.obs.event_at("work.done", self.now.as_nanos(), node, token, vec![]);
+                        }
                         w.on_work_done(self, node, token)?;
+                    } else if self.obs.is_enabled() {
+                        // epoch mismatch / dead node: the completion raced
+                        // a preemption and is dropped as stale
+                        let node_epoch = self.nodes.get(&node).map(|n| n.epoch).unwrap_or(0);
+                        self.obs.event_at("work.stale_drop", self.now.as_nanos(), node, token, vec![
+                            ("epoch", epoch.into()),
+                            ("node_epoch", node_epoch.into()),
+                        ]);
                     }
                 }
                 Ev::Timer { token } => w.on_timer(self, token)?,
@@ -400,6 +420,12 @@ impl FleetEngine {
     /// captured now).
     pub fn schedule_work(&mut self, node: NodeId, at: SimTime, token: u64) {
         let epoch = self.nodes.get(&node).map(|n| n.epoch).unwrap_or(0);
+        if self.obs.is_enabled() {
+            self.obs.event_at("work.dispatch", self.now.as_nanos(), node, token, vec![
+                ("epoch", epoch.into()),
+                ("eta_s", at.as_secs_f64().into()),
+            ]);
+        }
         self.events.push(at, Ev::Work { node, epoch, token });
     }
 
@@ -437,6 +463,7 @@ impl FleetEngine {
         }
         n.draining = true;
         n.handle.begin_drain();
+        self.obs.event_at("node.drain_voluntary", self.now.as_nanos(), node, 0, vec![]);
         true
     }
 
@@ -445,6 +472,9 @@ impl FleetEngine {
     /// preemption.
     pub fn release(&mut self, node: NodeId) {
         let now = self.now;
+        if self.nodes.get(&node).is_some_and(|n| !n.dead) {
+            self.obs.event_at("node.release", now.as_nanos(), node, 0, vec![]);
+        }
         self.bill_at(node, now);
     }
 
@@ -507,6 +537,22 @@ impl FleetEngine {
             Some(m) => m.capacity_at(self.now) >= SimTime::from_secs_f64(FAR_FUTURE_S),
             None => false,
         }
+    }
+
+    /// Attach a flight recorder: from now on the engine records node
+    /// lifecycle spans/events (`node.request` → `node.provision` →
+    /// `node.ready` → `node.notice` → `node.drain` → `node.kill`) and
+    /// work dispatch/completion/stale-drop events into it, stamped with
+    /// engine virtual time (one pid per node). The default recorder is
+    /// disabled, so un-instrumented runs pay only a boolean check.
+    pub fn set_obs(&mut self, obs: FlightRecorder) {
+        self.obs = obs;
+    }
+
+    /// The attached flight recorder (disabled unless
+    /// [`FleetEngine::set_obs`] was called).
+    pub fn obs(&self) -> &FlightRecorder {
+        &self.obs
     }
 
     /// The cost ledger (instance-hours billed so far).
@@ -601,6 +647,13 @@ impl FleetEngine {
             },
         );
         self.stats.nodes_launched += 1;
+        if self.obs.is_enabled() {
+            self.obs.event_at("node.request", now.as_nanos(), id, 0, vec![
+                ("instance", spec.ty.spec().name.into()),
+                ("spot", u64::from(spec.spot).into()),
+                ("tag", spec.tag.into()),
+            ]);
+        }
         id
     }
 
@@ -613,9 +666,21 @@ impl FleetEngine {
         }
         n.ready = true;
         n.handle.mark_ready();
+        let launched = n.handle.launched_at;
         let live = self.live_count();
         if live > self.stats.max_live {
             self.stats.max_live = live;
+        }
+        if self.obs.is_enabled() {
+            self.obs.span_at(
+                "node.provision",
+                launched.as_nanos(),
+                self.now.as_nanos(),
+                nid,
+                0,
+                vec![],
+            );
+            self.obs.event_at("node.ready", self.now.as_nanos(), nid, 0, vec![]);
         }
         true
     }
@@ -635,6 +700,7 @@ impl FleetEngine {
             n.preempted = true;
             self.stats.preemptions += 1;
         }
+        self.obs.event_at("node.notice", now.as_nanos(), nid, 0, vec![]);
         true
     }
 
@@ -642,6 +708,7 @@ impl FleetEngine {
     /// preemption, bill, and mark dead. `false` (no hook) when already
     /// dead.
     fn begin_kill(&mut self, nid: NodeId) -> bool {
+        let noticed_at;
         {
             let Some(n) = self.nodes.get_mut(&nid) else { return false };
             if n.dead {
@@ -652,9 +719,20 @@ impl FleetEngine {
                 n.preempted = true;
                 self.stats.preemptions += 1;
             }
+            noticed_at = n.noticed_at;
         }
         let now = self.now;
         self.bill_at(nid, now);
+        if self.obs.is_enabled() {
+            // the drain interval closes now: [notice, kill] (empty for a
+            // no-notice hard kill, which gets a zero-length span at the
+            // kill instant so the notice→drain→kill shape is uniform)
+            let drain_start = noticed_at.unwrap_or(now);
+            self.obs.span_at("node.drain", drain_start.as_nanos(), now.as_nanos(), nid, 0, vec![
+                ("noticed", u64::from(noticed_at.is_some()).into()),
+            ]);
+            self.obs.event_at("node.kill", now.as_nanos(), nid, 0, vec![]);
+        }
         true
     }
 
@@ -787,6 +865,58 @@ mod tests {
         );
         assert!(engine.capacity_gone(), "the market is gone for good");
         engine.check_invariants();
+    }
+
+    #[test]
+    fn obs_records_notice_drain_kill_in_order() {
+        use crate::obs::{FlightRecorder, RecordKind};
+        use crate::sim::SimClock;
+        let mut engine = FleetEngine::new(FleetConfig {
+            provisioner: exact_provisioner(),
+            storm: vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 5.0 }],
+            ..Default::default()
+        });
+        let rec = FlightRecorder::sim(4096, SimClock::new());
+        engine.set_obs(rec.clone());
+        let mut w = Units::new(6, 30.0, 2, true);
+        engine.run(&mut w).unwrap();
+        let records = rec.snapshot();
+
+        let killed: Vec<u32> = records
+            .iter()
+            .filter(|r| r.name == "node.kill")
+            .map(|r| r.pid)
+            .collect();
+        assert_eq!(killed.len(), 2, "both storm victims killed");
+        for pid in killed {
+            let seq_of = |name: &str| {
+                records
+                    .iter()
+                    .find(|r| r.pid == pid && r.name == name)
+                    .unwrap_or_else(|| panic!("node {pid} missing {name}"))
+            };
+            let notice = seq_of("node.notice");
+            let drain = seq_of("node.drain");
+            let kill = seq_of("node.kill");
+            assert!(notice.seq < drain.seq && drain.seq < kill.seq, "notice→drain→kill");
+            assert_eq!(notice.ts_ns, 60_000_000_000);
+            assert_eq!(drain.ts_ns, notice.ts_ns, "drain span opens at the notice");
+            assert_eq!(drain.end_ns(), kill.ts_ns, "drain span closes at the kill");
+            assert_eq!(drain.kind, RecordKind::Span { dur_ns: 5_000_000_000 });
+            // the node also has its bring-up records
+            seq_of("node.request");
+            seq_of("node.ready");
+        }
+        // work accounting, read off the trace instead of the counters:
+        // every unit dispatched shows up, every completion the workload
+        // saw has a work.done record, and nothing else completed
+        let dispatches = records.iter().filter(|r| r.name == "work.dispatch").count();
+        let dones = records.iter().filter(|r| r.name == "work.done").count();
+        let stales = records.iter().filter(|r| r.name == "work.stale_drop").count();
+        assert_eq!(dispatches as u64, w.dispatched);
+        assert_eq!(dones, w.completed);
+        assert!(dones + stales <= dispatches);
+        assert_eq!(rec.dropped(), 0, "capacity was enough for this run");
     }
 
     #[test]

@@ -50,6 +50,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::config::HfsConfig;
 use crate::metrics::{Counter, MetricsRegistry};
+use crate::obs::{self, FlightRecorder};
 use crate::storage::StoreHandle;
 use crate::util::Json;
 use crate::{Error, Result};
@@ -263,6 +264,9 @@ pub struct HyperFs {
     range_served: Mutex<HashMap<u32, u32>>,
     /// Read-path counters (cheap to clone; shared with fetch workers).
     pub stats: HyperFsStats,
+    /// Flight recorder for read-path spans (disabled unless attached
+    /// with [`HyperFs::set_obs`] before the mount is shared).
+    obs: FlightRecorder,
 }
 
 impl HyperFs {
@@ -368,7 +372,16 @@ impl HyperFs {
             range_inflight: Arc::new(SingleFlight::new()),
             range_served: Mutex::new(HashMap::new()),
             stats: HyperFsStats::default(),
+            obs: FlightRecorder::disabled(),
         })
+    }
+
+    /// Attach a flight recorder (before sharing the mount): reads record
+    /// `hfs.read` spans tagged with the serving tier, plus shard loads,
+    /// single-flight waits, spill promotes, backend GETs and range-GETs.
+    /// One track per reader thread (pid 0, tid = [`obs::thread_tid`]).
+    pub fn set_obs(&mut self, obs: FlightRecorder) {
+        self.obs = obs;
     }
 
     /// The monolithic manifest behind a legacy mount. `None` on sharded
@@ -463,6 +476,9 @@ impl HyperFs {
         if let Some(t) = slot.as_ref() {
             return Ok(t.clone());
         }
+        let _load_span = self.obs.is_enabled().then(|| {
+            self.obs.span("hfs.shard_load", 0, obs::thread_tid(), vec![("shard", i.into())])
+        });
         let bytes = self.store.get(&RootManifest::shard_key(&self.ns, i))?;
         let files = shard_from_json(&bytes)?;
         let index = PathIndex::build(&files);
@@ -566,7 +582,15 @@ impl HyperFs {
     /// hit this is one shard lock and one `Arc` clone — no allocation, no
     /// memcpy. Call `.to_vec()` on the view if owned bytes are needed.
     pub fn read_file(&self, path: &str) -> Result<ByteView> {
+        let mut read_span = self
+            .obs
+            .is_enabled()
+            .then(|| self.obs.span("hfs.read", 0, obs::thread_tid(), vec![]));
         let f = self.resolve(path)?;
+        if let Some(s) = read_span.as_mut() {
+            s.arg("chunk", f.chunk);
+            s.arg("bytes", f.len);
+        }
         self.stats.reads.inc();
         self.stats.bytes_read.add(f.len);
         let (chunk_len, chunk_hash, packed) = self.chunk_meta(f.chunk)?;
@@ -631,6 +655,10 @@ impl HyperFs {
                 } else {
                     self.stats.coalesced_reads.inc();
                 }
+                if let Some(s) = read_span.as_mut() {
+                    s.arg("tier", "range_get");
+                    s.arg("coalesced", u64::from(!leader));
+                }
                 self.stats.cache_misses.inc();
                 // still feed the predictor: if this turns into a scan,
                 // the next reads go back to whole chunks + readahead
@@ -644,6 +672,9 @@ impl HyperFs {
         }
 
         let (chunk, ram_hit) = self.chunk_data(f.chunk, key, chunk_len, chunk_hash)?;
+        if let Some(s) = read_span.as_mut() {
+            s.arg("tier", if ram_hit { "ram" } else { "fetch" });
+        }
         // feed the adaptive predictor and fire readahead for the
         // predicted next chunks
         for target in self.prefetcher.on_access(f.chunk, self.chunk_count() as u32, ram_hit) {
@@ -715,6 +746,11 @@ impl HyperFs {
             if first_touch {
                 self.stats.dedup_hits.inc();
             }
+            if self.obs.is_enabled() {
+                self.obs.event("hfs.singleflight_wait", 0, obs::thread_tid(), vec![
+                    ("chunk", id.into()),
+                ]);
+            }
         }
         Ok((outcome.map_err(from_fetch_error)?, false))
     }
@@ -746,17 +782,29 @@ impl HyperFs {
                 // promoted back into RAM without touching the object
                 // store; no respill — the bytes are already on disk
                 self.stats.spill_hits.inc();
+                if self.obs.is_enabled() {
+                    self.obs.event("hfs.spill_promote", 0, obs::thread_tid(), vec![
+                        ("chunk", id.into()),
+                        ("bytes", expected_len.into()),
+                    ]);
+                }
                 self.admit(key, &data, false);
                 return Ok(data);
             }
             self.stats.spill_misses.inc();
         }
         self.stats.backend_gets.inc();
-        let data = self
-            .store
-            .get(&self.object_key(id, expected_hash))
-            .map(|v| Arc::new(ChunkBytes::ram(v)))
-            .map_err(to_fetch_error)?;
+        let data = {
+            let _get_span = self.obs.is_enabled().then(|| {
+                self.obs.span("hfs.backend_get", 0, obs::thread_tid(), vec![
+                    ("chunk", id.into()),
+                ])
+            });
+            self.store
+                .get(&self.object_key(id, expected_hash))
+                .map(|v| Arc::new(ChunkBytes::ram(v)))
+                .map_err(to_fetch_error)?
+        };
         self.admit(key, &data, true);
         Ok(data)
     }
@@ -1412,6 +1460,36 @@ mod tests {
         );
         assert_eq!(counting.total_get_bytes(), cold_bytes, "zero bytes transferred");
         assert_eq!(fs.stats.spill_hits.get(), 8, "every chunk promoted from disk");
+    }
+
+    #[test]
+    fn flight_recorder_tags_reads_with_their_serving_tier() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let (_counting, store, paths) = spill_setup();
+        let rec = crate::obs::FlightRecorder::wallclock(1 << 16);
+        let mut fs = HyperFs::mount_cfg(store, "ds", &spill_cfg(dir.path(), 800)).unwrap();
+        fs.set_obs(rec.clone());
+        for p in paths.iter().chain(paths.iter()) {
+            fs.read_file(p).unwrap();
+        }
+        assert_eq!(rec.dropped(), 0);
+        let records = rec.snapshot();
+        let tier_count = |t: &str| {
+            records
+                .iter()
+                .filter(|r| {
+                    r.name == "hfs.read" && r.arg("tier").and_then(|a| a.as_str()) == Some(t)
+                })
+                .count() as u64
+        };
+        let count = |n: &str| records.iter().filter(|r| r.name == n).count() as u64;
+        assert_eq!(count("hfs.read"), 64, "one span per read_file call");
+        // the span's tier tag agrees with the counter plane, read by read
+        assert_eq!(tier_count("ram"), fs.stats.cache_hits.get());
+        assert_eq!(tier_count("fetch"), fs.stats.cache_misses.get());
+        assert_eq!(count("hfs.backend_get"), fs.stats.backend_gets.get());
+        assert_eq!(count("hfs.spill_promote"), fs.stats.spill_hits.get());
+        assert!(fs.stats.spill_hits.get() > 0, "epoch 2 promoted from disk");
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod etl;
 pub mod fleet;
 pub mod hfs;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod scheduler;
 pub mod search;

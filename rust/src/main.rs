@@ -11,7 +11,9 @@
 //!                                          # dynamic-batching serving demo
 //! hyper serve --price-trace F [--bid X] [--rps R] [--duration S] [--replicas N]
 //!                            # virtual-time fleet scenario on a price trace
-//! hyper status                                    # artifacts + catalog
+//! hyper trace [--out F] [--storm-at S] [--storm-kills K] [--storm-notice S]
+//!             # storm scenario -> Chrome trace JSON + merged timeline
+//! hyper status [--prometheus]                     # artifacts + catalog
 //! ```
 
 use std::sync::Arc;
@@ -26,7 +28,9 @@ use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
 use hyper_dist::storage::{MemStore, StoreHandle};
 use hyper_dist::util::Json;
 
-/// Tiny flag parser: `--key value` pairs after positional args.
+/// Tiny flag parser: `--key value` pairs after positional args. A flag
+/// followed by another flag (or end of line) is a boolean switch and
+/// parses as `true` — `hyper status --prometheus` needs no value.
 struct Args {
     positional: Vec<String>,
     flags: std::collections::BTreeMap<String, String>,
@@ -39,8 +43,10 @@ impl Args {
         let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
-                let val =
-                    it.next().with_context(|| format!("flag --{key} needs a value"))?.clone();
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().expect("peeked").clone(),
+                    _ => "true".to_string(),
+                };
                 flags.insert(key.to_string(), val);
             } else {
                 positional.push(a.clone());
@@ -73,7 +79,8 @@ fn main() -> anyhow::Result<()> {
         "train" => cmd_train(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
-        "status" => cmd_status(),
+        "trace" => cmd_trace(&args),
+        "status" => cmd_status(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -85,7 +92,7 @@ fn main() -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "hyper — distributed cloud processing for large-scale DL (reproduction)\n\n\
-         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n               [--price-trace FILE] [--bid USD_PER_H]\n  hyper train [--preset P] [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper serve --price-trace FILE [--bid USD_PER_H] [--rps R] [--duration S]\n              [--replicas N] [--instance TYPE] [--seed N]\n  hyper status"
+         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n               [--price-trace FILE] [--bid USD_PER_H]\n  hyper train [--preset P] [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper serve --price-trace FILE [--bid USD_PER_H] [--rps R] [--duration S]\n              [--replicas N] [--instance TYPE] [--seed N]\n  hyper trace [--out FILE] [--rps R] [--duration S] [--replicas N] [--seed N]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--capacity N] [--timeline-lines N]\n  hyper status [--prometheus]"
     );
 }
 
@@ -483,7 +490,79 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_status() -> anyhow::Result<()> {
+/// `hyper trace`: run a preemption-storm scenario on the virtual-time
+/// serving fleet with the flight recorder attached, export the records as
+/// Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`),
+/// and print the tail of the merged human-readable timeline.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use hyper_dist::cloud::StormEvent;
+    use hyper_dist::config::ObsConfig;
+    use hyper_dist::obs::{chrome, render_timeline, FlightRecorder};
+    use hyper_dist::serve::{AutoscalerConfig, Load, ServeSim, ServeSimConfig};
+    use hyper_dist::sim::{OpenLoop, SimClock};
+
+    let out: String = args.get("out", "trace.json".to_string())?;
+    let rps: f64 = args.get("rps", 800.0)?;
+    let duration: f64 = args.get("duration", 120.0)?;
+    let storm_at: f64 = args.get("storm-at", 60.0)?;
+    let storm_kills: usize = args.get("storm-kills", 3)?;
+    let storm_notice: f64 = args.get("storm-notice", 5.0)?;
+    let replicas: usize = args.get("replicas", 4)?;
+    let seed: u64 = args.get("seed", 42)?;
+    let capacity: usize = args.get("capacity", ObsConfig::default().capacity)?;
+    let lines: usize = args.get("timeline-lines", 40)?;
+
+    // virtual-time run: every record carries an explicit sim timestamp,
+    // so the recorder's clock never advances and only capacity matters
+    let rec = FlightRecorder::sim(capacity, SimClock::new());
+    let cfg = ServeSimConfig {
+        initial_replicas: replicas,
+        spot_replicas: true,
+        warm_start: true,
+        autoscaler: AutoscalerConfig {
+            min_replicas: replicas.min(2),
+            ..AutoscalerConfig::default()
+        },
+        storm: vec![StormEvent { at_s: storm_at, kills: storm_kills, notice_s: storm_notice }],
+        seed,
+        ..ServeSimConfig::default()
+    };
+    println!(
+        "tracing a storm scenario: {replicas} replicas, {rps:.0} req/s for {duration:.0}s, \
+         storm kills {storm_kills} at {storm_at:.0}s with {storm_notice:.0}s notice"
+    );
+    let mut sim = ServeSim::new(cfg);
+    sim.set_obs(rec.clone());
+    let r = sim.run(Load::Open(OpenLoop::poisson(rps)), duration)?;
+
+    let records = rec.snapshot();
+    chrome::write_chrome_trace(std::path::Path::new(&out), &records)?;
+    println!(
+        "run: completed {} / admitted {}  preemptions {}  makespan {:.1}s",
+        r.completed, r.admitted, r.preemptions, r.makespan_s
+    );
+    println!(
+        "recorded {} events ({} evicted by the {}-record ring); trace -> {out}",
+        rec.recorded(),
+        rec.dropped(),
+        capacity
+    );
+    let timeline = render_timeline(&records);
+    let all: Vec<&str> = timeline.lines().collect();
+    let shown = all.len().min(lines);
+    if shown < all.len() {
+        println!("timeline (last {shown} of {} records):", all.len());
+    } else {
+        println!("timeline:");
+    }
+    for line in &all[all.len() - shown..] {
+        println!("  {line}");
+    }
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> anyhow::Result<()> {
+    let prometheus: bool = args.get("prometheus", false)?;
     let dir = default_artifacts_dir();
     println!("artifacts dir: {}", dir.display());
     match Runtime::new(&dir) {
@@ -520,9 +599,14 @@ fn cmd_status() -> anyhow::Result<()> {
     println!("hfs smoke: {}", String::from_utf8_lossy(&fs.read_file("hello.txt")?));
     let reg = hyper_dist::metrics::MetricsRegistry::new();
     fs.register_metrics(&reg);
-    println!("hfs metrics:");
-    for line in reg.report().lines() {
-        println!("  {line}");
+    if prometheus {
+        // machine-readable exposition format, unindented for scraping
+        print!("{}", reg.report_prometheus());
+    } else {
+        println!("hfs metrics:");
+        for line in reg.report().lines() {
+            println!("  {line}");
+        }
     }
     Ok(())
 }

@@ -110,9 +110,19 @@ const HIST_BUCKETS: usize = ((HIST_MAX_EXP - HIST_MIN_EXP + 1) as usize) * HIST_
 /// sub-buckets, so quantiles resolve to ~6% relative error across the whole
 /// range — fine enough that a p99 latency SLO check on millisecond-scale
 /// values is meaningful. Count/sum/min/max are tracked exactly.
+///
+/// `record` is lock-free: buckets and count are relaxed atomic adds,
+/// sum/min/max are CAS loops over `f64` bits, so the serve hot path never
+/// serializes behind a reader. A `Mutex` is held only by
+/// `snapshot`/`reset` (and `snapshot_and_reset`, which drains the window
+/// with atomic swaps so every recorded value lands in exactly one
+/// window). A record racing a snapshot may straddle the fields it has
+/// already written — count and bucket totals can disagree by in-flight
+/// records for the duration of that race — which quantile handling
+/// tolerates; once writers quiesce the totals are exact.
 #[derive(Debug, Clone)]
 pub struct Histogram {
-    inner: Arc<Mutex<HistInner>>,
+    inner: Arc<HistInner>,
 }
 
 /// Point-in-time summary of a [`Histogram`] (quantiles are upper bucket
@@ -131,6 +141,87 @@ pub struct HistogramSnapshot {
 
 #[derive(Debug)]
 struct HistInner {
+    /// Per-bucket occupancy; relaxed `fetch_add` on the record path.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// `f64` bits; updated with CAS loops (no atomic f64 in std).
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+    /// Serializes snapshot/reset against each other (never `record`).
+    window: Mutex<()>,
+}
+
+impl HistInner {
+    fn fresh() -> Self {
+        Self {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+            window: Mutex::new(()),
+        }
+    }
+
+    /// Plain-value read of the live window (caller holds `window` when
+    /// consistency against reset matters).
+    fn view(&self) -> HistView {
+        HistView {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+            min: f64::from_bits(self.min_bits.load(Ordering::Relaxed)),
+            max: f64::from_bits(self.max_bits.load(Ordering::Relaxed)),
+        }
+    }
+
+    /// Read-and-zero the live window in one pass of atomic swaps: each
+    /// bucket increment lands in exactly one window, so windowed
+    /// accounting conserves counts even with writers mid-flight.
+    fn drain(&self) -> HistView {
+        HistView {
+            buckets: self.buckets.iter().map(|b| b.swap(0, Ordering::Relaxed)).collect(),
+            count: self.count.swap(0, Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.swap(0f64.to_bits(), Ordering::Relaxed)),
+            min: f64::from_bits(self.min_bits.swap(f64::INFINITY.to_bits(), Ordering::Relaxed)),
+            max: f64::from_bits(
+                self.max_bits.swap(f64::NEG_INFINITY.to_bits(), Ordering::Relaxed),
+            ),
+        }
+    }
+}
+
+/// CAS-loop `+=` over `f64` bits.
+fn atomic_f64_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// CAS-loop running extremum over `f64` bits (`min` or `max` via `pick`).
+fn atomic_f64_extremum(cell: &AtomicU64, v: f64, pick: fn(f64, f64) -> f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let cur_v = f64::from_bits(cur);
+        if pick(cur_v, v) == cur_v {
+            return; // already the extremum
+        }
+        match cell.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Point-in-time plain-value copy of a histogram window.
+#[derive(Debug)]
+struct HistView {
     buckets: Vec<u64>,
     count: u64,
     sum: f64,
@@ -138,17 +229,7 @@ struct HistInner {
     max: f64,
 }
 
-impl HistInner {
-    fn fresh() -> Self {
-        Self {
-            buckets: vec![0; HIST_BUCKETS],
-            count: 0,
-            sum: 0.0,
-            min: f64::INFINITY,
-            max: f64::NEG_INFINITY,
-        }
-    }
-
+impl HistView {
     fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -202,7 +283,7 @@ fn bucket_upper_edge(i: usize) -> f64 {
 
 impl Default for Histogram {
     fn default() -> Self {
-        Self { inner: Arc::new(Mutex::new(HistInner::fresh())) }
+        Self { inner: Arc::new(HistInner::fresh()) }
     }
 }
 
@@ -212,71 +293,71 @@ impl Histogram {
         Self::default()
     }
 
-    /// Record one value. Non-finite values are ignored: NaN/inf would
+    /// Record one value — lock-free (atomic bucket/count adds, CAS loops
+    /// for sum/min/max). Non-finite values are ignored: NaN/inf would
     /// corrupt min/max (and thus the clamp in `quantile`) while meaning
     /// nothing as a measurement.
     pub fn record(&self, v: f64) {
         if !v.is_finite() {
             return;
         }
-        let mut h = self.inner.lock().unwrap();
-        let idx = bucket_index(v);
-        h.buckets[idx] += 1;
-        h.count += 1;
-        h.sum += v;
-        h.min = h.min.min(v);
-        h.max = h.max.max(v);
+        let h = &*self.inner;
+        h.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        h.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&h.sum_bits, v);
+        atomic_f64_extremum(&h.min_bits, v, f64::min);
+        atomic_f64_extremum(&h.max_bits, v, f64::max);
     }
 
     /// Values recorded so far.
     pub fn count(&self) -> u64 {
-        self.inner.lock().unwrap().count
+        self.inner.count.load(Ordering::Relaxed)
     }
 
     /// Exact mean of recorded values (0 when empty).
     pub fn mean(&self) -> f64 {
-        let h = self.inner.lock().unwrap();
-        if h.count == 0 {
-            0.0
-        } else {
-            h.sum / h.count as f64
-        }
+        let v = self.inner.view();
+        if v.count == 0 { 0.0 } else { v.sum / v.count as f64 }
     }
 
     /// Exact minimum recorded value (0 when empty).
     pub fn min(&self) -> f64 {
-        let h = self.inner.lock().unwrap();
-        if h.count == 0 { 0.0 } else { h.min }
+        let v = self.inner.view();
+        if v.count == 0 { 0.0 } else { v.min }
     }
 
     /// Exact maximum recorded value (0 when empty).
     pub fn max(&self) -> f64 {
-        let h = self.inner.lock().unwrap();
-        if h.count == 0 { 0.0 } else { h.max }
+        let v = self.inner.view();
+        if v.count == 0 { 0.0 } else { v.max }
     }
 
     /// Approximate quantile (upper bucket edge, clamped to observed range).
     pub fn quantile(&self, q: f64) -> f64 {
-        self.inner.lock().unwrap().quantile(q)
+        let _w = self.inner.window.lock().unwrap();
+        self.inner.view().quantile(q)
     }
 
-    /// Consistent snapshot of count/mean/min/max and p50/p90/p95/p99 under
-    /// one lock acquisition (the autoscaler samples this per control tick).
+    /// Snapshot of count/mean/min/max and p50/p90/p95/p99 (the autoscaler
+    /// samples this per control tick). Takes the window lock so it never
+    /// interleaves with a concurrent reset half-way through the buckets.
     pub fn snapshot(&self) -> HistogramSnapshot {
-        self.inner.lock().unwrap().snapshot()
+        let _w = self.inner.window.lock().unwrap();
+        self.inner.view().snapshot()
     }
 
     /// Drop all recorded values (windowed use: snapshot, then reset).
     pub fn reset(&self) {
-        *self.inner.lock().unwrap() = HistInner::fresh();
+        let _w = self.inner.window.lock().unwrap();
+        self.inner.drain();
     }
 
-    /// Snapshot the current window and atomically start a new one.
+    /// Snapshot the current window and start a new one. The window is
+    /// drained with atomic swaps, so every recorded value is counted in
+    /// exactly one window — windowed totals conserve the record count.
     pub fn snapshot_and_reset(&self) -> HistogramSnapshot {
-        let mut h = self.inner.lock().unwrap();
-        let snap = h.snapshot();
-        *h = HistInner::fresh();
-        snap
+        let _w = self.inner.window.lock().unwrap();
+        self.inner.drain().snapshot()
     }
 }
 
@@ -311,14 +392,33 @@ impl MetricsRegistry {
         self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
+    /// Register an externally-owned gauge under `name`, replacing any
+    /// gauge previously there.
+    pub fn register_gauge(&self, name: &str, gauge: Gauge) {
+        self.gauges.lock().unwrap().insert(name.to_string(), gauge);
+    }
+
     /// The float gauge registered under `name` (created on first use).
     pub fn float_gauge(&self, name: &str) -> FloatGauge {
         self.float_gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
     }
 
+    /// Register an externally-owned float gauge under `name`, replacing
+    /// any float gauge previously there.
+    pub fn register_float_gauge(&self, name: &str, gauge: FloatGauge) {
+        self.float_gauges.lock().unwrap().insert(name.to_string(), gauge);
+    }
+
     /// The histogram registered under `name` (created on first use).
     pub fn histogram(&self, name: &str) -> Histogram {
         self.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Register an externally-owned histogram under `name` (e.g. the
+    /// serve stack's latency window), replacing any histogram previously
+    /// there.
+    pub fn register_histogram(&self, name: &str, histogram: Histogram) {
+        self.histograms.lock().unwrap().insert(name.to_string(), histogram);
     }
 
     /// Render a sorted `name value` report (used by the CLI `status`).
@@ -336,9 +436,49 @@ impl MetricsRegistry {
         for (name, h) in self.histograms.lock().unwrap().iter() {
             let s = h.snapshot();
             out.push_str(&format!(
-                "{name} count={} mean={:.3} min={:.3} max={:.3} p50={:.3} p99={:.3}\n",
-                s.count, s.mean, s.min, s.max, s.p50, s.p99
+                "{name} count={} mean={:.3} min={:.3} max={:.3} p50={:.3} p90={:.3} \
+                 p95={:.3} p99={:.3}\n",
+                s.count, s.mean, s.min, s.max, s.p50, s.p90, s.p95, s.p99
             ));
+        }
+        out
+    }
+
+    /// Render the Prometheus text exposition format (`hyper status
+    /// --prometheus`): `# TYPE` line per metric, gauges/counters as bare
+    /// samples, histograms as summaries (`quantile` labels plus `_sum`
+    /// and `_count` series). Metric names are sanitized to the Prometheus
+    /// charset (dots and dashes become underscores).
+    pub fn report_prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+                .collect()
+        }
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+        }
+        for (name, g) in self.float_gauges.lock().unwrap().iter() {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            let name = sanitize(name);
+            let s = h.snapshot();
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            for (q, v) in
+                [("0.5", s.p50), ("0.9", s.p90), ("0.95", s.p95), ("0.99", s.p99)]
+            {
+                out.push_str(&format!("{name}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            out.push_str(&format!("{name}_sum {}\n", s.mean * s.count as f64));
+            out.push_str(&format!("{name}_count {}\n", s.count));
         }
         out
     }
@@ -548,5 +688,126 @@ mod tests {
         r.histogram("y").record(3.0);
         let rep = r.report();
         assert!(rep.contains("x 1") && rep.contains("y count=1"));
+    }
+
+    #[test]
+    fn report_includes_p90_p95() {
+        let r = MetricsRegistry::new();
+        for i in 0..100 {
+            r.histogram("lat").record(0.001 * (i + 1) as f64);
+        }
+        let rep = r.report();
+        assert!(rep.contains("p50="), "{rep}");
+        assert!(rep.contains("p90="), "{rep}");
+        assert!(rep.contains("p95="), "{rep}");
+        assert!(rep.contains("p99="), "{rep}");
+    }
+
+    #[test]
+    fn register_gauge_histogram_float_gauge_share_external_state() {
+        let r = MetricsRegistry::new();
+        let g = Gauge::default();
+        g.set(7);
+        r.register_gauge("depth", g.clone());
+        assert_eq!(r.gauge("depth").get(), 7);
+        g.dec();
+        assert_eq!(r.gauge("depth").get(), 6, "live view, not a copy");
+
+        let fg = FloatGauge::new();
+        fg.set(0.25);
+        r.register_float_gauge("fill", fg.clone());
+        assert_eq!(r.float_gauge("fill").get(), 0.25);
+
+        let h = Histogram::new();
+        h.record(2.0);
+        r.register_histogram("wait", h.clone());
+        assert_eq!(r.histogram("wait").count(), 1);
+        h.record(4.0);
+        assert_eq!(r.histogram("wait").count(), 2, "live view, not a copy");
+    }
+
+    #[test]
+    fn prometheus_exposition_format() {
+        let r = MetricsRegistry::new();
+        r.counter("hfs.ds.reads").add(4);
+        r.gauge("queue-depth").set(3);
+        r.float_gauge("best_loss").set(-1.5);
+        for v in [1.0, 2.0, 4.0, 8.0] {
+            r.histogram("serve.latency_s").record(v);
+        }
+        let text = r.report_prometheus();
+        assert!(text.contains("# TYPE hfs_ds_reads counter\nhfs_ds_reads 4\n"), "{text}");
+        assert!(text.contains("# TYPE queue_depth gauge\nqueue_depth 3\n"), "{text}");
+        assert!(text.contains("best_loss -1.5\n"), "{text}");
+        assert!(text.contains("# TYPE serve_latency_s summary\n"), "{text}");
+        assert!(text.contains("serve_latency_s{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("serve_latency_s{quantile=\"0.99\"}"), "{text}");
+        assert!(text.contains("serve_latency_s_sum 15\n"), "{text}");
+        assert!(text.contains("serve_latency_s_count 4\n"), "{text}");
+        // no unsanitized names leak through
+        assert!(!text.contains("hfs.ds"), "{text}");
+    }
+
+    #[test]
+    fn histogram_hammer_conserves_counts_across_threads() {
+        // the atomic-bucket record path must not lose updates under
+        // contention: 8 threads x 5000 records, exact conservation
+        const THREADS: usize = 8;
+        const PER: usize = 5_000;
+        let h = Histogram::new();
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..PER {
+                        h.record(0.001 + ((t * PER + i) % 97) as f64 / 97.0);
+                    }
+                });
+            }
+        });
+        let snap = h.snapshot();
+        assert_eq!(snap.count as usize, THREADS * PER, "no record lost");
+        // bucket occupancy agrees with the count once writers quiesce
+        let bucket_total: u64 = h.inner.view().buckets.iter().sum();
+        assert_eq!(bucket_total as usize, THREADS * PER);
+        assert!(snap.min >= 0.001 && snap.max <= 1.001);
+        // mean of the uniform residue pattern, within float-add reorder noise
+        assert!((snap.mean - (0.001 + 48.0 / 97.0)).abs() < 1e-3, "mean={}", snap.mean);
+    }
+
+    #[test]
+    fn histogram_windowed_hammer_conserves_across_resets() {
+        // snapshot_and_reset drains with atomic swaps: every record lands
+        // in exactly one window even while writers are mid-flight
+        use std::sync::atomic::AtomicBool;
+        const THREADS: usize = 4;
+        const PER: usize = 10_000;
+        let h = Histogram::new();
+        let done = AtomicBool::new(false);
+        let windowed = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            let writers: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    s.spawn(|| {
+                        for _ in 0..PER {
+                            h.record(0.5);
+                        }
+                    })
+                })
+                .collect();
+            let reaper = s.spawn(|| {
+                while !done.load(Ordering::Acquire) {
+                    windowed.fetch_add(h.snapshot_and_reset().count, Ordering::Relaxed);
+                    std::thread::yield_now();
+                }
+            });
+            for w in writers {
+                w.join().unwrap();
+            }
+            done.store(true, Ordering::Release);
+            reaper.join().unwrap();
+        });
+        let total = windowed.load(Ordering::Relaxed) + h.snapshot().count;
+        assert_eq!(total as usize, THREADS * PER, "windows partition the records");
     }
 }

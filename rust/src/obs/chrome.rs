@@ -1,0 +1,196 @@
+//! Chrome trace-event export: turn flight-recorder records into the JSON
+//! object format `chrome://tracing` and Perfetto load directly.
+//!
+//! Mapping (see `docs/OBSERVABILITY.md` for the viewing walkthrough):
+//!
+//! * one **pid** per node (pid 0 = the controller/driver), named via
+//!   `process_name` metadata events so Perfetto's track groups read
+//!   `node-3`, not `3`;
+//! * one **tid** per task / trial / replica lane within the node;
+//! * [`RecordKind::Span`] → phase `"X"` (complete event, `ts` + `dur`);
+//! * [`RecordKind::Instant`] → phase `"i"`, thread-scoped;
+//! * timestamps are microseconds (the trace-event unit), converted from
+//!   the recorder's nanoseconds — always finite and non-negative because
+//!   the source is `u64`.
+
+use std::path::Path;
+
+use crate::obs::{ArgValue, Record, RecordKind};
+use crate::util::Json;
+use crate::Result;
+
+fn arg_json(v: &ArgValue) -> Json {
+    match v {
+        ArgValue::U64(n) => Json::num(*n as f64),
+        ArgValue::F64(n) if n.is_finite() => Json::num(*n),
+        // non-finite floats would poison the JSON; stringify them
+        ArgValue::F64(n) => Json::str(format!("{n}")),
+        ArgValue::Str(s) => Json::str(s.clone()),
+    }
+}
+
+/// Build the Chrome trace-event JSON document for `records`.
+///
+/// Returns `{"displayTimeUnit": "ms", "traceEvents": [...]}` with one
+/// `process_name` metadata event per distinct pid followed by the records
+/// sorted by start time (sequence number breaks ties).
+pub fn chrome_trace(records: &[Record]) -> Json {
+    let mut sorted: Vec<&Record> = records.iter().collect();
+    sorted.sort_by_key(|r| (r.ts_ns, r.seq));
+
+    let mut events = Vec::new();
+    let mut pids: Vec<u32> = sorted.iter().map(|r| r.pid).collect();
+    pids.sort_unstable();
+    pids.dedup();
+    for pid in pids {
+        let name = if pid == 0 { "controller".to_string() } else { format!("node-{pid}") };
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("process_name")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+    }
+
+    for r in sorted {
+        let ts_us = r.ts_ns as f64 / 1e3;
+        let args =
+            Json::Obj(r.args.iter().map(|(k, v)| (k.to_string(), arg_json(v))).collect());
+        let mut fields = vec![
+            ("name", Json::str(r.name)),
+            ("cat", Json::str(category(r.name))),
+            ("ts", Json::num(ts_us)),
+            ("pid", Json::num(r.pid as f64)),
+            ("tid", Json::num(r.tid as f64)),
+            ("args", args),
+        ];
+        match r.kind {
+            RecordKind::Span { dur_ns } => {
+                fields.push(("ph", Json::str("X")));
+                fields.push(("dur", Json::num(dur_ns as f64 / 1e3)));
+            }
+            RecordKind::Instant => {
+                fields.push(("ph", Json::str("i")));
+                fields.push(("s", Json::str("t")));
+            }
+        }
+        events.push(Json::obj(fields));
+    }
+
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Category = the leading `subsystem.` segment of the record name (the
+/// whole name when undotted); Perfetto filters on it.
+fn category(name: &str) -> &str {
+    name.split('.').next().unwrap_or(name)
+}
+
+/// Serialize [`chrome_trace`] for `records` and write it to `path`.
+pub fn write_chrome_trace(path: &Path, records: &[Record]) -> Result<()> {
+    std::fs::write(path, chrome_trace(records).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::FlightRecorder;
+    use crate::sim::SimClock;
+
+    fn sample() -> Vec<Record> {
+        let rec = FlightRecorder::sim(16, SimClock::new());
+        rec.event_at("node.notice", 60_000_000_000, 3, 0, vec![("cause", "storm".into())]);
+        rec.span_at(
+            "node.drain",
+            60_000_000_000,
+            61_500_000_000,
+            3,
+            0,
+            vec![("checkpointed", 1u64.into())],
+        );
+        rec.event_at("node.kill", 61_500_000_000, 3, 0, vec![]);
+        rec.span_at("trial.run", 10_000_000_000, 30_000_000_000, 2, 7, vec![
+            ("command_hash", 0xdeadbeefu64.into()),
+            ("loss", 0.73.into()),
+        ]);
+        rec.snapshot()
+    }
+
+    #[test]
+    fn export_roundtrips_through_util_json_with_finite_nonneg_times() {
+        // ISSUE satellite: the export must survive a parse round-trip and
+        // every ts/dur must be finite and non-negative
+        let doc = chrome_trace(&sample());
+        let text = doc.to_string();
+        let back = Json::parse(&text).expect("exporter emits valid JSON");
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        let mut spans = 0;
+        let mut instants = 0;
+        for e in events {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            let ts = e.get("ts").map(|t| t.as_f64().unwrap());
+            match ph {
+                "M" => continue,
+                "X" => {
+                    spans += 1;
+                    let dur = e.get("dur").unwrap().as_f64().unwrap();
+                    assert!(dur.is_finite() && dur >= 0.0, "dur={dur}");
+                }
+                "i" => {
+                    instants += 1;
+                    assert_eq!(e.get("s").unwrap().as_str().unwrap(), "t");
+                }
+                other => panic!("unexpected phase {other}"),
+            }
+            let ts = ts.expect("every non-metadata event has ts");
+            assert!(ts.is_finite() && ts >= 0.0, "ts={ts}");
+            assert!(e.get("pid").unwrap().as_u64().is_some());
+            assert!(e.get("tid").unwrap().as_u64().is_some());
+        }
+        assert_eq!(spans, 2);
+        assert_eq!(instants, 2);
+    }
+
+    #[test]
+    fn pid_metadata_names_every_node() {
+        let doc = chrome_trace(&sample());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let names: Vec<String> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+            .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(names, vec!["node-2".to_string(), "node-3".to_string()]);
+    }
+
+    #[test]
+    fn microsecond_conversion_and_categories() {
+        let doc = chrome_trace(&sample());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let notice = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("node.notice"))
+            .unwrap();
+        assert_eq!(notice.get("ts").unwrap().as_f64().unwrap(), 60_000_000.0, "ns -> us");
+        assert_eq!(notice.get("cat").unwrap().as_str().unwrap(), "node");
+        let run =
+            events.iter().find(|e| e.get("name").unwrap().as_str() == Some("trial.run")).unwrap();
+        assert_eq!(run.get("dur").unwrap().as_f64().unwrap(), 20_000_000.0);
+        assert_eq!(run.get("args").unwrap().get("command_hash").unwrap().as_u64(), Some(0xdeadbeef));
+    }
+
+    #[test]
+    fn write_export_to_disk() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("trace.json");
+        write_chrome_trace(&path, &sample()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,613 @@
+//! Structured tracing: spans, point events, and the flight recorder.
+//!
+//! The paper's master aggregates application/utilization/OS logs into
+//! Logstash and surfaces them in Kibana (§III.C); this module is the
+//! repo's equivalent for *lifecycle* visibility. Subsystems record
+//! [`Record`]s — spans (an interval with a duration) and instant events —
+//! into a bounded [`FlightRecorder`] that keeps the newest N records
+//! (oldest evicted, drops counted), so the end of a run is always
+//! reconstructible: which node got a spot notice when, how long the drain
+//! lasted, which trial resumed with which command hash, which HFS read
+//! hit which cache tier.
+//!
+//! # Span taxonomy
+//!
+//! Names are dotted `subsystem.verb` literals; `docs/OBSERVABILITY.md`
+//! lists the full taxonomy. The attribute model is deliberately flat:
+//! every record carries a `pid` (node id; 0 = the controller/driver) and
+//! a `tid` (task / trial / replica / request lane; 0 = the main lane),
+//! plus a small list of named [`ArgValue`]s. That pid/tid pair maps 1:1
+//! onto the Chrome trace-event process/thread axes (see [`chrome`]), so
+//! an export opens in Perfetto with one track group per node and one
+//! track per task.
+//!
+//! # Clocks
+//!
+//! Records are timestamped by a [`Clock`]: wallclock ([`WallClock`],
+//! nanoseconds since recorder construction) for the threaded layers
+//! (`ServeStack`, HFS reads), or virtual time ([`crate::sim::SimClock`])
+//! for the fleet drivers. Virtual-time call sites usually know their
+//! timestamps exactly and use the `*_at` forms; the scoped [`SpanGuard`]
+//! reads the clock and is meant for wallclock code.
+
+mod ring;
+
+pub mod chrome;
+
+pub use ring::Ring;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::ObsConfig;
+use crate::sim::SimClock;
+
+/// Source of record timestamps, in nanoseconds on some monotone axis.
+///
+/// Implemented by [`WallClock`] (nanoseconds since construction) and
+/// [`crate::sim::SimClock`] (virtual nanoseconds since sim start), so one
+/// recorder type serves both the threaded and the virtual-time layers.
+pub trait Clock: Send + Sync {
+    /// Current time in nanoseconds since the clock's epoch.
+    fn now_ns(&self) -> u64;
+}
+
+/// Wallclock [`Clock`]: monotone nanoseconds since construction.
+#[derive(Debug, Clone)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    /// A wallclock whose epoch is now.
+    pub fn new() -> Self {
+        Self { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+}
+
+impl Clock for SimClock {
+    fn now_ns(&self) -> u64 {
+        self.now_ns()
+    }
+}
+
+/// One record attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    /// Unsigned integer (ids, counts, steps, hashes).
+    U64(u64),
+    /// Float (seconds, fills, losses).
+    F64(f64),
+    /// Short string (tier names, close reasons, instance types).
+    Str(String),
+}
+
+impl ArgValue {
+    /// The integer payload, if this is a [`ArgValue::U64`].
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            ArgValue::U64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// The numeric payload widened to f64 (`None` for strings).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ArgValue::U64(v) => Some(*v as f64),
+            ArgValue::F64(v) => Some(*v),
+            ArgValue::Str(_) => None,
+        }
+    }
+
+    /// The string payload, if this is a [`ArgValue::Str`].
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ArgValue::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ArgValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgValue::U64(v) => write!(f, "{v}"),
+            ArgValue::F64(v) => write!(f, "{v:.6}"),
+            ArgValue::Str(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+impl From<u64> for ArgValue {
+    fn from(v: u64) -> Self {
+        ArgValue::U64(v)
+    }
+}
+
+impl From<u32> for ArgValue {
+    fn from(v: u32) -> Self {
+        ArgValue::U64(v as u64)
+    }
+}
+
+impl From<usize> for ArgValue {
+    fn from(v: usize) -> Self {
+        ArgValue::U64(v as u64)
+    }
+}
+
+impl From<f64> for ArgValue {
+    fn from(v: f64) -> Self {
+        ArgValue::F64(v)
+    }
+}
+
+impl From<&str> for ArgValue {
+    fn from(v: &str) -> Self {
+        ArgValue::Str(v.to_string())
+    }
+}
+
+impl From<String> for ArgValue {
+    fn from(v: String) -> Self {
+        ArgValue::Str(v)
+    }
+}
+
+/// Span (interval) or instant (point) — the two Chrome trace phases the
+/// exporter emits (`"X"` and `"i"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecordKind {
+    /// An interval starting at `ts_ns` lasting `dur_ns`.
+    Span {
+        /// Interval length in nanoseconds.
+        dur_ns: u64,
+    },
+    /// A point in time.
+    Instant,
+}
+
+/// Attribute list: small, name-value, names are `&'static str` literals.
+pub type Args = Vec<(&'static str, ArgValue)>;
+
+/// One recorded span or event.
+#[derive(Debug, Clone)]
+pub struct Record {
+    /// Monotone sequence number (total-order tiebreak for equal `ts_ns`,
+    /// which virtual time produces routinely: notice and kill can share
+    /// an instant but never a sequence number).
+    pub seq: u64,
+    /// Dotted `subsystem.verb` name (see `docs/OBSERVABILITY.md`).
+    pub name: &'static str,
+    /// Span-with-duration or instant.
+    pub kind: RecordKind,
+    /// Start (span) or occurrence (instant) time, clock nanoseconds.
+    pub ts_ns: u64,
+    /// Node id; 0 is the controller/driver itself.
+    pub pid: u32,
+    /// Task / trial / replica lane within the node; 0 is the main lane.
+    pub tid: u64,
+    /// Named attributes.
+    pub args: Args,
+}
+
+impl Record {
+    /// End time: `ts_ns` for instants, `ts_ns + dur_ns` for spans.
+    pub fn end_ns(&self) -> u64 {
+        match self.kind {
+            RecordKind::Span { dur_ns } => self.ts_ns.saturating_add(dur_ns),
+            RecordKind::Instant => self.ts_ns,
+        }
+    }
+
+    /// The attribute named `key`, if present.
+    pub fn arg(&self, key: &str) -> Option<&ArgValue> {
+        self.args.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+    }
+}
+
+struct RecorderInner {
+    enabled: bool,
+    clock: Box<dyn Clock>,
+    ring: Mutex<Ring<Record>>,
+}
+
+/// Bounded tracing sink: records spans and events into a [`Ring`] that
+/// keeps the newest `capacity` records.
+///
+/// Clones share state (`Arc` inside), so one recorder threads through an
+/// engine, its workload, and worker threads. Lock cost per record is one
+/// short `Mutex` critical section (index bump + slot write — the record
+/// itself is built outside the lock); a disabled recorder short-circuits
+/// before building anything, so leaving instrumentation compiled in is
+/// free when tracing is off.
+#[derive(Clone)]
+pub struct FlightRecorder {
+    inner: Arc<RecorderInner>,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("enabled", &self.inner.enabled)
+            .field("len", &self.len())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl FlightRecorder {
+    /// A recorder over an arbitrary clock.
+    pub fn new(capacity: usize, clock: impl Clock + 'static) -> Self {
+        Self {
+            inner: Arc::new(RecorderInner {
+                enabled: true,
+                clock: Box::new(clock),
+                ring: Mutex::new(Ring::new(capacity)),
+            }),
+        }
+    }
+
+    /// A wallclock recorder (epoch = now) for the threaded layers.
+    pub fn wallclock(capacity: usize) -> Self {
+        Self::new(capacity, WallClock::new())
+    }
+
+    /// A virtual-time recorder sharing `clock` with a sim/fleet engine.
+    pub fn sim(capacity: usize, clock: SimClock) -> Self {
+        Self::new(capacity, clock)
+    }
+
+    /// A recorder that records nothing (the default everywhere tracing
+    /// was not explicitly attached).
+    pub fn disabled() -> Self {
+        Self {
+            inner: Arc::new(RecorderInner {
+                enabled: false,
+                clock: Box::new(WallClock::new()),
+                ring: Mutex::new(Ring::new(1)),
+            }),
+        }
+    }
+
+    /// Build from [`ObsConfig`]: wallclock recorder, or disabled.
+    pub fn from_config(cfg: &ObsConfig) -> Self {
+        if cfg.enabled {
+            Self::wallclock(cfg.capacity)
+        } else {
+            Self::disabled()
+        }
+    }
+
+    /// Is this recorder recording?
+    pub fn is_enabled(&self) -> bool {
+        self.inner.enabled
+    }
+
+    /// Current clock reading, nanoseconds.
+    pub fn now_ns(&self) -> u64 {
+        self.inner.clock.now_ns()
+    }
+
+    fn push(&self, name: &'static str, kind: RecordKind, ts_ns: u64, pid: u32, tid: u64, args: Args) {
+        let mut ring = self.inner.ring.lock().unwrap();
+        let seq = ring.pushed();
+        ring.push(Record { seq, name, kind, ts_ns, pid, tid, args });
+    }
+
+    /// Record an instant event stamped by the recorder's clock.
+    pub fn event(&self, name: &'static str, pid: u32, tid: u64, args: Args) {
+        if !self.inner.enabled {
+            return;
+        }
+        self.push(name, RecordKind::Instant, self.now_ns(), pid, tid, args);
+    }
+
+    /// Record an instant event at an explicit timestamp (virtual-time
+    /// call sites stamp with the engine's own `now`).
+    pub fn event_at(&self, name: &'static str, ts_ns: u64, pid: u32, tid: u64, args: Args) {
+        if !self.inner.enabled {
+            return;
+        }
+        self.push(name, RecordKind::Instant, ts_ns, pid, tid, args);
+    }
+
+    /// Record a completed span over `[start_ns, end_ns]` (an inverted
+    /// interval records with zero duration rather than panicking).
+    pub fn span_at(
+        &self,
+        name: &'static str,
+        start_ns: u64,
+        end_ns: u64,
+        pid: u32,
+        tid: u64,
+        args: Args,
+    ) {
+        if !self.inner.enabled {
+            return;
+        }
+        let dur_ns = end_ns.saturating_sub(start_ns);
+        self.push(name, RecordKind::Span { dur_ns }, start_ns, pid, tid, args);
+    }
+
+    /// Open a scoped span that records on drop (wallclock call sites).
+    pub fn span(&self, name: &'static str, pid: u32, tid: u64, args: Args) -> SpanGuard {
+        if !self.inner.enabled {
+            return SpanGuard { rec: None, name, start_ns: 0, pid, tid, args: Vec::new() };
+        }
+        SpanGuard { start_ns: self.now_ns(), rec: Some(self.clone()), name, pid, tid, args }
+    }
+
+    /// Total records ever submitted (retained + dropped).
+    pub fn recorded(&self) -> u64 {
+        self.inner.ring.lock().unwrap().pushed()
+    }
+
+    /// Records evicted by the ring to bound memory.
+    pub fn dropped(&self) -> u64 {
+        self.inner.ring.lock().unwrap().dropped()
+    }
+
+    /// Records currently retained.
+    pub fn len(&self) -> usize {
+        self.inner.ring.lock().unwrap().len()
+    }
+
+    /// No records retained?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Clone of the retained records, oldest → newest by sequence.
+    pub fn snapshot(&self) -> Vec<Record> {
+        self.inner.ring.lock().unwrap().snapshot()
+    }
+
+    /// Drop all retained records and reset the drop accounting.
+    pub fn clear(&self) {
+        self.inner.ring.lock().unwrap().clear();
+    }
+}
+
+/// Scoped span: opened by [`FlightRecorder::span`], records its interval
+/// when dropped. Attributes added via [`SpanGuard::arg`] after opening
+/// (e.g. a batch's close reason, known only at close) ride along.
+pub struct SpanGuard {
+    rec: Option<FlightRecorder>,
+    name: &'static str,
+    start_ns: u64,
+    pid: u32,
+    tid: u64,
+    args: Args,
+}
+
+impl SpanGuard {
+    /// Attach an attribute discovered while the span was open.
+    pub fn arg(&mut self, key: &'static str, value: impl Into<ArgValue>) {
+        if self.rec.is_some() {
+            self.args.push((key, value.into()));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(rec) = self.rec.take() {
+            let end = rec.now_ns();
+            rec.span_at(self.name, self.start_ns, end, self.pid, self.tid, std::mem::take(&mut self.args));
+        }
+    }
+}
+
+/// FNV-1a 64-bit hash of a string — the stable "command hash" attached to
+/// trial run/resume spans so a resume can be checked (from the trace
+/// alone) to continue the byte-identical command of the original attempt.
+pub fn hash64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A stable per-thread track id for wallclock spans: distinct OS threads
+/// get distinct non-zero tids (cached thread-locally), so concurrent
+/// reads render as parallel tracks instead of one self-overlapping one.
+pub fn thread_tid() -> u64 {
+    use std::cell::Cell;
+    thread_local! {
+        static TID: Cell<u64> = const { Cell::new(0) };
+    }
+    TID.with(|t| {
+        let mut v = t.get();
+        if v == 0 {
+            v = hash64(&format!("{:?}", std::thread::current().id())).max(1);
+            t.set(v);
+        }
+        v
+    })
+}
+
+/// Render records as a human-readable merged timeline, sorted by start
+/// time (sequence number breaks virtual-time ties): one line per record,
+/// `[seconds] pid/tid name (+duration) key=value ...`.
+pub fn render_timeline(records: &[Record]) -> String {
+    let mut sorted: Vec<&Record> = records.iter().collect();
+    sorted.sort_by_key(|r| (r.ts_ns, r.seq));
+    let mut out = String::new();
+    for r in sorted {
+        let ts_s = r.ts_ns as f64 / 1e9;
+        out.push_str(&format!("[{ts_s:>12.6}s] p{:<4} t{:<4} {:<26}", r.pid, r.tid, r.name));
+        if let RecordKind::Span { dur_ns } = r.kind {
+            out.push_str(&format!(" +{:.6}s", dur_ns as f64 / 1e9));
+        }
+        for (k, v) in &r.args {
+            out.push_str(&format!(" {k}={v}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_and_spans_record_in_order() {
+        let rec = FlightRecorder::sim(16, SimClock::new());
+        rec.event_at("a", 10, 1, 0, vec![]);
+        rec.span_at("b", 20, 50, 2, 7, vec![("tier", "ram".into())]);
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].name, "a");
+        assert_eq!(snap[0].kind, RecordKind::Instant);
+        assert_eq!(snap[1].kind, RecordKind::Span { dur_ns: 30 });
+        assert_eq!(snap[1].end_ns(), 50);
+        assert_eq!(snap[1].pid, 2);
+        assert_eq!(snap[1].tid, 7);
+        assert_eq!(snap[1].arg("tier"), Some(&ArgValue::Str("ram".into())));
+        assert_eq!(snap[1].arg("missing"), None);
+        assert!(snap[0].seq < snap[1].seq);
+    }
+
+    #[test]
+    fn flight_recorder_bounded_at_10x_capacity() {
+        // ISSUE acceptance: emitting 10x capacity retains exactly the
+        // newest `capacity` records and reports the drop count
+        let cap = 32;
+        let rec = FlightRecorder::sim(cap, SimClock::new());
+        for i in 0..(10 * cap as u64) {
+            rec.event_at("tick", i, 0, 0, vec![("i", i.into())]);
+        }
+        assert_eq!(rec.len(), cap);
+        assert_eq!(rec.recorded(), 10 * cap as u64);
+        assert_eq!(rec.dropped(), 9 * cap as u64);
+        let snap = rec.snapshot();
+        assert_eq!(snap.first().unwrap().ts_ns, 9 * cap as u64, "oldest survivor");
+        assert_eq!(snap.last().unwrap().ts_ns, 10 * cap as u64 - 1, "newest");
+        // order preserved across the wrap
+        for w in snap.windows(2) {
+            assert!(w[0].seq + 1 == w[1].seq);
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = FlightRecorder::disabled();
+        assert!(!rec.is_enabled());
+        rec.event("e", 0, 0, vec![]);
+        rec.span_at("s", 0, 10, 0, 0, vec![]);
+        {
+            let mut g = rec.span("scoped", 0, 0, vec![]);
+            g.arg("k", 1u64);
+        }
+        assert!(rec.is_empty());
+        assert_eq!(rec.recorded(), 0);
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn from_config_respects_enabled_flag() {
+        let off = FlightRecorder::from_config(&ObsConfig { enabled: false, ..Default::default() });
+        off.event("e", 0, 0, vec![]);
+        assert_eq!(off.recorded(), 0);
+        let on = FlightRecorder::from_config(&ObsConfig::default());
+        on.event("e", 0, 0, vec![]);
+        assert_eq!(on.recorded(), 1);
+    }
+
+    #[test]
+    fn scoped_span_records_on_drop_with_late_args() {
+        let rec = FlightRecorder::wallclock(8);
+        {
+            let mut g = rec.span("work", 3, 9, vec![("a", 1u64.into())]);
+            g.arg("close", "deadline");
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].name, "work");
+        assert!(matches!(snap[0].kind, RecordKind::Span { .. }));
+        assert_eq!(snap[0].arg("close"), Some(&ArgValue::Str("deadline".into())));
+        assert_eq!(snap[0].arg("a"), Some(&ArgValue::U64(1)));
+    }
+
+    #[test]
+    fn sim_clock_drives_timestamps() {
+        let clk = SimClock::new();
+        let rec = FlightRecorder::sim(8, clk.clone());
+        clk.advance_to(crate::sim::SimTime::from_secs(3));
+        rec.event("e", 0, 0, vec![]);
+        assert_eq!(rec.snapshot()[0].ts_ns, 3_000_000_000);
+    }
+
+    #[test]
+    fn hash64_is_stable_and_discriminating() {
+        assert_eq!(hash64("train --lr 0.01"), hash64("train --lr 0.01"));
+        assert_ne!(hash64("train --lr 0.01"), hash64("train --lr 0.02"));
+        assert_ne!(hash64(""), hash64(" "));
+    }
+
+    #[test]
+    fn timeline_sorts_by_time_then_seq() {
+        let rec = FlightRecorder::sim(8, SimClock::new());
+        rec.event_at("later", 2_000_000_000, 1, 0, vec![]);
+        rec.event_at("notice", 1_000_000_000, 2, 0, vec![]);
+        rec.event_at("kill", 1_000_000_000, 2, 0, vec![("cause", "storm".into())]);
+        let text = render_timeline(&rec.snapshot());
+        let notice = text.find("notice").unwrap();
+        let kill = text.find("kill").unwrap();
+        let later = text.find("later").unwrap();
+        assert!(notice < kill, "same instant orders by seq");
+        assert!(kill < later);
+        assert!(text.contains("cause=storm"));
+    }
+
+    #[test]
+    fn concurrent_recording_conserves_counts() {
+        let rec = FlightRecorder::wallclock(256);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let rec = rec.clone();
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        rec.event("e", 0, t, vec![("i", i.into())]);
+                    }
+                });
+            }
+        });
+        assert_eq!(rec.recorded(), 400);
+        assert_eq!(rec.len() as u64 + rec.dropped(), 400);
+        assert_eq!(rec.len(), 256);
+    }
+
+    #[test]
+    fn thread_tids_are_stable_and_distinct_across_threads() {
+        let here = thread_tid();
+        assert_ne!(here, 0);
+        assert_eq!(here, thread_tid(), "cached per thread");
+        let other = std::thread::spawn(thread_tid).join().unwrap();
+        assert_ne!(other, 0);
+        assert_ne!(here, other);
+    }
+}

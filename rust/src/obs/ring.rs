@@ -1,0 +1,162 @@
+//! Bounded ring buffer with flight-recorder semantics: when full, the
+//! *oldest* item is evicted so the buffer always holds the newest
+//! `capacity` items — the end of a run (the part you debug) survives, the
+//! beginning ages out. A `dropped` counter records how many items were
+//! evicted, so "the trace is truncated" is a visible fact, not a silent
+//! lie.
+//!
+//! This is the storage primitive under both [`super::FlightRecorder`]
+//! (span/event records) and [`crate::cluster::LogCollector`] (the
+//! Logstash stand-in), which share the same overflow policy.
+
+/// Fixed-capacity ring keeping the newest `capacity` items pushed.
+///
+/// Not internally synchronized — wrap in a `Mutex` for shared use (the
+/// callers above do). Push is O(1) and allocation-free once the buffer
+/// has filled.
+#[derive(Debug, Clone)]
+pub struct Ring<T> {
+    /// Backing storage; grows up to `capacity`, then slots are reused.
+    slots: Vec<T>,
+    /// Maximum retained items (>= 1).
+    capacity: usize,
+    /// Total items ever pushed; `pushed % capacity` is the next slot.
+    pushed: u64,
+}
+
+impl<T> Ring<T> {
+    /// An empty ring retaining at most `capacity` items (min 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self { slots: Vec::new(), capacity, pushed: 0 }
+    }
+
+    /// Append `item`, evicting the oldest retained item if full. Returns
+    /// the item's sequence number (0-based, monotone across evictions).
+    pub fn push(&mut self, item: T) -> u64 {
+        let seq = self.pushed;
+        if self.slots.len() < self.capacity {
+            // growth phase: pushed == slots.len(), so the orders agree
+            self.slots.push(item);
+        } else {
+            self.slots[(seq % self.capacity as u64) as usize] = item;
+        }
+        self.pushed += 1;
+        seq
+    }
+
+    /// Retained items (<= capacity).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// No items retained?
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Maximum retained items.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total items ever pushed (retained + dropped).
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Items evicted to make room (flight-recorder drop count).
+    pub fn dropped(&self) -> u64 {
+        self.pushed - self.slots.len() as u64
+    }
+
+    /// Iterate retained items oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        // once wrapped, the oldest retained item sits at the next write
+        // slot; before wrapping that index is 0
+        let split = if self.slots.len() < self.capacity {
+            0
+        } else {
+            (self.pushed % self.capacity as u64) as usize
+        };
+        self.slots[split..].iter().chain(self.slots[..split].iter())
+    }
+
+    /// Drop every retained item and reset the push/drop accounting.
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.pushed = 0;
+    }
+}
+
+impl<T: Clone> Ring<T> {
+    /// Clone of the retained items, oldest → newest.
+    pub fn snapshot(&self) -> Vec<T> {
+        self.iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_everything_under_capacity() {
+        let mut r = Ring::new(8);
+        for i in 0..5 {
+            assert_eq!(r.push(i), i);
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(r.snapshot(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn wraparound_keeps_exactly_newest_n_with_drop_count() {
+        // 10x capacity: retain exactly the newest `capacity`, count drops
+        let mut r = Ring::new(4);
+        for i in 0..40u64 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.pushed(), 40);
+        assert_eq!(r.dropped(), 36);
+        assert_eq!(r.snapshot(), vec![36, 37, 38, 39], "newest, in order");
+    }
+
+    #[test]
+    fn order_is_oldest_to_newest_at_every_fill_level() {
+        let mut r = Ring::new(3);
+        let mut expect = Vec::new();
+        for i in 0..10 {
+            r.push(i);
+            expect.push(i);
+            let keep = expect.len().saturating_sub(3);
+            assert_eq!(r.snapshot(), expect[keep..].to_vec(), "after push {i}");
+        }
+    }
+
+    #[test]
+    fn capacity_zero_behaves_as_one() {
+        let mut r = Ring::new(0);
+        r.push("a");
+        r.push("b");
+        assert_eq!(r.capacity(), 1);
+        assert_eq!(r.snapshot(), vec!["b"]);
+        assert_eq!(r.dropped(), 1);
+    }
+
+    #[test]
+    fn clear_resets_accounting() {
+        let mut r = Ring::new(2);
+        for i in 0..5 {
+            r.push(i);
+        }
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.pushed(), 0);
+        assert_eq!(r.dropped(), 0);
+        r.push(9);
+        assert_eq!(r.snapshot(), vec![9]);
+    }
+}

@@ -127,6 +127,7 @@ pub struct SimDriver {
     /// Assignment log (empty unless `record_assignments` is configured).
     pub assignments: Vec<AssignmentRecord>,
     stats: FleetStats,
+    obs: crate::obs::FlightRecorder,
 }
 
 impl SimDriver {
@@ -137,7 +138,16 @@ impl SimDriver {
             ledger: CostLedger::new(),
             assignments: Vec::new(),
             stats: FleetStats::default(),
+            obs: crate::obs::FlightRecorder::disabled(),
         }
+    }
+
+    /// Attach a flight recorder before [`SimDriver::run`]: the fleet
+    /// engine records node lifecycle (request → ready → notice → drain →
+    /// kill) and work dispatch/completion events into it, stamped with
+    /// virtual time.
+    pub fn set_obs(&mut self, obs: crate::obs::FlightRecorder) {
+        self.obs = obs;
     }
 
     /// Fleet-level counters of the last run (preemptions, storm firing
@@ -156,6 +166,7 @@ impl SimDriver {
             seed: self.cfg.seed,
             ..FleetConfig::default()
         });
+        engine.set_obs(self.obs.clone());
         let runs: Vec<ExpRun> = (0..wf.n_experiments())
             .map(|ei| ExpRun {
                 state: SchedulerState::new(),

@@ -34,6 +34,7 @@ use crate::config::SearchConfig;
 use crate::fleet::{FleetConfig, FleetEngine, FleetStats, FleetWorkload, LaunchSpec, NodeId,
                    PriceTraceConfig};
 use crate::metrics::MetricsRegistry;
+use crate::obs::{hash64, FlightRecorder};
 use crate::scheduler::CheckpointStore;
 use crate::sim::SimTime;
 use crate::storage::StoreHandle;
@@ -157,6 +158,7 @@ pub struct SearchDriver {
     best_idx: Option<usize>,
     best_observed: f64,
     ran: bool,
+    obs: FlightRecorder,
 }
 
 impl SearchDriver {
@@ -222,7 +224,18 @@ impl SearchDriver {
             best_idx: None,
             best_observed: f64::INFINITY,
             ran: false,
+            obs: FlightRecorder::disabled(),
         })
+    }
+
+    /// Attach a flight recorder before [`SearchDriver::run`]: the fleet
+    /// engine records node lifecycle + work events, and the driver adds
+    /// `trial.run` segment spans, `trial.pause` / `trial.resume` /
+    /// `trial.checkpoint` events (pid = node, tid = trial index). Run and
+    /// resume records carry a `command_hash` so a trace alone proves a
+    /// resume continued the byte-identical command it paused with.
+    pub fn set_obs(&mut self, obs: FlightRecorder) {
+        self.obs = obs;
     }
 
     /// The [`SearchDriverConfig`] a recipe experiment describes: the
@@ -282,6 +295,7 @@ impl SearchDriver {
             seed: self.cfg.search.seed,
             ..FleetConfig::default()
         });
+        engine.set_obs(self.obs.clone());
         engine.run(&mut TrialWorkload { d: self })?;
         // bill whatever is still alive at the last processed event
         let end = engine.now();
@@ -357,6 +371,13 @@ impl SearchDriver {
             if self.trials[ti].last_node == Some(nid) {
                 self.resumed_same_node += 1;
             }
+            if self.obs.is_enabled() {
+                let t = &self.trials[ti];
+                self.obs.event_at("trial.resume", fleet.now().as_nanos(), nid, ti as u64, vec![
+                    ("step", t.step.into()),
+                    ("command_hash", hash64(&t.command).into()),
+                ]);
+            }
         } else if self.trials[ti].state == TrialState::Pending {
             self.metrics.counter("search.trials_started").inc();
         }
@@ -403,13 +424,40 @@ impl SearchDriver {
         raw.min(t.seg_target.saturating_sub(t.seg_start_step))
     }
 
-    fn save_checkpoint(&mut self, ti: usize, step: u64, loss: f64) -> Result<()> {
+    fn save_checkpoint(&mut self, now: SimTime, ti: usize, step: u64, loss: f64) -> Result<()> {
         let blob = self.trials[ti].blob(step, loss);
         self.ckpts.save(self.trials[ti].task, step, loss as f32, &blob)?;
         self.trials[ti].ckpt_step = Some(step);
         self.checkpoints += 1;
         self.metrics.counter("search.checkpoints").inc();
+        if self.obs.is_enabled() {
+            let pid = self.trials[ti].last_node.unwrap_or(0);
+            self.obs.event_at("trial.checkpoint", now.as_nanos(), pid, ti as u64, vec![
+                ("step", step.into()),
+                ("loss", loss.into()),
+            ]);
+        }
         Ok(())
+    }
+
+    /// Record the just-ended run segment `[seg_started_at, now]` of trial
+    /// `ti` as a `trial.run` span (no-op when the recorder is off).
+    fn record_segment(&self, now: SimTime, ti: usize, nid: NodeId) {
+        if !self.obs.is_enabled() {
+            return;
+        }
+        let t = &self.trials[ti];
+        self.obs.span_at(
+            "trial.run",
+            t.seg_started_at.as_nanos(),
+            now.as_nanos(),
+            nid,
+            ti as u64,
+            vec![
+                ("from_step", t.seg_start_step.into()),
+                ("command_hash", hash64(&t.command).into()),
+            ],
+        );
     }
 }
 
@@ -439,6 +487,7 @@ impl FleetWorkload for TrialWorkload<'_> {
         if d.running.get(&nid) != Some(&ti) {
             return Ok(());
         }
+        let now = fleet.now();
         let (step, executed) = {
             let t = &mut d.trials[ti];
             let executed = t.seg_target - t.seg_start_step;
@@ -446,9 +495,10 @@ impl FleetWorkload for TrialWorkload<'_> {
             t.lifetime_steps += executed;
             (t.step, executed)
         };
+        d.record_segment(now, ti, nid);
         d.total_steps += executed;
         let loss = d.curves[ti].loss_at(step);
-        d.save_checkpoint(ti, step, loss)?;
+        d.save_checkpoint(now, ti, step, loss)?;
         d.trials[ti].last_loss = loss;
         if loss < d.best_observed {
             d.best_observed = loss;
@@ -507,15 +557,22 @@ impl FleetWorkload for TrialWorkload<'_> {
                 t.lifetime_steps += done;
                 t.step
             };
+            d.record_segment(now, ti, nid);
             d.total_steps += done;
             let loss = d.curves[ti].loss_at(step);
-            d.save_checkpoint(ti, step, loss)?;
+            d.save_checkpoint(now, ti, step, loss)?;
             let t = &mut d.trials[ti];
             t.last_loss = loss;
             t.state = TrialState::Paused;
             t.pauses += 1;
             d.pauses += 1;
             d.metrics.counter("search.pauses").inc();
+            if d.obs.is_enabled() {
+                d.obs.event_at("trial.pause", now.as_nanos(), nid, ti as u64, vec![
+                    ("reason", "notice".into()),
+                    ("step", step.into()),
+                ]);
+            }
             d.queue.push_front(ti);
         }
         d.dispatch(fleet)
@@ -529,6 +586,7 @@ impl FleetWorkload for TrialWorkload<'_> {
         if let Some(ti) = d.running.remove(&nid) {
             let now = fleet.now();
             let done = d.partial_steps(now, ti);
+            d.record_segment(now, ti, nid);
             let t = &mut d.trials[ti];
             let reached = t.seg_start_step + done;
             t.lifetime_steps += done;
@@ -540,6 +598,12 @@ impl FleetWorkload for TrialWorkload<'_> {
             t.pauses += 1;
             d.pauses += 1;
             d.metrics.counter("search.pauses").inc();
+            if d.obs.is_enabled() {
+                d.obs.event_at("trial.pause", now.as_nanos(), nid, ti as u64, vec![
+                    ("reason", "kill".into()),
+                    ("lost_steps", (reached - resume_from).into()),
+                ]);
+            }
             d.queue.push_front(ti);
         }
         if d.cfg.replace_preempted && d.terminal < d.trials.len() {

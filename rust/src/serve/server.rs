@@ -23,6 +23,7 @@ use crate::{Error, Result};
 
 use super::backend::BatchBackend;
 use super::queue::BoundedQueue;
+use crate::obs::FlightRecorder;
 
 /// Configuration of a threaded serving stack.
 #[derive(Debug, Clone)]
@@ -106,6 +107,17 @@ impl ServeStack {
     where
         F: Fn(usize) -> Box<dyn BatchBackend>,
     {
+        Self::start_with_obs(cfg, make_backend, FlightRecorder::disabled())
+    }
+
+    /// [`ServeStack::start`] with a flight recorder attached: each worker
+    /// records a `serve.batch` assembly event (fill, close reason, oldest
+    /// queue wait) and a `serve.batch_execute` span around the backend
+    /// call, on its own pid track (replica `i` → pid `i + 1`).
+    pub fn start_with_obs<F>(cfg: ServerConfig, make_backend: F, obs: FlightRecorder) -> Self
+    where
+        F: Fn(usize) -> Box<dyn BatchBackend>,
+    {
         let queue = Arc::new(BoundedQueue::new(cfg.queue_depth.max(1)));
         let stats = ServeStats::default();
         let mut workers = Vec::with_capacity(cfg.workers);
@@ -113,6 +125,8 @@ impl ServeStack {
             let mut backend = make_backend(i);
             let queue = queue.clone();
             let stats = stats.clone();
+            let obs = obs.clone();
+            let pid = (i + 1) as u32;
             let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
             let delay = cfg.max_batch_delay;
             workers.push(std::thread::spawn(move || {
@@ -124,14 +138,34 @@ impl ServeStack {
                     stats.queue_depth.set(queue.len() as i64);
                     stats.batches.inc();
                     stats.batch_fill.record(batch.len() as f64);
+                    let mut oldest_wait_s: f64 = 0.0;
                     for p in &batch {
-                        stats
-                            .queue_wait_s
-                            .record(closed_at.duration_since(p.admitted_at).as_secs_f64());
+                        let wait = closed_at.duration_since(p.admitted_at).as_secs_f64();
+                        oldest_wait_s = oldest_wait_s.max(wait);
+                        stats.queue_wait_s.record(wait);
+                    }
+                    if obs.is_enabled() {
+                        obs.event("serve.batch", pid, 0, vec![
+                            ("fill", batch.len().into()),
+                            (
+                                "close",
+                                if batch.len() >= max_batch { "size" } else { "deadline" }
+                                    .into(),
+                            ),
+                            ("oldest_wait_s", oldest_wait_s.into()),
+                        ]);
                     }
                     let rows: Vec<&[i32]> =
                         batch.iter().map(|p| p.tokens.as_slice()).collect();
-                    match backend.infer(&rows) {
+                    let outcome = {
+                        let _exec = obs.is_enabled().then(|| {
+                            obs.span("serve.batch_execute", pid, 0, vec![
+                                ("fill", batch.len().into()),
+                            ])
+                        });
+                        backend.infer(&rows)
+                    };
+                    match outcome {
                         Ok(outs) => {
                             let done = Instant::now();
                             for (p, out) in batch.into_iter().zip(outs) {
@@ -282,5 +316,39 @@ mod tests {
             "with 64 queued and a single worker, batches must exceed size 1: {fill:?}"
         );
         s.shutdown();
+    }
+
+    #[test]
+    fn workers_record_batch_assembly_and_execute_spans() {
+        let rec = FlightRecorder::wallclock(4096);
+        let s = ServeStack::start_with_obs(
+            ServerConfig {
+                queue_depth: 1024,
+                max_batch: 8,
+                max_batch_delay: Duration::from_millis(2),
+                workers: 2,
+            },
+            |_| -> Box<dyn BatchBackend> {
+                Box::new(SyntheticBackend::new(0.0, 0.0, 8, false))
+            },
+            rec.clone(),
+        );
+        let handles: Vec<_> = (0..40).map(|i| s.submit(vec![i]).unwrap()).collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let batches = s.stats.batches.get();
+        s.shutdown();
+        let records = rec.snapshot();
+        let count = |n: &str| records.iter().filter(|r| r.name == n).count() as u64;
+        assert_eq!(count("serve.batch"), batches);
+        assert_eq!(count("serve.batch_execute"), batches);
+        for r in records.iter().filter(|r| r.name == "serve.batch") {
+            assert!(r.pid >= 1 && r.pid <= 2, "replica pids start at 1: {}", r.pid);
+            let close = r.arg("close").and_then(|a| a.as_str()).unwrap().to_string();
+            assert!(close == "size" || close == "deadline");
+            assert!(r.arg("fill").and_then(|a| a.as_u64()).unwrap() >= 1);
+            assert!(r.arg("oldest_wait_s").and_then(|a| a.as_f64()).unwrap() >= 0.0);
+        }
     }
 }

@@ -27,6 +27,7 @@ use crate::cloud::InstanceType;
 use crate::fleet::{FleetConfig, FleetEngine, FleetStats, FleetWorkload, LaunchSpec, NodeId,
                    PriceTraceConfig};
 use crate::metrics::{Histogram, HistogramSnapshot};
+use crate::obs::FlightRecorder;
 use crate::sim::{ClosedLoop, OpenLoop, RateSchedule, SimRng, SimTime};
 use crate::Result;
 
@@ -190,12 +191,22 @@ const TOK_USER0: u64 = 3;
 pub struct ServeSim {
     cfg: ServeSimConfig,
     stats: FleetStats,
+    obs: FlightRecorder,
 }
 
 impl ServeSim {
     /// Build a simulator for one scenario configuration.
     pub fn new(cfg: ServeSimConfig) -> Self {
-        Self { cfg, stats: FleetStats::default() }
+        Self { cfg, stats: FleetStats::default(), obs: FlightRecorder::disabled() }
+    }
+
+    /// Attach a flight recorder before [`ServeSim::run`]: the fleet
+    /// engine records node lifecycle + work events into it, and the
+    /// serving layer adds batch-execute spans (fill, close reason, oldest
+    /// wait), shed events, and autoscaler decisions — all stamped with
+    /// virtual time (one pid per replica).
+    pub fn set_obs(&mut self, obs: FlightRecorder) {
+        self.obs = obs;
     }
 
     /// Fleet-level counters of the last run (preemptions, storm firing
@@ -240,7 +251,9 @@ impl ServeSim {
             sched: None,
             last_completion: SimTime::ZERO,
             trace: Vec::new(),
+            obs: self.obs.clone(),
         };
+        engine.set_obs(self.obs.clone());
         engine.run(&mut w)?;
         let end = engine.now().max(w.load_end);
         let final_live = engine.shutdown(end);
@@ -310,6 +323,7 @@ struct ServeWorkload<'a> {
     sched: Option<RateSchedule>,
     last_completion: SimTime,
     trace: Vec<TickTrace>,
+    obs: FlightRecorder,
 }
 
 impl ServeWorkload<'_> {
@@ -335,6 +349,7 @@ impl ServeWorkload<'_> {
         self.offered += 1;
         if self.queue.len() >= self.cfg.queue_depth {
             self.shed += 1;
+            self.obs.event_at("serve.shed", now.as_nanos(), 0, 0, vec![]);
             // a shed closed-loop user retries after thinking
             if let (Some(cl), Some(u)) = (self.think, user) {
                 self.schedule_user(fleet, cl, u);
@@ -410,12 +425,23 @@ impl ServeWorkload<'_> {
         match self.scaler.decide(&sig) {
             ScaleDecision::Hold => {}
             ScaleDecision::Up(n) => {
+                if self.obs.is_enabled() {
+                    self.obs.event_at("serve.scale_up", now.as_nanos(), 0, 0, vec![
+                        ("n", n.into()),
+                        ("queue_depth", sig.queue_depth.into()),
+                    ]);
+                }
                 for _ in 0..n {
                     self.launch_replica(fleet, false);
                     self.scale_ups += 1;
                 }
             }
             ScaleDecision::Down(n) => {
+                if self.obs.is_enabled() {
+                    self.obs.event_at("serve.scale_down", now.as_nanos(), 0, 0, vec![
+                        ("n", n.into()),
+                    ]);
+                }
                 // drain the newest live replicas first (LIFO release)
                 let victims: Vec<NodeId> = fleet.serving_ids().rev().take(n).collect();
                 for rid in victims {
@@ -482,12 +508,21 @@ impl ServeWorkload<'_> {
                 }
                 return;
             }
+            let closed_by_size = self.queue.len() >= self.cfg.batch.max_batch;
             let take = self.cfg.batch.take(self.queue.len());
             let batch: Vec<Req> = self.queue.drain(..take).collect();
             self.batches += 1;
             self.batched_reqs += batch.len() as u64;
             let service = self.cfg.service_base_s
                 + self.cfg.service_per_item_s * batch.len() as f64;
+            if self.obs.is_enabled() {
+                let end = now + SimTime::from_secs_f64(service);
+                self.obs.span_at("serve.batch", now.as_nanos(), end.as_nanos(), rid, 0, vec![
+                    ("fill", batch.len().into()),
+                    ("close", if closed_by_size { "size" } else { "deadline" }.into()),
+                    ("oldest_wait_s", (now.as_secs_f64() - oldest.as_secs_f64()).into()),
+                ]);
+            }
             self.busy.insert(rid, batch);
             fleet.add_busy(rid, service);
             fleet.schedule_work(rid, now + SimTime::from_secs_f64(service), 0);
@@ -753,6 +788,46 @@ mod tests {
             ServeSim::new(cfg).run(Load::Open(OpenLoop::poisson(1200.0)), 60.0).unwrap()
         };
         assert_eq!(run(), run(), "same seed, bit-identical report");
+    }
+
+    /// The flight recorder is a pure observer: attaching it must not
+    /// move a single event, and the batch spans it captures must agree
+    /// with the report's own counters.
+    #[test]
+    fn obs_does_not_perturb_the_run_and_batch_spans_are_well_formed() {
+        use crate::obs::{FlightRecorder, RecordKind};
+
+        let bare = ServeSim::new(storm_cfg())
+            .run(Load::Open(OpenLoop::poisson(1200.0)), 60.0)
+            .unwrap();
+
+        let rec = FlightRecorder::sim(1 << 20, crate::sim::SimClock::new());
+        let mut sim = ServeSim::new(storm_cfg());
+        sim.set_obs(rec.clone());
+        let traced = sim.run(Load::Open(OpenLoop::poisson(1200.0)), 60.0).unwrap();
+        assert_eq!(bare, traced, "recording must not perturb the timeline");
+
+        let records = rec.snapshot();
+        assert_eq!(rec.dropped(), 0, "capacity sized to hold the whole run");
+        let batches: Vec<_> =
+            records.iter().filter(|r| r.name == "serve.batch").collect();
+        assert!(!batches.is_empty());
+        let mut fill_sum = 0;
+        for b in &batches {
+            assert!(matches!(b.kind, RecordKind::Span { .. }));
+            assert!(b.end_ns() > b.ts_ns, "a batch always takes service time");
+            let close = b.arg("close").expect("close reason").to_string();
+            assert!(close == "size" || close == "deadline", "close={close}");
+            fill_sum += b.arg("fill").and_then(|a| a.as_u64()).expect("fill");
+        }
+        // every admitted request is batched exactly once per dispatch;
+        // requeued requests are dispatched again after the kill
+        assert_eq!(fill_sum, traced.completed + traced.requeued);
+        // the storm's seven reclaimed replicas all left kill records
+        let kills = records.iter().filter(|r| r.name == "node.kill").count();
+        assert_eq!(kills as u64, traced.preemptions);
+        let sheds = records.iter().filter(|r| r.name == "serve.shed").count();
+        assert_eq!(sheds as u64, traced.shed);
     }
 
     #[test]

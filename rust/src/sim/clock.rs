@@ -107,6 +107,12 @@ impl SimClock {
         SimTime(self.now_ns.load(Ordering::Acquire))
     }
 
+    /// The current virtual time in raw nanoseconds (the form the
+    /// [`crate::obs`] flight recorder timestamps records with).
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns.load(Ordering::Acquire)
+    }
+
     /// Advance to `t`. Time never goes backwards; a stale `t` is a no-op.
     pub fn advance_to(&self, t: SimTime) {
         self.now_ns.fetch_max(t.0, Ordering::AcqRel);

@@ -128,19 +128,83 @@ fn prop_fleet_conservation_under_price_traces() {
     );
 }
 
-/// The storm-timing bugfix pinned end to end: all three virtual-time
-/// drivers schedule a `t=60 s` storm against the SAME origin — engine
-/// start — so the wave lands at the identical virtual instant in every
-/// scenario, regardless of provisioning latency or first dispatch.
+/// One driver's flight-recorder trace, checked for the full preemption
+/// protocol: the storm lands at exactly `t=60 s`, exactly two nodes get
+/// the notice at that instant, and every victim either ends in a hard
+/// kill — with `node.notice` → `node.drain` → `node.kill` in record
+/// order, the drain span stretching from the notice to the kill at
+/// `t=65 s` — or exits early through a voluntary `node.release` inside
+/// the notice window (a drained replica finishing its last batch).
+fn assert_storm_protocol(records: &[hyper_dist::obs::Record], label: &str) {
+    use hyper_dist::obs::RecordKind;
+
+    let storm: Vec<_> = records.iter().filter(|r| r.name == "fleet.storm").collect();
+    assert_eq!(storm.len(), 1, "{label}: exactly one storm record");
+    assert_eq!(storm[0].ts_ns, 60_000_000_000, "{label}: storm fired off engine start");
+    assert_eq!(storm[0].arg("kills").and_then(|a| a.as_u64()), Some(2), "{label}");
+
+    let victims: Vec<u32> = records
+        .iter()
+        .filter(|r| r.name == "node.notice")
+        .map(|r| {
+            assert_eq!(r.ts_ns, 60_000_000_000, "{label}: notices land with the storm");
+            r.pid
+        })
+        .collect();
+    assert_eq!(victims.len(), 2, "{label}: the wave noticed 2 nodes");
+
+    for pid in victims {
+        let find = |name: &str| records.iter().find(|r| r.name == name && r.pid == pid);
+        let notice = find("node.notice").expect("victim has a notice");
+        match find("node.kill") {
+            Some(kill) => {
+                let drain = find("node.drain")
+                    .unwrap_or_else(|| panic!("{label}: node {pid} killed without drain"));
+                assert!(
+                    notice.seq < drain.seq && drain.seq < kill.seq,
+                    "{label}: node {pid} must record notice -> drain -> kill in order"
+                );
+                assert_eq!(kill.ts_ns, 65_000_000_000, "{label}: hard kill after 5s notice");
+                assert_eq!(drain.ts_ns, notice.ts_ns, "{label}: drain opens at the notice");
+                assert_eq!(drain.end_ns(), kill.ts_ns, "{label}: drain closes at the kill");
+                assert_eq!(drain.kind, RecordKind::Span { dur_ns: 5_000_000_000 });
+                assert_eq!(drain.arg("noticed").and_then(|a| a.as_u64()), Some(1));
+            }
+            None => {
+                // drained to completion before the hard kill landed
+                let release = find("node.release").unwrap_or_else(|| {
+                    panic!("{label}: noticed node {pid} neither killed nor released")
+                });
+                assert!(release.seq > notice.seq, "{label}: release follows the notice");
+                assert!(
+                    release.ts_ns <= 65_000_000_000,
+                    "{label}: a voluntary exit beats the hard kill"
+                );
+            }
+        }
+    }
+}
+
+/// The storm-timing bugfix pinned end to end — now from the flight
+/// recorder itself: all three virtual-time drivers schedule a `t=60 s`
+/// storm against the SAME origin (engine start), so each driver's trace
+/// must carry the identical `fleet.storm` instant and the full
+/// notice→drain→kill protocol for every victim; the search trace must
+/// additionally prove (by command hash) that every resume continued the
+/// byte-identical command its trial ran before the preemption.
 #[test]
 fn storm_at_60s_fires_at_the_same_instant_in_all_three_drivers() {
+    use hyper_dist::obs::{FlightRecorder, Record};
     use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
     use hyper_dist::search::{CurveConfig, SearchDriver, SearchDriverConfig};
     use hyper_dist::serve::{Load, ServeSim, ServeSimConfig};
-    use hyper_dist::sim::OpenLoop;
+    use hyper_dist::sim::{OpenLoop, SimClock};
     use hyper_dist::workflow::{Recipe, Workflow};
 
-    let storm = vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 0.0 }];
+    let recorder = || FlightRecorder::sim(1 << 16, SimClock::new());
+    // a 5s notice makes the drain window observable: notice at 60,
+    // hard kill at 65, voluntary exits allowed in between
+    let storm = vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 5.0 }];
     // deliberately slow, exact provisioning: nodes are only ready at
     // t=55 and first dispatch follows — a "time since dispatch" or
     // "time since ready" origin would skew the firing time
@@ -165,6 +229,8 @@ experiments:
         storm: storm.clone(),
         ..Default::default()
     });
+    let dag_rec = recorder();
+    dag.set_obs(dag_rec.clone());
     let r = dag.run(&mut wf).unwrap();
     assert!(r.workflow_complete);
 
@@ -176,6 +242,8 @@ experiments:
         storm: storm.clone(),
         ..Default::default()
     });
+    let serve_rec = recorder();
+    serve.set_obs(serve_rec.clone());
     let sr = serve.run(Load::Open(OpenLoop::poisson(50.0)), 90.0).unwrap();
     assert_eq!(sr.completed, sr.admitted);
 
@@ -201,19 +269,50 @@ experiments:
         "t {p}",
     )
     .unwrap();
+    let search_rec = recorder();
+    search.set_obs(search_rec.clone());
     let xr = search.run().unwrap();
     assert_eq!(xr.lost, 0);
 
-    let fired = [
-        dag.fleet_stats().storms_fired_at_s.clone(),
-        serve.fleet_stats().storms_fired_at_s.clone(),
-        search.fleet_stats().storms_fired_at_s.clone(),
-    ];
-    for (i, f) in fired.iter().enumerate() {
-        assert_eq!(f, &vec![60.0], "driver {i} fired its storm off the shared origin");
-    }
+    // every driver's trace shows the same wave at the same instant, with
+    // the full preemption protocol per victim
+    let dag_records = dag_rec.snapshot();
+    let serve_records = serve_rec.snapshot();
+    let search_records = search_rec.snapshot();
+    assert_storm_protocol(&dag_records, "dag");
+    assert_storm_protocol(&serve_records, "serve");
+    assert_storm_protocol(&search_records, "search");
+    let storm_ts = |records: &[Record]| {
+        records.iter().find(|r| r.name == "fleet.storm").expect("storm record").ts_ns
+    };
+    assert_eq!(storm_ts(&dag_records), storm_ts(&serve_records));
+    assert_eq!(storm_ts(&serve_records), storm_ts(&search_records));
+
+    // checkpoint/resume integrity, proven from the trace alone: every
+    // resume carries the command hash of the byte-identical command its
+    // trial's run segments carry — a resume never continues someone
+    // else's command
+    let resumes: Vec<_> =
+        search_records.iter().filter(|r| r.name == "trial.resume").collect();
     assert!(
-        fired[0] == fired[1] && fired[1] == fired[2],
-        "all three scenarios see the wave at the same virtual instant: {fired:?}"
+        !resumes.is_empty(),
+        "the storm paused trials that must resume ({} pauses recorded)",
+        xr.pauses
     );
+    for resume in resumes {
+        let hash = resume.arg("command_hash").and_then(|a| a.as_u64()).unwrap();
+        let runs: Vec<_> = search_records
+            .iter()
+            .filter(|r| r.name == "trial.run" && r.tid == resume.tid)
+            .collect();
+        assert!(!runs.is_empty(), "resumed trial {} has run segments", resume.tid);
+        for run in runs {
+            assert_eq!(
+                run.arg("command_hash").and_then(|a| a.as_u64()),
+                Some(hash),
+                "trial {}: resume must continue the byte-identical command",
+                resume.tid
+            );
+        }
+    }
 }
