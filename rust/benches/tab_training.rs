@@ -7,15 +7,20 @@
 //! framework checkpoints with no code changes.
 //!
 //! Reproduction: device models carry the 50x; the cost ledger reproduces
-//! the efficiency ratio; a preemption-heavy run shows checkpoint/resume
-//! keeping total useful work intact; data-parallel scaling uses the ring
-//! allreduce model.
+//! the efficiency ratio; a preemption-heavy run of the gang-scheduled
+//! training workload ([`hyper_dist::train::TrainDriver`]) shows
+//! drain-checkpoint/resume keeping total useful work intact;
+//! data-parallel scaling uses the ring allreduce model.
 
-use hyper_dist::cloud::{InstanceType, SpotMarketConfig};
+use std::sync::Arc;
+
+use hyper_dist::cloud::{InstanceType, ProvisionerConfig, SpotMarketConfig};
 use hyper_dist::cluster::Master;
+use hyper_dist::config::TrainConfig;
 use hyper_dist::metrics::CostLedger;
 use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
-use hyper_dist::storage::S3Profile;
+use hyper_dist::storage::{MemStore, S3Profile};
+use hyper_dist::train::{TrainDriver, TrainDriverConfig, TrainReport};
 use hyper_dist::util::bench::{emit_json, header, row, section};
 
 const JOB_FLOPS: f64 = 5.0e18; // a YoloV3-on-COCO-sized training job
@@ -52,8 +57,31 @@ fn main() {
     assert!((v100.spot_usd_per_hour - 0.95).abs() < 1e-9);
 
     // --- spot preemption + checkpointing ---------------------------------
-    section("spot fault tolerance: checkpointed training under preemption");
-    header("mean TTP", &["makespan h", "preempt", "resched", "cost $", "vs stable"]);
+    section("spot fault tolerance: an 8-node elastic gang under preemption");
+    header("mean TTP", &["makespan s", "preempt", "shrinks", "restores", "cost $", "vs stable"]);
+    let stable = gang_run(1e12);
+    for (label, ttp) in [("stable", 1e12), ("4 h", 4.0 * 3600.0), ("1 h", 3600.0),
+                         ("10 min", 600.0)] {
+        let r = gang_run(ttp);
+        assert_eq!(r.committed_steps, 200, "all 200 steps commit (ttp={label}): {r:?}");
+        assert_eq!(r.lost_steps, 0, "zero lost steps (ttp={label})");
+        assert_eq!(r.replayed_steps, 0, "the 120 s notice banks every drain (ttp={label})");
+        row(
+            label,
+            &[
+                format!("{:.0}", r.makespan_s),
+                format!("{}", r.preemptions),
+                format!("{}", r.shrinks),
+                format!("{}", r.restores),
+                format!("{:.2}", r.cost_usd),
+                format!("{:.2}x", r.makespan_s / stable.makespan_s),
+            ],
+        );
+    }
+    println!("\n(drain checkpoints inside the notice window: no step lost, no step replayed)");
+
+    // --- on-demand vs spot cost --------------------------------------------
+    section("on-demand vs spot (stable market): the 3x bill cut");
     let recipe = r#"
 name: yolo-train
 experiments:
@@ -66,26 +94,6 @@ experiments:
     params: { lr: { log_uniform: [1.0e-4, 1.0e-2] } }
     work: { flops_per_task: 2.5e17 }
 "#;
-    let stable = run(recipe, 1e12, 21);
-    for (label, ttp) in [("stable", 1e12), ("4 h", 4.0 * 3600.0), ("1 h", 3600.0),
-                         ("20 min", 1200.0)] {
-        let r = run(recipe, ttp, 21);
-        assert!(r.workflow_complete, "must finish despite preemptions (ttp={label})");
-        row(
-            label,
-            &[
-                format!("{:.2}", r.makespan_s / 3600.0),
-                format!("{}", r.preemptions),
-                format!("{}", r.reschedules),
-                format!("{:.0}", r.total_cost_usd),
-                format!("{:.2}x", r.makespan_s / stable.makespan_s),
-            ],
-        );
-    }
-    println!("\n(checkpoint every 300 s: lost work bounded, all 8 trainings finish)");
-
-    // --- on-demand vs spot cost --------------------------------------------
-    section("on-demand vs spot (stable market): the 3x bill cut");
     let od_recipe = recipe.replace("    spot: true\n", "");
     let od = run(&od_recipe, 1e12, 22);
     let sp = run(recipe, 1e12, 22);
@@ -99,8 +107,8 @@ experiments:
         &[
             ("v100_vs_k80_speedup_x", speedup),
             ("v100_vs_k80_efficiency_x", efficiency),
-            ("stable_makespan_h", stable.makespan_s / 3600.0),
-            ("stable_cost_usd", stable.total_cost_usd),
+            ("gang_stable_makespan_s", stable.makespan_s),
+            ("gang_stable_cost_usd", stable.cost_usd),
             ("od_over_spot_cost_x", od.total_cost_usd / sp.total_cost_usd),
         ],
     );
@@ -117,6 +125,23 @@ experiments:
         assert!(ar < ps, "allreduce must beat the S3 parameter-server fallback");
     }
     println!("\ntab_training OK");
+}
+
+/// 200 gang-coupled steps on 8 V100 spot nodes (the `TrainConfig`
+/// defaults: 512 shards x 20 ms, 100 MB gradients) against a Poisson
+/// spot market with the AWS-style 120 s notice.
+fn gang_run(mean_ttp_s: f64) -> TrainReport {
+    let cfg = TrainDriverConfig {
+        train: TrainConfig { total_steps: 200, seed: 21, ..TrainConfig::default() },
+        provisioner: ProvisionerConfig {
+            warm_cache_prob: 1.0,
+            jitter: 0.0,
+            ..Default::default()
+        },
+        spot_market: Some(SpotMarketConfig { mean_ttp_s, notice_s: 120.0 }),
+        ..Default::default()
+    };
+    TrainDriver::new(cfg, Arc::new(MemStore::new())).unwrap().run().unwrap()
 }
 
 fn run(recipe: &str, mean_ttp_s: f64, seed: u64) -> hyper_dist::scheduler::RunReport {

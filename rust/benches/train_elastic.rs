@@ -1,0 +1,199 @@
+//! Elastic gang-scheduled training through preemption (ISSUE 8).
+//!
+//! Acceptance criteria:
+//!
+//! 1. A 6-of-8-node preemption storm loses **zero** committed steps: the
+//!    gang drain-checkpoints inside the notice window, re-forms at the
+//!    surviving world size, keeps committing, and grows back to full
+//!    strength when replacements arrive — no restore, no replayed steps.
+//! 2. On the same price trace (a spike that defers the initial capacity)
+//!    and the same storm, the elastic gang's goodput — step-node units
+//!    per dollar from the `CostLedger` — is strictly above the rigid
+//!    gang's, which blocks until full capacity returns.
+//! 3. The step-time curve carries the ring-allreduce bandwidth term:
+//!    doubling the gang never halves the step time.
+//!
+//! All three sections are virtual-time deterministic; the exact-integer
+//! metrics are anchored in BENCH_fleet.json.
+
+use std::sync::Arc;
+
+use hyper_dist::cloud::{NetworkModel, PriceTrace, ProvisionerConfig, StormEvent};
+use hyper_dist::config::{GangMode, TrainConfig};
+use hyper_dist::fleet::PriceTraceConfig;
+use hyper_dist::storage::MemStore;
+use hyper_dist::train::{StepModel, TrainDriver, TrainDriverConfig, TrainReport};
+use hyper_dist::util::bench::{emit_json, header, row, section};
+
+/// An 8-wide gang with unit-time shards and a free allreduce, on the
+/// exact provisioner: step times are `ceil(8/N)` seconds, so every
+/// commit instant is hand-checkable.
+fn cfg(mode: GangMode, total_steps: u64) -> TrainDriverConfig {
+    TrainDriverConfig {
+        train: TrainConfig {
+            world_size: 8,
+            gang_min: 2,
+            total_steps,
+            partitions: 8,
+            sample_time_s: 1.0,
+            model_bytes: 0,
+            checkpoint_every_steps: 5,
+            keep_last_k: 2,
+            mode,
+            spot: true,
+            instance: "p3.2xlarge".into(),
+            seed: 7,
+        },
+        net: NetworkModel { intra_vpc_latency_s: 0.0, node_bw: 1.0 },
+        provisioner: ProvisionerConfig { warm_cache_prob: 1.0, jitter: 0.0, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn run(cfg: TrainDriverConfig) -> TrainReport {
+    TrainDriver::new(cfg, Arc::new(MemStore::new())).unwrap().run().unwrap()
+}
+
+fn print_run(label: &str, r: &TrainReport) {
+    row(
+        label,
+        &[
+            format!("{}", r.committed_steps),
+            format!("{}", r.step_node_units),
+            format!("{:.2}", r.cost_usd),
+            format!("{:.1}", r.goodput_per_usd),
+            format!("{}..{}", r.min_world, r.max_world),
+        ],
+    );
+}
+
+fn main() {
+    // --- step-time vs gang size: the allreduce bandwidth term ----------
+    section("step time vs gang size (1024 shards x 20 ms, 100 MB grads, default net)");
+    let m = StepModel {
+        partitions: 1024,
+        sample_time_s: 0.02,
+        model_bytes: 100 << 20,
+        net: NetworkModel::default(),
+    };
+    header("workers", &["compute s", "allreduce ms", "step s", "vs 1 node"]);
+    for n in [1usize, 2, 4, 8, 16, 32] {
+        row(
+            &format!("{n}"),
+            &[
+                format!("{:.2}", m.compute_time(n)),
+                format!("{:.0}", m.allreduce_time(n) * 1e3),
+                format!("{:.3}", m.step_time(n)),
+                format!("{:.2}x", m.step_time(1) / m.step_time(n)),
+            ],
+        );
+    }
+    for n in [1usize, 2, 4, 8, 16] {
+        let (t, t2) = (m.step_time(n), m.step_time(2 * n));
+        assert!(t2 < t, "more workers must still shorten the step ({n} -> {})", 2 * n);
+        assert!(
+            t2 > 0.5 * t,
+            "doubling {n} -> {} must NOT halve the step: the ring term floors it",
+            2 * n
+        );
+    }
+    let speedup_8 = m.step_time(1) / m.step_time(8);
+    println!("\n(8 nodes give {speedup_8:.2}x, not 8x: 2(N-1)/N * bytes/bw survives scaling)");
+
+    // --- zero lost steps through a 6-of-8 storm ------------------------
+    section("6-of-8 storm at t=60.5 s (5 s notice): elastic gang, 40 steps");
+    let mut storm_cfg = cfg(GangMode::Elastic, 40);
+    storm_cfg.storm = vec![StormEvent { at_s: 60.5, kills: 6, notice_s: 5.0 }];
+    let s = run(storm_cfg);
+    header("mode", &["steps", "units", "cost $", "units/$", "world"]);
+    print_run("elastic", &s);
+    println!(
+        "  shrinks {}  grows {}  aborted {}  checkpoints {}  restores {}  replayed {}  \
+         makespan {:.1} s",
+        s.shrinks, s.grows, s.aborted_steps, s.checkpoints, s.restores, s.replayed_steps,
+        s.makespan_s
+    );
+    assert_eq!(s.committed_steps, 40, "every step commits: {s:?}");
+    assert_eq!(s.lost_steps, 0, "zero lost steps through the storm");
+    assert_eq!(s.replayed_steps, 0, "drain checkpoints banked all progress");
+    assert_eq!(s.restores, 0, "two survivors kept the state alive");
+    assert_eq!(s.full_restarts, 0, "nobody went back to step 0");
+    assert_eq!(s.preemptions, 6, "the storm reclaimed 6 of 8 nodes");
+    assert_eq!(s.shrinks, 6, "one shrink per noticed member");
+    assert_eq!(s.grows, 1, "one grow when the replacements arrive together");
+    assert_eq!(s.aborted_steps, 7, "6 storm aborts + 1 eager-grow abort");
+    assert_eq!((s.min_world, s.max_world), (2, 8), "rode the storm at world 2");
+    assert_eq!(s.step_node_units, 242, "5x8 + 13x2 + 22x8 member-steps");
+    assert_eq!(s.member_completions, 242, "every committed shard counted once");
+    assert_eq!(s.samples_processed, 40 * 8, "no sample skipped or read twice");
+    assert_eq!(s.checkpoints, 14, "8 periodic + 6 drain");
+    assert_eq!(s.nodes_launched, 14, "8 initial + 6 replacements");
+    assert_eq!(s.makespan_s, 137.5, "55 boot + 5x1s + 13x4s at world 2 + 22x1s");
+
+    // --- elastic vs rigid on the same price trace + storm --------------
+    section("elastic vs rigid: same price trace (spike defers boot), same storm, 200 s deadline");
+    let trace = PriceTrace::new(vec![(0.0, 0.30), (10.0, 0.05)]).unwrap();
+    let make = |mode| {
+        let mut c = cfg(mode, 100_000);
+        c.price_trace =
+            Some(PriceTraceConfig { trace: trace.clone(), bid_usd: 0.10, notice_s: 5.0 });
+        c.storm = vec![StormEvent { at_s: 100.5, kills: 6, notice_s: 5.0 }];
+        c.deadline_s = Some(200.0);
+        c
+    };
+    let mut ed = TrainDriver::new(make(GangMode::Elastic), Arc::new(MemStore::new())).unwrap();
+    let e = ed.run().unwrap();
+    let mut rd = TrainDriver::new(make(GangMode::Rigid), Arc::new(MemStore::new())).unwrap();
+    let r = rd.run().unwrap();
+    header("mode", &["steps", "units", "cost $", "units/$", "world"]);
+    print_run("elastic", &e);
+    print_run("rigid", &r);
+    println!(
+        "  goodput gap {:.1}% (elastic committed {} world-2 steps while rigid idled)",
+        100.0 * (e.goodput_per_usd / r.goodput_per_usd - 1.0),
+        e.committed_steps - r.committed_steps
+    );
+    assert_eq!(ed.fleet_stats().launches_deferred, 8, "the spike deferred the initial boot");
+    assert_eq!(rd.fleet_stats().launches_deferred, 8, "identically for the rigid run");
+    assert_eq!(e.committed_steps, 92, "35 pre-storm + 13 at world 2 + 44 post-grow");
+    assert_eq!(r.committed_steps, 79, "35 pre-storm + 0 while blocked + 44 after");
+    assert_eq!(e.step_node_units, 658, "elastic banked 26 units during the outage");
+    assert_eq!(r.step_node_units, 632);
+    assert_eq!((e.min_world, r.min_world), (2, 8), "only elastic stepped small");
+    assert_eq!((e.shrinks, r.shrinks), (6, 6), "both gangs saw the same storm");
+    assert_eq!((e.grows, r.grows), (1, 0), "rigid re-forms at 8, it never 'grows'");
+    assert_eq!((e.restores, r.restores), (0, 0), "survivors held state in both modes");
+    assert!(
+        (e.cost_usd - r.cost_usd).abs() < 1e-9,
+        "identical fleet history, identical bill: {} vs {}",
+        e.cost_usd,
+        r.cost_usd
+    );
+    assert!(
+        e.goodput_per_usd > r.goodput_per_usd,
+        "elastic goodput must beat rigid on the same trace: {} vs {}",
+        e.goodput_per_usd,
+        r.goodput_per_usd
+    );
+
+    emit_json(
+        "train_elastic",
+        &[
+            ("storm_committed_steps", s.committed_steps as f64),
+            ("storm_lost_steps", s.lost_steps as f64),
+            ("storm_replayed_steps", s.replayed_steps as f64),
+            ("storm_step_node_units", s.step_node_units as f64),
+            ("storm_shrinks", s.shrinks as f64),
+            ("storm_grows", s.grows as f64),
+            ("storm_min_world", s.min_world as f64),
+            ("storm_makespan_s", s.makespan_s),
+            ("elastic_committed_steps", e.committed_steps as f64),
+            ("rigid_committed_steps", r.committed_steps as f64),
+            ("elastic_step_node_units", e.step_node_units as f64),
+            ("rigid_step_node_units", r.step_node_units as f64),
+            ("elastic_over_rigid_goodput_x", e.goodput_per_usd / r.goodput_per_usd),
+            ("scaling_speedup_8x_x", speedup_8),
+        ],
+    );
+    println!("\ntrain_elastic OK");
+}

@@ -205,6 +205,100 @@ impl Default for SearchConfig {
     }
 }
 
+/// How a gang-scheduled training job reacts to losing members.
+///
+/// Read by [`crate::train`] and the `train:` stanza of workflow recipes.
+/// `Elastic` is the paper's preemptible-fleet posture (FfDL-style
+/// recovery: shrink, keep stepping, grow back); `Rigid` is the classic
+/// HPC gang that blocks until full capacity returns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GangMode {
+    /// Re-form at the surviving world size (≥ `gang_min`) and keep
+    /// committing steps; grow back when replacements arrive.
+    Elastic,
+    /// Block after any member loss until the gang is back at
+    /// `world_size`.
+    Rigid,
+}
+
+impl std::str::FromStr for GangMode {
+    type Err = Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Error> {
+        match s.to_ascii_lowercase().as_str() {
+            "elastic" => Ok(GangMode::Elastic),
+            "rigid" => Ok(GangMode::Rigid),
+            other => Err(Error::Recipe(format!("unknown gang mode {other:?}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for GangMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            GangMode::Elastic => "elastic",
+            GangMode::Rigid => "rigid",
+        })
+    }
+}
+
+/// Tunables of one gang-scheduled distributed training run: gang
+/// geometry, the data partition, the step-cost inputs, checkpoint
+/// cadence, and the fleet it runs on.
+///
+/// Read by [`crate::train::TrainDriver`]; recipes populate it from their
+/// `train:` stanza. Every knob is documented (defaults and the subsystem
+/// that reads it) in `docs/CONFIG.md`.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Full gang size (data-parallel world size, N).
+    pub world_size: usize,
+    /// Smallest world size an [`GangMode::Elastic`] gang re-forms at
+    /// after member loss (1..=`world_size`; ignored by `Rigid`).
+    pub gang_min: usize,
+    /// Steps the job must commit to finish.
+    pub total_steps: u64,
+    /// Data partitions resharded over the gang every step (each step
+    /// covers every partition exactly once).
+    pub partitions: u64,
+    /// Virtual seconds one node spends computing one partition.
+    pub sample_time_s: f64,
+    /// Gradient/model bytes exchanged by the per-step ring allreduce.
+    pub model_bytes: u64,
+    /// Save a `TrainCheckpoint` every this many committed steps (`0` =
+    /// only preemption-notice drain checkpoints).
+    pub checkpoint_every_steps: u64,
+    /// Keep only the newest `k` checkpoint blobs (`0` = unbounded).
+    pub keep_last_k: usize,
+    /// Elastic (shrink/grow) vs rigid (block at full capacity) recovery.
+    pub mode: GangMode,
+    /// Provision gang nodes on the spot market (vs on-demand).
+    pub spot: bool,
+    /// Instance type name from the catalog (e.g. `"p3.2xlarge"`).
+    pub instance: String,
+    /// Seed for the loss trajectory and the cloud models.
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            world_size: 8,
+            gang_min: 2,
+            total_steps: 100,
+            partitions: 512,
+            sample_time_s: 0.02,
+            model_bytes: 100 << 20,
+            checkpoint_every_steps: 10,
+            keep_last_k: 2,
+            mode: GangMode::Elastic,
+            spot: true,
+            instance: "p3.2xlarge".into(),
+            seed: 0,
+        }
+    }
+}
+
 /// Tunables of the observability layer: the [`crate::obs`] flight
 /// recorder's bound, the master switch, and where `hyper trace` (and the
 /// instrumented benches) write Chrome-trace exports.
@@ -306,6 +400,27 @@ mod tests {
         assert!(c.max_steps >= c.rung_first_steps);
         assert!(c.step_time_s > 0.0);
         assert_eq!(c.algo, SearchAlgo::Asha);
+    }
+
+    #[test]
+    fn gang_mode_parses_and_displays() {
+        for (s, m) in [("elastic", GangMode::Elastic), ("RIGID", GangMode::Rigid)] {
+            assert_eq!(s.parse::<GangMode>().unwrap(), m);
+        }
+        assert_eq!(GangMode::Elastic.to_string(), "elastic");
+        assert!(matches!("gangnam".parse::<GangMode>(), Err(Error::Recipe(_))));
+    }
+
+    #[test]
+    fn default_train_config_is_coherent() {
+        let c = TrainConfig::default();
+        assert!(c.world_size >= 1);
+        assert!((1..=c.world_size).contains(&c.gang_min));
+        assert!(c.total_steps >= 1);
+        assert!(c.partitions >= c.world_size as u64, "every rank gets a shard");
+        assert!(c.sample_time_s > 0.0);
+        assert_eq!(c.mode, GangMode::Elastic);
+        assert!(c.spot, "the paper's headline fleet is preemptible");
     }
 
     #[test]

@@ -21,6 +21,8 @@ pub enum Error {
     Shed,
     /// Hyperparameter-search subsystem errors.
     Search(String),
+    /// Gang-scheduled distributed-training subsystem errors.
+    Train(String),
     Checkpoint(String),
     Kv(String),
     Io(std::io::Error),
@@ -44,6 +46,7 @@ impl fmt::Display for Error {
             Error::Serve(s) => write!(f, "serve error: {s}"),
             Error::Shed => write!(f, "request shed: queue at admission limit"),
             Error::Search(s) => write!(f, "search error: {s}"),
+            Error::Train(s) => write!(f, "train error: {s}"),
             Error::Checkpoint(s) => write!(f, "checkpoint error: {s}"),
             Error::Kv(s) => write!(f, "kv store error: {s}"),
             Error::Io(e) => write!(f, "io: {e}"),

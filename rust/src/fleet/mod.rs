@@ -9,13 +9,14 @@
 //! [`FleetWorkload`] implementation supplies only the workload-specific
 //! policy (what to dispatch, what to requeue, when it is finished).
 //!
-//! The three virtual-time drivers are each one `FleetWorkload`:
+//! The four virtual-time drivers are each one `FleetWorkload`:
 //!
 //! | driver | workload unit | requeued at the front on preemption |
 //! |---|---|---|
 //! | [`crate::scheduler::SimDriver`] | DAG tasks | the preempted task (checkpointed progress banked) |
 //! | [`crate::serve::ServeSim`] | request batches | every in-flight request (admission timestamps intact) |
 //! | [`crate::search::SearchDriver`] | checkpointable trials | the paused trial (resumes from its last checkpoint) |
+//! | [`crate::train::TrainDriver`] | gang-coupled steps | the aborted in-flight step, re-sharded at the surviving world size |
 //!
 //! Node lifecycle through the engine (states live on
 //! [`crate::cloud::NodeHandle`], events on the engine's queue):
@@ -37,7 +38,7 @@
 //! absolute time in the engine's configuration uses this origin:
 //! [`StormEvent::at_s`](crate::cloud::StormEvent), price-trace
 //! timestamps, and load horizons. A storm scripted at `t=60 s` therefore
-//! fires at the same virtual instant in all three drivers (pinned by
+//! fires at the same virtual instant in all four drivers (pinned by
 //! `tests/prop_fleet.rs`); the seed repos' divergent copies disagreed on
 //! this, which made cross-scenario fault injection incomparable.
 //!

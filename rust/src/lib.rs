@@ -20,6 +20,7 @@ pub mod search;
 pub mod serve;
 pub mod sim;
 pub mod storage;
+pub mod train;
 pub mod util;
 pub mod workflow;
 

@@ -5,7 +5,10 @@
 //! hyper submit <recipe.yaml> [--seed N]   # compile + simulate a workflow
 //! hyper search [recipe.yaml] [--seed N] [--algo A] [--storm-kills K]
 //!              [--price-trace F] [--bid X]  # ASHA hyperparameter search
-//! hyper train [--preset P] [--steps N] [--lr X]   # real PJRT training
+//! hyper train [--world N] [--gang-min N] [--steps N] [--mode elastic|rigid]
+//!             [--storm-at S] [--storm-kills K] [--price-trace F] [--bid X]
+//!                            # elastic gang training on the virtual fleet
+//! hyper train --preset P [--steps N] [--lr X]     # real PJRT training
 //! hyper infer [--preset P] [--batches N]          # batch inference demo
 //! hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]
 //!                                          # dynamic-batching serving demo
@@ -92,7 +95,7 @@ fn main() -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "hyper — distributed cloud processing for large-scale DL (reproduction)\n\n\
-         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n               [--price-trace FILE] [--bid USD_PER_H]\n  hyper train [--preset P] [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper serve --price-trace FILE [--bid USD_PER_H] [--rps R] [--duration S]\n              [--replicas N] [--instance TYPE] [--seed N]\n  hyper trace [--out FILE] [--rps R] [--duration S] [--replicas N] [--seed N]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--capacity N] [--timeline-lines N]\n  hyper status [--prometheus]"
+         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n               [--price-trace FILE] [--bid USD_PER_H]\n  hyper train [recipe.yaml] [--world N] [--gang-min N] [--steps N] [--seed N]\n              [--mode elastic|rigid] [--instance TYPE] [--deadline S]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--price-trace FILE] [--bid USD_PER_H] [--compare-rigid B]\n  hyper train --preset P [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper serve --price-trace FILE [--bid USD_PER_H] [--rps R] [--duration S]\n              [--replicas N] [--instance TYPE] [--seed N]\n  hyper trace [--out FILE] [--rps R] [--duration S] [--replicas N] [--seed N]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--capacity N] [--timeline-lines N]\n  hyper status [--prometheus]"
     );
 }
 
@@ -263,7 +266,144 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Built-in demo recipe for `hyper train` without a file: a 100-step
+/// 8-node elastic gang on spot GPUs.
+const TRAIN_DEMO_RECIPE: &str = r#"
+name: train-demo
+experiments:
+  - name: pretrain
+    instance: p3.2xlarge
+    spot: true
+    command: "python train.py --gang"
+    train: { world_size: 8, gang_min: 2, total_steps: 100 }
+"#;
+
+/// Dispatch: `--preset` runs the real PJRT training loop on local
+/// artifacts; everything else is the virtual-fleet elastic-gang scenario
+/// ([`cmd_train_gang`]).
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    if args.flags.contains_key("preset") {
+        return cmd_train_real(args);
+    }
+    cmd_train_gang(args)
+}
+
+/// Elastic gang-scheduled training on the virtual spot fleet: run the
+/// recipe's `train:` stanza (or the built-in demo), optionally through a
+/// scripted storm and/or price-trace preemption, and compare elastic vs
+/// rigid recovery on the same market.
+fn cmd_train_gang(args: &Args) -> anyhow::Result<()> {
+    use hyper_dist::cloud::StormEvent;
+    use hyper_dist::config::GangMode;
+    use hyper_dist::fleet::PriceTraceConfig;
+    use hyper_dist::train::{TrainDriver, TrainReport};
+    use hyper_dist::workflow::Recipe;
+
+    let seed: u64 = args.get("seed", 0)?;
+    let storm_at: f64 = args.get("storm-at", 120.0)?;
+    let storm_kills: usize = args.get("storm-kills", 0)?;
+    let storm_notice: f64 = args.get("storm-notice", 5.0)?;
+    let compare_rigid: bool = args.get("compare-rigid", true)?;
+    let deadline: f64 = args.get("deadline", 0.0)?;
+
+    let yaml = match args.positional.first() {
+        Some(path) => {
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?
+        }
+        None => TRAIN_DEMO_RECIPE.to_string(),
+    };
+    let recipe = Recipe::from_yaml(&yaml)?;
+    let spec = recipe
+        .experiments
+        .iter()
+        .find(|e| e.train.is_some())
+        .context("recipe has no experiment with a train: stanza")?;
+
+    let mut cfg = TrainDriver::config_for_experiment(spec, seed)?;
+    cfg.train.world_size = args.get("world", cfg.train.world_size)?;
+    cfg.train.gang_min = args.get("gang-min", cfg.train.gang_min)?;
+    cfg.train.total_steps = args.get("steps", cfg.train.total_steps)?;
+    if let Some(m) = args.flags.get("mode") {
+        cfg.train.mode = m.parse::<GangMode>()?;
+    }
+    if let Some(i) = args.flags.get("instance") {
+        cfg.train.instance = i.clone();
+    }
+    if deadline > 0.0 {
+        cfg.deadline_s = Some(deadline);
+    }
+    if storm_kills > 0 {
+        cfg.storm.push(StormEvent {
+            at_s: storm_at,
+            kills: storm_kills,
+            notice_s: storm_notice,
+        });
+    }
+    if let Some(trace) = load_price_trace(args)? {
+        let bid = bid_for(args, &cfg.train.instance)?;
+        println!(
+            "price trace: {} points, bid ${bid:.3}/h, 120 s notice at each crossing",
+            trace.len()
+        );
+        cfg.price_trace = Some(PriceTraceConfig { trace, bid_usd: bid, notice_s: 120.0 });
+    }
+
+    let run = |cfg| -> anyhow::Result<TrainReport> {
+        let store: StoreHandle = Arc::new(MemStore::new());
+        Ok(TrainDriver::new(cfg, store)?.run()?)
+    };
+    let print = |r: &TrainReport| {
+        println!(
+            "  {:7} committed {:>5}/{:<5}  makespan {:>7.1}s  cost ${:<8.2} \
+             units {:>6}  goodput {:.1}/$",
+            r.mode.to_string(),
+            r.committed_steps,
+            r.total_steps,
+            r.makespan_s,
+            r.cost_usd,
+            r.step_node_units,
+            r.goodput_per_usd
+        );
+        if r.shrinks + r.grows + r.restores > 0 {
+            println!(
+                "          world {}..{}  shrinks {}  grows {}  checkpoints {}  restores {}  \
+                 replayed {}  preemptions {}",
+                r.min_world, r.max_world, r.shrinks, r.grows, r.checkpoints, r.restores,
+                r.replayed_steps, r.preemptions
+            );
+        }
+    };
+
+    println!(
+        "train {:?}: {} steps on a {}-node {} gang ({}, gang_min {})",
+        spec.name,
+        cfg.train.total_steps,
+        cfg.train.world_size,
+        cfg.train.instance,
+        if cfg.train.spot { "spot" } else { "on-demand" },
+        cfg.train.gang_min,
+    );
+    let report = run(cfg.clone())?;
+    print(&report);
+    if compare_rigid && cfg.train.mode == GangMode::Elastic {
+        let mut rcfg = cfg.clone();
+        rcfg.train.mode = GangMode::Rigid;
+        let rigid = run(rcfg)?;
+        print(&rigid);
+        if rigid.goodput_per_usd > 0.0 {
+            println!(
+                "  elastic goodput {:.1} vs rigid {:.1} step-node-units/$ ({:+.0}%)",
+                report.goodput_per_usd,
+                rigid.goodput_per_usd,
+                100.0 * (report.goodput_per_usd / rigid.goodput_per_usd - 1.0)
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Real PJRT training on local artifacts (`--preset`).
+fn cmd_train_real(args: &Args) -> anyhow::Result<()> {
     let preset: String = args.get("preset", "tiny".to_string())?;
     let steps: u64 = args.get("steps", 20)?;
     let lr: f32 = args.get("lr", 1e-3)?;

@@ -1,0 +1,952 @@
+//! [`TrainDriver`]: elastic gang-scheduled data-parallel training on the
+//! preemptible virtual fleet.
+//!
+//! The fourth end-to-end scenario over the shared
+//! [`crate::fleet::FleetEngine`] (after the ETL fan-out, the serving
+//! layer, and the hyperparameter search): one N-node gang runs
+//! allreduce-coupled steps — a step commits only when **every** live
+//! member finishes its shard, so a single preempted node stalls all
+//! peers. On a spot notice the gang drain-checkpoints (one
+//! [`crate::scheduler::TrainCheckpoint`] through the shared
+//! [`CheckpointStore`]), re-forms at the surviving world size with the
+//! data partition re-sharded (a pure function of `(step, world)` — see
+//! [`shard_partitions`]), and grows back when replacements arrive;
+//! [`GangMode::Rigid`] instead blocks until full capacity returns.
+//!
+//! Invariants the tests pin down:
+//!
+//! * **Zero lost committed steps.** A committed step is durable modulo
+//!   checkpoint replay: restores roll back to the last checkpoint and
+//!   re-execute ([`TrainReport::replayed_steps`] counts exactly that
+//!   tail); a run that reaches `total_steps` committed each step exactly
+//!   once per final accounting.
+//! * **No stale member ever commits.** Step completions are
+//!   epoch-stamped by the engine; a notice invalidates the whole gang's
+//!   in-flight step, so a commit only happens with every member still
+//!   serving (asserted at each commit).
+//! * **Sample conservation.** Each committed step covers every partition
+//!   exactly once regardless of how often the world size changed —
+//!   resharding is stateless.
+//! * **Determinism.** Same config + store ⇒ bit-identical
+//!   [`TrainReport`], including `final_loss` ([`loss_at`] is pure and
+//!   never persisted, so restores recompute identical bits).
+
+use std::collections::BTreeSet;
+
+use crate::cloud::{InstanceType, NetworkModel, ProvisionerConfig, SpotMarketConfig, StormEvent};
+use crate::config::{GangMode, TrainConfig};
+use crate::fleet::{FleetConfig, FleetEngine, FleetStats, FleetWorkload, LaunchSpec, NodeId,
+                   PriceTraceConfig};
+use crate::metrics::MetricsRegistry;
+use crate::obs::FlightRecorder;
+use crate::scheduler::CheckpointStore;
+use crate::sim::SimTime;
+use crate::storage::StoreHandle;
+use crate::util::Json;
+use crate::workflow::{ExperimentSpec, TaskId};
+use crate::{Error, Result};
+
+use super::gang::{loss_at, shard_partitions, StepModel};
+
+/// The checkpoint task id of the (single) gang job: one training job per
+/// driver, so its `CheckpointStore` namespace is `train/ckpt/e0t0/…`.
+pub const GANG_TASK: TaskId = TaskId { experiment: 0, index: 0 };
+
+/// Full training-scenario configuration: the [`TrainConfig`] knobs plus
+/// the cloud models and fault injection.
+#[derive(Debug, Clone)]
+pub struct TrainDriverConfig {
+    /// Gang + step-cost + fleet knobs (see `docs/CONFIG.md`).
+    pub train: TrainConfig,
+    /// Latency/bandwidth model the per-step ring allreduce runs over.
+    pub net: NetworkModel,
+    /// Node provisioning model (boot time, jitter, warm-cache odds).
+    pub provisioner: ProvisionerConfig,
+    /// Background random preemptions of spot nodes; `None` = scripted
+    /// storms only (deterministic fault timing).
+    pub spot_market: Option<SpotMarketConfig>,
+    /// Price-trace-driven preemption (replayed `(t, price)` series vs a
+    /// bid); overrides `spot_market` when set.
+    pub price_trace: Option<PriceTraceConfig>,
+    /// Scripted preemption waves (timed from engine start).
+    pub storm: Vec<StormEvent>,
+    /// Launch a replacement when a node is reclaimed.
+    pub replace_preempted: bool,
+    /// Stop the run at this virtual time even if `total_steps` was not
+    /// reached — the time-boxed goodput comparison (elastic vs rigid on
+    /// one price trace) needs both runs cut at the same instant and
+    /// billed to it. `None` = run to completion.
+    pub deadline_s: Option<f64>,
+}
+
+impl Default for TrainDriverConfig {
+    fn default() -> Self {
+        Self {
+            train: TrainConfig::default(),
+            net: NetworkModel::default(),
+            provisioner: ProvisionerConfig::default(),
+            spot_market: None,
+            price_trace: None,
+            storm: Vec::new(),
+            replace_preempted: true,
+            deadline_s: None,
+        }
+    }
+}
+
+/// One committed step, as the engine saw it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommitRecord {
+    /// Step number after this commit (1-based; replayed steps re-appear).
+    pub step: u64,
+    /// Gang size the step committed at.
+    pub world: usize,
+    /// Virtual time of the commit, seconds.
+    pub at_s: f64,
+}
+
+/// Outcome of one gang-training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainReport {
+    /// Elastic vs rigid recovery.
+    pub mode: GangMode,
+    /// Configured full gang size.
+    pub world_size: usize,
+    /// Configured step budget.
+    pub total_steps: u64,
+    /// Steps committed (net forward progress).
+    pub committed_steps: u64,
+    /// `total_steps - committed_steps` (0 when the run finished; the
+    /// remainder when a deadline or dead market cut it short).
+    pub lost_steps: u64,
+    /// Virtual time the run was billed to, seconds.
+    pub makespan_s: f64,
+    /// Instance-hours billed, USD.
+    pub cost_usd: f64,
+    /// Σ world over all commits (step × world-at-commit units, the
+    /// goodput numerator; includes re-committed replayed steps).
+    pub step_node_units: u64,
+    /// Per-member step completions delivered by the engine; conservation
+    /// demands this equals `step_node_units` exactly.
+    pub member_completions: u64,
+    /// Partitions covered by net forward progress:
+    /// `committed_steps × partitions`.
+    pub samples_processed: u64,
+    /// `step_node_units / cost_usd` — the elastic-vs-rigid comparison
+    /// metric.
+    pub goodput_per_usd: f64,
+    /// Loss after the last committed step ([`loss_at`]; bit-identical
+    /// across restores).
+    pub final_loss: f64,
+    /// Smallest world size any step committed at (0 if none committed).
+    pub min_world: usize,
+    /// Largest world size any step committed at.
+    pub max_world: usize,
+    /// Gang members lost (notice or hard kill) while holding state.
+    pub shrinks: u64,
+    /// Re-formations at a larger world size than the previous formation.
+    pub grows: u64,
+    /// Checkpoints saved (periodic + drain).
+    pub checkpoints: u64,
+    /// State restores from a checkpoint after losing every member.
+    pub restores: u64,
+    /// Restores that found no checkpoint after real progress — genuine
+    /// restarts from step 0.
+    pub full_restarts: u64,
+    /// Steps re-executed because a restore rolled back past them.
+    pub replayed_steps: u64,
+    /// In-flight steps aborted by a member loss or an eager re-grow
+    /// (their partial work is discarded; the step re-runs re-sharded).
+    pub aborted_steps: u64,
+    /// Nodes reclaimed (storms, price trace, background spot market).
+    pub preemptions: u64,
+    /// Nodes provisioned over the run.
+    pub nodes_launched: usize,
+}
+
+/// The virtual-time gang-training executor. Construct, then
+/// [`TrainDriver::run`] once.
+pub struct TrainDriver {
+    cfg: TrainDriverConfig,
+    instance: InstanceType,
+    model: StepModel,
+    ckpts: CheckpointStore,
+    /// Members of the current formation (step group).
+    gang: Vec<NodeId>,
+    /// Members whose completion for the in-flight step has arrived.
+    arrived: BTreeSet<NodeId>,
+    /// Live nodes holding a replica of the model state (⊆ gang).
+    holders: BTreeSet<NodeId>,
+    /// Noticed nodes awaiting their scheduled kill (shrink already done).
+    departed: BTreeSet<NodeId>,
+    stepping: bool,
+    step_started_at: SimTime,
+    committed: u64,
+    ckpt_step: Option<u64>,
+    lost_state: bool,
+    lost_at_step: u64,
+    formed_once: bool,
+    last_world: usize,
+    commit_log: Vec<CommitRecord>,
+    member_completions: u64,
+    min_world: usize,
+    max_world: usize,
+    shrinks: u64,
+    grows: u64,
+    checkpoints: u64,
+    restores: u64,
+    full_restarts: u64,
+    replayed_steps: u64,
+    aborted_steps: u64,
+    /// Counters mirroring the report (`train.*` names).
+    pub metrics: MetricsRegistry,
+    stats: FleetStats,
+    ran: bool,
+    obs: FlightRecorder,
+}
+
+impl TrainDriver {
+    /// Build a driver over `store` (checkpoints live under the `train/`
+    /// prefix). Validates the gang geometry and step-cost inputs.
+    pub fn new(cfg: TrainDriverConfig, store: StoreHandle) -> Result<Self> {
+        let t = &cfg.train;
+        let instance = InstanceType::by_name(&t.instance)
+            .map(|s| s.ty)
+            .ok_or_else(|| Error::Train(format!("unknown instance type {:?}", t.instance)))?;
+        if t.world_size == 0 {
+            return Err(Error::Train("world_size must be > 0".into()));
+        }
+        if t.gang_min == 0 || t.gang_min > t.world_size {
+            return Err(Error::Train(format!(
+                "gang_min must be in 1..=world_size, got {} (world_size {})",
+                t.gang_min, t.world_size
+            )));
+        }
+        if t.total_steps == 0 {
+            return Err(Error::Train("total_steps must be > 0".into()));
+        }
+        if t.partitions == 0 {
+            return Err(Error::Train("partitions must be > 0".into()));
+        }
+        if t.sample_time_s <= 0.0 || t.sample_time_s.is_nan() {
+            return Err(Error::Train("sample_time_s must be > 0".into()));
+        }
+        let ckpts = if t.keep_last_k == 0 {
+            CheckpointStore::new(store, "train")
+        } else {
+            CheckpointStore::with_keep_last(store, "train", t.keep_last_k)
+        };
+        let model = StepModel::from_config(t, cfg.net.clone());
+        Ok(Self {
+            instance,
+            model,
+            ckpts,
+            cfg,
+            gang: Vec::new(),
+            arrived: BTreeSet::new(),
+            holders: BTreeSet::new(),
+            departed: BTreeSet::new(),
+            stepping: false,
+            step_started_at: SimTime::ZERO,
+            committed: 0,
+            ckpt_step: None,
+            lost_state: false,
+            lost_at_step: 0,
+            formed_once: false,
+            last_world: 0,
+            commit_log: Vec::new(),
+            member_completions: 0,
+            min_world: 0,
+            max_world: 0,
+            shrinks: 0,
+            grows: 0,
+            checkpoints: 0,
+            restores: 0,
+            full_restarts: 0,
+            replayed_steps: 0,
+            aborted_steps: 0,
+            metrics: MetricsRegistry::new(),
+            stats: FleetStats::default(),
+            ran: false,
+            obs: FlightRecorder::disabled(),
+        })
+    }
+
+    /// Attach a flight recorder before [`TrainDriver::run`]: the fleet
+    /// engine records node lifecycle + work events, and the driver adds
+    /// `gang.step` spans (tid = step, args `world_size`/`allreduce_us`)
+    /// plus `gang.shrink` / `gang.grow` / `gang.checkpoint` /
+    /// `gang.restore` events — enough to replay the elastic-resize
+    /// protocol from the trace alone (see `docs/OBSERVABILITY.md`).
+    pub fn set_obs(&mut self, obs: FlightRecorder) {
+        self.obs = obs;
+    }
+
+    /// The [`TrainDriverConfig`] a recipe experiment describes: the
+    /// `train:` stanza supplies the gang + step-cost knobs, the
+    /// experiment supplies the fleet (`spot`/`instance`); everything
+    /// else defaults. Errors if the experiment has no `train:` stanza.
+    pub fn config_for_experiment(spec: &ExperimentSpec, seed: u64) -> Result<TrainDriverConfig> {
+        let t = spec.train.as_ref().ok_or_else(|| {
+            Error::Train(format!("experiment {:?} has no train: stanza", spec.name))
+        })?;
+        let train = TrainConfig {
+            world_size: t.world_size,
+            gang_min: t.gang_min,
+            total_steps: t.total_steps,
+            partitions: t.partitions,
+            sample_time_s: t.sample_time_s,
+            model_bytes: t.model_bytes,
+            checkpoint_every_steps: t.checkpoint_every_steps,
+            mode: t.mode,
+            spot: spec.spot,
+            instance: spec.instance.clone(),
+            seed,
+            ..TrainConfig::default()
+        };
+        Ok(TrainDriverConfig { train, ..Default::default() })
+    }
+
+    /// Build a driver straight from a recipe experiment carrying a
+    /// `train:` stanza (see [`TrainDriver::config_for_experiment`]).
+    pub fn from_experiment(spec: &ExperimentSpec, store: StoreHandle, seed: u64) -> Result<Self> {
+        let cfg = Self::config_for_experiment(spec, seed)?;
+        Self::new(cfg, store)
+    }
+
+    /// The per-step cost model (inspect the gang-size/step-time curve).
+    pub fn step_model(&self) -> &StepModel {
+        &self.model
+    }
+
+    /// Every commit of the last run, in order (replays re-appear).
+    pub fn commit_log(&self) -> &[CommitRecord] {
+        &self.commit_log
+    }
+
+    /// Fleet-level counters of the last run (preemptions, storm firing
+    /// times, deferred launches).
+    pub fn fleet_stats(&self) -> &FleetStats {
+        &self.stats
+    }
+
+    /// Run the job to completion (or deadline) and report. Single-use.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        if std::mem::replace(&mut self.ran, true) {
+            return Err(Error::Train("TrainDriver::run is single-use".into()));
+        }
+        let mut engine = FleetEngine::new(FleetConfig {
+            provisioner: self.cfg.provisioner.clone(),
+            spot_market: self.cfg.spot_market.clone(),
+            price_trace: self.cfg.price_trace.clone(),
+            storm: self.cfg.storm.clone(),
+            seed: self.cfg.train.seed,
+            ..FleetConfig::default()
+        });
+        engine.set_obs(self.obs.clone());
+        engine.run(&mut GangWorkload { d: self })?;
+        // bill to the deadline when one was set (both sides of a goodput
+        // comparison must pay for the same wall of virtual time), else to
+        // the last processed event
+        let end = match self.cfg.deadline_s {
+            Some(d) => engine.now().max(SimTime::from_secs_f64(d)),
+            None => engine.now(),
+        };
+        engine.shutdown(end);
+        self.stats = engine.stats().clone();
+
+        let cost = engine.ledger().total_usd();
+        let units: u64 = self.commit_log.iter().map(|c| c.world as u64).sum();
+        Ok(TrainReport {
+            mode: self.cfg.train.mode,
+            world_size: self.cfg.train.world_size,
+            total_steps: self.cfg.train.total_steps,
+            committed_steps: self.committed,
+            lost_steps: self.cfg.train.total_steps.saturating_sub(self.committed),
+            makespan_s: end.as_secs_f64(),
+            cost_usd: cost,
+            step_node_units: units,
+            member_completions: self.member_completions,
+            samples_processed: self.committed * self.cfg.train.partitions,
+            goodput_per_usd: if cost > 0.0 { units as f64 / cost } else { 0.0 },
+            final_loss: loss_at(self.cfg.train.seed, self.committed),
+            min_world: self.min_world,
+            max_world: self.max_world,
+            shrinks: self.shrinks,
+            grows: self.grows,
+            checkpoints: self.checkpoints,
+            restores: self.restores,
+            full_restarts: self.full_restarts,
+            replayed_steps: self.replayed_steps,
+            aborted_steps: self.aborted_steps,
+            preemptions: self.stats.preemptions,
+            nodes_launched: self.stats.nodes_launched,
+        })
+    }
+
+    // ---------------------------------------------------- gang lifecycle
+
+    /// Form a gang from the serving nodes and start the next step. The
+    /// first formation (and every rigid one) requires the full
+    /// `world_size`; later elastic re-formations accept any world ≥
+    /// `gang_min`. Restores state first when every holder was lost.
+    fn try_form(&mut self, fleet: &mut FleetEngine) -> Result<()> {
+        if self.stepping || self.committed >= self.cfg.train.total_steps {
+            return Ok(());
+        }
+        let members: Vec<NodeId> = fleet.serving_ids().take(self.cfg.train.world_size).collect();
+        let required = if self.formed_once && self.cfg.train.mode == GangMode::Elastic {
+            self.cfg.train.gang_min
+        } else {
+            self.cfg.train.world_size
+        };
+        if members.len() < required {
+            return Ok(());
+        }
+        if self.lost_state {
+            self.restore(fleet.now())?;
+        }
+        let world = members.len();
+        if self.formed_once && world > self.last_world {
+            self.grows += 1;
+            self.metrics.counter("train.grows").inc();
+            if self.obs.is_enabled() {
+                self.obs.event_at("gang.grow", fleet.now().as_nanos(), 0, 0, vec![
+                    ("world_size", world.into()),
+                    ("from_world", self.last_world.into()),
+                ]);
+            }
+        }
+        self.formed_once = true;
+        self.last_world = world;
+        self.holders = members.iter().copied().collect();
+        self.gang = members;
+        self.arrived.clear();
+        self.stepping = true;
+        self.step_started_at = fleet.now();
+        let dur = self.model.step_time(world);
+        let at = fleet.now() + SimTime::from_secs_f64(dur);
+        for &nid in &self.gang {
+            fleet.add_busy(nid, dur);
+            fleet.schedule_work(nid, at, self.committed);
+        }
+        Ok(())
+    }
+
+    /// Discard the in-flight step: invalidate every member's scheduled
+    /// completion (the engine drops them as stale) and return to idle.
+    /// The step re-runs re-sharded at the next formation.
+    fn abort_step(&mut self, fleet: &mut FleetEngine) {
+        if !self.stepping {
+            return;
+        }
+        for &m in &self.gang {
+            fleet.invalidate(m);
+        }
+        self.stepping = false;
+        self.arrived.clear();
+        self.aborted_steps += 1;
+        self.metrics.counter("train.aborted_steps").inc();
+    }
+
+    /// Save one checkpoint at the current committed step (blob carries
+    /// `{step, world}`; the loss is recomputed on restore, never
+    /// persisted — see [`loss_at`]).
+    fn save_checkpoint(&mut self, now: SimTime, reason: &'static str) -> Result<()> {
+        let blob = Json::obj(vec![
+            ("step", Json::num(self.committed as f64)),
+            ("world", Json::num(self.last_world as f64)),
+        ])
+        .to_bytes();
+        let loss = loss_at(self.cfg.train.seed, self.committed);
+        self.ckpts.save(GANG_TASK, self.committed, loss as f32, &blob)?;
+        self.ckpt_step = Some(self.committed);
+        self.checkpoints += 1;
+        self.metrics.counter("train.checkpoints").inc();
+        if self.obs.is_enabled() {
+            self.obs.event_at("gang.checkpoint", now.as_nanos(), 0, self.committed, vec![
+                ("step", self.committed.into()),
+                ("reason", reason.into()),
+            ]);
+        }
+        Ok(())
+    }
+
+    /// Record one member loss (`holders` already updated by the caller).
+    fn shrink(&mut self, now: SimTime, nid: NodeId, reason: &'static str) {
+        self.shrinks += 1;
+        self.metrics.counter("train.shrinks").inc();
+        if self.obs.is_enabled() {
+            self.obs.event_at("gang.shrink", now.as_nanos(), nid, 0, vec![
+                ("world_size", self.holders.len().into()),
+                ("reason", reason.into()),
+            ]);
+        }
+    }
+
+    /// Every holder is gone: reload the newest checkpoint (exactly one
+    /// metadata GET + one blob GET) and roll `committed` back to it; the
+    /// rolled-back tail is counted as replayed once re-executed.
+    fn restore(&mut self, now: SimTime) -> Result<()> {
+        match self.ckpts.latest(GANG_TASK)? {
+            Some(ckpt) => {
+                let blob = self.ckpts.load_blob(&ckpt)?;
+                let step = Json::parse_bytes(&blob)?.req_u64("step")?;
+                if step != ckpt.step {
+                    return Err(Error::Train(format!(
+                        "checkpoint blob at step {step} does not match metadata step {}",
+                        ckpt.step
+                    )));
+                }
+                self.replayed_steps += self.lost_at_step.saturating_sub(ckpt.step);
+                self.committed = ckpt.step;
+                self.ckpt_step = Some(ckpt.step);
+                self.restores += 1;
+                self.metrics.counter("train.restores").inc();
+                if self.obs.is_enabled() {
+                    self.obs.event_at("gang.restore", now.as_nanos(), 0, ckpt.step, vec![
+                        ("step", ckpt.step.into()),
+                    ]);
+                }
+            }
+            None => {
+                // killed before the first checkpoint ever landed
+                self.replayed_steps += self.lost_at_step;
+                if self.lost_at_step > 0 {
+                    self.full_restarts += 1;
+                }
+                self.committed = 0;
+                self.ckpt_step = None;
+            }
+        }
+        self.lost_state = false;
+        self.lost_at_step = 0;
+        Ok(())
+    }
+
+    /// A gang member (state holder) is leaving: abort the in-flight
+    /// step, drop it from `holders`, and flag state loss when it was the
+    /// last replica.
+    fn lose_member(&mut self, fleet: &mut FleetEngine, nid: NodeId, reason: &'static str) {
+        if self.stepping && self.gang.contains(&nid) {
+            self.abort_step(fleet);
+        }
+        if self.holders.remove(&nid) {
+            self.shrink(fleet.now(), nid, reason);
+            if self.holders.is_empty() {
+                self.lost_state = true;
+                self.lost_at_step = self.committed;
+            }
+        }
+    }
+
+    /// Launch replacements up to `world_size` counting everything
+    /// already in flight (serving + provisioning + price-deferred).
+    fn top_up(&mut self, fleet: &mut FleetEngine) {
+        if !self.cfg.replace_preempted || self.committed >= self.cfg.train.total_steps {
+            return;
+        }
+        let have = fleet.live_count() + fleet.provisioning_count() + fleet.deferred_count();
+        for _ in have..self.cfg.train.world_size {
+            fleet.launch(LaunchSpec::new(self.instance, self.cfg.train.spot));
+        }
+    }
+}
+
+/// The gang-coupled workload behind [`TrainDriver`].
+struct GangWorkload<'a> {
+    d: &'a mut TrainDriver,
+}
+
+impl FleetWorkload for GangWorkload<'_> {
+    fn on_start(&mut self, fleet: &mut FleetEngine) -> Result<()> {
+        let d = &mut *self.d;
+        for _ in 0..d.cfg.train.world_size {
+            fleet.launch(LaunchSpec::new(d.instance, d.cfg.train.spot));
+        }
+        Ok(())
+    }
+
+    /// Deadline cut: end the run without advancing past the wall.
+    fn should_stop(&mut self, _fleet: &FleetEngine, next_at: SimTime) -> bool {
+        self.d.cfg.deadline_s.is_some_and(|dl| next_at.as_secs_f64() > dl)
+    }
+
+    /// A node is ready. If the fleet is back at full strength while the
+    /// gang steps below it, abort the step and re-form at full size
+    /// (eager grow — the partial small-world step is worth less than the
+    /// recovered capacity); otherwise just try to form.
+    fn on_node_ready(&mut self, fleet: &mut FleetEngine, _node: NodeId) -> Result<()> {
+        let d = &mut *self.d;
+        if d.stepping
+            && d.gang.len() < d.cfg.train.world_size
+            && fleet.live_count() >= d.cfg.train.world_size
+        {
+            d.abort_step(fleet);
+        }
+        d.try_form(fleet)
+    }
+
+    fn on_work_done(&mut self, fleet: &mut FleetEngine, nid: NodeId, token: u64) -> Result<()> {
+        let d = &mut *self.d;
+        // stale guards beyond the engine's epoch check: completions for a
+        // superseded step or from a node no longer in the gang
+        if !d.stepping || token != d.committed || !d.gang.contains(&nid) || !d.arrived.insert(nid)
+        {
+            return Ok(());
+        }
+        d.member_completions += 1;
+        if d.arrived.len() < d.gang.len() {
+            return Ok(());
+        }
+        // every member finished its shard: the step commits
+        let now = fleet.now();
+        let world = d.gang.len();
+        for &m in &d.gang {
+            assert!(
+                fleet.node(m).is_some_and(|n| n.is_serving()),
+                "gang committed a step with non-serving member {m}"
+            );
+        }
+        d.stepping = false;
+        d.arrived.clear();
+        d.committed += 1;
+        d.commit_log.push(CommitRecord { step: d.committed, world, at_s: now.as_secs_f64() });
+        d.min_world = if d.min_world == 0 { world } else { d.min_world.min(world) };
+        d.max_world = d.max_world.max(world);
+        d.metrics.counter("train.committed_steps").inc();
+        if d.obs.is_enabled() {
+            d.obs.span_at(
+                "gang.step",
+                d.step_started_at.as_nanos(),
+                now.as_nanos(),
+                0,
+                d.committed,
+                vec![
+                    ("world_size", world.into()),
+                    ("allreduce_us", (d.model.allreduce_time(world) * 1e6).into()),
+                ],
+            );
+        }
+        let ck = d.cfg.train.checkpoint_every_steps;
+        if ck > 0 && d.committed % ck == 0 {
+            d.save_checkpoint(now, "periodic")?;
+        }
+        d.try_form(fleet)
+    }
+
+    /// Spot notice: the leaving member still holds live state, so bank
+    /// it in a drain checkpoint *before* recording the shrink — the
+    /// trace-visible order is `node.notice` → `gang.checkpoint` →
+    /// `gang.shrink`, all inside the notice window.
+    fn on_notice(&mut self, fleet: &mut FleetEngine, nid: NodeId) -> Result<()> {
+        let d = &mut *self.d;
+        // the recalled member's in-flight completion must go stale
+        fleet.invalidate(nid);
+        d.departed.insert(nid);
+        if d.holders.contains(&nid) {
+            d.save_checkpoint(fleet.now(), "drain")?;
+            d.lose_member(fleet, nid, "notice");
+        }
+        d.top_up(fleet);
+        d.try_form(fleet)
+    }
+
+    /// Hard kill (already billed; epoch bumped by the engine). A kill
+    /// after a notice is pure cleanup — the shrink happened at the
+    /// notice; an unannounced kill loses the tail since the last
+    /// checkpoint.
+    fn on_kill(&mut self, fleet: &mut FleetEngine, nid: NodeId) -> Result<()> {
+        let d = &mut *self.d;
+        if !d.departed.remove(&nid) {
+            d.lose_member(fleet, nid, "kill");
+        }
+        d.top_up(fleet);
+        d.try_form(fleet)
+    }
+
+    fn is_done(&self, _fleet: &FleetEngine) -> bool {
+        self.d.committed >= self.d.cfg.train.total_steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::cloud::PriceTrace;
+    use crate::storage::{CountingStore, MemStore};
+    use crate::workflow::Recipe;
+
+    /// Deterministic fleet: jitter-free warm provisioning (node ready at
+    /// exactly launch + 55 s), zero-cost allreduce (latency 0, 0 model
+    /// bytes) so step time is exactly `ceil(partitions/world) ·
+    /// sample_time_s`: 1 s at W8, 2 s at W4, 4 s at W2.
+    fn exact_cfg(world: usize, gang_min: usize, total: u64) -> TrainDriverConfig {
+        TrainDriverConfig {
+            train: TrainConfig {
+                world_size: world,
+                gang_min,
+                total_steps: total,
+                partitions: 8,
+                sample_time_s: 1.0,
+                model_bytes: 0,
+                checkpoint_every_steps: 5,
+                keep_last_k: 2,
+                mode: GangMode::Elastic,
+                spot: false,
+                instance: "p3.2xlarge".into(),
+                seed: 7,
+            },
+            net: NetworkModel { intra_vpc_latency_s: 0.0, node_bw: 1.0 },
+            provisioner: ProvisionerConfig {
+                warm_cache_prob: 1.0,
+                jitter: 0.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn store() -> StoreHandle {
+        Arc::new(MemStore::new())
+    }
+
+    #[test]
+    fn uninterrupted_run_commits_every_step_at_full_world() {
+        let mut d = TrainDriver::new(exact_cfg(4, 2, 10), store()).unwrap();
+        let r = d.run().unwrap();
+        assert_eq!(r.committed_steps, 10);
+        assert_eq!(r.lost_steps, 0);
+        assert_eq!((r.min_world, r.max_world), (4, 4));
+        assert_eq!(r.step_node_units, 40);
+        assert_eq!(r.member_completions, 40, "conservation");
+        assert_eq!(r.samples_processed, 10 * 8);
+        assert_eq!(r.shrinks + r.grows + r.restores + r.aborted_steps, 0);
+        assert_eq!(r.checkpoints, 2, "periodic at steps 5 and 10");
+        assert_eq!(r.final_loss.to_bits(), loss_at(7, 10).to_bits());
+        // 10 steps × 2 s on 4 nodes ready at t=55: done at 75
+        assert!((r.makespan_s - 75.0).abs() < 1e-9, "{}", r.makespan_s);
+        assert!(r.cost_usd > 0.0);
+        assert_eq!(d.commit_log().len(), 10);
+        assert!(d.commit_log().windows(2).all(|w| w[0].step + 1 == w[1].step));
+    }
+
+    #[test]
+    fn elastic_gang_shrinks_through_a_notice_storm_and_regrows() {
+        // W4 gang, 2 s steps from t=55 (commits 57, 59, step 3 in
+        // flight); storm at 60 notices 2 nodes with 5 s warning. Each
+        // notice drain-checkpoints step 2, aborts the in-flight step,
+        // shrinks, and launches a replacement (ready 115). The gang
+        // re-forms at W3 (aborted by the second notice at the same
+        // instant), then W2: 4 s steps commit 3..15 over [64, 112];
+        // step 16's W2 attempt is cut at 115 by the eager re-grow to W4
+        // (2 s steps), finishing 16..30 at t=145.
+        let mut cfg = exact_cfg(4, 2, 30);
+        cfg.storm = vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 5.0 }];
+        let mut d = TrainDriver::new(cfg, store()).unwrap();
+        let r = d.run().unwrap();
+        assert_eq!(r.committed_steps, 30, "zero lost steps");
+        assert_eq!(r.replayed_steps, 0, "drain checkpoints bank everything");
+        assert_eq!(r.full_restarts, 0);
+        assert_eq!(r.restores, 0, "a holder survived; no reload needed");
+        assert_eq!(r.shrinks, 2);
+        assert_eq!(r.grows, 1, "one 2 → 4 re-grow at t=115");
+        assert_eq!(r.aborted_steps, 3, "storm ×2 + eager re-grow ×1");
+        assert_eq!((r.min_world, r.max_world), (2, 4));
+        assert_eq!(r.step_node_units, 2 * 4 + 13 * 2 + 15 * 4);
+        assert_eq!(r.member_completions, r.step_node_units, "conservation");
+        assert_eq!(r.preemptions, 2);
+        assert!((r.makespan_s - 145.0).abs() < 1e-9, "{}", r.makespan_s);
+        // drain ckpts at step 2 (×2) + periodic at 5, 10, 15, 20, 25, 30
+        assert_eq!(r.checkpoints, 8);
+        // metrics mirror the report
+        assert_eq!(d.metrics.counter("train.committed_steps").get(), r.committed_steps);
+        assert_eq!(d.metrics.counter("train.shrinks").get(), r.shrinks);
+        assert_eq!(d.metrics.counter("train.grows").get(), r.grows);
+        assert_eq!(d.metrics.counter("train.checkpoints").get(), r.checkpoints);
+        assert_eq!(d.metrics.counter("train.aborted_steps").get(), r.aborted_steps);
+    }
+
+    #[test]
+    fn rigid_gang_blocks_until_full_capacity_returns() {
+        let mut cfg = exact_cfg(4, 2, 30);
+        cfg.train.mode = GangMode::Rigid;
+        cfg.storm = vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 5.0 }];
+        let r = TrainDriver::new(cfg, store()).unwrap().run().unwrap();
+        assert_eq!(r.committed_steps, 30);
+        assert_eq!((r.min_world, r.max_world), (4, 4), "never commits below full");
+        assert_eq!(r.step_node_units, 30 * 4);
+        assert_eq!(r.grows, 0, "re-forms at the same size");
+        assert_eq!(r.shrinks, 2, "the member losses still happened");
+        // idle from the storm at 60 until replacements at 115, then
+        // steps 3..30 at 2 s: done at 171 (vs 145 elastic)
+        assert!((r.makespan_s - 171.0).abs() < 1e-9, "{}", r.makespan_s);
+    }
+
+    #[test]
+    fn hard_kill_of_every_holder_restores_with_exactly_two_gets() {
+        // W2 gang, 4 s steps from t=55 (commits 59..83 = steps 1..7,
+        // periodic ckpt at step 5, t=75); a no-notice storm at 84.5
+        // kills both → all state lost mid-step-8. Replacements (ready
+        // 139.5) restore from step 5 — exactly 1 metadata GET + 1 blob
+        // GET — and replay 6, 7 before new progress: done at
+        // 139.5 + 15 × 4 = 199.5.
+        let mem: StoreHandle = Arc::new(MemStore::new());
+        let counting = Arc::new(CountingStore::new(mem));
+        let mut cfg = exact_cfg(2, 2, 20);
+        cfg.storm = vec![StormEvent { at_s: 84.5, kills: 2, notice_s: 0.0 }];
+        let mut d = TrainDriver::new(cfg, counting.clone() as StoreHandle).unwrap();
+        let r = d.run().unwrap();
+        assert_eq!(r.committed_steps, 20, "{r:?}");
+        assert_eq!(r.restores, 1);
+        assert_eq!(r.full_restarts, 0);
+        assert_eq!(r.replayed_steps, 2, "committed 7, checkpoint at 5");
+        assert_eq!(r.shrinks, 2);
+        assert_eq!(r.aborted_steps, 1, "step 8 died with the gang");
+        assert!((r.makespan_s - 199.5).abs() < 1e-9, "{}", r.makespan_s);
+        // the restore read the store exactly twice: meta + blob
+        assert_eq!(counting.total_gets(), 2, "{:?}", counting.gets_by_key());
+        assert_eq!(counting.gets_for("train/ckpt/e0t0/latest.json"), 1);
+        assert_eq!(counting.gets_for("train/ckpt/e0t0/step0000000005.bin"), 1);
+        // commit log shows steps 6 and 7 twice (rolled back, re-run)
+        let commits_of = |s: u64| d.commit_log().iter().filter(|c| c.step == s).count();
+        assert_eq!((commits_of(6), commits_of(7), commits_of(8)), (2, 2, 1));
+        assert_eq!(r.step_node_units, d.commit_log().len() as u64 * 2);
+        assert_eq!(r.member_completions, r.step_node_units, "conservation");
+    }
+
+    #[test]
+    fn restored_run_replays_to_a_byte_identical_loss() {
+        let uninterrupted = TrainDriver::new(exact_cfg(2, 2, 20), store()).unwrap().run().unwrap();
+        let mut cfg = exact_cfg(2, 2, 20);
+        cfg.storm = vec![StormEvent { at_s: 84.5, kills: 2, notice_s: 0.0 }];
+        let stormed = TrainDriver::new(cfg, store()).unwrap().run().unwrap();
+        assert_eq!(stormed.committed_steps, uninterrupted.committed_steps);
+        assert_eq!(
+            stormed.final_loss.to_bits(),
+            uninterrupted.final_loss.to_bits(),
+            "restore + replay must reproduce the loss bit-for-bit"
+        );
+        assert_eq!(stormed.samples_processed, uninterrupted.samples_processed);
+    }
+
+    #[test]
+    fn deadline_boxes_the_run_and_bills_to_it() {
+        let mut cfg = exact_cfg(2, 2, 1_000);
+        cfg.deadline_s = Some(100.0);
+        let r = TrainDriver::new(cfg, store()).unwrap().run().unwrap();
+        // ready 55, 4 s steps: 11 commits by t=99; the wall stops #12
+        assert_eq!(r.committed_steps, 11);
+        assert_eq!(r.lost_steps, 1_000 - 11);
+        assert!((r.makespan_s - 100.0).abs() < 1e-9, "billed to the deadline");
+        assert!(r.cost_usd > 0.0);
+        assert!(r.goodput_per_usd > 0.0);
+    }
+
+    #[test]
+    fn price_trace_reclaims_the_gang_and_recovers_after_the_spike() {
+        // spot gang of 2 bidding 0.10 against a spike over [70, 400):
+        // noticed at 70 (drain banks step 3), killed at 75, replacements
+        // deferred to the recovery; training resumes at 455 from step 3
+        // with nothing replayed.
+        let mut cfg = exact_cfg(2, 2, 10);
+        cfg.train.spot = true;
+        let trace = PriceTrace::new(vec![(0.0, 0.05), (70.0, 0.90), (400.0, 0.06)]).unwrap();
+        cfg.price_trace = Some(PriceTraceConfig { trace, bid_usd: 0.10, notice_s: 5.0 });
+        let mut d = TrainDriver::new(cfg, store()).unwrap();
+        let r = d.run().unwrap();
+        assert_eq!(r.committed_steps, 10, "{r:?}");
+        assert_eq!(r.replayed_steps, 0, "the 5 s notice banked the progress");
+        assert_eq!(r.restores, 1, "the whole gang was reclaimed");
+        assert_eq!(r.preemptions, 2);
+        assert!(d.fleet_stats().launches_deferred >= 1, "{:?}", d.fleet_stats());
+        // replacements provision from t=400 (ready 455) + 7 × 4 s
+        assert!((r.makespan_s - 483.0).abs() < 1e-9, "{}", r.makespan_s);
+    }
+
+    #[test]
+    fn same_seed_bit_identical_reports() {
+        let run = || {
+            let mut cfg = exact_cfg(4, 2, 40);
+            cfg.train.spot = true;
+            cfg.spot_market = Some(SpotMarketConfig { mean_ttp_s: 300.0, notice_s: 10.0 });
+            cfg.storm = vec![StormEvent { at_s: 90.0, kills: 2, notice_s: 0.0 }];
+            TrainDriver::new(cfg, store()).unwrap().run().unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn builds_and_runs_from_a_recipe_train_stanza() {
+        let yaml = r#"
+name: gang
+experiments:
+  - name: pretrain
+    instance: p3.2xlarge
+    spot: true
+    command: "train --data {shard}"
+    params:
+      shard: { range: [0, 0] }
+    train:
+      world_size: 4
+      gang_min: 2
+      total_steps: 12
+      partitions: 8
+      sample_time_s: 1.0
+      model_bytes: 0
+      checkpoint_every_steps: 4
+"#;
+        let recipe = Recipe::from_yaml(yaml).unwrap();
+        let spec = recipe.experiment("pretrain").unwrap();
+        let mut cfg = TrainDriver::config_for_experiment(spec, 3).unwrap();
+        assert_eq!(cfg.train.world_size, 4);
+        assert_eq!(cfg.train.mode, GangMode::Elastic, "elastic is the default");
+        assert!(cfg.train.spot, "fleet knobs come from the experiment");
+        cfg.provisioner =
+            ProvisionerConfig { warm_cache_prob: 1.0, jitter: 0.0, ..Default::default() };
+        let r = TrainDriver::new(cfg, store()).unwrap().run().unwrap();
+        assert_eq!(r.committed_steps, 12);
+        assert_eq!(r.checkpoints, 3);
+        // the stanza-less experiment is rejected
+        let mut no_stanza = spec.clone();
+        no_stanza.train = None;
+        assert!(matches!(
+            TrainDriver::from_experiment(&no_stanza, store(), 3),
+            Err(Error::Train(_))
+        ));
+    }
+
+    #[test]
+    fn driver_is_single_use_and_validates_inputs() {
+        let mut d = TrainDriver::new(exact_cfg(2, 1, 2), store()).unwrap();
+        d.run().unwrap();
+        assert!(matches!(d.run(), Err(Error::Train(_))));
+        let bad = |f: fn(&mut TrainDriverConfig)| {
+            let mut cfg = exact_cfg(4, 2, 10);
+            f(&mut cfg);
+            assert!(matches!(TrainDriver::new(cfg, store()), Err(Error::Train(_))));
+        };
+        bad(|c| c.train.instance = "quantum.9000".into());
+        bad(|c| c.train.world_size = 0);
+        bad(|c| c.train.gang_min = 0);
+        bad(|c| c.train.gang_min = 5);
+        bad(|c| c.train.total_steps = 0);
+        bad(|c| c.train.partitions = 0);
+        bad(|c| c.train.sample_time_s = 0.0);
+    }
+
+    #[test]
+    fn resharding_covers_all_partitions_at_every_committed_world() {
+        let mut cfg = exact_cfg(4, 2, 30);
+        cfg.storm = vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 5.0 }];
+        let mut d = TrainDriver::new(cfg, store()).unwrap();
+        d.run().unwrap();
+        for c in d.commit_log() {
+            let shards = shard_partitions(c.step, c.world, 8);
+            let covered: u64 = shards.iter().map(|s| s.len() as u64).sum();
+            assert_eq!(covered, 8, "step {} at world {}", c.step, c.world);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! The pure gang model: data-partition resharding, the allreduce-coupled
+//! step-time law, and the deterministic loss trajectory.
+//!
+//! Everything here is a pure function of its inputs — the
+//! [`crate::train::TrainDriver`] owns all mutable state — so resharding
+//! after a world-size change and loss values after a checkpoint restore
+//! are exactly reproducible by construction.
+
+use crate::cloud::NetworkModel;
+use crate::config::TrainConfig;
+
+/// Assign every partition index to a rank for one step: index `i` goes
+/// to rank `(i + step) % world`. A pure function of `(step, world)`, so
+/// a gang that re-forms at a different world size re-shards without any
+/// coordination state — every partition is covered exactly once per
+/// committed step (none read twice, none skipped), and the rotation
+/// spreads the one-larger shards evenly over ranks across steps.
+pub fn shard_partitions(step: u64, world: usize, partitions: u64) -> Vec<Vec<u64>> {
+    assert!(world > 0, "world size must be > 0");
+    let mut shards = vec![Vec::new(); world];
+    for i in 0..partitions {
+        shards[((i + step) % world as u64) as usize].push(i);
+    }
+    shards
+}
+
+/// The per-step cost law of an N-node data-parallel gang.
+///
+/// A step commits only when every member has finished its shard, so the
+/// step time is governed by the largest shard plus the ring allreduce:
+///
+/// ```text
+/// step(N) = ceil(partitions / N) · sample_time      (compute, shrinks ~1/N)
+///         + 2(N−1) · latency                        (allreduce hops, grows with N)
+///         + 2(N−1)/N · model_bytes / bandwidth      (allreduce volume, ~constant)
+/// ```
+///
+/// The bandwidth term makes gang size a real tradeoff: doubling N never
+/// halves the step time (see [`NetworkModel::ring_allreduce_time`]).
+#[derive(Debug, Clone)]
+pub struct StepModel {
+    /// Data partitions resharded over the gang every step.
+    pub partitions: u64,
+    /// Virtual seconds one node spends computing one partition.
+    pub sample_time_s: f64,
+    /// Gradient/model bytes exchanged by the per-step ring allreduce.
+    pub model_bytes: u64,
+    /// Latency + bandwidth model the allreduce runs over.
+    pub net: NetworkModel,
+}
+
+impl StepModel {
+    /// The step model a [`TrainConfig`] describes, over network `net`.
+    pub fn from_config(cfg: &TrainConfig, net: NetworkModel) -> Self {
+        Self {
+            partitions: cfg.partitions,
+            sample_time_s: cfg.sample_time_s,
+            model_bytes: cfg.model_bytes,
+            net,
+        }
+    }
+
+    /// Compute time of the largest shard at world size `world`.
+    pub fn compute_time(&self, world: usize) -> f64 {
+        self.partitions.div_ceil(world.max(1) as u64) as f64 * self.sample_time_s
+    }
+
+    /// Ring-allreduce time of `model_bytes` across `world` nodes
+    /// (0 for a single node — nothing to reduce).
+    pub fn allreduce_time(&self, world: usize) -> f64 {
+        self.net.ring_allreduce_time(self.model_bytes, world)
+    }
+
+    /// Total per-step time at world size `world`: compute + allreduce.
+    pub fn step_time(&self, world: usize) -> f64 {
+        self.compute_time(world) + self.allreduce_time(world)
+    }
+}
+
+/// Deterministic loss after `step` committed steps: an exponential decay
+/// toward a seed-dependent floor. A pure function of `(seed, step)` —
+/// never persisted in checkpoint blobs — so a restored run recomputes
+/// *byte-identical* loss values instead of round-tripping `f64` bits
+/// through JSON.
+pub fn loss_at(seed: u64, step: u64) -> f64 {
+    let floor = 0.05 + (seed % 997) as f64 * 1e-5;
+    let l0 = 2.5;
+    let tau = 40.0;
+    floor + (l0 - floor) * (-(step as f64) / tau).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resharding_covers_every_partition_exactly_once() {
+        for world in 1..=9usize {
+            for step in [0u64, 1, 7, 100] {
+                let shards = shard_partitions(step, world, 64);
+                assert_eq!(shards.len(), world);
+                let mut seen = vec![0u32; 64];
+                for s in &shards {
+                    for &i in s {
+                        seen[i as usize] += 1;
+                    }
+                }
+                assert!(seen.iter().all(|&c| c == 1), "world {world} step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn resharding_is_balanced_and_rotates() {
+        let shards = shard_partitions(0, 3, 8);
+        let sizes: Vec<usize> = shards.iter().map(Vec::len).collect();
+        assert_eq!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap(), 1);
+        assert_eq!(*sizes.iter().max().unwrap() as u64, 8u64.div_ceil(3));
+        // the rotation moves the assignment between steps
+        assert_ne!(shard_partitions(0, 3, 8), shard_partitions(1, 3, 8));
+        // ...but the same (step, world) always re-shards identically
+        assert_eq!(shard_partitions(5, 3, 8), shard_partitions(5, 3, 8));
+    }
+
+    fn model() -> StepModel {
+        StepModel {
+            partitions: 512,
+            sample_time_s: 0.02,
+            model_bytes: 100 << 20,
+            net: NetworkModel::default(),
+        }
+    }
+
+    #[test]
+    fn step_time_matches_the_closed_form() {
+        let m = model();
+        let n = 8usize;
+        let expect = 512f64 / 8.0 * 0.02
+            + 2.0 * 7.0 / 8.0 * (100u64 << 20) as f64 / m.net.node_bw
+            + 2.0 * 7.0 * m.net.intra_vpc_latency_s;
+        assert!((m.step_time(n) - expect).abs() < 1e-12);
+        assert_eq!(m.allreduce_time(1), 0.0, "one node has nothing to reduce");
+    }
+
+    #[test]
+    fn doubling_the_gang_never_halves_the_step_time() {
+        let m = model();
+        for n in [1usize, 2, 4, 8, 16, 32] {
+            let t1 = m.step_time(n);
+            let t2 = m.step_time(2 * n);
+            assert!(t2 < t1, "more nodes must still help: {n}");
+            assert!(
+                t2 > 0.5 * t1,
+                "allreduce bandwidth term caps scaling: t({})={t2} vs t({n})/2={}",
+                2 * n,
+                0.5 * t1
+            );
+        }
+    }
+
+    #[test]
+    fn loss_is_deterministic_and_decreasing() {
+        assert_eq!(loss_at(7, 20).to_bits(), loss_at(7, 20).to_bits());
+        let mut prev = f64::INFINITY;
+        for step in 0..200 {
+            let l = loss_at(7, step);
+            assert!(l < prev, "loss must strictly decrease");
+            assert!(l > 0.05, "never below the floor");
+            prev = l;
+        }
+        assert_ne!(loss_at(7, 20), loss_at(8, 20), "floor is seed-dependent");
+    }
+}

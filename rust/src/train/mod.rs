@@ -1,0 +1,48 @@
+//! Elastic gang-scheduled data-parallel training on the spot fleet —
+//! the paper's flagship workload (§II, §IV.B) as the fourth
+//! [`crate::fleet::FleetWorkload`].
+//!
+//! | component | role |
+//! |---|---|
+//! | [`gang`] | pure model: resharding, step-time law, loss trajectory |
+//! | [`StepModel`] | `step(N) = compute(shard) + ring-allreduce(N)` |
+//! | [`shard_partitions`] | partition → rank map, pure in `(step, world)` |
+//! | [`TrainDriver`] | the gang lifecycle over [`crate::fleet::FleetEngine`] |
+//! | [`TrainReport`] | committed steps, goodput, conservation counters |
+//!
+//! A step commits only when **every** live member finishes its shard —
+//! the allreduce couples the gang, so one preempted node stalls all of
+//! them. The driver turns that coupling into an explicit lifecycle:
+//!
+//! ```text
+//!             ┌────────────────────── gang.grow ◄── replacements ready
+//!             ▼                              (abort + re-form at full N)
+//!  form(N) ── step ── commit ── step ── … ── done
+//!    ▲          │ spot notice
+//!    │          ▼
+//!    │   gang.checkpoint (drain)          every holder lost?
+//!    │          │                               │
+//!    │     gang.shrink ── re-form(N−k) ◄─ no    │ yes
+//!    │          │      (elastic: N−k ≥ gang_min;│
+//!    │          ▼       rigid: wait for full N) ▼
+//!    └── reshard(step, N−k)             gang.restore (1 meta GET +
+//!         no sample read twice,          1 blob GET, replay the tail
+//!         none skipped                   past the last checkpoint)
+//! ```
+//!
+//! Entry points: build a [`TrainDriver`] from a [`TrainDriverConfig`]
+//! (or a recipe's `train:` stanza via
+//! [`TrainDriver::from_experiment`]), attach a
+//! [`crate::obs::FlightRecorder`] for the `gang.*` trace taxonomy, and
+//! [`TrainDriver::run`] it. `hyper train` drives the same path from the
+//! CLI; the `train_elastic` bench pins zero lost steps through a
+//! 6-of-8-node storm and elastic goodput strictly above rigid on one
+//! price trace.
+
+#![warn(missing_docs)]
+
+pub mod driver;
+pub mod gang;
+
+pub use driver::{CommitRecord, TrainDriver, TrainDriverConfig, TrainReport, GANG_TASK};
+pub use gang::{loss_at, shard_partitions, StepModel};

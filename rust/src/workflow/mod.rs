@@ -12,5 +12,5 @@ pub mod task;
 
 pub use dag::Workflow;
 pub use params::{render_command, sample_assignments, Assignment, ParamSpec, ParamValue};
-pub use recipe::{ExperimentSpec, Recipe, SearchSpec, WorkSpec};
+pub use recipe::{ExperimentSpec, Recipe, SearchSpec, TrainSpec, WorkSpec};
 pub use task::{Task, TaskId, TaskState};

@@ -23,7 +23,7 @@ use std::collections::{BTreeMap, BTreeSet};
 
 
 use crate::cloud::InstanceType;
-use crate::config::SearchAlgo;
+use crate::config::{GangMode, SearchAlgo, TrainConfig};
 use crate::util::{yamlite, Json};
 use crate::{Error, Result};
 
@@ -87,6 +87,64 @@ impl SearchSpec {
     }
 }
 
+/// The `train:` stanza of an experiment: run it as one elastic
+/// gang-scheduled data-parallel training job driven by
+/// [`crate::train::TrainDriver`] (the experiment's `instance`/`spot`
+/// supply the fleet; `workers` is ignored — the gang size is
+/// `world_size`).
+///
+/// ```yaml
+///     train: { world_size: 8, gang_min: 2, total_steps: 100 }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainSpec {
+    /// Full gang size. Required, must be > 0.
+    pub world_size: usize,
+    /// Smallest world an elastic gang keeps stepping at (default 1).
+    pub gang_min: usize,
+    /// Steps to commit before the job is done.
+    pub total_steps: u64,
+    /// Data partitions resharded over the gang every step.
+    pub partitions: u64,
+    /// Virtual seconds one node spends computing one partition.
+    pub sample_time_s: f64,
+    /// Gradient bytes ring-allreduced per step.
+    pub model_bytes: u64,
+    /// Periodic checkpoint cadence in steps (0 = drain checkpoints only).
+    pub checkpoint_every_steps: u64,
+    /// `elastic` (default) or `rigid` recovery.
+    pub mode: GangMode,
+}
+
+impl TrainSpec {
+    fn from_json(v: &Json, exp: &str) -> Result<Self> {
+        let bad =
+            |field: &str| Error::Recipe(format!("experiment {exp:?}: invalid train.{field}"));
+        let mode = match v.get("mode") {
+            None | Some(Json::Null) => GangMode::Elastic,
+            Some(m) => m.as_str().ok_or_else(|| bad("mode"))?.parse()?,
+        };
+        let world_size = v.req_u64("world_size").map_err(|_| bad("world_size"))? as usize;
+        let d = TrainConfig::default();
+        Ok(TrainSpec {
+            world_size,
+            gang_min: v.get("gang_min").and_then(Json::as_u64).unwrap_or(1) as usize,
+            total_steps: v.get("total_steps").and_then(Json::as_u64).unwrap_or(d.total_steps),
+            partitions: v.get("partitions").and_then(Json::as_u64).unwrap_or(d.partitions),
+            sample_time_s: v
+                .get("sample_time_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.sample_time_s),
+            model_bytes: v.get("model_bytes").and_then(Json::as_u64).unwrap_or(d.model_bytes),
+            checkpoint_every_steps: v
+                .get("checkpoint_every_steps")
+                .and_then(Json::as_u64)
+                .unwrap_or(d.checkpoint_every_steps),
+            mode,
+        })
+    }
+}
+
 /// One experiment block of the recipe.
 #[derive(Debug, Clone)]
 pub struct ExperimentSpec {
@@ -110,6 +168,9 @@ pub struct ExperimentSpec {
     /// trial-based hyperparameter search (ASHA & friends) instead of a
     /// fixed-duration task fan-out.
     pub search: Option<SearchSpec>,
+    /// Optional `train:` stanza — run this experiment as one elastic
+    /// gang-scheduled training job instead of a task fan-out.
+    pub train: Option<TrainSpec>,
 }
 
 fn default_image() -> String {
@@ -162,6 +223,10 @@ impl ExperimentSpec {
             None | Some(Json::Null) => None,
             Some(s) => Some(SearchSpec::from_json(s, &name)?),
         };
+        let train = match v.get("train") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(TrainSpec::from_json(t, &name)?),
+        };
         Ok(ExperimentSpec {
             image: v
                 .get("image")
@@ -182,6 +247,7 @@ impl ExperimentSpec {
             depends_on,
             work,
             search,
+            train,
             name,
         })
     }
@@ -269,6 +335,38 @@ impl Recipe {
                 if s.step_time_s <= 0.0 || s.step_time_s.is_nan() {
                     return Err(Error::Recipe(format!(
                         "{:?}: search.step_time_s must be > 0",
+                        e.name
+                    )));
+                }
+            }
+            if let Some(t) = &e.train {
+                if t.world_size == 0 {
+                    return Err(Error::Recipe(format!(
+                        "{:?}: train.world_size must be > 0",
+                        e.name
+                    )));
+                }
+                if t.gang_min == 0 || t.gang_min > t.world_size {
+                    return Err(Error::Recipe(format!(
+                        "{:?}: train.gang_min must be in 1..=world_size ({})",
+                        e.name, t.world_size
+                    )));
+                }
+                if t.total_steps == 0 {
+                    return Err(Error::Recipe(format!(
+                        "{:?}: train.total_steps must be > 0",
+                        e.name
+                    )));
+                }
+                if t.partitions == 0 {
+                    return Err(Error::Recipe(format!(
+                        "{:?}: train.partitions must be > 0",
+                        e.name
+                    )));
+                }
+                if t.sample_time_s <= 0.0 || t.sample_time_s.is_nan() {
+                    return Err(Error::Recipe(format!(
+                        "{:?}: train.sample_time_s must be > 0",
                         e.name
                     )));
                 }
@@ -399,6 +497,61 @@ experiments:
         assert_eq!(s.step_time_s, 1.0);
         assert_eq!(s.checkpoint_every_steps, 3, "defaults to rung_steps");
         assert!(r.experiment("prep").unwrap().search.is_none());
+    }
+
+    #[test]
+    fn parses_train_stanza_with_defaults() {
+        let yaml = YAML.replace(
+            "    depends_on: [prep]",
+            "    depends_on: [prep]\n    train: { world_size: 8 }",
+        );
+        let r = Recipe::from_yaml(&yaml).unwrap();
+        let t = r.experiment("train").unwrap().train.clone().unwrap();
+        assert_eq!(t.world_size, 8);
+        assert_eq!(t.gang_min, 1, "any surviving member keeps stepping");
+        assert_eq!(t.mode, GangMode::Elastic, "elastic is the default");
+        assert_eq!(t.total_steps, TrainConfig::default().total_steps);
+        assert_eq!(t.partitions, TrainConfig::default().partitions);
+        assert!(r.experiment("prep").unwrap().train.is_none());
+    }
+
+    #[test]
+    fn train_stanza_validation() {
+        let with = |stanza: &str| {
+            YAML.replace(
+                "    depends_on: [prep]",
+                &format!("    depends_on: [prep]\n    train: {stanza}"),
+            )
+        };
+        let rejects_naming = |stanza: &str, field: &str| match Recipe::from_yaml(&with(stanza)) {
+            Err(Error::Recipe(msg)) => {
+                assert!(msg.contains(field), "{stanza}: {msg} should name {field}")
+            }
+            other => panic!("{stanza}: expected Error::Recipe, got {other:?}"),
+        };
+        // missing and zero world_size both name the field
+        rejects_naming("{ gang_min: 2 }", "train.world_size");
+        rejects_naming("{ world_size: 0 }", "train.world_size");
+        // gang_min out of 1..=world_size on both sides
+        rejects_naming("{ world_size: 4, gang_min: 5 }", "train.gang_min");
+        rejects_naming("{ world_size: 4, gang_min: 0 }", "train.gang_min");
+        rejects_naming("{ world_size: 4, total_steps: 0 }", "train.total_steps");
+        rejects_naming("{ world_size: 4, partitions: 0 }", "train.partitions");
+        rejects_naming("{ world_size: 4, sample_time_s: 0.0 }", "train.sample_time_s");
+        // unknown mode string
+        assert!(Recipe::from_yaml(&with("{ world_size: 4, mode: floppy }")).is_err());
+        // explicit full form parses
+        let r = Recipe::from_yaml(&with(
+            "{ world_size: 8, gang_min: 2, total_steps: 50, partitions: 64, \
+             sample_time_s: 0.5, model_bytes: 1000000, checkpoint_every_steps: 5, \
+             mode: rigid }",
+        ))
+        .unwrap();
+        let t = r.experiment("train").unwrap().train.clone().unwrap();
+        assert_eq!(t.mode, GangMode::Rigid);
+        assert_eq!(t.gang_min, 2);
+        assert_eq!(t.checkpoint_every_steps, 5);
+        assert_eq!(t.model_bytes, 1_000_000);
     }
 
     #[test]

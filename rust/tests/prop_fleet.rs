@@ -186,19 +186,21 @@ fn assert_storm_protocol(records: &[hyper_dist::obs::Record], label: &str) {
 }
 
 /// The storm-timing bugfix pinned end to end — now from the flight
-/// recorder itself: all three virtual-time drivers schedule a `t=60 s`
+/// recorder itself: all four virtual-time drivers schedule a `t=60 s`
 /// storm against the SAME origin (engine start), so each driver's trace
 /// must carry the identical `fleet.storm` instant and the full
 /// notice→drain→kill protocol for every victim; the search trace must
 /// additionally prove (by command hash) that every resume continued the
 /// byte-identical command its trial ran before the preemption.
 #[test]
-fn storm_at_60s_fires_at_the_same_instant_in_all_three_drivers() {
+fn storm_at_60s_fires_at_the_same_instant_in_all_four_drivers() {
+    use hyper_dist::config::{GangMode, TrainConfig};
     use hyper_dist::obs::{FlightRecorder, Record};
     use hyper_dist::scheduler::{SimDriver, SimDriverConfig};
     use hyper_dist::search::{CurveConfig, SearchDriver, SearchDriverConfig};
     use hyper_dist::serve::{Load, ServeSim, ServeSimConfig};
     use hyper_dist::sim::{OpenLoop, SimClock};
+    use hyper_dist::train::{TrainDriver, TrainDriverConfig};
     use hyper_dist::workflow::{Recipe, Workflow};
 
     let recorder = || FlightRecorder::sim(1 << 16, SimClock::new());
@@ -250,8 +252,8 @@ experiments:
     // 3. SearchDriver (checkpointable trials)
     let mut scfg = SearchDriverConfig {
         curve: CurveConfig { noise: 0.0, ..Default::default() },
-        provisioner: exact,
-        storm,
+        provisioner: exact.clone(),
+        storm: storm.clone(),
         ..Default::default()
     };
     scfg.search.trials = 8;
@@ -274,19 +276,54 @@ experiments:
     let xr = search.run().unwrap();
     assert_eq!(xr.lost, 0);
 
+    // 4. TrainDriver (elastic gang): the gang drain-checkpoints at the
+    // notice and keeps stepping at the surviving world size — it never
+    // voluntarily releases a noticed member, so every victim's trace ends
+    // in the hard notice → drain → kill sequence
+    let tcfg = TrainDriverConfig {
+        train: TrainConfig {
+            world_size: 4,
+            gang_min: 2,
+            total_steps: 30,
+            partitions: 8,
+            sample_time_s: 1.0,
+            model_bytes: 0,
+            checkpoint_every_steps: 5,
+            keep_last_k: 2,
+            mode: GangMode::Elastic,
+            spot: true,
+            instance: "p3.2xlarge".into(),
+            seed: 0,
+        },
+        net: hyper_dist::cloud::NetworkModel { intra_vpc_latency_s: 0.0, node_bw: 1.0 },
+        provisioner: exact,
+        storm,
+        ..Default::default()
+    };
+    let mut train =
+        TrainDriver::new(tcfg, std::sync::Arc::new(hyper_dist::storage::MemStore::new()))
+            .unwrap();
+    let train_rec = recorder();
+    train.set_obs(train_rec.clone());
+    let tr = train.run().unwrap();
+    assert_eq!(tr.lost_steps, 0, "the gang lost no steps through the storm: {tr:?}");
+
     // every driver's trace shows the same wave at the same instant, with
     // the full preemption protocol per victim
     let dag_records = dag_rec.snapshot();
     let serve_records = serve_rec.snapshot();
     let search_records = search_rec.snapshot();
+    let train_records = train_rec.snapshot();
     assert_storm_protocol(&dag_records, "dag");
     assert_storm_protocol(&serve_records, "serve");
     assert_storm_protocol(&search_records, "search");
+    assert_storm_protocol(&train_records, "train");
     let storm_ts = |records: &[Record]| {
         records.iter().find(|r| r.name == "fleet.storm").expect("storm record").ts_ns
     };
     assert_eq!(storm_ts(&dag_records), storm_ts(&serve_records));
     assert_eq!(storm_ts(&serve_records), storm_ts(&search_records));
+    assert_eq!(storm_ts(&search_records), storm_ts(&train_records));
 
     // checkpoint/resume integrity, proven from the trace alone: every
     // resume carries the command hash of the byte-identical command its
@@ -315,4 +352,233 @@ experiments:
             );
         }
     }
+}
+
+/// The elastic-resize protocol, proven from the flight recorder alone: a
+/// W4 gang hit by a 2-node notice storm must record, per victim,
+/// `node.notice` → `gang.checkpoint` → `gang.shrink` in sequence order
+/// with the shrink inside the notice window; every `gang.step` span
+/// between the shrink and the `gang.grow` carries the surviving world
+/// size, and every span after the grow is full-world again.
+#[test]
+fn elastic_resize_protocol_is_visible_in_the_trace() {
+    use hyper_dist::cloud::NetworkModel;
+    use hyper_dist::config::{GangMode, TrainConfig};
+    use hyper_dist::obs::{FlightRecorder, RecordKind};
+    use hyper_dist::sim::SimClock;
+    use hyper_dist::train::{TrainDriver, TrainDriverConfig};
+
+    let cfg = TrainDriverConfig {
+        train: TrainConfig {
+            world_size: 4,
+            gang_min: 2,
+            total_steps: 30,
+            partitions: 8,
+            sample_time_s: 1.0,
+            model_bytes: 0,
+            checkpoint_every_steps: 5,
+            keep_last_k: 2,
+            mode: GangMode::Elastic,
+            spot: true,
+            instance: "p3.2xlarge".into(),
+            seed: 0,
+        },
+        net: NetworkModel { intra_vpc_latency_s: 0.0, node_bw: 1.0 },
+        provisioner: ProvisionerConfig { warm_cache_prob: 1.0, jitter: 0.0, ..Default::default() },
+        storm: vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 5.0 }],
+        ..Default::default()
+    };
+    let mut d =
+        TrainDriver::new(cfg, std::sync::Arc::new(hyper_dist::storage::MemStore::new())).unwrap();
+    let rec = FlightRecorder::sim(1 << 16, SimClock::new());
+    d.set_obs(rec.clone());
+    d.run().unwrap();
+    let records = rec.snapshot();
+
+    // per victim: notice -> drain checkpoint -> shrink, in record order,
+    // the shrink landing inside the 5 s notice window
+    let notices: Vec<_> = records.iter().filter(|r| r.name == "node.notice").collect();
+    assert_eq!(notices.len(), 2, "the storm noticed two members");
+    for notice in &notices {
+        let shrink = records
+            .iter()
+            .find(|r| r.name == "gang.shrink" && r.pid == notice.pid)
+            .unwrap_or_else(|| panic!("noticed node {} never shrank the gang", notice.pid));
+        let banked = records
+            .iter()
+            .any(|r| r.name == "gang.checkpoint" && notice.seq < r.seq && r.seq < shrink.seq);
+        assert!(
+            banked,
+            "node {}: state must be drain-checkpointed between its notice and its shrink",
+            notice.pid
+        );
+        assert!(
+            (notice.ts_ns..=notice.ts_ns + 5_000_000_000).contains(&shrink.ts_ns),
+            "node {}: shrink must land inside the notice window",
+            notice.pid
+        );
+    }
+
+    // the fleet heals: exactly one grow back to full world
+    let grow = records.iter().find(|r| r.name == "gang.grow").expect("the gang grew back");
+    assert_eq!(grow.arg("world_size").and_then(|a| a.as_u64()), Some(4));
+    let last_shrink_seq =
+        records.iter().filter(|r| r.name == "gang.shrink").map(|r| r.seq).max().unwrap();
+    assert!(last_shrink_seq < grow.seq, "shrinks precede the grow");
+
+    // step spans: full world before the storm, the surviving world
+    // between shrink and grow, full world after
+    let steps: Vec<_> = records.iter().filter(|r| r.name == "gang.step").collect();
+    assert!(!steps.is_empty());
+    for s in &steps {
+        assert!(matches!(s.kind, RecordKind::Span { .. }), "gang.step is a span");
+        assert!(
+            s.arg("allreduce_us").and_then(|a| a.as_f64()).is_some(),
+            "step spans carry the allreduce cost"
+        );
+        let w = s.arg("world_size").and_then(|a| a.as_u64()).unwrap();
+        if s.seq < last_shrink_seq {
+            assert_eq!(w, 4, "pre-storm steps are full-world");
+        } else if s.seq < grow.seq {
+            assert_eq!(w, 2, "between shrink and grow the gang steps at the surviving world");
+        } else {
+            assert_eq!(w, 4, "after gang.grow the steps are full-world again");
+        }
+    }
+}
+
+/// Workload-agnostic gang conservation: under random storms, Poisson
+/// markets, and price traces, committed work is exactly accounted —
+/// every commit's world size sums to precisely the member completions
+/// the engine delivered (a stale-epoch completion can never be counted
+/// into a commit), every committed step covers each data partition
+/// exactly once at its committed world size, the committed sample count
+/// is `committed × partitions`, and a rigid gang never commits below
+/// full world.
+#[test]
+fn prop_gang_conservation_under_storms_markets_and_price_traces() {
+    use hyper_dist::cloud::NetworkModel;
+    use hyper_dist::config::{GangMode, TrainConfig};
+    use hyper_dist::train::{shard_partitions, TrainDriver, TrainDriverConfig};
+
+    run_prop(
+        "gang conservation (storms + market + price traces)",
+        40,
+        |rng: &mut SimRng| {
+            let world = 2 + rng.gen_range(7) as usize;
+            let gang_min = 1 + rng.gen_range(world as u64) as usize;
+            let total = 1 + rng.gen_range(60);
+            let partitions = 1 + rng.gen_range(64);
+            let rigid = rng.gen_bool(0.3);
+            let ckpt_every = 1 + rng.gen_range(10);
+            let market = rng.gen_bool(0.4);
+            let mean_ttp = 200.0 + rng.gen_range(2000) as f64;
+            let n_storms = rng.gen_range(3) as usize;
+            let storms: Vec<(f64, usize, f64)> = (0..n_storms)
+                .map(|_| {
+                    (
+                        rng.gen_range(400) as f64,
+                        1 + rng.gen_range(world as u64 + 2) as usize,
+                        if rng.gen_bool(0.5) { 0.0 } else { 2.0 + rng.gen_range(20) as f64 },
+                    )
+                })
+                .collect();
+            // optional price trace ending low, so deferred capacity can
+            // always provision eventually
+            let trace = rng.gen_bool(0.4).then(|| {
+                let mut points: Vec<(f64, f64)> = Vec::new();
+                let mut t = 0.0;
+                for _ in 0..(2 + rng.gen_range(4)) {
+                    points.push((t, rng.gen_range(100) as f64 / 100.0));
+                    t += 30.0 + rng.gen_range(300) as f64;
+                }
+                points.push((t, 0.01));
+                let bid = 0.02 + rng.gen_range(80) as f64 / 100.0;
+                let notice_s = if rng.gen_bool(0.5) { 0.0 } else { rng.gen_range(30) as f64 };
+                (points, bid, notice_s)
+            });
+            (world, gang_min, total, partitions, rigid, ckpt_every, market, mean_ttp, storms,
+             trace, rng.next_u64())
+        },
+        |(world, gang_min, total, partitions, rigid, ckpt_every, market, mean_ttp, storms,
+          trace, seed)| {
+            let cfg = TrainDriverConfig {
+                train: TrainConfig {
+                    world_size: world,
+                    gang_min,
+                    total_steps: total,
+                    partitions,
+                    sample_time_s: 0.5,
+                    model_bytes: 1 << 20,
+                    checkpoint_every_steps: ckpt_every,
+                    keep_last_k: 2,
+                    mode: if rigid { GangMode::Rigid } else { GangMode::Elastic },
+                    spot: true,
+                    instance: "p3.2xlarge".into(),
+                    seed,
+                },
+                net: NetworkModel::default(),
+                spot_market: market
+                    .then(|| SpotMarketConfig { mean_ttp_s: mean_ttp, notice_s: 15.0 }),
+                price_trace: trace.map(|(points, bid, notice_s)| PriceTraceConfig {
+                    trace: PriceTrace::new(points).unwrap(),
+                    bid_usd: bid,
+                    notice_s,
+                }),
+                storm: storms
+                    .iter()
+                    .map(|&(at_s, kills, notice_s)| StormEvent { at_s, kills, notice_s })
+                    .collect(),
+                // hostile markets may never let the job finish — box the
+                // run; conservation must hold wherever it stops
+                deadline_s: Some(1500.0),
+                ..Default::default()
+            };
+            let mut d =
+                TrainDriver::new(cfg, std::sync::Arc::new(hyper_dist::storage::MemStore::new()))
+                    .unwrap();
+            let r = d.run().unwrap();
+
+            let log = d.commit_log();
+            let units: u64 = log.iter().map(|c| c.world as u64).sum();
+            assert_eq!(r.step_node_units, units);
+            assert_eq!(
+                r.member_completions, units,
+                "conservation violated: completions != committed units: {r:?}"
+            );
+            assert_eq!(r.samples_processed, r.committed_steps * partitions);
+            assert!(r.committed_steps <= total);
+            assert_eq!(r.lost_steps, total - r.committed_steps);
+            for c in log {
+                assert!((1..=world).contains(&c.world));
+                if rigid {
+                    assert_eq!(c.world, world, "rigid gang never commits below full world");
+                } else {
+                    assert!(c.world >= gang_min, "elastic gang floor respected");
+                }
+                let mut seen = vec![0u32; partitions as usize];
+                for shard in shard_partitions(c.step, c.world, partitions) {
+                    for i in shard {
+                        seen[i as usize] += 1;
+                    }
+                }
+                assert!(
+                    seen.iter().all(|&n| n == 1),
+                    "step {} at world {}: every partition exactly once",
+                    c.step,
+                    c.world
+                );
+            }
+            // step numbers never jump forward: each commit is +1 from its
+            // predecessor, or a checkpoint-rollback replay
+            for w in log.windows(2) {
+                assert!(
+                    w[1].step == w[0].step + 1 || w[1].step <= w[0].step,
+                    "a step was skipped: {w:?}"
+                );
+            }
+            let stats = d.fleet_stats();
+            assert!(stats.preemptions as usize <= stats.nodes_launched);
+        },
+    );
 }
