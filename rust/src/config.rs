@@ -318,11 +318,16 @@ pub struct ObsConfig {
     /// Where to write the Chrome trace-event JSON export; `None` means
     /// export only when a caller (CLI `--out`) asks.
     pub export_path: Option<PathBuf>,
+    /// Per-series bound of the [`crate::obs::SeriesSet`] time-series
+    /// layer: each named series keeps its newest `series_capacity`
+    /// samples (older ones are evicted and counted as dropped, same
+    /// discipline as the flight recorder).
+    pub series_capacity: usize,
 }
 
 impl Default for ObsConfig {
     fn default() -> Self {
-        Self { enabled: true, capacity: 65_536, export_path: None }
+        Self { enabled: true, capacity: 65_536, export_path: None, series_capacity: 4096 }
     }
 }
 
@@ -429,6 +434,7 @@ mod tests {
         assert!(c.enabled, "tracing is cheap enough to leave on");
         assert!(c.capacity >= 1024);
         assert!(c.export_path.is_none());
+        assert!(c.series_capacity >= 256, "series hold a useful window");
     }
 
     #[test]

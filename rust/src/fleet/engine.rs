@@ -487,6 +487,10 @@ impl FleetEngine {
             self.nodes.iter().filter(|(_, n)| !n.dead).map(|(id, _)| *id).collect();
         let count = open.len();
         for nid in open {
+            // terminal trace event so every node's billed lifetime is
+            // closed in the record stream (obs::analyze reconciles
+            // per-node cost against the ledger from these)
+            self.obs.event_at("node.shutdown", end.as_nanos(), nid, 0, vec![]);
             self.bill_at(nid, end);
         }
         count

@@ -16,6 +16,8 @@
 //!                            # virtual-time fleet scenario on a price trace
 //! hyper trace [--out F] [--storm-at S] [--storm-kills K] [--storm-notice S]
 //!             # storm scenario -> Chrome trace JSON + merged timeline
+//! hyper report [--workload serve|train|search] [--load trace.json]
+//!             # trace analytics: critical path, cost attribution, SLO
 //! hyper status [--prometheus]                     # artifacts + catalog
 //! ```
 
@@ -83,6 +85,7 @@ fn main() -> anyhow::Result<()> {
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
         "trace" => cmd_trace(&args),
+        "report" => cmd_report(&args),
         "status" => cmd_status(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -95,7 +98,7 @@ fn main() -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "hyper — distributed cloud processing for large-scale DL (reproduction)\n\n\
-         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n               [--price-trace FILE] [--bid USD_PER_H]\n  hyper train [recipe.yaml] [--world N] [--gang-min N] [--steps N] [--seed N]\n              [--mode elastic|rigid] [--instance TYPE] [--deadline S]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--price-trace FILE] [--bid USD_PER_H] [--compare-rigid B]\n  hyper train --preset P [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper serve --price-trace FILE [--bid USD_PER_H] [--rps R] [--duration S]\n              [--replicas N] [--instance TYPE] [--seed N]\n  hyper trace [--out FILE] [--rps R] [--duration S] [--replicas N] [--seed N]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--capacity N] [--timeline-lines N]\n  hyper status [--prometheus]"
+         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n               [--price-trace FILE] [--bid USD_PER_H]\n  hyper train [recipe.yaml] [--world N] [--gang-min N] [--steps N] [--seed N]\n              [--mode elastic|rigid] [--instance TYPE] [--deadline S]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--price-trace FILE] [--bid USD_PER_H] [--compare-rigid B]\n  hyper train --preset P [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper serve --price-trace FILE [--bid USD_PER_H] [--rps R] [--duration S]\n              [--replicas N] [--instance TYPE] [--seed N]\n  hyper trace [--out FILE] [--rps R] [--duration S] [--replicas N] [--seed N]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--capacity N] [--timeline-lines N]\n  hyper report [--workload serve|train|search] [--load trace.json] [--seed N]\n              [--rps R] [--duration S] [--replicas N] [--steps N] [--capacity N]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n  hyper status [--prometheus]"
     );
 }
 
@@ -701,6 +704,249 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One report scenario's output: the trace records, the tick series it
+/// filled, and the untraced/traced wallclock seconds for the overhead
+/// figure.
+type ScenarioTrace = (Vec<hyper_dist::obs::Record>, hyper_dist::obs::SeriesSet, f64, f64);
+
+/// `hyper report`: run a storm scenario with the flight recorder,
+/// time-series, and SLO monitor attached (or load a previously exported
+/// Chrome trace with `--load`), then render the trace-analytics report:
+/// critical-path category breakdown, per-node cost attribution against
+/// the ledger, windowed series reducers, and SLO burn-rate verdicts.
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    use hyper_dist::obs::analyze::{analyze, render_report};
+
+    // --load: analyze an exported trace instead of simulating. Chrome
+    // JSON round-trips the records (modulo u64 args widening to f64,
+    // which the analyzer reads as f64 anyway).
+    if let Some(path) = args.flags.get("load") {
+        let records = hyper_dist::obs::chrome::read_chrome_trace(std::path::Path::new(path))
+            .with_context(|| format!("loading chrome trace {path}"))?;
+        println!("report: {} records from {path}", records.len());
+        print!("{}", render_report(&analyze(&records)));
+        return Ok(());
+    }
+
+    let workload: String = args.get("workload", "serve".to_string())?;
+    let (records, series, untraced_s, traced_s) = match workload.as_str() {
+        "serve" => report_serve_scenario(args)?,
+        "train" => report_train_scenario(args)?,
+        "search" => report_search_scenario(args)?,
+        other => bail!("unknown --workload {other:?} (serve | train | search)"),
+    };
+
+    let t0 = std::time::Instant::now();
+    let a = analyze(&records);
+    let analyze_s = t0.elapsed().as_secs_f64();
+    print!("{}", render_report(&a));
+
+    let sums = series.summaries(u64::MAX);
+    if !sums.is_empty() {
+        println!("\n== series (whole-run window) ==");
+        for s in &sums {
+            let evicted = if s.dropped > 0 {
+                format!("  (+{} evicted)", s.dropped)
+            } else {
+                String::new()
+            };
+            println!(
+                "{:<22} last {:>10.3}  mean {:>10.3}  p99 {:>10.3}  n={}{}",
+                s.name, s.last, s.mean, s.p99, s.len, evicted
+            );
+        }
+    }
+
+    let overhead_x = if untraced_s > 0.0 { traced_s / untraced_s } else { 1.0 };
+    println!(
+        "\nobservability overhead: untraced {:.3}s, traced {:.3}s ({overhead_x:.2}x); \
+         analyze {:.1} ms over {} records",
+        untraced_s,
+        traced_s,
+        1e3 * analyze_s,
+        records.len()
+    );
+    // machine-readable trail for scripts/bench_summary -> bench_check
+    // (allreduce_frac only where gang steps exist, so the train run's
+    // number survives the merge with the serve run's)
+    let mut metrics = vec![("wasted_spend_frac", a.wasted_frac()), ("overhead_x", overhead_x)];
+    if a.step_ns > 0 {
+        metrics.push(("allreduce_frac", a.allreduce_frac()));
+    }
+    hyper_dist::util::bench::emit_json("report", &metrics);
+    Ok(())
+}
+
+/// The `hyper report` serve scenario: the same preemption storm as
+/// `hyper trace`, run once bare and once with the full observability
+/// stack (recorder + tick series + p99 SLO monitor) attached.
+fn report_serve_scenario(args: &Args) -> anyhow::Result<ScenarioTrace> {
+    use hyper_dist::cloud::StormEvent;
+    use hyper_dist::config::ObsConfig;
+    use hyper_dist::obs::{FlightRecorder, SeriesSet, SloSpec};
+    use hyper_dist::serve::{AutoscalerConfig, Load, ServeSim, ServeSimConfig};
+    use hyper_dist::sim::{OpenLoop, SimClock};
+
+    let rps: f64 = args.get("rps", 800.0)?;
+    let duration: f64 = args.get("duration", 180.0)?;
+    let storm_at: f64 = args.get("storm-at", 60.0)?;
+    let storm_kills: usize = args.get("storm-kills", 3)?;
+    let storm_notice: f64 = args.get("storm-notice", 5.0)?;
+    let replicas: usize = args.get("replicas", 4)?;
+    let seed: u64 = args.get("seed", 42)?;
+    let capacity: usize = args.get("capacity", 1 << 20)?;
+
+    let cfg = ServeSimConfig {
+        initial_replicas: replicas,
+        spot_replicas: true,
+        warm_start: true,
+        autoscaler: AutoscalerConfig {
+            min_replicas: replicas.min(2),
+            ..AutoscalerConfig::default()
+        },
+        storm: vec![StormEvent { at_s: storm_at, kills: storm_kills, notice_s: storm_notice }],
+        seed,
+        ..ServeSimConfig::default()
+    };
+    println!(
+        "report: serve storm — {replicas} replicas, {rps:.0} req/s for {duration:.0}s, \
+         storm kills {storm_kills} at {storm_at:.0}s with {storm_notice:.0}s notice"
+    );
+
+    // bare run of the identical scenario first: the overhead denominator
+    let t0 = std::time::Instant::now();
+    ServeSim::new(cfg.clone()).run(Load::Open(OpenLoop::poisson(rps)), duration)?;
+    let untraced_s = t0.elapsed().as_secs_f64();
+
+    let mut cfg = cfg;
+    // p99 objective over the 5s-tick window, paged on multi-window burn
+    cfg.slo = Some(SloSpec::new("serve.window_p99_s", 0.1, 60.0));
+    let rec = FlightRecorder::sim(capacity, SimClock::new());
+    let series = SeriesSet::new(ObsConfig::default().series_capacity);
+    let mut sim = ServeSim::new(cfg);
+    sim.set_obs(rec.clone());
+    sim.set_series(series.clone());
+    let t0 = std::time::Instant::now();
+    let r = sim.run(Load::Open(OpenLoop::poisson(rps)), duration)?;
+    let traced_s = t0.elapsed().as_secs_f64();
+
+    println!(
+        "  completed {} / admitted {}  shed {}  preemptions {}  cost ${:.4}",
+        r.completed, r.admitted, r.shed, r.preemptions, r.cost_usd
+    );
+    if rec.dropped() > 0 {
+        println!(
+            "  WARNING: ring evicted {} records; raise --capacity for exact totals",
+            rec.dropped()
+        );
+    }
+    Ok((rec.snapshot(), series, untraced_s, traced_s))
+}
+
+/// The `hyper report` train scenario: the built-in elastic-gang demo
+/// recipe through a preemption storm, with commit-series attached.
+fn report_train_scenario(args: &Args) -> anyhow::Result<ScenarioTrace> {
+    use hyper_dist::cloud::StormEvent;
+    use hyper_dist::config::ObsConfig;
+    use hyper_dist::obs::{FlightRecorder, SeriesSet};
+    use hyper_dist::sim::SimClock;
+    use hyper_dist::train::TrainDriver;
+    use hyper_dist::workflow::Recipe;
+
+    let seed: u64 = args.get("seed", 42)?;
+    let storm_at: f64 = args.get("storm-at", 120.0)?;
+    let storm_kills: usize = args.get("storm-kills", 3)?;
+    let storm_notice: f64 = args.get("storm-notice", 5.0)?;
+    let capacity: usize = args.get("capacity", 1 << 20)?;
+
+    let recipe = Recipe::from_yaml(TRAIN_DEMO_RECIPE)?;
+    let spec = recipe
+        .experiments
+        .iter()
+        .find(|e| e.train.is_some())
+        .expect("demo recipe has a train: stanza");
+    let mut cfg = TrainDriver::config_for_experiment(spec, seed)?;
+    cfg.train.total_steps = args.get("steps", cfg.train.total_steps)?;
+    cfg.storm.push(StormEvent { at_s: storm_at, kills: storm_kills, notice_s: storm_notice });
+    println!(
+        "report: train storm — {} steps on a {}-node {} gang, storm kills {storm_kills} \
+         at {storm_at:.0}s with {storm_notice:.0}s notice",
+        cfg.train.total_steps, cfg.train.world_size, cfg.train.instance
+    );
+
+    let run = |cfg, obs: Option<(FlightRecorder, SeriesSet)>| -> anyhow::Result<f64> {
+        let store: StoreHandle = Arc::new(MemStore::new());
+        let mut d = TrainDriver::new(cfg, store)?;
+        if let Some((rec, series)) = obs {
+            d.set_obs(rec);
+            d.set_series(series);
+        }
+        let t0 = std::time::Instant::now();
+        let r = d.run()?;
+        println!(
+            "  committed {}/{}  makespan {:.1}s  cost ${:.4}",
+            r.committed_steps, r.total_steps, r.makespan_s, r.cost_usd
+        );
+        Ok(t0.elapsed().as_secs_f64())
+    };
+    let untraced_s = run(cfg.clone(), None)?;
+    let rec = FlightRecorder::sim(capacity, SimClock::new());
+    let series = SeriesSet::new(ObsConfig::default().series_capacity);
+    let traced_s = run(cfg, Some((rec.clone(), series.clone())))?;
+    Ok((rec.snapshot(), series, untraced_s, traced_s))
+}
+
+/// The `hyper report` search scenario: the built-in ASHA demo recipe
+/// through a preemption storm, per-trial costs attributed from the
+/// `trial.run` spans.
+fn report_search_scenario(args: &Args) -> anyhow::Result<ScenarioTrace> {
+    use hyper_dist::cloud::StormEvent;
+    use hyper_dist::obs::{FlightRecorder, SeriesSet};
+    use hyper_dist::search::SearchDriver;
+    use hyper_dist::sim::SimClock;
+    use hyper_dist::workflow::Recipe;
+
+    let seed: u64 = args.get("seed", 42)?;
+    let storm_at: f64 = args.get("storm-at", 120.0)?;
+    let storm_kills: usize = args.get("storm-kills", 2)?;
+    let storm_notice: f64 = args.get("storm-notice", 5.0)?;
+    let capacity: usize = args.get("capacity", 1 << 20)?;
+
+    let recipe = Recipe::from_yaml(SEARCH_DEMO_RECIPE)?;
+    let spec = recipe
+        .experiments
+        .iter()
+        .find(|e| e.search.is_some())
+        .expect("demo recipe has a search: stanza");
+    let mut cfg = SearchDriver::config_for_experiment(spec, seed)?;
+    cfg.storm.push(StormEvent { at_s: storm_at, kills: storm_kills, notice_s: storm_notice });
+    println!(
+        "report: search storm — {} on {} {} workers, storm kills {storm_kills} at \
+         {storm_at:.0}s with {storm_notice:.0}s notice",
+        cfg.search.algo, cfg.search.workers, cfg.search.instance
+    );
+
+    let run = |cfg, obs: Option<FlightRecorder>| -> anyhow::Result<f64> {
+        let store: StoreHandle = Arc::new(MemStore::new());
+        let mut d = SearchDriver::new(cfg, store, &spec.params, &spec.command)?;
+        if let Some(rec) = obs {
+            d.set_obs(rec);
+        }
+        let t0 = std::time::Instant::now();
+        let r = d.run()?;
+        println!(
+            "  {} trials completed, {} stopped, {} lost  best {:.4}  cost ${:.4}",
+            r.completed, r.stopped, r.lost, r.best_loss, r.cost_usd
+        );
+        Ok(t0.elapsed().as_secs_f64())
+    };
+    let untraced_s = run(cfg.clone(), None)?;
+    let rec = FlightRecorder::sim(capacity, SimClock::new());
+    let traced_s = run(cfg, Some(rec.clone()))?;
+    // search pushes no tick series; summaries render as an empty table
+    Ok((rec.snapshot(), SeriesSet::disabled(), untraced_s, traced_s))
+}
+
 fn cmd_status(args: &Args) -> anyhow::Result<()> {
     let prometheus: bool = args.get("prometheus", false)?;
     let dir = default_artifacts_dir();
@@ -739,6 +985,22 @@ fn cmd_status(args: &Args) -> anyhow::Result<()> {
     println!("hfs smoke: {}", String::from_utf8_lossy(&fs.read_file("hello.txt")?));
     let reg = hyper_dist::metrics::MetricsRegistry::new();
     fs.register_metrics(&reg);
+    // observability self-report: a recorder sees the smoke, and its
+    // counters plus the windowed series reducers are exported as gauges
+    // so a scraper watches the obs pipeline's own health (ring pressure,
+    // sampled levels) next to the workload metrics
+    let obs_cfg = hyper_dist::config::ObsConfig::default();
+    let rec = hyper_dist::obs::FlightRecorder::from_config(&obs_cfg);
+    rec.event_at("status.hfs_smoke", 0, 0, 0, vec![("ok", 1u64.into())]);
+    reg.gauge("obs.events_recorded").set(rec.recorded() as i64);
+    reg.gauge("obs.events_dropped").set(rec.dropped() as i64);
+    let series = hyper_dist::obs::SeriesSet::new(obs_cfg.series_capacity);
+    series.sample_registry(0, &reg);
+    for s in series.summaries(u64::MAX) {
+        reg.float_gauge(&format!("{}.last", s.name)).set(s.last);
+        reg.float_gauge(&format!("{}.mean", s.name)).set(s.mean);
+        reg.float_gauge(&format!("{}.p99", s.name)).set(s.p99);
+    }
     if prometheus {
         // machine-readable exposition format, unindented for scraping
         print!("{}", reg.report_prometheus());

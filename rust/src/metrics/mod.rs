@@ -482,6 +482,33 @@ impl MetricsRegistry {
         }
         out
     }
+
+    /// Flatten every registered metric to `(name, value)` samples for
+    /// the time-series layer ([`crate::obs::SeriesSet::sample_registry`]):
+    /// counters, gauges, and float gauges at their current level,
+    /// histograms as `{name}.p50` / `{name}.p99` / `{name}.count`. The
+    /// histogram read is the non-destructive snapshot, so sampling never
+    /// perturbs windowed consumers (`snapshot_and_reset` users keep
+    /// their own windows).
+    pub fn sample_values(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push((name.clone(), c.get() as f64));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push((name.clone(), g.get() as f64));
+        }
+        for (name, g) in self.float_gauges.lock().unwrap().iter() {
+            out.push((name.clone(), g.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            let s = h.snapshot();
+            out.push((format!("{name}.p50"), s.p50));
+            out.push((format!("{name}.p99"), s.p99));
+            out.push((format!("{name}.count"), s.count as f64));
+        }
+        out
+    }
 }
 
 /// Cost accounting: accumulates instance-hours at on-demand or spot rates.
@@ -746,6 +773,50 @@ mod tests {
         assert!(text.contains("serve_latency_s_count 4\n"), "{text}");
         // no unsanitized names leak through
         assert!(!text.contains("hfs.ds"), "{text}");
+    }
+
+    #[test]
+    fn prometheus_exposition_golden_document() {
+        // pin the whole document: group order (counters, gauges, float
+        // gauges), BTreeMap name order within a group, sanitization of
+        // every non-[a-zA-Z0-9_:] byte, and integer formatting
+        let r = MetricsRegistry::new();
+        r.counter("serve.reqs").add(7);
+        r.counter("a-b c").inc();
+        r.gauge("fleet.live").set(3);
+        r.float_gauge("train.loss").set(-1.5);
+        let expect = "# TYPE a_b_c counter\n\
+                      a_b_c 1\n\
+                      # TYPE serve_reqs counter\n\
+                      serve_reqs 7\n\
+                      # TYPE fleet_live gauge\n\
+                      fleet_live 3\n\
+                      # TYPE train_loss gauge\n\
+                      train_loss -1.5\n";
+        assert_eq!(r.report_prometheus(), expect);
+    }
+
+    #[test]
+    fn sample_values_flattens_every_metric_kind() {
+        let r = MetricsRegistry::new();
+        r.counter("reqs").add(42);
+        r.gauge("live").set(-3);
+        r.float_gauge("frac").set(0.5);
+        for v in [1.0, 2.0, 4.0, 8.0] {
+            r.histogram("lat").record(v);
+        }
+        let samples: std::collections::BTreeMap<String, f64> =
+            r.sample_values().into_iter().collect();
+        assert_eq!(samples["reqs"], 42.0);
+        assert_eq!(samples["live"], -3.0);
+        assert_eq!(samples["frac"], 0.5);
+        assert_eq!(samples["lat.count"], 4.0);
+        assert!(samples["lat.p50"] >= 1.0 && samples["lat.p99"] <= 8.5);
+        // the histogram read is non-destructive: sampling twice sees
+        // the same window
+        let again: std::collections::BTreeMap<String, f64> =
+            r.sample_values().into_iter().collect();
+        assert_eq!(again["lat.count"], 4.0);
     }
 
     #[test]

@@ -1,0 +1,698 @@
+//! Trace analytics: critical-path categories and cost attribution.
+//!
+//! [`analyze`] walks one run's flight-recorder records and decomposes
+//! each node's **billed lifetime** into four exclusive categories, in
+//! integer nanoseconds so they sum back exactly:
+//!
+//! | category | rule |
+//! |---|---|
+//! | provisioning | `node.request` → `node.ready` (the whole lifetime if the node never became ready) |
+//! | compute | the merged union of work intervals — `serve.batch`, `serve.batch_execute`, and `trial.run` spans plus `work.dispatch`→`work.done`/`work.stale_drop` pairs — clipped to the serving window |
+//! | drain | `node.notice` → termination, minus whatever compute overlapped it (in-flight work during a notice still counts as compute) |
+//! | idle | everything else: ready but unoccupied capacity |
+//!
+//! Termination is the node's first `node.kill`, `node.release`, or
+//! `node.shutdown` record (the engine emits the last of these for
+//! survivors billed at run end); a node with none — possible when the
+//! ring evicted it — ends at the trace's last timestamp. Work intervals
+//! whose completion aged out of the ring are closed at the dispatch's
+//! recorded `eta_s`.
+//!
+//! **Cost attribution** prices each node's lifetime at its catalog rate
+//! (the identical formula [`crate::fleet::FleetEngine`] bills with, so
+//! the per-node costs reconcile against the run's
+//! [`crate::metrics::CostLedger`] total), splits it into *attributed*
+//! (compute seconds) and *wasted* (everything else: provisioning gap,
+//! drain tax, idle over-provisioning), and joins spans back onto node
+//! rates for $/trial (`trial.run`), $/gang-step (`gang.step` ×
+//! `world_size`), and $/tag (the `node.request` launch tag). By
+//! construction `attributed + wasted == total` — the reconciliation
+//! invariant the driver tests pin.
+//!
+//! Voluntary drains (`node.drain_voluntary`, e.g. autoscaler
+//! scale-downs) are *not* drain: the tail of a voluntarily released
+//! node is idle over-provisioning and stays in the wasted column.
+
+use std::collections::BTreeMap;
+
+use crate::cloud::InstanceType;
+use crate::obs::{Record, RecordKind};
+
+/// One node's lifetime decomposition and bill.
+#[derive(Debug, Clone)]
+pub struct NodeBreakdown {
+    /// Node id (trace pid).
+    pub pid: u32,
+    /// Catalog instance name from `node.request`.
+    pub instance: String,
+    /// Spot-priced?
+    pub spot: bool,
+    /// Launch tag (workload label) from `node.request`.
+    pub tag: String,
+    /// Launch request time.
+    pub request_ns: u64,
+    /// Ready time (`None`: still provisioning at termination).
+    pub ready_ns: Option<u64>,
+    /// First preemption notice, if any.
+    pub notice_ns: Option<u64>,
+    /// Termination (kill / release / shutdown) time.
+    pub end_ns: u64,
+    /// Billed lifetime: `end - request`.
+    pub lifetime_ns: u64,
+    /// Exclusive category times; they sum to `lifetime_ns` exactly.
+    pub provisioning_ns: u64,
+    /// Merged work-span occupancy inside the serving window.
+    pub busy_ns: u64,
+    /// Notice→termination time not covered by work.
+    pub drain_ns: u64,
+    /// Ready, unoccupied, not draining.
+    pub idle_ns: u64,
+    /// Catalog $/hour this node billed at.
+    pub rate_usd_hr: f64,
+    /// Lifetime bill (the engine's formula: rate × lifetime hours).
+    pub cost_usd: f64,
+    /// The bill's compute share (rate × busy hours).
+    pub attributed_usd: f64,
+    /// `cost - attributed`: the provisioning/drain/idle tax.
+    pub wasted_usd: f64,
+}
+
+/// Whole-run analysis: per-node breakdowns, fleet-wide category sums,
+/// cost attribution, and the workload-specific extracts (allreduce
+/// share, queue wait, SLO transitions).
+#[derive(Debug, Clone, Default)]
+pub struct Analysis {
+    /// Last timestamp in the trace (virtual t=0 is engine start).
+    pub makespan_ns: u64,
+    /// Per-node breakdowns, ordered by pid.
+    pub nodes: Vec<NodeBreakdown>,
+    /// Σ node provisioning.
+    pub provisioning_ns: u64,
+    /// Σ node compute occupancy.
+    pub busy_ns: u64,
+    /// Σ node drain.
+    pub drain_ns: u64,
+    /// Σ node idle.
+    pub idle_ns: u64,
+    /// Σ node lifetime (= the four categories above, exactly).
+    pub lifetime_ns: u64,
+    /// Σ node bills (reconciles with `CostLedger::total_usd`).
+    pub total_usd: f64,
+    /// Σ node compute shares.
+    pub attributed_usd: f64,
+    /// Σ node wasted shares (`attributed + wasted == total`).
+    pub wasted_usd: f64,
+    /// Bill per launch tag (workload attribution).
+    pub per_tag_usd: BTreeMap<String, f64>,
+    /// Bill per trial id: `trial.run` span time × its node's rate.
+    pub per_trial_usd: BTreeMap<u64, f64>,
+    /// Bill per committed gang step: span time × `world_size` × the
+    /// fleet's mean node rate.
+    pub per_step_usd: BTreeMap<u64, f64>,
+    /// Σ `gang.step` span time.
+    pub step_ns: u64,
+    /// Σ `allreduce_us` across `gang.step` spans.
+    pub allreduce_ns: u64,
+    /// Σ `hfs.backend_get` span time.
+    pub backend_get_ns: u64,
+    /// Mean `serve.batch` head-of-queue wait, seconds.
+    pub queue_wait_mean_s: f64,
+    /// Max `serve.batch` head-of-queue wait, seconds.
+    pub queue_wait_max_s: f64,
+    /// Checkpoint saves (`gang.checkpoint` + `trial.checkpoint`).
+    pub checkpoints: u64,
+    /// Restores (`gang.restore` + `trial.resume`).
+    pub restores: u64,
+    /// Admission-control sheds.
+    pub sheds: u64,
+    /// Scripted storms fired.
+    pub storms: u64,
+    /// Completions dropped for racing a preemption.
+    pub stale_drops: u64,
+    /// `slo.breach` transitions: `(t_ns, metric)`.
+    pub slo_breaches: Vec<(u64, String)>,
+    /// `slo.recover` transitions: `(t_ns, metric)`.
+    pub slo_recoveries: Vec<(u64, String)>,
+}
+
+impl Analysis {
+    /// Wasted spend as a fraction of the total bill (0 when free).
+    pub fn wasted_frac(&self) -> f64 {
+        if self.total_usd > 0.0 {
+            self.wasted_usd / self.total_usd
+        } else {
+            0.0
+        }
+    }
+
+    /// Allreduce share of committed gang-step time (0 with no steps).
+    pub fn allreduce_frac(&self) -> f64 {
+        if self.step_ns > 0 {
+            self.allreduce_ns as f64 / self.step_ns as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// The breakdown for node `pid`, if it appears in the trace.
+    pub fn node(&self, pid: u32) -> Option<&NodeBreakdown> {
+        self.nodes.iter().find(|n| n.pid == pid)
+    }
+}
+
+/// Merge intervals in place and return their union length. Inverted
+/// inputs are dropped.
+fn union_len(intervals: &mut Vec<(u64, u64)>) -> u64 {
+    intervals.retain(|(s, e)| e > s);
+    intervals.sort_unstable();
+    let mut total = 0u64;
+    let mut cur: Option<(u64, u64)> = None;
+    let mut merged = Vec::with_capacity(intervals.len());
+    for &(s, e) in intervals.iter() {
+        match cur {
+            Some((cs, ce)) if s <= ce => cur = Some((cs, ce.max(e))),
+            Some(done) => {
+                total += done.1 - done.0;
+                merged.push(done);
+                cur = Some((s, e));
+            }
+            None => cur = Some((s, e)),
+        }
+    }
+    if let Some(done) = cur {
+        total += done.1 - done.0;
+        merged.push(done);
+    }
+    *intervals = merged;
+    total
+}
+
+/// Length of `merged ∩ [lo, hi]` for already-merged disjoint intervals.
+fn overlap_len(merged: &[(u64, u64)], lo: u64, hi: u64) -> u64 {
+    merged
+        .iter()
+        .map(|&(s, e)| e.min(hi).saturating_sub(s.max(lo)))
+        .sum()
+}
+
+#[derive(Default)]
+struct NodeAcc {
+    request_ns: u64,
+    ready_ns: Option<u64>,
+    notice_ns: Option<u64>,
+    end_ns: Option<u64>,
+    instance: String,
+    spot: bool,
+    tag: String,
+    work: Vec<(u64, u64)>,
+}
+
+/// Analyze one run's records (a [`crate::obs::FlightRecorder`]
+/// snapshot, or a re-imported Chrome trace — see
+/// [`crate::obs::chrome::read_chrome_trace`]).
+pub fn analyze(records: &[Record]) -> Analysis {
+    let mut order: Vec<&Record> = records.iter().collect();
+    order.sort_by_key(|r| (r.ts_ns, r.seq));
+
+    let mut a = Analysis::default();
+    let mut nodes: BTreeMap<u32, NodeAcc> = BTreeMap::new();
+    // open work: (pid, tid) -> (dispatch ts, eta close time)
+    let mut open: BTreeMap<(u32, u64), (u64, u64)> = BTreeMap::new();
+    // trial.run joins: (trial, node, dur)
+    let mut trial_spans: Vec<(u64, u32, u64)> = Vec::new();
+    // gang.step joins: (step, world_size, dur)
+    let mut gang_steps: Vec<(u64, f64, u64)> = Vec::new();
+    let (mut wait_sum, mut wait_n) = (0.0f64, 0u64);
+
+    for r in &order {
+        a.makespan_ns = a.makespan_ns.max(r.end_ns());
+        let farg = |key: &str| r.arg(key).and_then(|v| v.as_f64());
+        match r.name {
+            "node.request" => {
+                let acc = nodes.entry(r.pid).or_default();
+                acc.request_ns = r.ts_ns;
+                acc.instance =
+                    r.arg("instance").and_then(|v| v.as_str()).unwrap_or("").to_string();
+                acc.spot = farg("spot").unwrap_or(0.0) != 0.0;
+                acc.tag = r.arg("tag").and_then(|v| v.as_str()).unwrap_or("").to_string();
+            }
+            "node.ready" => {
+                if let Some(acc) = nodes.get_mut(&r.pid) {
+                    acc.ready_ns.get_or_insert(r.ts_ns);
+                }
+            }
+            "node.notice" => {
+                if let Some(acc) = nodes.get_mut(&r.pid) {
+                    acc.notice_ns.get_or_insert(r.ts_ns);
+                }
+            }
+            "node.kill" | "node.release" | "node.shutdown" => {
+                if let Some(acc) = nodes.get_mut(&r.pid) {
+                    acc.end_ns.get_or_insert(r.ts_ns);
+                }
+            }
+            "work.dispatch" => {
+                let eta = farg("eta_s").map(|s| (s * 1e9) as u64).unwrap_or(r.ts_ns);
+                open.insert((r.pid, r.tid), (r.ts_ns, eta));
+            }
+            "work.done" | "work.stale_drop" => {
+                if r.name == "work.stale_drop" {
+                    a.stale_drops += 1;
+                }
+                if let Some((start, _)) = open.remove(&(r.pid, r.tid)) {
+                    if let Some(acc) = nodes.get_mut(&r.pid) {
+                        acc.work.push((start, r.ts_ns));
+                    }
+                }
+            }
+            "serve.batch" | "serve.batch_execute" | "trial.run" => {
+                if let Some(acc) = nodes.get_mut(&r.pid) {
+                    acc.work.push((r.ts_ns, r.end_ns()));
+                }
+                if r.name == "serve.batch" {
+                    if let Some(w) = farg("oldest_wait_s") {
+                        wait_sum += w;
+                        wait_n += 1;
+                        a.queue_wait_max_s = a.queue_wait_max_s.max(w);
+                    }
+                }
+                if r.name == "trial.run" {
+                    if let RecordKind::Span { dur_ns } = r.kind {
+                        trial_spans.push((r.tid, r.pid, dur_ns));
+                    }
+                }
+            }
+            "gang.step" => {
+                if let RecordKind::Span { dur_ns } = r.kind {
+                    a.step_ns += dur_ns;
+                    let ar = (farg("allreduce_us").unwrap_or(0.0) * 1e3) as u64;
+                    a.allreduce_ns += ar;
+                    gang_steps.push((r.tid, farg("world_size").unwrap_or(0.0), dur_ns));
+                }
+            }
+            "hfs.backend_get" => {
+                if let RecordKind::Span { dur_ns } = r.kind {
+                    a.backend_get_ns += dur_ns;
+                }
+            }
+            "gang.checkpoint" | "trial.checkpoint" => a.checkpoints += 1,
+            "gang.restore" | "trial.resume" => a.restores += 1,
+            "serve.shed" => a.sheds += 1,
+            "fleet.storm" => a.storms += 1,
+            "slo.breach" | "slo.recover" => {
+                let metric =
+                    r.arg("metric").and_then(|v| v.as_str()).unwrap_or("").to_string();
+                if r.name == "slo.breach" {
+                    a.slo_breaches.push((r.ts_ns, metric));
+                } else {
+                    a.slo_recoveries.push((r.ts_ns, metric));
+                }
+            }
+            _ => {}
+        }
+    }
+    // a dispatch whose completion aged out of the ring (or raced run
+    // end) closes at its recorded eta
+    for ((pid, _), (start, eta)) in open {
+        if let Some(acc) = nodes.get_mut(&pid) {
+            acc.work.push((start, eta.max(start)));
+        }
+    }
+    if wait_n > 0 {
+        a.queue_wait_mean_s = wait_sum / wait_n as f64;
+    }
+
+    let mut rate_sum = 0.0f64;
+    for (pid, mut acc) in nodes {
+        let end = acc.end_ns.unwrap_or(a.makespan_ns).max(acc.request_ns);
+        let lifetime = end - acc.request_ns;
+        let prov_end = acc.ready_ns.unwrap_or(end).clamp(acc.request_ns, end);
+        let provisioning = prov_end - acc.request_ns;
+        // clip work to the serving window, then merge
+        for iv in acc.work.iter_mut() {
+            iv.0 = iv.0.clamp(prov_end, end);
+            iv.1 = iv.1.clamp(prov_end, end);
+        }
+        let busy = union_len(&mut acc.work);
+        let drain = match acc.notice_ns {
+            Some(n) => {
+                let s = n.clamp(prov_end, end);
+                (end - s) - overlap_len(&acc.work, s, end)
+            }
+            None => 0,
+        };
+        let idle = lifetime - provisioning - busy - drain;
+
+        let rate = InstanceType::by_name(&acc.instance).map(|s| s.price(acc.spot)).unwrap_or(0.0);
+        // the engine's bill_at formula, term for term
+        let hours = (lifetime as f64 / 1e9) / 3600.0;
+        let cost = rate * hours;
+        let attributed = rate * ((busy as f64 / 1e9) / 3600.0);
+        let wasted = cost - attributed;
+        rate_sum += rate;
+
+        a.provisioning_ns += provisioning;
+        a.busy_ns += busy;
+        a.drain_ns += drain;
+        a.idle_ns += idle;
+        a.lifetime_ns += lifetime;
+        a.total_usd += cost;
+        a.attributed_usd += attributed;
+        a.wasted_usd += wasted;
+        *a.per_tag_usd.entry(acc.tag.clone()).or_default() += cost;
+        a.nodes.push(NodeBreakdown {
+            pid,
+            instance: acc.instance,
+            spot: acc.spot,
+            tag: acc.tag,
+            request_ns: acc.request_ns,
+            ready_ns: acc.ready_ns,
+            notice_ns: acc.notice_ns,
+            end_ns: end,
+            lifetime_ns: lifetime,
+            provisioning_ns: provisioning,
+            busy_ns: busy,
+            drain_ns: drain,
+            idle_ns: idle,
+            rate_usd_hr: rate,
+            cost_usd: cost,
+            attributed_usd: attributed,
+            wasted_usd: wasted,
+        });
+    }
+
+    let node_rate = |pid: u32| a.node(pid).map(|n| n.rate_usd_hr).unwrap_or(0.0);
+    for (trial, pid, dur_ns) in trial_spans {
+        *a.per_trial_usd.entry(trial).or_default() +=
+            node_rate(pid) * ((dur_ns as f64 / 1e9) / 3600.0);
+    }
+    let mean_rate =
+        if a.nodes.is_empty() { 0.0 } else { rate_sum / a.nodes.len() as f64 };
+    for (step, world, dur_ns) in gang_steps {
+        *a.per_step_usd.entry(step).or_default() +=
+            mean_rate * world * ((dur_ns as f64 / 1e9) / 3600.0);
+    }
+    a
+}
+
+fn secs(ns: u64) -> f64 {
+    ns as f64 / 1e9
+}
+
+fn pct(part: u64, whole: u64) -> f64 {
+    if whole > 0 {
+        100.0 * part as f64 / whole as f64
+    } else {
+        0.0
+    }
+}
+
+/// Render an [`Analysis`] as the `hyper report` text: the category
+/// breakdown, the per-node table, the cost attribution, and the SLO
+/// verdicts.
+pub fn render_report(a: &Analysis) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "== critical path (makespan {:.3} s) ==", secs(a.makespan_ns));
+    let lt = a.lifetime_ns;
+    let _ = writeln!(out, "{:<14} {:>12} {:>8}", "category", "node-secs", "share");
+    for (name, ns) in [
+        ("provisioning", a.provisioning_ns),
+        ("compute", a.busy_ns),
+        ("drain", a.drain_ns),
+        ("idle", a.idle_ns),
+    ] {
+        let _ = writeln!(out, "{:<14} {:>12.3} {:>7.1}%", name, secs(ns), pct(ns, lt));
+    }
+    let _ = writeln!(out, "{:<14} {:>12.3} {:>7.1}%", "lifetime", secs(lt), 100.0);
+    if a.step_ns > 0 {
+        let _ = writeln!(
+            out,
+            "allreduce      {:>12.3} {:>7.1}% of {} gang-step secs",
+            secs(a.allreduce_ns),
+            100.0 * a.allreduce_frac(),
+            format!("{:.3}", secs(a.step_ns)),
+        );
+    }
+    if a.backend_get_ns > 0 {
+        let _ = writeln!(out, "backend GETs   {:>12.3}", secs(a.backend_get_ns));
+    }
+
+    let _ = writeln!(out, "\n== nodes ({}) ==", a.nodes.len());
+    let _ = writeln!(
+        out,
+        "{:<5} {:<12} {:<6} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "pid", "instance", "tag", "life(s)", "prov(s)", "busy(s)", "drain(s)", "idle(s)", "cost($)"
+    );
+    for n in &a.nodes {
+        let _ = writeln!(
+            out,
+            "{:<5} {:<12} {:<6} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.4}",
+            n.pid,
+            n.instance,
+            n.tag,
+            secs(n.lifetime_ns),
+            secs(n.provisioning_ns),
+            secs(n.busy_ns),
+            secs(n.drain_ns),
+            secs(n.idle_ns),
+            n.cost_usd,
+        );
+    }
+
+    let _ = writeln!(out, "\n== cost attribution ==");
+    let _ = writeln!(
+        out,
+        "total ${:.4} = attributed ${:.4} + wasted ${:.4} ({:.1}% wasted)",
+        a.total_usd,
+        a.attributed_usd,
+        a.wasted_usd,
+        100.0 * a.wasted_frac(),
+    );
+    for (tag, usd) in &a.per_tag_usd {
+        let tag = if tag.is_empty() { "(untagged)" } else { tag };
+        let _ = writeln!(out, "  tag {tag:<12} ${usd:.4}");
+    }
+    if !a.per_trial_usd.is_empty() {
+        let mut trials: Vec<(&u64, &f64)> = a.per_trial_usd.iter().collect();
+        trials.sort_by(|x, y| y.1.partial_cmp(x.1).unwrap_or(std::cmp::Ordering::Equal));
+        let _ = writeln!(out, "  {} trials, top by cost:", trials.len());
+        for (t, usd) in trials.iter().take(5) {
+            let _ = writeln!(out, "    trial {t:<6} ${usd:.5}");
+        }
+    }
+    if !a.per_step_usd.is_empty() {
+        let n = a.per_step_usd.len() as f64;
+        let sum: f64 = a.per_step_usd.values().sum();
+        let _ = writeln!(
+            out,
+            "  {} gang steps, mean ${:.6}/step, allreduce {:.1}%",
+            a.per_step_usd.len(),
+            sum / n,
+            100.0 * a.allreduce_frac(),
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "\n== events == storms {} · sheds {} · stale drops {} · checkpoints {} · restores {}",
+        a.storms, a.sheds, a.stale_drops, a.checkpoints, a.restores
+    );
+    if a.queue_wait_max_s > 0.0 {
+        let _ = writeln!(
+            out,
+            "queue wait: mean {:.4} s, max {:.4} s",
+            a.queue_wait_mean_s, a.queue_wait_max_s
+        );
+    }
+
+    let _ = writeln!(out, "\n== slo ==");
+    if a.slo_breaches.is_empty() && a.slo_recoveries.is_empty() {
+        let _ = writeln!(out, "no transitions (met throughout, or no monitor attached)");
+    }
+    for (t, m) in &a.slo_breaches {
+        let _ = writeln!(out, "BREACH  {m} at {:.3} s", secs(*t));
+    }
+    for (t, m) in &a.slo_recoveries {
+        let _ = writeln!(out, "RECOVER {m} at {:.3} s", secs(*t));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::FlightRecorder;
+    use crate::sim::SimClock;
+
+    const S: u64 = 1_000_000_000;
+
+    fn rate(name: &str, spot: bool) -> f64 {
+        InstanceType::by_name(name).unwrap().price(spot)
+    }
+
+    /// request 0, ready 10, work [10,20], notice 25, kill 30.
+    fn one_node_trace() -> Vec<Record> {
+        let rec = FlightRecorder::sim(64, SimClock::new());
+        rec.event_at("node.request", 0, 1, 0, vec![
+            ("instance", "m5.xlarge".into()),
+            ("spot", 0u64.into()),
+            ("tag", "serve".into()),
+        ]);
+        rec.event_at("node.ready", 10 * S, 1, 0, vec![]);
+        rec.event_at("work.dispatch", 10 * S, 1, 7, vec![("eta_s", 20.0.into())]);
+        rec.event_at("work.done", 20 * S, 1, 7, vec![]);
+        rec.event_at("node.notice", 25 * S, 1, 0, vec![]);
+        rec.event_at("node.kill", 30 * S, 1, 0, vec![]);
+        rec.snapshot()
+    }
+
+    #[test]
+    fn single_node_partition_is_exact() {
+        let a = analyze(&one_node_trace());
+        let n = a.node(1).unwrap();
+        assert_eq!(n.lifetime_ns, 30 * S);
+        assert_eq!(n.provisioning_ns, 10 * S);
+        assert_eq!(n.busy_ns, 10 * S);
+        assert_eq!(n.drain_ns, 5 * S);
+        assert_eq!(n.idle_ns, 5 * S);
+        assert_eq!(
+            n.provisioning_ns + n.busy_ns + n.drain_ns + n.idle_ns,
+            n.lifetime_ns,
+            "categories partition the lifetime exactly"
+        );
+        let r = rate("m5.xlarge", false);
+        let expect = r * ((30.0) / 3600.0);
+        assert!((n.cost_usd - expect).abs() < 1e-12, "{} vs {expect}", n.cost_usd);
+        assert!((n.attributed_usd + n.wasted_usd - n.cost_usd).abs() < 1e-15);
+        assert_eq!(a.per_tag_usd.len(), 1);
+        assert!((a.per_tag_usd["serve"] - n.cost_usd).abs() < 1e-15);
+        assert_eq!(a.makespan_ns, 30 * S);
+    }
+
+    #[test]
+    fn overlapping_work_records_do_not_double_count() {
+        // the same interval seen as a dispatch/done pair AND a
+        // serve.batch span, plus a second batch overlapping it
+        let rec = FlightRecorder::sim(64, SimClock::new());
+        rec.event_at("node.request", 0, 2, 0, vec![
+            ("instance", "m5.xlarge".into()),
+            ("spot", 1u64.into()),
+            ("tag", "serve".into()),
+        ]);
+        rec.event_at("node.ready", 5 * S, 2, 0, vec![]);
+        rec.event_at("work.dispatch", 10 * S, 2, 1, vec![("eta_s", 14.0.into())]);
+        rec.span_at("serve.batch", 10 * S, 14 * S, 2, 1, vec![("oldest_wait_s", 0.5.into())]);
+        rec.span_at("serve.batch", 12 * S, 18 * S, 2, 2, vec![("oldest_wait_s", 1.5.into())]);
+        rec.event_at("work.done", 14 * S, 2, 1, vec![]);
+        rec.event_at("node.shutdown", 20 * S, 2, 0, vec![]);
+        let a = analyze(&rec.snapshot());
+        let n = a.node(2).unwrap();
+        assert_eq!(n.busy_ns, 8 * S, "union of [10,14] and [12,18]");
+        assert_eq!(n.provisioning_ns, 5 * S);
+        assert_eq!(n.drain_ns, 0);
+        assert_eq!(n.idle_ns, 7 * S);
+        assert!(n.spot);
+        assert!((n.rate_usd_hr - rate("m5.xlarge", true)).abs() < 1e-12);
+        assert!((a.queue_wait_mean_s - 1.0).abs() < 1e-12);
+        assert!((a.queue_wait_max_s - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unmatched_dispatch_closes_at_its_eta_and_clips_to_termination() {
+        // completion evicted/never delivered: the eta says 50 s but the
+        // node died at 40 — busy clips to the kill
+        let rec = FlightRecorder::sim(64, SimClock::new());
+        rec.event_at("node.request", 3, 1, 0, vec![
+            ("instance", "p3.2xlarge".into()),
+            ("spot", 1u64.into()),
+            ("tag", "train".into()),
+        ]);
+        rec.event_at("node.ready", 10 * S, 1, 0, vec![]);
+        rec.event_at("work.dispatch", 20 * S, 1, 0, vec![("eta_s", 50.0.into())]);
+        rec.event_at("node.kill", 40 * S, 1, 0, vec![]);
+        let a = analyze(&rec.snapshot());
+        let n = a.node(1).unwrap();
+        assert_eq!(n.busy_ns, 20 * S, "[20,50] clipped to kill at 40");
+        assert_eq!(n.lifetime_ns, 40 * S - 3);
+        assert_eq!(
+            n.provisioning_ns + n.busy_ns + n.drain_ns + n.idle_ns,
+            n.lifetime_ns
+        );
+    }
+
+    #[test]
+    fn gang_steps_surface_allreduce_share_and_per_step_cost() {
+        let rec = FlightRecorder::sim(64, SimClock::new());
+        rec.event_at("node.request", 0, 1, 0, vec![
+            ("instance", "p3.2xlarge".into()),
+            ("spot", 0u64.into()),
+            ("tag", "train".into()),
+        ]);
+        rec.event_at("node.ready", 0, 1, 0, vec![]);
+        rec.event_at("node.shutdown", 100 * S, 1, 0, vec![]);
+        // two 10 s steps, 2 s of allreduce each, world 4
+        for step in 0..2u64 {
+            rec.span_at("gang.step", step * 10 * S, (step + 1) * 10 * S, 0, step, vec![
+                ("world_size", 4u64.into()),
+                ("allreduce_us", 2_000_000.0.into()),
+            ]);
+        }
+        let a = analyze(&rec.snapshot());
+        assert_eq!(a.step_ns, 20 * S);
+        assert_eq!(a.allreduce_ns, 4 * S);
+        assert!((a.allreduce_frac() - 0.2).abs() < 1e-12);
+        assert_eq!(a.per_step_usd.len(), 2);
+        let expect = rate("p3.2xlarge", false) * 4.0 * (10.0 / 3600.0);
+        assert!((a.per_step_usd[&0] - expect).abs() < 1e-9, "{}", a.per_step_usd[&0]);
+    }
+
+    #[test]
+    fn trial_spans_bill_against_their_nodes_rate() {
+        let rec = FlightRecorder::sim(64, SimClock::new());
+        for pid in [1u32, 2] {
+            rec.event_at("node.request", 0, pid, 0, vec![
+                ("instance", "m5.xlarge".into()),
+                ("spot", 1u64.into()),
+                ("tag", "search".into()),
+            ]);
+            rec.event_at("node.ready", 0, pid, 0, vec![]);
+        }
+        rec.span_at("trial.run", 0, 30 * S, 1, 9, vec![("from_step", 0u64.into())]);
+        rec.span_at("trial.run", 40 * S, 70 * S, 2, 9, vec![("from_step", 10u64.into())]);
+        rec.event_at("node.shutdown", 80 * S, 1, 0, vec![]);
+        rec.event_at("node.shutdown", 80 * S, 2, 0, vec![]);
+        let a = analyze(&rec.snapshot());
+        let expect = rate("m5.xlarge", true) * (60.0 / 3600.0);
+        assert!((a.per_trial_usd[&9] - expect).abs() < 1e-12);
+        // fleet totals still reconcile
+        assert!((a.attributed_usd + a.wasted_usd - a.total_usd).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_transitions_and_event_counters_surface() {
+        let rec = FlightRecorder::sim(64, SimClock::new());
+        rec.event_at("fleet.storm", 60 * S, 0, 0, vec![("kills", 7u64.into())]);
+        rec.event_at("serve.shed", 61 * S, 0, 0, vec![]);
+        rec.event_at("slo.breach", 65 * S, 0, 0, vec![("metric", "p99_s".into())]);
+        rec.event_at("slo.recover", 140 * S, 0, 0, vec![("metric", "p99_s".into())]);
+        let a = analyze(&rec.snapshot());
+        assert_eq!(a.storms, 1);
+        assert_eq!(a.sheds, 1);
+        assert_eq!(a.slo_breaches, vec![(65 * S, "p99_s".to_string())]);
+        assert_eq!(a.slo_recoveries, vec![(140 * S, "p99_s".to_string())]);
+        let text = render_report(&a);
+        assert!(text.contains("BREACH  p99_s at 65.000 s"), "{text}");
+        assert!(text.contains("RECOVER p99_s at 140.000 s"), "{text}");
+    }
+
+    #[test]
+    fn report_renders_every_section() {
+        let a = analyze(&one_node_trace());
+        let text = render_report(&a);
+        for needle in ["critical path", "provisioning", "== nodes (1) ==", "cost attribution",
+                       "wasted", "== slo =="] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+}

@@ -17,7 +17,7 @@ use std::path::Path;
 
 use crate::obs::{ArgValue, Record, RecordKind};
 use crate::util::Json;
-use crate::Result;
+use crate::{Error, Result};
 
 fn arg_json(v: &ArgValue) -> Json {
     match v {
@@ -94,6 +94,84 @@ fn category(name: &str) -> &str {
 pub fn write_chrome_trace(path: &Path, records: &[Record]) -> Result<()> {
     std::fs::write(path, chrome_trace(records).to_string())?;
     Ok(())
+}
+
+/// Intern a string into a `&'static str` (record names and arg keys are
+/// static in the live taxonomy; re-imported traces go through this
+/// pool). Deduplicated process-wide, so repeated imports of the same
+/// trace never grow memory — the pool is bounded by the distinct names
+/// ever seen.
+fn intern(s: &str) -> &'static str {
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex, OnceLock};
+    static POOL: OnceLock<Mutex<BTreeMap<String, &'static str>>> = OnceLock::new();
+    let pool = POOL.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let mut map = pool.lock().unwrap();
+    if let Some(v) = map.get(s) {
+        return v;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    map.insert(s.to_string(), leaked);
+    leaked
+}
+
+/// Parse a Chrome trace-event document (as produced by
+/// [`chrome_trace`]) back into records, so an exported run can be
+/// re-analyzed offline (`hyper report --load trace.json`).
+///
+/// Metadata (`"M"`) events are skipped; `"X"` becomes a span, `"i"` an
+/// instant; numeric args come back as [`ArgValue::F64`] (the export
+/// does not distinguish integer from float). Sequence numbers are
+/// assigned in file order, which the exporter made `(ts, seq)`-sorted —
+/// so same-instant ordering survives the round trip.
+pub fn parse_chrome_trace(text: &str) -> Result<Vec<Record>> {
+    let doc = Json::parse(text)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Json("chrome trace: missing traceEvents array".into()))?;
+    let mut out = Vec::new();
+    for e in events {
+        let ph = e.req_str("ph")?;
+        if ph == "M" {
+            continue;
+        }
+        let ts_ns = (e.req_f64("ts")? * 1e3).round().max(0.0) as u64;
+        let kind = match ph {
+            "X" => RecordKind::Span {
+                dur_ns: (e.get("dur").and_then(Json::as_f64).unwrap_or(0.0) * 1e3).round().max(0.0)
+                    as u64,
+            },
+            "i" => RecordKind::Instant,
+            other => return Err(Error::Json(format!("chrome trace: unknown phase {other:?}"))),
+        };
+        let mut args = Vec::new();
+        if let Some(obj) = e.get("args").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                let val = match v {
+                    Json::Num(n) => ArgValue::F64(*n),
+                    Json::Str(s) => ArgValue::Str(s.clone()),
+                    _ => continue,
+                };
+                args.push((intern(k), val));
+            }
+        }
+        out.push(Record {
+            seq: out.len() as u64,
+            name: intern(e.req_str("name")?),
+            kind,
+            ts_ns,
+            pid: e.req_u64("pid")? as u32,
+            tid: e.req_u64("tid")?,
+            args,
+        });
+    }
+    Ok(out)
+}
+
+/// Read and [`parse_chrome_trace`] the file at `path`.
+pub fn read_chrome_trace(path: &Path) -> Result<Vec<Record>> {
+    parse_chrome_trace(&std::fs::read_to_string(path)?)
 }
 
 #[cfg(test)]
@@ -183,6 +261,83 @@ mod tests {
             events.iter().find(|e| e.get("name").unwrap().as_str() == Some("trial.run")).unwrap();
         assert_eq!(run.get("dur").unwrap().as_f64().unwrap(), 20_000_000.0);
         assert_eq!(run.get("args").unwrap().get("command_hash").unwrap().as_u64(), Some(0xdeadbeef));
+    }
+
+    #[test]
+    fn same_instant_events_export_in_record_order_even_from_shuffled_input() {
+        // ISSUE satellite: deterministic tiebreak — events sharing a
+        // timestamp (notice/kill pairs do, routinely, in virtual time)
+        // must export in sequence order regardless of slice order
+        let rec = FlightRecorder::sim(16, SimClock::new());
+        rec.event_at("node.notice", 60_000_000_000, 3, 0, vec![]);
+        rec.event_at("node.kill", 60_000_000_000, 3, 0, vec![]);
+        rec.event_at("node.request", 60_000_000_000, 4, 0, vec![]);
+        let mut records = rec.snapshot();
+        records.reverse();
+        let doc = chrome_trace(&records);
+        let names: Vec<String> = doc
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() != Some("M"))
+            .map(|e| e.get("name").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(names, vec!["node.notice", "node.kill", "node.request"]);
+        // the timeline renderer applies the same tiebreak
+        let text = crate::obs::render_timeline(&records);
+        let notice = text.find("node.notice").unwrap();
+        let kill = text.find("node.kill").unwrap();
+        let request = text.find("node.request").unwrap();
+        assert!(notice < kill && kill < request, "{text}");
+    }
+
+    #[test]
+    fn parse_back_round_trips_records() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("trace.json");
+        let records = sample();
+        write_chrome_trace(&path, &records).unwrap();
+        let back = read_chrome_trace(&path).unwrap();
+        assert_eq!(back.len(), records.len());
+        // the exporter sorted by (ts, seq); compare against that order
+        let mut sorted: Vec<&Record> = records.iter().collect();
+        sorted.sort_by_key(|r| (r.ts_ns, r.seq));
+        for (orig, re) in sorted.iter().zip(&back) {
+            assert_eq!(orig.name, re.name);
+            assert_eq!(orig.ts_ns, re.ts_ns);
+            assert_eq!(orig.pid, re.pid);
+            assert_eq!(orig.tid, re.tid);
+            match (orig.kind, re.kind) {
+                (RecordKind::Span { dur_ns: a }, RecordKind::Span { dur_ns: b }) => {
+                    assert_eq!(a, b)
+                }
+                (RecordKind::Instant, RecordKind::Instant) => {}
+                other => panic!("kind mismatch: {other:?}"),
+            }
+            for (k, v) in &orig.args {
+                let rv = re.arg(k).expect("arg survives the round trip");
+                match v {
+                    // integers come back as floats; values must agree
+                    ArgValue::U64(_) | ArgValue::F64(_) => {
+                        assert_eq!(v.as_f64(), rv.as_f64(), "arg {k}")
+                    }
+                    ArgValue::Str(s) => assert_eq!(rv.as_str(), Some(s.as_str())),
+                }
+            }
+        }
+        // seq numbers are freshly contiguous
+        for (i, r) in back.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+        }
+    }
+
+    #[test]
+    fn parse_back_rejects_garbage() {
+        assert!(parse_chrome_trace("not json").is_err());
+        assert!(parse_chrome_trace("{}").is_err(), "missing traceEvents");
+        assert!(parse_chrome_trace(r#"{"traceEvents": [{"ph": "?"}]}"#).is_err());
     }
 
     #[test]

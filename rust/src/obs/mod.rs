@@ -29,12 +29,28 @@
 //! for the fleet drivers. Virtual-time call sites usually know their
 //! timestamps exactly and use the `*_at` forms; the scoped [`SpanGuard`]
 //! reads the clock and is meant for wallclock code.
+//!
+//! # Consumers
+//!
+//! Three layers consume the recorded stream (all surfaced by
+//! `hyper report`): [`analyze`] extracts the critical path and the cost
+//! attribution from a snapshot, [`timeseries`] keeps bounded
+//! `(t, value)` series with windowed reducers, and [`slo`] evaluates
+//! declarative objectives with multi-window burn-rate alerting, feeding
+//! its breach/recover transitions *back into* the recorder so alert
+//! timing is assertable from the trace. [`chrome`] exports (and
+//! re-imports) the Perfetto-loadable JSON.
 
 mod ring;
 
+pub mod analyze;
 pub mod chrome;
+pub mod slo;
+pub mod timeseries;
 
 pub use ring::Ring;
+pub use slo::{SloMonitor, SloSpec};
+pub use timeseries::{Sampler, SeriesRing, SeriesSet, SeriesSummary};
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -599,6 +615,54 @@ mod tests {
         assert_eq!(rec.recorded(), 400);
         assert_eq!(rec.len() as u64 + rec.dropped(), 400);
         assert_eq!(rec.len(), 256);
+    }
+
+    #[test]
+    fn hammer_concurrent_push_with_snapshotting_reader_conserves_counts() {
+        // ISSUE satellite: dropped-count exactness across wraparound
+        // while a reader snapshots. 4 writers push 4 * 2000 records
+        // through a 64-slot ring while a reader snapshots continuously;
+        // every snapshot must be internally consistent (contiguous
+        // ascending seqs, <= capacity) and the final accounting exact.
+        let cap = 64;
+        let writers = 4u64;
+        let per = 2000u64;
+        let rec = FlightRecorder::wallclock(cap);
+        std::thread::scope(|s| {
+            for t in 0..writers {
+                let rec = rec.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        rec.event("w", 0, t, vec![("i", i.into())]);
+                    }
+                });
+            }
+            let reader = rec.clone();
+            s.spawn(move || {
+                loop {
+                    let snap = reader.snapshot();
+                    assert!(snap.len() <= cap, "snapshot over capacity: {}", snap.len());
+                    for w in snap.windows(2) {
+                        assert_eq!(
+                            w[0].seq + 1,
+                            w[1].seq,
+                            "snapshot seqs must be contiguous ascending"
+                        );
+                    }
+                    if reader.recorded() >= writers * per {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+            });
+        });
+        assert_eq!(rec.recorded(), writers * per);
+        assert_eq!(rec.len(), cap);
+        assert_eq!(rec.len() as u64 + rec.dropped(), rec.recorded(), "conservation");
+        // the survivors are exactly the newest `cap` seqs
+        let snap = rec.snapshot();
+        assert_eq!(snap.first().unwrap().seq, writers * per - cap as u64);
+        assert_eq!(snap.last().unwrap().seq, writers * per - 1);
     }
 
     #[test]

@@ -1,0 +1,418 @@
+//! Bounded time-series: `(t, value)` sample rings with windowed reducers.
+//!
+//! The flight recorder answers "what happened, in order"; this layer
+//! answers "how did X move over the run" — goodput over time, live nodes
+//! over time, p99 over time. A [`SeriesRing`] is a [`Ring`] of
+//! `(t_ns, value)` samples (newest retained, drops counted, exactly the
+//! flight-recorder overflow policy), and a [`SeriesSet`] is a named,
+//! share-by-clone collection of them that both time domains feed:
+//!
+//! * **virtual time** — drivers push samples on engine timers with the
+//!   sim's own timestamps ([`SeriesSet::push`]), so a traced run stays
+//!   bit-identical to an untraced one;
+//! * **wallclock** — a [`Sampler`] thread polls a live
+//!   [`MetricsRegistry`] every period and records each counter, gauge,
+//!   and histogram percentile as a sample
+//!   ([`SeriesSet::sample_registry`]).
+//!
+//! Reducers are windowed over the *trailing* `window_ns` of the newest
+//! sample — mean, nearest-rank percentile, per-second rate (for
+//! cumulative counters), and an irregular-interval EWMA — so "p99 over
+//! the last 60 s" works identically for both clocks.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::metrics::MetricsRegistry;
+use crate::obs::ring::Ring;
+use crate::obs::{Clock, WallClock};
+
+/// A bounded series of `(t_ns, value)` samples with windowed reducers.
+///
+/// Samples must be pushed in non-decreasing time order (both feeders
+/// are monotone); reducers assume it.
+#[derive(Debug, Clone)]
+pub struct SeriesRing {
+    ring: Ring<(u64, f64)>,
+}
+
+impl SeriesRing {
+    /// An empty series retaining at most `capacity` samples (min 1).
+    pub fn new(capacity: usize) -> Self {
+        Self { ring: Ring::new(capacity) }
+    }
+
+    /// Append a sample.
+    pub fn push(&mut self, t_ns: u64, value: f64) {
+        self.ring.push((t_ns, value));
+    }
+
+    /// Samples retained.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// No samples retained?
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Samples evicted to bound memory.
+    pub fn dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+
+    /// The newest sample.
+    pub fn last(&self) -> Option<(u64, f64)> {
+        self.ring.iter().last().copied()
+    }
+
+    /// Clone of the retained samples, oldest → newest.
+    pub fn samples(&self) -> Vec<(u64, f64)> {
+        self.ring.snapshot()
+    }
+
+    /// Retained samples inside the trailing window: `t` within
+    /// `window_ns` of the newest sample (inclusive).
+    fn window(&self, window_ns: u64) -> impl Iterator<Item = (u64, f64)> + '_ {
+        let cutoff = self.last().map(|(t, _)| t.saturating_sub(window_ns)).unwrap_or(0);
+        self.ring.iter().copied().filter(move |(t, _)| *t >= cutoff)
+    }
+
+    /// Mean value over the trailing window; `None` when empty.
+    pub fn mean(&self, window_ns: u64) -> Option<f64> {
+        let (mut sum, mut n) = (0.0, 0u64);
+        for (_, v) in self.window(window_ns) {
+            sum += v;
+            n += 1;
+        }
+        (n > 0).then(|| sum / n as f64)
+    }
+
+    /// Nearest-rank percentile (`q` in `[0, 1]`) over the trailing
+    /// window; `None` when empty.
+    pub fn percentile(&self, q: f64, window_ns: u64) -> Option<f64> {
+        let mut vals: Vec<f64> = self.window(window_ns).map(|(_, v)| v).collect();
+        if vals.is_empty() {
+            return None;
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let idx = ((q.clamp(0.0, 1.0)) * (vals.len() - 1) as f64).round() as usize;
+        Some(vals[idx])
+    }
+
+    /// Per-second growth rate of a cumulative series over the trailing
+    /// window: `(v_last - v_first) / (t_last - t_first)`. `None` with
+    /// fewer than two samples or zero elapsed time.
+    pub fn rate_per_s(&self, window_ns: u64) -> Option<f64> {
+        let mut it = self.window(window_ns);
+        let first = it.next()?;
+        let last = it.last()?;
+        let dt_s = (last.0.saturating_sub(first.0)) as f64 / 1e9;
+        (dt_s > 0.0).then(|| (last.1 - first.1) / dt_s)
+    }
+
+    /// Irregular-interval EWMA over the whole retained series: each
+    /// step decays the running value by `0.5^(dt / half_life_ns)`, so
+    /// unevenly spaced samples weight by age, not by count. `None` when
+    /// empty.
+    pub fn ewma(&self, half_life_ns: u64) -> Option<f64> {
+        let hl = half_life_ns.max(1) as f64;
+        let mut it = self.ring.iter().copied();
+        let (mut t_prev, mut acc) = it.next()?;
+        for (t, v) in it {
+            let w = 0.5f64.powf((t.saturating_sub(t_prev)) as f64 / hl);
+            acc = acc * w + v * (1.0 - w);
+            t_prev = t;
+        }
+        Some(acc)
+    }
+}
+
+/// One row of [`SeriesSet::summaries`]: the windowed reducers of one
+/// named series, ready to render.
+#[derive(Debug, Clone)]
+pub struct SeriesSummary {
+    /// Series name.
+    pub name: String,
+    /// Samples retained.
+    pub len: usize,
+    /// Samples evicted.
+    pub dropped: u64,
+    /// Newest value.
+    pub last: f64,
+    /// Windowed mean.
+    pub mean: f64,
+    /// Windowed nearest-rank p99.
+    pub p99: f64,
+}
+
+struct SeriesSetInner {
+    enabled: bool,
+    capacity: usize,
+    series: Mutex<std::collections::BTreeMap<String, SeriesRing>>,
+}
+
+/// A named collection of [`SeriesRing`]s. Clones share state (`Arc`
+/// inside), mirroring [`crate::obs::FlightRecorder`]: one set threads
+/// through a driver and its sampler. A disabled set
+/// ([`SeriesSet::disabled`]) drops every push on one boolean check.
+#[derive(Clone)]
+pub struct SeriesSet {
+    inner: Arc<SeriesSetInner>,
+}
+
+impl std::fmt::Debug for SeriesSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SeriesSet")
+            .field("enabled", &self.inner.enabled)
+            .field("names", &self.names())
+            .finish()
+    }
+}
+
+impl Default for SeriesSet {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl SeriesSet {
+    /// An enabled set whose series each retain `capacity` samples.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Arc::new(SeriesSetInner {
+                enabled: true,
+                capacity: capacity.max(1),
+                series: Mutex::new(std::collections::BTreeMap::new()),
+            }),
+        }
+    }
+
+    /// A set that records nothing (the default everywhere a series set
+    /// was not explicitly attached).
+    pub fn disabled() -> Self {
+        Self {
+            inner: Arc::new(SeriesSetInner {
+                enabled: false,
+                capacity: 1,
+                series: Mutex::new(std::collections::BTreeMap::new()),
+            }),
+        }
+    }
+
+    /// Is this set recording?
+    pub fn is_enabled(&self) -> bool {
+        self.inner.enabled
+    }
+
+    /// Append a sample to the series named `name` (created on first
+    /// touch). No-op when disabled.
+    pub fn push(&self, name: &str, t_ns: u64, value: f64) {
+        if !self.inner.enabled {
+            return;
+        }
+        let mut map = self.inner.series.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| SeriesRing::new(self.inner.capacity))
+            .push(t_ns, value);
+    }
+
+    /// Names of every recorded series, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.series.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Clone of the series named `name`, if recorded.
+    pub fn get(&self, name: &str) -> Option<SeriesRing> {
+        self.inner.series.lock().unwrap().get(name).cloned()
+    }
+
+    /// Sample every value a [`MetricsRegistry`] currently exposes
+    /// (counters, gauges, float gauges, and histogram `p50`/`p99`/
+    /// `count` — see [`MetricsRegistry::sample_values`]) at time `t_ns`.
+    pub fn sample_registry(&self, t_ns: u64, reg: &MetricsRegistry) {
+        if !self.inner.enabled {
+            return;
+        }
+        for (name, value) in reg.sample_values() {
+            self.push(&name, t_ns, value);
+        }
+    }
+
+    /// Windowed reducer summary of every series, sorted by name.
+    pub fn summaries(&self, window_ns: u64) -> Vec<SeriesSummary> {
+        let map = self.inner.series.lock().unwrap();
+        map.iter()
+            .filter_map(|(name, s)| {
+                let (_, last) = s.last()?;
+                Some(SeriesSummary {
+                    name: name.clone(),
+                    len: s.len(),
+                    dropped: s.dropped(),
+                    last,
+                    mean: s.mean(window_ns).unwrap_or(last),
+                    p99: s.percentile(0.99, window_ns).unwrap_or(last),
+                })
+            })
+            .collect()
+    }
+}
+
+/// Wallclock feeder: a background thread that polls a
+/// [`MetricsRegistry`] into a [`SeriesSet`] every `period` until
+/// stopped (or dropped). The virtual-time drivers never need this —
+/// they push on engine timers — but the threaded layers (`ServeStack`,
+/// HFS) have no timer loop of their own.
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Sampler {
+    /// Start sampling `reg` into `set` every `period`. One sample is
+    /// taken immediately; timestamps are wallclock nanoseconds since
+    /// the sampler started.
+    pub fn start(set: SeriesSet, reg: MetricsRegistry, period: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let clock = WallClock::new();
+            while !stop2.load(Ordering::Relaxed) {
+                set.sample_registry(clock.now_ns(), &reg);
+                std::thread::sleep(period);
+            }
+        });
+        Self { stop, handle: Some(handle) }
+    }
+
+    /// Stop the sampling thread and wait for it to exit.
+    pub fn stop(mut self) {
+        self.join();
+    }
+
+    fn join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(samples: &[(u64, f64)]) -> SeriesRing {
+        let mut s = SeriesRing::new(1024);
+        for (t, v) in samples {
+            s.push(*t, *v);
+        }
+        s
+    }
+
+    #[test]
+    fn windowed_mean_and_percentile() {
+        // samples at 0..10 s, values 0..10; a 4 s window sees 6..10
+        let s = series(&(0..=10).map(|i| (i * 1_000_000_000, i as f64)).collect::<Vec<_>>());
+        assert_eq!(s.mean(4_000_000_000), Some(8.0));
+        assert_eq!(s.percentile(1.0, 4_000_000_000), Some(10.0));
+        assert_eq!(s.percentile(0.0, 4_000_000_000), Some(6.0));
+        // whole-series reducers via a huge window
+        assert_eq!(s.mean(u64::MAX), Some(5.0));
+        assert_eq!(s.last(), Some((10_000_000_000, 10.0)));
+    }
+
+    #[test]
+    fn rate_of_a_cumulative_counter() {
+        // a counter climbing 7/s sampled every second
+        let s = series(&(0..=10).map(|i| (i * 1_000_000_000, (7 * i) as f64)).collect::<Vec<_>>());
+        let r = s.rate_per_s(u64::MAX).unwrap();
+        assert!((r - 7.0).abs() < 1e-9, "{r}");
+        // windowed rate uses only the trailing samples
+        let r4 = s.rate_per_s(4_000_000_000).unwrap();
+        assert!((r4 - 7.0).abs() < 1e-9, "{r4}");
+        assert_eq!(series(&[(0, 1.0)]).rate_per_s(u64::MAX), None, "one sample has no rate");
+    }
+
+    #[test]
+    fn ewma_decays_toward_recent_values() {
+        let s = series(&[(0, 0.0), (1_000_000_000, 100.0)]);
+        // dt == half-life: acc = 0*0.5 + 100*0.5
+        assert_eq!(s.ewma(1_000_000_000), Some(50.0));
+        // a long gap forgets the old value almost entirely
+        let s = series(&[(0, 1000.0), (100_000_000_000, 1.0)]);
+        let e = s.ewma(1_000_000_000).unwrap();
+        assert!(e < 1.001, "{e}");
+    }
+
+    #[test]
+    fn ring_bound_applies_per_series() {
+        let set = SeriesSet::new(4);
+        for i in 0..10u64 {
+            set.push("x", i, i as f64);
+        }
+        let s = set.get("x").unwrap();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.dropped(), 6);
+        assert_eq!(s.samples(), vec![(6, 6.0), (7, 7.0), (8, 8.0), (9, 9.0)]);
+    }
+
+    #[test]
+    fn disabled_set_records_nothing() {
+        let set = SeriesSet::disabled();
+        assert!(!set.is_enabled());
+        set.push("x", 0, 1.0);
+        set.sample_registry(0, &MetricsRegistry::new());
+        assert!(set.names().is_empty());
+        assert!(set.get("x").is_none());
+    }
+
+    #[test]
+    fn registry_sampling_records_counters_gauges_and_histogram_percentiles() {
+        let reg = MetricsRegistry::new();
+        reg.counter("reqs").add(42);
+        reg.gauge("live").set(3);
+        reg.float_gauge("frac").set(0.5);
+        for i in 1..=100 {
+            reg.histogram("lat").record(i as f64);
+        }
+        let set = SeriesSet::new(16);
+        set.sample_registry(1_000, &reg);
+        assert_eq!(set.get("reqs").unwrap().last(), Some((1_000, 42.0)));
+        assert_eq!(set.get("live").unwrap().last(), Some((1_000, 3.0)));
+        assert_eq!(set.get("frac").unwrap().last(), Some((1_000, 0.5)));
+        assert_eq!(set.get("lat.count").unwrap().last(), Some((1_000, 100.0)));
+        let (_, p99) = set.get("lat.p99").unwrap().last().unwrap();
+        assert!(p99 >= 90.0, "{p99}");
+        // summaries cover every series
+        let sums = set.summaries(u64::MAX);
+        assert_eq!(sums.len(), set.names().len());
+        assert!(sums.iter().any(|s| s.name == "reqs" && s.last == 42.0));
+    }
+
+    #[test]
+    fn sampler_thread_feeds_the_set_until_stopped() {
+        let reg = MetricsRegistry::new();
+        reg.counter("ticks").inc();
+        let set = SeriesSet::new(1024);
+        let sampler = Sampler::start(set.clone(), reg.clone(), Duration::from_millis(2));
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while set.get("ticks").map(|s| s.len()).unwrap_or(0) < 3 {
+            assert!(std::time::Instant::now() < deadline, "sampler never sampled");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        sampler.stop();
+        let n = set.get("ticks").unwrap().len();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(set.get("ticks").unwrap().len(), n, "stopped sampler stays stopped");
+    }
+}

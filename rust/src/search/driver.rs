@@ -852,6 +852,62 @@ mod tests {
         assert_eq!(d.metrics.float_gauge("search.best_loss").get(), r.best_loss);
     }
 
+    /// ISSUE 9 acceptance: the analyzer reconciles the search-storm
+    /// trace exactly — node category partitions, ledger totals, and
+    /// per-trial costs (every trial ran exactly its 40 step-seconds of
+    /// segments, pause + resume included, so all eight bill identically).
+    #[test]
+    fn analyzer_reconciles_per_trial_costs_and_the_ledger() {
+        use crate::obs::analyze::analyze;
+        use crate::obs::FlightRecorder;
+        use crate::sim::SimClock;
+
+        let mut cfg = exact_cfg(SearchAlgo::Grid);
+        cfg.search.trials = 8;
+        cfg.search.max_steps = 40;
+        cfg.storm = vec![StormEvent { at_s: 70.0, kills: 2, notice_s: 3.0 }];
+        let mut d = SearchDriver::new(cfg, store(), &lr_space(), "train --lr {lr}").unwrap();
+        let rec = FlightRecorder::sim(1 << 16, SimClock::new());
+        d.set_obs(rec.clone());
+        let r = d.run().unwrap();
+        assert_eq!((r.completed, r.lost), (8, 0));
+        assert_eq!(rec.dropped(), 0);
+
+        let a = analyze(&rec.snapshot());
+        for n in &a.nodes {
+            assert_eq!(
+                n.provisioning_ns + n.busy_ns + n.drain_ns + n.idle_ns,
+                n.lifetime_ns,
+                "node {}: category times must partition the billed lifetime",
+                n.pid
+            );
+        }
+        let tol = 1e-9 * r.cost_usd.max(1.0);
+        assert!(
+            (a.total_usd - r.cost_usd).abs() <= tol,
+            "trace-derived ${} vs ledger ${}",
+            a.total_usd,
+            r.cost_usd
+        );
+        assert!((a.attributed_usd + a.wasted_usd - a.total_usd).abs() <= tol);
+        // zero replayed steps ⇒ every trial ran exactly 40 segment-secs,
+        // so all eight bill the same 40 s at the on-demand m5.xlarge rate
+        assert_eq!(a.per_trial_usd.len(), 8);
+        let rate = crate::cloud::InstanceType::by_name("m5.xlarge").unwrap().price(false);
+        let expect = rate * (40.0 / 3600.0);
+        for (trial, usd) in &a.per_trial_usd {
+            assert!(
+                (usd - expect).abs() < 1e-9,
+                "trial {trial}: ${usd} vs ${expect}"
+            );
+        }
+        // trace counters agree with the report
+        assert_eq!(a.restores, r.resumes);
+        assert_eq!(a.checkpoints, r.checkpoints);
+        assert_eq!(a.storms, 1);
+        assert!(a.drain_ns > 0, "the noticed nodes drained");
+    }
+
     #[test]
     fn builds_and_runs_from_a_recipe_search_stanza() {
         let yaml = r#"

@@ -27,7 +27,7 @@ use crate::cloud::InstanceType;
 use crate::fleet::{FleetConfig, FleetEngine, FleetStats, FleetWorkload, LaunchSpec, NodeId,
                    PriceTraceConfig};
 use crate::metrics::{Histogram, HistogramSnapshot};
-use crate::obs::FlightRecorder;
+use crate::obs::{FlightRecorder, SeriesSet, SloMonitor, SloSpec};
 use crate::sim::{ClosedLoop, OpenLoop, RateSchedule, SimRng, SimTime};
 use crate::Result;
 
@@ -88,6 +88,12 @@ pub struct ServeSimConfig {
     pub seed: u64,
     /// Record a per-tick timeline into [`ServeReport::trace`].
     pub trace: bool,
+    /// Latency objective evaluated at every control tick: an
+    /// [`crate::obs::SloMonitor`] over the windowed p99 emits
+    /// `slo.breach` / `slo.recover` transitions onto the attached flight
+    /// recorder. `None` (the default) monitors nothing. Purely an
+    /// observer — it never influences scaling decisions.
+    pub slo: Option<SloSpec>,
 }
 
 impl Default for ServeSimConfig {
@@ -109,6 +115,7 @@ impl Default for ServeSimConfig {
             storm: Vec::new(),
             seed: 0,
             trace: false,
+            slo: None,
         }
     }
 }
@@ -192,12 +199,18 @@ pub struct ServeSim {
     cfg: ServeSimConfig,
     stats: FleetStats,
     obs: FlightRecorder,
+    series: SeriesSet,
 }
 
 impl ServeSim {
     /// Build a simulator for one scenario configuration.
     pub fn new(cfg: ServeSimConfig) -> Self {
-        Self { cfg, stats: FleetStats::default(), obs: FlightRecorder::disabled() }
+        Self {
+            cfg,
+            stats: FleetStats::default(),
+            obs: FlightRecorder::disabled(),
+            series: SeriesSet::disabled(),
+        }
     }
 
     /// Attach a flight recorder before [`ServeSim::run`]: the fleet
@@ -207,6 +220,14 @@ impl ServeSim {
     /// virtual time (one pid per replica).
     pub fn set_obs(&mut self, obs: FlightRecorder) {
         self.obs = obs;
+    }
+
+    /// Attach a time-series set before [`ServeSim::run`]: every
+    /// autoscaler control tick pushes the windowed p99, live replica
+    /// count, queue depth, and cumulative completions as virtual-time
+    /// samples (`serve.window_p99_s`, `serve.live`, ...).
+    pub fn set_series(&mut self, series: SeriesSet) {
+        self.series = series;
     }
 
     /// Fleet-level counters of the last run (preemptions, storm firing
@@ -252,6 +273,8 @@ impl ServeSim {
             last_completion: SimTime::ZERO,
             trace: Vec::new(),
             obs: self.obs.clone(),
+            slo: self.cfg.slo.clone().map(|s| SloMonitor::new(s, self.obs.clone())),
+            series: self.series.clone(),
         };
         engine.set_obs(self.obs.clone());
         engine.run(&mut w)?;
@@ -324,6 +347,10 @@ struct ServeWorkload<'a> {
     last_completion: SimTime,
     trace: Vec<TickTrace>,
     obs: FlightRecorder,
+    /// Burn-rate monitor over the tick-windowed p99 (observer only).
+    slo: Option<SloMonitor>,
+    /// Per-tick virtual-time samples (observer only).
+    series: SeriesSet,
 }
 
 impl ServeWorkload<'_> {
@@ -422,6 +449,24 @@ impl ServeWorkload<'_> {
             live,
             provisioning,
         };
+        // SLO + time-series observers read the tick's windowed signals
+        // and never touch the engine, so a monitored run is bit-identical
+        // to a bare one. Empty windows carry no latency evidence and are
+        // skipped by the monitor (a drained system is not "good", just
+        // silent).
+        if let Some(slo) = self.slo.as_mut() {
+            if snap.count > 0 {
+                slo.observe(now.as_nanos(), snap.p99);
+            }
+        }
+        if self.series.is_enabled() {
+            let t = now.as_nanos();
+            self.series.push("serve.window_p99_s", t, snap.p99);
+            self.series.push("serve.live", t, live as f64);
+            self.series.push("serve.queue_depth", t, self.queue.len() as f64);
+            self.series.push("serve.completed", t, self.completed as f64);
+            self.series.push("serve.shed", t, self.shed as f64);
+        }
         match self.scaler.decide(&sig) {
             ScaleDecision::Hold => {}
             ScaleDecision::Up(n) => {
@@ -924,5 +969,117 @@ mod tests {
         );
         assert!(r.replicas_launched > 4, "the fleet was rebuilt after the spike");
         assert!(r.makespan_s > 90.0, "completions resumed after the recovery");
+    }
+
+    /// ISSUE 9 acceptance: the SLO monitor pages from the trace alone —
+    /// `slo.breach` lands inside the storm's capacity gap, `slo.recover`
+    /// only after replacement capacity refills the fleet, and the
+    /// transitions strictly alternate.
+    #[test]
+    fn slo_monitor_pages_inside_the_storm_and_recovers_after_refill() {
+        use crate::obs::FlightRecorder;
+
+        let mut cfg = storm_cfg();
+        // pre-storm windows sit well under 0.1 s; the post-storm
+        // single-replica overload pushes the window p99 to ~0.16 s
+        cfg.slo = Some(SloSpec::new("serve.window_p99_s", 0.1, 60.0));
+        let rec = FlightRecorder::sim(1 << 20, crate::sim::SimClock::new());
+        let mut sim = ServeSim::new(cfg);
+        sim.set_obs(rec.clone());
+        let r = sim.run(Load::Open(OpenLoop::poisson(1200.0)), 180.0).unwrap();
+        assert_eq!(r.completed, r.admitted, "monitoring must not drop work");
+
+        let records = rec.snapshot();
+        let transitions: Vec<_> = records
+            .iter()
+            .filter(|x| x.name == "slo.breach" || x.name == "slo.recover")
+            .collect();
+        assert!(!transitions.is_empty(), "a 7-of-8 storm must page");
+        assert_eq!(transitions[0].name, "slo.breach", "the page opens the incident");
+        let breach_s = transitions[0].ts_ns as f64 / 1e9;
+        assert!(
+            (60.0..=80.0).contains(&breach_s),
+            "first page inside the storm window, got t={breach_s}"
+        );
+        assert_eq!(
+            transitions[0].arg("metric").unwrap().as_str(),
+            Some("serve.window_p99_s")
+        );
+        assert!(transitions[0].arg("burn_short").unwrap().as_f64().unwrap() >= 2.0);
+        let last = transitions.last().unwrap();
+        assert_eq!(last.name, "slo.recover", "the refilled fleet clears the page");
+        let recover_s = last.ts_ns as f64 / 1e9;
+        assert!(
+            recover_s > breach_s + 10.0,
+            "recovery waits for replacement capacity, got t={recover_s}"
+        );
+        for pair in transitions.windows(2) {
+            assert_ne!(pair[0].name, pair[1].name, "transitions strictly alternate");
+        }
+    }
+
+    #[test]
+    fn tick_series_capture_the_storm_for_the_windowed_reducers() {
+        let mut sim = ServeSim::new(storm_cfg());
+        let set = SeriesSet::new(4096);
+        sim.set_series(set.clone());
+        let r = sim.run(Load::Open(OpenLoop::poisson(1200.0)), 120.0).unwrap();
+        assert_eq!(r.completed, r.admitted);
+
+        let live = set.get("serve.live").expect("live series");
+        assert!(!live.is_empty());
+        // the storm knocks the live count below the starting 8...
+        assert!(live.samples().iter().any(|(_, v)| *v < 8.0), "{:?}", live.samples());
+        // ...and the capacity gap shows up in the p99 series
+        let p99 = set.get("serve.window_p99_s").expect("p99 series");
+        assert!(p99.percentile(1.0, u64::MAX).unwrap() > 0.1);
+        // completions are cumulative: the windowed rate is a goodput
+        let rate = set.get("serve.completed").unwrap().rate_per_s(u64::MAX).unwrap();
+        assert!(rate > 0.0, "goodput rate {rate}");
+        assert!(set.names().contains(&"serve.queue_depth".to_string()));
+    }
+
+    /// ISSUE 9 acceptance: `obs::analyze` reconciles the storm scenario
+    /// exactly — per-node category times partition the billed lifetime,
+    /// and attributed + wasted spend equals the engine's own ledger.
+    #[test]
+    fn analyzer_reconciles_storm_costs_and_node_partitions() {
+        use crate::obs::analyze::analyze;
+        use crate::obs::FlightRecorder;
+
+        let rec = FlightRecorder::sim(1 << 20, crate::sim::SimClock::new());
+        let mut sim = ServeSim::new(storm_cfg());
+        sim.set_obs(rec.clone());
+        let r = sim.run(Load::Open(OpenLoop::poisson(1200.0)), 60.0).unwrap();
+        assert_eq!(rec.dropped(), 0, "the whole run fits the recorder");
+
+        let a = analyze(&rec.snapshot());
+        assert!(a.nodes.len() >= 8, "every replica surfaced: {}", a.nodes.len());
+        for n in &a.nodes {
+            assert_eq!(
+                n.provisioning_ns + n.busy_ns + n.drain_ns + n.idle_ns,
+                n.lifetime_ns,
+                "node {}: category times must partition the billed lifetime",
+                n.pid
+            );
+        }
+        // the analyzer's cost model reconciles against the engine ledger
+        let tol = 1e-9 * r.cost_usd.max(1.0);
+        assert!(
+            (a.total_usd - r.cost_usd).abs() <= tol,
+            "trace-derived ${} vs ledger ${}",
+            a.total_usd,
+            r.cost_usd
+        );
+        assert!((a.attributed_usd + a.wasted_usd - a.total_usd).abs() <= tol);
+        assert!(
+            a.wasted_frac() > 0.0 && a.wasted_frac() < 1.0,
+            "a storm both wastes and uses spend: {}",
+            a.wasted_frac()
+        );
+        // event counters agree with the report
+        assert_eq!(a.sheds, r.shed);
+        assert_eq!(a.storms, 1);
+        assert!(a.queue_wait_max_s > 0.0, "overload shows up in batch waits");
     }
 }

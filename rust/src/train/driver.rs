@@ -38,7 +38,7 @@ use crate::config::{GangMode, TrainConfig};
 use crate::fleet::{FleetConfig, FleetEngine, FleetStats, FleetWorkload, LaunchSpec, NodeId,
                    PriceTraceConfig};
 use crate::metrics::MetricsRegistry;
-use crate::obs::FlightRecorder;
+use crate::obs::{FlightRecorder, SeriesSet};
 use crate::scheduler::CheckpointStore;
 use crate::sim::SimTime;
 use crate::storage::StoreHandle;
@@ -203,6 +203,7 @@ pub struct TrainDriver {
     stats: FleetStats,
     ran: bool,
     obs: FlightRecorder,
+    series: SeriesSet,
 }
 
 impl TrainDriver {
@@ -269,6 +270,7 @@ impl TrainDriver {
             stats: FleetStats::default(),
             ran: false,
             obs: FlightRecorder::disabled(),
+            series: SeriesSet::disabled(),
         })
     }
 
@@ -280,6 +282,14 @@ impl TrainDriver {
     /// protocol from the trace alone (see `docs/OBSERVABILITY.md`).
     pub fn set_obs(&mut self, obs: FlightRecorder) {
         self.obs = obs;
+    }
+
+    /// Attach a time-series set before [`TrainDriver::run`]: every step
+    /// commit pushes the committed world size, cumulative steps, and
+    /// current loss as virtual-time samples (`train.world`,
+    /// `train.committed_steps`, `train.loss`).
+    pub fn set_series(&mut self, series: SeriesSet) {
+        self.series = series;
     }
 
     /// The [`TrainDriverConfig`] a recipe experiment describes: the
@@ -628,6 +638,12 @@ impl FleetWorkload for GangWorkload<'_> {
                 ],
             );
         }
+        if d.series.is_enabled() {
+            let t = now.as_nanos();
+            d.series.push("train.world", t, world as f64);
+            d.series.push("train.committed_steps", t, d.committed as f64);
+            d.series.push("train.loss", t, loss_at(d.cfg.train.seed, d.committed));
+        }
         let ck = d.cfg.train.checkpoint_every_steps;
         if ck > 0 && d.committed % ck == 0 {
             d.save_checkpoint(now, "periodic")?;
@@ -948,5 +964,80 @@ experiments:
             let covered: u64 = shards.iter().map(|s| s.len() as u64).sum();
             assert_eq!(covered, 8, "step {} at world {}", c.step, c.world);
         }
+    }
+
+    #[test]
+    fn commit_series_track_world_size_and_progress() {
+        // commits at t=57, 59, ..., 75 (2 s steps from ready at 55):
+        // the cumulative-steps series climbs 1 → 10 over 18 s = 0.5/s
+        let mut d = TrainDriver::new(exact_cfg(4, 2, 10), store()).unwrap();
+        let set = SeriesSet::new(1024);
+        d.set_series(set.clone());
+        let r = d.run().unwrap();
+        assert_eq!(r.committed_steps, 10);
+        let world = set.get("train.world").expect("world series");
+        assert_eq!(world.len(), 10);
+        assert!(world.samples().iter().all(|(_, v)| *v == 4.0));
+        let steps = set.get("train.committed_steps").expect("steps series");
+        assert_eq!(steps.last().unwrap().1, 10.0);
+        let rate = steps.rate_per_s(u64::MAX).unwrap();
+        assert!((rate - 0.5).abs() < 1e-9, "step rate {rate}");
+        assert!(set.get("train.loss").is_some());
+    }
+
+    /// ISSUE 9 acceptance: the analyzer reconciles the elastic-storm
+    /// trace exactly — per-node category times partition the billed
+    /// lifetime, attributed + wasted equals the engine ledger, and the
+    /// gang steps surface an allreduce share and per-step costs.
+    #[test]
+    fn analyzer_reconciles_the_storm_trace_against_the_ledger() {
+        use crate::obs::analyze::analyze;
+        use crate::obs::FlightRecorder;
+        use crate::sim::SimClock;
+
+        let mut cfg = exact_cfg(4, 2, 30);
+        cfg.storm = vec![StormEvent { at_s: 60.0, kills: 2, notice_s: 5.0 }];
+        // a real allreduce (default net, 100 MB model) so the share is
+        // observable in the step spans
+        cfg.train.model_bytes = 100 << 20;
+        cfg.net = NetworkModel::default();
+        let mut d = TrainDriver::new(cfg, store()).unwrap();
+        let rec = FlightRecorder::sim(1 << 16, SimClock::new());
+        d.set_obs(rec.clone());
+        let r = d.run().unwrap();
+        assert_eq!(r.committed_steps, 30);
+        assert_eq!(rec.dropped(), 0);
+
+        let a = analyze(&rec.snapshot());
+        assert_eq!(a.nodes.len(), r.nodes_launched, "every launch surfaced");
+        for n in &a.nodes {
+            assert_eq!(
+                n.provisioning_ns + n.busy_ns + n.drain_ns + n.idle_ns,
+                n.lifetime_ns,
+                "node {}: category times must partition the billed lifetime",
+                n.pid
+            );
+        }
+        let tol = 1e-9 * r.cost_usd.max(1.0);
+        assert!(
+            (a.total_usd - r.cost_usd).abs() <= tol,
+            "trace-derived ${} vs ledger ${}",
+            a.total_usd,
+            r.cost_usd
+        );
+        assert!((a.attributed_usd + a.wasted_usd - a.total_usd).abs() <= tol);
+        // the two storm victims drained; their tails are in the drain
+        // column, not idle
+        assert!(a.drain_ns > 0, "noticed victims record drain time");
+        // allreduce share of committed step time is visible and sane
+        assert!(
+            a.allreduce_frac() > 0.0 && a.allreduce_frac() < 1.0,
+            "allreduce frac {}",
+            a.allreduce_frac()
+        );
+        assert_eq!(a.per_step_usd.len(), 30, "every committed step is priced");
+        assert!(a.per_step_usd.values().all(|c| *c > 0.0));
+        assert_eq!(a.checkpoints, r.checkpoints);
+        assert_eq!(a.storms, 1);
     }
 }
