@@ -39,6 +39,7 @@ fn closed_loop_rps(max_batch: usize, obs: FlightRecorder) -> f64 {
             max_batch,
             max_batch_delay: Duration::from_millis(2),
             workers: WORKERS,
+            adaptive: None,
         },
         move |_| -> Box<dyn BatchBackend> {
             Box::new(SyntheticBackend::new(BASE_S, PER_ITEM_S, max_batch, true))

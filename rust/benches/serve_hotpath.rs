@@ -1,0 +1,308 @@
+//! Serve hot-path bench: the three ISSUE-10 mechanisms under the loads
+//! they were built for. Every section runs in virtual time (same seed ⇒
+//! same numbers), so this bench is cheap enough for CI even outside
+//! smoke mode.
+//!
+//! 1. **Priority classes through a 10x flash crowd** — a pinned fleet
+//!    takes 10x its base traffic for a minute. Admission control sheds
+//!    tens of thousands of requests, and every one of them is free or
+//!    batch class: paid loses nothing and its p99 holds the 250 ms SLO
+//!    straight through the crowd.
+//! 2. **Adaptive close window vs fixed windows** — the controller
+//!    shrinks an oversized 50 ms window against the observed p99 and
+//!    must land on the latency/throughput frontier: no fixed window
+//!    beats it on both axes, and it cuts the widest window's tail by
+//!    > 25% at equal throughput.
+//! 3. **Weight swap vs always-scale** — demand migrates wholly from
+//!    model 0 to model 1 mid-run. Converting idle replicas (10 s swap)
+//!    must beat buying new hardware (about a minute of provisioning) on
+//!    both the shed count and the CostLedger bill.
+//! 4. **Diurnal cycle** — the adaptive controller rides a day/night
+//!    arrival wave ([`RateSchedule::diurnal`]) without shedding, keeping
+//!    batches filled through the trough.
+
+use hyper_dist::serve::{AdaptiveBatchConfig, AutoscalerConfig, BatchPolicy, Load, ModelShift,
+                        ServeReport, ServeSim, ServeSimConfig, SwapConfig};
+use hyper_dist::sim::{OpenLoop, RateSchedule};
+use hyper_dist::util::bench::{emit_json, header, row, section};
+
+/// The shared fleet shape: GPU-profile replicas (2 ms dispatch + 1 ms
+/// per request) behind an 8-wide, 5 ms batch window — the same shape the
+/// `serve_batching` storm bench uses.
+fn fleet_cfg(replicas: usize) -> ServeSimConfig {
+    ServeSimConfig {
+        batch: BatchPolicy { max_batch: 8, max_delay_s: 0.005 },
+        queue_depth: 256,
+        service_base_s: 0.002,
+        service_per_item_s: 0.001,
+        initial_replicas: replicas,
+        warm_start: true,
+        autoscaler: AutoscalerConfig {
+            min_replicas: 2,
+            max_replicas: 16,
+            slo_p99_s: 0.25,
+            up_step: 2,
+            up_cooldown_s: 10.0,
+            down_cooldown_s: 1e9,
+            ..Default::default()
+        },
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+/// A boolean claim as a bench metric (1 = held), so `bench_check` can
+/// anchor it exactly.
+fn flag(b: bool) -> f64 {
+    if b {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Pin the fleet at exactly `n` replicas (no scaling escape hatch).
+fn pinned(mut cfg: ServeSimConfig, n: usize) -> ServeSimConfig {
+    cfg.initial_replicas = n;
+    cfg.autoscaler.min_replicas = n;
+    cfg.autoscaler.max_replicas = n;
+    cfg
+}
+
+fn class_row(r: &ServeReport) {
+    for c in &r.per_class {
+        if c.offered == 0 {
+            continue;
+        }
+        row(
+            &format!("class {}", c.class),
+            &[
+                format!("{}", c.offered),
+                format!("{}", c.shed),
+                format!("{}", c.completed),
+                format!("{:.1} ms", c.latency.p99 * 1e3),
+            ],
+        );
+    }
+}
+
+/// Section 1: 2 pinned replicas (1600 req/s capacity) take a 10x flash
+/// crowd (300 → 3000 req/s for 60 s) with a 25/45/30 paid/free/batch
+/// mix. Paid demand (750 req/s) fits inside capacity, so preemptive
+/// shedding must keep every loss in the lower classes.
+fn crowd_section() -> ServeReport {
+    section("priority classes through a 10x flash crowd (2 pinned replicas)");
+    let mut cfg = pinned(fleet_cfg(2), 2);
+    cfg.class_mix = [0.25, 0.45, 0.3];
+    let r = ServeSim::new(cfg)
+        .run(Load::Scheduled(RateSchedule::flash_crowd(300.0, 10.0, 60.0, 60.0)), 240.0)
+        .expect("sim within event budget");
+    header("class", &["offered", "shed", "completed", "p99"]);
+    class_row(&r);
+    println!(
+        "\ncrowd shed {} of {} offered; every shed is free/batch class, paid p99 {:.1} ms \
+         (SLO 250 ms)",
+        r.shed,
+        r.offered,
+        r.per_class[0].latency.p99 * 1e3
+    );
+    assert_eq!(r.completed, r.offered - r.shed, "admitted work is never dropped");
+    assert!(r.shed > 10_000, "the crowd must overwhelm the pinned fleet: {}", r.shed);
+    let paid = &r.per_class[0];
+    assert_eq!(paid.shed, 0, "paid is never shed while lower classes exist: {r:?}");
+    assert_eq!(paid.completed, paid.admitted, "every paid request answered");
+    assert!(
+        paid.latency.p99 <= 0.25,
+        "paid p99 {} must hold the SLO through the crowd",
+        paid.latency.p99
+    );
+    assert!(r.per_class[2].shed > 0, "batch class takes the losses: {r:?}");
+    r
+}
+
+/// Section 2: one pinned replica at 60 req/s, fixed close windows vs the
+/// adaptive controller started from the widest window. Domination =
+/// strictly better p99 AND strictly more completions.
+fn frontier_section() -> (ServeReport, f64, bool) {
+    section("adaptive close window vs fixed windows (1 replica, 60 req/s)");
+    let base = || {
+        let mut cfg = pinned(fleet_cfg(1), 1);
+        cfg.batch = BatchPolicy { max_batch: 16, max_delay_s: 0.05 };
+        cfg.service_per_item_s = 0.0001;
+        cfg
+    };
+    let run = |cfg: ServeSimConfig| {
+        ServeSim::new(cfg)
+            .run(Load::Open(OpenLoop::poisson(60.0)), 600.0)
+            .expect("sim within event budget")
+    };
+    header("config", &["completed", "p99", "mean fill"]);
+    let mut fixed = Vec::new();
+    for delay in [0.005, 0.02, 0.05] {
+        let mut cfg = base();
+        cfg.batch.max_delay_s = delay;
+        let r = run(cfg);
+        assert_eq!(r.shed, 0, "60 req/s never fills a 256-deep queue");
+        row(
+            &format!("fixed {:>4.0} ms window", delay * 1e3),
+            &[
+                format!("{}", r.completed),
+                format!("{:.1} ms", r.latency.p99 * 1e3),
+                format!("{:.1}", r.mean_batch_fill),
+            ],
+        );
+        fixed.push(r);
+    }
+    let mut cfg = base();
+    cfg.adaptive = Some(AdaptiveBatchConfig {
+        slo_p99_s: 0.06,
+        min_delay_s: 0.01,
+        max_delay_s: 0.05,
+        min_batch: 4,
+        max_batch: 16,
+        ..Default::default()
+    });
+    let adaptive = run(cfg);
+    assert_eq!(adaptive.shed, 0);
+    row(
+        "adaptive (starts at 50 ms)",
+        &[
+            format!("{}", adaptive.completed),
+            format!("{:.1} ms", adaptive.latency.p99 * 1e3),
+            format!("{:.1}", adaptive.mean_batch_fill),
+        ],
+    );
+    let widest_p99 = fixed.last().expect("three fixed runs").latency.p99;
+    let on_frontier = fixed.iter().all(|f| {
+        !(f.latency.p99 < adaptive.latency.p99 * 0.999
+            && f.completed as f64 > adaptive.completed as f64 * 1.001)
+    });
+    println!(
+        "\nadaptive p99 {:.1} ms vs widest fixed {:.1} ms; on the frontier: {on_frontier}",
+        adaptive.latency.p99 * 1e3,
+        widest_p99 * 1e3
+    );
+    assert!(on_frontier, "a fixed window dominates the adaptive run");
+    assert!(
+        adaptive.latency.p99 < widest_p99 * 0.75,
+        "the controller must cut the oversized window's tail: adaptive {} vs {}",
+        adaptive.latency.p99,
+        widest_p99
+    );
+    assert!(adaptive.mean_batch_fill > 1.0, "narrowing must not abandon batching");
+    (adaptive, widest_p99, on_frontier)
+}
+
+/// Section 3: demand migrates wholly from model 0 to model 1 at t=60 on
+/// a 4-replica two-model fleet. One run may weight-swap (10 s blackout),
+/// the other may only scale (about a minute of provisioning per new
+/// replica).
+fn swap_section() -> (ServeReport, ServeReport) {
+    section("weight swap vs always-scale on a total demand migration");
+    let base = || {
+        let mut cfg = fleet_cfg(4);
+        cfg.queue_depth = 128;
+        cfg.models = 2;
+        cfg.model_mix = vec![1.0, 0.0];
+        cfg.model_shift = Some(ModelShift { at_s: 60.0, mix: vec![0.0, 1.0] });
+        cfg
+    };
+    let run = |cfg: ServeSimConfig| {
+        ServeSim::new(cfg)
+            .run(Load::Open(OpenLoop::poisson(400.0)), 150.0)
+            .expect("sim within event budget")
+    };
+    let mut swap_cfg = base();
+    swap_cfg.swap = Some(SwapConfig { swap_s: 10.0, ..Default::default() });
+    let swap_run = run(swap_cfg);
+    let scale_run = run(base());
+    header("strategy", &["swaps", "scale-ups", "shed", "cost"]);
+    for (label, r) in [("weight swap (10 s)", &swap_run), ("always scale", &scale_run)] {
+        row(
+            label,
+            &[
+                format!("{}", r.swaps),
+                format!("{}", r.scale_ups),
+                format!("{}", r.shed),
+                format!("${:.2}", r.cost_usd),
+            ],
+        );
+    }
+    assert_eq!(swap_run.completed, swap_run.offered - swap_run.shed);
+    assert_eq!(scale_run.completed, scale_run.offered - scale_run.shed);
+    assert!(swap_run.swaps >= 2, "the fleet converts toward demand: {swap_run:?}");
+    assert_eq!(swap_run.scale_ups, 0, "swaps absorb the migration: {swap_run:?}");
+    assert!(scale_run.scale_ups > 0, "always-scale must buy replicas: {scale_run:?}");
+    assert!(
+        swap_run.cost_usd < scale_run.cost_usd && swap_run.shed < scale_run.shed,
+        "converting idle replicas must beat cold boots on cost and sheds: \
+         swap (${:.2}, {}) vs scale (${:.2}, {})",
+        swap_run.cost_usd,
+        swap_run.shed,
+        scale_run.cost_usd,
+        scale_run.shed
+    );
+    (swap_run, scale_run)
+}
+
+/// Section 4: three day/night periods of diurnal arrivals under the
+/// adaptive controller — the window widens through the trough (fill
+/// stays > 1) and nothing sheds at the peak.
+fn diurnal_section() -> ServeReport {
+    section("adaptive batching over a diurnal cycle (1 replica, 3 periods)");
+    let mut cfg = pinned(fleet_cfg(1), 1);
+    cfg.batch = BatchPolicy { max_batch: 16, max_delay_s: 0.05 };
+    cfg.service_per_item_s = 0.0001;
+    cfg.adaptive = Some(AdaptiveBatchConfig {
+        slo_p99_s: 0.06,
+        min_delay_s: 0.01,
+        max_delay_s: 0.05,
+        min_batch: 4,
+        max_batch: 16,
+        ..Default::default()
+    });
+    let r = ServeSim::new(cfg)
+        .run(Load::Scheduled(RateSchedule::diurnal(240.0, 20.0, 600.0)), 1800.0)
+        .expect("sim within event budget");
+    println!(
+        "  completed {} of {} offered  shed {}  p99 {:.1} ms  mean fill {:.1}",
+        r.completed,
+        r.offered,
+        r.shed,
+        r.latency.p99 * 1e3,
+        r.mean_batch_fill
+    );
+    assert_eq!(r.shed, 0, "a single replica rides the whole wave");
+    assert_eq!(r.completed, r.admitted, "no admitted request dropped");
+    assert!(r.mean_batch_fill > 1.0, "batches stay filled through the trough");
+    r
+}
+
+fn main() {
+    let crowd = crowd_section();
+    let (adaptive, widest_p99, on_frontier) = frontier_section();
+    let (swap_run, scale_run) = swap_section();
+    let diurnal = diurnal_section();
+
+    emit_json(
+        "serve_hotpath",
+        &[
+            // exact-by-construction claims (anchored in BENCH_fleet.json)
+            ("crowd_paid_shed", crowd.per_class[0].shed as f64),
+            ("crowd_paid_p99_slo_ok", flag(crowd.per_class[0].latency.p99 <= 0.25)),
+            ("adaptive_on_frontier", flag(on_frontier)),
+            ("swap_beats_scale", flag(swap_run.cost_usd < scale_run.cost_usd)),
+            // trajectory metrics
+            ("crowd_shed", crowd.shed as f64),
+            ("crowd_paid_p99_ms", crowd.per_class[0].latency.p99 * 1e3),
+            ("adaptive_p99_ms", adaptive.latency.p99 * 1e3),
+            ("widest_fixed_p99_ms", widest_p99 * 1e3),
+            ("swap_count", swap_run.swaps as f64),
+            ("swap_cost_usd", swap_run.cost_usd),
+            ("scale_cost_usd", scale_run.cost_usd),
+            ("diurnal_p99_ms", diurnal.latency.p99 * 1e3),
+            ("diurnal_mean_fill", diurnal.mean_batch_fill),
+        ],
+    );
+    println!("\nserve_hotpath OK");
+}

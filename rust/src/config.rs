@@ -299,6 +299,46 @@ impl Default for TrainConfig {
     }
 }
 
+/// Tunables of the serving hot path: the priority-class traffic mix,
+/// the adaptive batch-window controller, and multi-model weight
+/// swapping.
+///
+/// Read by the CLI `serve` / `report` paths, which translate it onto
+/// [`crate::serve::ServeSimConfig`] (virtual-time fleet) and
+/// [`crate::serve::ServerConfig`] (threaded stack). The defaults
+/// reproduce the classic single-class, single-model, fixed-window
+/// behavior exactly. Every knob is documented in `docs/CONFIG.md`.
+#[derive(Debug, Clone)]
+pub struct ServeHotConfig {
+    /// Arrival weights per priority class, `[paid, free, batch]` order
+    /// (matches `crate::serve::Priority::ALL`); zero-weight classes never
+    /// arrive. The default routes everything `paid`.
+    pub class_mix: [f64; 3],
+    /// Run the adaptive batch-window controller (shrink the close window
+    /// toward the SLO, widen it under slack) instead of a fixed policy.
+    pub adaptive: bool,
+    /// Latency objective the adaptive controller defends, seconds.
+    pub slo_p99_s: f64,
+    /// Distinct models the replica fleet serves (1 = classic
+    /// single-model fleet).
+    pub models: usize,
+    /// Seconds of service blackout one weight swap costs (read when
+    /// `models > 1`).
+    pub swap_s: f64,
+}
+
+impl Default for ServeHotConfig {
+    fn default() -> Self {
+        Self {
+            class_mix: [1.0, 0.0, 0.0],
+            adaptive: false,
+            slo_p99_s: 0.25,
+            models: 1,
+            swap_s: 8.0,
+        }
+    }
+}
+
 /// Tunables of the observability layer: the [`crate::obs`] flight
 /// recorder's bound, the master switch, and where `hyper trace` (and the
 /// instrumented benches) write Chrome-trace exports.
@@ -426,6 +466,16 @@ mod tests {
         assert!(c.sample_time_s > 0.0);
         assert_eq!(c.mode, GangMode::Elastic);
         assert!(c.spot, "the paper's headline fleet is preemptible");
+    }
+
+    #[test]
+    fn default_serve_hot_config_is_the_classic_stack() {
+        let c = ServeHotConfig::default();
+        assert_eq!(c.class_mix, [1.0, 0.0, 0.0], "single-class by default");
+        assert!(!c.adaptive, "fixed batch window by default");
+        assert_eq!(c.models, 1, "single-model fleet by default");
+        assert!(c.slo_p99_s > 0.0);
+        assert!(c.swap_s > 0.0);
     }
 
     #[test]

@@ -453,6 +453,25 @@ impl FleetEngine {
         }
     }
 
+    /// Re-tag a live node (e.g. a serving replica that finished a weight
+    /// swap now serves a different model). Emits `node.retag` so the
+    /// trace shows which model each span of the node's lifetime served.
+    pub fn retag(&mut self, node: NodeId, tag: u32) {
+        if let Some(n) = self.nodes.get_mut(&node) {
+            if n.dead || n.tag == tag {
+                return;
+            }
+            let from = n.tag;
+            n.tag = tag;
+            if self.obs.is_enabled() {
+                self.obs.event_at("node.retag", self.now.as_nanos(), node, 0, vec![
+                    ("from", (from as usize).into()),
+                    ("to", (tag as usize).into()),
+                ]);
+            }
+        }
+    }
+
     /// Voluntary drain (scale-down): the node takes no new work and is
     /// *not* counted as preempted. Returns `false` if it was already
     /// draining or dead.

@@ -11,6 +11,7 @@
 //! hyper train --preset P [--steps N] [--lr X]     # real PJRT training
 //! hyper infer [--preset P] [--batches N]          # batch inference demo
 //! hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]
+//!             [--adaptive] [--slo S] [--class-mix P,F,B] [--models N] [--swap-s S]
 //!                                          # dynamic-batching serving demo
 //! hyper serve --price-trace F [--bid X] [--rps R] [--duration S] [--replicas N]
 //!                            # virtual-time fleet scenario on a price trace
@@ -98,7 +99,7 @@ fn main() -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "hyper — distributed cloud processing for large-scale DL (reproduction)\n\n\
-         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n               [--price-trace FILE] [--bid USD_PER_H]\n  hyper train [recipe.yaml] [--world N] [--gang-min N] [--steps N] [--seed N]\n              [--mode elastic|rigid] [--instance TYPE] [--deadline S]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--price-trace FILE] [--bid USD_PER_H] [--compare-rigid B]\n  hyper train --preset P [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n  hyper serve --price-trace FILE [--bid USD_PER_H] [--rps R] [--duration S]\n              [--replicas N] [--instance TYPE] [--seed N]\n  hyper trace [--out FILE] [--rps R] [--duration S] [--replicas N] [--seed N]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--capacity N] [--timeline-lines N]\n  hyper report [--workload serve|train|search] [--load trace.json] [--seed N]\n              [--rps R] [--duration S] [--replicas N] [--steps N] [--capacity N]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n  hyper status [--prometheus]"
+         USAGE:\n  hyper submit <recipe.yaml> [--seed N]\n  hyper search [recipe.yaml] [--seed N] [--algo grid|asha|hyperband|median]\n               [--storm-at S] [--storm-kills K] [--storm-notice S] [--compare-grid B]\n               [--price-trace FILE] [--bid USD_PER_H]\n  hyper train [recipe.yaml] [--world N] [--gang-min N] [--steps N] [--seed N]\n              [--mode elastic|rigid] [--instance TYPE] [--deadline S]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--price-trace FILE] [--bid USD_PER_H] [--compare-rigid B]\n  hyper train --preset P [--steps N] [--lr X]\n  hyper infer [--preset P] [--batches N]\n  hyper serve [--requests N] [--workers W] [--batch B] [--queue Q] [--clients C]\n              [--adaptive] [--slo S] [--class-mix P,F,B] [--models N] [--swap-s S]\n  hyper serve --price-trace FILE [--bid USD_PER_H] [--rps R] [--duration S]\n              [--replicas N] [--instance TYPE] [--seed N]\n  hyper trace [--out FILE] [--rps R] [--duration S] [--replicas N] [--seed N]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--capacity N] [--timeline-lines N]\n  hyper report [--workload serve|train|search] [--load trace.json] [--seed N]\n              [--rps R] [--duration S] [--replicas N] [--steps N] [--capacity N]\n              [--storm-at S] [--storm-kills K] [--storm-notice S]\n              [--adaptive] [--slo S] [--class-mix P,F,B] [--models N] [--swap-s S]\n  hyper status [--prometheus]"
     );
 }
 
@@ -541,14 +542,46 @@ fn cmd_serve_trace(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Translate the serve hot-path flags (`--adaptive`, `--slo`,
+/// `--class-mix paid,free,batch`, `--models`, `--swap-s`) into a
+/// [`hyper_dist::config::ServeHotConfig`]. Defaults reproduce the classic
+/// single-class, single-model, fixed-window stack exactly.
+fn serve_hot_from_args(args: &Args) -> anyhow::Result<hyper_dist::config::ServeHotConfig> {
+    use hyper_dist::config::ServeHotConfig;
+    let d = ServeHotConfig::default();
+    let mut hot = ServeHotConfig {
+        adaptive: args.get("adaptive", d.adaptive)?,
+        slo_p99_s: args.get("slo", d.slo_p99_s)?,
+        models: args.get("models", d.models)?,
+        swap_s: args.get("swap-s", d.swap_s)?,
+        ..d
+    };
+    anyhow::ensure!(hot.models >= 1, "--models must be at least 1");
+    if let Some(mix) = args.flags.get("class-mix") {
+        let parts: Vec<f64> = mix
+            .split(',')
+            .map(|p| p.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad --class-mix {mix:?}: {e}"))?;
+        anyhow::ensure!(parts.len() == 3, "--class-mix wants paid,free,batch (3 weights)");
+        anyhow::ensure!(parts.iter().all(|w| *w >= 0.0), "--class-mix weights must be >= 0");
+        anyhow::ensure!(parts.iter().sum::<f64>() > 0.0, "--class-mix needs some weight");
+        hot.class_mix = [parts[0], parts[1], parts[2]];
+    }
+    Ok(hot)
+}
+
 /// Serving demo: the threaded ServeStack under closed-loop clients, with
 /// dynamic batching on vs. off at equal worker count. Uses a real PJRT
 /// replica when artifacts are present, the synthetic cost model otherwise.
-/// With `--price-trace` it instead runs the virtual-time fleet scenario
+/// Hot-path flags layer on: `--adaptive` retunes the close window from the
+/// windowed p99, `--class-mix` submits across priority classes, and
+/// `--models`/`--swap-s` give each worker a multi-model replica. With
+/// `--price-trace` it instead runs the virtual-time fleet scenario
 /// ([`cmd_serve_trace`]).
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use hyper_dist::serve::{BatchBackend, PjrtBackend, ServeStack, ServerConfig,
-                            SyntheticBackend};
+    use hyper_dist::serve::{AdaptiveBatchConfig, BatchBackend, MultiModelBackend, PjrtBackend,
+                            Priority, ServeStack, ServerConfig, SyntheticBackend};
 
     if args.flags.contains_key("price-trace") {
         return cmd_serve_trace(args);
@@ -559,6 +592,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let max_batch: usize = args.get("batch", 16)?;
     let queue_depth: usize = args.get("queue", 4096)?;
     let clients: usize = args.get("clients", 16)?;
+    let hot = serve_hot_from_args(args)?;
 
     let dir = hyper_dist::config::default_artifacts_dir();
     let use_pjrt = hyper_dist::config::artifacts_available(&dir, "tiny");
@@ -581,11 +615,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             max_batch: batch,
             max_batch_delay: std::time::Duration::from_millis(2),
             workers,
+            adaptive: (hot.adaptive && batch > 1).then(|| AdaptiveBatchConfig {
+                slo_p99_s: hot.slo_p99_s,
+                max_batch: batch,
+                ..AdaptiveBatchConfig::default()
+            }),
         };
         let stack = ServeStack::start(cfg, |_| -> Box<dyn BatchBackend> {
             match &rt {
                 Some(rt) => Box::new(PjrtBackend::new(
                     rt.infer_session("tiny", 0).expect("artifacts present"),
+                )),
+                None if hot.models > 1 => Box::new(MultiModelBackend::new(
+                    (0..hot.models)
+                        .map(|_| SyntheticBackend::new(0.002, 0.0001, batch, true))
+                        .collect(),
+                    hot.swap_s,
+                    true,
                 )),
                 None => Box::new(SyntheticBackend::new(0.002, 0.0001, batch, true)),
             }
@@ -594,6 +640,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         // spread requests across clients, remainder to the first few
         let clients = clients.max(1);
         let (per_client, extra) = (requests / clients, requests % clients);
+        let mix = hot.class_mix;
         std::thread::scope(|s| {
             for c in 0..clients {
                 let stack = &stack;
@@ -603,8 +650,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     for _ in 0..mine {
                         let tokens: Vec<i32> =
                             (0..seq).map(|_| rng.gen_range(64) as i32).collect();
+                        // class drawn from the mix; the default [1,0,0]
+                        // takes the `< paid` arm every time, so the demo
+                        // without --class-mix is the classic paid-only run
+                        let f = (rng.gen_range(1 << 20) as f64 + 0.5) / (1 << 20) as f64;
+                        let total = mix[0] + mix[1] + mix[2];
+                        let class = if f * total < mix[0] {
+                            Priority::Paid
+                        } else if f * total < mix[0] + mix[1] {
+                            Priority::Free
+                        } else {
+                            Priority::Batch
+                        };
                         // a shed submit is counted in stats; just move on
-                        if let Ok(h) = stack.submit(tokens) {
+                        if let Ok(h) = stack.submit_class(tokens, class) {
                             let _ = h.wait();
                         }
                     }
@@ -624,6 +683,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             fill.mean,
             stack.stats.shed.get()
         );
+        if hot.class_mix != [1.0, 0.0, 0.0] {
+            for p in Priority::ALL {
+                println!(
+                    "    class {:>5}: admitted {}  shed {}",
+                    p.name(),
+                    stack.stats.admitted_class[p.index()].get(),
+                    stack.stats.shed_class[p.index()].get()
+                );
+            }
+        }
+        if hot.adaptive && batch > 1 {
+            let p = stack.batch_policy();
+            println!(
+                "    adaptive window settled at max_batch {}  delay {:.2} ms",
+                p.max_batch,
+                p.max_delay_s * 1e3
+            );
+        }
         results.push(done as f64 / dt);
         stack.shutdown();
     }
@@ -784,7 +861,8 @@ fn report_serve_scenario(args: &Args) -> anyhow::Result<ScenarioTrace> {
     use hyper_dist::cloud::StormEvent;
     use hyper_dist::config::ObsConfig;
     use hyper_dist::obs::{FlightRecorder, SeriesSet, SloSpec};
-    use hyper_dist::serve::{AutoscalerConfig, Load, ServeSim, ServeSimConfig};
+    use hyper_dist::serve::{AdaptiveBatchConfig, AutoscalerConfig, Load, ServeSim,
+                            ServeSimConfig, SwapConfig};
     use hyper_dist::sim::{OpenLoop, SimClock};
 
     let rps: f64 = args.get("rps", 800.0)?;
@@ -795,6 +873,7 @@ fn report_serve_scenario(args: &Args) -> anyhow::Result<ScenarioTrace> {
     let replicas: usize = args.get("replicas", 4)?;
     let seed: u64 = args.get("seed", 42)?;
     let capacity: usize = args.get("capacity", 1 << 20)?;
+    let hot = serve_hot_from_args(args)?;
 
     let cfg = ServeSimConfig {
         initial_replicas: replicas,
@@ -806,6 +885,15 @@ fn report_serve_scenario(args: &Args) -> anyhow::Result<ScenarioTrace> {
         },
         storm: vec![StormEvent { at_s: storm_at, kills: storm_kills, notice_s: storm_notice }],
         seed,
+        class_mix: hot.class_mix,
+        adaptive: hot.adaptive.then(|| AdaptiveBatchConfig {
+            slo_p99_s: hot.slo_p99_s,
+            ..AdaptiveBatchConfig::default()
+        }),
+        models: hot.models,
+        model_mix: vec![1.0 / hot.models as f64; hot.models],
+        swap: (hot.models > 1)
+            .then(|| SwapConfig { swap_s: hot.swap_s, ..SwapConfig::default() }),
         ..ServeSimConfig::default()
     };
     println!(
@@ -831,9 +919,21 @@ fn report_serve_scenario(args: &Args) -> anyhow::Result<ScenarioTrace> {
     let traced_s = t0.elapsed().as_secs_f64();
 
     println!(
-        "  completed {} / admitted {}  shed {}  preemptions {}  cost ${:.4}",
-        r.completed, r.admitted, r.shed, r.preemptions, r.cost_usd
+        "  completed {} / admitted {}  shed {}  preemptions {}  swaps {}  cost ${:.4}",
+        r.completed, r.admitted, r.shed, r.preemptions, r.swaps, r.cost_usd
     );
+    if hot.class_mix != [1.0, 0.0, 0.0] {
+        for c in &r.per_class {
+            println!(
+                "    class {:>5}: offered {:>7}  shed {:>6}  completed {:>7}  p99 {:>7.1} ms",
+                c.class,
+                c.offered,
+                c.shed,
+                c.completed,
+                c.latency.p99 * 1e3
+            );
+        }
+    }
     if rec.dropped() > 0 {
         println!(
             "  WARNING: ring evicted {} records; raise --capacity for exact totals",
@@ -985,6 +1085,11 @@ fn cmd_status(args: &Args) -> anyhow::Result<()> {
     println!("hfs smoke: {}", String::from_utf8_lossy(&fs.read_file("hello.txt")?));
     let reg = hyper_dist::metrics::MetricsRegistry::new();
     fs.register_metrics(&reg);
+    // the serving surface registers alongside HFS: per-class admission
+    // and shed counters (serve.admitted.paid, serve.shed.batch, ...) so
+    // a scraper sees the full priority-class taxonomy even at zero
+    let serve_stats = hyper_dist::serve::ServeStats::default();
+    serve_stats.register_metrics(&reg);
     // observability self-report: a recorder sees the smoke, and its
     // counters plus the windowed series reducers are exported as gauges
     // so a scraper watches the obs pipeline's own health (ring pressure,

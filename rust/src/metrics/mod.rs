@@ -783,12 +783,20 @@ mod tests {
         let r = MetricsRegistry::new();
         r.counter("serve.reqs").add(7);
         r.counter("a-b c").inc();
+        // per-priority-class serving counters ride the same dotted-name
+        // convention: `serve.shed.<class>` lands as `serve_shed_<class>`
+        r.counter("serve.shed.batch").add(2);
+        r.counter("serve.shed.paid").add(0);
         r.gauge("fleet.live").set(3);
         r.float_gauge("train.loss").set(-1.5);
         let expect = "# TYPE a_b_c counter\n\
                       a_b_c 1\n\
                       # TYPE serve_reqs counter\n\
                       serve_reqs 7\n\
+                      # TYPE serve_shed_batch counter\n\
+                      serve_shed_batch 2\n\
+                      # TYPE serve_shed_paid counter\n\
+                      serve_shed_paid 0\n\
                       # TYPE fleet_live gauge\n\
                       fleet_live 3\n\
                       # TYPE train_loss gauge\n\

@@ -56,6 +56,34 @@ impl Default for AutoscalerConfig {
     }
 }
 
+/// Weight-swap policy for multi-model replica fleets.
+///
+/// A replica serves exactly one model at a time; converting it to
+/// another model streams new weights for `swap_s` virtual seconds during
+/// which it serves nothing. Swapping an *idle* replica is still far
+/// cheaper than provisioning a new node (seconds vs the better part of a
+/// minute, and no extra instance on the bill), so when per-model demand
+/// shifts, the controller converts capacity before it buys capacity.
+#[derive(Debug, Clone)]
+pub struct SwapConfig {
+    /// Virtual seconds a weight swap occupies a replica (no serving).
+    pub swap_s: f64,
+    /// Starved-model backlog required before a swap is considered.
+    pub min_backlog: usize,
+    /// Starved backlog must exceed the donor model's backlog by this
+    /// factor — swaps chase real imbalance, not noise.
+    pub imbalance: f64,
+    /// Minimum seconds between swap decisions (one replica converts at a
+    /// time; the next tick re-evaluates with the swap's effect visible).
+    pub cooldown_s: f64,
+}
+
+impl Default for SwapConfig {
+    fn default() -> Self {
+        Self { swap_s: 8.0, min_backlog: 8, imbalance: 4.0, cooldown_s: 5.0 }
+    }
+}
+
 /// One control-tick observation.
 #[derive(Debug, Clone, Copy)]
 pub struct ScaleSignal {
@@ -89,6 +117,7 @@ pub struct Autoscaler {
     cfg: AutoscalerConfig,
     last_up_s: f64,
     last_down_s: f64,
+    last_swap_s: f64,
 }
 
 impl Autoscaler {
@@ -97,7 +126,7 @@ impl Autoscaler {
     /// `down_cooldown_s` of e.g. 1e9 — the "never scale down" idiom —
     /// would still allow one initial drain).
     pub fn new(cfg: AutoscalerConfig) -> Self {
-        Self { cfg, last_up_s: 0.0, last_down_s: 0.0 }
+        Self { cfg, last_up_s: 0.0, last_down_s: 0.0, last_swap_s: 0.0 }
     }
 
     /// The configuration this controller runs.
@@ -144,6 +173,38 @@ impl Autoscaler {
         }
 
         ScaleDecision::Hold
+    }
+
+    /// Swap-vs-scale: pick a `(donor, starved)` model pair whose backlog
+    /// imbalance justifies converting an existing replica instead of
+    /// provisioning a new one. `backlog[m]` is the requests waiting for
+    /// model `m`; `replicas[m]` is the capacity already committed to `m`
+    /// (serving, plus swaps already converting toward it). Returns the
+    /// `(from, to)` models, or `None` when demand is balanced, the
+    /// starved backlog is below `min_backlog`, no donor model has a
+    /// replica to give, or the swap cooldown is still running. Mutates
+    /// only cooldown state.
+    pub fn decide_swap(
+        &mut self,
+        swap: &SwapConfig,
+        now_s: f64,
+        backlog: &[usize],
+        replicas: &[usize],
+    ) -> Option<(usize, usize)> {
+        let models = backlog.len().min(replicas.len());
+        if models < 2 || now_s - self.last_swap_s < swap.cooldown_s {
+            return None;
+        }
+        let to = (0..models).max_by_key(|&m| backlog[m])?;
+        if backlog[to] < swap.min_backlog.max(1) {
+            return None;
+        }
+        let from = (0..models).filter(|&m| m != to && replicas[m] > 0).min_by_key(|&m| backlog[m])?;
+        if (backlog[to] as f64) < swap.imbalance * (backlog[from] as f64).max(1.0) {
+            return None;
+        }
+        self.last_swap_s = now_s;
+        Some((from, to))
     }
 }
 
@@ -226,5 +287,55 @@ mod tests {
         let mut a = ctl();
         // between cold (0.3) and hot (0.8) fractions of the SLO: stable
         assert_eq!(a.decide(&sig(100.0, 1, 0.5, 4, 0)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn swap_follows_backlog_imbalance() {
+        let mut a = ctl();
+        let swap = SwapConfig::default();
+        // model 1 starved (40 waiting), model 0 idle with 4 replicas
+        assert_eq!(a.decide_swap(&swap, 50.0, &[0, 40], &[4, 0]), Some((0, 1)));
+    }
+
+    #[test]
+    fn swap_cooldown_throttles() {
+        let mut a = ctl();
+        let swap = SwapConfig::default();
+        // cooldowns run from t=0, like scale cooldowns
+        assert_eq!(a.decide_swap(&swap, 1.0, &[0, 40], &[4, 0]), None, "initial cooldown");
+        assert_eq!(a.decide_swap(&swap, 5.0, &[0, 40], &[4, 0]), Some((0, 1)));
+        assert_eq!(a.decide_swap(&swap, 7.0, &[0, 40], &[4, 0]), None, "cooling down");
+        assert_eq!(a.decide_swap(&swap, 10.0, &[0, 40], &[4, 0]), Some((0, 1)));
+    }
+
+    #[test]
+    fn swap_needs_real_starvation_and_imbalance() {
+        let mut a = ctl();
+        let swap = SwapConfig::default();
+        // below min_backlog: hold
+        assert_eq!(a.decide_swap(&swap, 50.0, &[0, 7], &[4, 0]), None);
+        // both models loaded within the imbalance factor: hold
+        assert_eq!(a.decide_swap(&swap, 50.0, &[20, 40], &[2, 2]), None);
+        // 4x imbalance at the boundary triggers
+        assert_eq!(a.decide_swap(&swap, 50.0, &[10, 40], &[2, 2]), Some((0, 1)));
+    }
+
+    #[test]
+    fn swap_needs_a_donor_replica() {
+        let mut a = ctl();
+        let swap = SwapConfig::default();
+        // every replica already serves (or converts toward) the starved
+        // model: nothing to donate, scale instead
+        assert_eq!(a.decide_swap(&swap, 50.0, &[0, 40], &[0, 4]), None);
+        // single-model fleets never swap
+        assert_eq!(a.decide_swap(&swap, 50.0, &[40], &[4]), None);
+    }
+
+    #[test]
+    fn swap_picks_the_least_loaded_donor() {
+        let mut a = ctl();
+        let swap = SwapConfig::default();
+        // three models: 2 is starved; 0 (backlog 1) donates before 1
+        assert_eq!(a.decide_swap(&swap, 50.0, &[1, 6, 60], &[2, 2, 1]), Some((0, 2)));
     }
 }

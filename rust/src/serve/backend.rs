@@ -81,6 +81,65 @@ impl BatchBackend for SyntheticBackend {
     }
 }
 
+/// A replica that can host any of several models but serves exactly one
+/// at a time: switching pays `swap_s` of service blackout (slept out in
+/// wallclock mode) — the threaded analogue of the virtual-time sim's
+/// weight-swap cost ([`super::SwapConfig`]).
+#[derive(Debug, Clone)]
+pub struct MultiModelBackend {
+    models: Vec<SyntheticBackend>,
+    active: usize,
+    swap_s: f64,
+    swaps: u64,
+    sleep: bool,
+}
+
+impl MultiModelBackend {
+    /// A replica hosting `models`, serving `models[0]` first; switching
+    /// costs `swap_s` seconds (`sleep` selects wallclock mode).
+    ///
+    /// # Panics
+    /// If `models` is empty.
+    pub fn new(models: Vec<SyntheticBackend>, swap_s: f64, sleep: bool) -> Self {
+        assert!(!models.is_empty(), "at least one model");
+        Self { models, active: 0, swap_s, swaps: 0, sleep }
+    }
+
+    /// Index of the model currently served.
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    /// Completed weight swaps so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Switch the replica to `model` (no-op when already active, clamped
+    /// into range otherwise), paying the swap blackout.
+    pub fn swap_to(&mut self, model: usize) {
+        let model = model.min(self.models.len() - 1);
+        if model == self.active {
+            return;
+        }
+        if self.sleep && self.swap_s > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(self.swap_s));
+        }
+        self.active = model;
+        self.swaps += 1;
+    }
+}
+
+impl BatchBackend for MultiModelBackend {
+    fn infer(&mut self, rows: &[&[i32]]) -> Result<Vec<i32>> {
+        self.models[self.active].infer(rows)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.models[self.active].max_batch()
+    }
+}
+
 /// A real replica: PJRT inference through the batch-reuse slot API.
 pub struct PjrtBackend {
     sess: InferSession,
@@ -122,6 +181,30 @@ mod tests {
         assert_eq!(out[0], out[2], "same row, same token");
         assert_ne!(out[0], out[1]);
         assert_eq!(out, b.infer(&rows).unwrap());
+    }
+
+    #[test]
+    fn multi_model_swaps_route_and_count() {
+        let mut b = MultiModelBackend::new(
+            vec![
+                SyntheticBackend::new(0.001, 0.0, 8, false),
+                SyntheticBackend::new(0.010, 0.0, 32, false),
+            ],
+            0.0,
+            false,
+        );
+        assert_eq!(b.active(), 0);
+        assert_eq!(b.max_batch(), 8, "serves model 0's profile");
+        b.swap_to(0);
+        assert_eq!(b.swaps(), 0, "swapping to the active model is free");
+        b.swap_to(1);
+        assert_eq!((b.active(), b.swaps()), (1, 1));
+        assert_eq!(b.max_batch(), 32, "now serves model 1's profile");
+        b.swap_to(99);
+        assert_eq!(b.active(), 1, "out-of-range clamps; still model 1");
+        assert_eq!(b.swaps(), 1);
+        let rows: Vec<&[i32]> = vec![&[7, 8]];
+        assert_eq!(b.infer(&rows).unwrap(), vec![SyntheticBackend::token_for(&[7, 8])]);
     }
 
     #[test]

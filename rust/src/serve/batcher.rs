@@ -20,7 +20,7 @@
 use crate::sim::SimTime;
 
 /// When does a batch close?
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BatchPolicy {
     /// Largest batch a replica accepts (the artifact's compiled batch).
     pub max_batch: usize,
@@ -63,6 +63,110 @@ impl BatchPolicy {
     /// member's deadline has arrived.
     pub fn should_close(&self, depth: usize, oldest_admitted: SimTime, now: SimTime) -> bool {
         depth > 0 && (depth >= self.max_batch || self.close_at(oldest_admitted) <= now)
+    }
+}
+
+/// Bounds and thresholds for the adaptive batch-window controller.
+///
+/// [`BatchController`] moves a live [`BatchPolicy`] between these bounds
+/// from the windowed p99 observed at each control tick: as the tail
+/// approaches the SLO the close window shrinks (requests stop waiting for
+/// co-riders) and the batch ceiling halves; with ample slack the window
+/// widens back so throughput recovers the amortization. Multiplicative
+/// steps in both directions keep the controller stable across the three
+/// orders of magnitude a window can usefully span.
+#[derive(Debug, Clone)]
+pub struct AdaptiveBatchConfig {
+    /// The p99 latency objective the controller defends, seconds.
+    pub slo_p99_s: f64,
+    /// Close-window floor the shrink path cannot pass, seconds.
+    pub min_delay_s: f64,
+    /// Close-window ceiling the widen path cannot pass, seconds.
+    pub max_delay_s: f64,
+    /// Batch-size floor (shrinking halves down to this, never below 1).
+    pub min_batch: usize,
+    /// Batch-size ceiling (widening doubles up to this).
+    pub max_batch: usize,
+    /// Shrink when the windowed p99 reaches this fraction of the SLO.
+    pub shrink_frac: f64,
+    /// Widen when the windowed p99 is at or below this fraction of the
+    /// SLO. Must sit below `shrink_frac` or the controller oscillates
+    /// every tick.
+    pub widen_frac: f64,
+    /// Multiplicative window step per adjustment (>= 1).
+    pub step: f64,
+    /// Control cadence of the threaded stack's controller thread, in
+    /// wallclock seconds. The virtual-time sim ignores this and adjusts
+    /// on its autoscaler tick instead, where the p99 window already
+    /// resets.
+    pub tick_s: f64,
+}
+
+impl Default for AdaptiveBatchConfig {
+    fn default() -> Self {
+        Self {
+            slo_p99_s: 0.25,
+            min_delay_s: 0.0005,
+            max_delay_s: 0.02,
+            min_batch: 4,
+            max_batch: 64,
+            shrink_frac: 0.7,
+            widen_frac: 0.35,
+            step: 2.0,
+            tick_s: 0.1,
+        }
+    }
+}
+
+/// Latency-aware controller over a [`BatchPolicy`].
+///
+/// Feed it one `(windowed p99, sample count)` observation per control
+/// tick via [`BatchController::observe`]; read the policy to apply via
+/// [`BatchController::policy`]. An empty window holds the current policy:
+/// silence means no traffic, not slack, and widening on it would greet
+/// the next burst with the largest possible window.
+#[derive(Debug, Clone)]
+pub struct BatchController {
+    cfg: AdaptiveBatchConfig,
+    cur: BatchPolicy,
+}
+
+impl BatchController {
+    /// Start from `initial`, clamped into the config's bounds.
+    pub fn new(cfg: AdaptiveBatchConfig, initial: BatchPolicy) -> Self {
+        let cur = BatchPolicy {
+            max_batch: initial.max_batch.clamp(cfg.min_batch.max(1), cfg.max_batch.max(1)),
+            max_delay_s: initial.max_delay_s.clamp(cfg.min_delay_s, cfg.max_delay_s),
+        };
+        Self { cfg, cur }
+    }
+
+    /// The policy currently in force.
+    pub fn policy(&self) -> BatchPolicy {
+        self.cur
+    }
+
+    /// The bounds this controller operates within.
+    pub fn config(&self) -> &AdaptiveBatchConfig {
+        &self.cfg
+    }
+
+    /// Feed one control-tick window; returns true when the policy moved.
+    pub fn observe(&mut self, window_p99_s: f64, samples: u64) -> bool {
+        if samples == 0 {
+            return false;
+        }
+        let step = self.cfg.step.max(1.0);
+        let before = self.cur;
+        if window_p99_s >= self.cfg.shrink_frac * self.cfg.slo_p99_s {
+            self.cur.max_delay_s = (self.cur.max_delay_s / step).max(self.cfg.min_delay_s);
+            self.cur.max_batch = (self.cur.max_batch / 2).max(self.cfg.min_batch.max(1));
+        } else if window_p99_s <= self.cfg.widen_frac * self.cfg.slo_p99_s {
+            self.cur.max_delay_s = (self.cur.max_delay_s * step).min(self.cfg.max_delay_s);
+            self.cur.max_batch =
+                self.cur.max_batch.saturating_mul(2).min(self.cfg.max_batch.max(1));
+        }
+        self.cur != before
     }
 }
 
@@ -118,5 +222,65 @@ mod tests {
         assert_eq!(p.take(100), 8);
         let degenerate = BatchPolicy { max_batch: 0, max_delay_s: 1.0 };
         assert_eq!(degenerate.take(5), 1, "max_batch 0 behaves as 1");
+    }
+
+    fn ctl() -> BatchController {
+        BatchController::new(
+            AdaptiveBatchConfig::default(),
+            BatchPolicy { max_batch: 16, max_delay_s: 0.005 },
+        )
+    }
+
+    #[test]
+    fn controller_shrinks_to_floor_under_pressure() {
+        let mut c = ctl();
+        // p99 pinned at the SLO: every tick shrinks until both floors hit
+        for _ in 0..16 {
+            c.observe(0.25, 100);
+        }
+        let p = c.policy();
+        assert_eq!(p.max_delay_s, 0.0005, "window stops at min_delay_s");
+        assert_eq!(p.max_batch, 4, "batch stops at min_batch");
+        assert!(!c.observe(0.25, 100), "at the floor nothing moves");
+    }
+
+    #[test]
+    fn controller_widens_to_ceiling_with_slack() {
+        let mut c = ctl();
+        for _ in 0..16 {
+            c.observe(0.001, 100);
+        }
+        let p = c.policy();
+        assert_eq!(p.max_delay_s, 0.02, "window stops at max_delay_s");
+        assert_eq!(p.max_batch, 64, "batch stops at max_batch");
+    }
+
+    #[test]
+    fn controller_holds_in_the_dead_band_and_on_silence() {
+        let mut c = ctl();
+        let before = c.policy();
+        // between widen (0.0875) and shrink (0.175) thresholds: hold
+        assert!(!c.observe(0.12, 100));
+        assert_eq!(c.policy(), before);
+        // an empty window is no evidence of slack: hold
+        assert!(!c.observe(0.0, 0));
+        assert_eq!(c.policy(), before);
+    }
+
+    #[test]
+    fn controller_clamps_the_initial_policy() {
+        let cfg = AdaptiveBatchConfig { min_batch: 8, max_delay_s: 0.002, ..Default::default() };
+        let c = BatchController::new(cfg, BatchPolicy { max_batch: 2, max_delay_s: 0.5 });
+        assert_eq!(c.policy().max_batch, 8);
+        assert_eq!(c.policy().max_delay_s, 0.002);
+    }
+
+    #[test]
+    fn controller_single_step_moves_one_notch() {
+        let mut c = ctl();
+        assert!(c.observe(0.2, 10), "p99 at 80% of SLO shrinks");
+        assert_eq!(c.policy(), BatchPolicy { max_batch: 8, max_delay_s: 0.0025 });
+        assert!(c.observe(0.01, 10), "deep slack widens back");
+        assert_eq!(c.policy(), BatchPolicy { max_batch: 16, max_delay_s: 0.005 });
     }
 }

@@ -18,6 +18,13 @@
 //! | [`Autoscaler`] — p99/backlog-driven replica controller | §III.D elasticity: capacity follows load *and* replaces preempted nodes |
 //! | [`ServeSim`] — virtual-time serving with scripted preemption storms | §III.D "terminated anytime": in-flight batches requeue, admitted work never drops |
 //!
+//! Three hot-path mechanisms layer on top of that slice (see
+//! [`sim::ServeSimConfig`] and the `serve_hotpath` bench): per-request
+//! [`Priority`] classes with preemptive shed-at-admission, an adaptive
+//! [`BatchController`] that trades the close window against p99 headroom,
+//! and multi-model replicas that weight-swap toward per-model backlog
+//! ([`SwapConfig`]) before buying new capacity.
+//!
 //! Two invariants define correctness here, and the tests pin both:
 //!
 //! 1. **Bounded latency under overload.** Admission control sheds at the
@@ -58,9 +65,10 @@ pub mod queue;
 pub mod server;
 pub mod sim;
 
-pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleDecision, ScaleSignal};
-pub use backend::{BatchBackend, PjrtBackend, SyntheticBackend};
-pub use batcher::BatchPolicy;
-pub use queue::BoundedQueue;
+pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleDecision, ScaleSignal, SwapConfig};
+pub use backend::{BatchBackend, MultiModelBackend, PjrtBackend, SyntheticBackend};
+pub use batcher::{AdaptiveBatchConfig, BatchController, BatchPolicy};
+pub use queue::{Admit, BoundedQueue, Priority};
 pub use server::{ResponseHandle, ServeStack, ServeStats, ServerConfig};
-pub use sim::{Load, ServeReport, ServeSim, ServeSimConfig, StormEvent, TickTrace};
+pub use sim::{ClassReport, Load, ModelShift, ServeReport, ServeSim, ServeSimConfig, StormEvent,
+              TickTrace};

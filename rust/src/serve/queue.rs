@@ -1,13 +1,18 @@
 //! [`BoundedQueue`]: the serving layer's bounded MPMC request queue with
-//! admission control and deadline-based batch collection.
+//! admission control, priority classes, and deadline-based batch
+//! collection.
 //!
-//! Overload policy is *reject at the door*: once `capacity` requests are
-//! waiting, new arrivals are shed immediately (the caller sees
-//! [`crate::Error::Shed`]) instead of queueing into latencies no client
-//! would wait out. Everything admitted is eventually served — requeues
-//! from preempted replicas re-enter at the *front*, above the admission
-//! limit, because dropping admitted work is the one thing the layer must
-//! never do.
+//! Overload policy is *shed the lowest class first*: once `capacity`
+//! requests are waiting, a new arrival either displaces the youngest
+//! waiter of a strictly lower [`Priority`] class (preemptive shedding —
+//! the caller answers the victim with [`crate::Error::Shed`]) or, when no
+//! lower class is waiting, is shed itself instead of queueing into
+//! latencies no client would wait out. Dispatch queue-jumps: a batch
+//! drains `paid` before `free` before `batch`, FIFO within a class.
+//! Everything admitted and not displaced is eventually served — requeues
+//! from preempted replicas re-enter at the *front of their own class
+//! lane*, above the admission limit, because dropping admitted work is
+//! the one thing the layer must never do.
 //!
 //! [`BoundedQueue::next_batch`] is the dynamic batcher's collection
 //! primitive for real-time (threaded) serving: it blocks until work
@@ -18,12 +23,66 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+/// Request priority class; lower index is more important.
+///
+/// Shed-at-admission drops the lowest class first, dispatch drains the
+/// highest class first. The names mirror the classic serving tiers: paid
+/// interactive traffic, free interactive traffic, and offline batch
+/// traffic that tolerates arbitrary delay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Paid interactive tier: protected, shed last.
+    Paid,
+    /// Free interactive tier: shed before paid.
+    Free,
+    /// Offline/batch tier: best-effort, shed first.
+    Batch,
+}
+
+impl Priority {
+    /// Number of classes.
+    pub const COUNT: usize = 3;
+    /// All classes, most important first.
+    pub const ALL: [Priority; Priority::COUNT] = [Priority::Paid, Priority::Free, Priority::Batch];
+
+    /// Lane index (0 = most important).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Class for a lane index; out-of-range clamps to the last class.
+    pub fn from_index(i: usize) -> Self {
+        *Priority::ALL.get(i).unwrap_or(&Priority::Batch)
+    }
+
+    /// Stable lowercase label for metrics and trace args.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Paid => "paid",
+            Priority::Free => "free",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Outcome of a successful priority admission.
+#[derive(Debug, PartialEq)]
+pub enum Admit<T> {
+    /// Room existed; nothing was displaced.
+    Queued,
+    /// The queue was full: the youngest waiter of the lowest class below
+    /// the arrival was shed to make room. The caller owns the victim and
+    /// must answer it (typically with [`crate::Error::Shed`]).
+    Displaced(T),
+}
+
 struct Inner<T> {
-    items: VecDeque<T>,
+    lanes: [VecDeque<T>; Priority::COUNT],
+    len: usize,
     closed: bool,
 }
 
-/// Bounded multi-producer / multi-consumer queue.
+/// Bounded multi-producer / multi-consumer priority queue.
 pub struct BoundedQueue<T> {
     inner: Mutex<Inner<T>>,
     not_empty: Condvar,
@@ -38,7 +97,11 @@ impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "queue capacity must be positive");
         Self {
-            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner {
+                lanes: std::array::from_fn(|_| VecDeque::new()),
+                len: 0,
+                closed: false,
+            }),
             not_empty: Condvar::new(),
             capacity,
         }
@@ -51,38 +114,84 @@ impl<T> BoundedQueue<T> {
 
     /// Items currently waiting (may exceed `capacity` after requeues).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        self.inner.lock().unwrap().len
     }
 
     /// True when nothing is waiting.
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().items.is_empty()
+        self.inner.lock().unwrap().len == 0
     }
 
-    /// Admission-controlled enqueue: `Err(item)` hands the item back when
-    /// the queue is at capacity (shed) or closed, without blocking.
+    /// Single-class enqueue at [`Priority::Paid`]: `Err(item)` hands the
+    /// item back when the queue is at capacity (shed) or closed, without
+    /// blocking and without displacing anyone.
     pub fn offer(&self, item: T) -> Result<(), T> {
         let mut q = self.inner.lock().unwrap();
-        if q.closed || q.items.len() >= self.capacity {
+        if q.closed || q.len >= self.capacity {
             return Err(item);
         }
-        q.items.push_back(item);
+        q.lanes[0].push_back(item);
+        q.len += 1;
         drop(q);
         self.not_empty.notify_one();
         Ok(())
     }
 
+    /// Priority admission. With room, the item joins its class lane
+    /// ([`Admit::Queued`]). At capacity, the youngest waiter of the
+    /// lowest class *strictly below* `class` gives up its slot
+    /// ([`Admit::Displaced`]); when no such waiter exists the arrival is
+    /// the cheapest thing to shed and comes back as `Err(item)`.
+    pub fn offer_at(&self, item: T, class: Priority) -> Result<Admit<T>, T> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err(item);
+        }
+        if q.len < self.capacity {
+            q.lanes[class.index()].push_back(item);
+            q.len += 1;
+            drop(q);
+            self.not_empty.notify_one();
+            return Ok(Admit::Queued);
+        }
+        let victim = ((class.index() + 1)..Priority::COUNT)
+            .rev()
+            .find_map(|c| q.lanes[c].pop_back());
+        match victim {
+            Some(v) => {
+                // one out, one in: len is unchanged
+                q.lanes[class.index()].push_back(item);
+                drop(q);
+                self.not_empty.notify_one();
+                Ok(Admit::Displaced(v))
+            }
+            None => Err(item),
+        }
+    }
+
     /// Requeue path for preempted in-flight work: re-enters at the front
-    /// (oldest first) and bypasses the admission limit — admitted requests
-    /// are never dropped, even if a preemption lands while the queue is
-    /// full. `items` must be in original queue order.
+    /// of the [`Priority::Paid`] lane (oldest first) and bypasses the
+    /// admission limit — admitted requests are never dropped, even if a
+    /// preemption lands while the queue is full. `items` must be in
+    /// original queue order. Mixed-class batches use
+    /// [`BoundedQueue::requeue_front_at`].
     pub fn requeue_front(&self, items: Vec<T>) {
+        self.requeue_front_at(items.into_iter().map(|i| (Priority::Paid, i)).collect());
+    }
+
+    /// Mixed-class requeue: each item re-enters at the front of *its own*
+    /// class lane, preserving both class and admission order — restored
+    /// work dispatches before later same-class arrivals and still never
+    /// jumps a higher class. Bypasses the admission limit like
+    /// [`BoundedQueue::requeue_front`].
+    pub fn requeue_front_at(&self, items: Vec<(Priority, T)>) {
         if items.is_empty() {
             return;
         }
         let mut q = self.inner.lock().unwrap();
-        for item in items.into_iter().rev() {
-            q.items.push_front(item);
+        q.len += items.len();
+        for (class, item) in items.into_iter().rev() {
+            q.lanes[class.index()].push_front(item);
         }
         drop(q);
         self.not_empty.notify_all();
@@ -90,16 +199,17 @@ impl<T> BoundedQueue<T> {
 
     /// Collect the next batch: blocks until at least one item exists, then
     /// waits up to `max_wait` (from the moment the batch opened) for it to
-    /// fill to `max_batch`. Whichever limit trips first closes the batch.
-    /// Returns `None` once the queue is closed *and* drained. Under
-    /// collector contention a racing drain can leave a batch empty —
-    /// callers skip those rather than treating them as work.
+    /// fill to `max_batch`. Whichever limit trips first closes the batch,
+    /// which drains the highest class first (queue-jump at dispatch), FIFO
+    /// within a class. Returns `None` once the queue is closed *and*
+    /// drained. Under collector contention a racing drain can leave a
+    /// batch empty — callers skip those rather than treating them as work.
     pub fn next_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
         let max_batch = max_batch.max(1);
         let mut q = self.inner.lock().unwrap();
         // phase 1: wait for the first item (or shutdown)
         loop {
-            if !q.items.is_empty() {
+            if q.len > 0 {
                 break;
             }
             if q.closed {
@@ -109,7 +219,7 @@ impl<T> BoundedQueue<T> {
         }
         // phase 2: batch window opens now; fill until size or deadline
         let deadline = Instant::now() + max_wait;
-        while q.items.len() < max_batch && !q.closed {
+        while q.len < max_batch && !q.closed {
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -120,8 +230,18 @@ impl<T> BoundedQueue<T> {
                 break;
             }
         }
-        let n = q.items.len().min(max_batch);
-        Some(q.items.drain(..n).collect())
+        let n = q.len.min(max_batch);
+        let mut out = Vec::with_capacity(n);
+        for lane in q.lanes.iter_mut() {
+            while out.len() < n {
+                match lane.pop_front() {
+                    Some(item) => out.push(item),
+                    None => break,
+                }
+            }
+        }
+        q.len -= out.len();
+        Some(out)
     }
 
     /// Shut the queue: rejects new offers and wakes all collectors, which
@@ -227,6 +347,104 @@ mod tests {
             }
             seen.sort();
             assert_eq!(seen, (0..producers * per).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn priority_classes_jump_the_dispatch_order() {
+        let q = BoundedQueue::new(16);
+        q.offer_at("b1", Priority::Batch).unwrap();
+        q.offer_at("f1", Priority::Free).unwrap();
+        q.offer_at("p1", Priority::Paid).unwrap();
+        q.offer_at("f2", Priority::Free).unwrap();
+        let b = q.next_batch(16, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec!["p1", "f1", "f2", "b1"], "class order, FIFO within a class");
+    }
+
+    #[test]
+    fn full_queue_sheds_lowest_class_first() {
+        let q = BoundedQueue::new(3);
+        q.offer_at("p1", Priority::Paid).unwrap();
+        q.offer_at("b1", Priority::Batch).unwrap();
+        q.offer_at("b2", Priority::Batch).unwrap();
+        // full: a paid arrival displaces the YOUNGEST batch waiter
+        assert_eq!(q.offer_at("p2", Priority::Paid), Ok(Admit::Displaced("b2")));
+        assert_eq!(q.len(), 3);
+        // full again: free displaces the remaining batch waiter
+        assert_eq!(q.offer_at("f1", Priority::Free), Ok(Admit::Displaced("b1")));
+        // no class below batch: a batch arrival at capacity is shed itself
+        assert_eq!(q.offer_at("b3", Priority::Batch), Err("b3"));
+        // no class below paid left waiting except free: paid takes it
+        assert_eq!(q.offer_at("p3", Priority::Paid), Ok(Admit::Displaced("f1")));
+        // queue is now all paid: even paid arrivals shed at the door
+        assert_eq!(q.offer_at("p4", Priority::Paid), Err("p4"));
+        let b = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec!["p1", "p2", "p3"]);
+    }
+
+    #[test]
+    fn requeue_front_preserves_class_and_admission_order() {
+        // a replica died holding the mixed-class batch [p0, f0]; meanwhile
+        // later arrivals p1 and f1 are already waiting
+        let q = BoundedQueue::new(2);
+        q.offer_at("p1", Priority::Paid).unwrap();
+        q.offer_at("f1", Priority::Free).unwrap();
+        q.requeue_front_at(vec![(Priority::Paid, "p0"), (Priority::Free, "f0")]);
+        assert_eq!(q.len(), 4, "requeue bypasses the admission limit");
+        let b = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        // restored items dispatch before later same-class arrivals (p0
+        // before p1, f0 before f1) and never jump a higher class (f0 does
+        // not pass p1 even though p1 arrived after f0 was first admitted)
+        assert_eq!(b, vec!["p0", "p1", "f0", "f1"]);
+    }
+
+    /// Wallclock stress: lock contention on the priority lanes is
+    /// invisible in virtual time, so hammer the real Mutex/Condvar path.
+    /// Gated behind `HYPER_STRESS=1` like the BENCH_SMOKE-guarded bench
+    /// sections — seconds of wallclock, not unit-test material.
+    #[test]
+    fn stress_producers_preserve_per_class_fifo() {
+        if std::env::var("HYPER_STRESS").is_err() {
+            eprintln!("stress_producers_preserve_per_class_fifo: set HYPER_STRESS=1 to run");
+            return;
+        }
+        let q = Arc::new(BoundedQueue::new(1_000_000));
+        let producers = 8usize;
+        let per = 20_000u64;
+        std::thread::scope(|s| {
+            for p in 0..producers {
+                let q = q.clone();
+                s.spawn(move || {
+                    let class = Priority::from_index(p % Priority::COUNT);
+                    for i in 0..per {
+                        // payload encodes (producer, seq) so the collector
+                        // can check per-producer FIFO within the class
+                        match q.offer_at((p as u64, i), class) {
+                            Ok(Admit::Queued) => {}
+                            Ok(Admit::Displaced(_)) | Err(_) => {
+                                panic!("capacity sized to admit everything")
+                            }
+                        }
+                    }
+                });
+            }
+            let total = producers as u64 * per;
+            let mut seen = 0u64;
+            let mut last_seq = vec![None::<u64>; producers];
+            while seen < total {
+                if let Some(b) = q.next_batch(128, Duration::from_millis(5)) {
+                    for (p, i) in b {
+                        let slot = &mut last_seq[p as usize];
+                        if let Some(prev) = *slot {
+                            assert!(i > prev, "producer {p}: seq {i} after {prev}");
+                        }
+                        *slot = Some(i);
+                        seen += 1;
+                    }
+                }
+            }
+            assert_eq!(seen, total, "zero lost requests");
+            assert!(q.is_empty());
         });
     }
 }

@@ -14,15 +14,17 @@
 //! fixed worker pool as fast as the host allows — the `serve_batching`
 //! bench and the `hyper serve` CLI demo sit on it.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::metrics::{Counter, Gauge, Histogram};
+use crate::metrics::{Counter, Gauge, Histogram, MetricsRegistry};
 use crate::{Error, Result};
 
 use super::backend::BatchBackend;
-use super::queue::BoundedQueue;
+use super::batcher::{AdaptiveBatchConfig, BatchController, BatchPolicy};
+use super::queue::{Admit, BoundedQueue, Priority};
 use crate::obs::FlightRecorder;
 
 /// Configuration of a threaded serving stack.
@@ -36,6 +38,11 @@ pub struct ServerConfig {
     pub max_batch_delay: Duration,
     /// Replica worker threads.
     pub workers: usize,
+    /// Adaptive close-window controller: a background thread retunes
+    /// `max_batch` / `max_batch_delay` (within the config's bounds) from
+    /// the windowed p99, exactly like the virtual-time sim's controller.
+    /// `None` keeps the policy fixed.
+    pub adaptive: Option<AdaptiveBatchConfig>,
 }
 
 impl Default for ServerConfig {
@@ -45,6 +52,7 @@ impl Default for ServerConfig {
             max_batch: 16,
             max_batch_delay: Duration::from_millis(5),
             workers: 2,
+            adaptive: None,
         }
     }
 }
@@ -54,7 +62,8 @@ impl Default for ServerConfig {
 pub struct ServeStats {
     /// Requests accepted past admission control.
     pub admitted: Counter,
-    /// Requests rejected at the door (queue at capacity).
+    /// Requests rejected at the door (queue at capacity) or displaced
+    /// from the queue by a higher class.
     pub shed: Counter,
     /// Requests answered successfully.
     pub completed: Counter,
@@ -62,20 +71,85 @@ pub struct ServeStats {
     pub failed: Counter,
     /// Batches dispatched to backends.
     pub batches: Counter,
+    /// Per-class admitted counters, indexed like [`Priority::ALL`].
+    pub admitted_class: [Counter; Priority::COUNT],
+    /// Per-class shed counters (door sheds and displacements), indexed
+    /// like [`Priority::ALL`].
+    pub shed_class: [Counter; Priority::COUNT],
     /// Requests per closed batch.
     pub batch_fill: Histogram,
     /// Seconds from admission to batch close.
     pub queue_wait_s: Histogram,
     /// Seconds from admission to response.
     pub latency_s: Histogram,
+    /// Windowed admission-to-response latency: the adaptive controller
+    /// snapshots and resets this every tick. Mirrors `latency_s`.
+    pub window_latency_s: Histogram,
     /// Requests waiting at the last observation.
     pub queue_depth: Gauge,
+}
+
+impl ServeStats {
+    /// Register every counter/gauge/histogram under `serve.*` names so
+    /// `MetricsRegistry::report()` and the Prometheus exposition carry
+    /// the live serving state (per-class counters included:
+    /// `serve.admitted.paid`, `serve.shed.batch`, ...).
+    pub fn register_metrics(&self, reg: &MetricsRegistry) {
+        reg.register_counter("serve.admitted", self.admitted.clone());
+        reg.register_counter("serve.shed", self.shed.clone());
+        reg.register_counter("serve.completed", self.completed.clone());
+        reg.register_counter("serve.failed", self.failed.clone());
+        reg.register_counter("serve.batches", self.batches.clone());
+        for p in Priority::ALL {
+            reg.register_counter(
+                &format!("serve.admitted.{}", p.name()),
+                self.admitted_class[p.index()].clone(),
+            );
+            reg.register_counter(
+                &format!("serve.shed.{}", p.name()),
+                self.shed_class[p.index()].clone(),
+            );
+        }
+        reg.register_histogram("serve.batch_fill", self.batch_fill.clone());
+        reg.register_histogram("serve.queue_wait_s", self.queue_wait_s.clone());
+        reg.register_histogram("serve.latency_s", self.latency_s.clone());
+        reg.register_gauge("serve.queue_depth", self.queue_depth.clone());
+    }
 }
 
 struct Pending {
     tokens: Vec<i32>,
     admitted_at: Instant,
+    class: Priority,
     resp: mpsc::Sender<Result<i32>>,
+}
+
+/// The live batching policy, shared lock-free between the workers and
+/// the adaptive controller thread.
+struct SharedPolicy {
+    max_batch: AtomicUsize,
+    delay_ns: AtomicU64,
+}
+
+impl SharedPolicy {
+    fn new(p: BatchPolicy) -> Self {
+        Self {
+            max_batch: AtomicUsize::new(p.max_batch.max(1)),
+            delay_ns: AtomicU64::new((p.max_delay_s.max(0.0) * 1e9) as u64),
+        }
+    }
+
+    fn store(&self, p: BatchPolicy) {
+        self.max_batch.store(p.max_batch.max(1), Ordering::Relaxed);
+        self.delay_ns.store((p.max_delay_s.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    fn load(&self) -> (usize, Duration) {
+        (
+            self.max_batch.load(Ordering::Relaxed),
+            Duration::from_nanos(self.delay_ns.load(Ordering::Relaxed)),
+        )
+    }
 }
 
 /// Handle to one submitted request; blocks on [`ResponseHandle::wait`].
@@ -96,6 +170,9 @@ impl ResponseHandle {
 pub struct ServeStack {
     queue: Arc<BoundedQueue<Pending>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    policy: Arc<SharedPolicy>,
+    ctrl_stop: Arc<AtomicBool>,
+    ctrl: Option<std::thread::JoinHandle<()>>,
     /// Live serving counters (shared with the worker threads).
     pub stats: ServeStats,
 }
@@ -120,17 +197,63 @@ impl ServeStack {
     {
         let queue = Arc::new(BoundedQueue::new(cfg.queue_depth.max(1)));
         let stats = ServeStats::default();
+        let initial = BatchPolicy {
+            max_batch: cfg.max_batch,
+            max_delay_s: cfg.max_batch_delay.as_secs_f64(),
+        };
+        // the controller clamps the starting policy into its bounds, so
+        // workers and controller agree from the first batch
+        let ctrl_state = cfg.adaptive.clone().map(|a| BatchController::new(a, initial));
+        let policy = Arc::new(SharedPolicy::new(
+            ctrl_state.as_ref().map_or(initial, |c| c.policy()),
+        ));
+        let ctrl_stop = Arc::new(AtomicBool::new(false));
+        let ctrl = ctrl_state.map(|mut c| {
+            let window = stats.window_latency_s.clone();
+            let policy = policy.clone();
+            let stop = ctrl_stop.clone();
+            let obs = obs.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    // sleep the tick in short slices so shutdown stays fast
+                    let mut left = c.config().tick_s.max(0.001);
+                    while left > 0.0 && !stop.load(Ordering::Relaxed) {
+                        let slice = left.min(0.02);
+                        std::thread::sleep(Duration::from_secs_f64(slice));
+                        left -= slice;
+                    }
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let snap = window.snapshot_and_reset();
+                    if c.observe(snap.p99, snap.count) {
+                        let p = c.policy();
+                        policy.store(p);
+                        if obs.is_enabled() {
+                            obs.event("serve.batch_adapt", 0, 0, vec![
+                                ("max_batch", p.max_batch.into()),
+                                ("max_delay_s", p.max_delay_s.into()),
+                                ("window_p99_s", snap.p99.into()),
+                            ]);
+                        }
+                    }
+                }
+            })
+        });
         let mut workers = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers.max(1) {
             let mut backend = make_backend(i);
             let queue = queue.clone();
             let stats = stats.clone();
             let obs = obs.clone();
+            let policy = policy.clone();
             let pid = (i + 1) as u32;
-            let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
-            let delay = cfg.max_batch_delay;
+            let backend_max = backend.max_batch().max(1);
             workers.push(std::thread::spawn(move || {
-                while let Some(batch) = queue.next_batch(max_batch, delay) {
+                loop {
+                    let (mb, delay) = policy.load();
+                    let max_batch = mb.min(backend_max).max(1);
+                    let Some(batch) = queue.next_batch(max_batch, delay) else { break };
                     if batch.is_empty() {
                         continue;
                     }
@@ -170,9 +293,9 @@ impl ServeStack {
                             let done = Instant::now();
                             for (p, out) in batch.into_iter().zip(outs) {
                                 stats.completed.inc();
-                                stats
-                                    .latency_s
-                                    .record(done.duration_since(p.admitted_at).as_secs_f64());
+                                let lat = done.duration_since(p.admitted_at).as_secs_f64();
+                                stats.latency_s.record(lat);
+                                stats.window_latency_s.record(lat);
                                 let _ = p.resp.send(Ok(out));
                             }
                         }
@@ -189,22 +312,39 @@ impl ServeStack {
                 }
             }));
         }
-        Self { queue, workers, stats }
+        Self { queue, workers, policy, ctrl_stop, ctrl, stats }
     }
 
-    /// Submit one request. Returns [`Error::Shed`] immediately when the
-    /// queue is at its admission limit.
+    /// Submit one request at the top ([`Priority::Paid`]) class. Returns
+    /// [`Error::Shed`] immediately when the queue is at its admission
+    /// limit and holds no lower-class waiter to displace.
     pub fn submit(&self, tokens: Vec<i32>) -> Result<ResponseHandle> {
+        self.submit_class(tokens, Priority::Paid)
+    }
+
+    /// Submit one request at an explicit priority class. A full queue
+    /// sheds the youngest waiter of the lowest class below `class` to
+    /// make room (the displaced waiter's handle resolves to
+    /// [`Error::Shed`]); with nothing below to displace, the submission
+    /// itself is shed.
+    pub fn submit_class(&self, tokens: Vec<i32>, class: Priority) -> Result<ResponseHandle> {
         let (tx, rx) = mpsc::channel();
-        let pending = Pending { tokens, admitted_at: Instant::now(), resp: tx };
-        match self.queue.offer(pending) {
-            Ok(()) => {
+        let pending = Pending { tokens, admitted_at: Instant::now(), class, resp: tx };
+        match self.queue.offer_at(pending, class) {
+            Ok(admit) => {
+                if let Admit::Displaced(victim) = admit {
+                    self.stats.shed.inc();
+                    self.stats.shed_class[victim.class.index()].inc();
+                    let _ = victim.resp.send(Err(Error::Shed));
+                }
                 self.stats.admitted.inc();
+                self.stats.admitted_class[class.index()].inc();
                 self.stats.queue_depth.set(self.queue.len() as i64);
                 Ok(ResponseHandle { rx })
             }
             Err(_) => {
                 self.stats.shed.inc();
+                self.stats.shed_class[class.index()].inc();
                 Err(Error::Shed)
             }
         }
@@ -215,9 +355,20 @@ impl ServeStack {
         self.stats.admitted.get()
     }
 
+    /// The batching policy currently in force (moves over time when the
+    /// adaptive controller is configured).
+    pub fn batch_policy(&self) -> BatchPolicy {
+        let (max_batch, delay) = self.policy.load();
+        BatchPolicy { max_batch, max_delay_s: delay.as_secs_f64() }
+    }
+
     /// Drain and stop: in-queue requests are still served, then workers
-    /// exit and are joined.
+    /// (and the adaptive controller, if any) exit and are joined.
     pub fn shutdown(self) {
+        self.ctrl_stop.store(true, Ordering::Relaxed);
+        if let Some(c) = self.ctrl {
+            let _ = c.join();
+        }
         self.queue.close();
         for w in self.workers {
             let _ = w.join();
@@ -237,6 +388,7 @@ mod tests {
                 max_batch,
                 max_batch_delay: Duration::from_millis(2),
                 workers,
+                adaptive: None,
             },
             move |_| -> Box<dyn BatchBackend> {
                 Box::new(SyntheticBackend::new(0.0, 0.0, max_batch, false))
@@ -268,6 +420,7 @@ mod tests {
                 max_batch: 1,
                 max_batch_delay: Duration::from_millis(1),
                 workers: 1,
+                adaptive: None,
             },
             |_| -> Box<dyn BatchBackend> {
                 Box::new(SyntheticBackend::new(0.05, 0.0, 1, true))
@@ -319,6 +472,192 @@ mod tests {
     }
 
     #[test]
+    fn register_metrics_surfaces_per_class_counters() {
+        let s = stack(1, 4, 64);
+        let reg = MetricsRegistry::new();
+        s.stats.register_metrics(&reg);
+        s.submit_class(vec![1], Priority::Free).unwrap().wait().unwrap();
+        s.submit(vec![2]).unwrap().wait().unwrap();
+        let report = reg.report();
+        assert!(report.contains("serve.admitted 2\n"), "{report}");
+        assert!(report.contains("serve.admitted.free 1\n"), "{report}");
+        assert!(report.contains("serve.admitted.paid 1\n"), "{report}");
+        assert!(report.contains("serve.shed.batch 0\n"), "{report}");
+        assert!(report.contains("serve.latency_s count=2"), "{report}");
+        let prom = reg.report_prometheus();
+        assert!(prom.contains("# TYPE serve_admitted_free counter\nserve_admitted_free 1\n"));
+        assert!(prom.contains("# TYPE serve_shed_paid counter\nserve_shed_paid 0\n"));
+        s.shutdown();
+    }
+
+    #[test]
+    fn paid_submit_displaces_a_best_effort_waiter() {
+        // one worker stuck 100 ms per request; fill the 4-slot queue with
+        // best-effort work, then submit paid: the youngest best-effort
+        // waiter is displaced (its handle resolves Shed) and paid serves.
+        let s = ServeStack::start(
+            ServerConfig {
+                queue_depth: 4,
+                max_batch: 1,
+                max_batch_delay: Duration::from_millis(1),
+                workers: 1,
+                adaptive: None,
+            },
+            |_| -> Box<dyn BatchBackend> {
+                Box::new(SyntheticBackend::new(0.1, 0.0, 1, true))
+            },
+        );
+        let mut batch_handles = Vec::new();
+        let mut door_shed = 0u64;
+        for i in 0..16 {
+            match s.submit_class(vec![i], Priority::Batch) {
+                Ok(h) => batch_handles.push(h),
+                Err(Error::Shed) => door_shed += 1,
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        assert!(door_shed > 0, "the queue must be full before the paid submit");
+        let paid = s.submit_class(vec![99], Priority::Paid).expect("paid displaces, never sheds");
+        assert_eq!(s.stats.admitted_class[Priority::Paid.index()].get(), 1);
+        assert_eq!(
+            s.stats.shed_class[Priority::Batch.index()].get(),
+            door_shed + 1,
+            "exactly one waiter was displaced on top of the door sheds"
+        );
+        assert_eq!(paid.wait().unwrap(), SyntheticBackend::token_for(&[99]));
+        let displaced = batch_handles
+            .into_iter()
+            .map(|h| h.wait())
+            .filter(|r| matches!(r, Err(Error::Shed)))
+            .count();
+        assert_eq!(displaced, 1, "the displaced waiter's handle resolves to Shed");
+        let stats = s.stats.clone();
+        s.shutdown();
+        assert_eq!(
+            stats.completed.get(),
+            stats.admitted.get() - 1,
+            "everything admitted except the displaced waiter was served"
+        );
+    }
+
+    #[test]
+    fn adaptive_controller_retunes_the_live_policy() {
+        // an SLO of 1 µs is unmeetable, so every tick with samples
+        // shrinks the window until the policy sits at its floor
+        let s = ServeStack::start(
+            ServerConfig {
+                queue_depth: 1024,
+                max_batch: 16,
+                max_batch_delay: Duration::from_millis(5),
+                workers: 1,
+                adaptive: Some(AdaptiveBatchConfig {
+                    slo_p99_s: 1e-6,
+                    min_delay_s: 0.0005,
+                    max_delay_s: 0.005,
+                    min_batch: 2,
+                    max_batch: 16,
+                    tick_s: 0.01,
+                    ..Default::default()
+                }),
+            },
+            |_| -> Box<dyn BatchBackend> {
+                Box::new(SyntheticBackend::new(0.0, 0.0, 16, false))
+            },
+        );
+        assert_eq!(s.batch_policy().max_batch, 16, "starts at the configured policy");
+        let at_floor =
+            |p: BatchPolicy| p.max_batch == 2 && (p.max_delay_s - 0.0005).abs() < 1e-9;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !at_floor(s.batch_policy()) && Instant::now() < deadline {
+            s.submit(vec![1]).unwrap().wait().unwrap();
+        }
+        let p = s.batch_policy();
+        assert_eq!(p.max_batch, 2, "controller walked the policy to its floor");
+        assert!((p.max_delay_s - 0.0005).abs() < 1e-9, "delay at its floor: {}", p.max_delay_s);
+        s.shutdown();
+    }
+
+    /// Gated behind `HYPER_STRESS=1`: seconds of wallclock, 8 producers
+    /// hammering mixed classes through a shedding stack — conservation
+    /// must hold exactly (admitted = completed + displaced; offered =
+    /// admitted + door sheds).
+    #[test]
+    fn stress_stack_serves_mixed_classes_without_loss() {
+        if std::env::var("HYPER_STRESS").is_err() {
+            eprintln!("stress_stack_serves_mixed_classes_without_loss: set HYPER_STRESS=1 to run");
+            return;
+        }
+        let s = Arc::new(ServeStack::start(
+            ServerConfig {
+                queue_depth: 64,
+                max_batch: 8,
+                max_batch_delay: Duration::from_millis(1),
+                workers: 2,
+                adaptive: Some(AdaptiveBatchConfig::default()),
+            },
+            |_| -> Box<dyn BatchBackend> {
+                Box::new(SyntheticBackend::new(0.0002, 0.0, 8, true))
+            },
+        ));
+        let producers = 8u64;
+        let per = 5_000u64;
+        let door_shed = Arc::new(AtomicU64::new(0));
+        let completed = Arc::new(AtomicU64::new(0));
+        let displaced = Arc::new(AtomicU64::new(0));
+        let threads: Vec<_> = (0..producers)
+            .map(|t| {
+                let s = s.clone();
+                let door_shed = door_shed.clone();
+                let completed = completed.clone();
+                let displaced = displaced.clone();
+                std::thread::spawn(move || {
+                    let mut handles = Vec::new();
+                    for i in 0..per {
+                        let class = Priority::from_index(((t + i) % 3) as usize);
+                        match s.submit_class(vec![t as i32, i as i32], class) {
+                            Ok(h) => handles.push(h),
+                            Err(Error::Shed) => {
+                                door_shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => panic!("unexpected error {e}"),
+                        }
+                    }
+                    for h in handles {
+                        match h.wait() {
+                            Ok(_) => {
+                                completed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(Error::Shed) => {
+                                displaced.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => panic!("unexpected response {e}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let (door, done, disp) = (
+            door_shed.load(Ordering::Relaxed),
+            completed.load(Ordering::Relaxed),
+            displaced.load(Ordering::Relaxed),
+        );
+        assert_eq!(s.stats.admitted.get() + door, producers * per, "every submit accounted");
+        assert_eq!(done + disp, s.stats.admitted.get(), "admitted = completed + displaced");
+        assert_eq!(s.stats.completed.get(), done);
+        assert_eq!(s.stats.shed.get(), door + disp);
+        assert_eq!(s.stats.failed.get(), 0);
+        assert!(disp > 0, "mixed classes under overload must displace");
+        let by_class: u64 = (0..Priority::COUNT)
+            .map(|c| s.stats.admitted_class[c].get())
+            .sum();
+        assert_eq!(by_class, s.stats.admitted.get(), "class counters partition admissions");
+        Arc::try_unwrap(s).ok().expect("all clones dropped").shutdown();
+    }
+
+    #[test]
     fn workers_record_batch_assembly_and_execute_spans() {
         let rec = FlightRecorder::wallclock(4096);
         let s = ServeStack::start_with_obs(
@@ -327,6 +666,7 @@ mod tests {
                 max_batch: 8,
                 max_batch_delay: Duration::from_millis(2),
                 workers: 2,
+                adaptive: None,
             },
             |_| -> Box<dyn BatchBackend> {
                 Box::new(SyntheticBackend::new(0.0, 0.0, 8, false))

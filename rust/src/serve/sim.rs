@@ -10,12 +10,30 @@
 //! shared [`BatchPolicy`], and the [`Autoscaler`] runs as a periodic
 //! control tick over windowed p99 / queue-depth signals.
 //!
+//! Three hot-path mechanisms cooperate on top of that base:
+//!
+//! * **Priority classes** ([`Priority`]): arrivals carry a class drawn
+//!   from [`ServeSimConfig::class_mix`]; the queue keeps per-class lanes,
+//!   shed-at-admission displaces the lowest class first, and dispatch
+//!   queue-jumps (a batch drains `paid` before `free` before `batch`).
+//! * **Adaptive batching** ([`super::BatchController`]): with
+//!   [`ServeSimConfig::adaptive`] set, the live [`BatchPolicy`] shrinks
+//!   its close window as the tick-windowed p99 nears the SLO and widens
+//!   it back under slack, trading amortization for tail headroom.
+//! * **Multi-model replicas** ([`ServeSimConfig::models`] > 1): each
+//!   replica serves one model (the fleet node's tag); converting it costs
+//!   [`super::SwapConfig::swap_s`] virtual seconds of no service (a
+//!   `serve.swap` span in the trace). The [`Autoscaler`] swaps idle
+//!   capacity toward per-model backlog before it buys new capacity.
+//!
 //! Invariants the tests pin down:
 //!
 //! * **No admitted request is ever dropped.** Preempting a replica
 //!   requeues its in-flight batch at the queue front (original admission
-//!   timestamps preserved, admission limit bypassed); the only way out of
-//!   the system is a response or an admission-time shed.
+//!   timestamps preserved, class lanes and admission limit respected and
+//!   bypassed respectively); the only way out of the system is a
+//!   response or an admission-time shed (including displacement by a
+//!   higher class while still queued — never once dispatched).
 //! * **Determinism.** Same config + seed ⇒ bit-identical [`ServeReport`].
 //!   Storms are scripted `(time, kills, notice)` triples timed from
 //!   **engine start** (see [`crate::fleet`]), so a preemption storm is a
@@ -31,8 +49,9 @@ use crate::obs::{FlightRecorder, SeriesSet, SloMonitor, SloSpec};
 use crate::sim::{ClosedLoop, OpenLoop, RateSchedule, SimRng, SimTime};
 use crate::Result;
 
-use super::autoscaler::{Autoscaler, AutoscalerConfig, ScaleDecision, ScaleSignal};
-use super::batcher::BatchPolicy;
+use super::autoscaler::{Autoscaler, AutoscalerConfig, ScaleDecision, ScaleSignal, SwapConfig};
+use super::batcher::{AdaptiveBatchConfig, BatchController, BatchPolicy};
+use super::queue::Priority;
 
 /// Client model driving the simulation.
 #[derive(Debug, Clone)]
@@ -51,11 +70,44 @@ pub enum Load {
 
 pub use crate::cloud::{ProvisionerConfig, SpotMarketConfig, StormEvent};
 
+/// A scripted step in per-model demand: at `at_s` the arrival weights
+/// switch to `mix`. Models the "demand moved from A to B" scenario that
+/// makes swap-vs-scale an interesting decision (a static mix never
+/// starves one model while the other holds idle replicas).
+#[derive(Debug, Clone)]
+pub struct ModelShift {
+    /// Virtual time the new mix takes effect, seconds.
+    pub at_s: f64,
+    /// Per-model arrival weights from `at_s` on (len = `models`).
+    pub mix: Vec<f64>,
+}
+
 /// Full serving-scenario configuration.
 #[derive(Debug, Clone)]
 pub struct ServeSimConfig {
-    /// Dynamic batching rule (size / deadline).
+    /// Dynamic batching rule (size / deadline). With
+    /// [`ServeSimConfig::adaptive`] set this is only the *starting*
+    /// policy; the controller then moves it inside the adaptive bounds.
     pub batch: BatchPolicy,
+    /// Adaptive batch-window controller; `None` keeps `batch` fixed.
+    /// Adjustments happen on the autoscaler control tick, reading the
+    /// same windowed p99 the scaler sees.
+    pub adaptive: Option<AdaptiveBatchConfig>,
+    /// Arrival weights per priority class (`[paid, free, batch]` — see
+    /// [`Priority`]); zero-weight classes never arrive. The default puts
+    /// everything in `paid`, which is exactly the single-class stack.
+    pub class_mix: [f64; Priority::COUNT],
+    /// Distinct models replicas can serve (1 = classic single-model
+    /// fleet; the model is the fleet node's tag).
+    pub models: usize,
+    /// Per-model arrival weights (must have `models` entries to take
+    /// effect; anything else falls back to a uniform mix).
+    pub model_mix: Vec<f64>,
+    /// Scripted change of `model_mix` mid-run (demand migration).
+    pub model_shift: Option<ModelShift>,
+    /// Weight-swap policy, read when `models > 1`; `None` never swaps
+    /// (starved models wait for scale-ups alone).
+    pub swap: Option<SwapConfig>,
     /// Admission limit (requests beyond this are shed).
     pub queue_depth: usize,
     /// Replica batch service time: `base + per_item * n` seconds.
@@ -100,6 +152,12 @@ impl Default for ServeSimConfig {
     fn default() -> Self {
         Self {
             batch: BatchPolicy::default(),
+            adaptive: None,
+            class_mix: [1.0, 0.0, 0.0],
+            models: 1,
+            model_mix: vec![1.0],
+            model_shift: None,
+            swap: None,
             queue_depth: 256,
             service_base_s: 0.002,
             service_per_item_s: 0.001,
@@ -139,6 +197,24 @@ pub struct TickTrace {
     pub shed: u64,
 }
 
+/// Per-priority-class accounting of one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassReport {
+    /// Class label (`paid` / `free` / `batch`).
+    pub class: &'static str,
+    /// Requests the load generator produced in this class.
+    pub offered: u64,
+    /// Requests of this class accepted past admission control.
+    pub admitted: u64,
+    /// Requests of this class shed — at the door or displaced from the
+    /// queue by a higher class while waiting.
+    pub shed: u64,
+    /// Requests of this class answered.
+    pub completed: u64,
+    /// End-to-end latency of this class (admission → response), seconds.
+    pub latency: HistogramSnapshot,
+}
+
 /// Outcome of one simulated serving run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeReport {
@@ -176,6 +252,11 @@ pub struct ServeReport {
     pub throughput_rps: f64,
     /// Instance-hours billed, USD.
     pub cost_usd: f64,
+    /// Completed weight swaps (multi-model fleets only).
+    pub swaps: u64,
+    /// Per-class accounting, indexed like [`Priority::ALL`]. All-paid in
+    /// the default single-class configuration.
+    pub per_class: Vec<ClassReport>,
     /// Per-tick timeline (empty unless tracing was enabled).
     pub trace: Vec<TickTrace>,
 }
@@ -185,6 +266,10 @@ struct Req {
     admitted_at: SimTime,
     /// Closed-loop user to wake after the response (open loop: `None`).
     user: Option<u64>,
+    /// Priority class lane index ([`Priority::index`]).
+    class: u8,
+    /// Model this request needs.
+    model: u8,
 }
 
 // Timer-token space: the engine's `schedule_timer` carries one u64.
@@ -193,6 +278,118 @@ const TOK_DEADLINE: u64 = 1;
 const TOK_ARRIVE: u64 = 2;
 /// Closed-loop user `u` arrives as token `TOK_USER0 + u`.
 const TOK_USER0: u64 = 3;
+
+// Work-token space (`schedule_work`, separate from timers): a batch
+// completion vs a weight-swap completion on a replica.
+const WORK_BATCH: u64 = 0;
+const WORK_SWAP: u64 = 1;
+
+/// Class-major priority lanes with per-model sub-lanes: lane `(c, m)` is
+/// `c * models + m`. Dispatch drains class 0 first; within a class, FIFO
+/// by admission. Preempted batches re-enter at the front of their own
+/// lanes with original stamps, so restored work dispatches before later
+/// same-class arrivals and still never jumps a higher class.
+#[derive(Debug)]
+struct PrioQueue {
+    models: usize,
+    lanes: Vec<VecDeque<Req>>,
+    len: usize,
+}
+
+impl PrioQueue {
+    fn new(models: usize) -> Self {
+        let models = models.max(1);
+        Self {
+            models,
+            lanes: (0..Priority::COUNT * models).map(|_| VecDeque::new()).collect(),
+            len: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn lane(&self, class: usize, model: usize) -> usize {
+        class * self.models + model
+    }
+
+    fn push_back(&mut self, req: Req) {
+        let l = self.lane(req.class as usize, req.model as usize);
+        self.lanes[l].push_back(req);
+        self.len += 1;
+    }
+
+    /// Preemptive shed: remove the youngest waiter of the lowest class
+    /// strictly below `class`, if any.
+    fn evict_below(&mut self, class: usize) -> Option<Req> {
+        for c in ((class + 1)..Priority::COUNT).rev() {
+            // youngest within the class = latest admission among lane backs
+            let mut best: Option<(usize, SimTime)> = None;
+            for m in 0..self.models {
+                let l = self.lane(c, m);
+                if let Some(r) = self.lanes[l].back() {
+                    if best.is_none_or(|(_, t)| r.admitted_at > t) {
+                        best = Some((l, r.admitted_at));
+                    }
+                }
+            }
+            if let Some((l, _)) = best {
+                self.len -= 1;
+                return self.lanes[l].pop_back();
+            }
+        }
+        None
+    }
+
+    /// Requests waiting for `model`, across all classes.
+    fn model_depth(&self, model: usize) -> usize {
+        (0..Priority::COUNT).map(|c| self.lanes[self.lane(c, model)].len()).sum()
+    }
+
+    /// Oldest admission stamp waiting for `model` (drives the batch
+    /// close deadline).
+    fn model_oldest(&self, model: usize) -> Option<SimTime> {
+        (0..Priority::COUNT)
+            .filter_map(|c| self.lanes[self.lane(c, model)].front().map(|r| r.admitted_at))
+            .min()
+    }
+
+    /// Take up to `take` requests for `model`, highest class first.
+    fn drain_model(&mut self, model: usize, take: usize) -> Vec<Req> {
+        let mut out = Vec::with_capacity(take);
+        for c in 0..Priority::COUNT {
+            let l = self.lane(c, model);
+            while out.len() < take {
+                match self.lanes[l].pop_front() {
+                    Some(r) => out.push(r),
+                    None => break,
+                }
+            }
+        }
+        self.len -= out.len();
+        out
+    }
+
+    /// Preempted in-flight work re-enters at the front of its own lanes,
+    /// original order and admission stamps intact.
+    fn requeue_front(&mut self, batch: Vec<Req>) {
+        self.len += batch.len();
+        for req in batch.into_iter().rev() {
+            let l = self.lane(req.class as usize, req.model as usize);
+            self.lanes[l].push_front(req);
+        }
+    }
+
+    /// Per-model backlog vector for the swap-vs-scale decision.
+    fn model_backlogs(&self) -> Vec<usize> {
+        (0..self.models).map(|m| self.model_depth(m)).collect()
+    }
+}
 
 /// The simulator. Construct, then [`ServeSim::run`] one scenario.
 pub struct ServeSim {
@@ -246,21 +443,48 @@ impl ServeSim {
             seed: self.cfg.seed,
             ..FleetConfig::default()
         });
+        let models = self.cfg.models.max(1);
+        let model_weights = if self.cfg.model_mix.len() == models {
+            self.cfg.model_mix.clone()
+        } else {
+            vec![1.0; models]
+        };
         let mut w = ServeWorkload {
             cfg: &self.cfg,
             rng: SimRng::new(self.cfg.seed ^ 0x5EE7_BA7C),
+            // class/model sampling draws from its own stream so enabling
+            // a mix never perturbs the arrival-time sequence
+            mix_rng: SimRng::new(self.cfg.seed ^ 0xC1A5_51F5),
             load: Some(load),
-            queue: VecDeque::new(),
+            queue: PrioQueue::new(models),
             busy: BTreeMap::new(),
             deadline_at: None,
             latency: Histogram::new(),
             window: Histogram::new(),
             scaler: Autoscaler::new(self.cfg.autoscaler.clone()),
+            policy: self.cfg.batch,
+            ctrl: self
+                .cfg
+                .adaptive
+                .clone()
+                .map(|a| BatchController::new(a, self.cfg.batch)),
+            single_class: self.cfg.class_mix[1..].iter().all(|&w| w <= 0.0),
+            models,
+            model_weights,
+            model_shift: self.cfg.model_shift.clone(),
+            replica_model: BTreeMap::new(),
+            swapping: BTreeMap::new(),
+            swaps: 0,
             offered: 0,
             admitted: 0,
             shed: 0,
             completed: 0,
             requeued: 0,
+            offered_by: [0; Priority::COUNT],
+            admitted_by: [0; Priority::COUNT],
+            shed_by: [0; Priority::COUNT],
+            completed_by: [0; Priority::COUNT],
+            lat_by: std::array::from_fn(|_| Histogram::new()),
             scale_ups: 0,
             scale_downs: 0,
             batches: 0,
@@ -308,6 +532,17 @@ impl ServeSim {
                 0.0
             },
             cost_usd: engine.ledger().total_usd(),
+            swaps: w.swaps,
+            per_class: (0..Priority::COUNT)
+                .map(|c| ClassReport {
+                    class: Priority::from_index(c).name(),
+                    offered: w.offered_by[c],
+                    admitted: w.admitted_by[c],
+                    shed: w.shed_by[c],
+                    completed: w.completed_by[c],
+                    latency: w.lat_by[c].snapshot(),
+                })
+                .collect(),
             trace: std::mem::take(&mut w.trace),
         })
     }
@@ -317,21 +552,45 @@ impl ServeSim {
 struct ServeWorkload<'a> {
     cfg: &'a ServeSimConfig,
     rng: SimRng,
+    /// Independent stream for class/model sampling (see `run`).
+    mix_rng: SimRng,
     /// Taken at `on_start` to bootstrap the generator.
     load: Option<Load>,
-    queue: VecDeque<Req>,
+    queue: PrioQueue,
     /// In-flight batch per replica; a kill requeues it at the front.
     busy: BTreeMap<NodeId, Vec<Req>>,
     deadline_at: Option<SimTime>,
     latency: Histogram,
     window: Histogram,
     scaler: Autoscaler,
+    /// The batching policy in force right now — `cfg.batch` until the
+    /// adaptive controller (if any) moves it.
+    policy: BatchPolicy,
+    ctrl: Option<BatchController>,
+    /// Everything is `paid`: skip class sampling entirely.
+    single_class: bool,
+    /// Normalized model count (>= 1).
+    models: usize,
+    /// Per-model arrival weights currently in effect.
+    model_weights: Vec<f64>,
+    /// Pending scripted demand migration (applied lazily at sample time).
+    model_shift: Option<ModelShift>,
+    /// Model each ready replica serves (the node's tag, cached).
+    replica_model: BTreeMap<NodeId, u32>,
+    /// Replicas mid-swap and the model they are converting to.
+    swapping: BTreeMap<NodeId, u32>,
+    swaps: u64,
     // counters
     offered: u64,
     admitted: u64,
     shed: u64,
     completed: u64,
     requeued: u64,
+    offered_by: [u64; Priority::COUNT],
+    admitted_by: [u64; Priority::COUNT],
+    shed_by: [u64; Priority::COUNT],
+    completed_by: [u64; Priority::COUNT],
+    lat_by: [Histogram; Priority::COUNT],
     scale_ups: u64,
     scale_downs: u64,
     batches: u64,
@@ -363,32 +622,125 @@ impl ServeWorkload<'_> {
         }
     }
 
-    fn launch_replica(&mut self, fleet: &mut FleetEngine, warm: bool) {
-        let mut spec = LaunchSpec::new(self.cfg.instance, self.cfg.spot_replicas);
+    fn launch_replica(&mut self, fleet: &mut FleetEngine, warm: bool, model: u32) {
+        let mut spec = LaunchSpec::new(self.cfg.instance, self.cfg.spot_replicas).tagged(model);
         if warm {
             spec = spec.warm();
         }
         fleet.launch(spec);
     }
 
+    /// Weighted index for `frac` in `[0, 1)` over `weights` (degenerate
+    /// weights fall back to index 0).
+    fn bucket(weights: &[f64], frac: f64) -> usize {
+        let total: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+        if total <= 0.0 {
+            return 0;
+        }
+        let target = frac.clamp(0.0, 1.0) * total;
+        let mut cum = 0.0;
+        for (i, w) in weights.iter().enumerate() {
+            cum += w.max(0.0);
+            if target < cum {
+                return i;
+            }
+        }
+        weights.len().saturating_sub(1)
+    }
+
+    /// Apply a scripted demand migration once its time has come.
+    fn apply_model_shift(&mut self, now: SimTime) {
+        let due = self
+            .model_shift
+            .as_ref()
+            .is_some_and(|s| now.as_secs_f64() >= s.at_s && s.mix.len() == self.models);
+        if due {
+            self.model_weights = self.model_shift.take().expect("due").mix;
+        }
+    }
+
+    /// Sample `(class, model)` for one arrival. Open-loop arrivals draw
+    /// from the dedicated mix stream; a closed-loop user keeps one class
+    /// and model for life (deterministic buckets over the weights), which
+    /// is how real user populations behave.
+    fn sample_arrival(&mut self, now: SimTime, user: Option<u64>) -> (usize, usize) {
+        let class = if self.single_class {
+            0
+        } else {
+            match (self.think, user) {
+                (Some(cl), Some(u)) => {
+                    Self::bucket(&self.cfg.class_mix, (u as f64 + 0.5) / cl.users.max(1) as f64)
+                }
+                _ => Self::bucket(&self.cfg.class_mix, self.mix_rng.next_f64()),
+            }
+        };
+        let model = if self.models <= 1 {
+            0
+        } else {
+            self.apply_model_shift(now);
+            match user {
+                // golden-ratio hash decorrelates a user's model from the
+                // class bucket above
+                Some(u) => Self::bucket(
+                    &self.model_weights,
+                    ((u as f64 + 0.5) * 0.618_033_988_749_895).fract(),
+                ),
+                None => Self::bucket(&self.model_weights, self.mix_rng.next_f64()),
+            }
+        };
+        (class, model)
+    }
+
+    fn admit(&mut self, fleet: &mut FleetEngine, now: SimTime, class: usize, model: usize, user: Option<u64>) {
+        self.admitted += 1;
+        self.admitted_by[class] += 1;
+        self.queue.push_back(Req {
+            admitted_at: now,
+            user,
+            class: class as u8,
+            model: model as u8,
+        });
+        // admitted work must keep the control loop alive: a late
+        // arrival after the tick chain wound down still deserves
+        // floor repair if a kill then strands it
+        self.arm_tick(fleet);
+        self.try_dispatch(fleet);
+    }
+
+    fn record_shed(&mut self, fleet: &mut FleetEngine, now: SimTime, req_class: usize, user: Option<u64>, displaced: bool) {
+        self.shed += 1;
+        self.shed_by[req_class] += 1;
+        if self.obs.is_enabled() {
+            let mut args = vec![("class", Priority::from_index(req_class).name().into())];
+            if displaced {
+                args.push(("displaced", 1usize.into()));
+            }
+            self.obs.event_at("serve.shed", now.as_nanos(), 0, 0, args);
+        }
+        // a shed closed-loop user retries after thinking
+        if let (Some(cl), Some(u)) = (self.think, user) {
+            self.schedule_user(fleet, cl, u);
+        }
+    }
+
     fn on_arrive(&mut self, fleet: &mut FleetEngine, user: Option<u64>) {
         let now = fleet.now();
         self.offered += 1;
+        let (class, model) = self.sample_arrival(now, user);
+        self.offered_by[class] += 1;
         if self.queue.len() >= self.cfg.queue_depth {
-            self.shed += 1;
-            self.obs.event_at("serve.shed", now.as_nanos(), 0, 0, vec![]);
-            // a shed closed-loop user retries after thinking
-            if let (Some(cl), Some(u)) = (self.think, user) {
-                self.schedule_user(fleet, cl, u);
+            // overload: shed the lowest class first — the arrival
+            // displaces the youngest strictly-lower-class waiter when one
+            // exists, and is shed itself otherwise
+            match self.queue.evict_below(class) {
+                Some(victim) => {
+                    self.record_shed(fleet, now, victim.class as usize, victim.user, true);
+                    self.admit(fleet, now, class, model, user);
+                }
+                None => self.record_shed(fleet, now, class, user, false),
             }
         } else {
-            self.admitted += 1;
-            self.queue.push_back(Req { admitted_at: now, user });
-            // admitted work must keep the control loop alive: a late
-            // arrival after the tick chain wound down still deserves
-            // floor repair if a kill then strands it
-            self.arm_tick(fleet);
-            self.try_dispatch(fleet);
+            self.admit(fleet, now, class, model, user);
         }
         if let Some(gen) = self.open {
             let next = now + SimTime::from_secs_f64(gen.gap_s(&mut self.rng));
@@ -467,18 +819,43 @@ impl ServeWorkload<'_> {
             self.series.push("serve.completed", t, self.completed as f64);
             self.series.push("serve.shed", t, self.shed as f64);
         }
+        // adaptive batching reads the same windowed p99 as the scaler; a
+        // shrunk close window can make a waiting partial batch closeable
+        // right now, so re-run dispatch on any change
+        if let Some(ctrl) = self.ctrl.as_mut() {
+            if ctrl.observe(snap.p99, snap.count) {
+                self.policy = ctrl.policy();
+                if self.obs.is_enabled() {
+                    self.obs.event_at("serve.batch_adapt", now.as_nanos(), 0, 0, vec![
+                        ("max_batch", self.policy.max_batch.into()),
+                        ("max_delay_s", self.policy.max_delay_s.into()),
+                        ("window_p99_s", snap.p99.into()),
+                    ]);
+                }
+                self.try_dispatch(fleet);
+            }
+        }
+        // swap-vs-scale: converting an idle replica toward the starved
+        // model reuses hardware already on the bill, so a swap this tick
+        // suppresses the scale-up the same backlog would trigger (floor
+        // repair is never suppressed)
+        let swapped = self.maybe_swap(fleet, now);
         match self.scaler.decide(&sig) {
             ScaleDecision::Hold => {}
             ScaleDecision::Up(n) => {
-                if self.obs.is_enabled() {
-                    self.obs.event_at("serve.scale_up", now.as_nanos(), 0, 0, vec![
-                        ("n", n.into()),
-                        ("queue_depth", sig.queue_depth.into()),
-                    ]);
-                }
-                for _ in 0..n {
-                    self.launch_replica(fleet, false);
-                    self.scale_ups += 1;
+                if swapped && live + provisioning >= self.cfg.autoscaler.min_replicas {
+                    // the swap IS this tick's capacity action
+                } else {
+                    if self.obs.is_enabled() {
+                        self.obs.event_at("serve.scale_up", now.as_nanos(), 0, 0, vec![
+                            ("n", n.into()),
+                            ("queue_depth", sig.queue_depth.into()),
+                        ]);
+                    }
+                    for model in self.pick_scale_models(fleet, n) {
+                        self.launch_replica(fleet, false, model);
+                        self.scale_ups += 1;
+                    }
                 }
             }
             ScaleDecision::Down(n) => {
@@ -492,9 +869,10 @@ impl ServeWorkload<'_> {
                 for rid in victims {
                     self.scale_downs += 1;
                     fleet.drain(rid);
-                    if !self.busy.contains_key(&rid) {
+                    if !self.busy.contains_key(&rid) && !self.swapping.contains_key(&rid) {
+                        self.replica_model.remove(&rid);
                         fleet.release(rid);
-                    } // else: exits at its batch completion
+                    } // else: exits at its batch (or swap) completion
                 }
             }
         }
@@ -526,59 +904,167 @@ impl ServeWorkload<'_> {
         }
     }
 
+    /// Capacity committed per model: serving replicas at their current
+    /// model, replicas mid-swap at the model they are converting to.
+    fn committed_per_model(&self, fleet: &FleetEngine) -> Vec<usize> {
+        let mut committed = vec![0usize; self.models];
+        for id in fleet.serving_ids() {
+            let m = match self.swapping.get(&id) {
+                Some(&to) => to as usize,
+                None => self.replica_model.get(&id).copied().unwrap_or(0) as usize,
+            };
+            if m < committed.len() {
+                committed[m] += 1;
+            }
+        }
+        committed
+    }
+
+    /// Models for `n` scale-up launches: each goes to the model with the
+    /// most backlog per committed replica (counting this tick's earlier
+    /// picks), so capacity lands where the starvation is.
+    fn pick_scale_models(&self, fleet: &FleetEngine, n: usize) -> Vec<u32> {
+        if self.models <= 1 {
+            return vec![0; n];
+        }
+        let backlog = self.queue.model_backlogs();
+        let mut committed = self.committed_per_model(fleet);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut best = 0;
+            let mut best_score = -1.0;
+            for m in 0..self.models {
+                let score = backlog[m] as f64 / (committed[m] as f64 + 1.0);
+                if score > best_score {
+                    best = m;
+                    best_score = score;
+                }
+            }
+            committed[best] += 1;
+            out.push(best as u32);
+        }
+        out
+    }
+
+    /// One weight swap per tick at most: if the [`Autoscaler`] finds a
+    /// justified `(donor, starved)` model pair and an idle donor replica
+    /// exists, start converting it (busy for `swap_s`, `serve.swap` span
+    /// in the trace). Returns whether a swap was initiated.
+    fn maybe_swap(&mut self, fleet: &mut FleetEngine, now: SimTime) -> bool {
+        if self.models <= 1 {
+            return false;
+        }
+        let Some(swap) = self.cfg.swap.as_ref() else { return false };
+        let backlog = self.queue.model_backlogs();
+        let committed = self.committed_per_model(fleet);
+        let Some((from, to)) =
+            self.scaler.decide_swap(swap, now.as_secs_f64(), &backlog, &committed)
+        else {
+            return false;
+        };
+        // donor: an idle replica currently serving `from`
+        let Some(rid) = fleet.serving_ids().find(|id| {
+            !self.busy.contains_key(id)
+                && !self.swapping.contains_key(id)
+                && self.replica_model.get(id).copied().unwrap_or(0) as usize == from
+        }) else {
+            return false;
+        };
+        self.swapping.insert(rid, to as u32);
+        if self.obs.is_enabled() {
+            let end = now + SimTime::from_secs_f64(swap.swap_s);
+            self.obs.span_at("serve.swap", now.as_nanos(), end.as_nanos(), rid, 0, vec![
+                ("from", from.into()),
+                ("to", to.into()),
+                ("backlog", backlog[to].into()),
+            ]);
+        }
+        fleet.add_busy(rid, swap.swap_s);
+        fleet.schedule_work(rid, now + SimTime::from_secs_f64(swap.swap_s), WORK_SWAP);
+        true
+    }
+
     /// Assign closed batches to idle replicas until neither the size nor
-    /// the deadline rule can close one; schedule the deadline wake-up for
-    /// a partial batch.
+    /// the deadline rule can close one more; schedule the deadline
+    /// wake-up for a partial batch. Each replica only takes work for its
+    /// own model, and a batch drains the highest class first.
     fn try_dispatch(&mut self, fleet: &mut FleetEngine) {
         let now = fleet.now();
         loop {
             if self.queue.is_empty() {
                 return;
             }
-            let Some(rid) = fleet.serving_ids().find(|id| !self.busy.contains_key(id)) else {
-                return;
-            };
-            let oldest = self.queue.front().expect("non-empty").admitted_at;
-            if !self.cfg.batch.should_close(self.queue.len(), oldest, now) {
-                // partial batch: arm the deadline wake-up if it is earlier
-                // than whatever is already armed
-                let deadline = self.cfg.batch.close_at(oldest);
-                let rearm = match self.deadline_at {
-                    Some(d) => deadline < d,
-                    None => true,
-                };
-                if rearm {
-                    self.deadline_at = Some(deadline);
-                    fleet.schedule_timer(deadline, TOK_DEADLINE);
+            let idle: Vec<NodeId> = fleet
+                .serving_ids()
+                .filter(|id| !self.busy.contains_key(id) && !self.swapping.contains_key(id))
+                .collect();
+            let mut dispatched = false;
+            let mut earliest: Option<SimTime> = None;
+            for rid in idle {
+                let model = self.replica_model.get(&rid).copied().unwrap_or(0) as usize;
+                let depth = self.queue.model_depth(model);
+                if depth == 0 {
+                    continue;
+                }
+                let oldest = self.queue.model_oldest(model).expect("depth > 0");
+                if !self.policy.should_close(depth, oldest, now) {
+                    let deadline = self.policy.close_at(oldest);
+                    earliest = Some(earliest.map_or(deadline, |e| e.min(deadline)));
+                    continue;
+                }
+                let closed_by_size = depth >= self.policy.max_batch;
+                let take = self.policy.take(depth);
+                let batch = self.queue.drain_model(model, take);
+                self.batches += 1;
+                self.batched_reqs += batch.len() as u64;
+                let service = self.cfg.service_base_s
+                    + self.cfg.service_per_item_s * batch.len() as f64;
+                if self.obs.is_enabled() {
+                    let end = now + SimTime::from_secs_f64(service);
+                    self.obs.span_at("serve.batch", now.as_nanos(), end.as_nanos(), rid, 0, vec![
+                        ("fill", batch.len().into()),
+                        ("close", if closed_by_size { "size" } else { "deadline" }.into()),
+                        ("oldest_wait_s", (now.as_secs_f64() - oldest.as_secs_f64()).into()),
+                    ]);
+                }
+                self.busy.insert(rid, batch);
+                fleet.add_busy(rid, service);
+                fleet.schedule_work(rid, now + SimTime::from_secs_f64(service), WORK_BATCH);
+                dispatched = true;
+            }
+            if !dispatched {
+                // partial batches only: arm the earliest deadline if it
+                // beats whatever is already armed
+                if let Some(deadline) = earliest {
+                    let rearm = match self.deadline_at {
+                        Some(d) => deadline < d,
+                        None => true,
+                    };
+                    if rearm {
+                        self.deadline_at = Some(deadline);
+                        fleet.schedule_timer(deadline, TOK_DEADLINE);
+                    }
                 }
                 return;
             }
-            let closed_by_size = self.queue.len() >= self.cfg.batch.max_batch;
-            let take = self.cfg.batch.take(self.queue.len());
-            let batch: Vec<Req> = self.queue.drain(..take).collect();
-            self.batches += 1;
-            self.batched_reqs += batch.len() as u64;
-            let service = self.cfg.service_base_s
-                + self.cfg.service_per_item_s * batch.len() as f64;
-            if self.obs.is_enabled() {
-                let end = now + SimTime::from_secs_f64(service);
-                self.obs.span_at("serve.batch", now.as_nanos(), end.as_nanos(), rid, 0, vec![
-                    ("fill", batch.len().into()),
-                    ("close", if closed_by_size { "size" } else { "deadline" }.into()),
-                    ("oldest_wait_s", (now.as_secs_f64() - oldest.as_secs_f64()).into()),
-                ]);
-            }
-            self.busy.insert(rid, batch);
-            fleet.add_busy(rid, service);
-            fleet.schedule_work(rid, now + SimTime::from_secs_f64(service), 0);
         }
     }
 }
 
 impl FleetWorkload for ServeWorkload<'_> {
     fn on_start(&mut self, fleet: &mut FleetEngine) -> Result<()> {
-        for _ in 0..self.cfg.initial_replicas {
-            self.launch_replica(fleet, self.cfg.warm_start);
+        for i in 0..self.cfg.initial_replicas {
+            // multi-model fleets split the initial fleet proportionally
+            // to the initial arrival weights
+            let model = if self.models <= 1 {
+                0
+            } else {
+                Self::bucket(
+                    &self.model_weights,
+                    (i as f64 + 0.5) / self.cfg.initial_replicas.max(1) as f64,
+                ) as u32
+            };
+            self.launch_replica(fleet, self.cfg.warm_start, model);
         }
         match self.load.take().expect("load set before run") {
             Load::Open(gen) => {
@@ -617,19 +1103,26 @@ impl FleetWorkload for ServeWorkload<'_> {
     /// would otherwise bill and count activity the scenario never
     /// observed.
     fn should_stop(&mut self, _fleet: &FleetEngine, next_at: SimTime) -> bool {
-        next_at > self.load_end && self.queue.is_empty() && self.busy.is_empty()
+        next_at > self.load_end
+            && self.queue.is_empty()
+            && self.busy.is_empty()
+            && self.swapping.is_empty()
     }
 
-    fn on_node_ready(&mut self, fleet: &mut FleetEngine, _node: NodeId) -> Result<()> {
+    fn on_node_ready(&mut self, fleet: &mut FleetEngine, node: NodeId) -> Result<()> {
+        let model = fleet.node(node).map(|n| n.tag()).unwrap_or(0);
+        self.replica_model.insert(node, model);
         self.try_dispatch(fleet);
         Ok(())
     }
 
     /// Two-minute-notice path: stop feeding the replica, let the in-flight
-    /// batch finish (it requeues at the hard kill if it overruns). The
-    /// engine has already drained the node and counted the preemption.
+    /// batch (or swap) finish — it requeues at the hard kill if it
+    /// overruns. The engine has already drained the node and counted the
+    /// preemption.
     fn on_notice(&mut self, fleet: &mut FleetEngine, node: NodeId) -> Result<()> {
-        if !self.busy.contains_key(&node) {
+        if !self.busy.contains_key(&node) && !self.swapping.contains_key(&node) {
+            self.replica_model.remove(&node);
             fleet.release(node);
         }
         Ok(())
@@ -637,14 +1130,16 @@ impl FleetWorkload for ServeWorkload<'_> {
 
     fn on_kill(&mut self, fleet: &mut FleetEngine, node: NodeId) -> Result<()> {
         if let Some(batch) = self.busy.remove(&node) {
-            // in-flight work returns to the FRONT in original order,
-            // admission timestamps intact, admission limit bypassed:
-            // admitted requests are never dropped
+            // in-flight work returns to the FRONT of its class lanes in
+            // original order, admission timestamps intact, admission
+            // limit bypassed: admitted requests are never dropped
             self.requeued += batch.len() as u64;
-            for req in batch.into_iter().rev() {
-                self.queue.push_front(req);
-            }
+            self.queue.requeue_front(batch);
         }
+        // a kill mid-swap abandons the conversion (the work event is
+        // stale via the epoch bump)
+        self.swapping.remove(&node);
+        self.replica_model.remove(&node);
         if !self.queue.is_empty() {
             // stranded work needs the control loop for floor repair
             self.arm_tick(fleet);
@@ -653,14 +1148,32 @@ impl FleetWorkload for ServeWorkload<'_> {
         Ok(())
     }
 
-    fn on_work_done(&mut self, fleet: &mut FleetEngine, node: NodeId, _token: u64) -> Result<()> {
+    fn on_work_done(&mut self, fleet: &mut FleetEngine, node: NodeId, token: u64) -> Result<()> {
+        if token == WORK_SWAP {
+            if let Some(to) = self.swapping.remove(&node) {
+                self.swaps += 1;
+                self.replica_model.insert(node, to);
+                fleet.retag(node, to);
+                let drained = fleet.node(node).map(|n| n.is_draining()).unwrap_or(false);
+                if drained {
+                    // noticed or scaled down mid-swap: exit now
+                    self.replica_model.remove(&node);
+                    fleet.release(node);
+                } else {
+                    self.try_dispatch(fleet);
+                }
+            }
+            return Ok(());
+        }
         let Some(batch) = self.busy.remove(&node) else { return Ok(()) };
         let now = fleet.now();
         for req in &batch {
             let lat = now.saturating_sub(req.admitted_at).as_secs_f64();
             self.latency.record(lat);
             self.window.record(lat);
+            self.lat_by[req.class as usize].record(lat);
             self.completed += 1;
+            self.completed_by[req.class as usize] += 1;
             self.last_completion = now;
             if let (Some(cl), Some(u)) = (self.think, req.user) {
                 self.schedule_user(fleet, cl, u);
@@ -670,6 +1183,7 @@ impl FleetWorkload for ServeWorkload<'_> {
         // final batch
         let drained = fleet.node(node).map(|n| n.is_draining()).unwrap_or(false);
         if drained {
+            self.replica_model.remove(&node);
             fleet.release(node);
         }
         self.try_dispatch(fleet);
@@ -1081,5 +1595,187 @@ mod tests {
         assert_eq!(a.sheds, r.shed);
         assert_eq!(a.storms, 1);
         assert!(a.queue_wait_max_s > 0.0, "overload shows up in batch waits");
+    }
+
+    /// ISSUE 10 tentpole (priority classes): a 2.5x-over-capacity flood
+    /// with a 20/40/40 paid/free/batch mix sheds thousands of best-effort
+    /// requests while the paid tier loses nothing and keeps its SLO.
+    #[test]
+    fn priority_classes_protect_paid_through_overload() {
+        let mut cfg = storm_cfg();
+        cfg.storm = vec![];
+        cfg.initial_replicas = 2; // 1600 req/s of capacity, pinned
+        cfg.autoscaler.min_replicas = 2;
+        cfg.autoscaler.max_replicas = 2;
+        cfg.class_mix = [0.2, 0.4, 0.4]; // paid alone is 800 req/s
+        let mut sim = ServeSim::new(cfg);
+        let r = sim.run(Load::Open(OpenLoop::poisson(4000.0)), 30.0).unwrap();
+
+        // conservation: displacement sheds previously-admitted requests,
+        // so the clean global invariant is offered = completed + shed
+        assert_eq!(r.completed, r.offered - r.shed, "{r:?}");
+        assert!(r.shed > 10_000, "2.5x overload must shed heavily: {}", r.shed);
+        // per-class accounting partitions the totals exactly
+        assert_eq!(r.per_class.len(), 3);
+        assert_eq!(r.per_class.iter().map(|c| c.offered).sum::<u64>(), r.offered);
+        assert_eq!(r.per_class.iter().map(|c| c.shed).sum::<u64>(), r.shed);
+        assert_eq!(r.per_class.iter().map(|c| c.completed).sum::<u64>(), r.completed);
+        let paid = &r.per_class[0];
+        let best_effort = &r.per_class[2];
+        assert_eq!(paid.class, "paid");
+        assert_eq!(paid.shed, 0, "paid is never shed while lower classes wait: {r:?}");
+        assert_eq!(paid.completed, paid.admitted, "every paid request answered");
+        assert!(
+            paid.latency.p99 <= 0.25,
+            "queue-jump holds the paid p99 through overload: {}",
+            paid.latency.p99
+        );
+        assert!(best_effort.shed > 0, "the batch tier absorbs the shedding");
+        // shed concentrates at the bottom of the priority order
+        assert!(best_effort.shed > r.per_class[1].shed / 4, "{r:?}");
+    }
+
+    /// ISSUE 10 tentpole (adaptive batching): against the same 60 req/s
+    /// trickle, a 50 ms fixed window pins the p99 at ~52 ms while the
+    /// controller shrinks to its stable 25 ms point and roughly halves
+    /// the tail — without giving up batching entirely.
+    #[test]
+    fn adaptive_window_beats_an_oversized_fixed_window() {
+        let base = || {
+            let mut cfg = storm_cfg();
+            cfg.storm = vec![];
+            cfg.batch = BatchPolicy { max_batch: 16, max_delay_s: 0.05 };
+            cfg.service_per_item_s = 0.0001;
+            cfg.initial_replicas = 1;
+            cfg.autoscaler.min_replicas = 1;
+            cfg.autoscaler.max_replicas = 1;
+            cfg
+        };
+        let mut fixed_cfg = base();
+        fixed_cfg.trace = false;
+        let fixed = ServeSim::new(fixed_cfg)
+            .run(Load::Open(OpenLoop::poisson(60.0)), 600.0)
+            .unwrap();
+
+        let mut adaptive_cfg = base();
+        adaptive_cfg.adaptive = Some(AdaptiveBatchConfig {
+            slo_p99_s: 0.06,
+            min_delay_s: 0.01,
+            max_delay_s: 0.05,
+            min_batch: 4,
+            max_batch: 16,
+            ..Default::default()
+        });
+        let adaptive = ServeSim::new(adaptive_cfg)
+            .run(Load::Open(OpenLoop::poisson(60.0)), 600.0)
+            .unwrap();
+
+        assert_eq!(fixed.completed, fixed.admitted);
+        assert_eq!(adaptive.completed, adaptive.admitted);
+        assert_eq!(adaptive.shed, 0);
+        assert!(
+            adaptive.latency.p99 < fixed.latency.p99 * 0.75,
+            "shrunk window must cut the tail: adaptive {} vs fixed {}",
+            adaptive.latency.p99,
+            fixed.latency.p99
+        );
+        assert!(
+            adaptive.mean_batch_fill > 1.0,
+            "the controller narrows the window without abandoning batching: {}",
+            adaptive.mean_batch_fill
+        );
+    }
+
+    /// ISSUE 10 tentpole (weight swap): demand migrates wholly from model
+    /// 0 to model 1 at t=60. Swapping converts the idle fleet within a
+    /// few ticks and suppresses scale-ups; always-scale instead buys new
+    /// replicas that spend a minute provisioning while paid-for hardware
+    /// idles — more sheds and a strictly larger bill on the same trace.
+    #[test]
+    fn weight_swap_follows_demand_and_beats_always_scaling() {
+        let base = || {
+            let mut cfg = storm_cfg();
+            cfg.storm = vec![];
+            cfg.initial_replicas = 4;
+            cfg.models = 2;
+            cfg.model_mix = vec![1.0, 0.0];
+            cfg.model_shift = Some(ModelShift { at_s: 60.0, mix: vec![0.0, 1.0] });
+            cfg
+        };
+        let mut swap_cfg = base();
+        swap_cfg.swap = Some(SwapConfig { swap_s: 10.0, ..Default::default() });
+        let swap_run = ServeSim::new(swap_cfg)
+            .run(Load::Open(OpenLoop::poisson(400.0)), 150.0)
+            .unwrap();
+
+        let scale_run = ServeSim::new(base())
+            .run(Load::Open(OpenLoop::poisson(400.0)), 150.0)
+            .unwrap();
+
+        assert_eq!(swap_run.completed, swap_run.offered - swap_run.shed);
+        assert_eq!(scale_run.completed, scale_run.offered - scale_run.shed);
+        assert!(swap_run.swaps >= 2, "the fleet converts toward demand: {swap_run:?}");
+        assert_eq!(
+            swap_run.scale_ups, 0,
+            "swaps absorb the migration; no new hardware: {swap_run:?}"
+        );
+        assert_eq!(scale_run.swaps, 0);
+        assert!(scale_run.scale_ups > 0, "always-scale must buy replicas: {scale_run:?}");
+        assert!(
+            swap_run.cost_usd < scale_run.cost_usd,
+            "converting idle replicas must be cheaper: swap ${} vs scale ${}",
+            swap_run.cost_usd,
+            scale_run.cost_usd
+        );
+        assert!(
+            swap_run.shed < scale_run.shed,
+            "a 10 s swap closes the capacity gap faster than a cold boot: {} vs {}",
+            swap_run.shed,
+            scale_run.shed
+        );
+    }
+
+    /// Every hot-path feature at once stays bit-deterministic, and the
+    /// recorder stays a pure observer of the new event types (shed class
+    /// args, batch_adapt, swap spans, retag).
+    #[test]
+    fn hotpath_features_are_deterministic_and_unperturbed_by_obs() {
+        use crate::obs::FlightRecorder;
+
+        let cfg = || {
+            let mut cfg = storm_cfg();
+            cfg.class_mix = [0.3, 0.4, 0.3];
+            cfg.models = 2;
+            cfg.model_mix = vec![0.7, 0.3];
+            cfg.model_shift = Some(ModelShift { at_s: 45.0, mix: vec![0.2, 0.8] });
+            cfg.swap = Some(SwapConfig::default());
+            cfg.adaptive = Some(AdaptiveBatchConfig::default());
+            cfg.trace = true;
+            cfg
+        };
+        // the crowd (55-75 s) straddles the 7-of-8 storm at t=60, so the
+        // lone survivor faces 4x traffic: sheds are guaranteed
+        let load = || Load::Scheduled(RateSchedule::flash_crowd(600.0, 4.0, 55.0, 20.0));
+        let bare = ServeSim::new(cfg()).run(load(), 90.0).unwrap();
+        let again = ServeSim::new(cfg()).run(load(), 90.0).unwrap();
+        assert_eq!(bare, again, "same seed, bit-identical hot-path report");
+
+        let rec = FlightRecorder::sim(1 << 20, crate::sim::SimClock::new());
+        let mut sim = ServeSim::new(cfg());
+        sim.set_obs(rec.clone());
+        let traced = sim.run(load(), 90.0).unwrap();
+        assert_eq!(bare, traced, "recording must not perturb the hot path");
+        assert_eq!(traced.completed, traced.offered - traced.shed);
+
+        let records = rec.snapshot();
+        let sheds = records.iter().filter(|r| r.name == "serve.shed").count();
+        assert_eq!(sheds as u64, traced.shed, "one shed event per shed, classes tagged");
+        // the 7-of-8 storm lands mid-crowd: preempted mixed-class batches
+        // requeue and still complete
+        assert!(traced.requeued > 0, "{traced:?}");
+        assert!(
+            records.iter().any(|r| r.name == "serve.shed" && r.arg("class").is_some()),
+            "shed events carry the priority class"
+        );
     }
 }

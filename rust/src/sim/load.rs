@@ -68,26 +68,64 @@ impl ClosedLoop {
 }
 
 /// Piecewise-constant open-loop rate over time: `(start_s, rate_rps)`
-/// phases, sorted by start. Rate before the first phase is 0.
+/// phases, sorted by start. Rate before the first phase is 0. A periodic
+/// schedule ([`RateSchedule::diurnal`]) repeats its phase pattern every
+/// `repeat_every_s` seconds instead of holding the last rate forever.
 #[derive(Debug, Clone, Default)]
 pub struct RateSchedule {
     phases: Vec<(f64, f64)>,
+    repeat_every_s: Option<f64>,
 }
+
+/// Steps per period in the diurnal piecewise-constant approximation.
+const DIURNAL_STEPS: usize = 12;
 
 impl RateSchedule {
     /// Build from phases; sorts by start time.
     pub fn new(mut phases: Vec<(f64, f64)>) -> Self {
         phases.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite phase starts"));
-        Self { phases }
+        Self { phases, repeat_every_s: None }
     }
 
     /// A single constant rate from t=0.
     pub fn constant(rate_rps: f64) -> Self {
-        Self { phases: vec![(0.0, rate_rps)] }
+        Self { phases: vec![(0.0, rate_rps)], repeat_every_s: None }
+    }
+
+    /// A repeating day/night cycle: a raised-cosine between `trough_rps`
+    /// (at t=0, the quiet phase) and `peak_rps` (half a period later),
+    /// approximated by 12 piecewise-constant steps per `period_s` and
+    /// repeated forever. Step `k` holds the cosine's midpoint-sampled
+    /// value, so the steps bracket the continuous curve symmetrically.
+    pub fn diurnal(peak_rps: f64, trough_rps: f64, period_s: f64) -> Self {
+        assert!(period_s > 0.0, "diurnal period must be positive");
+        let phases = (0..DIURNAL_STEPS)
+            .map(|k| {
+                let frac = (k as f64 + 0.5) / DIURNAL_STEPS as f64;
+                let swing = (1.0 - (std::f64::consts::TAU * frac).cos()) / 2.0;
+                (period_s * k as f64 / DIURNAL_STEPS as f64, trough_rps + (peak_rps - trough_rps) * swing)
+            })
+            .collect();
+        Self { phases, repeat_every_s: Some(period_s) }
+    }
+
+    /// A flash crowd: `base_rps` everywhere except a `spike_x` multiplier
+    /// during `[at_s, at_s + dur_s)`.
+    pub fn flash_crowd(base_rps: f64, spike_x: f64, at_s: f64, dur_s: f64) -> Self {
+        Self::new(vec![(0.0, base_rps), (at_s, base_rps * spike_x), (at_s + dur_s, base_rps)])
+    }
+
+    /// `t_s` folded into the first period of a periodic schedule.
+    fn fold(&self, t_s: f64) -> f64 {
+        match self.repeat_every_s {
+            Some(p) if t_s >= 0.0 => t_s % p,
+            _ => t_s,
+        }
     }
 
     /// The rate in effect at time `t_s`.
     pub fn rate_at(&self, t_s: f64) -> f64 {
+        let t_s = self.fold(t_s);
         let mut rate = 0.0;
         for &(start, r) in &self.phases {
             if start <= t_s {
@@ -100,9 +138,21 @@ impl RateSchedule {
     }
 
     /// First phase boundary strictly after `t_s` (arrival generators jump
-    /// here when the current rate is zero).
+    /// here when the current rate is zero). Periodic schedules always have
+    /// a next boundary — the fold into the following period.
     pub fn next_change_after(&self, t_s: f64) -> Option<f64> {
-        self.phases.iter().map(|&(start, _)| start).find(|&start| start > t_s)
+        let Some(p) = self.repeat_every_s else {
+            return self.phases.iter().map(|&(start, _)| start).find(|&start| start > t_s);
+        };
+        let folded = self.fold(t_s);
+        match self.phases.iter().map(|&(start, _)| start).find(|&start| start > folded) {
+            Some(start) => Some(t_s + (start - folded)),
+            None => {
+                // wrap to the first boundary of the next period
+                let first = self.phases.first().map(|&(start, _)| start).unwrap_or(0.0);
+                Some(t_s + (p - folded) + first)
+            }
+        }
     }
 }
 
@@ -146,6 +196,45 @@ mod tests {
         assert_eq!(s.rate_at(1e9), 0.0);
         assert_eq!(RateSchedule::default().rate_at(5.0), 0.0);
         assert_eq!(RateSchedule::constant(7.0).rate_at(1e6), 7.0);
+    }
+
+    #[test]
+    fn flash_crowd_phase_boundaries() {
+        let s = RateSchedule::flash_crowd(300.0, 10.0, 120.0, 60.0);
+        assert_eq!(s.rate_at(0.0), 300.0);
+        assert_eq!(s.rate_at(119.999), 300.0);
+        assert_eq!(s.rate_at(120.0), 3000.0, "spike starts exactly at at_s");
+        assert_eq!(s.rate_at(179.999), 3000.0);
+        assert_eq!(s.rate_at(180.0), 300.0, "spike ends exactly at at_s + dur_s");
+        assert_eq!(s.next_change_after(0.0), Some(120.0));
+        assert_eq!(s.next_change_after(120.0), Some(180.0));
+        assert_eq!(s.next_change_after(180.0), None);
+    }
+
+    #[test]
+    fn diurnal_phase_boundaries_and_wrap() {
+        let s = RateSchedule::diurnal(400.0, 100.0, 1200.0);
+        // t=0 opens the trough-side step; midpoint sampling keeps it
+        // strictly inside (trough, peak)
+        let first = s.rate_at(0.0);
+        assert!(first > 100.0 && first < 400.0, "first step rate {first}");
+        // the peak-side step straddles period/2 and its midpoint-sampled
+        // rate brackets the true peak within one step's swing
+        let peak_step = s.rate_at(600.0);
+        assert!(peak_step > 390.0 && peak_step <= 400.0, "peak step rate {peak_step}");
+        // raised cosine is symmetric about the peak: step k mirrors step
+        // 11-k (step 1 spans [100, 200), step 10 spans [1000, 1100))
+        assert!((s.rate_at(100.0) - s.rate_at(1000.0)).abs() < 1e-9);
+        assert!((s.rate_at(300.0) - s.rate_at(800.0)).abs() < 1e-9);
+        // the pattern repeats: a full period later the same step rules
+        assert_eq!(s.rate_at(1200.0), s.rate_at(0.0));
+        assert_eq!(s.rate_at(1800.0 + 1200.0), s.rate_at(600.0));
+        // boundary stepping walks every period edge, including the wrap
+        assert_eq!(s.next_change_after(0.0), Some(100.0));
+        assert_eq!(s.next_change_after(1100.0), Some(1200.0), "wraps into the next period");
+        assert_eq!(s.next_change_after(1200.0), Some(1300.0));
+        // never a zero-rate dead zone: the generator can always arm
+        assert!(s.rate_at(1e7) > 0.0);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Offline stand-in for the `anyhow` crate, vendored because this image has
 //! no crates.io registry (DESIGN.md §Substitutions). Covers the surface the
-//! workspace uses: [`Error`], [`Result`], [`anyhow!`], [`bail!`] and the
-//! [`Context`] extension for `Result` and `Option`.
+//! workspace uses: [`Error`], [`Result`], [`anyhow!`], [`bail!`], [`ensure!`]
+//! and the [`Context`] extension for `Result` and `Option`.
 //!
 //! Semantics match real `anyhow` where it matters here: `Error` is a cheap
 //! opaque wrapper, any `std::error::Error` converts into it via `?`, and
@@ -58,6 +58,17 @@ macro_rules! bail {
     };
 }
 
+/// `ensure!(cond, "...")` — early-return an `Err(anyhow!(...))` when the
+/// condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 /// Attach context to a fallible value.
 pub trait Context<T> {
     fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
@@ -101,6 +112,13 @@ mod tests {
             bail!("code {}", 7)
         }
         assert_eq!(format!("{}", bails().unwrap_err()), "code 7");
+
+        fn ensures(n: u32) -> Result<u32> {
+            ensure!(n >= 3, "too small: {}", n);
+            Ok(n)
+        }
+        assert_eq!(ensures(5).unwrap(), 5);
+        assert_eq!(format!("{}", ensures(1).unwrap_err()), "too small: 1");
 
         let r: std::result::Result<(), std::io::Error> =
             Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
